@@ -1,0 +1,56 @@
+//! Thread-scaling study (the paper's §III-A motivation): updates/second and
+//! accuracy of FPSGD (global-lock scheduler) vs A²PSGD (lock-free) as the
+//! thread count grows. This is where the global lock's queueing shows.
+//!
+//! ```bash
+//! cargo run --release --example scaling_threads
+//! ```
+
+use a2psgd::bench_harness::Table;
+use a2psgd::prelude::*;
+
+fn main() -> Result<()> {
+    let data = data::synthetic::medium(7);
+    println!("dataset: {}\n", data.describe());
+    let max = engine::default_threads();
+    let mut counts = vec![1usize, 2, 4, 8];
+    counts.retain(|&c| c <= max);
+    if !counts.contains(&max) {
+        counts.push(max);
+    }
+
+    let mut table = Table::new(&[
+        "threads",
+        "FPSGD Mups",
+        "A2PSGD Mups",
+        "speedup",
+        "FPSGD rmse",
+        "A2PSGD rmse",
+    ]);
+    let mut csv = String::from("threads,fpsgd_mups,a2psgd_mups,fpsgd_rmse,a2psgd_rmse\n");
+    for &c in &counts {
+        let run = |kind: EngineKind| -> Result<(f64, f64)> {
+            let cfg = TrainConfig::preset(kind, &data)
+                .threads(c)
+                .epochs(10)
+                .no_early_stop();
+            let r = engine::train(&data, &cfg)?;
+            Ok((r.updates_per_sec() / 1e6, r.best_rmse()))
+        };
+        let (fp_ups, fp_rmse) = run(EngineKind::Fpsgd)?;
+        let (a2_ups, a2_rmse) = run(EngineKind::A2psgd)?;
+        table.row(&[
+            c.to_string(),
+            format!("{fp_ups:.2}"),
+            format!("{a2_ups:.2}"),
+            format!("{:.2}x", a2_ups / fp_ups),
+            format!("{fp_rmse:.4}"),
+            format!("{a2_rmse:.4}"),
+        ]);
+        csv.push_str(&format!("{c},{fp_ups},{a2_ups},{fp_rmse},{a2_rmse}\n"));
+    }
+    println!("{}", table.render());
+    let path = a2psgd::bench_harness::write_results_csv("scaling_threads.csv", &csv)?;
+    println!("series → {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! End-to-end serving demo: train on a synthetic twin, then serve batched
+//! point predictions through the AOT XLA `predict` artifact via the
+//! router/batcher service — Python never runs. Reports latency/throughput.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serving
+//! ```
+
+use a2psgd::coordinator::service::PredictionService;
+use a2psgd::prelude::*;
+use std::time::{Duration, Instant};
+
+fn main() -> Result<()> {
+    // 1. Train.
+    let data = data::synthetic::small(1234);
+    println!("dataset: {}", data.describe());
+    let cfg = TrainConfig::preset(EngineKind::A2psgd, &data).threads(4).epochs(20);
+    let report = engine::train(&data, &cfg)?;
+    println!("trained: best RMSE {:.4}", report.best_rmse());
+
+    // 2. Start the prediction service over the trained factors.
+    let svc = PredictionService::start(
+        a2psgd::runtime::default_artifacts_dir(),
+        report.factors,
+        (data.rating_min, data.rating_max),
+        Duration::from_millis(2),
+    )?;
+
+    // 3. Closed-loop latency probe (single in-flight request).
+    let client = svc.client();
+    let mut lat = Vec::new();
+    for i in 0..200u32 {
+        let t = Instant::now();
+        let _ = client.predict(i % data.nrows(), i % data.ncols())?;
+        lat.push(t.elapsed().as_secs_f64());
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "closed-loop latency: p50 {:.2}ms  p95 {:.2}ms  p99 {:.2}ms",
+        lat[lat.len() / 2] * 1e3,
+        lat[lat.len() * 95 / 100] * 1e3,
+        lat[lat.len() * 99 / 100] * 1e3,
+    );
+
+    // 4. Open-loop throughput: many concurrent clients flood the batcher.
+    let n_clients = 8;
+    let per_client = 5_000usize;
+    let t = Instant::now();
+    std::thread::scope(|scope| {
+        for tid in 0..n_clients {
+            let c = svc.client();
+            let nrows = data.nrows();
+            let ncols = data.ncols();
+            scope.spawn(move || {
+                let mut rng = Rng::new(tid as u64);
+                let pairs: Vec<(u32, u32)> = (0..per_client)
+                    .map(|_| {
+                        (
+                            rng.gen_index(nrows as usize) as u32,
+                            rng.gen_index(ncols as usize) as u32,
+                        )
+                    })
+                    .collect();
+                c.predict_many(&pairs).expect("predictions failed");
+            });
+        }
+    });
+    let secs = t.elapsed().as_secs_f64();
+    let total = n_clients * per_client;
+    drop(client);
+    let stats = svc.shutdown();
+    println!(
+        "open-loop: {total} predictions in {secs:.3}s = {:.0} req/s \
+         ({} PJRT batches, mean occupancy {:.1})",
+        total as f64 / secs,
+        stats.batches,
+        stats.mean_batch()
+    );
+    Ok(())
+}

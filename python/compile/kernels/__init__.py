@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels for the A2PSGD LR model.
+
+Each kernel has a pure-jnp oracle in `ref.py`; pytest + hypothesis pin the
+kernels to the oracles. All kernels run with ``interpret=True`` — the CPU
+PJRT plugin cannot execute Mosaic custom-calls, so interpret mode is both the
+correctness path and the CPU execution path. TPU performance is estimated
+analytically in DESIGN.md §8.
+"""
+
+from .predict import predict_error, rowwise_dot
+from .nag import nag_gradients
+from .recommend import score_all_items
+
+__all__ = ["predict_error", "rowwise_dot", "nag_gradients", "score_all_items"]

@@ -1,0 +1,73 @@
+"""Fused NAG gradient core (paper Eqs. 4–5) as a Pallas kernel.
+
+Given *look-ahead* factor rows m̂_u = m_u + γφ_u and n̂_v = n_v + γψ_v
+(the gather and look-ahead shift live in Layer 2), ratings r, and the
+regularization coefficient λ, one fused pass produces:
+
+    e    = r − ⟨m̂_u, n̂_v⟩
+    g_m  = e · n̂_v − λ · m̂_u     (ascent direction for m_u)
+    g_n  = e · m̂_u − λ · n̂_v     (ascent direction for n_v)
+
+so the Layer-2 update is φ' = γφ + η·g_m ; m' = m + φ' (and symmetrically
+for n). Fusing error + both gradients means each operand tile is read from
+VMEM once and all three outputs are produced in the same grid step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .predict import DEFAULT_TILE_B, _tile
+
+
+def _nag_kernel(lam_ref, mu_ref, nv_ref, r_ref, e_ref, gm_ref, gn_ref):
+    mu = mu_ref[...]
+    nv = nv_ref[...]
+    lam = lam_ref[0]
+    e = r_ref[...] - jnp.sum(mu * nv, axis=-1)
+    e_ref[...] = e
+    gm_ref[...] = e[:, None] * nv - lam * mu
+    gn_ref[...] = e[:, None] * mu - lam * nv
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b",))
+def nag_gradients(mu_hat, nv_hat, r, lam, *, tile_b: int = DEFAULT_TILE_B):
+    """Fused error + regularized gradient pair at the look-ahead point.
+
+    Args:
+      mu_hat: f32[B, D] look-ahead user rows  (m_u + γφ_u).
+      nv_hat: f32[B, D] look-ahead item rows  (n_v + γψ_v).
+      r:      f32[B] observed ratings.
+      lam:    f32[] or f32[1] L2 regularization coefficient λ.
+      tile_b: batch tile size.
+
+    Returns:
+      (e, g_m, g_n): f32[B], f32[B, D], f32[B, D].
+    """
+    b, d = mu_hat.shape
+    tb = _tile(b, tile_b)
+    grid = (b // tb,)
+    lam_arr = jnp.asarray(lam, dtype=mu_hat.dtype).reshape((1,))
+    return pl.pallas_call(
+        _nag_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # λ broadcast to every tile
+            pl.BlockSpec((tb, d), lambda i: (i, 0)),
+            pl.BlockSpec((tb, d), lambda i: (i, 0)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tb,), lambda i: (i,)),
+            pl.BlockSpec((tb, d), lambda i: (i, 0)),
+            pl.BlockSpec((tb, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), mu_hat.dtype),
+            jax.ShapeDtypeStruct((b, d), mu_hat.dtype),
+            jax.ShapeDtypeStruct((b, d), mu_hat.dtype),
+        ],
+        interpret=True,
+    )(lam_arr, mu_hat, nv_hat, r)

@@ -1,0 +1,100 @@
+"""Fused rowwise-dot / prediction-error Pallas kernel.
+
+The LR model predicts r̂_uv = ⟨m_u, n_v⟩. Given a batch of gathered factor
+rows mu[B,D], nv[B,D] (and optionally ratings r[B]) this kernel computes the
+rowwise inner product and the prediction error e = r − ⟨m_u, n_v⟩ in a single
+pass over the operands.
+
+TPU mapping (see DESIGN.md §6 Hardware-Adaptation): the batch dimension is
+tiled into (TB, D) VMEM blocks; the D-reduction stays inside a tile so each
+operand streams HBM→VMEM exactly once. The kernel is elementwise+reduce
+(VPU work, arithmetic intensity ≈ 0.5 FLOP/byte) — memory-bound by design,
+so block shape targets streaming bandwidth, not the MXU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default batch tile. 512 rows × 64 dims × 4 B = 128 KiB per operand tile —
+# three operands resident ≈ 384 KiB, comfortably inside a TPU core's ~16 MiB
+# VMEM with room for double buffering.
+DEFAULT_TILE_B = 512
+
+
+def _dot_kernel(mu_ref, nv_ref, out_ref):
+    """out[b] = Σ_d mu[b,d] · nv[b,d] for one (TB, D) tile."""
+    out_ref[...] = jnp.sum(mu_ref[...] * nv_ref[...], axis=-1)
+
+
+def _error_kernel(mu_ref, nv_ref, r_ref, out_ref):
+    """out[b] = r[b] − Σ_d mu[b,d] · nv[b,d] for one (TB, D) tile."""
+    out_ref[...] = r_ref[...] - jnp.sum(mu_ref[...] * nv_ref[...], axis=-1)
+
+
+def _tile(batch: int, tile_b: int) -> int:
+    """Largest tile ≤ tile_b that divides batch (batch is padded upstream)."""
+    t = min(tile_b, batch)
+    while batch % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b",))
+def rowwise_dot(mu, nv, *, tile_b: int = DEFAULT_TILE_B):
+    """Batched prediction r̂[b] = ⟨mu[b,:], nv[b,:]⟩ via a Pallas kernel.
+
+    Args:
+      mu: f32[B, D] gathered user-factor rows.
+      nv: f32[B, D] gathered item-factor rows.
+      tile_b: batch tile size (rows per VMEM block).
+
+    Returns:
+      f32[B] rowwise inner products.
+    """
+    b, _ = mu.shape
+    tb = _tile(b, tile_b)
+    grid = (b // tb,)
+    return pl.pallas_call(
+        _dot_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, mu.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((tb, nv.shape[1]), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), mu.dtype),
+        interpret=True,
+    )(mu, nv)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b",))
+def predict_error(mu, nv, r, *, tile_b: int = DEFAULT_TILE_B):
+    """Batched prediction error e[b] = r[b] − ⟨mu[b,:], nv[b,:]⟩.
+
+    Args:
+      mu: f32[B, D] gathered user-factor rows.
+      nv: f32[B, D] gathered item-factor rows.
+      r:  f32[B] observed ratings.
+      tile_b: batch tile size.
+
+    Returns:
+      f32[B] prediction errors.
+    """
+    b, d = mu.shape
+    tb = _tile(b, tile_b)
+    grid = (b // tb,)
+    return pl.pallas_call(
+        _error_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, d), lambda i: (i, 0)),
+            pl.BlockSpec((tb, d), lambda i: (i, 0)),
+            pl.BlockSpec((tb,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), mu.dtype),
+        interpret=True,
+    )(mu, nv, r)

@@ -1,0 +1,158 @@
+"""Layer-2 JAX model: batched LR-model math built on the Layer-1 kernels.
+
+Every public function here is AOT-lowered by ``aot.py`` to an HLO-text
+artifact with *static* shapes (batch B, feature dim D, padded row counts
+U, V) and executed from the Rust coordinator via PJRT. Padding protocol:
+callers pad batches to B with ``mask = 0`` entries whose indices point at
+row 0; masked lanes contribute nothing to sums and updates.
+
+Functions
+---------
+predict_batch(mu, nv)                      -> (r̂,)
+eval_batch(mu, nv, r, mask)                -> (sse, sae, cnt)
+loss_batch(mu, nv, r, mask, lam)           -> (ε,)
+block_update(M, N, phi, psi, uidx, vidx,
+             r, mask, eta, lam, gamma)     -> (M', N', phi', psi')
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import nag_gradients, predict_error, rowwise_dot, score_all_items
+
+# Default AOT shapes; aot.py may emit additional variants.
+DEFAULT_B = 4096
+DEFAULT_D = 16
+DEFAULT_U = 8192
+DEFAULT_V = 8192
+DEFAULT_K = 8  # scan steps fused into one `epoch_update` call
+
+
+def predict_batch(mu, nv):
+    """Batched prediction r̂[b] = ⟨mu[b,:], nv[b,:]⟩ (serving hot path)."""
+    return (rowwise_dot(mu, nv),)
+
+
+def eval_batch(mu, nv, r, mask):
+    """Masked error sums for RMSE/MAE accumulation on the test set.
+
+    Returns (Σ mask·e², Σ mask·|e|, Σ mask) as f32 scalars; the Rust side
+    accumulates across batches and takes sqrt/mean once per epoch.
+    """
+    e = predict_error(mu, nv, r) * mask
+    return jnp.sum(e * e), jnp.sum(jnp.abs(e)), jnp.sum(mask)
+
+
+def loss_batch(mu, nv, r, mask, lam):
+    """Regularized loss ε (paper Eq. 1) restricted to one batch of instances."""
+    e = predict_error(mu, nv, r)
+    reg = jnp.sum(mu * mu, axis=-1) + jnp.sum(nv * nv, axis=-1)
+    return (0.5 * jnp.sum(mask * (e * e + lam * reg)),)
+
+
+def block_update(m, n, phi, psi, uidx, vidx, r, mask, eta, lam, gamma):
+    """One mini-batch NAG step (paper Eqs. 4–5) over padded factor matrices.
+
+    Mini-batch semantics: gradients of all instances in the batch are
+    evaluated at the same look-ahead point and aggregated per row with a
+    segment sum; momentum decays once per touched row. This is the batched
+    adaptation of the paper's per-instance rule (DESIGN.md §6).
+
+    Args:
+      m:    f32[U, D] user factors (padded).
+      n:    f32[V, D] item factors (padded).
+      phi:  f32[U, D] user momentum (paper φ).
+      psi:  f32[V, D] item momentum (paper ψ).
+      uidx: i32[B] user row per instance.
+      vidx: i32[B] item row per instance.
+      r:    f32[B] ratings.
+      mask: f32[B] 1.0 for live lanes, 0.0 for padding.
+      eta, lam, gamma: f32[] hyperparameters η, λ, γ.
+
+    Returns:
+      (m', n', phi', psi') with the same shapes.
+    """
+    u_rows, _ = m.shape
+    v_rows, _ = n.shape
+
+    # Look-ahead gather: m̂_u = m_u + γφ_u (Eq. 4), n̂_v = n_v + γψ_v (Eq. 5).
+    mu_hat = m[uidx] + gamma * phi[uidx]
+    nv_hat = n[vidx] + gamma * psi[vidx]
+
+    # Fused Pallas core: e, g_m = e·n̂ − λm̂, g_n = e·m̂ − λn̂.
+    _, g_m, g_n = nag_gradients(mu_hat, nv_hat, r, lam)
+    g_m = g_m * mask[:, None]
+    g_n = g_n * mask[:, None]
+
+    # Per-row aggregation of instance gradients.
+    gm_rows = jax.ops.segment_sum(g_m, uidx, num_segments=u_rows)
+    gn_rows = jax.ops.segment_sum(g_n, vidx, num_segments=v_rows)
+    touched_u = (jax.ops.segment_sum(mask, uidx, num_segments=u_rows) > 0)[:, None]
+    touched_v = (jax.ops.segment_sum(mask, vidx, num_segments=v_rows) > 0)[:, None]
+
+    # Momentum + parameter update for touched rows only.
+    phi2 = jnp.where(touched_u, gamma * phi + eta * gm_rows, phi)
+    psi2 = jnp.where(touched_v, gamma * psi + eta * gn_rows, psi)
+    m2 = jnp.where(touched_u, m + phi2, m)
+    n2 = jnp.where(touched_v, n + psi2, n)
+    return m2, n2, phi2, psi2
+
+
+def epoch_update(m, n, phi, psi, uidx, vidx, r, mask, eta, lam, gamma):
+    """K chained mini-batch NAG steps in one executable (lax.scan).
+
+    §Perf: one PJRT call covers K batches, so the U×D/V×D factor transfers
+    across the host boundary are amortized K× (the xla crate cannot keep
+    buffers device-resident between calls — its PJRT wrapper always returns
+    a single tuple buffer).
+
+    Index/rating/mask arrays carry a leading K axis.
+    """
+
+    def body(carry, xs):
+        cm, cn, cphi, cpsi = carry
+        ui, vi, rr, mm = xs
+        out = block_update(cm, cn, cphi, cpsi, ui, vi, rr, mm, eta, lam, gamma)
+        return out, ()
+
+    (m2, n2, phi2, psi2), _ = jax.lax.scan(body, (m, n, phi, psi), (uidx, vidx, r, mask))
+    return m2, n2, phi2, psi2
+
+
+def recommend(mu, n):
+    """Scores of one user row against the padded item matrix (top-N path)."""
+    return (score_all_items(mu, n),)
+
+
+def make_specs(b=DEFAULT_B, d=DEFAULT_D, u=DEFAULT_U, v=DEFAULT_V, k=DEFAULT_K):
+    """ShapeDtypeStructs for each AOT entry point, keyed by artifact name."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    mat = lambda r, c: jax.ShapeDtypeStruct((r, c), f32)  # noqa: E731
+    vec = lambda k, t=f32: jax.ShapeDtypeStruct((k,), t)  # noqa: E731
+    scal = jax.ShapeDtypeStruct((), f32)
+    return {
+        "predict": (predict_batch, [mat(b, d), mat(b, d)]),
+        "eval": (eval_batch, [mat(b, d), mat(b, d), vec(b), vec(b)]),
+        "loss": (loss_batch, [mat(b, d), mat(b, d), vec(b), vec(b), scal]),
+        "recommend": (recommend, [jax.ShapeDtypeStruct((d,), f32), mat(v, d)]),
+        "update": (
+            block_update,
+            [
+                mat(u, d), mat(v, d), mat(u, d), mat(v, d),
+                vec(b, i32), vec(b, i32), vec(b), vec(b),
+                scal, scal, scal,
+            ],
+        ),
+        "update_scan": (
+            epoch_update,
+            [
+                mat(u, d), mat(v, d), mat(u, d), mat(v, d),
+                jax.ShapeDtypeStruct((k, b), i32),
+                jax.ShapeDtypeStruct((k, b), i32),
+                jax.ShapeDtypeStruct((k, b), f32),
+                jax.ShapeDtypeStruct((k, b), f32),
+                scal, scal, scal,
+            ],
+        ),
+    }

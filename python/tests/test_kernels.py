@@ -1,0 +1,144 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the core correctness signal for the compute stack: every kernel is
+pinned to its oracle across hypothesis-generated shapes, values, and tile
+sizes.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import nag, predict, ref
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def _rand(key, *shape):
+    return jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def _keys(seed, n):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+# ---------------------------------------------------------------- rowwise_dot
+class TestRowwiseDot:
+    @pytest.mark.parametrize("b,d", [(1, 1), (4, 8), (256, 16), (512, 64), (1000, 3)])
+    def test_matches_ref(self, b, d):
+        k1, k2 = _keys(b * 31 + d, 2)
+        mu, nv = _rand(k1, b, d), _rand(k2, b, d)
+        got = predict.rowwise_dot(mu, nv)
+        np.testing.assert_allclose(got, ref.rowwise_dot(mu, nv), rtol=1e-5, atol=1e-5)
+
+    @hypothesis.given(
+        b=st.integers(1, 300),
+        d=st.integers(1, 40),
+        tile=st.integers(1, 128),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes_tiles(self, b, d, tile, seed):
+        k1, k2 = _keys(seed, 2)
+        mu, nv = _rand(k1, b, d), _rand(k2, b, d)
+        got = predict.rowwise_dot(mu, nv, tile_b=tile)
+        np.testing.assert_allclose(got, ref.rowwise_dot(mu, nv), rtol=1e-5, atol=1e-5)
+
+    def test_zero_inputs(self):
+        z = jnp.zeros((8, 4), jnp.float32)
+        assert np.all(np.asarray(predict.rowwise_dot(z, z)) == 0.0)
+
+    def test_orthogonal_rows(self):
+        mu = jnp.eye(4, dtype=jnp.float32)
+        nv = jnp.roll(jnp.eye(4, dtype=jnp.float32), 1, axis=0)
+        np.testing.assert_allclose(predict.rowwise_dot(mu, nv), jnp.zeros(4), atol=0)
+
+    def test_tile_independence(self):
+        k1, k2 = _keys(7, 2)
+        mu, nv = _rand(k1, 96, 16), _rand(k2, 96, 16)
+        a = predict.rowwise_dot(mu, nv, tile_b=96)
+        b = predict.rowwise_dot(mu, nv, tile_b=8)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -------------------------------------------------------------- predict_error
+class TestPredictError:
+    @pytest.mark.parametrize("b,d", [(2, 2), (64, 16), (512, 16), (4096, 16)])
+    def test_matches_ref(self, b, d):
+        k1, k2, k3 = _keys(b + d, 3)
+        mu, nv = _rand(k1, b, d), _rand(k2, b, d)
+        r = _rand(k3, b)
+        got = predict.predict_error(mu, nv, r)
+        np.testing.assert_allclose(
+            got, ref.predict_error(mu, nv, r), rtol=1e-5, atol=1e-5
+        )
+
+    @hypothesis.given(
+        b=st.integers(1, 257),
+        d=st.integers(1, 33),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis(self, b, d, seed):
+        k1, k2, k3 = _keys(seed, 3)
+        mu, nv, r = _rand(k1, b, d), _rand(k2, b, d), _rand(k3, b)
+        got = predict.predict_error(mu, nv, r)
+        np.testing.assert_allclose(
+            got, ref.predict_error(mu, nv, r), rtol=1e-5, atol=1e-5
+        )
+
+    def test_perfect_prediction_gives_zero_error(self):
+        mu = jnp.ones((16, 4), jnp.float32)
+        nv = jnp.ones((16, 4), jnp.float32)
+        r = jnp.full((16,), 4.0, jnp.float32)
+        np.testing.assert_allclose(predict.predict_error(mu, nv, r), 0.0, atol=1e-6)
+
+
+# -------------------------------------------------------------- nag_gradients
+class TestNagGradients:
+    @pytest.mark.parametrize("b,d", [(1, 1), (32, 8), (512, 16)])
+    @pytest.mark.parametrize("lam", [0.0, 0.03, 0.5])
+    def test_matches_ref(self, b, d, lam):
+        k1, k2, k3 = _keys(b * 17 + d, 3)
+        mu, nv, r = _rand(k1, b, d), _rand(k2, b, d), _rand(k3, b)
+        e, gm, gn = nag.nag_gradients(mu, nv, r, lam)
+        re, rgm, rgn = ref.nag_gradients(mu, nv, r, lam)
+        np.testing.assert_allclose(e, re, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(gm, rgm, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(gn, rgn, rtol=1e-5, atol=1e-5)
+
+    @hypothesis.given(
+        b=st.integers(1, 130),
+        d=st.integers(1, 24),
+        lam=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis(self, b, d, lam, seed):
+        k1, k2, k3 = _keys(seed, 3)
+        mu, nv, r = _rand(k1, b, d), _rand(k2, b, d), _rand(k3, b)
+        e, gm, gn = nag.nag_gradients(mu, nv, r, lam)
+        re, rgm, rgn = ref.nag_gradients(mu, nv, r, lam)
+        np.testing.assert_allclose(e, re, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(gm, rgm, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(gn, rgn, rtol=1e-4, atol=1e-4)
+
+    def test_gradient_is_descent_direction(self):
+        """Following g with small η must reduce squared error (λ=0)."""
+        k1, k2, k3 = _keys(3, 3)
+        mu, nv, r = _rand(k1, 64, 8), _rand(k2, 64, 8), _rand(k3, 64)
+        e, gm, gn = nag.nag_gradients(mu, nv, r, 0.0)
+        eta = 1e-3
+        mu2, nv2 = mu + eta * gm, nv + eta * gn
+        e2 = ref.predict_error(mu2, nv2, r)
+        assert float(jnp.sum(e2 * e2)) < float(jnp.sum(e * e))
+
+    def test_lambda_zero_matches_unregularized(self):
+        k1, k2, k3 = _keys(11, 3)
+        mu, nv, r = _rand(k1, 32, 4), _rand(k2, 32, 4), _rand(k3, 32)
+        e, gm, gn = nag.nag_gradients(mu, nv, r, 0.0)
+        np.testing.assert_allclose(gm, np.asarray(e)[:, None] * nv, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(gn, np.asarray(e)[:, None] * mu, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,164 @@
+"""L2 correctness: model-level batched functions (shapes, masking, update)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+hypothesis.settings.register_profile(
+    "model", deadline=None, max_examples=20, derandomize=True
+)
+hypothesis.settings.load_profile("model")
+
+
+def _mk(seed, b=64, d=8, u=32, v=24):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    m = jax.random.normal(ks[0], (u, d), jnp.float32) * 0.1
+    n = jax.random.normal(ks[1], (v, d), jnp.float32) * 0.1
+    phi = jnp.zeros((u, d), jnp.float32)
+    psi = jnp.zeros((v, d), jnp.float32)
+    uidx = jax.random.randint(ks[2], (b,), 0, u)
+    vidx = jax.random.randint(ks[3], (b,), 0, v)
+    r = jax.random.uniform(ks[4], (b,), jnp.float32, 1.0, 5.0)
+    mask = jnp.ones((b,), jnp.float32)
+    return m, n, phi, psi, uidx, vidx, r, mask
+
+
+class TestEvalBatch:
+    def test_matches_numpy(self):
+        m, n, _, _, uidx, vidx, r, mask = _mk(0)
+        sse, sae, cnt = model.eval_batch(m[uidx], n[vidx], r, mask)
+        e = np.asarray(ref.predict_error(m[uidx], n[vidx], r))
+        np.testing.assert_allclose(sse, np.sum(e * e), rtol=1e-5)
+        np.testing.assert_allclose(sae, np.sum(np.abs(e)), rtol=1e-5)
+        assert float(cnt) == 64.0
+
+    def test_mask_excludes_lanes(self):
+        m, n, _, _, uidx, vidx, r, mask = _mk(1)
+        mask = mask.at[::2].set(0.0)
+        sse, sae, cnt = model.eval_batch(m[uidx], n[vidx], r, mask)
+        e = np.asarray(ref.predict_error(m[uidx], n[vidx], r)) * np.asarray(mask)
+        np.testing.assert_allclose(sse, np.sum(e * e), rtol=1e-5)
+        assert float(cnt) == 32.0
+
+    def test_all_masked_gives_zero(self):
+        m, n, _, _, uidx, vidx, r, mask = _mk(2)
+        sse, sae, cnt = model.eval_batch(m[uidx], n[vidx], r, mask * 0.0)
+        assert float(sse) == 0.0 and float(sae) == 0.0 and float(cnt) == 0.0
+
+
+class TestLossBatch:
+    def test_matches_eq1(self):
+        m, n, _, _, uidx, vidx, r, mask = _mk(3)
+        lam = 0.05
+        (loss,) = model.loss_batch(m[uidx], n[vidx], r, mask, jnp.float32(lam))
+        mu, nv = np.asarray(m)[np.asarray(uidx)], np.asarray(n)[np.asarray(vidx)]
+        e = np.asarray(r) - np.sum(mu * nv, axis=-1)
+        want = 0.5 * np.sum(e * e + lam * (np.sum(mu * mu, -1) + np.sum(nv * nv, -1)))
+        np.testing.assert_allclose(float(loss), want, rtol=1e-5)
+
+    def test_loss_nonnegative(self):
+        m, n, _, _, uidx, vidx, r, mask = _mk(4)
+        (loss,) = model.loss_batch(m[uidx], n[vidx], r, mask, jnp.float32(0.1))
+        assert float(loss) >= 0.0
+
+
+class TestBlockUpdate:
+    def test_reduces_training_error(self):
+        # Per-row effective step is η × (instances per row ≈ B/U), so keep η
+        # small enough that aggregated-minibatch NAG stays in the stable regime.
+        m, n, phi, psi, uidx, vidx, r, mask = _mk(5, b=256, u=16, v=12)
+        args = dict(eta=jnp.float32(2e-3), lam=jnp.float32(0.01), gamma=jnp.float32(0.9))
+        sse0 = float(model.eval_batch(m[uidx], n[vidx], r, mask)[0])
+        for _ in range(100):
+            m, n, phi, psi = model.block_update(
+                m, n, phi, psi, uidx, vidx, r, mask, **args
+            )
+        sse1 = float(model.eval_batch(m[uidx], n[vidx], r, mask)[0])
+        assert sse1 < 0.5 * sse0
+
+    def test_untouched_rows_unchanged(self):
+        m, n, phi, psi, uidx, vidx, r, mask = _mk(6, b=8, u=64, v=64)
+        m2, n2, phi2, psi2 = model.block_update(
+            m, n, phi, psi, uidx, vidx, r, mask,
+            jnp.float32(0.1), jnp.float32(0.1), jnp.float32(0.9),
+        )
+        touched_u = set(np.asarray(uidx).tolist())
+        for row in range(64):
+            if row not in touched_u:
+                np.testing.assert_array_equal(np.asarray(m2[row]), np.asarray(m[row]))
+                np.testing.assert_array_equal(np.asarray(phi2[row]), np.asarray(phi[row]))
+
+    def test_masked_batch_is_identity(self):
+        m, n, phi, psi, uidx, vidx, r, mask = _mk(7)
+        m2, n2, phi2, psi2 = model.block_update(
+            m, n, phi, psi, uidx, vidx, r, mask * 0.0,
+            jnp.float32(0.1), jnp.float32(0.1), jnp.float32(0.9),
+        )
+        np.testing.assert_array_equal(np.asarray(m2), np.asarray(m))
+        np.testing.assert_array_equal(np.asarray(n2), np.asarray(n))
+
+    def test_single_instance_matches_per_instance_nag(self):
+        """B=1 mini-batch must equal the paper's per-instance rule exactly."""
+        m, n, phi, psi, *_ = _mk(8, b=1, u=4, v=4)
+        phi = phi + 0.01
+        psi = psi + 0.02
+        uidx = jnp.array([2], jnp.int32)
+        vidx = jnp.array([1], jnp.int32)
+        r = jnp.array([3.5], jnp.float32)
+        mask = jnp.ones((1,), jnp.float32)
+        eta, lam, gamma = 0.01, 0.05, 0.9
+        m2, n2, phi2, psi2 = model.block_update(
+            m, n, phi, psi, uidx, vidx, r, mask,
+            jnp.float32(eta), jnp.float32(lam), jnp.float32(gamma),
+        )
+        mu2, nv2, p2, q2 = ref.nag_step(
+            m[uidx], n[vidx], phi[uidx], psi[vidx], r, eta, lam, gamma
+        )
+        np.testing.assert_allclose(np.asarray(m2[2]), np.asarray(mu2[0]), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(n2[1]), np.asarray(nv2[0]), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(phi2[2]), np.asarray(p2[0]), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(psi2[1]), np.asarray(q2[0]), rtol=1e-5)
+
+    @hypothesis.given(
+        b=st.integers(1, 64),
+        u=st.integers(2, 32),
+        v=st.integers(2, 32),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_shapes_preserved(self, b, u, v, seed):
+        m, n, phi, psi, uidx, vidx, r, mask = _mk(seed % 1000, b=b, d=4, u=u, v=v)
+        outs = model.block_update(
+            m, n, phi, psi, uidx, vidx, r, mask,
+            jnp.float32(0.01), jnp.float32(0.01), jnp.float32(0.5),
+        )
+        for got, want in zip(outs, (m, n, phi, psi)):
+            assert got.shape == want.shape and got.dtype == want.dtype
+            assert bool(jnp.all(jnp.isfinite(got)))
+
+
+class TestGammaZeroIsPlainSGDMinibatch:
+    def test_gamma0_equals_sgd(self):
+        """γ=0 collapses NAG to plain SGD (Eq. 3) for non-repeating rows."""
+        d = 4
+        m = jnp.ones((4, d), jnp.float32) * 0.3
+        n = jnp.ones((4, d), jnp.float32) * 0.2
+        phi = jnp.zeros_like(m)
+        psi = jnp.zeros_like(n)
+        uidx = jnp.array([0, 1], jnp.int32)
+        vidx = jnp.array([2, 3], jnp.int32)
+        r = jnp.array([4.0, 2.0], jnp.float32)
+        mask = jnp.ones((2,), jnp.float32)
+        eta, lam = 0.1, 0.02
+        m2, n2, _, _ = model.block_update(
+            m, n, phi, psi, uidx, vidx, r, mask,
+            jnp.float32(eta), jnp.float32(lam), jnp.float32(0.0),
+        )
+        mu2, nv2 = ref.sgd_step(m[uidx], n[vidx], r, eta, lam)
+        np.testing.assert_allclose(np.asarray(m2[:2]), np.asarray(mu2), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(n2[2:]), np.asarray(nv2), rtol=1e-5)

@@ -1,0 +1,54 @@
+"""L1 correctness for the top-N scoring kernel."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import recommend, ref
+
+hypothesis.settings.register_profile(
+    "recommend", deadline=None, max_examples=20, derandomize=True
+)
+hypothesis.settings.load_profile("recommend")
+
+
+def _rand(seed, *shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype=jnp.float32)
+
+
+class TestScoreAllItems:
+    @pytest.mark.parametrize("v,d", [(1, 1), (8, 4), (1024, 16), (1000, 7)])
+    def test_matches_ref(self, v, d):
+        mu = _rand(v + d, d)
+        n = _rand(v * 31 + d, v, d)
+        got = recommend.score_all_items(mu, n)
+        np.testing.assert_allclose(got, ref.score_all_items(mu, n), rtol=1e-5, atol=1e-5)
+
+    @hypothesis.given(
+        v=st.integers(1, 400),
+        d=st.integers(1, 32),
+        tile=st.integers(1, 256),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes_tiles(self, v, d, tile, seed):
+        mu = _rand(seed, d)
+        n = _rand(seed + 1, v, d)
+        got = recommend.score_all_items(mu, n, tile_v=tile)
+        np.testing.assert_allclose(got, ref.score_all_items(mu, n), rtol=1e-4, atol=1e-4)
+
+    def test_identity_items_echo_user_row(self):
+        d = 4
+        mu = jnp.arange(d, dtype=jnp.float32)
+        n = jnp.eye(d, dtype=jnp.float32)
+        got = recommend.score_all_items(mu, n)
+        np.testing.assert_allclose(got, mu, atol=0)
+
+    def test_topk_ordering_preserved(self):
+        mu = jnp.ones(8, dtype=jnp.float32)
+        n = jnp.stack([jnp.full(8, float(i)) for i in range(32)])
+        scores = np.asarray(recommend.score_all_items(mu, n))
+        top = np.argsort(-scores)[:5]
+        assert list(top) == [31, 30, 29, 28, 27]

@@ -1,0 +1,96 @@
+//! **Ablation A2** (paper §III-B claim): load-balanced vs uniform blocking.
+//!
+//! Reports (a) block-instance imbalance statistics (the "curse of the last
+//! reducer" measure), (b) scheduler fairness (per-block update-count
+//! spread), and (c) end-to-end convergence with only the partition swapped.
+//!
+//! ```bash
+//! cargo bench --bench ablation_balance
+//! ```
+
+mod bench_common;
+
+use a2psgd::bench_harness::Table;
+use a2psgd::engine::{run_driver, BlockEngine, EngineKind, TrainConfig};
+use a2psgd::model::Factors;
+use a2psgd::partition::{build_grid, PartitionKind};
+use a2psgd::prelude::*;
+use a2psgd::scheduler::{BlockScheduler, LockFreeScheduler};
+use bench_common::{banner, Scale};
+use std::sync::Arc;
+
+fn main() {
+    let scale = Scale::from_env();
+    banner("Ablation A2 — load balancing", &scale);
+    let key = scale.datasets[0];
+    let data = a2psgd::coordinator::resolve_dataset(key, 1).expect("dataset");
+    println!("dataset {}\n", data.describe());
+
+    // (a) Static block balance.
+    println!("block-instance balance ((c+1)² grid, c={})", scale.threads);
+    let mut t = Table::new(&["partition", "min", "max", "mean", "imbalance", "gini"]);
+    for kind in [PartitionKind::Uniform, PartitionKind::Balanced] {
+        let grid = build_grid(&data.train, kind, scale.threads);
+        let b = grid.balance();
+        t.row(&[
+            kind.to_string(),
+            b.min.to_string(),
+            b.max.to_string(),
+            format!("{:.1}", b.mean),
+            format!("{:.2}", b.imbalance),
+            format!("{:.3}", b.gini),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // (b)+(c) End-to-end with the partition swapped.
+    println!("end-to-end (lock-free scheduler + NAG, partition swapped)");
+    let mut t2 = Table::new(&[
+        "partition",
+        "best RMSE",
+        "RMSE-time",
+        "Mups",
+        "upd-count imbalance",
+    ]);
+    let mut csv = String::from("partition,rmse,rmse_time,mups,update_imbalance\n");
+    for kind in [PartitionKind::Uniform, PartitionKind::Balanced] {
+        let cfg = TrainConfig::preset(EngineKind::A2psgd, &data)
+            .threads(scale.threads)
+            .epochs(scale.epochs)
+            .partition(kind);
+        let mut rng = Rng::new(cfg.seed);
+        let scalef = Factors::default_scale(data.train.mean_rating(), cfg.d);
+        let factors = Factors::init(data.nrows(), data.ncols(), cfg.d, scalef, &mut rng);
+        let sched: Arc<dyn BlockScheduler> = Arc::new(LockFreeScheduler::new(cfg.threads + 1));
+        let eng = BlockEngine::custom(&data, factors, &cfg, Arc::clone(&sched), kind, a2psgd::optim::Rule::Nag, &mut rng);
+        let report = run_driver(&data, &cfg, Box::new(eng));
+        // Fairness of *work*: updates-per-block × instances-per-block spread
+        // is what the "last reducer" suffers from.
+        let fairness = a2psgd::sparse::stats::count_stats(&sched.update_counts());
+        println!(
+            "  {kind:<9} RMSE {:.4}  time {:.2}s  {:.2}M ups  update-imbalance {:.2}",
+            report.best_rmse(),
+            report.rmse_time(),
+            report.updates_per_sec() / 1e6,
+            fairness.imbalance
+        );
+        t2.row(&[
+            kind.to_string(),
+            format!("{:.4}", report.best_rmse()),
+            format!("{:.2}s", report.rmse_time()),
+            format!("{:.2}", report.updates_per_sec() / 1e6),
+            format!("{:.2}", fairness.imbalance),
+        ]);
+        csv.push_str(&format!(
+            "{kind},{},{},{},{}\n",
+            report.best_rmse(),
+            report.rmse_time(),
+            report.updates_per_sec() / 1e6,
+            fairness.imbalance
+        ));
+    }
+    println!("{}", t2.render());
+    let p = a2psgd::bench_harness::write_results_csv("ablation_balance.csv", &csv)
+        .expect("writing results");
+    println!("rows → {}", p.display());
+}

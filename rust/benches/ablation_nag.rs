@@ -1,0 +1,70 @@
+//! **Ablation A3** (paper §III-C claim): the NAG learning scheme vs plain
+//! SGD inside the identical A²PSGD engine — γ sweep with matched step sizes.
+//!
+//! ```bash
+//! cargo bench --bench ablation_nag
+//! ```
+
+mod bench_common;
+
+use a2psgd::bench_harness::Table;
+use a2psgd::engine::{train, EngineKind, TrainConfig};
+use a2psgd::optim::{Hyper, Rule};
+use bench_common::{banner, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    banner("Ablation A3 — NAG momentum", &scale);
+    let key = scale.datasets[0];
+    let data = a2psgd::coordinator::resolve_dataset(key, 1).expect("dataset");
+    println!("dataset {}\n", data.describe());
+
+    let base = a2psgd::config::presets::hyper_for(EngineKind::A2psgd, &data.name);
+    let mut t = Table::new(&["rule", "gamma", "eta", "best RMSE", "epochs-to-best", "RMSE-time"]);
+    let mut csv = String::from("rule,gamma,eta,rmse,epochs_to_best,rmse_time\n");
+    // γ sweep for NAG, plus the optimizer zoo at γ=0.9 (heavy-ball) and the
+    // adaptive family (AdaGrad, η re-tuned to its normalized scale).
+    let sweep: Vec<(Rule, f32, f32)> = vec![
+        (Rule::Nag, 0.0, base.eta * (1.0 - 0.0) / (1.0 - 0.9)),
+        (Rule::Nag, 0.5, base.eta * (1.0 - 0.5) / (1.0 - 0.9)),
+        (Rule::Nag, 0.9, base.eta),
+        (Rule::Momentum, 0.9, base.eta),
+        (Rule::AdaGrad, 0.0, 0.05),
+    ];
+    for (rule, gamma, eta) in sweep {
+        let cfg = TrainConfig::preset(EngineKind::A2psgd, &data)
+            .threads(scale.threads)
+            .epochs(scale.epochs)
+            .hyper(Hyper::nag(eta, base.lam, gamma))
+            .rule(rule)
+            .no_early_stop();
+        let report = train(&data, &cfg).expect("train");
+        let best_epoch = report
+            .history
+            .best_rmse()
+            .map(|p| p.epoch)
+            .unwrap_or(0);
+        println!(
+            "  {rule:<8} γ={gamma:<4} η={eta:.1e}  RMSE {:.4}  best@epoch {best_epoch}  time {:.2}s",
+            report.best_rmse(),
+            report.rmse_time()
+        );
+        t.row(&[
+            rule.to_string(),
+            format!("{gamma}"),
+            format!("{eta:.1e}"),
+            format!("{:.4}", report.best_rmse()),
+            best_epoch.to_string(),
+            format!("{:.2}s", report.rmse_time()),
+        ]);
+        csv.push_str(&format!(
+            "{rule},{gamma},{eta},{},{best_epoch},{}\n",
+            report.best_rmse(),
+            report.rmse_time()
+        ));
+    }
+    println!("{}", t.render());
+    let p = a2psgd::bench_harness::write_results_csv("ablation_nag.csv", &csv)
+        .expect("writing results");
+    println!("rows → {}", p.display());
+}

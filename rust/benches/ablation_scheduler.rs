@@ -1,0 +1,125 @@
+//! **Ablation A1** (paper §III-A claim): lock-free vs global-lock scheduler.
+//!
+//! Two measurements:
+//! 1. Raw scheduler microbenchmark — acquire/release throughput under 1..=c
+//!    contending threads, for both schedulers.
+//! 2. End-to-end — A²PSGD with only the scheduler swapped (same balanced
+//!    partition, same NAG rule): updates/sec and time-to-best-RMSE.
+//!
+//! ```bash
+//! cargo bench --bench ablation_scheduler
+//! ```
+
+mod bench_common;
+
+use a2psgd::bench_harness::Table;
+use a2psgd::engine::{run_driver, BlockEngine, EngineKind, TrainConfig};
+use a2psgd::model::Factors;
+use a2psgd::partition::PartitionKind;
+use a2psgd::prelude::*;
+use a2psgd::scheduler::{BlockScheduler, LockFreeScheduler, LockedScheduler};
+use bench_common::{banner, Scale};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+fn sched_throughput(sched: Arc<dyn BlockScheduler>, threads: usize, secs: f64) -> f64 {
+    let stop = AtomicBool::new(false);
+    let ops = AtomicU64::new(0);
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let sched = Arc::clone(&sched);
+            let stop = &stop;
+            let ops = &ops;
+            scope.spawn(move || {
+                let mut rng = Rng::new(t as u64 + 1);
+                let mut local = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    if let Some(c) = sched.acquire(&mut rng) {
+                        sched.release(c);
+                        local += 1;
+                    }
+                }
+                ops.fetch_add(local, Ordering::Relaxed);
+            });
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(secs));
+        stop.store(true, Ordering::Relaxed);
+    });
+    ops.load(Ordering::Relaxed) as f64 / secs
+}
+
+fn main() {
+    let scale = Scale::from_env();
+    banner("Ablation A1 — scheduler", &scale);
+
+    // 1. Raw acquire/release throughput.
+    println!("\nscheduler microbenchmark (acquire+release ops/sec)");
+    let mut t = Table::new(&["threads", "locked", "lock-free", "ratio"]);
+    let mut counts = vec![1usize, 2, 4, 8, 16, 32];
+    counts.retain(|&c| c <= scale.threads.max(8));
+    for &c in &counts {
+        let nb = c + 1;
+        let locked = sched_throughput(Arc::new(LockedScheduler::new(nb)), c, 0.4);
+        let lockfree = sched_throughput(Arc::new(LockFreeScheduler::new(nb)), c, 0.4);
+        t.row(&[
+            c.to_string(),
+            format!("{:.2}M", locked / 1e6),
+            format!("{:.2}M", lockfree / 1e6),
+            format!("{:.1}x", lockfree / locked),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // 2. End-to-end: identical A²PSGD except the scheduler.
+    println!("end-to-end (balanced partition + NAG, scheduler swapped)");
+    let key = scale.datasets[0];
+    let data = a2psgd::coordinator::resolve_dataset(key, 1).expect("dataset");
+    let mut t2 = Table::new(&["scheduler", "Mups", "best RMSE", "RMSE-time"]);
+    let mut csv = String::from("scheduler,mups,rmse,rmse_time\n");
+    for (name, lockfree) in [("locked", false), ("lock-free", true)] {
+        let cfg = TrainConfig::preset(EngineKind::A2psgd, &data)
+            .threads(scale.threads)
+            .epochs(scale.epochs);
+        let mut rng = Rng::new(cfg.seed);
+        let scalef = Factors::default_scale(data.train.mean_rating(), cfg.d);
+        let factors = Factors::init(data.nrows(), data.ncols(), cfg.d, scalef, &mut rng);
+        let nb = cfg.threads + 1;
+        let sched: Arc<dyn BlockScheduler> = if lockfree {
+            Arc::new(LockFreeScheduler::new(nb))
+        } else {
+            Arc::new(LockedScheduler::new(nb))
+        };
+        let eng = BlockEngine::custom(
+            &data,
+            factors,
+            &cfg,
+            sched,
+            PartitionKind::Balanced,
+            a2psgd::optim::Rule::Nag,
+            &mut rng,
+        );
+        let report = run_driver(&data, &cfg, Box::new(eng));
+        println!(
+            "  {name:<10} {:.2}M updates/s  RMSE {:.4}  time {:.2}s",
+            report.updates_per_sec() / 1e6,
+            report.best_rmse(),
+            report.rmse_time()
+        );
+        t2.row(&[
+            name.to_string(),
+            format!("{:.2}", report.updates_per_sec() / 1e6),
+            format!("{:.4}", report.best_rmse()),
+            format!("{:.2}s", report.rmse_time()),
+        ]);
+        csv.push_str(&format!(
+            "{name},{},{},{}\n",
+            report.updates_per_sec() / 1e6,
+            report.best_rmse(),
+            report.rmse_time()
+        ));
+    }
+    println!("{}", t2.render());
+    let p = a2psgd::bench_harness::write_results_csv("ablation_scheduler.csv", &csv)
+        .expect("writing results");
+    println!("rows → {}", p.display());
+}

@@ -1,0 +1,81 @@
+//! Shared helpers for the paper-table benches.
+//!
+//! Every bench accepts `A2PSGD_SCALE`:
+//! - `small`  — synthetic-small, 2 seeds (seconds; CI default for cargo bench)
+//! - `medium` — synthetic-medium, 3 seeds
+//! - `paper`  — the ml1m/epinions twins, 3 seeds (minutes; what
+//!              EXPERIMENTS.md records)
+
+use a2psgd::engine::{default_threads, EngineKind, TrainConfig};
+use a2psgd::prelude::*;
+
+/// Scale selection for a bench run.
+#[derive(Clone, Debug)]
+pub struct Scale {
+    /// Dataset keys to run.
+    pub datasets: Vec<&'static str>,
+    /// Seeds per cell.
+    pub seeds: Vec<u64>,
+    /// Max epochs.
+    pub epochs: u32,
+    /// Worker threads.
+    pub threads: usize,
+}
+
+impl Scale {
+    /// Read `A2PSGD_SCALE` (default `small`) and `A2PSGD_THREADS`.
+    ///
+    /// Thread counts follow the *paper's* setting (32 at paper scale), not
+    /// the hardware: on an undersized box the threads oversubscribe, which
+    /// still exercises the schedulers' contention behaviour (EXPERIMENTS.md
+    /// §Environment records the testbed substitution).
+    pub fn from_env() -> Scale {
+        let scale = std::env::var("A2PSGD_SCALE").unwrap_or_else(|_| "small".into());
+        let threads_override = std::env::var("A2PSGD_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok());
+        let mut s = match scale.as_str() {
+            "paper" => Scale {
+                datasets: vec!["ml1m", "epinions"],
+                seeds: vec![1, 2, 3],
+                epochs: 45,
+                threads: 32,
+            },
+            "medium" => Scale {
+                datasets: vec!["medium"],
+                seeds: vec![1, 2, 3],
+                epochs: 30,
+                threads: 8,
+            },
+            _ => Scale {
+                datasets: vec!["small"],
+                seeds: vec![1, 2],
+                epochs: 12,
+                threads: 4,
+            },
+        };
+        let _ = default_threads; // hardware count still available to callers
+        if let Some(t) = threads_override {
+            s.threads = t.max(1);
+        }
+        s
+    }
+
+    /// Config factory for [`a2psgd::coordinator::run_cell`].
+    pub fn mk_cfg(&self) -> impl Fn(EngineKind, &Dataset) -> TrainConfig + '_ {
+        let threads = self.threads;
+        let epochs = self.epochs;
+        move |engine, data| TrainConfig::preset(engine, data).threads(threads).epochs(epochs)
+    }
+}
+
+/// Print the standard bench banner.
+pub fn banner(name: &str, scale: &Scale) {
+    println!(
+        "=== {name} === datasets={:?} seeds={} epochs={} threads={}",
+        scale.datasets,
+        scale.seeds.len(),
+        scale.epochs,
+        scale.threads
+    );
+}

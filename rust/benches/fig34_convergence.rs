@@ -1,0 +1,61 @@
+//! Regenerates **Figs. 3 & 4**: RMSE and MAE convergence curves (vs training
+//! seconds) for all five engines. Emits one CSV per (dataset, engine) under
+//! `results/`; each row is `epoch,train_seconds,rmse,mae` — Fig. 3 plots
+//! column 3, Fig. 4 column 4.
+//!
+//! ```bash
+//! cargo bench --bench fig34_convergence
+//! A2PSGD_SCALE=paper cargo bench --bench fig34_convergence
+//! ```
+
+mod bench_common;
+
+use a2psgd::coordinator::{run_cell, write_convergence_csv};
+use a2psgd::engine::EngineKind;
+use bench_common::{banner, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    banner("Figs 3–4 — convergence curves", &scale);
+    let mk = scale.mk_cfg();
+    for key in &scale.datasets {
+        let mut cells = Vec::new();
+        for engine in EngineKind::paper_set() {
+            // Figures need the full curve — disable early stop.
+            let mk_full = |e: EngineKind, d: &a2psgd::data::Dataset| mk(e, d).no_early_stop();
+            let cell = run_cell(key, engine, &scale.seeds[..1], &mk_full).expect("cell failed");
+            let last = cell.representative.history.last().copied();
+            eprintln!(
+                "  {key}/{engine}: {} epochs, final RMSE {:.4}",
+                cell.representative.history.points().len(),
+                last.map(|p| p.rmse).unwrap_or(f64::NAN)
+            );
+            cells.push(cell);
+        }
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results");
+        write_convergence_csv(&dir, key, &cells).expect("writing CSVs");
+        println!("series for {key} → results/convergence_{key}_*.csv");
+
+        // Console sparkline of the RMSE curves (Fig. 3 shape at a glance).
+        for cell in &cells {
+            let pts = cell.representative.history.points();
+            let line: String = pts
+                .iter()
+                .step_by((pts.len() / 24).max(1))
+                .map(|p| spark(p.rmse, pts))
+                .collect();
+            println!("  {:<10} {}", cell.engine.to_string(), line);
+        }
+    }
+}
+
+fn spark(x: f64, pts: &[a2psgd::metrics::EpochStat]) -> char {
+    let lo = pts.iter().map(|p| p.rmse).fold(f64::INFINITY, f64::min);
+    let hi = pts.iter().map(|p| p.rmse).fold(f64::NEG_INFINITY, f64::max);
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if hi <= lo {
+        return BARS[0];
+    }
+    let t = ((x - lo) / (hi - lo) * 7.0).round() as usize;
+    BARS[t.min(7)]
+}

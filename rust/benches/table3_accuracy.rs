@@ -1,0 +1,40 @@
+//! Regenerates **Table III**: prediction accuracy (RMSE/MAE, mean±std over
+//! seeds) for all five engines.
+//!
+//! ```bash
+//! cargo bench --bench table3_accuracy                      # small smoke
+//! A2PSGD_SCALE=paper cargo bench --bench table3_accuracy   # the paper's cells
+//! ```
+
+mod bench_common;
+
+use a2psgd::coordinator::{format_accuracy_table, run_cell};
+use a2psgd::engine::EngineKind;
+use bench_common::{banner, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    banner("Table III — prediction accuracy", &scale);
+    let mk = scale.mk_cfg();
+    let mut csv = String::from("dataset,engine,rmse_mean,rmse_std,mae_mean,mae_std\n");
+    for key in &scale.datasets {
+        let mut cells = Vec::new();
+        for engine in EngineKind::paper_set() {
+            let cell = run_cell(key, engine, &scale.seeds, &mk).expect("cell failed");
+            eprintln!(
+                "  {key}/{engine}: RMSE {}  MAE {}",
+                cell.rmse.fmt_paper(4),
+                cell.mae.fmt_paper(4)
+            );
+            csv.push_str(&format!(
+                "{key},{engine},{},{},{},{}\n",
+                cell.rmse.mean, cell.rmse.std, cell.mae.mean, cell.mae.std
+            ));
+            cells.push(cell);
+        }
+        println!("\n{}", format_accuracy_table(key, &cells));
+    }
+    let p = a2psgd::bench_harness::write_results_csv("table3_accuracy.csv", &csv)
+        .expect("writing results");
+    println!("rows → {}", p.display());
+}

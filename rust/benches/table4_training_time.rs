@@ -1,0 +1,46 @@
+//! Regenerates **Table IV**: training time to the best RMSE/MAE (mean±std
+//! over seeds) for all five engines, plus raw update throughput.
+//!
+//! ```bash
+//! cargo bench --bench table4_training_time
+//! A2PSGD_SCALE=paper cargo bench --bench table4_training_time
+//! ```
+
+mod bench_common;
+
+use a2psgd::coordinator::{format_time_table, run_cell};
+use a2psgd::engine::EngineKind;
+use bench_common::{banner, Scale};
+
+fn main() {
+    let scale = Scale::from_env();
+    banner("Table IV — training time", &scale);
+    let mk = scale.mk_cfg();
+    let mut csv =
+        String::from("dataset,engine,rmse_time_mean,rmse_time_std,mae_time_mean,mae_time_std,mups\n");
+    for key in &scale.datasets {
+        let mut cells = Vec::new();
+        for engine in EngineKind::paper_set() {
+            let cell = run_cell(key, engine, &scale.seeds, &mk).expect("cell failed");
+            eprintln!(
+                "  {key}/{engine}: RMSE-time {}  MAE-time {}  ({:.2}M ups)",
+                cell.rmse_time.fmt_paper(2),
+                cell.mae_time.fmt_paper(2),
+                cell.updates_per_sec / 1e6
+            );
+            csv.push_str(&format!(
+                "{key},{engine},{},{},{},{},{}\n",
+                cell.rmse_time.mean,
+                cell.rmse_time.std,
+                cell.mae_time.mean,
+                cell.mae_time.std,
+                cell.updates_per_sec
+            ));
+            cells.push(cell);
+        }
+        println!("\n{}", format_time_table(key, &cells));
+    }
+    let p = a2psgd::bench_harness::write_results_csv("table4_training_time.csv", &csv)
+        .expect("writing results");
+    println!("rows → {}", p.display());
+}

@@ -1,0 +1,225 @@
+//! Benchmark harness (no `criterion` offline): warmup + timed iterations,
+//! robust statistics, paper-style table printing, and CSV emission for the
+//! figure-regenerating benches.
+
+use crate::metrics::MeanStd;
+use std::time::Instant;
+
+/// Result of one timed benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// Benchmark name.
+    pub name: String,
+    /// Per-iteration seconds.
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    /// Mean ± std of per-iteration seconds.
+    pub fn stats(&self) -> MeanStd {
+        MeanStd::from(&self.samples)
+    }
+
+    /// Median per-iteration seconds.
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        if n % 2 == 1 {
+            s[n / 2]
+        } else {
+            0.5 * (s[n / 2 - 1] + s[n / 2])
+        }
+    }
+
+    /// Iterations per second at the median.
+    pub fn throughput(&self) -> f64 {
+        let m = self.median();
+        if m > 0.0 {
+            1.0 / m
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// One human-readable line.
+    pub fn summary(&self) -> String {
+        let s = self.stats();
+        format!(
+            "{:<44} {:>12} median {:>12} ±{:>10}  ({} iters)",
+            self.name,
+            fmt_secs(self.median()),
+            fmt_secs(s.mean),
+            fmt_secs(s.std),
+            self.samples.len()
+        )
+    }
+}
+
+/// Human-scale seconds formatting.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}µs", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Run `f` for `warmup` unmeasured + `iters` measured iterations.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), samples }
+}
+
+/// Run a batched micro-benchmark: `f` executes `batch` operations per call;
+/// reported samples are per-*operation* seconds.
+pub fn bench_batched(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    batch: u64,
+    mut f: impl FnMut(),
+) -> BenchResult {
+    let mut r = bench(name, warmup, iters, &mut f);
+    for s in &mut r.samples {
+        *s /= batch as f64;
+    }
+    r
+}
+
+/// Aligned-table printer for bench output.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with column headers.
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row (must match header arity).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with per-column widths.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for i in 0..ncol {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:>width$}", cells[i], width = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+/// Write a CSV file under `results/`, creating the directory.
+pub fn write_results_csv(filename: &str, contents: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(filename);
+    std::fs::write(&path, contents)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let r = bench("noop", 2, 10, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(r.samples.len(), 10);
+        assert!(r.median() >= 0.0);
+        assert!(r.throughput() > 0.0);
+    }
+
+    #[test]
+    fn bench_batched_divides() {
+        let r = bench_batched("sleepy", 0, 3, 1000, || {
+            std::thread::sleep(std::time::Duration::from_millis(1))
+        });
+        // ≈1ms per call / 1000 ops ⇒ ≈1µs per op.
+        assert!(r.median() < 1e-4, "median={}", r.median());
+    }
+
+    #[test]
+    fn median_even_odd() {
+        let r = BenchResult { name: "x".into(), samples: vec![3.0, 1.0, 2.0] };
+        assert_eq!(r.median(), 2.0);
+        let r2 = BenchResult { name: "x".into(), samples: vec![4.0, 1.0, 2.0, 3.0] };
+        assert_eq!(r2.median(), 2.5);
+    }
+
+    #[test]
+    fn fmt_secs_scales() {
+        assert!(fmt_secs(2.5).ends_with('s'));
+        assert!(fmt_secs(2.5e-3).ends_with("ms"));
+        assert!(fmt_secs(2.5e-6).ends_with("µs"));
+        assert!(fmt_secs(2.5e-9).ends_with("ns"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["long-name".into(), "123".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[1].chars().filter(|&c| c == '-').count(), lines[1].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn summary_contains_name_and_iters() {
+        let r = bench("mybench", 0, 5, || {});
+        let s = r.summary();
+        assert!(s.contains("mybench") && s.contains("5 iters"));
+    }
+}

@@ -1,0 +1,176 @@
+//! Hand-rolled CLI (no `clap` offline): subcommands + `--flag value` pairs.
+//!
+//! ```text
+//! a2psgd train   [--engine E] [--dataset D] [--threads N] [--epochs N]
+//!                [--seed S] [--d D] [--eta F] [--lam F] [--gamma F]
+//!                [--partition uniform|balanced] [--config FILE]
+//!                [--data-file PATH] [--out DIR] [--no-early-stop]
+//! a2psgd compare [--dataset D] [--threads N] [--seeds N] [--epochs N] [--out DIR]
+//! a2psgd serve   [--dataset D] [--requests N] [--artifacts DIR]
+//! a2psgd gen-data --dataset D --out FILE [--seed S]
+//! a2psgd print-config [--dataset D]
+//! a2psgd eval    --data-file PATH (reserved)
+//! ```
+
+use crate::Result;
+use anyhow::{bail, Context};
+use std::collections::HashMap;
+
+/// A parsed command line: subcommand + flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    /// First positional token.
+    pub command: String,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+/// Flags that take no value.
+const SWITCHES: &[&str] = &["no-early-stop", "verbose", "help", "xla-eval"];
+
+impl Args {
+    /// Parse a raw argv (excluding the binary name).
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(cmd) = it.peek() {
+            if !cmd.starts_with("--") {
+                args.command = it.next().unwrap().clone();
+            }
+        }
+        while let Some(tok) = it.next() {
+            let Some(name) = tok.strip_prefix("--") else {
+                bail!("unexpected positional argument {tok:?}");
+            };
+            if SWITCHES.contains(&name) {
+                args.switches.push(name.to_string());
+                continue;
+            }
+            let value = it
+                .next()
+                .with_context(|| format!("flag --{name} expects a value"))?;
+            args.flags.insert(name.to_string(), value.clone());
+        }
+        Ok(args)
+    }
+
+    /// String flag.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// String flag with default.
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Typed flag.
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{name} {s:?}: {e}")),
+        }
+    }
+
+    /// Boolean switch present?
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// Flags the caller never read (typo detection).
+    pub fn unknown_flags(&self, known: &[&str]) -> Vec<String> {
+        self.flags
+            .keys()
+            .filter(|k| !known.contains(&k.as_str()))
+            .cloned()
+            .collect()
+    }
+}
+
+/// Top-level usage text.
+pub fn usage() -> &'static str {
+    "a2psgd — Accelerated Asynchronous Parallel SGD for HDS low-rank representation
+
+USAGE:
+  a2psgd train        train one engine on one dataset, print the report
+  a2psgd compare      run the paper's engine set, print Tables III/IV rows
+  a2psgd serve        train then serve batched predictions via XLA/PJRT
+  a2psgd gen-data     write a synthetic dataset to a ratings file
+  a2psgd print-config print the paper's hyperparameter tables (I/II)
+  a2psgd help         this text
+
+COMMON FLAGS:
+  --dataset small|medium|ml1m|epinions|<path>   (default: small)
+  --engine  seq|hogwild|dsgd|asgd|fpsgd|a2psgd|xla
+  --threads N      worker threads (default: hardware, capped 32)
+  --epochs N       max epochs
+  --seeds N        seeds for `compare` (default: 3)
+  --seed S         base RNG seed
+  --d D            feature dimension (default: 16)
+  --eta/--lam/--gamma F   hyperparameter overrides
+  --partition uniform|balanced
+  --config FILE    TOML run config (flags override it)
+  --out DIR        results directory (default: results/)
+  --artifacts DIR  AOT artifacts (default: artifacts/)
+  --no-early-stop  run all epochs
+"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_subcommand_and_flags() {
+        let a = Args::parse(&sv(&["train", "--engine", "a2psgd", "--threads", "8"])).unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("engine"), Some("a2psgd"));
+        assert_eq!(a.get_parsed::<usize>("threads").unwrap(), Some(8));
+    }
+
+    #[test]
+    fn switches_take_no_value() {
+        let a = Args::parse(&sv(&["train", "--no-early-stop", "--epochs", "5"])).unwrap();
+        assert!(a.has("no-early-stop"));
+        assert_eq!(a.get_parsed::<u32>("epochs").unwrap(), Some(5));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&sv(&["train", "--engine"])).is_err());
+    }
+
+    #[test]
+    fn positional_after_command_errors() {
+        assert!(Args::parse(&sv(&["train", "oops"])).is_err());
+    }
+
+    #[test]
+    fn typed_parse_errors_are_nice() {
+        let a = Args::parse(&sv(&["train", "--threads", "many"])).unwrap();
+        let e = a.get_parsed::<usize>("threads").unwrap_err().to_string();
+        assert!(e.contains("--threads"), "{e}");
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = Args::parse(&sv(&["train", "--engin", "x"])).unwrap();
+        assert_eq!(a.unknown_flags(&["engine"]), vec!["engin".to_string()]);
+    }
+
+    #[test]
+    fn empty_argv_is_helpish() {
+        let a = Args::parse(&[]).unwrap();
+        assert_eq!(a.command, "");
+    }
+}

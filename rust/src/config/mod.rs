@@ -1,0 +1,178 @@
+//! Configuration system: a TOML-subset parser (no `serde` offline) plus the
+//! paper's hyperparameter presets (Tables I & II).
+
+pub mod presets;
+pub mod toml_lite;
+
+pub use toml_lite::{parse, TomlValue, TomlDoc};
+
+use crate::engine::EngineKind;
+use crate::optim::Hyper;
+use crate::partition::PartitionKind;
+use crate::Result;
+use anyhow::Context;
+use std::path::Path;
+
+/// A full experiment configuration, loadable from a TOML-subset file.
+///
+/// ```toml
+/// [run]
+/// engine = "a2psgd"
+/// dataset = "ml1m"
+/// threads = 32
+/// epochs = 60
+/// seed = 24333
+/// d = 16
+///
+/// [hyper]
+/// eta = 1e-4
+/// lam = 5e-2
+/// gamma = 9e-1
+/// ```
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Engine name.
+    pub engine: EngineKind,
+    /// Dataset key (`ml1m`, `epinions`, `small`, `medium`) or a file path.
+    pub dataset: String,
+    /// Worker threads.
+    pub threads: usize,
+    /// Max epochs.
+    pub epochs: u32,
+    /// Seed.
+    pub seed: u64,
+    /// Feature dimension.
+    pub d: usize,
+    /// Hyperparameters (None = use the paper preset for the dataset).
+    pub hyper: Option<Hyper>,
+    /// Partition strategy override.
+    pub partition: Option<PartitionKind>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            engine: EngineKind::A2psgd,
+            dataset: "small".into(),
+            threads: crate::engine::default_threads(),
+            epochs: 60,
+            seed: 0x5EED,
+            d: 16,
+            hyper: None,
+            partition: None,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse from TOML-subset text.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let doc = parse(text)?;
+        let mut cfg = RunConfig::default();
+        if let Some(v) = doc.get("run", "engine") {
+            cfg.engine = EngineKind::parse(v.as_str().context("run.engine must be a string")?)?;
+        }
+        if let Some(v) = doc.get("run", "dataset") {
+            cfg.dataset = v.as_str().context("run.dataset must be a string")?.to_string();
+        }
+        if let Some(v) = doc.get("run", "threads") {
+            cfg.threads = v.as_int().context("run.threads must be an int")? as usize;
+        }
+        if let Some(v) = doc.get("run", "epochs") {
+            cfg.epochs = v.as_int().context("run.epochs must be an int")? as u32;
+        }
+        if let Some(v) = doc.get("run", "seed") {
+            cfg.seed = v.as_int().context("run.seed must be an int")? as u64;
+        }
+        if let Some(v) = doc.get("run", "d") {
+            cfg.d = v.as_int().context("run.d must be an int")? as usize;
+        }
+        if let Some(v) = doc.get("run", "partition") {
+            cfg.partition = Some(match v.as_str().context("run.partition must be a string")? {
+                "uniform" => PartitionKind::Uniform,
+                "balanced" => PartitionKind::Balanced,
+                other => anyhow::bail!("unknown partition {other:?}"),
+            });
+        }
+        let eta = doc.get("hyper", "eta");
+        let lam = doc.get("hyper", "lam");
+        let gamma = doc.get("hyper", "gamma");
+        if eta.is_some() || lam.is_some() || gamma.is_some() {
+            let base = presets::hyper_for(cfg.engine, &cfg.dataset);
+            cfg.hyper = Some(Hyper {
+                eta: eta.map(|v| v.as_float().unwrap_or(base.eta as f64) as f32).unwrap_or(base.eta),
+                lam: lam.map(|v| v.as_float().unwrap_or(base.lam as f64) as f32).unwrap_or(base.lam),
+                gamma: gamma
+                    .map(|v| v.as_float().unwrap_or(base.gamma as f64) as f32)
+                    .unwrap_or(base.gamma),
+            });
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_toml(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_sane() {
+        let c = RunConfig::default();
+        assert_eq!(c.engine, EngineKind::A2psgd);
+        assert!(c.threads >= 1);
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let text = r#"
+[run]
+engine = "fpsgd"
+dataset = "ml1m"
+threads = 8
+epochs = 25
+seed = 42
+d = 32
+partition = "balanced"
+
+[hyper]
+eta = 6e-4
+lam = 3e-2
+"#;
+        let c = RunConfig::from_toml(text).unwrap();
+        assert_eq!(c.engine, EngineKind::Fpsgd);
+        assert_eq!(c.dataset, "ml1m");
+        assert_eq!(c.threads, 8);
+        assert_eq!(c.epochs, 25);
+        assert_eq!(c.seed, 42);
+        assert_eq!(c.d, 32);
+        assert_eq!(c.partition, Some(PartitionKind::Balanced));
+        let h = c.hyper.unwrap();
+        assert!((h.eta - 6e-4).abs() < 1e-9);
+        assert!((h.lam - 3e-2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partial_config_uses_defaults() {
+        let c = RunConfig::from_toml("[run]\nengine = \"hogwild\"\n").unwrap();
+        assert_eq!(c.engine, EngineKind::Hogwild);
+        assert_eq!(c.dataset, "small");
+        assert!(c.hyper.is_none());
+    }
+
+    #[test]
+    fn bad_engine_rejected() {
+        assert!(RunConfig::from_toml("[run]\nengine = \"bogus\"\n").is_err());
+    }
+
+    #[test]
+    fn bad_partition_rejected() {
+        assert!(RunConfig::from_toml("[run]\npartition = \"diagonal\"\n").is_err());
+    }
+}

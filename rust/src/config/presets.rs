@@ -1,0 +1,127 @@
+//! The paper's hyperparameter presets (Tables I & II).
+//!
+//! | Dataset | Hogwild!/DSGD/ASGD/FPSGD | A²PSGD |
+//! |---------|--------------------------|--------|
+//! | MovieLens 1M | λ=3e-2, η=6e-4 | λ=5e-2, η=1e-4, γ=9e-1 |
+//! | Epinions 665K | λ=5e-1, η=2e-3 | λ=4e-1, η=2e-4, γ=9e-1 |
+//!
+//! Synthetic/small datasets get a moderate default tuned for the twins.
+
+use crate::engine::EngineKind;
+use crate::optim::Hyper;
+
+/// Dataset families the presets know about.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetFamily {
+    /// MovieLens 1M (or its twin).
+    Ml1m,
+    /// Epinions 665K (or its twin).
+    Epinions,
+    /// Everything else (synthetic smoke data).
+    Generic,
+}
+
+/// Classify a dataset name.
+pub fn family_of(name: &str) -> DatasetFamily {
+    let n = name.to_ascii_lowercase();
+    if n.contains("ml1m") || n.contains("movielens") {
+        DatasetFamily::Ml1m
+    } else if n.contains("epinion") {
+        DatasetFamily::Epinions
+    } else {
+        DatasetFamily::Generic
+    }
+}
+
+/// Table I/II hyperparameters for an engine on a dataset.
+pub fn hyper_for(engine: EngineKind, dataset_name: &str) -> Hyper {
+    let family = family_of(dataset_name);
+    let is_a2 = matches!(engine, EngineKind::A2psgd | EngineKind::XlaMinibatch);
+    match (family, is_a2) {
+        // Table I — MovieLens 1M.
+        (DatasetFamily::Ml1m, false) => Hyper::sgd(6e-4, 3e-2),
+        (DatasetFamily::Ml1m, true) => Hyper::nag(1e-4, 5e-2, 9e-1),
+        // Table II — Epinions 665K.
+        (DatasetFamily::Epinions, false) => Hyper::sgd(2e-3, 5e-1),
+        (DatasetFamily::Epinions, true) => Hyper::nag(2e-4, 4e-1, 9e-1),
+        // Twins at smoke scale: denser per-row data ⇒ smaller η works.
+        (DatasetFamily::Generic, false) => Hyper::sgd(5e-3, 3e-2),
+        (DatasetFamily::Generic, true) => Hyper::nag(2e-3, 3e-2, 9e-1),
+    }
+}
+
+/// Render Table I or II for `a2psgd print-config`.
+pub fn format_table(dataset_name: &str) -> String {
+    let engines = [
+        EngineKind::Hogwild,
+        EngineKind::Dsgd,
+        EngineKind::Asgd,
+        EngineKind::Fpsgd,
+        EngineKind::A2psgd,
+    ];
+    let mut out = format!("Hyperparameters for {dataset_name}\n");
+    out.push_str(&format!(
+        "{:<8} {:>10} {:>10} {:>10}\n",
+        "engine", "lambda", "eta", "gamma"
+    ));
+    for e in engines {
+        let h = hyper_for(e, dataset_name);
+        let gamma = if h.gamma > 0.0 {
+            format!("{:.1e}", h.gamma)
+        } else {
+            "-".to_string()
+        };
+        out.push_str(&format!(
+            "{:<8} {:>10.1e} {:>10.1e} {:>10}\n",
+            e.to_string(),
+            h.lam,
+            h.eta,
+            gamma
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_detection() {
+        assert_eq!(family_of("ml1m-twin"), DatasetFamily::Ml1m);
+        assert_eq!(family_of("MovieLens-1M"), DatasetFamily::Ml1m);
+        assert_eq!(family_of("epinions-twin"), DatasetFamily::Epinions);
+        assert_eq!(family_of("synthetic-small"), DatasetFamily::Generic);
+    }
+
+    #[test]
+    fn table1_values() {
+        let h = hyper_for(EngineKind::Fpsgd, "ml1m-twin");
+        assert_eq!(h, Hyper::sgd(6e-4, 3e-2));
+        let a = hyper_for(EngineKind::A2psgd, "ml1m-twin");
+        assert_eq!(a, Hyper::nag(1e-4, 5e-2, 9e-1));
+    }
+
+    #[test]
+    fn table2_values() {
+        let h = hyper_for(EngineKind::Hogwild, "epinions-twin");
+        assert_eq!(h, Hyper::sgd(2e-3, 5e-1));
+        let a = hyper_for(EngineKind::A2psgd, "epinions-twin");
+        assert_eq!(a, Hyper::nag(2e-4, 4e-1, 9e-1));
+    }
+
+    #[test]
+    fn baselines_have_zero_gamma() {
+        for e in [EngineKind::Hogwild, EngineKind::Dsgd, EngineKind::Asgd, EngineKind::Fpsgd] {
+            assert_eq!(hyper_for(e, "ml1m").gamma, 0.0);
+        }
+    }
+
+    #[test]
+    fn table_render_mentions_all_engines() {
+        let t = format_table("ml1m-twin");
+        for name in ["Hogwild!", "DSGD", "ASGD", "FPSGD", "A2PSGD"] {
+            assert!(t.contains(name), "{t}");
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! TOML-subset parser: `[section]` / `[nested.section]` headers and
+//! `key = value` lines where value is a quoted string, integer, float, or
+//! bool. Comments (`# …`) and blank lines are skipped. This covers the
+//! artifact manifest and run configs without a serde dependency.
+
+use crate::Result;
+use anyhow::bail;
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    /// Quoted string.
+    Str(String),
+    /// Integer.
+    Int(i64),
+    /// Float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+}
+
+impl TomlValue {
+    /// As string, if it is one.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As integer (accepts Int only).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// As float (accepts Float or Int).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: `section → key → value`.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    /// Look up `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// All keys of one section.
+    pub fn section(&self, section: &str) -> Option<&BTreeMap<String, TomlValue>> {
+        self.sections.get(section)
+    }
+
+    /// Section names in order.
+    pub fn section_names(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+}
+
+/// Parse TOML-subset text.
+pub fn parse(text: &str) -> Result<TomlDoc> {
+    let mut doc = TomlDoc::default();
+    let mut current = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let Some(name) = rest.strip_suffix(']') else {
+                bail!("line {}: unterminated section header {raw:?}", lineno + 1);
+            };
+            current = name.trim().to_string();
+            doc.sections.entry(current.clone()).or_default();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            bail!("line {}: expected `key = value`, got {raw:?}", lineno + 1);
+        };
+        let key = line[..eq].trim().to_string();
+        let value = parse_value(line[eq + 1..].trim())
+            .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        doc.sections.entry(current.clone()).or_default().insert(key, value);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<TomlValue, String> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let Some(inner) = rest.strip_suffix('"') else {
+            return Err(format!("unterminated string {s:?}"));
+        };
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("unparseable value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars() {
+        let doc = parse(
+            "[a]\nx = 3\ny = 2.5\nz = \"hi\"\nw = true\nneg = -7\nexp = 1e-4\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("a", "x"), Some(&TomlValue::Int(3)));
+        assert_eq!(doc.get("a", "y"), Some(&TomlValue::Float(2.5)));
+        assert_eq!(doc.get("a", "z").unwrap().as_str(), Some("hi"));
+        assert_eq!(doc.get("a", "w").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("a", "neg").unwrap().as_int(), Some(-7));
+        assert!((doc.get("a", "exp").unwrap().as_float().unwrap() - 1e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nested_section_names() {
+        let doc = parse("[artifact.update]\nfile = \"u.hlo.txt\"\n").unwrap();
+        assert_eq!(
+            doc.get("artifact.update", "file").unwrap().as_str(),
+            Some("u.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let doc = parse("# top\n[a]\n\nx = 1 # trailing\ns = \"a # not comment\"\n").unwrap();
+        assert_eq!(doc.get("a", "x").unwrap().as_int(), Some(1));
+        assert_eq!(doc.get("a", "s").unwrap().as_str(), Some("a # not comment"));
+    }
+
+    #[test]
+    fn int_as_float_coercion() {
+        let doc = parse("[a]\nx = 5\n").unwrap();
+        assert_eq!(doc.get("a", "x").unwrap().as_float(), Some(5.0));
+    }
+
+    #[test]
+    fn errors_are_located() {
+        let e = parse("[a]\nbroken line\n").unwrap_err().to_string();
+        assert!(e.contains("line 2"), "{e}");
+        assert!(parse("[unterminated\n").is_err());
+        assert!(parse("[a]\nk = \"open\n").is_err());
+        assert!(parse("[a]\nk = what\n").is_err());
+        assert!(parse("[a]\n= 3\n").is_err());
+    }
+
+    #[test]
+    fn keys_outside_section_land_in_root() {
+        let doc = parse("x = 1\n[a]\ny = 2\n").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_int(), Some(1));
+        assert_eq!(doc.get("a", "y").unwrap().as_int(), Some(2));
+    }
+}

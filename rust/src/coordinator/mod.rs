@@ -1,0 +1,184 @@
+//! Leader-side orchestration: resolve datasets, run (multi-seed) training
+//! studies, emit the paper's tables/series, and host the post-training
+//! prediction service.
+
+pub mod service;
+pub mod tune;
+
+use crate::data::{synthetic, Dataset};
+use crate::engine::{train, EngineKind, TrainConfig, TrainReport};
+use crate::metrics::MeanStd;
+use crate::Result;
+use anyhow::Context;
+use std::path::Path;
+
+/// Resolve a dataset key (`small`/`medium`/`ml1m`/`epinions`) or file path.
+pub fn resolve_dataset(key: &str, seed: u64) -> Result<Dataset> {
+    Ok(match key {
+        "small" => synthetic::small(seed),
+        "medium" => synthetic::medium(seed),
+        "ml1m" | "ml1m-twin" => synthetic::movielens_like(seed),
+        "epinions" | "epinions-twin" => synthetic::epinions_like(seed),
+        path => crate::data::loader::load_file(Path::new(path), path, 0.3, seed)
+            .with_context(|| format!("{key:?} is not a dataset key; tried loading as file"))?,
+    })
+}
+
+/// Outcome of a multi-seed study for one (engine, dataset) cell.
+#[derive(Clone, Debug)]
+pub struct StudyCell {
+    /// Engine.
+    pub engine: EngineKind,
+    /// Best-RMSE aggregate across seeds (Table III row).
+    pub rmse: MeanStd,
+    /// Best-MAE aggregate.
+    pub mae: MeanStd,
+    /// RMSE-time aggregate (Table IV row).
+    pub rmse_time: MeanStd,
+    /// MAE-time aggregate.
+    pub mae_time: MeanStd,
+    /// Mean updates/second.
+    pub updates_per_sec: f64,
+    /// One representative run (first seed) for convergence curves.
+    pub representative: TrainReport,
+}
+
+/// Run `seeds.len()` independent runs of one engine and aggregate.
+pub fn run_cell(data_key: &str, engine: EngineKind, seeds: &[u64], mk_cfg: &dyn Fn(EngineKind, &Dataset) -> TrainConfig) -> Result<StudyCell> {
+    assert!(!seeds.is_empty());
+    let mut rmse = Vec::new();
+    let mut mae = Vec::new();
+    let mut rmse_t = Vec::new();
+    let mut mae_t = Vec::new();
+    let mut ups = Vec::new();
+    let mut representative = None;
+    for &seed in seeds {
+        // Dataset resampled per seed — the paper's ± spread covers both
+        // split randomness and training stochasticity.
+        let data = resolve_dataset(data_key, seed)?;
+        let cfg = mk_cfg(engine, &data).seed(seed);
+        let report = train(&data, &cfg)?;
+        rmse.push(report.best_rmse());
+        mae.push(report.best_mae());
+        rmse_t.push(report.rmse_time());
+        mae_t.push(report.mae_time());
+        ups.push(report.updates_per_sec());
+        if representative.is_none() {
+            representative = Some(report);
+        }
+    }
+    Ok(StudyCell {
+        engine,
+        rmse: MeanStd::from(&rmse),
+        mae: MeanStd::from(&mae),
+        rmse_time: MeanStd::from(&rmse_t),
+        mae_time: MeanStd::from(&mae_t),
+        updates_per_sec: ups.iter().sum::<f64>() / ups.len() as f64,
+        representative: representative.expect("seeds is non-empty"),
+    })
+}
+
+/// Render a Table III-shaped accuracy table.
+pub fn format_accuracy_table(dataset: &str, cells: &[StudyCell]) -> String {
+    let mut out = format!("Prediction accuracy on {dataset} (best over run, mean±std)\n");
+    out.push_str(&format!("{:<14}", "case"));
+    for c in cells {
+        out.push_str(&format!("{:>22}", c.engine.to_string()));
+    }
+    out.push('\n');
+    out.push_str(&format!("{:<14}", "RMSE"));
+    for c in cells {
+        out.push_str(&format!("{:>22}", c.rmse.fmt_paper(4)));
+    }
+    out.push('\n');
+    out.push_str(&format!("{:<14}", "MAE"));
+    for c in cells {
+        out.push_str(&format!("{:>22}", c.mae.fmt_paper(4)));
+    }
+    out.push('\n');
+    out
+}
+
+/// Render a Table IV-shaped training-time table.
+pub fn format_time_table(dataset: &str, cells: &[StudyCell]) -> String {
+    let mut out = format!("Training time (s) on {dataset} (to best metric, mean±std)\n");
+    out.push_str(&format!("{:<14}", "case"));
+    for c in cells {
+        out.push_str(&format!("{:>22}", c.engine.to_string()));
+    }
+    out.push('\n');
+    out.push_str(&format!("{:<14}", "RMSE-time"));
+    for c in cells {
+        out.push_str(&format!("{:>22}", c.rmse_time.fmt_paper(2)));
+    }
+    out.push('\n');
+    out.push_str(&format!("{:<14}", "MAE-time"));
+    for c in cells {
+        out.push_str(&format!("{:>22}", c.mae_time.fmt_paper(2)));
+    }
+    out.push('\n');
+    out
+}
+
+/// Write convergence-series CSV (Figs 3–4 data) for a set of cells.
+pub fn write_convergence_csv(dir: &Path, dataset: &str, cells: &[StudyCell]) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    for c in cells {
+        let path = dir.join(format!(
+            "convergence_{}_{}.csv",
+            dataset.replace('/', "_"),
+            c.engine.to_string().to_lowercase().replace('!', "")
+        ));
+        std::fs::write(&path, c.representative.history.to_csv())
+            .with_context(|| format!("writing {}", path.display()))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(engine: EngineKind, data: &Dataset) -> TrainConfig {
+        TrainConfig::preset(engine, data)
+            .threads(2)
+            .epochs(3)
+            .dim(4)
+            .no_early_stop()
+    }
+
+    #[test]
+    fn resolve_known_keys() {
+        assert_eq!(resolve_dataset("small", 1).unwrap().name, "synthetic-small");
+        assert!(resolve_dataset("/no/such/file.dat", 1).is_err());
+    }
+
+    #[test]
+    fn run_cell_aggregates_seeds() {
+        let cell = run_cell("small", EngineKind::A2psgd, &[1, 2], &tiny_cfg).unwrap();
+        assert_eq!(cell.rmse.n, 2);
+        assert!(cell.rmse.mean.is_finite());
+        assert!(cell.updates_per_sec > 0.0);
+        assert_eq!(cell.representative.history.points().len(), 3);
+    }
+
+    #[test]
+    fn tables_render() {
+        let cell = run_cell("small", EngineKind::Seq, &[3], &tiny_cfg).unwrap();
+        let acc = format_accuracy_table("small", std::slice::from_ref(&cell));
+        assert!(acc.contains("RMSE") && acc.contains("Seq"));
+        let t = format_time_table("small", &[cell]);
+        assert!(t.contains("RMSE-time"));
+    }
+
+    #[test]
+    fn csv_written() {
+        let cell = run_cell("small", EngineKind::Seq, &[4], &tiny_cfg).unwrap();
+        let dir = std::env::temp_dir().join("a2psgd_csv_test");
+        write_convergence_csv(&dir, "small", &[cell]).unwrap();
+        let p = dir.join("convergence_small_seq.csv");
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(text.starts_with("epoch,"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,260 @@
+//! Post-training prediction service: a request router + dynamic batcher in
+//! front of the AOT `predict` artifact (vLLM-router-shaped, scaled to this
+//! paper's serving story).
+//!
+//! Requests `(u, v)` arrive on a channel; the batcher drains up to the
+//! artifact batch size B or until `max_wait` elapses, gathers factor rows,
+//! executes one PJRT call, clamps to the rating scale, and answers each
+//! request through its reply channel. Python is never involved.
+
+use crate::model::Factors;
+use crate::runtime::XlaRuntime;
+use crate::Result;
+use anyhow::Context;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One service request.
+enum Request {
+    /// Point prediction r̂(u, v).
+    Predict { u: u32, v: u32, reply: mpsc::Sender<f32> },
+    /// Top-k recommendation for user u (via the `recommend` artifact).
+    TopK { u: u32, k: usize, reply: mpsc::Sender<Vec<(u32, f32)>> },
+}
+
+/// Service statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServiceStats {
+    /// Requests answered.
+    pub served: u64,
+    /// PJRT batches executed.
+    pub batches: u64,
+    /// Top-k requests answered.
+    pub topk_served: u64,
+    /// Sum of batch occupancies (served / batches = mean batch size).
+    pub occupancy_sum: u64,
+}
+
+impl ServiceStats {
+    /// Mean batch occupancy.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.occupancy_sum as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Handle for submitting requests; cloneable across client threads.
+#[derive(Clone)]
+pub struct ServiceClient {
+    tx: mpsc::Sender<Request>,
+}
+
+impl ServiceClient {
+    /// Blocking point prediction.
+    pub fn predict(&self, u: u32, v: u32) -> Result<f32> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Predict { u, v, reply })
+            .ok()
+            .context("service stopped")?;
+        rx.recv().context("service dropped the request")
+    }
+
+    /// Blocking top-k recommendation (items the user rated in training are
+    /// excluded when the service was built with a training matrix).
+    pub fn top_k(&self, u: u32, k: usize) -> Result<Vec<(u32, f32)>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::TopK { u, k, reply })
+            .ok()
+            .context("service stopped")?;
+        rx.recv().context("service dropped the request")
+    }
+
+    /// Submit many and wait for all (amortizes channel overhead in tests).
+    pub fn predict_many(&self, pairs: &[(u32, u32)]) -> Result<Vec<f32>> {
+        let mut rxs = Vec::with_capacity(pairs.len());
+        for &(u, v) in pairs {
+            let (reply, rx) = mpsc::channel();
+            self.tx
+                .send(Request::Predict { u, v, reply })
+                .ok()
+                .context("service stopped")?;
+            rxs.push(rx);
+        }
+        rxs.into_iter()
+            .map(|rx| rx.recv().context("service dropped a request"))
+            .collect()
+    }
+}
+
+/// The running service; shutting down requires all external
+/// [`ServiceClient`] clones to be dropped first (their senders keep the
+/// worker's receive loop alive).
+pub struct PredictionService {
+    client: ServiceClient,
+    worker: std::thread::JoinHandle<ServiceStats>,
+}
+
+impl PredictionService {
+    /// Spawn the batcher thread over trained factors.
+    ///
+    /// The PJRT runtime is constructed *inside* the worker thread (the xla
+    /// crate's client is `!Send`), so this takes the artifacts directory and
+    /// reports load/compile errors synchronously through a startup channel.
+    ///
+    /// `max_wait` bounds added latency when traffic is sparse: a non-full
+    /// batch launches once the oldest queued request has waited this long.
+    pub fn start(
+        artifacts_dir: std::path::PathBuf,
+        factors: Factors,
+        clamp: (f32, f32),
+        max_wait: Duration,
+    ) -> Result<Self> {
+        Self::start_with_exclusions(artifacts_dir, factors, clamp, max_wait, None)
+    }
+
+    /// [`PredictionService::start`] plus a training matrix whose items are
+    /// excluded from each user's top-k candidates (standard protocol).
+    pub fn start_with_exclusions(
+        artifacts_dir: std::path::PathBuf,
+        factors: Factors,
+        clamp: (f32, f32),
+        max_wait: Duration,
+        train: Option<crate::sparse::CooMatrix>,
+    ) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let worker = std::thread::spawn(move || {
+            let runtime = match XlaRuntime::load(&artifacts_dir) {
+                Ok(rt) => {
+                    let _ = ready_tx.send(Ok(()));
+                    rt
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return ServiceStats::default();
+                }
+            };
+            run_batcher(runtime, factors, clamp, max_wait, train, rx)
+        });
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(PredictionService { client: ServiceClient { tx }, worker }),
+            Ok(Err(e)) => {
+                let _ = worker.join();
+                Err(e)
+            }
+            Err(_) => {
+                let _ = worker.join();
+                anyhow::bail!("service worker died during startup")
+            }
+        }
+    }
+
+    /// A client handle.
+    pub fn client(&self) -> ServiceClient {
+        self.client.clone()
+    }
+
+    /// Stop and collect stats (consumes the service). All other client
+    /// clones must already be dropped, or this blocks until they are.
+    pub fn shutdown(self) -> ServiceStats {
+        let PredictionService { client, worker } = self;
+        drop(client); // close our sender so the worker's recv errors out
+        worker.join().expect("service worker panicked")
+    }
+}
+
+fn run_batcher(
+    runtime: XlaRuntime,
+    factors: Factors,
+    clamp: (f32, f32),
+    max_wait: Duration,
+    train: Option<crate::sparse::CooMatrix>,
+    rx: mpsc::Receiver<Request>,
+) -> ServiceStats {
+    let b = runtime.shapes.b;
+    let d = runtime.shapes.d;
+    let mut stats = ServiceStats::default();
+    let mut mu = vec![0f32; b * d];
+    let mut nv = vec![0f32; b * d];
+    // Top-k state: padded item matrix + per-user exclusion sets.
+    let n_padded = crate::runtime::pad_item_matrix(&factors, runtime.shapes.v);
+    let mut seen: Vec<std::collections::HashSet<u32>> =
+        vec![std::collections::HashSet::new(); factors.nrows() as usize];
+    if let Some(train) = &train {
+        for e in train.entries() {
+            seen[e.u as usize].insert(e.v);
+        }
+    }
+    let empty = std::collections::HashSet::new();
+    let mut batch: Vec<(u32, u32, mpsc::Sender<f32>)> = Vec::with_capacity(b);
+    loop {
+        // Block for the first request; then drain greedily until B or timeout.
+        let first = match rx.recv() {
+            Ok(req) => req,
+            Err(_) => break, // all clients dropped
+        };
+        let mut pending = Some(first);
+        let deadline = Instant::now() + max_wait;
+        loop {
+            match pending.take() {
+                Some(Request::Predict { u, v, reply }) => batch.push((u, v, reply)),
+                Some(Request::TopK { u, k, reply }) => {
+                    // Top-k is a whole-catalog scan — served immediately,
+                    // not batched with point predictions.
+                    let ex = seen.get(u as usize).unwrap_or(&empty);
+                    match runtime.top_k(&factors, &n_padded, u, k, ex) {
+                        Ok(top) => {
+                            let _ = reply.send(top);
+                            stats.topk_served += 1;
+                        }
+                        Err(_) => return stats,
+                    }
+                }
+                None => {}
+            }
+            if batch.len() >= b {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(req) => pending = Some(req),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        if batch.is_empty() {
+            continue; // the window held only top-k traffic
+        }
+        // Gather rows; unused lanes keep zeros (prediction discarded).
+        for (lane, (u, v, _)) in batch.iter().enumerate() {
+            mu[lane * d..(lane + 1) * d].copy_from_slice(factors.m_row(*u));
+            nv[lane * d..(lane + 1) * d].copy_from_slice(factors.n_row(*v));
+        }
+        for lane in batch.len()..b {
+            mu[lane * d..(lane + 1) * d].iter_mut().for_each(|x| *x = 0.0);
+            nv[lane * d..(lane + 1) * d].iter_mut().for_each(|x| *x = 0.0);
+        }
+        let preds = match runtime.predict_batch(&mu, &nv) {
+            Ok(p) => p,
+            Err(_) => break, // runtime failure: drop in-flight, stop service
+        };
+        stats.batches += 1;
+        stats.occupancy_sum += batch.len() as u64;
+        for (lane, (_, _, reply)) in batch.drain(..).enumerate() {
+            let p = preds[lane].clamp(clamp.0, clamp.1);
+            let _ = reply.send(p); // client may have gone away; fine
+            stats.served += 1;
+        }
+    }
+    stats
+}
+
+// Integration coverage (requires artifacts): rust/tests/integration_service.rs

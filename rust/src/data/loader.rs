@@ -1,0 +1,183 @@
+//! Loaders for the paper's real dataset formats.
+//!
+//! - MovieLens 1M `ratings.dat`: `UserID::MovieID::Rating::Timestamp`
+//! - Epinions `ratings_data.txt`: whitespace-separated `user item rating`
+//!
+//! Node ids are re-indexed to a dense `[0, n)` range (real ids are sparse).
+//! Drop the files anywhere and point `--data-file` at them; format is
+//! auto-detected from the first data line.
+
+use crate::data::{split::split_train_test, Dataset};
+use crate::rng::Rng;
+use crate::sparse::CooMatrix;
+use crate::Result;
+use anyhow::{bail, Context};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Recognized on-disk formats.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    /// `u::v::r::ts` (MovieLens .dat).
+    MovieLensDat,
+    /// whitespace `u v r` (Epinions / generic TSV).
+    Tsv,
+}
+
+/// Detect the format from a data line.
+pub fn detect_format(line: &str) -> Option<Format> {
+    if line.contains("::") {
+        Some(Format::MovieLensDat)
+    } else if line.split_whitespace().count() >= 3 {
+        Some(Format::Tsv)
+    } else {
+        None
+    }
+}
+
+/// Parse raw `(user, item, rating)` triplets with original (sparse) ids.
+pub fn parse_triplets(text: &str) -> Result<Vec<(u64, u64, f32)>> {
+    let mut out = Vec::new();
+    let mut format: Option<Format> = None;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
+            continue;
+        }
+        let fmt = match format {
+            Some(f) => f,
+            None => {
+                let f = detect_format(line)
+                    .with_context(|| format!("unrecognized data line {}: {line:?}", lineno + 1))?;
+                format = Some(f);
+                f
+            }
+        };
+        let fields: Vec<&str> = match fmt {
+            Format::MovieLensDat => line.split("::").collect(),
+            Format::Tsv => line.split_whitespace().collect(),
+        };
+        if fields.len() < 3 {
+            bail!("line {}: expected ≥3 fields, got {}", lineno + 1, fields.len());
+        }
+        let u: u64 = fields[0]
+            .parse()
+            .with_context(|| format!("line {}: bad user id {:?}", lineno + 1, fields[0]))?;
+        let v: u64 = fields[1]
+            .parse()
+            .with_context(|| format!("line {}: bad item id {:?}", lineno + 1, fields[1]))?;
+        let r: f32 = fields[2]
+            .parse()
+            .with_context(|| format!("line {}: bad rating {:?}", lineno + 1, fields[2]))?;
+        out.push((u, v, r));
+    }
+    Ok(out)
+}
+
+/// Re-index sparse ids to dense `[0, n)` and build a COO matrix.
+pub fn triplets_to_coo(triplets: &[(u64, u64, f32)]) -> Result<CooMatrix> {
+    let mut umap: HashMap<u64, u32> = HashMap::new();
+    let mut vmap: HashMap<u64, u32> = HashMap::new();
+    for &(u, v, _) in triplets {
+        let next_u = umap.len() as u32;
+        umap.entry(u).or_insert(next_u);
+        let next_v = vmap.len() as u32;
+        vmap.entry(v).or_insert(next_v);
+    }
+    let mut coo = CooMatrix::new(umap.len() as u32, vmap.len() as u32);
+    for &(u, v, r) in triplets {
+        coo.push(umap[&u], vmap[&v], r)?;
+    }
+    Ok(coo)
+}
+
+/// Load a ratings file into a split [`Dataset`].
+pub fn load_file(path: &Path, name: &str, test_frac: f64, seed: u64) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let triplets = parse_triplets(&text)?;
+    if triplets.is_empty() {
+        bail!("{}: no data lines found", path.display());
+    }
+    let mut coo = triplets_to_coo(&triplets)?;
+    coo.dedup();
+    let (lo, hi) = coo.rating_range();
+    let mut rng = Rng::new(seed);
+    let (train, test) = split_train_test(&coo, test_frac, &mut rng);
+    Ok(Dataset {
+        name: name.to_string(),
+        train,
+        test,
+        rating_min: lo,
+        rating_max: hi,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detect_formats() {
+        assert_eq!(detect_format("1::1193::5::978300760"), Some(Format::MovieLensDat));
+        assert_eq!(detect_format("22 66 4"), Some(Format::Tsv));
+        assert_eq!(detect_format("justonefield"), None);
+    }
+
+    #[test]
+    fn parse_movielens_lines() {
+        let text = "1::1193::5::978300760\n1::661::3::978302109\n2::1193::4::978300000\n";
+        let t = parse_triplets(text).unwrap();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[0], (1, 1193, 5.0));
+    }
+
+    #[test]
+    fn parse_tsv_with_comments_and_blanks() {
+        let text = "# header\n\n10 20 3.5\n11 21 1\n";
+        let t = parse_triplets(text).unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t[1], (11, 21, 1.0));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_triplets("a::b::c\n").is_err());
+        assert!(parse_triplets("1 2\n").is_err());
+    }
+
+    #[test]
+    fn reindex_is_dense() {
+        let t = vec![(100u64, 9000u64, 5.0f32), (500, 9000, 3.0), (100, 9001, 1.0)];
+        let coo = triplets_to_coo(&t).unwrap();
+        assert_eq!(coo.nrows(), 2);
+        assert_eq!(coo.ncols(), 2);
+        assert_eq!(coo.nnz(), 3);
+    }
+
+    #[test]
+    fn load_file_roundtrip() {
+        let dir = std::env::temp_dir().join("a2psgd_loader_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("ratings.dat");
+        let mut text = String::new();
+        for u in 1..=30u32 {
+            for v in 1..=10u32 {
+                text.push_str(&format!("{}::{}::{}::0\n", u, v * 7, (u + v) % 5 + 1));
+            }
+        }
+        std::fs::write(&p, text).unwrap();
+        let d = load_file(&p, "mini", 0.3, 42).unwrap();
+        assert_eq!(d.nrows(), 30);
+        assert_eq!(d.ncols(), 10);
+        assert_eq!(d.total_nnz(), 300);
+        assert_eq!(d.rating_min, 1.0);
+        assert_eq!(d.rating_max, 5.0);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        assert!(load_file(Path::new("/nonexistent/x.dat"), "x", 0.3, 1).is_err());
+    }
+}

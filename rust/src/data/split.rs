@@ -1,0 +1,112 @@
+//! Train/test splitting (paper: random 70/30).
+
+use crate::rng::Rng;
+use crate::sparse::CooMatrix;
+
+/// Randomly split Ω into train/test with `test_frac` going to test.
+///
+/// The split is a per-entry Bernoulli draw, matching the paper's "randomly
+/// divided … with 70% and 30%". Deterministic in `rng`.
+pub fn split_train_test(coo: &CooMatrix, test_frac: f64, rng: &mut Rng) -> (CooMatrix, CooMatrix) {
+    let (test, train) = coo.partition_by(|_| rng.bool(test_frac));
+    (train, test)
+}
+
+/// Split ensuring every row with ≥2 entries keeps at least one in train
+/// (avoids cold rows in small smoke datasets; not used for the paper runs).
+pub fn split_train_test_guarded(
+    coo: &CooMatrix,
+    test_frac: f64,
+    rng: &mut Rng,
+) -> (CooMatrix, CooMatrix) {
+    let mut order: Vec<usize> = (0..coo.nnz()).collect();
+    rng.shuffle(&mut order);
+    let mut train_count = vec![0u32; coo.nrows() as usize];
+    let mut is_test = vec![false; coo.nnz()];
+    let target = (coo.nnz() as f64 * test_frac) as usize;
+    let mut taken = 0;
+    // First pass: guarantee one train entry per row.
+    let entries = coo.entries();
+    for &i in order.iter().rev() {
+        train_count[entries[i].u as usize] += 1;
+    }
+    // train_count now holds total per row; walk and move to test while the
+    // row retains ≥1 training entry.
+    for &i in &order {
+        if taken >= target {
+            break;
+        }
+        let u = entries[i].u as usize;
+        if train_count[u] >= 2 {
+            train_count[u] -= 1;
+            is_test[i] = true;
+            taken += 1;
+        }
+    }
+    let mut train = CooMatrix::new(coo.nrows(), coo.ncols());
+    let mut test = CooMatrix::new(coo.nrows(), coo.ncols());
+    for (i, e) in entries.iter().enumerate() {
+        let m = if is_test[i] { &mut test } else { &mut train };
+        m.push(e.u, e.v, e.r).unwrap();
+    }
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Entry;
+
+    fn dense_coo(nrows: u32, ncols: u32) -> CooMatrix {
+        let mut entries = Vec::new();
+        for u in 0..nrows {
+            for v in 0..ncols {
+                entries.push(Entry { u, v, r: (u + v) as f32 % 5.0 + 1.0 });
+            }
+        }
+        CooMatrix::from_entries(nrows, ncols, entries).unwrap()
+    }
+
+    #[test]
+    fn split_preserves_all_entries() {
+        let coo = dense_coo(20, 20);
+        let mut rng = Rng::new(1);
+        let (tr, te) = split_train_test(&coo, 0.3, &mut rng);
+        assert_eq!(tr.nnz() + te.nnz(), coo.nnz());
+    }
+
+    #[test]
+    fn split_fraction_approximate() {
+        let coo = dense_coo(50, 50);
+        let mut rng = Rng::new(2);
+        let (_, te) = split_train_test(&coo, 0.3, &mut rng);
+        let frac = te.nnz() as f64 / coo.nnz() as f64;
+        assert!((0.27..0.33).contains(&frac), "frac={frac}");
+    }
+
+    #[test]
+    fn guarded_split_keeps_train_presence() {
+        let coo = dense_coo(30, 10);
+        let mut rng = Rng::new(3);
+        let (tr, _) = split_train_test_guarded(&coo, 0.5, &mut rng);
+        let rc = tr.row_counts();
+        assert!(rc.iter().all(|&c| c >= 1), "row lost all train entries");
+    }
+
+    #[test]
+    fn guarded_split_hits_target() {
+        let coo = dense_coo(40, 40);
+        let mut rng = Rng::new(4);
+        let (_, te) = split_train_test_guarded(&coo, 0.3, &mut rng);
+        let want = (coo.nnz() as f64 * 0.3) as usize;
+        assert_eq!(te.nnz(), want);
+    }
+
+    #[test]
+    fn deterministic() {
+        let coo = dense_coo(15, 15);
+        let (a, _) = split_train_test(&coo, 0.3, &mut Rng::new(7));
+        let (b, _) = split_train_test(&coo, 0.3, &mut Rng::new(7));
+        assert_eq!(a.entries(), b.entries());
+    }
+}

@@ -1,0 +1,364 @@
+//! Synthetic statistical twins of the paper's datasets.
+//!
+//! A twin must preserve what the paper's experiments actually exercise
+//! (DESIGN.md §5):
+//!
+//! 1. **Shape & density** — |U|, |V|, |Ω| match the real dataset, so block
+//!    sizes and scheduler contention match.
+//! 2. **Marginal skew** — user/item popularity follows a Zipf law, so the
+//!    load-balancing ablation sees the same "curse of the last reducer".
+//! 3. **Recoverable low-rank signal** — ratings come from a planted
+//!    rank-k factor model plus noise, quantized to the 1–5 star grid, so
+//!    RMSE/MAE orderings between optimizers are meaningful.
+
+use super::split::split_train_test;
+use super::Dataset;
+use crate::rng::Rng;
+use crate::sparse::CooMatrix;
+use std::collections::HashSet;
+
+/// Zipf(s) sampler over `{0, …, n−1}` via inverse-CDF table + binary search.
+pub struct ZipfSampler {
+    cdf: Vec<f64>,
+}
+
+impl ZipfSampler {
+    /// Build the CDF table for `n` items with exponent `s`.
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        ZipfSampler { cdf }
+    }
+
+    /// Draw one index (0 = most popular).
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let x = rng.f64();
+        match self.cdf.binary_search_by(|c| c.partial_cmp(&x).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+/// Observation-noise family for the planted model.
+///
+/// Real rating datasets differ in their *error tails*: MovieLens-like data
+/// is approximately Gaussian around the per-pair mean, while Epinions-like
+/// data has heavy tails (a minority of strongly contrarian ratings) — the
+/// paper's Epinions numbers (RMSE ≈ 2.0 vs MAE ≈ 1.47, ratio ≈ 0.73 ≈ the
+/// Laplace ratio 1/√2) imply exactly that.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NoiseKind {
+    /// Gaussian noise (σ = `noise`).
+    Gauss,
+    /// Laplace noise (scale b = `noise`) — heavy tails.
+    Laplace,
+}
+
+/// Parameters for a planted-factor synthetic HDS dataset.
+#[derive(Clone, Debug)]
+pub struct SyntheticSpec {
+    /// Dataset name.
+    pub name: String,
+    /// |U| row nodes.
+    pub nrows: u32,
+    /// |V| column nodes.
+    pub ncols: u32,
+    /// Target |Ω| (before the train/test split).
+    pub nnz: usize,
+    /// Zipf exponent for row popularity.
+    pub row_zipf: f64,
+    /// Zipf exponent for column popularity.
+    pub col_zipf: f64,
+    /// Rank of the planted factor model.
+    pub rank: usize,
+    /// Scale of the additive observation noise (σ or b by `noise_kind`).
+    pub noise: f32,
+    /// Noise family.
+    pub noise_kind: NoiseKind,
+    /// Test fraction (paper: 0.3).
+    pub test_frac: f64,
+}
+
+/// Generate a dataset from a spec, deterministically in `seed`.
+pub fn generate(spec: &SyntheticSpec, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let (lo, hi) = (1.0f32, 5.0f32);
+
+    // Planted factors, scaled so ⟨m*, n*⟩ lands mid-scale.
+    let d = spec.rank;
+    let scale = ((hi - lo) as f64 / 2.0 / (d as f64).sqrt()).sqrt() as f32;
+    let mut mstar = vec![0f32; spec.nrows as usize * d];
+    let mut nstar = vec![0f32; spec.ncols as usize * d];
+    for x in &mut mstar {
+        *x = rng.gauss_f32(scale, scale * 0.5);
+    }
+    for x in &mut nstar {
+        *x = rng.gauss_f32(scale, scale * 0.5);
+    }
+    // Per-user bias spreads the mean like real rating data.
+    let mut ubias = vec![0f32; spec.nrows as usize];
+    for b in &mut ubias {
+        *b = rng.gauss_f32(0.0, 0.4);
+    }
+
+    // Popularity-skewed edge sampling with a random rank→node permutation so
+    // popular rows aren't the low indices (real ids are arbitrary).
+    let row_sampler = ZipfSampler::new(spec.nrows as usize, spec.row_zipf);
+    let col_sampler = ZipfSampler::new(spec.ncols as usize, spec.col_zipf);
+    let mut row_perm: Vec<u32> = (0..spec.nrows).collect();
+    let mut col_perm: Vec<u32> = (0..spec.ncols).collect();
+    rng.shuffle(&mut row_perm);
+    rng.shuffle(&mut col_perm);
+
+    let mut seen: HashSet<u64> = HashSet::with_capacity(spec.nnz * 2);
+    let mut coo = CooMatrix::new(spec.nrows, spec.ncols);
+    let mut attempts: usize = 0;
+    let max_attempts = spec.nnz * 30;
+    while coo.nnz() < spec.nnz && attempts < max_attempts {
+        attempts += 1;
+        let u = row_perm[row_sampler.sample(&mut rng)];
+        let v = col_perm[col_sampler.sample(&mut rng)];
+        let key = (u as u64) << 32 | v as u64;
+        if !seen.insert(key) {
+            continue;
+        }
+        let mu = &mstar[u as usize * d..(u as usize + 1) * d];
+        let nv = &nstar[v as usize * d..(v as usize + 1) * d];
+        let dot: f32 = mu.iter().zip(nv).map(|(a, b)| a * b).sum();
+        let eps = match spec.noise_kind {
+            NoiseKind::Gauss => rng.gauss_f32(0.0, spec.noise),
+            NoiseKind::Laplace => {
+                // Inverse-CDF: X = −b·sgn(u)·ln(1−2|u|), u ~ U(−½, ½).
+                let u = rng.f64() - 0.5;
+                (-(spec.noise as f64) * u.signum() * (1.0 - 2.0 * u.abs()).ln()) as f32
+            }
+        };
+        let raw = dot + ubias[u as usize] + eps;
+        // Quantize to the half-star grid and clamp to the rating scale.
+        let r = (raw * 2.0).round() / 2.0;
+        let r = r.clamp(lo, hi);
+        coo.push(u, v, r).expect("indices in range by construction");
+    }
+
+    let (train, test) = split_train_test(&coo, spec.test_frac, &mut rng);
+    Dataset {
+        name: spec.name.clone(),
+        train,
+        test,
+        rating_min: lo,
+        rating_max: hi,
+    }
+}
+
+/// MovieLens-1M twin: 6040×3706, ~1.0M ratings, moderate skew.
+pub fn movielens_like(seed: u64) -> Dataset {
+    generate(
+        &SyntheticSpec {
+            name: "ml1m-twin".into(),
+            nrows: 6040,
+            ncols: 3706,
+            nnz: 1_000_209,
+            row_zipf: 1.1,
+            col_zipf: 0.9,
+            rank: 8,
+            noise: 1.6,
+            noise_kind: NoiseKind::Gauss,
+            test_frac: 0.3,
+        },
+        seed,
+    )
+}
+
+/// Epinions-665K twin: 40163×139738, ~665K ratings, heavy tail, weak signal
+/// (the paper reports RMSE ≈ 2.0 on the 1–5 scale, i.e. near-noise data).
+pub fn epinions_like(seed: u64) -> Dataset {
+    generate(
+        &SyntheticSpec {
+            name: "epinions-twin".into(),
+            nrows: 40_163,
+            ncols: 139_738,
+            nnz: 664_824,
+            row_zipf: 1.4,
+            col_zipf: 1.2,
+            rank: 4,
+            noise: 3.0,
+            noise_kind: NoiseKind::Laplace,
+            test_frac: 0.3,
+        },
+        seed,
+    )
+}
+
+/// Small smoke dataset for tests/quickstart: 400×300, 12K ratings.
+pub fn small(seed: u64) -> Dataset {
+    generate(
+        &SyntheticSpec {
+            name: "synthetic-small".into(),
+            nrows: 400,
+            ncols: 300,
+            nnz: 12_000,
+            row_zipf: 1.0,
+            col_zipf: 0.8,
+            rank: 4,
+            noise: 0.5,
+            noise_kind: NoiseKind::Gauss,
+            test_frac: 0.3,
+        },
+        seed,
+    )
+}
+
+/// Medium dataset for integration tests / CI-scale experiments.
+pub fn medium(seed: u64) -> Dataset {
+    generate(
+        &SyntheticSpec {
+            name: "synthetic-medium".into(),
+            nrows: 2000,
+            ncols: 1500,
+            nnz: 120_000,
+            row_zipf: 1.1,
+            col_zipf: 0.9,
+            rank: 6,
+            noise: 0.7,
+            noise_kind: NoiseKind::Gauss,
+            test_frac: 0.3,
+        },
+        seed,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::stats;
+
+    #[test]
+    fn zipf_sampler_is_skewed() {
+        let z = ZipfSampler::new(100, 1.2);
+        let mut rng = Rng::new(5);
+        let mut counts = vec![0u64; 100];
+        for _ in 0..20_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        // head must dominate tail
+        let head: u64 = counts[..10].iter().sum();
+        let tail: u64 = counts[90..].iter().sum();
+        assert!(head > 10 * tail.max(1), "head={head} tail={tail}");
+    }
+
+    #[test]
+    fn zipf_single_item() {
+        let z = ZipfSampler::new(1, 1.0);
+        let mut rng = Rng::new(1);
+        for _ in 0..10 {
+            assert_eq!(z.sample(&mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn small_dataset_shape() {
+        let d = small(7);
+        assert_eq!(d.nrows(), 400);
+        assert_eq!(d.ncols(), 300);
+        let total = d.total_nnz();
+        assert!((11_000..=12_000).contains(&total), "total={total}");
+        // ~30% test split
+        let frac = d.test.nnz() as f64 / total as f64;
+        assert!((0.27..0.33).contains(&frac), "frac={frac}");
+    }
+
+    #[test]
+    fn ratings_in_scale_and_quantized() {
+        let d = small(11);
+        for e in d.train.entries().iter().chain(d.test.entries()) {
+            assert!((1.0..=5.0).contains(&e.r));
+            let doubled = e.r * 2.0;
+            assert!((doubled - doubled.round()).abs() < 1e-6, "r={}", e.r);
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = small(3);
+        let b = small(3);
+        assert_eq!(a.train.nnz(), b.train.nnz());
+        assert_eq!(a.train.entries()[..50], b.train.entries()[..50]);
+        let c = small(4);
+        assert_ne!(a.train.entries()[..50], c.train.entries()[..50]);
+    }
+
+    #[test]
+    fn no_duplicate_cells() {
+        let d = small(13);
+        let mut seen = std::collections::HashSet::new();
+        for e in d.train.entries().iter().chain(d.test.entries()) {
+            assert!(seen.insert((e.u, e.v)), "dup at ({}, {})", e.u, e.v);
+        }
+    }
+
+    #[test]
+    fn marginals_are_skewed() {
+        let d = small(17);
+        let rc = stats::widen(&d.train.row_counts());
+        let g = stats::gini(&rc);
+        assert!(g > 0.25, "row gini={g} — expected a skewed twin");
+    }
+
+    #[test]
+    fn planted_signal_beats_noise_floor() {
+        // The mean rating must vary across users (signal exists).
+        let d = small(19);
+        let csr = crate::sparse::CsrMatrix::from_coo(&d.train);
+        let mut means = Vec::new();
+        for u in 0..d.nrows() {
+            let (_, vals) = csr.row(u);
+            if vals.len() >= 10 {
+                means.push(vals.iter().sum::<f32>() / vals.len() as f32);
+            }
+        }
+        let lo = means.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = means.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert!(hi - lo > 0.5, "user means too flat: {lo}..{hi}");
+    }
+
+    #[test]
+    fn property_generate_respects_spec() {
+        crate::proptest_lite::check(
+            "generate obeys spec dims and scale",
+            8,
+            |g| SyntheticSpec {
+                name: "prop".into(),
+                nrows: g.usize_in(10, 120) as u32,
+                ncols: g.usize_in(10, 120) as u32,
+                nnz: g.usize_in(20, 600),
+                row_zipf: g.f32_in(0.5, 1.5) as f64,
+                col_zipf: g.f32_in(0.5, 1.5) as f64,
+                rank: g.usize_in(1, 6),
+                noise: g.f32_in(0.1, 1.5),
+                noise_kind: if g.bool(0.5) { NoiseKind::Gauss } else { NoiseKind::Laplace },
+                test_frac: 0.3,
+            },
+            |spec| {
+                let d = generate(spec, 99);
+                d.nrows() == spec.nrows
+                    && d.ncols() == spec.ncols
+                    && d.total_nnz() <= spec.nnz
+                    && d
+                        .train
+                        .entries()
+                        .iter()
+                        .all(|e| (1.0..=5.0).contains(&e.r))
+            },
+        );
+    }
+}

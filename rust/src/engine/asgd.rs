@@ -1,0 +1,172 @@
+//! ASGD baseline (Luo et al., 2012): decouple the update into two
+//! alternating sub-tasks — update M with N frozen, then N with M frozen.
+//! Each phase is embarrassingly parallel over disjoint row (resp. column)
+//! shards, so no locks are needed; the cost is that each epoch makes two
+//! passes over Ω and each pass moves only half the parameters.
+
+use super::{EpochRunner, TrainConfig};
+use crate::data::Dataset;
+use crate::model::{dot, Factors, SharedFactors};
+use crate::optim::Hyper;
+use crate::rng::Rng;
+use crate::sparse::CsrMatrix;
+
+/// Alternating-phase SGD engine.
+pub struct AsgdEngine {
+    shared: SharedFactors,
+    by_row: CsrMatrix,
+    by_col: CsrMatrix,
+    row_shards: Vec<(u32, u32)>,
+    col_shards: Vec<(u32, u32)>,
+    hyper: Hyper,
+}
+
+/// Split `[0, n)` into ≤`c` contiguous shards balanced by `counts`.
+fn shard_by_counts(counts: &[u32], c: usize) -> Vec<(u32, u32)> {
+    let bounds = crate::partition::balanced_bounds(counts, c);
+    bounds.windows(2).map(|w| (w[0], w[1])).collect()
+}
+
+impl AsgdEngine {
+    /// Build from a dataset.
+    pub fn new(data: &Dataset, factors: Factors, cfg: &TrainConfig, _rng: &mut Rng) -> Self {
+        let by_row = CsrMatrix::from_coo(&data.train);
+        let by_col = by_row.transpose();
+        let c = cfg.threads.max(1);
+        AsgdEngine {
+            shared: SharedFactors::new(factors),
+            row_shards: shard_by_counts(&data.train.row_counts(), c),
+            col_shards: shard_by_counts(&data.train.col_counts(), c),
+            by_row,
+            by_col,
+            hyper: cfg.hyper,
+        }
+    }
+
+    /// Phase M: for rows in shards, update m_u against frozen N.
+    fn phase_m(&self) -> u64 {
+        let shared = &self.shared;
+        let hyper = self.hyper;
+        let by_row = &self.by_row;
+        let mut totals = vec![0u64; self.row_shards.len()];
+        std::thread::scope(|scope| {
+            for (shard, slot) in self.row_shards.iter().zip(totals.iter_mut()) {
+                let (lo, hi) = *shard;
+                scope.spawn(move || {
+                    let mut n = 0u64;
+                    for u in lo..hi {
+                        for (v, r) in {
+                            let (idx, val) = by_row.row(u);
+                            idx.iter().zip(val.iter())
+                        } {
+                            // SAFETY: thread owns rows [lo,hi) of M
+                            // exclusively; N is read-only this phase.
+                            let (mu, nv, _, _) = unsafe { shared.rows_mut(u, *v) };
+                            let e = *r - dot(mu, nv);
+                            let ee = hyper.eta * e;
+                            let shrink = 1.0 - hyper.eta * hyper.lam;
+                            for k in 0..mu.len() {
+                                mu[k] = mu[k] * shrink + ee * nv[k];
+                            }
+                            n += 1;
+                        }
+                    }
+                    *slot = n;
+                });
+            }
+        });
+        totals.iter().sum()
+    }
+
+    /// Phase N: symmetric, over the transposed matrix.
+    fn phase_n(&self) -> u64 {
+        let shared = &self.shared;
+        let hyper = self.hyper;
+        let by_col = &self.by_col;
+        let mut totals = vec![0u64; self.col_shards.len()];
+        std::thread::scope(|scope| {
+            for (shard, slot) in self.col_shards.iter().zip(totals.iter_mut()) {
+                let (lo, hi) = *shard;
+                scope.spawn(move || {
+                    let mut n = 0u64;
+                    for v in lo..hi {
+                        for (u, r) in {
+                            let (idx, val) = by_col.row(v);
+                            idx.iter().zip(val.iter())
+                        } {
+                            // SAFETY: thread owns rows [lo,hi) of N
+                            // exclusively; M is read-only this phase.
+                            let (mu, nv, _, _) = unsafe { shared.rows_mut(*u, v) };
+                            let e = *r - dot(mu, nv);
+                            let ee = hyper.eta * e;
+                            let shrink = 1.0 - hyper.eta * hyper.lam;
+                            for k in 0..nv.len() {
+                                nv[k] = nv[k] * shrink + ee * mu[k];
+                            }
+                            n += 1;
+                        }
+                    }
+                    *slot = n;
+                });
+            }
+        });
+        totals.iter().sum()
+    }
+}
+
+impl EpochRunner for AsgdEngine {
+    fn run_epoch(&mut self, _epoch: u32, _quota: u64) -> u64 {
+        // One epoch = one M pass + one N pass (2·|Ω| half-updates ≈ |Ω| full).
+        let m = self.phase_m();
+        let n = self.phase_n();
+        (m + n) / 2
+    }
+
+    fn shared(&self) -> &SharedFactors {
+        &self.shared
+    }
+
+    fn into_factors(self: Box<Self>) -> Factors {
+        self.shared.into_inner()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::engine::EngineKind;
+
+    #[test]
+    fn asgd_epoch_counts_full_updates() {
+        let data = synthetic::small(9);
+        let cfg = TrainConfig::preset(EngineKind::Asgd, &data).threads(4).dim(4);
+        let mut rng = Rng::new(9);
+        let f = Factors::init(data.nrows(), data.ncols(), 4, 0.3, &mut rng);
+        let mut e = AsgdEngine::new(&data, f, &cfg, &mut rng);
+        assert_eq!(e.run_epoch(1, 0), data.train.nnz() as u64);
+    }
+
+    #[test]
+    fn asgd_learns() {
+        let data = synthetic::small(10);
+        let mut cfg = TrainConfig::preset(EngineKind::Asgd, &data)
+            .threads(4)
+            .dim(8)
+            .epochs(10);
+        cfg.early_stop = false;
+        let r = crate::engine::train(&data, &cfg).unwrap();
+        let first = r.history.points().first().unwrap().rmse;
+        assert!(r.final_rmse() < first);
+    }
+
+    #[test]
+    fn shard_by_counts_covers_range() {
+        let shards = shard_by_counts(&[5, 1, 1, 1, 5, 5], 3);
+        assert_eq!(shards.first().unwrap().0, 0);
+        assert_eq!(shards.last().unwrap().1, 6);
+        for w in shards.windows(2) {
+            assert_eq!(w[0].1, w[1].0, "shards must tile contiguously");
+        }
+    }
+}

@@ -1,0 +1,450 @@
+//! Parallel training engines: the paper's A²PSGD plus all four baselines
+//! (§IV-A.2), behind one [`train`] entry point.
+//!
+//! | Engine | Parallel structure | Update rule | Partition |
+//! |--------|--------------------|-------------|-----------|
+//! | [`EngineKind::Seq`]      | single thread            | SGD | — |
+//! | [`EngineKind::Hogwild`]  | lock-free, racy          | SGD | — |
+//! | [`EngineKind::Dsgd`]     | bulk-sync strata         | SGD | uniform `c×c` |
+//! | [`EngineKind::Asgd`]     | alternating M/N phases   | SGD | row/col shards |
+//! | [`EngineKind::Fpsgd`]    | block sched (global lock)| SGD | uniform `(c+1)²` |
+//! | [`EngineKind::A2psgd`]   | block sched (lock-free)  | NAG | balanced `(c+1)²` |
+//! | [`EngineKind::XlaMinibatch`] | leader-driven batches via PJRT | NAG (mini-batch) | — |
+//!
+//! Every engine runs epoch-at-a-time: workers are scoped threads that stop
+//! at the epoch's update quota, the leader evaluates RMSE/MAE on Ψ between
+//! epochs (training stopwatch paused), and an optional early-stop detector
+//! ends the run at convergence — that protocol is [`run_driver`].
+
+mod asgd;
+mod block_common;
+mod dsgd;
+mod hogwild;
+mod seq;
+
+pub use block_common::BlockEngine;
+
+use crate::data::Dataset;
+use crate::metrics::{ConvergenceDetector, EpochStat, History, Stopwatch};
+use crate::model::{Factors, SharedFactors};
+use crate::optim::Hyper;
+use crate::partition::PartitionKind;
+use crate::rng::Rng;
+use crate::Result;
+use anyhow::bail;
+
+/// Engine selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Serial SGD reference.
+    Seq,
+    /// Hogwild! — fully asynchronous, racy updates.
+    Hogwild,
+    /// Distributed SGD — bulk-synchronous diagonal strata.
+    Dsgd,
+    /// Alternating SGD — parallel M phase then N phase.
+    Asgd,
+    /// FPSGD — block scheduler behind a global lock.
+    Fpsgd,
+    /// A²PSGD — lock-free scheduler + balanced blocks + NAG.
+    A2psgd,
+    /// Leader-driven mini-batch NAG through the AOT XLA artifacts.
+    XlaMinibatch,
+}
+
+impl EngineKind {
+    /// All engines the paper compares (excludes the serial reference and the
+    /// XLA demo engine).
+    pub fn paper_set() -> [EngineKind; 5] {
+        [
+            EngineKind::Hogwild,
+            EngineKind::Dsgd,
+            EngineKind::Asgd,
+            EngineKind::Fpsgd,
+            EngineKind::A2psgd,
+        ]
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "seq" | "serial" => EngineKind::Seq,
+            "hogwild" | "hogwild!" => EngineKind::Hogwild,
+            "dsgd" => EngineKind::Dsgd,
+            "asgd" => EngineKind::Asgd,
+            "fpsgd" => EngineKind::Fpsgd,
+            "a2psgd" | "a2" => EngineKind::A2psgd,
+            "xla" | "xla-minibatch" => EngineKind::XlaMinibatch,
+            other => bail!("unknown engine {other:?}"),
+        })
+    }
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            EngineKind::Seq => "Seq",
+            EngineKind::Hogwild => "Hogwild!",
+            EngineKind::Dsgd => "DSGD",
+            EngineKind::Asgd => "ASGD",
+            EngineKind::Fpsgd => "FPSGD",
+            EngineKind::A2psgd => "A2PSGD",
+            EngineKind::XlaMinibatch => "XLA-minibatch",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Full training configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Which engine to run.
+    pub engine: EngineKind,
+    /// Feature dimension D.
+    pub d: usize,
+    /// η / λ / γ.
+    pub hyper: Hyper,
+    /// Worker threads c.
+    pub threads: usize,
+    /// Maximum epochs.
+    pub epochs: u32,
+    /// RNG seed (controls init, shuffles, scheduling).
+    pub seed: u64,
+    /// Blocking strategy for block-scheduled engines.
+    pub partition: PartitionKind,
+    /// Stop at the convergence criterion before `epochs`.
+    pub early_stop: bool,
+    /// Convergence tolerance on RMSE.
+    pub tol: f64,
+    /// Stale evaluations before declaring convergence.
+    pub patience: u32,
+    /// Threads for the between-epoch evaluation.
+    pub eval_threads: usize,
+    /// Artifact directory for the XLA engine / XLA eval.
+    pub artifacts_dir: Option<std::path::PathBuf>,
+    /// Update rule for the Seq and A²PSGD engines (baselines keep their
+    /// published rules: Hogwild!/DSGD/ASGD/FPSGD always use plain SGD).
+    pub rule: crate::optim::Rule,
+}
+
+impl TrainConfig {
+    /// Paper-preset config for an engine on a dataset (Tables I/II hypers).
+    pub fn preset(engine: EngineKind, data: &Dataset) -> Self {
+        let hyper = crate::config::presets::hyper_for(engine, &data.name);
+        TrainConfig {
+            engine,
+            d: 16,
+            hyper,
+            threads: default_threads(),
+            epochs: 60,
+            seed: 0x5EED,
+            partition: match engine {
+                EngineKind::A2psgd => PartitionKind::Balanced,
+                _ => PartitionKind::Uniform,
+            },
+            early_stop: true,
+            tol: 1e-4,
+            patience: 4,
+            eval_threads: default_threads(),
+            artifacts_dir: None,
+            rule: match engine {
+                EngineKind::A2psgd | EngineKind::XlaMinibatch | EngineKind::Seq => {
+                    crate::optim::Rule::Nag
+                }
+                _ => crate::optim::Rule::Sgd,
+            },
+        }
+    }
+
+    /// Builder: set threads.
+    pub fn threads(mut self, c: usize) -> Self {
+        self.threads = c.max(1);
+        self
+    }
+
+    /// Builder: set epochs.
+    pub fn epochs(mut self, e: u32) -> Self {
+        self.epochs = e;
+        self
+    }
+
+    /// Builder: set seed.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Builder: set hyperparameters.
+    pub fn hyper(mut self, h: Hyper) -> Self {
+        self.hyper = h;
+        self
+    }
+
+    /// Builder: set feature dimension.
+    pub fn dim(mut self, d: usize) -> Self {
+        self.d = d;
+        self
+    }
+
+    /// Builder: disable early stopping (fixed epochs).
+    pub fn no_early_stop(mut self) -> Self {
+        self.early_stop = false;
+        self
+    }
+
+    /// Builder: set the partition kind (ablation A2).
+    pub fn partition(mut self, p: PartitionKind) -> Self {
+        self.partition = p;
+        self
+    }
+
+    /// Builder: set the update rule (ablation A3; Seq/A²PSGD only).
+    pub fn rule(mut self, r: crate::optim::Rule) -> Self {
+        self.rule = r;
+        self
+    }
+}
+
+/// Number of hardware threads, capped at the paper's 32.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(32)
+}
+
+/// Result of one training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    /// Engine that produced this run.
+    pub engine: EngineKind,
+    /// Dataset name.
+    pub dataset: String,
+    /// Worker threads used.
+    pub threads: usize,
+    /// Per-epoch convergence history.
+    pub history: History,
+    /// Total wall seconds (training + evaluation).
+    pub wall_seconds: f64,
+    /// Training-only seconds (the paper's clock).
+    pub train_seconds: f64,
+    /// Total per-instance updates executed.
+    pub total_updates: u64,
+    /// Trained factors (for serving / further analysis).
+    pub factors: Factors,
+    /// Epoch at which early stop fired (None = ran all epochs).
+    pub converged_epoch: Option<u32>,
+}
+
+impl TrainReport {
+    /// RMSE at the last evaluated epoch.
+    pub fn final_rmse(&self) -> f64 {
+        self.history.last().map(|p| p.rmse).unwrap_or(f64::NAN)
+    }
+
+    /// MAE at the last evaluated epoch.
+    pub fn final_mae(&self) -> f64 {
+        self.history.last().map(|p| p.mae).unwrap_or(f64::NAN)
+    }
+
+    /// Best (lowest) RMSE over the run.
+    pub fn best_rmse(&self) -> f64 {
+        self.history.best_rmse().map(|p| p.rmse).unwrap_or(f64::NAN)
+    }
+
+    /// Best (lowest) MAE over the run.
+    pub fn best_mae(&self) -> f64 {
+        self.history.best_mae().map(|p| p.mae).unwrap_or(f64::NAN)
+    }
+
+    /// The paper's "RMSE-time": training seconds to the best-RMSE epoch.
+    pub fn rmse_time(&self) -> f64 {
+        self.history.rmse_time().unwrap_or(f64::NAN)
+    }
+
+    /// The paper's "MAE-time".
+    pub fn mae_time(&self) -> f64 {
+        self.history.mae_time().unwrap_or(f64::NAN)
+    }
+
+    /// Updates per second of training time.
+    pub fn updates_per_sec(&self) -> f64 {
+        if self.train_seconds > 0.0 {
+            self.total_updates as f64 / self.train_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// An engine's per-epoch body: run workers until `quota` updates, then join.
+pub trait EpochRunner {
+    /// Execute one epoch; return the number of per-instance updates done.
+    /// All worker threads must have joined when this returns.
+    fn run_epoch(&mut self, epoch: u32, quota: u64) -> u64;
+
+    /// The shared factors (quiescent between epochs).
+    fn shared(&self) -> &SharedFactors;
+
+    /// Consume the runner, returning the trained factors.
+    fn into_factors(self: Box<Self>) -> Factors;
+}
+
+/// Train an LR model on a dataset with the configured engine.
+pub fn train(data: &Dataset, cfg: &TrainConfig) -> Result<TrainReport> {
+    if cfg.engine == EngineKind::XlaMinibatch {
+        return crate::runtime::train_xla(data, cfg);
+    }
+    let mut rng = Rng::new(cfg.seed);
+    let scale = Factors::default_scale(data.train.mean_rating(), cfg.d);
+    let factors = Factors::init(data.nrows(), data.ncols(), cfg.d, scale, &mut rng);
+    let runner: Box<dyn EpochRunner> = match cfg.engine {
+        EngineKind::Seq => Box::new(seq::SeqEngine::new(data, factors, cfg, &mut rng)),
+        EngineKind::Hogwild => Box::new(hogwild::HogwildEngine::new(data, factors, cfg, &mut rng)),
+        EngineKind::Dsgd => Box::new(dsgd::DsgdEngine::new(data, factors, cfg, &mut rng)),
+        EngineKind::Asgd => Box::new(asgd::AsgdEngine::new(data, factors, cfg, &mut rng)),
+        EngineKind::Fpsgd => Box::new(BlockEngine::fpsgd(data, factors, cfg, &mut rng)),
+        EngineKind::A2psgd => Box::new(BlockEngine::a2psgd(data, factors, cfg, &mut rng)),
+        EngineKind::XlaMinibatch => unreachable!(),
+    };
+    Ok(run_driver(data, cfg, runner))
+}
+
+/// The epoch/eval/early-stop protocol shared by all engines.
+pub fn run_driver(data: &Dataset, cfg: &TrainConfig, mut runner: Box<dyn EpochRunner>) -> TrainReport {
+    let quota = data.train.nnz() as u64;
+    let wall_start = std::time::Instant::now();
+    let mut sw = Stopwatch::new();
+    let mut history = History::new();
+    let mut detector = ConvergenceDetector::new(cfg.tol, cfg.patience);
+    let mut total_updates = 0u64;
+    let mut converged_epoch = None;
+
+    for epoch in 1..=cfg.epochs {
+        sw.start();
+        total_updates += runner.run_epoch(epoch, quota);
+        sw.pause();
+
+        // Workers joined inside run_epoch → quiescent read is safe.
+        let f = unsafe { runner.shared().get() };
+        let (rmse, mae) = crate::metrics::rmse_mae_parallel(
+            f,
+            &data.test,
+            data.rating_min,
+            data.rating_max,
+            cfg.eval_threads,
+        );
+        history.push(EpochStat { epoch, train_seconds: sw.seconds(), rmse, mae });
+
+        if cfg.early_stop && detector.observe(rmse) {
+            converged_epoch = Some(epoch);
+            break;
+        }
+    }
+
+    TrainReport {
+        engine: cfg.engine,
+        dataset: data.name.clone(),
+        threads: cfg.threads,
+        history,
+        wall_seconds: wall_start.elapsed().as_secs_f64(),
+        train_seconds: sw.seconds(),
+        total_updates,
+        factors: runner.into_factors(),
+        converged_epoch,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    fn smoke_cfg(engine: EngineKind, data: &Dataset) -> TrainConfig {
+        TrainConfig::preset(engine, data)
+            .threads(4)
+            .epochs(8)
+            .dim(8)
+            .no_early_stop()
+    }
+
+    #[test]
+    fn engine_kind_parse() {
+        assert_eq!(EngineKind::parse("a2psgd").unwrap(), EngineKind::A2psgd);
+        assert_eq!(EngineKind::parse("HOGWILD").unwrap(), EngineKind::Hogwild);
+        assert_eq!(EngineKind::parse("xla").unwrap(), EngineKind::XlaMinibatch);
+        assert!(EngineKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn every_engine_learns_on_small_data() {
+        let data = synthetic::small(0xAB);
+        // Baseline: RMSE of predicting the global mean.
+        let mean = data.train.mean_rating();
+        let base: f64 = {
+            let n = data.test.nnz() as f64;
+            let sse: f64 = data
+                .test
+                .entries()
+                .iter()
+                .map(|e| {
+                    let d = e.r as f64 - mean;
+                    d * d
+                })
+                .sum();
+            (sse / n).sqrt()
+        };
+        for engine in [
+            EngineKind::Seq,
+            EngineKind::Hogwild,
+            EngineKind::Dsgd,
+            EngineKind::Asgd,
+            EngineKind::Fpsgd,
+            EngineKind::A2psgd,
+        ] {
+            let cfg = smoke_cfg(engine, &data);
+            let report = train(&data, &cfg).unwrap();
+            assert!(
+                report.best_rmse() < base * 1.05,
+                "{engine}: rmse {:.4} vs mean-baseline {:.4}",
+                report.best_rmse(),
+                base
+            );
+            assert!(report.total_updates > 0, "{engine}");
+            assert!(report.final_rmse().is_finite(), "{engine}");
+            assert_eq!(report.history.points().len(), 8, "{engine}");
+        }
+    }
+
+    #[test]
+    fn early_stop_truncates_history() {
+        let data = synthetic::small(0xCD);
+        let mut cfg = smoke_cfg(EngineKind::A2psgd, &data).epochs(50);
+        cfg.early_stop = true;
+        cfg.tol = 0.1; // aggressive — converges almost immediately
+        cfg.patience = 2;
+        let report = train(&data, &cfg).unwrap();
+        assert!(report.converged_epoch.is_some());
+        assert!((report.history.points().len() as u32) < 50);
+    }
+
+    #[test]
+    fn deterministic_for_single_thread() {
+        let data = synthetic::small(0xEF);
+        let cfg = smoke_cfg(EngineKind::Seq, &data).epochs(3);
+        let a = train(&data, &cfg).unwrap();
+        let b = train(&data, &cfg).unwrap();
+        assert_eq!(a.final_rmse(), b.final_rmse());
+        assert_eq!(a.factors.m, b.factors.m);
+    }
+
+    #[test]
+    fn report_times_consistent() {
+        let data = synthetic::small(0x11);
+        let cfg = smoke_cfg(EngineKind::Fpsgd, &data).epochs(4);
+        let r = train(&data, &cfg).unwrap();
+        assert!(r.train_seconds <= r.wall_seconds + 1e-6);
+        assert!(r.rmse_time() <= r.train_seconds + 1e-6);
+        assert!(r.updates_per_sec() > 0.0);
+    }
+}

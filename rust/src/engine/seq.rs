@@ -1,0 +1,93 @@
+//! Serial SGD reference engine — the correctness baseline every parallel
+//! engine is sanity-checked against (same update rule, no concurrency).
+
+use super::{EpochRunner, TrainConfig};
+use crate::data::Dataset;
+use crate::model::{Factors, SharedFactors};
+use crate::optim::{Hyper, Rule};
+use crate::rng::Rng;
+use crate::sparse::Entry;
+
+/// Single-threaded engine (SGD, or NAG when γ > 0).
+pub struct SeqEngine {
+    shared: SharedFactors,
+    entries: Vec<Entry>,
+    hyper: Hyper,
+    rule: Rule,
+    rng: Rng,
+}
+
+impl SeqEngine {
+    /// Build from a dataset.
+    pub fn new(data: &Dataset, factors: Factors, cfg: &TrainConfig, rng: &mut Rng) -> Self {
+        SeqEngine {
+            shared: SharedFactors::new(factors),
+            entries: data.train.entries().to_vec(),
+            hyper: cfg.hyper,
+            rule: cfg.rule,
+            rng: rng.fork(1),
+        }
+    }
+}
+
+impl EpochRunner for SeqEngine {
+    fn run_epoch(&mut self, _epoch: u32, quota: u64) -> u64 {
+        self.rng.shuffle(&mut self.entries);
+        let mut done = 0u64;
+        for e in &self.entries {
+            // SAFETY: single thread — trivially exclusive.
+            let (mu, nv, phiu, psiv) = unsafe { self.shared.rows_mut(e.u, e.v) };
+            self.rule.apply(mu, nv, phiu, psiv, e.r, &self.hyper);
+            done += 1;
+            if done >= quota {
+                break;
+            }
+        }
+        done
+    }
+
+    fn shared(&self) -> &SharedFactors {
+        &self.shared
+    }
+
+    fn into_factors(self: Box<Self>) -> Factors {
+        self.shared.into_inner()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+    use crate::engine::EngineKind;
+
+    #[test]
+    fn seq_epoch_processes_quota() {
+        let data = synthetic::small(1);
+        let cfg = TrainConfig::preset(EngineKind::Seq, &data).dim(4);
+        let mut rng = Rng::new(7);
+        let f = Factors::init(data.nrows(), data.ncols(), 4, 0.3, &mut rng);
+        let mut e = SeqEngine::new(&data, f, &cfg, &mut rng);
+        let quota = data.train.nnz() as u64;
+        assert_eq!(e.run_epoch(1, quota), quota);
+        assert_eq!(e.run_epoch(2, 10), 10);
+    }
+
+    #[test]
+    fn seq_nag_and_sgd_both_reduce_rmse() {
+        let data = synthetic::small(2);
+        for gamma in [0.0, 0.9] {
+            let mut cfg = TrainConfig::preset(EngineKind::Seq, &data).dim(8).epochs(6);
+            cfg.hyper = if gamma > 0.0 {
+                Hyper::nag(0.002, 0.03, gamma)
+            } else {
+                Hyper::sgd(0.01, 0.03)
+            };
+            cfg.early_stop = false;
+            let r = crate::engine::train(&data, &cfg).unwrap();
+            let first = r.history.points().first().unwrap().rmse;
+            let last = r.final_rmse();
+            assert!(last <= first, "gamma={gamma}: {last} !<= {first}");
+        }
+    }
+}

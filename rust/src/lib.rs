@@ -1,0 +1,60 @@
+//! # a2psgd — Accelerated Asynchronous Parallel SGD for HDS Low-rank Representation
+//!
+//! A production-quality reproduction of
+//! *"High-Dimensional Sparse Data Low-rank Representation via Accelerated
+//! Asynchronous Parallel Stochastic Gradient Descent"* (Hu & Wu, cs.LG 2024)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the paper's coordination contribution: a
+//!   lock-free block scheduler ([`scheduler`]), greedy load-balanced blocking
+//!   ([`partition`]), the NAG learning scheme ([`optim`]), five parallel
+//!   training engines ([`engine`]: Hogwild!, DSGD, ASGD, FPSGD, A²PSGD), a
+//!   training coordinator ([`coordinator`]) and a batched prediction service.
+//! - **Layer 2/1 (python/compile)** — batched LR-model math in JAX calling
+//!   Pallas kernels, AOT-lowered once to HLO text and executed from the
+//!   [`runtime`] module via XLA/PJRT. Python is never on the request path.
+//!
+//! Quickstart:
+//!
+//! ```no_run
+//! use a2psgd::prelude::*;
+//!
+//! let data = data::synthetic::small(42);
+//! let cfg = engine::TrainConfig::preset(engine::EngineKind::A2psgd, &data)
+//!     .threads(4)
+//!     .epochs(20);
+//! let report = engine::train(&data, &cfg).unwrap();
+//! println!("final RMSE = {:.4}", report.final_rmse());
+//! ```
+
+pub mod bench_harness;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod partition;
+pub mod proptest_lite;
+pub mod rng;
+pub mod runtime;
+pub mod scheduler;
+pub mod sparse;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::data;
+    pub use crate::data::Dataset;
+    pub use crate::engine::{self, EngineKind, TrainConfig, TrainReport};
+    pub use crate::metrics::MeanStd;
+    pub use crate::model::Factors;
+    pub use crate::optim::Hyper;
+    pub use crate::partition::PartitionKind;
+    pub use crate::rng::Rng;
+    pub use crate::Result;
+}

@@ -1,0 +1,288 @@
+//! `a2psgd` binary: the leader entry point / launcher.
+
+use a2psgd::cli::{usage, Args};
+use a2psgd::coordinator::{self, service::PredictionService};
+use a2psgd::engine::{train, EngineKind, TrainConfig};
+use a2psgd::partition::PartitionKind;
+use a2psgd::prelude::*;
+use a2psgd::runtime::XlaRuntime;
+use anyhow::Context;
+use std::path::PathBuf;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "compare" => cmd_compare(&args),
+        "serve" => cmd_serve(&args),
+        "gen-data" => cmd_gen_data(&args),
+        "print-config" => cmd_print_config(&args),
+        "tune" => cmd_tune(&args),
+        "" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{}", usage());
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Build a TrainConfig from CLI flags (optionally seeded from --config).
+fn config_from_args(args: &Args, engine: EngineKind, data: &Dataset) -> Result<TrainConfig> {
+    let mut cfg = TrainConfig::preset(engine, data);
+    if let Some(path) = args.get("config") {
+        let rc = a2psgd::config::RunConfig::from_file(std::path::Path::new(path))?;
+        cfg = cfg.threads(rc.threads).epochs(rc.epochs).seed(rc.seed).dim(rc.d);
+        if let Some(h) = rc.hyper {
+            cfg = cfg.hyper(h);
+        }
+        if let Some(p) = rc.partition {
+            cfg = cfg.partition(p);
+        }
+    }
+    if let Some(t) = args.get_parsed::<usize>("threads")? {
+        cfg = cfg.threads(t);
+    }
+    if let Some(e) = args.get_parsed::<u32>("epochs")? {
+        cfg = cfg.epochs(e);
+    }
+    if let Some(s) = args.get_parsed::<u64>("seed")? {
+        cfg = cfg.seed(s);
+    }
+    if let Some(d) = args.get_parsed::<usize>("d")? {
+        cfg = cfg.dim(d);
+    }
+    let mut h = cfg.hyper;
+    if let Some(x) = args.get_parsed::<f32>("eta")? {
+        h.eta = x;
+    }
+    if let Some(x) = args.get_parsed::<f32>("lam")? {
+        h.lam = x;
+    }
+    if let Some(x) = args.get_parsed::<f32>("gamma")? {
+        h.gamma = x;
+    }
+    cfg = cfg.hyper(h);
+    if let Some(p) = args.get("partition") {
+        cfg = cfg.partition(match p {
+            "uniform" => PartitionKind::Uniform,
+            "balanced" => PartitionKind::Balanced,
+            other => anyhow::bail!("unknown partition {other:?}"),
+        });
+    }
+    if args.has("no-early-stop") {
+        cfg = cfg.no_early_stop();
+    }
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifacts_dir = Some(PathBuf::from(dir));
+    }
+    Ok(cfg)
+}
+
+fn resolve(args: &Args) -> Result<Dataset> {
+    let key = args.get_or("dataset", "small");
+    let key = args.get("data-file").unwrap_or(&key);
+    let seed = args.get_parsed::<u64>("seed")?.unwrap_or(0x5EED);
+    let data = coordinator::resolve_dataset(key, seed)?;
+    eprintln!("dataset {}", data.describe());
+    Ok(data)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let data = resolve(args)?;
+    let engine = EngineKind::parse(&args.get_or("engine", "a2psgd"))?;
+    let cfg = config_from_args(args, engine, &data)?;
+    eprintln!(
+        "training {engine} on {} — d={} threads={} epochs={} η={} λ={} γ={}",
+        data.name, cfg.d, cfg.threads, cfg.epochs, cfg.hyper.eta, cfg.hyper.lam, cfg.hyper.gamma
+    );
+    let report = train(&data, &cfg)?;
+    for p in report.history.points() {
+        println!(
+            "epoch {:>3}  t={:>8.3}s  RMSE={:.4}  MAE={:.4}",
+            p.epoch, p.train_seconds, p.rmse, p.mae
+        );
+    }
+    println!(
+        "\n{engine}: best RMSE {:.4} (t={:.2}s)  best MAE {:.4} (t={:.2}s)  {:.2}M updates/s{}",
+        report.best_rmse(),
+        report.rmse_time(),
+        report.best_mae(),
+        report.mae_time(),
+        report.updates_per_sec() / 1e6,
+        report
+            .converged_epoch
+            .map(|e| format!("  converged@{e}"))
+            .unwrap_or_default()
+    );
+    if args.has("xla-eval") {
+        let dir = cfg
+            .artifacts_dir
+            .clone()
+            .unwrap_or_else(a2psgd::runtime::default_artifacts_dir);
+        let rt = XlaRuntime::load(&dir)?;
+        let (rmse, mae) = rt.eval_dataset(&report.factors, &data.test)?;
+        println!("XLA cross-eval (unclamped): RMSE={rmse:.4} MAE={mae:.4}");
+    }
+    if let Some(out) = args.get("out") {
+        let dir = PathBuf::from(out);
+        std::fs::create_dir_all(&dir)?;
+        let p = dir.join(format!("train_{}_{}.csv", data.name, engine.to_string().to_lowercase()));
+        std::fs::write(&p, report.history.to_csv())?;
+        eprintln!("wrote {}", p.display());
+    }
+    if let Some(path) = args.get("save") {
+        a2psgd::model::checkpoint::save(&report.factors, std::path::Path::new(path))?;
+        eprintln!("checkpoint → {path}");
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let key = args.get_or("dataset", "small");
+    let nseeds = args.get_parsed::<u64>("seeds")?.unwrap_or(3);
+    let base_seed = args.get_parsed::<u64>("seed")?.unwrap_or(0x5EED);
+    let seeds: Vec<u64> = (0..nseeds).map(|i| base_seed.wrapping_add(i)).collect();
+    let probe = coordinator::resolve_dataset(&key, base_seed)?;
+    eprintln!("dataset {}", probe.describe());
+    let threads = args.get_parsed::<usize>("threads")?;
+    let epochs = args.get_parsed::<u32>("epochs")?;
+    let mk_cfg = move |engine: EngineKind, data: &Dataset| -> TrainConfig {
+        let mut cfg = TrainConfig::preset(engine, data);
+        if let Some(t) = threads {
+            cfg = cfg.threads(t);
+        }
+        if let Some(e) = epochs {
+            cfg = cfg.epochs(e);
+        }
+        cfg
+    };
+    let mut cells = Vec::new();
+    for engine in EngineKind::paper_set() {
+        eprintln!("running {engine} × {} seeds …", seeds.len());
+        cells.push(coordinator::run_cell(&key, engine, &seeds, &mk_cfg)?);
+    }
+    println!("\n{}", coordinator::format_accuracy_table(&key, &cells));
+    println!("{}", coordinator::format_time_table(&key, &cells));
+    let out = PathBuf::from(args.get_or("out", "results"));
+    coordinator::write_convergence_csv(&out, &key, &cells)?;
+    eprintln!("convergence CSVs written to {}", out.display());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let data = resolve(args)?;
+    let engine = EngineKind::parse(&args.get_or("engine", "a2psgd"))?;
+    let cfg = config_from_args(args, engine, &data)?;
+    // Either load a checkpoint or train fresh.
+    let factors = match args.get("load") {
+        Some(path) => {
+            let f = a2psgd::model::checkpoint::load(std::path::Path::new(path))?;
+            eprintln!("loaded checkpoint {path} ({}x{} d={})", f.nrows(), f.ncols(), f.d());
+            f
+        }
+        None => {
+            let report = train(&data, &cfg)?;
+            eprintln!("trained: best RMSE {:.4}", report.best_rmse());
+            report.factors
+        }
+    };
+    let dir = cfg
+        .artifacts_dir
+        .clone()
+        .unwrap_or_else(a2psgd::runtime::default_artifacts_dir);
+    let svc = PredictionService::start_with_exclusions(
+        dir,
+        factors,
+        (data.rating_min, data.rating_max),
+        std::time::Duration::from_millis(2),
+        Some(data.train.clone()),
+    )
+    .context("starting the prediction service")?;
+    let n = args.get_parsed::<usize>("requests")?.unwrap_or(10_000);
+    let client = svc.client();
+    let mut rng = Rng::new(7);
+    let pairs: Vec<(u32, u32)> = (0..n)
+        .map(|_| {
+            (
+                rng.gen_index(data.nrows() as usize) as u32,
+                rng.gen_index(data.ncols() as usize) as u32,
+            )
+        })
+        .collect();
+    let t = std::time::Instant::now();
+    let preds = client.predict_many(&pairs)?;
+    let secs = t.elapsed().as_secs_f64();
+    // Top-k recommendations through the `recommend` artifact.
+    let k = args.get_parsed::<usize>("topk")?.unwrap_or(5);
+    let top = client.top_k(0, k)?;
+    drop(client);
+    let stats = svc.shutdown();
+    println!(
+        "served {n} predictions in {secs:.3}s ({:.0} req/s), {} batches, mean occupancy {:.1}",
+        n as f64 / secs,
+        stats.batches,
+        stats.mean_batch()
+    );
+    println!("sample: r̂({},{}) = {:.3}", pairs[0].0, pairs[0].1, preds[0]);
+    println!("top-{k} for user 0 (train items excluded):");
+    for (v, score) in top {
+        println!("  item {v:>6}  score {score:.3}");
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let key = args.get_or("dataset", "small");
+    let seed = args.get_parsed::<u64>("seed")?.unwrap_or(0x5EED);
+    let out = args.get("out").context("gen-data requires --out FILE")?;
+    let data = coordinator::resolve_dataset(&key, seed)?;
+    let mut text = String::with_capacity(data.total_nnz() * 12);
+    for e in data.train.entries().iter().chain(data.test.entries()) {
+        text.push_str(&format!("{} {} {}\n", e.u, e.v, e.r));
+    }
+    std::fs::write(out, text)?;
+    println!("wrote {} ({} instances)", out, data.total_nnz());
+    Ok(())
+}
+
+fn cmd_print_config(args: &Args) -> Result<()> {
+    let key = args.get_or("dataset", "ml1m");
+    println!("{}", a2psgd::config::presets::format_table(&key));
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let data = resolve(args)?;
+    let engine = EngineKind::parse(&args.get_or("engine", "a2psgd"))?;
+    let parse_list = |s: &str| -> Result<Vec<f32>> {
+        s.split(',')
+            .map(|t| t.trim().parse::<f32>().map_err(|e| anyhow::anyhow!("{t:?}: {e}")))
+            .collect()
+    };
+    let etas = parse_list(&args.get_or("etas", "1e-4,5e-4,2e-3,5e-3"))?;
+    let lams = parse_list(&args.get_or("lams", "1e-2,3e-2,1e-1,5e-1"))?;
+    let epochs = args.get_parsed::<u32>("epochs")?.unwrap_or(15);
+    let seed = args.get_parsed::<u64>("seed")?.unwrap_or(0x5EED);
+    eprintln!(
+        "grid search: {engine} on {} — {}×{} cells × {epochs} epochs",
+        data.name,
+        etas.len(),
+        lams.len()
+    );
+    let report = a2psgd::coordinator::tune::grid_search(
+        &data, engine, &etas, &lams, epochs, 0.2, seed,
+    )?;
+    println!("{}", a2psgd::coordinator::tune::format_grid(&report, &etas, &lams));
+    Ok(())
+}

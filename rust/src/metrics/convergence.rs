@@ -1,0 +1,181 @@
+//! Convergence tracking: per-epoch history and the early-stop detector that
+//! defines the paper's "RMSE-time"/"MAE-time" (training time until the
+//! terminal iteration of the convergence criterion).
+
+/// One evaluated epoch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EpochStat {
+    /// Epoch index (1-based).
+    pub epoch: u32,
+    /// Cumulative *training* seconds at the end of this epoch (eval excluded).
+    pub train_seconds: f64,
+    /// Test RMSE.
+    pub rmse: f64,
+    /// Test MAE.
+    pub mae: f64,
+}
+
+/// Full convergence history of a run.
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    points: Vec<EpochStat>,
+}
+
+impl History {
+    /// Empty history.
+    pub fn new() -> Self {
+        History { points: Vec::new() }
+    }
+
+    /// Append one epoch.
+    pub fn push(&mut self, p: EpochStat) {
+        self.points.push(p);
+    }
+
+    /// All points.
+    pub fn points(&self) -> &[EpochStat] {
+        &self.points
+    }
+
+    /// Last point, if any.
+    pub fn last(&self) -> Option<&EpochStat> {
+        self.points.last()
+    }
+
+    /// Minimum-RMSE point.
+    pub fn best_rmse(&self) -> Option<&EpochStat> {
+        self.points
+            .iter()
+            .min_by(|a, b| a.rmse.partial_cmp(&b.rmse).unwrap())
+    }
+
+    /// Minimum-MAE point.
+    pub fn best_mae(&self) -> Option<&EpochStat> {
+        self.points
+            .iter()
+            .min_by(|a, b| a.mae.partial_cmp(&b.mae).unwrap())
+    }
+
+    /// Training seconds at the best-RMSE epoch — the paper's "RMSE-time".
+    pub fn rmse_time(&self) -> Option<f64> {
+        self.best_rmse().map(|p| p.train_seconds)
+    }
+
+    /// Training seconds at the best-MAE epoch — the paper's "MAE-time".
+    pub fn mae_time(&self) -> Option<f64> {
+        self.best_mae().map(|p| p.train_seconds)
+    }
+
+    /// CSV rows: `epoch,train_seconds,rmse,mae`.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("epoch,train_seconds,rmse,mae\n");
+        for p in &self.points {
+            s.push_str(&format!(
+                "{},{:.6},{:.6},{:.6}\n",
+                p.epoch, p.train_seconds, p.rmse, p.mae
+            ));
+        }
+        s
+    }
+}
+
+/// Early-stop rule: converged when RMSE has not improved by more than `tol`
+/// for `patience` consecutive evaluations (the paper's "termination
+/// iteration" criterion, made explicit).
+#[derive(Clone, Debug)]
+pub struct ConvergenceDetector {
+    tol: f64,
+    patience: u32,
+    best: f64,
+    stale: u32,
+}
+
+impl ConvergenceDetector {
+    /// New detector.
+    pub fn new(tol: f64, patience: u32) -> Self {
+        ConvergenceDetector { tol, patience, best: f64::INFINITY, stale: 0 }
+    }
+
+    /// Feed one RMSE observation; returns `true` once converged.
+    pub fn observe(&mut self, rmse: f64) -> bool {
+        if rmse < self.best - self.tol {
+            self.best = rmse;
+            self.stale = 0;
+        } else {
+            self.stale += 1;
+        }
+        self.stale >= self.patience
+    }
+
+    /// Best value seen.
+    pub fn best(&self) -> f64 {
+        self.best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(epoch: u32, secs: f64, rmse: f64, mae: f64) -> EpochStat {
+        EpochStat { epoch, train_seconds: secs, rmse, mae }
+    }
+
+    #[test]
+    fn best_and_times() {
+        let mut h = History::new();
+        h.push(pt(1, 1.0, 0.95, 0.80));
+        h.push(pt(2, 2.0, 0.90, 0.75));
+        h.push(pt(3, 3.0, 0.92, 0.70));
+        assert_eq!(h.best_rmse().unwrap().epoch, 2);
+        assert_eq!(h.best_mae().unwrap().epoch, 3);
+        assert_eq!(h.rmse_time(), Some(2.0));
+        assert_eq!(h.mae_time(), Some(3.0));
+    }
+
+    #[test]
+    fn empty_history() {
+        let h = History::new();
+        assert!(h.best_rmse().is_none());
+        assert!(h.rmse_time().is_none());
+        assert!(h.last().is_none());
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut h = History::new();
+        h.push(pt(1, 0.5, 0.9, 0.7));
+        let csv = h.to_csv();
+        assert!(csv.starts_with("epoch,train_seconds,rmse,mae\n"));
+        assert!(csv.contains("1,0.500000,0.900000,0.700000"));
+    }
+
+    #[test]
+    fn detector_stops_on_plateau() {
+        let mut d = ConvergenceDetector::new(1e-4, 3);
+        assert!(!d.observe(1.0));
+        assert!(!d.observe(0.9));
+        assert!(!d.observe(0.9)); // stale 1
+        assert!(!d.observe(0.9)); // stale 2
+        assert!(d.observe(0.9)); // stale 3 → converged
+        assert_eq!(d.best(), 0.9);
+    }
+
+    #[test]
+    fn detector_resets_on_improvement() {
+        let mut d = ConvergenceDetector::new(1e-4, 2);
+        assert!(!d.observe(1.0));
+        assert!(!d.observe(1.0)); // stale 1
+        assert!(!d.observe(0.5)); // improvement resets
+        assert!(!d.observe(0.5)); // stale 1
+        assert!(d.observe(0.5)); // stale 2
+    }
+
+    #[test]
+    fn detector_tolerance_counts_tiny_gains_as_stale() {
+        let mut d = ConvergenceDetector::new(1e-2, 2);
+        assert!(!d.observe(1.00));
+        assert!(!d.observe(0.995)); // within tol → stale
+        assert!(d.observe(0.992)); // still within tol → converged
+    }
+}

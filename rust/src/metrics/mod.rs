@@ -1,0 +1,272 @@
+//! Evaluation metrics (paper §IV-A.4): RMSE and MAE over the test set Ψ,
+//! convergence tracking, timers, and mean±std aggregation across seeds.
+
+mod convergence;
+pub mod topn;
+
+pub use convergence::{ConvergenceDetector, EpochStat, History};
+pub use topn::{evaluate_topn, TopNReport};
+
+use crate::data::Dataset;
+use crate::model::Factors;
+use crate::sparse::CooMatrix;
+
+/// (RMSE, MAE) of clamped predictions over a test matrix.
+///
+/// Predictions are clamped to `[lo, hi]` (the rating scale) — standard for
+/// rating-prediction evaluation and what keeps early-epoch RMSE finite.
+pub fn rmse_mae(f: &Factors, test: &CooMatrix, lo: f32, hi: f32) -> (f64, f64) {
+    rmse_mae_parallel(f, test, lo, hi, 1)
+}
+
+/// [`rmse_mae`] split across `threads` evaluation workers.
+pub fn rmse_mae_parallel(
+    f: &Factors,
+    test: &CooMatrix,
+    lo: f32,
+    hi: f32,
+    threads: usize,
+) -> (f64, f64) {
+    let entries = test.entries();
+    if entries.is_empty() {
+        return (0.0, 0.0);
+    }
+    let threads = threads.max(1).min(entries.len());
+    let chunk = entries.len().div_ceil(threads);
+    let mut partials = vec![(0f64, 0f64); threads];
+    std::thread::scope(|scope| {
+        for (t, (slot, chunk_entries)) in
+            partials.iter_mut().zip(entries.chunks(chunk)).enumerate()
+        {
+            let _ = t;
+            scope.spawn(move || {
+                let mut sse = 0f64;
+                let mut sae = 0f64;
+                for e in chunk_entries {
+                    let p = f.predict_clamped(e.u, e.v, lo, hi);
+                    let d = (e.r - p) as f64;
+                    sse += d * d;
+                    sae += d.abs();
+                }
+                *slot = (sse, sae);
+            });
+        }
+    });
+    let (sse, sae) = partials
+        .iter()
+        .fold((0f64, 0f64), |(a, b), &(x, y)| (a + x, b + y));
+    let n = entries.len() as f64;
+    ((sse / n).sqrt(), sae / n)
+}
+
+/// Evaluate a dataset's test split with its own rating bounds.
+pub fn eval_dataset(f: &Factors, data: &Dataset, threads: usize) -> (f64, f64) {
+    rmse_mae_parallel(f, &data.test, data.rating_min, data.rating_max, threads)
+}
+
+/// Regularized training loss ε (paper Eq. 1) — diagnostic, serial.
+pub fn training_loss(f: &Factors, train: &CooMatrix, lam: f32) -> f64 {
+    let mut loss = 0f64;
+    for e in train.entries() {
+        let err = (e.r - f.predict(e.u, e.v)) as f64;
+        let mu = f.m_row(e.u);
+        let nv = f.n_row(e.v);
+        let reg: f64 = mu.iter().chain(nv.iter()).map(|&x| (x as f64) * (x as f64)).sum();
+        loss += 0.5 * (err * err + lam as f64 * reg);
+    }
+    loss
+}
+
+/// Mean ± population-std aggregate (the paper reports `x±σ`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MeanStd {
+    /// Mean.
+    pub mean: f64,
+    /// Population standard deviation.
+    pub std: f64,
+    /// Sample count.
+    pub n: usize,
+}
+
+impl MeanStd {
+    /// Aggregate a slice of samples.
+    pub fn from(xs: &[f64]) -> Self {
+        assert!(!xs.is_empty());
+        let n = xs.len() as f64;
+        let mean = xs.iter().sum::<f64>() / n;
+        let var = xs.iter().map(|&x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        MeanStd { mean, std: var.sqrt(), n: xs.len() }
+    }
+
+    /// Paper-style `0.8552±6.78e-05` formatting.
+    pub fn fmt_paper(&self, digits: usize) -> String {
+        format!("{:.*}±{:.2e}", digits, self.mean, self.std)
+    }
+}
+
+impl std::fmt::Display for MeanStd {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.fmt_paper(4))
+    }
+}
+
+/// Wall-clock stopwatch accumulating only while running (training time must
+/// exclude evaluation pauses, as the paper's "training time" does).
+#[derive(Debug)]
+pub struct Stopwatch {
+    acc: std::time::Duration,
+    started: Option<std::time::Instant>,
+}
+
+impl Stopwatch {
+    /// New, paused.
+    pub fn new() -> Self {
+        Stopwatch { acc: std::time::Duration::ZERO, started: None }
+    }
+
+    /// Start/resume.
+    pub fn start(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(std::time::Instant::now());
+        }
+    }
+
+    /// Pause, accumulating elapsed time.
+    pub fn pause(&mut self) {
+        if let Some(t) = self.started.take() {
+            self.acc += t.elapsed();
+        }
+    }
+
+    /// Accumulated seconds (including a running segment).
+    pub fn seconds(&self) -> f64 {
+        let mut acc = self.acc;
+        if let Some(t) = self.started {
+            acc += t.elapsed();
+        }
+        acc.as_secs_f64()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::sparse::Entry;
+
+    fn tiny() -> (Factors, CooMatrix) {
+        let mut rng = Rng::new(1);
+        let f = Factors::init(4, 4, 2, 0.5, &mut rng);
+        let m = CooMatrix::from_entries(
+            4,
+            4,
+            vec![
+                Entry { u: 0, v: 0, r: 3.0 },
+                Entry { u: 1, v: 2, r: 4.0 },
+                Entry { u: 3, v: 1, r: 2.0 },
+            ],
+        )
+        .unwrap();
+        (f, m)
+    }
+
+    #[test]
+    fn rmse_mae_hand_computed() {
+        let (f, m) = tiny();
+        let (rmse, mae) = rmse_mae(&f, &m, 1.0, 5.0);
+        let mut sse = 0f64;
+        let mut sae = 0f64;
+        for e in m.entries() {
+            let d = (e.r - f.predict_clamped(e.u, e.v, 1.0, 5.0)) as f64;
+            sse += d * d;
+            sae += d.abs();
+        }
+        assert!((rmse - (sse / 3.0).sqrt()).abs() < 1e-12);
+        assert!((mae - sae / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_eval_matches_serial() {
+        let mut rng = Rng::new(2);
+        let f = Factors::init(100, 100, 4, 0.3, &mut rng);
+        let mut m = CooMatrix::new(100, 100);
+        for _ in 0..5000 {
+            m.push(
+                rng.gen_index(100) as u32,
+                rng.gen_index(100) as u32,
+                rng.f32_range(1.0, 5.0),
+            )
+            .unwrap();
+        }
+        let serial = rmse_mae(&f, &m, 1.0, 5.0);
+        for threads in [2, 3, 8] {
+            let par = rmse_mae_parallel(&f, &m, 1.0, 5.0, threads);
+            assert!((serial.0 - par.0).abs() < 1e-10, "threads={threads}");
+            assert!((serial.1 - par.1).abs() < 1e-10, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_test_set_is_zero() {
+        let (f, _) = tiny();
+        let empty = CooMatrix::new(4, 4);
+        assert_eq!(rmse_mae(&f, &empty, 1.0, 5.0), (0.0, 0.0));
+    }
+
+    #[test]
+    fn perfect_predictions_zero_error() {
+        let mut rng = Rng::new(3);
+        let f = Factors::init(4, 4, 2, 0.5, &mut rng);
+        let mut m = CooMatrix::new(4, 4);
+        for u in 0..4u32 {
+            for v in 0..4u32 {
+                m.push(u, v, f.predict(u, v).clamp(1.0, 5.0)).unwrap();
+            }
+        }
+        let (rmse, mae) = rmse_mae(&f, &m, 1.0, 5.0);
+        assert!(rmse < 1e-6 && mae < 1e-6);
+    }
+
+    #[test]
+    fn mean_std_basics() {
+        let s = MeanStd::from(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.std - (1.25f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.n, 4);
+    }
+
+    #[test]
+    fn mean_std_constant_zero_std() {
+        let s = MeanStd::from(&[7.0; 5]);
+        assert_eq!(s.std, 0.0);
+        assert!(s.fmt_paper(4).starts_with("7.0000±"));
+    }
+
+    #[test]
+    fn stopwatch_accumulates_only_running() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        sw.pause();
+        let t1 = sw.seconds();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let t2 = sw.seconds();
+        assert!((t2 - t1).abs() < 1e-9, "paused watch must not advance");
+        assert!(t1 >= 0.015);
+    }
+
+    #[test]
+    fn training_loss_positive_and_reg_grows_it() {
+        let (f, m) = tiny();
+        let l0 = training_loss(&f, &m, 0.0);
+        let l1 = training_loss(&f, &m, 1.0);
+        assert!(l0 >= 0.0);
+        assert!(l1 > l0);
+    }
+}

@@ -1,0 +1,200 @@
+//! Top-N recommendation metrics: HR@k and NDCG@k — the ranking quality the
+//! intro's recommender-system application cares about (complements the
+//! paper's RMSE/MAE error metrics).
+
+use crate::model::Factors;
+use crate::sparse::CooMatrix;
+use std::collections::HashSet;
+
+/// Top-N evaluation result.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TopNReport {
+    /// Hit-rate@k: fraction of evaluated users with ≥1 relevant item in top-k.
+    pub hr: f64,
+    /// NDCG@k averaged over evaluated users.
+    pub ndcg: f64,
+    /// Users evaluated (those with ≥1 relevant test item).
+    pub users: usize,
+}
+
+/// Rank all items for one user by factor score, excluding `seen` items.
+pub fn rank_items(f: &Factors, u: u32, seen: &HashSet<u32>, k: usize) -> Vec<(u32, f32)> {
+    let mut scored: Vec<(u32, f32)> = (0..f.ncols())
+        .filter(|v| !seen.contains(v))
+        .map(|v| (v, f.predict(u, v)))
+        .collect();
+    // Partial selection: full sort is fine at these item counts, but avoid
+    // re-sorting the tail when k is small.
+    if scored.len() > k {
+        scored.select_nth_unstable_by(k, |a, b| b.1.partial_cmp(&a.1).unwrap());
+        scored.truncate(k);
+    }
+    scored.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    scored
+}
+
+/// Evaluate HR@k / NDCG@k on a test split.
+///
+/// Relevant = test rating ≥ `rel_threshold`. Items the user rated in
+/// training are excluded from the candidate ranking (standard protocol).
+pub fn evaluate_topn(
+    f: &Factors,
+    train: &CooMatrix,
+    test: &CooMatrix,
+    k: usize,
+    rel_threshold: f32,
+) -> TopNReport {
+    // Index: user → training items (to exclude) and relevant test items.
+    let nrows = f.nrows() as usize;
+    let mut seen: Vec<HashSet<u32>> = vec![HashSet::new(); nrows];
+    for e in train.entries() {
+        seen[e.u as usize].insert(e.v);
+    }
+    let mut relevant: Vec<HashSet<u32>> = vec![HashSet::new(); nrows];
+    for e in test.entries() {
+        if e.r >= rel_threshold {
+            relevant[e.u as usize].insert(e.v);
+        }
+    }
+
+    let mut hits = 0usize;
+    let mut ndcg_sum = 0f64;
+    let mut users = 0usize;
+    for u in 0..nrows {
+        if relevant[u].is_empty() {
+            continue;
+        }
+        users += 1;
+        let top = rank_items(f, u as u32, &seen[u], k);
+        let mut dcg = 0f64;
+        let mut hit = false;
+        for (rank, (v, _)) in top.iter().enumerate() {
+            if relevant[u].contains(v) {
+                hit = true;
+                dcg += 1.0 / ((rank as f64 + 2.0).log2());
+            }
+        }
+        let ideal_hits = relevant[u].len().min(k);
+        let idcg: f64 = (0..ideal_hits).map(|i| 1.0 / ((i as f64 + 2.0).log2())).sum();
+        if idcg > 0.0 {
+            ndcg_sum += dcg / idcg;
+        }
+        if hit {
+            hits += 1;
+        }
+    }
+    if users == 0 {
+        return TopNReport { hr: 0.0, ndcg: 0.0, users: 0 };
+    }
+    TopNReport {
+        hr: hits as f64 / users as f64,
+        ndcg: ndcg_sum / users as f64,
+        users,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::sparse::Entry;
+
+    fn any_factors() -> (Factors, CooMatrix, CooMatrix) {
+        let mut rng = Rng::new(1);
+        let f = Factors::init(4, 6, 2, 0.3, &mut rng);
+        let train = CooMatrix::new(4, 6);
+        let test = CooMatrix::from_entries(
+            4,
+            6,
+            (0..4).map(|u| Entry { u, v: u, r: 5.0 }).collect(),
+        )
+        .unwrap();
+        (f, train, test)
+    }
+
+    #[test]
+    fn rank_items_orders_by_score_and_excludes_seen() {
+        let mut rng = Rng::new(2);
+        let mut f = Factors::init(1, 5, 1, 0.0, &mut rng);
+        f.m[0] = 1.0;
+        for v in 0..5 {
+            f.n[v] = v as f32;
+        }
+        let mut seen = HashSet::new();
+        seen.insert(4u32);
+        let top = rank_items(&f, 0, &seen, 3);
+        assert_eq!(top.iter().map(|t| t.0).collect::<Vec<_>>(), vec![3, 2, 1]);
+    }
+
+    #[test]
+    fn perfect_model_gets_hr_one() {
+        // Construct d=4 identity-ish factors: user u ≡ e_u, item v ≡ e_v.
+        let d = 4;
+        let mut rng = Rng::new(3);
+        let mut f = Factors::init(4, 4, d, 0.0, &mut rng);
+        for u in 0..4usize {
+            f.m[u * d + u] = 1.0;
+            f.n[u * d + u] = 1.0;
+        }
+        let train = CooMatrix::new(4, 4);
+        let test = CooMatrix::from_entries(
+            4,
+            4,
+            (0..4).map(|u| Entry { u, v: u, r: 5.0 }).collect(),
+        )
+        .unwrap();
+        let r = evaluate_topn(&f, &train, &test, 1, 4.0);
+        assert_eq!(r.users, 4);
+        assert_eq!(r.hr, 1.0);
+        assert!((r.ndcg - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn irrelevant_threshold_filters_users() {
+        let (f, train, test) = any_factors();
+        let r = evaluate_topn(&f, &train, &test, 3, 9.0); // nothing ≥ 9
+        assert_eq!(r.users, 0);
+        assert_eq!(r.hr, 0.0);
+    }
+
+    #[test]
+    fn ndcg_rank_sensitivity() {
+        // One user, relevant item ranked 1st vs 2nd.
+        let d = 2;
+        let mut rng = Rng::new(4);
+        let mut f = Factors::init(1, 3, d, 0.0, &mut rng);
+        f.m[0] = 1.0;
+        f.n[0] = 0.9; // item 0 score 0.9
+        f.n[2] = 1.0; // item 1 score 1.0
+        f.n[4] = 0.1; // item 2 score 0.1
+        let train = CooMatrix::new(1, 3);
+        let test = CooMatrix::from_entries(1, 3, vec![Entry { u: 0, v: 0, r: 5.0 }]).unwrap();
+        let r = evaluate_topn(&f, &train, &test, 2, 4.0);
+        assert_eq!(r.hr, 1.0);
+        // relevant item at rank 2: ndcg = (1/log2(3)) / (1/log2(2)) ≈ 0.631
+        assert!((r.ndcg - 1.0 / 3f64.log2()).abs() < 1e-9, "{}", r.ndcg);
+    }
+
+    #[test]
+    fn trained_model_beats_random_ranking() {
+        let data = crate::data::synthetic::small(6);
+        let cfg = crate::engine::TrainConfig::preset(
+            crate::engine::EngineKind::A2psgd,
+            &data,
+        )
+        .threads(2)
+        .epochs(12)
+        .dim(8);
+        let trained = crate::engine::train(&data, &cfg).unwrap();
+        let mut rng = Rng::new(7);
+        let random = Factors::init(data.nrows(), data.ncols(), 8, 0.3, &mut rng);
+        let rt = evaluate_topn(&trained.factors, &data.train, &data.test, 10, 4.0);
+        let rr = evaluate_topn(&random, &data.train, &data.test, 10, 4.0);
+        assert!(
+            rt.ndcg > rr.ndcg,
+            "trained ndcg {:.3} !> random {:.3}",
+            rt.ndcg,
+            rr.ndcg
+        );
+    }
+}

@@ -1,0 +1,194 @@
+//! LR-model state (paper Definition 2): factor matrices `M^{|U|×D}`,
+//! `N^{|V|×D}` plus the NAG momentum matrices `φ`, `ψ` (§III-C).
+
+pub mod checkpoint;
+mod shared;
+
+pub use shared::SharedFactors;
+
+use crate::rng::Rng;
+
+/// Dense factor + momentum matrices for an LR model.
+#[derive(Clone, Debug)]
+pub struct Factors {
+    d: usize,
+    nrows: u32,
+    ncols: u32,
+    /// M, row-major `|U| × D`.
+    pub m: Vec<f32>,
+    /// N, row-major `|V| × D`.
+    pub n: Vec<f32>,
+    /// φ — momentum of M (zero unless NAG is used).
+    pub phi: Vec<f32>,
+    /// ψ — momentum of N.
+    pub psi: Vec<f32>,
+}
+
+impl Factors {
+    /// Random-initialized factors. `init_scale` sets the uniform range
+    /// `[0, init_scale)`; pass [`Factors::default_scale`] for a mean-matched
+    /// start (⟨m,n⟩ ≈ r̄ in expectation).
+    pub fn init(nrows: u32, ncols: u32, d: usize, init_scale: f32, rng: &mut Rng) -> Self {
+        assert!(d >= 1);
+        let mut m = vec![0f32; nrows as usize * d];
+        let mut n = vec![0f32; ncols as usize * d];
+        for x in m.iter_mut().chain(n.iter_mut()) {
+            *x = rng.f32_range(0.0, init_scale);
+        }
+        Factors {
+            d,
+            nrows,
+            ncols,
+            m,
+            n,
+            phi: vec![0f32; nrows as usize * d],
+            psi: vec![0f32; ncols as usize * d],
+        }
+    }
+
+    /// Reassemble factors from raw parts (checkpoint loading).
+    pub fn from_parts(
+        nrows: u32,
+        ncols: u32,
+        d: usize,
+        m: Vec<f32>,
+        n: Vec<f32>,
+        phi: Vec<f32>,
+        psi: Vec<f32>,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(d >= 1, "d must be ≥ 1");
+        anyhow::ensure!(m.len() == nrows as usize * d, "M size mismatch");
+        anyhow::ensure!(n.len() == ncols as usize * d, "N size mismatch");
+        anyhow::ensure!(phi.len() == m.len() && psi.len() == n.len(), "momentum size mismatch");
+        Ok(Factors { d, nrows, ncols, m, n, phi, psi })
+    }
+
+    /// Scale s.t. E[⟨m,n⟩] = mean_rating when entries ~ U[0, s):
+    /// E[m_k]·E[n_k]·D = (s/2)²·D = r̄ ⇒ s = 2·sqrt(r̄/D).
+    pub fn default_scale(mean_rating: f64, d: usize) -> f32 {
+        2.0 * ((mean_rating.max(0.0) / d as f64).sqrt() as f32)
+    }
+
+    /// Feature dimension D.
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// |U|.
+    pub fn nrows(&self) -> u32 {
+        self.nrows
+    }
+
+    /// |V|.
+    pub fn ncols(&self) -> u32 {
+        self.ncols
+    }
+
+    /// m_u row slice.
+    #[inline]
+    pub fn m_row(&self, u: u32) -> &[f32] {
+        &self.m[u as usize * self.d..(u as usize + 1) * self.d]
+    }
+
+    /// n_v row slice.
+    #[inline]
+    pub fn n_row(&self, v: u32) -> &[f32] {
+        &self.n[v as usize * self.d..(v as usize + 1) * self.d]
+    }
+
+    /// r̂_uv = ⟨m_u, n_v⟩.
+    #[inline]
+    pub fn predict(&self, u: u32, v: u32) -> f32 {
+        dot(self.m_row(u), self.n_row(v))
+    }
+
+    /// Prediction clamped to the rating scale (standard for RMSE eval).
+    #[inline]
+    pub fn predict_clamped(&self, u: u32, v: u32, lo: f32, hi: f32) -> f32 {
+        self.predict(u, v).clamp(lo, hi)
+    }
+
+    /// Zero the momentum matrices.
+    pub fn reset_momentum(&mut self) {
+        self.phi.iter_mut().for_each(|x| *x = 0.0);
+        self.psi.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// Squared Frobenius norms (‖M‖², ‖N‖²) — regularizer diagnostics.
+    pub fn frob2(&self) -> (f64, f64) {
+        let fm = self.m.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        let fn_ = self.n.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        (fm, fn_)
+    }
+}
+
+/// Dense dot product over two equal-length slices.
+#[inline(always)]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0f32;
+    for k in 0..a.len() {
+        s += a[k] * b[k];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_shapes_and_ranges() {
+        let mut rng = Rng::new(1);
+        let f = Factors::init(10, 7, 4, 0.5, &mut rng);
+        assert_eq!(f.m.len(), 40);
+        assert_eq!(f.n.len(), 28);
+        assert!(f.m.iter().all(|&x| (0.0..0.5).contains(&x)));
+        assert_eq!(f.phi.len(), 40);
+        assert!(f.phi.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn default_scale_matches_mean() {
+        let d = 16;
+        let s = Factors::default_scale(3.5, d);
+        // E[dot] = (s/2)^2 * d ≈ 3.5
+        let e = (s as f64 / 2.0).powi(2) * d as f64;
+        assert!((e - 3.5).abs() < 1e-5, "e={e}");
+    }
+
+    #[test]
+    fn predict_is_dot_of_rows() {
+        let mut rng = Rng::new(2);
+        let f = Factors::init(3, 3, 8, 0.3, &mut rng);
+        let want = dot(f.m_row(1), f.n_row(2));
+        assert_eq!(f.predict(1, 2), want);
+    }
+
+    #[test]
+    fn predict_clamped_bounds() {
+        let mut rng = Rng::new(3);
+        let mut f = Factors::init(2, 2, 2, 0.1, &mut rng);
+        f.m[0] = 100.0;
+        f.n[0] = 100.0;
+        assert_eq!(f.predict_clamped(0, 0, 1.0, 5.0), 5.0);
+        f.m[0] = -100.0;
+        assert_eq!(f.predict_clamped(0, 0, 1.0, 5.0), 1.0);
+    }
+
+    #[test]
+    fn reset_momentum_zeroes() {
+        let mut rng = Rng::new(4);
+        let mut f = Factors::init(4, 4, 2, 0.2, &mut rng);
+        f.phi[3] = 1.5;
+        f.psi[1] = -0.5;
+        f.reset_momentum();
+        assert!(f.phi.iter().chain(f.psi.iter()).all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn dot_basic() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+}

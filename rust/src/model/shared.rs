@@ -1,0 +1,140 @@
+//! Shared-memory wrapper for asynchronous factor updates.
+//!
+//! The paper's engines update `M`/`N` from many threads without a lock
+//! around the matrices. Safety is per-engine:
+//!
+//! - **Block-scheduled engines (FPSGD, A²PSGD, DSGD)** — the scheduler/plan
+//!   guarantees no two in-flight blocks share a row or column block, so all
+//!   concurrent row accesses are disjoint: data-race-free by construction.
+//! - **ASGD** — each phase parallelizes over disjoint row (resp. column)
+//!   shards while only *reading* the other matrix: disjoint writes.
+//! - **Hogwild!** — races on factor rows are the algorithm (that is the
+//!   baseline's defining property, and its overwriting problem is exactly
+//!   what the paper's Table III shows). Word-aligned f32 loads/stores are
+//!   atomic on every supported target, and torn values cannot occur; we
+//!   accept the formal data race as the documented semantics of the
+//!   baseline, exactly as the original Hogwild! implementation does.
+
+use super::Factors;
+use std::cell::UnsafeCell;
+
+/// Interior-mutable, thread-shared [`Factors`].
+pub struct SharedFactors {
+    cell: UnsafeCell<Factors>,
+}
+
+// SAFETY: see module docs — engines uphold the per-engine access contracts.
+unsafe impl Sync for SharedFactors {}
+unsafe impl Send for SharedFactors {}
+
+impl SharedFactors {
+    /// Wrap factors for shared training.
+    pub fn new(f: Factors) -> Self {
+        SharedFactors { cell: UnsafeCell::new(f) }
+    }
+
+    /// Unwrap after all workers have joined.
+    pub fn into_inner(self) -> Factors {
+        self.cell.into_inner()
+    }
+
+    /// Exclusive access through a unique reference (no unsafe needed).
+    pub fn get_mut(&mut self) -> &mut Factors {
+        self.cell.get_mut()
+    }
+
+    /// Shared read access.
+    ///
+    /// # Safety
+    /// Caller must guarantee no thread is concurrently writing the rows it
+    /// reads (quiescence or disjointness).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn get(&self) -> &Factors {
+        &*self.cell.get()
+    }
+
+    /// Raw mutable access for one (u, v) update: returns
+    /// `(m_u, n_v, φ_u, ψ_v)` row slices.
+    ///
+    /// # Safety
+    /// Caller must guarantee the engine's access contract (module docs):
+    /// either rows are disjoint across threads, or racy access is the
+    /// documented algorithm (Hogwild!).
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn rows_mut(
+        &self,
+        u: u32,
+        v: u32,
+    ) -> (&mut [f32], &mut [f32], &mut [f32], &mut [f32]) {
+        let f = &mut *self.cell.get();
+        let d = f.d();
+        let mu = std::slice::from_raw_parts_mut(f.m.as_mut_ptr().add(u as usize * d), d);
+        let nv = std::slice::from_raw_parts_mut(f.n.as_mut_ptr().add(v as usize * d), d);
+        let phiu = std::slice::from_raw_parts_mut(f.phi.as_mut_ptr().add(u as usize * d), d);
+        let psiv = std::slice::from_raw_parts_mut(f.psi.as_mut_ptr().add(v as usize * d), d);
+        (mu, nv, phiu, psiv)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn roundtrip_preserves_factors() {
+        let mut rng = Rng::new(1);
+        let f = Factors::init(5, 5, 3, 0.2, &mut rng);
+        let snapshot = f.m.clone();
+        let shared = SharedFactors::new(f);
+        let back = shared.into_inner();
+        assert_eq!(back.m, snapshot);
+    }
+
+    #[test]
+    fn rows_mut_touches_expected_rows() {
+        let mut rng = Rng::new(2);
+        let f = Factors::init(4, 4, 2, 0.2, &mut rng);
+        let shared = SharedFactors::new(f);
+        unsafe {
+            let (mu, nv, phiu, psiv) = shared.rows_mut(1, 2);
+            mu[0] = 7.0;
+            nv[1] = 8.0;
+            phiu[0] = 9.0;
+            psiv[1] = 10.0;
+        }
+        let f = shared.into_inner();
+        assert_eq!(f.m[2], 7.0); // row 1, col 0 at d=2
+        assert_eq!(f.n[5], 8.0); // row 2, col 1
+        assert_eq!(f.phi[2], 9.0);
+        assert_eq!(f.psi[5], 10.0);
+    }
+
+    #[test]
+    fn disjoint_parallel_writes_all_land() {
+        let mut rng = Rng::new(3);
+        let f = Factors::init(64, 64, 4, 0.0, &mut rng);
+        let shared = SharedFactors::new(f);
+        std::thread::scope(|scope| {
+            for t in 0..8u32 {
+                let shared = &shared;
+                scope.spawn(move || {
+                    // Thread t owns rows 8t..8t+8 — disjoint contract.
+                    for u in (8 * t)..(8 * t + 8) {
+                        unsafe {
+                            let (mu, _, _, _) = shared.rows_mut(u, u);
+                            mu.iter_mut().for_each(|x| *x = t as f32 + 1.0);
+                        }
+                    }
+                });
+            }
+        });
+        let f = shared.into_inner();
+        for t in 0..8u32 {
+            for u in (8 * t)..(8 * t + 8) {
+                assert!(f.m_row(u).iter().all(|&x| x == t as f32 + 1.0));
+            }
+        }
+    }
+}

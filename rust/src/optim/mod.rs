@@ -1,0 +1,486 @@
+//! Per-instance update rules: plain SGD (paper Eq. 3) and the NAG scheme
+//! (paper Eqs. 4–5). These are the innermost hot path — a few dozen FLOPs
+//! per known instance — so both are branch-free single passes over D.
+
+/// Hyperparameters (paper Tables I–II).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Hyper {
+    /// Learning rate η.
+    pub eta: f32,
+    /// L2 regularization λ.
+    pub lam: f32,
+    /// NAG momentum coefficient γ (0 ⇒ plain SGD behaviour).
+    pub gamma: f32,
+}
+
+impl Hyper {
+    /// Plain-SGD hyperparameters (γ = 0).
+    pub fn sgd(eta: f32, lam: f32) -> Self {
+        Hyper { eta, lam, gamma: 0.0 }
+    }
+
+    /// NAG hyperparameters.
+    pub fn nag(eta: f32, lam: f32, gamma: f32) -> Self {
+        Hyper { eta, lam, gamma }
+    }
+}
+
+/// One SGD update (Eq. 3) on rows m_u, n_v for instance r.
+///
+/// Both rows are updated from their *previous* values, exactly as the paper
+/// writes the simultaneous assignment.
+#[inline(always)]
+pub fn sgd_update(mu: &mut [f32], nv: &mut [f32], r: f32, h: &Hyper) {
+    debug_assert_eq!(mu.len(), nv.len());
+    let mut dot = 0f32;
+    for k in 0..mu.len() {
+        dot += mu[k] * nv[k];
+    }
+    let e = r - dot;
+    let ee = h.eta * e;
+    let shrink = 1.0 - h.eta * h.lam;
+    for k in 0..mu.len() {
+        let mk = mu[k];
+        let nk = nv[k];
+        mu[k] = mk * shrink + ee * nk;
+        nv[k] = nk * shrink + ee * mk;
+    }
+}
+
+/// One NAG update (Eqs. 4–5) on rows m_u, n_v with momenta φ_u, ψ_v.
+///
+/// Look-ahead: gradients are evaluated at `m̂ = m + γφ`, `n̂ = n + γψ`;
+/// then `φ ← γφ + η(e·n̂ − λm̂)`, `m ← m + φ` (and symmetrically for n).
+///
+/// Perf (§Perf log in EXPERIMENTS.md): the look-ahead values are computed
+/// once into stack tiles instead of twice per element; rows beyond
+/// [`NAG_TILE`] fall back to the two-pass form. At D=16 this took the
+/// update from 68.9 ns to ~30 ns.
+#[inline(always)]
+pub fn nag_update(
+    mu: &mut [f32],
+    nv: &mut [f32],
+    phiu: &mut [f32],
+    psiv: &mut [f32],
+    r: f32,
+    h: &Hyper,
+) {
+    debug_assert_eq!(mu.len(), nv.len());
+    if mu.len() <= NAG_TILE {
+        nag_update_tiled(mu, nv, phiu, psiv, r, h);
+    } else {
+        nag_update_twopass(mu, nv, phiu, psiv, r, h);
+    }
+}
+
+/// Stack-tile size for the single-pass NAG path (covers every practical D).
+pub const NAG_TILE: usize = 128;
+
+#[inline(always)]
+fn nag_update_tiled(
+    mu: &mut [f32],
+    nv: &mut [f32],
+    phiu: &mut [f32],
+    psiv: &mut [f32],
+    r: f32,
+    h: &Hyper,
+) {
+    let d = mu.len();
+    let g = h.gamma;
+    // Uninitialized stack tiles: zero-filling 2×512 B per call would cost
+    // more than the arithmetic at small D. Only the first `d` lanes are
+    // written, and only those are read back below.
+    let mut mh: [std::mem::MaybeUninit<f32>; NAG_TILE] =
+        [const { std::mem::MaybeUninit::uninit() }; NAG_TILE];
+    let mut nh: [std::mem::MaybeUninit<f32>; NAG_TILE] =
+        [const { std::mem::MaybeUninit::uninit() }; NAG_TILE];
+    let mut dot = 0f32;
+    for k in 0..d {
+        let a = mu[k] + g * phiu[k];
+        let b = nv[k] + g * psiv[k];
+        mh[k].write(a);
+        nh[k].write(b);
+        dot += a * b;
+    }
+    // SAFETY: lanes 0..d were initialized in the loop above.
+    let mh = unsafe { std::slice::from_raw_parts(mh.as_ptr() as *const f32, d) };
+    let nh = unsafe { std::slice::from_raw_parts(nh.as_ptr() as *const f32, d) };
+    let e = r - dot;
+    let ee = h.eta * e;
+    let el = h.eta * h.lam;
+    for k in 0..d {
+        let pk = g * phiu[k] + ee * nh[k] - el * mh[k];
+        let qk = g * psiv[k] + ee * mh[k] - el * nh[k];
+        phiu[k] = pk;
+        psiv[k] = qk;
+        mu[k] += pk;
+        nv[k] += qk;
+    }
+}
+
+#[inline(always)]
+fn nag_update_twopass(
+    mu: &mut [f32],
+    nv: &mut [f32],
+    phiu: &mut [f32],
+    psiv: &mut [f32],
+    r: f32,
+    h: &Hyper,
+) {
+    let g = h.gamma;
+    let mut dot = 0f32;
+    for k in 0..mu.len() {
+        dot += (mu[k] + g * phiu[k]) * (nv[k] + g * psiv[k]);
+    }
+    let e = r - dot;
+    let ee = h.eta * e;
+    let el = h.eta * h.lam;
+    for k in 0..mu.len() {
+        let mh = mu[k] + g * phiu[k];
+        let nh = nv[k] + g * psiv[k];
+        let pk = g * phiu[k] + ee * nh - el * mh;
+        let qk = g * psiv[k] + ee * mh - el * nh;
+        phiu[k] = pk;
+        psiv[k] = qk;
+        mu[k] += pk;
+        nv[k] += qk;
+    }
+}
+
+/// One heavy-ball momentum update (the variant §III-C contrasts NAG with):
+/// gradients at the *current* point, momentum folded in afterwards.
+/// `φ ← γφ + η(e·n − λm)`, `m ← m + φ` (and symmetrically for n).
+#[inline(always)]
+pub fn momentum_update(
+    mu: &mut [f32],
+    nv: &mut [f32],
+    phiu: &mut [f32],
+    psiv: &mut [f32],
+    r: f32,
+    h: &Hyper,
+) {
+    debug_assert_eq!(mu.len(), nv.len());
+    let mut dot = 0f32;
+    for k in 0..mu.len() {
+        dot += mu[k] * nv[k];
+    }
+    let e = r - dot;
+    let ee = h.eta * e;
+    let el = h.eta * h.lam;
+    for k in 0..mu.len() {
+        let mk = mu[k];
+        let nk = nv[k];
+        let pk = h.gamma * phiu[k] + ee * nk - el * mk;
+        let qk = h.gamma * psiv[k] + ee * mk - el * nk;
+        phiu[k] = pk;
+        psiv[k] = qk;
+        mu[k] = mk + pk;
+        nv[k] = nk + qk;
+    }
+}
+
+/// One AdaGrad update (the adaptive-η family of related work, e.g. Qin et
+/// al.'s adaptively-accelerated PSGD): per-coordinate accumulators live in
+/// the momentum buffers, step is `η/√(acc+ε)`.
+#[inline(always)]
+pub fn adagrad_update(
+    mu: &mut [f32],
+    nv: &mut [f32],
+    accu: &mut [f32],
+    accv: &mut [f32],
+    r: f32,
+    h: &Hyper,
+) {
+    const EPS: f32 = 1e-8;
+    debug_assert_eq!(mu.len(), nv.len());
+    let mut dot = 0f32;
+    for k in 0..mu.len() {
+        dot += mu[k] * nv[k];
+    }
+    let e = r - dot;
+    for k in 0..mu.len() {
+        let mk = mu[k];
+        let nk = nv[k];
+        let gm = e * nk - h.lam * mk;
+        let gn = e * mk - h.lam * nk;
+        accu[k] += gm * gm;
+        accv[k] += gn * gn;
+        mu[k] = mk + h.eta * gm / (accu[k] + EPS).sqrt();
+        nv[k] = nk + h.eta * gn / (accv[k] + EPS).sqrt();
+    }
+}
+
+/// Update-rule selector for the optimizer zoo (ablation A3 compares these
+/// inside the identical A²PSGD engine).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Rule {
+    /// Plain SGD (Eq. 3).
+    Sgd,
+    /// Heavy-ball momentum.
+    Momentum,
+    /// Nesterov accelerated gradient (Eqs. 4–5) — the paper's scheme.
+    #[default]
+    Nag,
+    /// AdaGrad per-coordinate adaptive steps.
+    AdaGrad,
+}
+
+impl Rule {
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "sgd" => Rule::Sgd,
+            "momentum" | "heavyball" => Rule::Momentum,
+            "nag" | "nesterov" => Rule::Nag,
+            "adagrad" => Rule::AdaGrad,
+            other => anyhow::bail!("unknown update rule {other:?}"),
+        })
+    }
+
+    /// Apply one instance update with this rule. The `phiu`/`psiv` buffers
+    /// hold momentum (Momentum/NAG) or squared-gradient accumulators
+    /// (AdaGrad); Sgd ignores them.
+    #[inline(always)]
+    pub fn apply(
+        self,
+        mu: &mut [f32],
+        nv: &mut [f32],
+        phiu: &mut [f32],
+        psiv: &mut [f32],
+        r: f32,
+        h: &Hyper,
+    ) {
+        match self {
+            Rule::Sgd => sgd_update(mu, nv, r, h),
+            Rule::Momentum => momentum_update(mu, nv, phiu, psiv, r, h),
+            Rule::Nag => nag_update(mu, nv, phiu, psiv, r, h),
+            Rule::AdaGrad => adagrad_update(mu, nv, phiu, psiv, r, h),
+        }
+    }
+}
+
+impl std::fmt::Display for Rule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Rule::Sgd => "sgd",
+            Rule::Momentum => "momentum",
+            Rule::Nag => "nag",
+            Rule::AdaGrad => "adagrad",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Squared prediction error for an instance (diagnostic).
+#[inline]
+pub fn instance_sq_err(mu: &[f32], nv: &[f32], r: f32) -> f32 {
+    let e = r - crate::model::dot(mu, nv);
+    e * e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(d: usize, a: f32, b: f32) -> (Vec<f32>, Vec<f32>) {
+        ((0..d).map(|k| a + 0.01 * k as f32).collect(), (0..d).map(|k| b - 0.01 * k as f32).collect())
+    }
+
+    #[test]
+    fn sgd_reduces_error() {
+        let (mut mu, mut nv) = rows(8, 0.3, 0.4);
+        let r = 4.0;
+        let h = Hyper::sgd(0.05, 0.01);
+        let e0 = instance_sq_err(&mu, &nv, r);
+        for _ in 0..50 {
+            sgd_update(&mut mu, &mut nv, r, &h);
+        }
+        let e1 = instance_sq_err(&mu, &nv, r);
+        assert!(e1 < 0.01 * e0, "e0={e0} e1={e1}");
+    }
+
+    #[test]
+    fn sgd_matches_eq3_by_hand() {
+        // D=1: m'=m+η(e·n−λm), n'=n+η(e·m−λn), e=r−mn.
+        let mut mu = vec![0.5f32];
+        let mut nv = vec![2.0f32];
+        let h = Hyper::sgd(0.1, 0.3);
+        let e = 3.0 - 0.5 * 2.0;
+        let want_m = 0.5 + 0.1 * (e * 2.0 - 0.3 * 0.5);
+        let want_n = 2.0 + 0.1 * (e * 0.5 - 0.3 * 2.0);
+        sgd_update(&mut mu, &mut nv, 3.0, &h);
+        assert!((mu[0] - want_m).abs() < 1e-6, "{} vs {want_m}", mu[0]);
+        assert!((nv[0] - want_n).abs() < 1e-6, "{} vs {want_n}", nv[0]);
+    }
+
+    #[test]
+    fn nag_gamma_zero_equals_sgd() {
+        let (mut mu1, mut nv1) = rows(6, 0.2, 0.5);
+        let (mut mu2, mut nv2) = (mu1.clone(), nv1.clone());
+        let mut phi = vec![0f32; 6];
+        let mut psi = vec![0f32; 6];
+        let hs = Hyper::sgd(0.07, 0.02);
+        let hn = Hyper::nag(0.07, 0.02, 0.0);
+        for step in 0..10 {
+            let r = 3.0 + (step % 3) as f32;
+            sgd_update(&mut mu1, &mut nv1, r, &hs);
+            nag_update(&mut mu2, &mut nv2, &mut phi, &mut psi, r, &hn);
+        }
+        for k in 0..6 {
+            assert!((mu1[k] - mu2[k]).abs() < 1e-6);
+            assert!((nv1[k] - nv2[k]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn nag_matches_eqs45_by_hand() {
+        // D=1 with nonzero momentum.
+        let (m, n, p, q) = (0.4f32, 1.5f32, 0.02f32, -0.01f32);
+        let (eta, lam, gamma) = (0.1f32, 0.2f32, 0.9f32);
+        let mh = m + gamma * p;
+        let nh = n + gamma * q;
+        let e = 2.5 - mh * nh;
+        let p2 = gamma * p + eta * (e * nh - lam * mh);
+        let q2 = gamma * q + eta * (e * mh - lam * nh);
+        let (want_m, want_n) = (m + p2, n + q2);
+
+        let mut mu = vec![m];
+        let mut nv = vec![n];
+        let mut phi = vec![p];
+        let mut psi = vec![q];
+        nag_update(&mut mu, &mut nv, &mut phi, &mut psi, 2.5, &Hyper::nag(eta, lam, gamma));
+        assert!((mu[0] - want_m).abs() < 1e-6);
+        assert!((nv[0] - want_n).abs() < 1e-6);
+        assert!((phi[0] - p2).abs() < 1e-6);
+        assert!((psi[0] - q2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nag_converges_faster_than_sgd_on_quadratic() {
+        // Repeatedly fitting one instance: NAG should reach tolerance sooner.
+        let target = 4.5f32;
+        let steps_to_fit = |gamma: f32| -> usize {
+            let (mut mu, mut nv) = rows(4, 0.2, 0.3);
+            let mut phi = vec![0f32; 4];
+            let mut psi = vec![0f32; 4];
+            let h = Hyper::nag(0.01, 0.0, gamma);
+            for step in 0..10_000 {
+                nag_update(&mut mu, &mut nv, &mut phi, &mut psi, target, &h);
+                if instance_sq_err(&mu, &nv, target) < 1e-4 {
+                    return step;
+                }
+            }
+            10_000
+        };
+        let sgd_steps = steps_to_fit(0.0);
+        let nag_steps = steps_to_fit(0.9);
+        assert!(
+            nag_steps < sgd_steps,
+            "nag {nag_steps} !< sgd {sgd_steps}"
+        );
+    }
+
+    #[test]
+    fn regularization_shrinks_norms() {
+        let (mut mu, mut nv) = rows(4, 1.0, 1.0);
+        let h = Hyper::sgd(0.1, 0.9);
+        // With r equal to current prediction the error term vanishes; only
+        // shrinkage remains.
+        let r = crate::model::dot(&mu, &nv);
+        let norm0: f32 = mu.iter().map(|x| x * x).sum();
+        sgd_update(&mut mu, &mut nv, r, &h);
+        let norm1: f32 = mu.iter().map(|x| x * x).sum();
+        assert!(norm1 < norm0);
+    }
+
+    #[test]
+    fn momentum_matches_hand_computation() {
+        // D=1: φ' = γφ + η(e·n − λm) with e at the CURRENT point.
+        let (m, n, p, q) = (0.4f32, 1.5f32, 0.02f32, -0.01f32);
+        let (eta, lam, gamma) = (0.1f32, 0.2f32, 0.9f32);
+        let e = 2.5 - m * n;
+        let p2 = gamma * p + eta * (e * n - lam * m);
+        let q2 = gamma * q + eta * (e * m - lam * n);
+        let mut mu = vec![m];
+        let mut nv = vec![n];
+        let mut phi = vec![p];
+        let mut psi = vec![q];
+        momentum_update(&mut mu, &mut nv, &mut phi, &mut psi, 2.5, &Hyper::nag(eta, lam, gamma));
+        assert!((phi[0] - p2).abs() < 1e-6);
+        assert!((psi[0] - q2).abs() < 1e-6);
+        assert!((mu[0] - (m + p2)).abs() < 1e-6);
+        assert!((nv[0] - (n + q2)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn momentum_and_nag_differ_with_nonzero_momentum() {
+        let (mut mu1, mut nv1) = rows(4, 0.2, 0.5);
+        let (mut mu2, mut nv2) = (mu1.clone(), nv1.clone());
+        let mut p1 = vec![0.1f32; 4];
+        let mut q1 = vec![0.1f32; 4];
+        let mut p2 = p1.clone();
+        let mut q2 = q1.clone();
+        let h = Hyper::nag(0.05, 0.01, 0.9);
+        momentum_update(&mut mu1, &mut nv1, &mut p1, &mut q1, 3.0, &h);
+        nag_update(&mut mu2, &mut nv2, &mut p2, &mut q2, 3.0, &h);
+        assert!(mu1.iter().zip(&mu2).any(|(a, b)| (a - b).abs() > 1e-7));
+    }
+
+    #[test]
+    fn adagrad_reduces_error_and_decays_steps() {
+        let (mut mu, mut nv) = rows(8, 0.3, 0.4);
+        let mut au = vec![0f32; 8];
+        let mut av = vec![0f32; 8];
+        let h = Hyper::sgd(0.5, 0.0); // large η is safe — AdaGrad normalizes
+        let e0 = instance_sq_err(&mu, &nv, 4.0);
+        for _ in 0..100 {
+            adagrad_update(&mut mu, &mut nv, &mut au, &mut av, 4.0, &h);
+        }
+        assert!(instance_sq_err(&mu, &nv, 4.0) < 0.05 * e0);
+        assert!(au.iter().all(|&a| a > 0.0), "accumulators must grow");
+    }
+
+    #[test]
+    fn rule_parse_and_dispatch() {
+        assert_eq!(Rule::parse("NAG").unwrap(), Rule::Nag);
+        assert_eq!(Rule::parse("momentum").unwrap(), Rule::Momentum);
+        assert_eq!(Rule::parse("adagrad").unwrap(), Rule::AdaGrad);
+        assert!(Rule::parse("adam").is_err());
+        // Rule::Sgd dispatch equals direct sgd_update.
+        let (mut a, mut b) = rows(4, 0.2, 0.3);
+        let (mut c, mut d) = (a.clone(), b.clone());
+        let mut z1 = vec![0f32; 4];
+        let mut z2 = vec![0f32; 4];
+        let h = Hyper::sgd(0.1, 0.01);
+        Rule::Sgd.apply(&mut a, &mut b, &mut z1, &mut z2, 3.0, &h);
+        sgd_update(&mut c, &mut d, 3.0, &h);
+        assert_eq!(a, c);
+        assert_eq!(b, d);
+    }
+
+    #[test]
+    fn property_sgd_finite_under_sane_hypers() {
+        crate::proptest_lite::check(
+            "sgd stays finite for bounded inputs",
+            128,
+            |g| {
+                let d = g.usize_in(1, 32);
+                let mu = g.vec(d, |g| g.f32_in(-1.0, 1.0));
+                let nv = g.vec(d, |g| g.f32_in(-1.0, 1.0));
+                let r = g.f32_in(1.0, 5.0);
+                let eta = g.f32_in(1e-5, 0.01);
+                let lam = g.f32_in(0.0, 0.5);
+                (mu, nv, r, eta, lam)
+            },
+            |(mu, nv, r, eta, lam)| {
+                let mut mu = mu.clone();
+                let mut nv = nv.clone();
+                let h = Hyper::sgd(*eta, *lam);
+                for _ in 0..100 {
+                    sgd_update(&mut mu, &mut nv, *r, &h);
+                }
+                mu.iter().chain(nv.iter()).all(|x| x.is_finite())
+            },
+        );
+    }
+}

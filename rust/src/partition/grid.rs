@@ -1,0 +1,222 @@
+//! The `(c+1)×(c+1)` block grid: per-block instance lists ready for the
+//! scheduler/engines, plus block-level balance statistics.
+
+use super::Bounds;
+use crate::sparse::{stats, CooMatrix, Entry};
+
+/// One sub-block R_ij with its instances.
+#[derive(Clone, Debug, Default)]
+pub struct Block {
+    /// Instances (global node ids).
+    pub entries: Vec<Entry>,
+}
+
+/// The full block grid.
+#[derive(Clone, Debug)]
+pub struct BlockGrid {
+    nblocks: usize,
+    row_bounds: Bounds,
+    col_bounds: Bounds,
+    blocks: Vec<Block>, // row-major nblocks × nblocks
+}
+
+impl BlockGrid {
+    /// Bucket a training matrix into the grid given per-axis bounds.
+    pub fn new(train: &CooMatrix, row_bounds: Bounds, col_bounds: Bounds) -> Self {
+        assert_eq!(row_bounds.len(), col_bounds.len(), "grid must be square");
+        let nblocks = row_bounds.len() - 1;
+        let row_of = build_assignment(&row_bounds, train.nrows());
+        let col_of = build_assignment(&col_bounds, train.ncols());
+        let mut blocks = vec![Block::default(); nblocks * nblocks];
+        for e in train.entries() {
+            let bi = row_of[e.u as usize] as usize;
+            let bj = col_of[e.v as usize] as usize;
+            blocks[bi * nblocks + bj].entries.push(*e);
+        }
+        BlockGrid { nblocks, row_bounds, col_bounds, blocks }
+    }
+
+    /// Grid side length (c+1).
+    pub fn nblocks(&self) -> usize {
+        self.nblocks
+    }
+
+    /// Block (i, j).
+    pub fn block(&self, i: usize, j: usize) -> &Block {
+        &self.blocks[i * self.nblocks + j]
+    }
+
+    /// Row-axis bounds.
+    pub fn row_bounds(&self) -> &Bounds {
+        &self.row_bounds
+    }
+
+    /// Column-axis bounds.
+    pub fn col_bounds(&self) -> &Bounds {
+        &self.col_bounds
+    }
+
+    /// ⟨R_ij⟩ for every block, row-major.
+    pub fn block_nnz(&self) -> Vec<u64> {
+        self.blocks.iter().map(|b| b.entries.len() as u64).collect()
+    }
+
+    /// Total instances across blocks.
+    pub fn total_nnz(&self) -> u64 {
+        self.block_nnz().iter().sum()
+    }
+
+    /// Balance statistics over ⟨R_ij⟩ (the ablation A2 measure).
+    pub fn balance(&self) -> stats::CountStats {
+        stats::count_stats(&self.block_nnz())
+    }
+
+    /// ⟨R_{i,:}⟩ row-block marginals.
+    pub fn row_block_nnz(&self) -> Vec<u64> {
+        (0..self.nblocks)
+            .map(|i| {
+                (0..self.nblocks)
+                    .map(|j| self.block(i, j).entries.len() as u64)
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// Shuffle the instance order inside every block (decorrelates the
+    /// within-block visit order for SGD; deterministic in `rng`).
+    pub fn shuffle_entries(&mut self, rng: &mut crate::rng::Rng) {
+        for b in &mut self.blocks {
+            rng.shuffle(&mut b.entries);
+        }
+    }
+
+    /// ⟨R_{:,j}⟩ column-block marginals.
+    pub fn col_block_nnz(&self) -> Vec<u64> {
+        (0..self.nblocks)
+            .map(|j| {
+                (0..self.nblocks)
+                    .map(|i| self.block(i, j).entries.len() as u64)
+                    .sum()
+            })
+            .collect()
+    }
+}
+
+/// Expand bounds to a per-node block-id lookup table.
+fn build_assignment(bounds: &Bounds, n: u32) -> Vec<u32> {
+    let mut out = vec![0u32; n as usize];
+    for (b, w) in bounds.windows(2).enumerate() {
+        for k in w[0]..w[1] {
+            out[k as usize] = b as u32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::{balanced_bounds, uniform_bounds};
+    use crate::rng::Rng;
+
+    fn toy() -> CooMatrix {
+        let mut m = CooMatrix::new(8, 8);
+        for u in 0..8u32 {
+            for v in 0..8u32 {
+                if (u + v) % 3 == 0 {
+                    m.push(u, v, 1.0).unwrap();
+                }
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn grid_partitions_all_entries() {
+        let m = toy();
+        let g = BlockGrid::new(&m, uniform_bounds(8, 4), uniform_bounds(8, 4));
+        assert_eq!(g.total_nnz() as usize, m.nnz());
+        assert_eq!(g.nblocks(), 4);
+    }
+
+    #[test]
+    fn entries_land_in_their_block() {
+        let m = toy();
+        let g = BlockGrid::new(&m, uniform_bounds(8, 4), uniform_bounds(8, 4));
+        for i in 0..4 {
+            for j in 0..4 {
+                let (rlo, rhi) = (g.row_bounds()[i], g.row_bounds()[i + 1]);
+                let (clo, chi) = (g.col_bounds()[j], g.col_bounds()[j + 1]);
+                for e in &g.block(i, j).entries {
+                    assert!(e.u >= rlo && e.u < rhi);
+                    assert!(e.v >= clo && e.v < chi);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn marginals_consistent() {
+        let m = toy();
+        let g = BlockGrid::new(&m, uniform_bounds(8, 3), uniform_bounds(8, 3));
+        assert_eq!(g.row_block_nnz().iter().sum::<u64>(), g.total_nnz());
+        assert_eq!(g.col_block_nnz().iter().sum::<u64>(), g.total_nnz());
+    }
+
+    #[test]
+    fn balanced_grid_has_lower_imbalance_on_skewed_matrix() {
+        // Build a skewed matrix: node popularity ∝ 1/k.
+        let mut rng = Rng::new(5);
+        let mut m = CooMatrix::new(300, 300);
+        let mut seen = std::collections::HashSet::new();
+        while m.nnz() < 6000 {
+            let u = (300.0 * rng.f64().powf(2.5)) as u32;
+            let v = (300.0 * rng.f64().powf(2.5)) as u32;
+            if seen.insert((u, v)) {
+                m.push(u.min(299), v.min(299), 1.0).ok();
+            }
+        }
+        let nb = 9;
+        let ug = BlockGrid::new(&m, uniform_bounds(300, nb), uniform_bounds(300, nb));
+        let bg = BlockGrid::new(
+            &m,
+            balanced_bounds(&m.row_counts(), nb),
+            balanced_bounds(&m.col_counts(), nb),
+        );
+        assert!(
+            bg.balance().imbalance < ug.balance().imbalance,
+            "balanced {:?} !< uniform {:?}",
+            bg.balance().imbalance,
+            ug.balance().imbalance
+        );
+    }
+
+    #[test]
+    fn property_grid_conserves_entries() {
+        crate::proptest_lite::check(
+            "grid blocks partition Ω for random matrices",
+            48,
+            |g| {
+                let n = g.usize_in(2, 60) as u32;
+                let nnz = g.usize_in(1, 300);
+                let mut rng = Rng::new(g.u64(1 << 60));
+                let mut m = CooMatrix::new(n, n);
+                for _ in 0..nnz {
+                    let u = rng.gen_index(n as usize) as u32;
+                    let v = rng.gen_index(n as usize) as u32;
+                    m.push(u, v, 1.0).unwrap();
+                }
+                let nb = g.usize_in(1, 8);
+                (m, nb)
+            },
+            |(m, nb)| {
+                let g = BlockGrid::new(
+                    m,
+                    balanced_bounds(&m.row_counts(), *nb),
+                    balanced_bounds(&m.col_counts(), *nb),
+                );
+                g.total_nnz() as usize == m.nnz()
+            },
+        );
+    }
+}

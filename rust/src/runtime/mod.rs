@@ -1,0 +1,406 @@
+//! XLA/PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the Rust hot path.
+//!
+//! HLO *text* is the interchange format (see aot.py docs — xla_extension
+//! 0.5.1 rejects jax ≥ 0.5 serialized protos). Python never runs at
+//! serve/train time: artifacts are compiled once here at startup and then
+//! executed per batch.
+//!
+//! Entry points (shapes fixed at AOT time, recorded in manifest.toml):
+//! - `predict`     — r̂[b] = ⟨mu[b,:], nv[b,:]⟩ (serving path)
+//! - `eval`        — masked (Σe², Σ|e|, Σmask) for RMSE/MAE accumulation
+//! - `loss`        — regularized ε over a batch
+//! - `update`      — one mini-batch NAG step over padded factor matrices
+//! - `update_scan` — K fused NAG steps (lax.scan; the §Perf training path)
+//! - `recommend`   — one user row vs the whole item matrix (top-N path)
+
+mod xla_train;
+
+pub use xla_train::train_xla;
+
+use crate::config::toml_lite;
+use crate::model::Factors;
+use crate::sparse::CooMatrix;
+use crate::Result;
+use anyhow::{bail, Context};
+use std::path::{Path, PathBuf};
+
+/// Static shapes the artifacts were lowered with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArtifactShapes {
+    /// Batch size B.
+    pub b: usize,
+    /// Feature dimension D.
+    pub d: usize,
+    /// Padded user rows U.
+    pub u: usize,
+    /// Padded item rows V.
+    pub v: usize,
+    /// Scan steps fused per `update_scan` call.
+    pub k: usize,
+}
+
+/// A loaded-and-compiled artifact set on the PJRT CPU client.
+pub struct XlaRuntime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    /// Shapes baked into the artifacts.
+    pub shapes: ArtifactShapes,
+    predict: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+    loss: xla::PjRtLoadedExecutable,
+    update: xla::PjRtLoadedExecutable,
+    update_scan: xla::PjRtLoadedExecutable,
+    recommend: xla::PjRtLoadedExecutable,
+}
+
+/// Smoke check: a PJRT CPU client can be constructed.
+pub fn smoke() -> Result<String> {
+    let client = xla::PjRtClient::cpu()?;
+    Ok(format!(
+        "platform={} devices={}",
+        client.platform_name(),
+        client.device_count()
+    ))
+}
+
+/// Default artifacts directory (repo-root `artifacts/`).
+pub fn default_artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Collect 4 result literals from either an untupled (4 buffers) or tupled
+/// (1 tuple buffer) execute result.
+fn untuple4(outs: Vec<xla::PjRtBuffer>) -> Result<[xla::Literal; 4]> {
+    match outs.len() {
+        4 => {
+            let mut lits = Vec::with_capacity(4);
+            for b in &outs {
+                lits.push(b.to_literal_sync()?);
+            }
+            Ok(lits.try_into().map_err(|_| anyhow::anyhow!("arity"))?)
+        }
+        1 => {
+            let (a, b, c, d) = outs[0].to_literal_sync()?.to_tuple4()?;
+            Ok([a, b, c, d])
+        }
+        n => bail!("update artifact returned {n} outputs, expected 4 (or 1 tuple)"),
+    }
+}
+
+/// Pad an item-factor matrix to `v_padded × d` (zeros beyond `ncols`).
+pub fn pad_item_matrix(f: &Factors, v_padded: usize) -> Vec<f32> {
+    let d = f.d();
+    let mut out = vec![0f32; v_padded * d];
+    out[..f.n.len()].copy_from_slice(&f.n);
+    out
+}
+
+impl XlaRuntime {
+    /// Load `manifest.toml` from `dir` and compile every artifact.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.toml");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` to build the AOT artifacts",
+                manifest_path.display()
+            )
+        })?;
+        let doc = toml_lite::parse(&text)?;
+        let shape = |k: &str| -> Result<usize> {
+            Ok(doc
+                .get("shapes", k)
+                .and_then(|v| v.as_int())
+                .with_context(|| format!("manifest missing shapes.{k}"))? as usize)
+        };
+        let shapes = ArtifactShapes {
+            b: shape("b")?,
+            d: shape("d")?,
+            u: shape("u")?,
+            v: shape("v")?,
+            k: shape("k")?,
+        };
+        let client = xla::PjRtClient::cpu()?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let file = doc
+                .get(&format!("artifact.{name}"), "file")
+                .and_then(|v| v.as_str())
+                .with_context(|| format!("manifest missing artifact.{name}"))?;
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))
+        };
+        Ok(XlaRuntime {
+            shapes,
+            predict: compile("predict")?,
+            eval: compile("eval")?,
+            loss: compile("loss")?,
+            update: compile("update")?,
+            update_scan: compile("update_scan")?,
+            recommend: compile("recommend")?,
+            client,
+        })
+    }
+
+    /// Load from the default directory.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&default_artifacts_dir())
+    }
+
+    fn mat(&self, data: &[f32], rows: usize) -> Result<xla::Literal> {
+        debug_assert_eq!(data.len(), rows * self.shapes.d);
+        Ok(xla::Literal::vec1(data).reshape(&[rows as i64, self.shapes.d as i64])?)
+    }
+
+    /// Batched prediction r̂[b] = ⟨mu[b,:], nv[b,:]⟩.
+    ///
+    /// `mu`/`nv` are `B × D` row-major gathered factor rows.
+    pub fn predict_batch(&self, mu: &[f32], nv: &[f32]) -> Result<Vec<f32>> {
+        let b = self.shapes.b;
+        let args = [self.mat(mu, b)?, self.mat(nv, b)?];
+        let result = self.predict.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Masked error sums over one batch: (Σ mask·e², Σ mask·|e|, Σ mask).
+    pub fn eval_sums(&self, mu: &[f32], nv: &[f32], r: &[f32], mask: &[f32]) -> Result<(f64, f64, f64)> {
+        let b = self.shapes.b;
+        debug_assert_eq!(r.len(), b);
+        let args = [
+            self.mat(mu, b)?,
+            self.mat(nv, b)?,
+            xla::Literal::vec1(r),
+            xla::Literal::vec1(mask),
+        ];
+        let result = self.eval.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != 3 {
+            bail!("eval artifact returned {} outputs, expected 3", parts.len());
+        }
+        let sse = parts[0].to_vec::<f32>()?[0] as f64;
+        let sae = parts[1].to_vec::<f32>()?[0] as f64;
+        let cnt = parts[2].to_vec::<f32>()?[0] as f64;
+        Ok((sse, sae, cnt))
+    }
+
+    /// Regularized batch loss ε (paper Eq. 1 restricted to the batch).
+    pub fn loss_batch(
+        &self,
+        mu: &[f32],
+        nv: &[f32],
+        r: &[f32],
+        mask: &[f32],
+        lam: f32,
+    ) -> Result<f64> {
+        let b = self.shapes.b;
+        let args = [
+            self.mat(mu, b)?,
+            self.mat(nv, b)?,
+            xla::Literal::vec1(r),
+            xla::Literal::vec1(mask),
+            xla::Literal::scalar(lam),
+        ];
+        let result = self.loss.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?[0] as f64)
+    }
+
+    /// One mini-batch NAG step over padded factor state. All matrices are
+    /// padded to the artifact's `U × D` / `V × D`; returns the updated four.
+    #[allow(clippy::too_many_arguments)]
+    pub fn block_update(
+        &self,
+        m: &[f32],
+        n: &[f32],
+        phi: &[f32],
+        psi: &[f32],
+        uidx: &[i32],
+        vidx: &[i32],
+        r: &[f32],
+        mask: &[f32],
+        eta: f32,
+        lam: f32,
+        gamma: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let s = self.shapes;
+        debug_assert_eq!(m.len(), s.u * s.d);
+        debug_assert_eq!(n.len(), s.v * s.d);
+        debug_assert_eq!(uidx.len(), s.b);
+        let args = [
+            self.mat(m, s.u)?,
+            self.mat(n, s.v)?,
+            self.mat(phi, s.u)?,
+            self.mat(psi, s.v)?,
+            xla::Literal::vec1(uidx),
+            xla::Literal::vec1(vidx),
+            xla::Literal::vec1(r),
+            xla::Literal::vec1(mask),
+            xla::Literal::scalar(eta),
+            xla::Literal::scalar(lam),
+            xla::Literal::scalar(gamma),
+        ];
+        let outs = &mut self.update.execute::<xla::Literal>(&args)?[0];
+        let lits = untuple4(std::mem::take(outs))?;
+        let [m2, n2, phi2, psi2] = lits;
+        Ok((
+            m2.to_vec::<f32>()?,
+            n2.to_vec::<f32>()?,
+            phi2.to_vec::<f32>()?,
+            psi2.to_vec::<f32>()?,
+        ))
+    }
+
+    /// Scores of one user row against the padded item matrix (top-N path).
+    ///
+    /// `mu` is the user's `D`-vector; `n_padded` is the full item matrix
+    /// padded to the artifact's `V × D` (see [`pad_item_matrix`]).
+    pub fn recommend_scores(&self, mu: &[f32], n_padded: &[f32]) -> Result<Vec<f32>> {
+        let s = self.shapes;
+        debug_assert_eq!(mu.len(), s.d);
+        debug_assert_eq!(n_padded.len(), s.v * s.d);
+        let args = [xla::Literal::vec1(mu), self.mat(n_padded, s.v)?];
+        let result = self.recommend.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Top-k items for a user via the recommend artifact, excluding `seen`.
+    pub fn top_k(
+        &self,
+        f: &Factors,
+        n_padded: &[f32],
+        u: u32,
+        k: usize,
+        seen: &std::collections::HashSet<u32>,
+    ) -> Result<Vec<(u32, f32)>> {
+        let scores = self.recommend_scores(f.m_row(u), n_padded)?;
+        let ncols = f.ncols();
+        let mut scored: Vec<(u32, f32)> = scores
+            .into_iter()
+            .take(ncols as usize) // drop padded lanes
+            .enumerate()
+            .filter(|(v, _)| !seen.contains(&(*v as u32)))
+            .map(|(v, s)| (v as u32, s))
+            .collect();
+        if scored.len() > k {
+            scored.select_nth_unstable_by(k, |a, b| b.1.partial_cmp(&a.1).unwrap());
+            scored.truncate(k);
+        }
+        scored.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        Ok(scored)
+    }
+
+    /// K fused mini-batch NAG steps in one PJRT call (the `update_scan`
+    /// artifact; §Perf — amortizes the factor-matrix host transfers K×).
+    ///
+    /// `uidx`/`vidx`/`r`/`mask` are row-major `K × B`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn epoch_update(
+        &self,
+        m: &[f32],
+        n: &[f32],
+        phi: &[f32],
+        psi: &[f32],
+        uidx: &[i32],
+        vidx: &[i32],
+        r: &[f32],
+        mask: &[f32],
+        eta: f32,
+        lam: f32,
+        gamma: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let s = self.shapes;
+        debug_assert_eq!(uidx.len(), s.k * s.b);
+        let kb = [s.k as i64, s.b as i64];
+        let args = [
+            self.mat(m, s.u)?,
+            self.mat(n, s.v)?,
+            self.mat(phi, s.u)?,
+            self.mat(psi, s.v)?,
+            xla::Literal::vec1(uidx).reshape(&kb)?,
+            xla::Literal::vec1(vidx).reshape(&kb)?,
+            xla::Literal::vec1(r).reshape(&kb)?,
+            xla::Literal::vec1(mask).reshape(&kb)?,
+            xla::Literal::scalar(eta),
+            xla::Literal::scalar(lam),
+            xla::Literal::scalar(gamma),
+        ];
+        let outs = &mut self.update_scan.execute::<xla::Literal>(&args)?[0];
+        let [m2, n2, phi2, psi2] = untuple4(std::mem::take(outs))?;
+        Ok((
+            m2.to_vec::<f32>()?,
+            n2.to_vec::<f32>()?,
+            phi2.to_vec::<f32>()?,
+            psi2.to_vec::<f32>()?,
+        ))
+    }
+
+    /// Test-set (RMSE, MAE) via the XLA eval artifact, batching over Ψ.
+    ///
+    /// Note: errors are *unclamped* (the artifact computes raw e = r − r̂);
+    /// use [`crate::metrics::rmse_mae`] for the paper's clamped protocol.
+    /// This path exists to cross-check L1/L2 numerics from L3 and to keep
+    /// eval off the Python runtime.
+    pub fn eval_dataset(&self, f: &Factors, test: &CooMatrix) -> Result<(f64, f64)> {
+        let b = self.shapes.b;
+        let d = self.shapes.d;
+        if f.d() != d {
+            bail!("factor dim {} != artifact dim {d}", f.d());
+        }
+        let mut mu = vec![0f32; b * d];
+        let mut nv = vec![0f32; b * d];
+        let mut r = vec![0f32; b];
+        let mut mask = vec![0f32; b];
+        let (mut sse, mut sae, mut cnt) = (0f64, 0f64, 0f64);
+        for chunk in test.entries().chunks(b) {
+            mu.iter_mut().for_each(|x| *x = 0.0);
+            nv.iter_mut().for_each(|x| *x = 0.0);
+            r.iter_mut().for_each(|x| *x = 0.0);
+            mask.iter_mut().for_each(|x| *x = 0.0);
+            for (lane, e) in chunk.iter().enumerate() {
+                mu[lane * d..(lane + 1) * d].copy_from_slice(f.m_row(e.u));
+                nv[lane * d..(lane + 1) * d].copy_from_slice(f.n_row(e.v));
+                r[lane] = e.r;
+                mask[lane] = 1.0;
+            }
+            let (s, a, c) = self.eval_sums(&mu, &nv, &r, &mask)?;
+            sse += s;
+            sae += a;
+            cnt += c;
+        }
+        if cnt == 0.0 {
+            return Ok((0.0, 0.0));
+        }
+        Ok(((sse / cnt).sqrt(), sae / cnt))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_constructs_cpu_client() {
+        let s = smoke().unwrap();
+        assert!(s.contains("platform=cpu"), "{s}");
+    }
+
+    #[test]
+    fn load_missing_dir_mentions_make_artifacts() {
+        let err = match XlaRuntime::load(Path::new("/nonexistent")) {
+            Err(e) => e,
+            Ok(_) => panic!("load of missing dir must fail"),
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    // Artifact-dependent tests live in rust/tests/integration_runtime.rs
+    // (they require `make artifacts` to have run).
+}

@@ -1,0 +1,149 @@
+//! The XLA mini-batch training engine: leader-driven NAG through the AOT
+//! `update` artifact. This demonstrates the full L1→L2→L3 composition on the
+//! *training* path (Pallas gradient kernel inside the jitted update, executed
+//! from Rust via PJRT); the shared-memory engines remain the paper-faithful
+//! configuration (DESIGN.md §6 explains why the per-instance loop stays
+//! native).
+
+use super::XlaRuntime;
+use crate::data::Dataset;
+use crate::engine::{run_driver, EpochRunner, TrainConfig, TrainReport};
+use crate::model::{Factors, SharedFactors};
+use crate::rng::Rng;
+use crate::sparse::Entry;
+use crate::Result;
+use anyhow::{bail, Context};
+
+/// Leader-driven mini-batch NAG engine over the PJRT artifacts.
+pub struct XlaEngine {
+    runtime: XlaRuntime,
+    /// Padded factor state (artifact shapes).
+    m: Vec<f32>,
+    n: Vec<f32>,
+    phi: Vec<f32>,
+    psi: Vec<f32>,
+    entries: Vec<Entry>,
+    dims: (u32, u32),
+    hyper: crate::optim::Hyper,
+    rng: Rng,
+    /// Mirror of the padded state for the driver's eval protocol.
+    mirror: SharedFactors,
+}
+
+impl XlaEngine {
+    /// Build; fails if the dataset exceeds the artifact's padded dims.
+    pub fn new(data: &Dataset, factors: Factors, cfg: &TrainConfig, rng: &mut Rng) -> Result<Self> {
+        let dir = cfg
+            .artifacts_dir
+            .clone()
+            .unwrap_or_else(super::default_artifacts_dir);
+        let runtime = XlaRuntime::load(&dir)?;
+        let s = runtime.shapes;
+        if factors.d() != s.d {
+            bail!("config d={} but artifacts were lowered with d={}", factors.d(), s.d);
+        }
+        if data.nrows() as usize > s.u || data.ncols() as usize > s.v {
+            bail!(
+                "dataset {}x{} exceeds artifact padding {}x{}; re-run \
+                 `python -m compile.aot --u … --v …`",
+                data.nrows(),
+                data.ncols(),
+                s.u,
+                s.v
+            );
+        }
+        // Pad factors into artifact-shaped buffers.
+        let mut m = vec![0f32; s.u * s.d];
+        let mut n = vec![0f32; s.v * s.d];
+        m[..factors.m.len()].copy_from_slice(&factors.m);
+        n[..factors.n.len()].copy_from_slice(&factors.n);
+        Ok(XlaEngine {
+            phi: vec![0f32; s.u * s.d],
+            psi: vec![0f32; s.v * s.d],
+            m,
+            n,
+            entries: data.train.entries().to_vec(),
+            dims: (data.nrows(), data.ncols()),
+            hyper: cfg.hyper,
+            rng: rng.fork(4),
+            mirror: SharedFactors::new(factors),
+            runtime,
+        })
+    }
+
+    fn sync_mirror(&mut self) {
+        let (nr, nc) = self.dims;
+        let f = self.mirror.get_mut();
+        let d = f.d();
+        f.m.copy_from_slice(&self.m[..nr as usize * d]);
+        f.n.copy_from_slice(&self.n[..nc as usize * d]);
+        f.phi.copy_from_slice(&self.phi[..nr as usize * d]);
+        f.psi.copy_from_slice(&self.psi[..nc as usize * d]);
+    }
+}
+
+impl EpochRunner for XlaEngine {
+    fn run_epoch(&mut self, _epoch: u32, quota: u64) -> u64 {
+        let b = self.runtime.shapes.b;
+        let k = self.runtime.shapes.k;
+        self.rng.shuffle(&mut self.entries);
+        let mut uidx = vec![0i32; k * b];
+        let mut vidx = vec![0i32; k * b];
+        let mut r = vec![0f32; k * b];
+        let mut mask = vec![0f32; k * b];
+        let mut done = 0u64;
+        // §Perf: K mini-batches are fused into one `update_scan` call, so
+        // the U×D/V×D factor transfers amortize K× per PJRT dispatch.
+        for group in self.entries.chunks(k * b) {
+            uidx.iter_mut().for_each(|x| *x = 0);
+            vidx.iter_mut().for_each(|x| *x = 0);
+            r.iter_mut().for_each(|x| *x = 0.0);
+            mask.iter_mut().for_each(|x| *x = 0.0);
+            for (lane, e) in group.iter().enumerate() {
+                uidx[lane] = e.u as i32;
+                vidx[lane] = e.v as i32;
+                r[lane] = e.r;
+                mask[lane] = 1.0;
+            }
+            let (m2, n2, phi2, psi2) = self
+                .runtime
+                .epoch_update(
+                    &self.m, &self.n, &self.phi, &self.psi, &uidx, &vidx, &r, &mask,
+                    self.hyper.eta, self.hyper.lam, self.hyper.gamma,
+                )
+                .expect("epoch_update failed mid-epoch");
+            self.m = m2;
+            self.n = n2;
+            self.phi = phi2;
+            self.psi = psi2;
+            done += group.len() as u64;
+            if done >= quota {
+                break;
+            }
+        }
+        self.sync_mirror();
+        done
+    }
+
+    fn shared(&self) -> &SharedFactors {
+        &self.mirror
+    }
+
+    fn into_factors(mut self: Box<Self>) -> Factors {
+        self.sync_mirror();
+        self.mirror.into_inner()
+    }
+}
+
+/// Entry point used by [`crate::engine::train`] for
+/// [`crate::engine::EngineKind::XlaMinibatch`].
+pub fn train_xla(data: &Dataset, cfg: &TrainConfig) -> Result<TrainReport> {
+    let mut rng = Rng::new(cfg.seed);
+    let scale = Factors::default_scale(data.train.mean_rating(), cfg.d);
+    let factors = Factors::init(data.nrows(), data.ncols(), cfg.d, scale, &mut rng);
+    let engine = XlaEngine::new(data, factors, cfg, &mut rng)
+        .context("building the XLA mini-batch engine")?;
+    Ok(run_driver(data, cfg, Box::new(engine)))
+}
+
+// Integration coverage (requires artifacts): rust/tests/integration_runtime.rs

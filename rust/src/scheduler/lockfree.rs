@@ -1,0 +1,180 @@
+//! A²PSGD's lock-free scheduler (paper Fig. 2, §III-A).
+//!
+//! No global lock: each row block and column block carries one `AtomicBool`.
+//! A scheduling request picks random `(rowBlockId, colBlockId)` and tries to
+//! CAS the row lock then the column lock; on any failure it undoes what it
+//! took and retries with fresh random indices, up to a bounded budget. The
+//! scheduler therefore serves any number of concurrent requests without
+//! serializing them — the paper's fix for FPSGD's scalability wall.
+//!
+//! Lock ordering note: rows are always acquired before columns, and a failed
+//! column CAS releases the held row before retrying, so no deadlock is
+//! possible (two-phase with back-off, never hold-and-wait).
+
+use super::{BlockScheduler, Claim};
+use crate::rng::Rng;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Lock-free row/column-atomic scheduler (the A²PSGD scheduler).
+pub struct LockFreeScheduler {
+    nb: usize,
+    row_locks: Vec<AtomicBool>,
+    col_locks: Vec<AtomicBool>,
+    updates: Vec<AtomicU64>,
+    contention: AtomicU64,
+    /// Random (i,j) retries per acquire before giving up.
+    retry_budget: usize,
+}
+
+impl LockFreeScheduler {
+    /// Scheduler over an `nb × nb` grid with the default retry budget.
+    pub fn new(nb: usize) -> Self {
+        Self::with_retry_budget(nb, 4 * nb.max(4))
+    }
+
+    /// Scheduler with an explicit retry budget (for experiments).
+    pub fn with_retry_budget(nb: usize, retry_budget: usize) -> Self {
+        assert!(nb >= 1);
+        LockFreeScheduler {
+            nb,
+            row_locks: (0..nb).map(|_| AtomicBool::new(false)).collect(),
+            col_locks: (0..nb).map(|_| AtomicBool::new(false)).collect(),
+            updates: (0..nb * nb).map(|_| AtomicU64::new(0)).collect(),
+            contention: AtomicU64::new(0),
+            retry_budget,
+        }
+    }
+
+    #[inline]
+    fn try_lock(cell: &AtomicBool) -> bool {
+        cell.compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_ok()
+    }
+}
+
+impl BlockScheduler for LockFreeScheduler {
+    #[inline]
+    fn acquire(&self, rng: &mut Rng) -> Option<Claim> {
+        for _ in 0..self.retry_budget {
+            let i = rng.gen_index(self.nb);
+            let j = rng.gen_index(self.nb);
+            if !Self::try_lock(&self.row_locks[i]) {
+                self.contention.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            if !Self::try_lock(&self.col_locks[j]) {
+                // Undo the row so another thread can take it; retry fresh.
+                self.row_locks[i].store(false, Ordering::Release);
+                self.contention.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            return Some(Claim { i, j });
+        }
+        None
+    }
+
+    #[inline]
+    fn release(&self, claim: Claim) {
+        self.updates[claim.i * self.nb + claim.j].fetch_add(1, Ordering::Relaxed);
+        self.col_locks[claim.j].store(false, Ordering::Release);
+        self.row_locks[claim.i].store(false, Ordering::Release);
+    }
+
+    fn nblocks(&self) -> usize {
+        self.nb
+    }
+
+    fn update_counts(&self) -> Vec<u64> {
+        self.updates.iter().map(|u| u.load(Ordering::Relaxed)).collect()
+    }
+
+    fn contention_events(&self) -> u64 {
+        self.contention.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn acquire_release_cycles() {
+        let s = LockFreeScheduler::new(4);
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let c = s.acquire(&mut rng).expect("empty grid must yield a claim");
+            s.release(c);
+        }
+        let total: u64 = s.update_counts().iter().sum();
+        assert_eq!(total, 1000);
+    }
+
+    #[test]
+    fn single_block_grid_is_exclusive() {
+        let s = LockFreeScheduler::new(1);
+        let mut rng = Rng::new(2);
+        let c = s.acquire(&mut rng).unwrap();
+        assert!(s.acquire(&mut rng).is_none());
+        s.release(c);
+        assert!(s.acquire(&mut rng).is_some());
+    }
+
+    #[test]
+    fn no_lost_releases_under_concurrency() {
+        let s = Arc::new(LockFreeScheduler::new(8));
+        let per_thread = 5000u64;
+        std::thread::scope(|scope| {
+            for t in 0..8u64 {
+                let s = Arc::clone(&s);
+                scope.spawn(move || {
+                    let mut rng = Rng::new(t);
+                    let mut done = 0;
+                    while done < per_thread {
+                        if let Some(c) = s.acquire(&mut rng) {
+                            s.release(c);
+                            done += 1;
+                        }
+                    }
+                });
+            }
+        });
+        let total: u64 = s.update_counts().iter().sum();
+        assert_eq!(total, 8 * per_thread);
+        // All locks must be free at quiescence.
+        let mut rng = Rng::new(99);
+        let mut claims = Vec::new();
+        for _ in 0..200 {
+            if let Some(c) = s.acquire(&mut rng) {
+                claims.push(c);
+            }
+        }
+        assert_eq!(claims.len(), 8, "all 8 diagonal slots should be claimable");
+        for c in claims {
+            s.release(c);
+        }
+    }
+
+    #[test]
+    fn retry_budget_bounds_work() {
+        let s = LockFreeScheduler::with_retry_budget(2, 1);
+        let mut rng = Rng::new(3);
+        // With budget 1 an occupied grid fails fast.
+        let a = s.acquire(&mut rng).unwrap();
+        let b = s.acquire(&mut rng); // may or may not succeed (random pick)
+        let mut misses = 0;
+        for _ in 0..50 {
+            if s.acquire(&mut rng).is_none() {
+                misses += 1;
+            } else {
+                break;
+            }
+        }
+        let _ = misses;
+        s.release(a);
+        if let Some(b) = b {
+            s.release(b);
+        }
+        assert!(s.contention_events() > 0);
+    }
+}

@@ -1,0 +1,199 @@
+//! Free-block schedulers (paper §III-A).
+//!
+//! A *free block* is a sub-block sharing no row-block or column-block with
+//! any block currently being processed. Both schedulers hand free blocks to
+//! worker threads; they differ in how scheduling requests synchronize:
+//!
+//! - [`LockedScheduler`] (FPSGD, Fig. 1): one global mutex guards the whole
+//!   free-block table; concurrent requests serialize.
+//! - [`LockFreeScheduler`] (A²PSGD, Fig. 2): each row/column block carries
+//!   its own atomic; a request CASes the pair `(rowBlockId, colBlockId)`
+//!   directly, so requests from different threads proceed concurrently.
+//!
+//! Both track per-block update counts — the "curse of the last reducer"
+//! metric the load-balancing study reports.
+
+mod locked;
+mod lockfree;
+
+pub use locked::LockedScheduler;
+pub use lockfree::LockFreeScheduler;
+
+use crate::rng::Rng;
+
+/// A claim on sub-block (i, j); must be released via [`BlockScheduler::release`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Claim {
+    /// Row-block index.
+    pub i: usize,
+    /// Column-block index.
+    pub j: usize,
+}
+
+/// Common scheduler interface for block-parallel engines.
+pub trait BlockScheduler: Send + Sync {
+    /// Try to claim a free block. Returns `None` if no block could be
+    /// acquired after the scheduler's bounded retry budget (caller may spin).
+    fn acquire(&self, rng: &mut Rng) -> Option<Claim>;
+
+    /// Release a claim after processing it.
+    fn release(&self, claim: Claim);
+
+    /// Grid side length (c+1).
+    fn nblocks(&self) -> usize;
+
+    /// Per-block completed update-pass counts (row-major), for fairness stats.
+    fn update_counts(&self) -> Vec<u64>;
+
+    /// Total acquire attempts that failed due to contention (diagnostic).
+    fn contention_events(&self) -> u64;
+}
+
+/// Fairness summary: spread of per-block update counts.
+pub fn fairness(sched: &dyn BlockScheduler) -> crate::sparse::stats::CountStats {
+    crate::sparse::stats::count_stats(&sched.update_counts())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    fn schedulers(nb: usize) -> Vec<(&'static str, Arc<dyn BlockScheduler>)> {
+        vec![
+            ("locked", Arc::new(LockedScheduler::new(nb))),
+            ("lockfree", Arc::new(LockFreeScheduler::new(nb))),
+        ]
+    }
+
+    #[test]
+    fn acquire_gives_valid_indices() {
+        for (name, s) in schedulers(4) {
+            let mut rng = Rng::new(1);
+            let c = s.acquire(&mut rng).unwrap_or_else(|| panic!("{name}: no claim"));
+            assert!(c.i < 4 && c.j < 4, "{name}");
+            s.release(c);
+        }
+    }
+
+    #[test]
+    fn same_row_or_col_never_double_claimed() {
+        for (name, s) in schedulers(4) {
+            let mut rng = Rng::new(2);
+            let mut claims = Vec::new();
+            // claim as many as possible
+            for _ in 0..64 {
+                if let Some(c) = s.acquire(&mut rng) {
+                    claims.push(c);
+                }
+            }
+            let rows: HashSet<usize> = claims.iter().map(|c| c.i).collect();
+            let cols: HashSet<usize> = claims.iter().map(|c| c.j).collect();
+            assert_eq!(rows.len(), claims.len(), "{name}: duplicate row claim");
+            assert_eq!(cols.len(), claims.len(), "{name}: duplicate col claim");
+            assert!(claims.len() <= 4, "{name}");
+            for c in claims {
+                s.release(c);
+            }
+        }
+    }
+
+    #[test]
+    fn release_makes_block_reacquirable() {
+        for (name, s) in schedulers(2) {
+            let mut rng = Rng::new(3);
+            // Exhaust the 2x2 grid (max 2 concurrent claims).
+            let a = s.acquire(&mut rng).unwrap();
+            let b = s.acquire(&mut rng).unwrap();
+            assert!(s.acquire(&mut rng).is_none(), "{name}: grid should be full");
+            s.release(a);
+            let c = s.acquire(&mut rng).expect(name);
+            s.release(b);
+            s.release(c);
+        }
+    }
+
+    #[test]
+    fn update_counts_increment_on_release() {
+        for (name, s) in schedulers(3) {
+            let mut rng = Rng::new(4);
+            let before: u64 = s.update_counts().iter().sum();
+            assert_eq!(before, 0, "{name}");
+            for _ in 0..10 {
+                if let Some(c) = s.acquire(&mut rng) {
+                    s.release(c);
+                }
+            }
+            let after: u64 = s.update_counts().iter().sum();
+            assert!(after > 0, "{name}");
+        }
+    }
+
+    /// Stress test: concurrent workers must never overlap rows or columns.
+    /// Ownership is verified with an independent atomic table.
+    #[test]
+    fn concurrent_exclusion_stress() {
+        for (name, s) in schedulers(9) {
+            let nb = s.nblocks();
+            let row_owned: Arc<Vec<AtomicBool>> =
+                Arc::new((0..nb).map(|_| AtomicBool::new(false)).collect());
+            let col_owned: Arc<Vec<AtomicBool>> =
+                Arc::new((0..nb).map(|_| AtomicBool::new(false)).collect());
+            let violations = Arc::new(AtomicU64::new(0));
+            std::thread::scope(|scope| {
+                for t in 0..8u64 {
+                    let s = Arc::clone(&s);
+                    let row_owned = Arc::clone(&row_owned);
+                    let col_owned = Arc::clone(&col_owned);
+                    let violations = Arc::clone(&violations);
+                    scope.spawn(move || {
+                        let mut rng = Rng::new(100 + t);
+                        for _ in 0..2000 {
+                            if let Some(c) = s.acquire(&mut rng) {
+                                if row_owned[c.i].swap(true, Ordering::SeqCst) {
+                                    violations.fetch_add(1, Ordering::SeqCst);
+                                }
+                                if col_owned[c.j].swap(true, Ordering::SeqCst) {
+                                    violations.fetch_add(1, Ordering::SeqCst);
+                                }
+                                std::hint::spin_loop();
+                                row_owned[c.i].store(false, Ordering::SeqCst);
+                                col_owned[c.j].store(false, Ordering::SeqCst);
+                                s.release(c);
+                            }
+                        }
+                    });
+                }
+            });
+            assert_eq!(violations.load(Ordering::SeqCst), 0, "{name}: exclusion violated");
+        }
+    }
+
+    #[test]
+    fn property_claims_form_partial_permutation() {
+        crate::proptest_lite::check(
+            "simultaneous claims are a partial permutation matrix",
+            64,
+            |g| (g.usize_in(1, 12), g.u64(1 << 40)),
+            |&(nb, seed)| {
+                for (_, s) in schedulers(nb) {
+                    let mut rng = Rng::new(seed);
+                    let mut claims = Vec::new();
+                    for _ in 0..nb * 8 {
+                        if let Some(c) = s.acquire(&mut rng) {
+                            claims.push(c);
+                        }
+                    }
+                    let rows: HashSet<_> = claims.iter().map(|c| c.i).collect();
+                    let cols: HashSet<_> = claims.iter().map(|c| c.j).collect();
+                    if rows.len() != claims.len() || cols.len() != claims.len() {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+}

@@ -1,0 +1,234 @@
+//! Coordinate-format sparse matrix (the HDS matrix ingestion format).
+
+use crate::Result;
+use anyhow::{bail, ensure};
+
+/// One known instance r_uv ∈ Ω.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Entry {
+    /// Row (node u ∈ U).
+    pub u: u32,
+    /// Column (node v ∈ V).
+    pub v: u32,
+    /// Interaction weight r_uv.
+    pub r: f32,
+}
+
+/// An HDS matrix stored as a coordinate list.
+#[derive(Clone, Debug, Default)]
+pub struct CooMatrix {
+    nrows: u32,
+    ncols: u32,
+    entries: Vec<Entry>,
+}
+
+impl CooMatrix {
+    /// Empty matrix with fixed logical dimensions.
+    pub fn new(nrows: u32, ncols: u32) -> Self {
+        CooMatrix { nrows, ncols, entries: Vec::new() }
+    }
+
+    /// Build from triplets, validating indices.
+    pub fn from_entries(nrows: u32, ncols: u32, entries: Vec<Entry>) -> Result<Self> {
+        for e in &entries {
+            ensure!(
+                e.u < nrows && e.v < ncols,
+                "entry ({}, {}) out of bounds for {}x{}",
+                e.u,
+                e.v,
+                nrows,
+                ncols
+            );
+            ensure!(e.r.is_finite(), "non-finite rating at ({}, {})", e.u, e.v);
+        }
+        Ok(CooMatrix { nrows, ncols, entries })
+    }
+
+    /// Append one instance.
+    pub fn push(&mut self, u: u32, v: u32, r: f32) -> Result<()> {
+        if u >= self.nrows || v >= self.ncols {
+            bail!("entry ({u}, {v}) out of bounds for {}x{}", self.nrows, self.ncols);
+        }
+        self.entries.push(Entry { u, v, r });
+        Ok(())
+    }
+
+    /// Number of rows |U|.
+    pub fn nrows(&self) -> u32 {
+        self.nrows
+    }
+
+    /// Number of columns |V|.
+    pub fn ncols(&self) -> u32 {
+        self.ncols
+    }
+
+    /// |Ω| — number of known instances.
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Known instances.
+    pub fn entries(&self) -> &[Entry] {
+        &self.entries
+    }
+
+    /// Mutable access (e.g. for shuffling the training order).
+    pub fn entries_mut(&mut self) -> &mut [Entry] {
+        &mut self.entries
+    }
+
+    /// Fraction of cells observed: |Ω| / (|U|·|V|).
+    pub fn density(&self) -> f64 {
+        self.entries.len() as f64 / (self.nrows as f64 * self.ncols as f64)
+    }
+
+    /// Instances per row (the row marginal ⟨R_{u,:}⟩ per node).
+    pub fn row_counts(&self) -> Vec<u32> {
+        let mut c = vec![0u32; self.nrows as usize];
+        for e in &self.entries {
+            c[e.u as usize] += 1;
+        }
+        c
+    }
+
+    /// Instances per column.
+    pub fn col_counts(&self) -> Vec<u32> {
+        let mut c = vec![0u32; self.ncols as usize];
+        for e in &self.entries {
+            c[e.v as usize] += 1;
+        }
+        c
+    }
+
+    /// Sort entries row-major (u, then v) — canonical order for CSR build.
+    pub fn sort_row_major(&mut self) {
+        self.entries.sort_unstable_by(|a, b| (a.u, a.v).cmp(&(b.u, b.v)));
+    }
+
+    /// Drop duplicate (u,v) pairs, keeping the last occurrence.
+    /// Returns the number of duplicates removed.
+    pub fn dedup(&mut self) -> usize {
+        let before = self.entries.len();
+        self.sort_row_major();
+        // keep last: reverse, dedup-by keeps first in iteration order
+        self.entries.reverse();
+        self.entries.dedup_by(|a, b| a.u == b.u && a.v == b.v);
+        self.entries.reverse();
+        before - self.entries.len()
+    }
+
+    /// Mean rating over Ω (0 if empty).
+    pub fn mean_rating(&self) -> f64 {
+        if self.entries.is_empty() {
+            return 0.0;
+        }
+        self.entries.iter().map(|e| e.r as f64).sum::<f64>() / self.entries.len() as f64
+    }
+
+    /// Min/max rating over Ω.
+    pub fn rating_range(&self) -> (f32, f32) {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for e in &self.entries {
+            lo = lo.min(e.r);
+            hi = hi.max(e.r);
+        }
+        (lo, hi)
+    }
+
+    /// Partition entries into two matrices by predicate (true → first).
+    pub fn partition_by(&self, mut pred: impl FnMut(&Entry) -> bool) -> (CooMatrix, CooMatrix) {
+        let mut a = CooMatrix::new(self.nrows, self.ncols);
+        let mut b = CooMatrix::new(self.nrows, self.ncols);
+        for e in &self.entries {
+            if pred(e) {
+                a.entries.push(*e);
+            } else {
+                b.entries.push(*e);
+            }
+        }
+        (a, b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CooMatrix {
+        let mut m = CooMatrix::new(4, 3);
+        m.push(0, 0, 5.0).unwrap();
+        m.push(1, 2, 3.0).unwrap();
+        m.push(3, 1, 1.0).unwrap();
+        m.push(1, 0, 4.0).unwrap();
+        m
+    }
+
+    #[test]
+    fn push_and_counts() {
+        let m = sample();
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.row_counts(), vec![1, 2, 0, 1]);
+        assert_eq!(m.col_counts(), vec![2, 1, 1]);
+    }
+
+    #[test]
+    fn push_out_of_bounds_fails() {
+        let mut m = CooMatrix::new(2, 2);
+        assert!(m.push(2, 0, 1.0).is_err());
+        assert!(m.push(0, 2, 1.0).is_err());
+    }
+
+    #[test]
+    fn from_entries_validates() {
+        let bad = vec![Entry { u: 9, v: 0, r: 1.0 }];
+        assert!(CooMatrix::from_entries(2, 2, bad).is_err());
+        let nan = vec![Entry { u: 0, v: 0, r: f32::NAN }];
+        assert!(CooMatrix::from_entries(2, 2, nan).is_err());
+    }
+
+    #[test]
+    fn density() {
+        let m = sample();
+        assert!((m.density() - 4.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sort_row_major_orders() {
+        let mut m = sample();
+        m.sort_row_major();
+        let keys: Vec<(u32, u32)> = m.entries().iter().map(|e| (e.u, e.v)).collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted);
+    }
+
+    #[test]
+    fn dedup_keeps_last() {
+        let mut m = CooMatrix::new(2, 2);
+        m.push(0, 0, 1.0).unwrap();
+        m.push(0, 0, 2.0).unwrap();
+        m.push(1, 1, 3.0).unwrap();
+        assert_eq!(m.dedup(), 1);
+        assert_eq!(m.nnz(), 2);
+        let e = m.entries().iter().find(|e| e.u == 0 && e.v == 0).unwrap();
+        assert_eq!(e.r, 2.0);
+    }
+
+    #[test]
+    fn mean_and_range() {
+        let m = sample();
+        assert!((m.mean_rating() - 3.25).abs() < 1e-9);
+        assert_eq!(m.rating_range(), (1.0, 5.0));
+    }
+
+    #[test]
+    fn partition_by_splits_all() {
+        let m = sample();
+        let (a, b) = m.partition_by(|e| e.u == 1);
+        assert_eq!(a.nnz(), 2);
+        assert_eq!(b.nnz(), 2);
+        assert_eq!(a.nnz() + b.nnz(), m.nnz());
+    }
+}

@@ -1,0 +1,164 @@
+//! Compressed-sparse-row view used by the alternating (ASGD) engine and the
+//! evaluators: M-phase sweeps user rows, N-phase sweeps the transpose.
+
+use super::coo::{CooMatrix, Entry};
+
+/// CSR sparse matrix over f32 weights.
+#[derive(Clone, Debug)]
+pub struct CsrMatrix {
+    nrows: u32,
+    ncols: u32,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Build from a COO matrix (copies; COO order is preserved per row).
+    pub fn from_coo(coo: &CooMatrix) -> Self {
+        let nrows = coo.nrows();
+        let ncols = coo.ncols();
+        let nnz = coo.nnz();
+        let mut counts = vec![0usize; nrows as usize + 1];
+        for e in coo.entries() {
+            counts[e.u as usize + 1] += 1;
+        }
+        for i in 1..counts.len() {
+            counts[i] += counts[i - 1];
+        }
+        let indptr = counts.clone();
+        let mut cursor = counts;
+        let mut indices = vec![0u32; nnz];
+        let mut values = vec![0f32; nnz];
+        for e in coo.entries() {
+            let p = cursor[e.u as usize];
+            indices[p] = e.v;
+            values[p] = e.r;
+            cursor[e.u as usize] += 1;
+        }
+        CsrMatrix { nrows, ncols, indptr, indices, values }
+    }
+
+    /// Transpose (rows become columns) — the N-phase view.
+    pub fn transpose(&self) -> CsrMatrix {
+        let mut counts = vec![0usize; self.ncols as usize + 1];
+        for &v in &self.indices {
+            counts[v as usize + 1] += 1;
+        }
+        for i in 1..counts.len() {
+            counts[i] += counts[i - 1];
+        }
+        let indptr = counts.clone();
+        let mut cursor = counts;
+        let mut indices = vec![0u32; self.indices.len()];
+        let mut values = vec![0f32; self.values.len()];
+        for u in 0..self.nrows as usize {
+            for p in self.indptr[u]..self.indptr[u + 1] {
+                let v = self.indices[p] as usize;
+                let q = cursor[v];
+                indices[q] = u as u32;
+                values[q] = self.values[p];
+                cursor[v] += 1;
+            }
+        }
+        CsrMatrix {
+            nrows: self.ncols,
+            ncols: self.nrows,
+            indptr,
+            indices,
+            values,
+        }
+    }
+
+    /// Number of rows.
+    pub fn nrows(&self) -> u32 {
+        self.nrows
+    }
+
+    /// Number of columns.
+    pub fn ncols(&self) -> u32 {
+        self.ncols
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// (column indices, values) of one row.
+    pub fn row(&self, u: u32) -> (&[u32], &[f32]) {
+        let lo = self.indptr[u as usize];
+        let hi = self.indptr[u as usize + 1];
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Entries of one row as an iterator of [`Entry`].
+    pub fn row_entries(&self, u: u32) -> impl Iterator<Item = Entry> + '_ {
+        let (idx, val) = self.row(u);
+        idx.iter()
+            .zip(val.iter())
+            .map(move |(&v, &r)| Entry { u, v, r })
+    }
+
+    /// Number of entries in one row.
+    pub fn row_nnz(&self, u: u32) -> usize {
+        self.indptr[u as usize + 1] - self.indptr[u as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coo() -> CooMatrix {
+        let mut m = CooMatrix::new(3, 4);
+        m.push(0, 1, 1.0).unwrap();
+        m.push(0, 3, 2.0).unwrap();
+        m.push(2, 0, 3.0).unwrap();
+        m.push(1, 2, 4.0).unwrap();
+        m
+    }
+
+    #[test]
+    fn from_coo_rows() {
+        let c = CsrMatrix::from_coo(&coo());
+        assert_eq!(c.nnz(), 4);
+        assert_eq!(c.row(0), (&[1u32, 3][..], &[1.0f32, 2.0][..]));
+        assert_eq!(c.row(1), (&[2u32][..], &[4.0f32][..]));
+        assert_eq!(c.row(2), (&[0u32][..], &[3.0f32][..]));
+        assert_eq!(c.row_nnz(0), 2);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let c = CsrMatrix::from_coo(&coo());
+        let t = c.transpose();
+        assert_eq!(t.nrows(), 4);
+        assert_eq!(t.ncols(), 3);
+        assert_eq!(t.nnz(), 4);
+        // (0,1,1.0) becomes (1,0,1.0)
+        assert_eq!(t.row(1), (&[0u32][..], &[1.0f32][..]));
+        let tt = t.transpose();
+        for u in 0..3u32 {
+            assert_eq!(tt.row(u), c.row(u));
+        }
+    }
+
+    #[test]
+    fn row_entries_iter() {
+        let c = CsrMatrix::from_coo(&coo());
+        let es: Vec<Entry> = c.row_entries(0).collect();
+        assert_eq!(es.len(), 2);
+        assert_eq!(es[0].u, 0);
+        assert_eq!(es[0].v, 1);
+    }
+
+    #[test]
+    fn empty_rows() {
+        let m = CooMatrix::new(3, 3);
+        let c = CsrMatrix::from_coo(&m);
+        for u in 0..3 {
+            assert_eq!(c.row_nnz(u), 0);
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Sparse-matrix substrate for HDS data.
+//!
+//! The paper's object is an HDS matrix `R^{|U|×|V|}` with known-instance set
+//! Ω (Definition 1). [`CooMatrix`] is the ingestion/blocking format;
+//! [`CsrMatrix`] serves row-major sweeps (ASGD's M-phase) and its transpose
+//! the column sweeps; [`stats`] computes the marginal-count skew measures the
+//! load-balancing study reports.
+
+mod coo;
+mod csr;
+pub mod stats;
+
+pub use coo::{CooMatrix, Entry};
+pub use csr::CsrMatrix;

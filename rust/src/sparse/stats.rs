@@ -1,0 +1,147 @@
+//! Marginal-distribution statistics for HDS matrices.
+//!
+//! The load-balancing study (paper §III-B, our ablation A2) is about *skew*:
+//! how unevenly instances distribute over rows/columns and over blocks.
+//! These are the measures the bench harness reports.
+
+/// Summary of a count distribution (e.g. instances per row block).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CountStats {
+    /// Number of buckets.
+    pub n: usize,
+    /// Smallest count.
+    pub min: u64,
+    /// Largest count.
+    pub max: u64,
+    /// Mean count.
+    pub mean: f64,
+    /// Population standard deviation.
+    pub std: f64,
+    /// max/mean — the "last reducer" factor (1.0 = perfectly balanced).
+    pub imbalance: f64,
+    /// Gini coefficient of the counts (0 = equal, →1 = concentrated).
+    pub gini: f64,
+}
+
+/// Compute [`CountStats`] over a slice of bucket counts.
+pub fn count_stats(counts: &[u64]) -> CountStats {
+    assert!(!counts.is_empty(), "count_stats over empty slice");
+    let n = counts.len();
+    let total: u64 = counts.iter().sum();
+    let mean = total as f64 / n as f64;
+    let min = *counts.iter().min().unwrap();
+    let max = *counts.iter().max().unwrap();
+    let var = counts
+        .iter()
+        .map(|&c| {
+            let d = c as f64 - mean;
+            d * d
+        })
+        .sum::<f64>()
+        / n as f64;
+    let imbalance = if mean > 0.0 { max as f64 / mean } else { 1.0 };
+    CountStats {
+        n,
+        min,
+        max,
+        mean,
+        std: var.sqrt(),
+        imbalance,
+        gini: gini(counts),
+    }
+}
+
+/// Gini coefficient of non-negative counts.
+pub fn gini(counts: &[u64]) -> f64 {
+    let n = counts.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let mut sorted: Vec<u64> = counts.to_vec();
+    sorted.sort_unstable();
+    // G = (2 Σ_i i·x_i) / (n Σ x) − (n+1)/n  with i starting at 1
+    let weighted: f64 = sorted
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| (i as f64 + 1.0) * x as f64)
+        .sum();
+    (2.0 * weighted) / (n as f64 * total as f64) - (n as f64 + 1.0) / n as f64
+}
+
+/// Convert u32 counts to the u64 the stats take.
+pub fn widen(counts: &[u32]) -> Vec<u64> {
+    counts.iter().map(|&c| c as u64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_counts_are_balanced() {
+        let s = count_stats(&[10, 10, 10, 10]);
+        assert_eq!(s.min, 10);
+        assert_eq!(s.max, 10);
+        assert!((s.imbalance - 1.0).abs() < 1e-12);
+        assert!(s.gini.abs() < 1e-12);
+        assert!(s.std.abs() < 1e-12);
+    }
+
+    #[test]
+    fn skewed_counts_detected() {
+        let s = count_stats(&[0, 0, 0, 100]);
+        assert_eq!(s.max, 100);
+        assert!((s.imbalance - 4.0).abs() < 1e-12);
+        assert!(s.gini > 0.7);
+    }
+
+    #[test]
+    fn gini_empty_and_zero() {
+        assert_eq!(gini(&[]), 0.0);
+        assert_eq!(gini(&[0, 0, 0]), 0.0);
+    }
+
+    #[test]
+    fn gini_monotone_in_skew() {
+        let even = gini(&[25, 25, 25, 25]);
+        let mild = gini(&[10, 20, 30, 40]);
+        let harsh = gini(&[1, 1, 1, 97]);
+        assert!(even < mild && mild < harsh);
+    }
+
+    #[test]
+    fn property_imbalance_at_least_one() {
+        crate::proptest_lite::check(
+            "imbalance >= 1 when total > 0",
+            128,
+            |g| {
+                let n = g.usize_in(1, 50);
+                g.vec(n, |g| g.u64(1000))
+            },
+            |counts| {
+                let total: u64 = counts.iter().sum();
+                total == 0 || count_stats(counts).imbalance >= 1.0 - 1e-12
+            },
+        );
+    }
+
+    #[test]
+    fn property_gini_in_unit_interval() {
+        crate::proptest_lite::check(
+            "gini ∈ [0,1)",
+            128,
+            |g| {
+                let n = g.usize_in(1, 60);
+                g.vec(n, |g| g.u64(10_000))
+            },
+            |counts| {
+                let g = gini(counts);
+                (0.0..1.0).contains(&g) || g.abs() < 1e-12
+            },
+        );
+    }
+}

@@ -1,0 +1,99 @@
+//! Data-substrate integration: synthetic twins' statistical fidelity and the
+//! gen-data ↔ loader round trip.
+
+use a2psgd::data::{loader, synthetic};
+use a2psgd::sparse::stats;
+
+#[test]
+fn ml1m_twin_matches_paper_scale() {
+    let d = synthetic::movielens_like(1);
+    assert_eq!(d.nrows(), 6040);
+    assert_eq!(d.ncols(), 3706);
+    let total = d.total_nnz();
+    assert!(
+        (995_000..=1_000_209).contains(&total),
+        "|Ω| = {total}, paper: 1,000,209"
+    );
+    // ≈4.5% density like the real ML-1M.
+    let density = total as f64 / (6040.0 * 3706.0);
+    assert!((0.04..0.05).contains(&density), "density {density}");
+}
+
+#[test]
+fn epinions_twin_matches_paper_scale_and_is_sparser() {
+    let d = synthetic::epinions_like(1);
+    assert_eq!(d.nrows(), 40_163);
+    assert_eq!(d.ncols(), 139_738);
+    let total = d.total_nnz();
+    assert!(
+        (640_000..=664_824).contains(&total),
+        "|Ω| = {total}, paper: 664,824"
+    );
+    let density = total as f64 / (40_163.0 * 139_738.0);
+    assert!(density < 2e-4, "Epinions twin must be very sparse, got {density}");
+}
+
+#[test]
+fn epinions_twin_has_heavier_tail_than_ml1m_twin() {
+    let ml = synthetic::movielens_like(2);
+    let ep = synthetic::epinions_like(2);
+    let g_ml = stats::gini(&stats::widen(&ml.train.row_counts()));
+    let g_ep = stats::gini(&stats::widen(&ep.train.row_counts()));
+    assert!(
+        g_ep > g_ml,
+        "epinions row gini {g_ep:.3} should exceed ml1m {g_ml:.3}"
+    );
+}
+
+#[test]
+fn twins_rating_scale_is_one_to_five() {
+    for d in [synthetic::movielens_like(3), synthetic::epinions_like(3)] {
+        let (lo, hi) = d.train.rating_range();
+        assert!(lo >= 1.0 && hi <= 5.0, "{}: {lo}..{hi}", d.name);
+        assert_eq!(d.rating_min, 1.0);
+        assert_eq!(d.rating_max, 5.0);
+    }
+}
+
+#[test]
+fn gendata_loader_roundtrip() {
+    let d = synthetic::small(9);
+    let dir = std::env::temp_dir().join("a2psgd_it_data");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("small.tsv");
+    let mut text = String::new();
+    for e in d.train.entries().iter().chain(d.test.entries()) {
+        text.push_str(&format!("{} {} {}\n", e.u, e.v, e.r));
+    }
+    std::fs::write(&path, &text).unwrap();
+
+    let loaded = loader::load_file(&path, "roundtrip", 0.3, 1).unwrap();
+    assert_eq!(loaded.total_nnz(), d.total_nnz());
+    // Re-indexing only renames nodes; the instance count per rating value
+    // must survive exactly.
+    let hist = |m: &a2psgd::sparse::CooMatrix| {
+        let mut h = std::collections::BTreeMap::new();
+        for e in m.entries() {
+            *h.entry((e.r * 2.0) as i32).or_insert(0u32) += 1;
+        }
+        h
+    };
+    let mut orig = hist(&d.train);
+    for (k, v) in hist(&d.test) {
+        *orig.entry(k).or_insert(0) += v;
+    }
+    let mut got = hist(&loaded.train);
+    for (k, v) in hist(&loaded.test) {
+        *got.entry(k).or_insert(0) += v;
+    }
+    assert_eq!(orig, got);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn twin_generation_is_deterministic_across_calls() {
+    let a = synthetic::movielens_like(5);
+    let b = synthetic::movielens_like(5);
+    assert_eq!(a.train.nnz(), b.train.nnz());
+    assert_eq!(a.train.entries()[..100], b.train.entries()[..100]);
+}

@@ -1,0 +1,198 @@
+//! L3↔L2/L1 integration: the AOT artifacts must agree with the native Rust
+//! math. Requires `make artifacts` (skips with a message otherwise).
+
+use a2psgd::model::{dot, Factors};
+use a2psgd::prelude::*;
+use a2psgd::runtime::XlaRuntime;
+
+fn runtime() -> Option<XlaRuntime> {
+    match XlaRuntime::load(&a2psgd::runtime::default_artifacts_dir()) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping runtime integration test: {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn predict_batch_matches_rust_dot() {
+    let Some(rt) = runtime() else { return };
+    let s = rt.shapes;
+    let mut rng = Rng::new(1);
+    let mu: Vec<f32> = (0..s.b * s.d).map(|_| rng.f32_range(-0.5, 0.5)).collect();
+    let nv: Vec<f32> = (0..s.b * s.d).map(|_| rng.f32_range(-0.5, 0.5)).collect();
+    let got = rt.predict_batch(&mu, &nv).unwrap();
+    assert_eq!(got.len(), s.b);
+    for lane in (0..s.b).step_by(97) {
+        let want = dot(&mu[lane * s.d..(lane + 1) * s.d], &nv[lane * s.d..(lane + 1) * s.d]);
+        assert!(
+            (got[lane] - want).abs() < 1e-4,
+            "lane {lane}: {} vs {want}",
+            got[lane]
+        );
+    }
+}
+
+#[test]
+fn eval_sums_matches_rust() {
+    let Some(rt) = runtime() else { return };
+    let s = rt.shapes;
+    let mut rng = Rng::new(2);
+    let mu: Vec<f32> = (0..s.b * s.d).map(|_| rng.f32_range(0.0, 0.5)).collect();
+    let nv: Vec<f32> = (0..s.b * s.d).map(|_| rng.f32_range(0.0, 0.5)).collect();
+    let r: Vec<f32> = (0..s.b).map(|_| rng.f32_range(1.0, 5.0)).collect();
+    let mask: Vec<f32> = (0..s.b).map(|i| (i % 3 != 0) as u8 as f32).collect();
+    let (sse, sae, cnt) = rt.eval_sums(&mu, &nv, &r, &mask).unwrap();
+    let (mut wsse, mut wsae, mut wcnt) = (0f64, 0f64, 0f64);
+    for lane in 0..s.b {
+        let e = (r[lane] - dot(&mu[lane * s.d..(lane + 1) * s.d], &nv[lane * s.d..(lane + 1) * s.d]))
+            as f64
+            * mask[lane] as f64;
+        wsse += e * e;
+        wsae += e.abs();
+        wcnt += mask[lane] as f64;
+    }
+    assert!((sse - wsse).abs() / wsse.max(1.0) < 1e-4, "{sse} vs {wsse}");
+    assert!((sae - wsae).abs() / wsae.max(1.0) < 1e-4, "{sae} vs {wsae}");
+    assert_eq!(cnt, wcnt);
+}
+
+#[test]
+fn block_update_matches_native_nag_for_disjoint_rows() {
+    let Some(rt) = runtime() else { return };
+    let s = rt.shapes;
+    let mut rng = Rng::new(3);
+    let mut m = vec![0f32; s.u * s.d];
+    let mut n = vec![0f32; s.v * s.d];
+    for x in m.iter_mut().chain(n.iter_mut()) {
+        *x = rng.f32_range(0.05, 0.4);
+    }
+    let phi = vec![0f32; s.u * s.d];
+    let psi = vec![0f32; s.v * s.d];
+    // Distinct rows per lane → batch semantics equal per-instance semantics.
+    let live = 64usize;
+    let mut uidx = vec![0i32; s.b];
+    let mut vidx = vec![0i32; s.b];
+    let mut r = vec![0f32; s.b];
+    let mut mask = vec![0f32; s.b];
+    for lane in 0..live {
+        uidx[lane] = (lane + 1) as i32;
+        vidx[lane] = (lane + 1) as i32;
+        r[lane] = 1.0 + (lane % 5) as f32;
+        mask[lane] = 1.0;
+    }
+    let (eta, lam, gamma) = (1e-2f32, 3e-2f32, 0.9f32);
+    let (m2, n2, phi2, psi2) = rt
+        .block_update(&m, &n, &phi, &psi, &uidx, &vidx, &r, &mask, eta, lam, gamma)
+        .unwrap();
+
+    // Native reference on the same rows.
+    let h = a2psgd::optim::Hyper::nag(eta, lam, gamma);
+    for lane in (0..live).step_by(7) {
+        let u = uidx[lane] as usize;
+        let v = vidx[lane] as usize;
+        let mut mu: Vec<f32> = m[u * s.d..(u + 1) * s.d].to_vec();
+        let mut nv: Vec<f32> = n[v * s.d..(v + 1) * s.d].to_vec();
+        let mut pu = vec![0f32; s.d];
+        let mut qv = vec![0f32; s.d];
+        a2psgd::optim::nag_update(&mut mu, &mut nv, &mut pu, &mut qv, r[lane], &h);
+        for k in 0..s.d {
+            assert!(
+                (m2[u * s.d + k] - mu[k]).abs() < 1e-4,
+                "m row {u} k {k}: {} vs {}",
+                m2[u * s.d + k],
+                mu[k]
+            );
+            assert!((n2[v * s.d + k] - nv[k]).abs() < 1e-4);
+            assert!((phi2[u * s.d + k] - pu[k]).abs() < 1e-4);
+            assert!((psi2[v * s.d + k] - qv[k]).abs() < 1e-4);
+        }
+    }
+    // Untouched rows unchanged.
+    for k in 0..s.d {
+        assert_eq!(m2[(live + 10) * s.d + k], m[(live + 10) * s.d + k]);
+    }
+}
+
+#[test]
+fn xla_eval_dataset_matches_rust_unclamped() {
+    let Some(rt) = runtime() else { return };
+    let data = data::synthetic::small(4);
+    let mut rng = Rng::new(4);
+    let f = Factors::init(data.nrows(), data.ncols(), rt.shapes.d, 0.3, &mut rng);
+    let (xr, xm) = rt.eval_dataset(&f, &data.test).unwrap();
+    // Rust unclamped reference.
+    let (mut sse, mut sae) = (0f64, 0f64);
+    for e in data.test.entries() {
+        let d = (e.r - f.predict(e.u, e.v)) as f64;
+        sse += d * d;
+        sae += d.abs();
+    }
+    let n = data.test.nnz() as f64;
+    let (rr, rm) = ((sse / n).sqrt(), sae / n);
+    assert!((xr - rr).abs() < 1e-4, "XLA RMSE {xr} vs rust {rr}");
+    assert!((xm - rm).abs() < 1e-4, "XLA MAE {xm} vs rust {rm}");
+}
+
+#[test]
+fn loss_batch_positive_and_scales_with_lambda() {
+    let Some(rt) = runtime() else { return };
+    let s = rt.shapes;
+    let mu = vec![0.3f32; s.b * s.d];
+    let nv = vec![0.2f32; s.b * s.d];
+    let r = vec![4.0f32; s.b];
+    let mask = vec![1.0f32; s.b];
+    let l0 = rt.loss_batch(&mu, &nv, &r, &mask, 0.0).unwrap();
+    let l1 = rt.loss_batch(&mu, &nv, &r, &mask, 1.0).unwrap();
+    assert!(l0 > 0.0);
+    assert!(l1 > l0, "{l1} !> {l0}");
+}
+
+#[test]
+fn xla_training_engine_learns() {
+    let Some(_) = runtime() else { return };
+    let data = data::synthetic::small(5);
+    let mut cfg = TrainConfig::preset(EngineKind::XlaMinibatch, &data).epochs(5);
+    cfg.early_stop = false;
+    let report = a2psgd::engine::train(&data, &cfg).unwrap();
+    let first = report.history.points().first().unwrap().rmse;
+    let last = report.final_rmse();
+    assert!(last < first, "XLA engine did not learn: {first} → {last}");
+}
+
+#[test]
+fn recommend_scores_match_native() {
+    let Some(rt) = runtime() else { return };
+    let s = rt.shapes;
+    let mut rng = Rng::new(6);
+    let f = Factors::init(20, 50, s.d, 0.4, &mut rng);
+    let n_padded = a2psgd::runtime::pad_item_matrix(&f, s.v);
+    let scores = rt.recommend_scores(f.m_row(3), &n_padded).unwrap();
+    assert_eq!(scores.len(), s.v);
+    for v in 0..50u32 {
+        let want = f.predict(3, v);
+        assert!(
+            (scores[v as usize] - want).abs() < 1e-4,
+            "item {v}: {} vs {want}",
+            scores[v as usize]
+        );
+    }
+    // Padded lanes score 0 (zero rows).
+    assert_eq!(scores[60], 0.0);
+}
+
+#[test]
+fn runtime_top_k_matches_metrics_ranking() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(7);
+    let f = Factors::init(10, 40, rt.shapes.d, 0.4, &mut rng);
+    let n_padded = a2psgd::runtime::pad_item_matrix(&f, rt.shapes.v);
+    let seen: std::collections::HashSet<u32> = [1u32, 5, 7].into_iter().collect();
+    let got = rt.top_k(&f, &n_padded, 2, 6, &seen).unwrap();
+    let want = a2psgd::metrics::topn::rank_items(&f, 2, &seen, 6);
+    assert_eq!(got.len(), 6);
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(g.0, w.0, "ranking mismatch: {got:?} vs {want:?}");
+    }
+}

@@ -1,0 +1,164 @@
+//! Serving-path integration: router/batcher correctness & concurrency.
+//! Requires `make artifacts`.
+
+use a2psgd::coordinator::service::PredictionService;
+use a2psgd::model::Factors;
+use a2psgd::prelude::*;
+use std::time::Duration;
+
+fn start_service(factors: Factors, clamp: (f32, f32)) -> Option<PredictionService> {
+    match PredictionService::start(
+        a2psgd::runtime::default_artifacts_dir(),
+        factors,
+        clamp,
+        Duration::from_millis(1),
+    ) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("skipping service test: {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn served_predictions_match_factors() {
+    let mut rng = Rng::new(1);
+    let f = Factors::init(50, 40, 16, 0.4, &mut rng);
+    let reference = f.clone();
+    let Some(svc) = start_service(f, (1.0, 5.0)) else { return };
+    let client = svc.client();
+    for (u, v) in [(0u32, 0u32), (10, 20), (49, 39), (7, 33)] {
+        let got = client.predict(u, v).unwrap();
+        let want = reference.predict_clamped(u, v, 1.0, 5.0);
+        assert!((got - want).abs() < 1e-4, "({u},{v}): {got} vs {want}");
+    }
+    drop(client);
+    let stats = svc.shutdown();
+    assert_eq!(stats.served, 4);
+}
+
+#[test]
+fn concurrent_clients_all_answered() {
+    let mut rng = Rng::new(2);
+    let f = Factors::init(100, 100, 16, 0.4, &mut rng);
+    let reference = f.clone();
+    let Some(svc) = start_service(f, (1.0, 5.0)) else { return };
+    let nclients = 6;
+    let per = 500;
+    std::thread::scope(|scope| {
+        for t in 0..nclients {
+            let client = svc.client();
+            let reference = &reference;
+            scope.spawn(move || {
+                let mut rng = Rng::new(t as u64 + 10);
+                let pairs: Vec<(u32, u32)> = (0..per)
+                    .map(|_| (rng.gen_index(100) as u32, rng.gen_index(100) as u32))
+                    .collect();
+                let preds = client.predict_many(&pairs).unwrap();
+                for (i, &(u, v)) in pairs.iter().enumerate() {
+                    let want = reference.predict_clamped(u, v, 1.0, 5.0);
+                    assert!((preds[i] - want).abs() < 1e-4);
+                }
+            });
+        }
+    });
+    let stats = svc.shutdown();
+    assert_eq!(stats.served, (nclients * per) as u64);
+    assert!(stats.batches >= 1);
+    assert!(stats.mean_batch() >= 1.0);
+}
+
+#[test]
+fn clamping_applied_at_serve_time() {
+    let mut rng = Rng::new(3);
+    let mut f = Factors::init(4, 4, 16, 0.1, &mut rng);
+    // Force an out-of-scale prediction.
+    f.m[..16].iter_mut().for_each(|x| *x = 10.0);
+    f.n[..16].iter_mut().for_each(|x| *x = 10.0);
+    let Some(svc) = start_service(f, (1.0, 5.0)) else { return };
+    let client = svc.client();
+    let p = client.predict(0, 0).unwrap();
+    assert_eq!(p, 5.0, "prediction must be clamped to the rating scale");
+    drop(client);
+    svc.shutdown();
+}
+
+#[test]
+fn service_fails_fast_on_missing_artifacts() {
+    let mut rng = Rng::new(4);
+    let f = Factors::init(4, 4, 16, 0.1, &mut rng);
+    let r = PredictionService::start(
+        std::path::PathBuf::from("/nonexistent/artifacts"),
+        f,
+        (1.0, 5.0),
+        Duration::from_millis(1),
+    );
+    assert!(r.is_err());
+}
+
+#[test]
+fn topk_endpoint_excludes_train_items_and_ranks() {
+    let mut rng = Rng::new(5);
+    let f = Factors::init(10, 30, 16, 0.4, &mut rng);
+    let reference = f.clone();
+    // user 0 has items 0..10 in train → excluded from recommendations.
+    let mut train = a2psgd::sparse::CooMatrix::new(10, 30);
+    for v in 0..10u32 {
+        train.push(0, v, 5.0).unwrap();
+    }
+    let svc = match PredictionService::start_with_exclusions(
+        a2psgd::runtime::default_artifacts_dir(),
+        f,
+        (1.0, 5.0),
+        Duration::from_millis(1),
+        Some(train.clone()),
+    ) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("skipping: {e:#}");
+            return;
+        }
+    };
+    let client = svc.client();
+    let top = client.top_k(0, 5).unwrap();
+    assert_eq!(top.len(), 5);
+    for (v, _) in &top {
+        assert!(*v >= 10, "train item {v} leaked into top-k");
+    }
+    // Scores ordered descending and match the factors.
+    for w in top.windows(2) {
+        assert!(w[0].1 >= w[1].1);
+    }
+    let seen: std::collections::HashSet<u32> = (0..10u32).collect();
+    let want = a2psgd::metrics::topn::rank_items(&reference, 0, &seen, 5);
+    assert_eq!(top[0].0, want[0].0);
+    drop(client);
+    let stats = svc.shutdown();
+    assert_eq!(stats.topk_served, 1);
+}
+
+#[test]
+fn mixed_predict_and_topk_traffic() {
+    let mut rng = Rng::new(6);
+    let f = Factors::init(20, 20, 16, 0.3, &mut rng);
+    let Some(svc) = start_service(f, (1.0, 5.0)) else { return };
+    std::thread::scope(|scope| {
+        let c1 = svc.client();
+        scope.spawn(move || {
+            for i in 0..200u32 {
+                c1.predict(i % 20, (i * 3) % 20).unwrap();
+            }
+        });
+        let c2 = svc.client();
+        scope.spawn(move || {
+            for i in 0..20u32 {
+                let top = c2.top_k(i % 20, 3).unwrap();
+                assert_eq!(top.len(), 3);
+            }
+        });
+    });
+    let stats = svc.shutdown();
+    assert_eq!(stats.served, 200);
+    assert_eq!(stats.topk_served, 20);
+}

@@ -1,0 +1,146 @@
+//! Cross-module integration: engines × datasets × configs, checking the
+//! paper's qualitative claims at smoke scale.
+
+use a2psgd::engine::{train, EngineKind, TrainConfig};
+use a2psgd::partition::PartitionKind;
+use a2psgd::prelude::*;
+
+fn cfg(engine: EngineKind, data: &Dataset, epochs: u32) -> TrainConfig {
+    TrainConfig::preset(engine, data)
+        .threads(4)
+        .epochs(epochs)
+        .no_early_stop()
+}
+
+#[test]
+fn all_engines_beat_mean_baseline_on_medium() {
+    let data = data::synthetic::medium(0x77);
+    let mean = data.train.mean_rating();
+    let base: f64 = {
+        let sse: f64 = data
+            .test
+            .entries()
+            .iter()
+            .map(|e| (e.r as f64 - mean).powi(2))
+            .sum();
+        (sse / data.test.nnz() as f64).sqrt()
+    };
+    for engine in EngineKind::paper_set() {
+        let r = train(&data, &cfg(engine, &data, 12)).unwrap();
+        assert!(
+            r.best_rmse() < base,
+            "{engine}: RMSE {:.4} !< mean-baseline {:.4}",
+            r.best_rmse(),
+            base
+        );
+    }
+}
+
+#[test]
+fn a2psgd_accuracy_competitive_with_baselines() {
+    // Paper Table III shape: A²PSGD's final accuracy is at least on par.
+    let data = data::synthetic::medium(0x88);
+    let mut results = Vec::new();
+    for engine in EngineKind::paper_set() {
+        let r = train(&data, &cfg(engine, &data, 20)).unwrap();
+        results.push((engine, r.best_rmse()));
+    }
+    let a2 = results
+        .iter()
+        .find(|(e, _)| *e == EngineKind::A2psgd)
+        .unwrap()
+        .1;
+    let best_baseline = results
+        .iter()
+        .filter(|(e, _)| *e != EngineKind::A2psgd)
+        .map(|(_, r)| *r)
+        .fold(f64::INFINITY, f64::min);
+    // Allow 2% slack at smoke scale — the paper's margins are sub-1%.
+    assert!(
+        a2 <= best_baseline * 1.02,
+        "A2PSGD {a2:.4} not competitive with best baseline {best_baseline:.4} ({results:?})"
+    );
+}
+
+#[test]
+fn more_threads_do_not_break_convergence() {
+    let data = data::synthetic::small(0x99);
+    for threads in [1usize, 2, 8] {
+        let c = cfg(EngineKind::A2psgd, &data, 10).threads(threads);
+        let r = train(&data, &c).unwrap();
+        assert!(
+            r.best_rmse() < 0.95,
+            "threads={threads}: RMSE {:.4}",
+            r.best_rmse()
+        );
+    }
+}
+
+#[test]
+fn balanced_partition_no_worse_than_uniform_for_a2psgd() {
+    let data = data::synthetic::medium(0xAA);
+    let run = |p: PartitionKind| {
+        let c = cfg(EngineKind::A2psgd, &data, 10).partition(p);
+        train(&data, &c).unwrap().best_rmse()
+    };
+    let uniform = run(PartitionKind::Uniform);
+    let balanced = run(PartitionKind::Balanced);
+    assert!(
+        balanced <= uniform * 1.03,
+        "balanced {balanced:.4} much worse than uniform {uniform:.4}"
+    );
+}
+
+#[test]
+fn seq_and_parallel_converge_to_similar_optimum() {
+    let data = data::synthetic::small(0xBB);
+    let seq = train(&data, &cfg(EngineKind::Seq, &data, 15)).unwrap();
+    let par = train(&data, &cfg(EngineKind::A2psgd, &data, 15)).unwrap();
+    assert!(
+        (seq.best_rmse() - par.best_rmse()).abs() < 0.05,
+        "seq {:.4} vs parallel {:.4}",
+        seq.best_rmse(),
+        par.best_rmse()
+    );
+}
+
+#[test]
+fn history_is_monotone_in_time() {
+    let data = data::synthetic::small(0xCC);
+    let r = train(&data, &cfg(EngineKind::Fpsgd, &data, 6)).unwrap();
+    let pts = r.history.points();
+    assert_eq!(pts.len(), 6);
+    for w in pts.windows(2) {
+        assert!(w[1].train_seconds >= w[0].train_seconds);
+        assert_eq!(w[1].epoch, w[0].epoch + 1);
+    }
+}
+
+#[test]
+fn nag_improves_over_gamma_zero_at_matched_step() {
+    // Ablation A3 shape at smoke scale.
+    let data = data::synthetic::medium(0xDD);
+    let base = a2psgd::config::presets::hyper_for(EngineKind::A2psgd, &data.name);
+    let run = |gamma: f32| {
+        let eta = base.eta * (1.0 - gamma) / (1.0 - 0.9);
+        let c = cfg(EngineKind::A2psgd, &data, 15)
+            .hyper(a2psgd::optim::Hyper::nag(eta, base.lam, gamma));
+        let r = train(&data, &c).unwrap();
+        r.history.best_rmse().map(|p| p.epoch).unwrap_or(u32::MAX)
+    };
+    let epochs_sgd = run(0.0);
+    let epochs_nag = run(0.9);
+    // NAG should reach its best at least as fast (within 30% slack for noise).
+    assert!(
+        (epochs_nag as f64) <= epochs_sgd as f64 * 1.3 + 2.0,
+        "nag best@{epochs_nag} vs sgd best@{epochs_sgd}"
+    );
+}
+
+#[test]
+fn report_serializes_to_csv() {
+    let data = data::synthetic::small(0xEE);
+    let r = train(&data, &cfg(EngineKind::Asgd, &data, 3)).unwrap();
+    let csv = r.history.to_csv();
+    assert_eq!(csv.lines().count(), 4); // header + 3 epochs
+}
