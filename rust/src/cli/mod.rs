@@ -7,6 +7,9 @@
 //!                [--data-file PATH] [--out DIR] [--no-early-stop]
 //! a2psgd compare [--dataset D] [--threads N] [--seeds N] [--epochs N] [--out DIR]
 //! a2psgd serve   [--dataset D] [--requests N] [--artifacts DIR]
+//! a2psgd stream  [--dataset D] [--warm-frac F] [--batch N] [--window N]
+//!                [--publish-every N] [--foldin-steps N] [--threads N]
+//!                [--epochs N] [--config FILE] [--save PATH] [--native]
 //! a2psgd gen-data --dataset D --out FILE [--seed S]
 //! a2psgd print-config [--dataset D]
 //! a2psgd eval    --data-file PATH (reserved)
@@ -26,7 +29,7 @@ pub struct Args {
 }
 
 /// Flags that take no value.
-const SWITCHES: &[&str] = &["no-early-stop", "verbose", "help", "xla-eval"];
+const SWITCHES: &[&str] = &["no-early-stop", "verbose", "help", "xla-eval", "native"];
 
 impl Args {
     /// Parse a raw argv (excluding the binary name).
@@ -101,6 +104,8 @@ USAGE:
   a2psgd train        train one engine on one dataset, print the report
   a2psgd compare      run the paper's engine set, print Tables III/IV rows
   a2psgd serve        train then serve batched predictions via XLA/PJRT
+  a2psgd stream       warm-train, then stream live events: fold-in, online
+                      NAG updates, and zero-downtime factor hot-swap
   a2psgd gen-data     write a synthetic dataset to a ratings file
   a2psgd print-config print the paper's hyperparameter tables (I/II)
   a2psgd help         this text
@@ -119,6 +124,15 @@ COMMON FLAGS:
   --out DIR        results directory (default: results/)
   --artifacts DIR  AOT artifacts (default: artifacts/)
   --no-early-stop  run all epochs
+
+STREAM FLAGS:
+  --warm-frac F      fraction of users trained offline, rest streamed (0.8)
+  --batch N          max events per micro-batch
+  --window N         sliding-window capacity
+  --publish-every N  snapshot publish cadence (batches)
+  --foldin-steps N   one-sided NAG sweeps per new node
+  --save PATH        write checkpoint (v2, with meta) + .idmap at the end
+  --native           serve with the native backend (no XLA artifacts)
 "
 }
 

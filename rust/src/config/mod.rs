@@ -9,6 +9,7 @@ pub use toml_lite::{parse, TomlValue, TomlDoc};
 use crate::engine::EngineKind;
 use crate::optim::Hyper;
 use crate::partition::PartitionKind;
+use crate::stream::StreamConfig;
 use crate::Result;
 use anyhow::Context;
 use std::path::Path;
@@ -118,6 +119,79 @@ impl RunConfig {
     }
 }
 
+/// Apply `[stream]` (and `[hyper]`) overrides from a TOML-subset file onto a
+/// base [`StreamConfig`] (usually [`StreamConfig::preset`]).
+///
+/// ```toml
+/// [stream]
+/// batch = 256
+/// window = 4096
+/// passes = 2
+/// publish_every = 4
+/// foldin_steps = 10
+/// holdout_every = 8
+/// holdout_cap = 1024
+/// threads = 8
+///
+/// [hyper]
+/// eta = 2e-3
+/// lam = 3e-2
+/// gamma = 9e-1
+/// ```
+pub fn stream_config_from_toml(text: &str, mut cfg: StreamConfig) -> Result<StreamConfig> {
+    let doc = parse(text)?;
+    // Checked lookup: negative values must error, not wrap through `as`
+    // into huge unsigned bounds that defeat validate().
+    let int = |k: &str| -> Result<Option<i64>> {
+        match doc.get("stream", k) {
+            None => Ok(None),
+            Some(v) => {
+                let x = v.as_int().with_context(|| format!("stream.{k} must be an int"))?;
+                anyhow::ensure!(x >= 0, "stream.{k} must be non-negative, got {x}");
+                Ok(Some(x))
+            }
+        }
+    };
+    if let Some(x) = int("batch")? {
+        cfg.batch = x as usize;
+    }
+    if let Some(x) = int("window")? {
+        cfg.window = x as usize;
+    }
+    if let Some(x) = int("passes")? {
+        cfg.passes = x as u32;
+    }
+    if let Some(x) = int("publish_every")? {
+        cfg.publish_every = x as u64;
+    }
+    if let Some(x) = int("foldin_steps")? {
+        cfg.foldin_steps = x as u32;
+    }
+    if let Some(x) = int("holdout_every")? {
+        cfg.holdout_every = x as u64;
+    }
+    if let Some(x) = int("holdout_cap")? {
+        cfg.holdout_cap = x as usize;
+    }
+    if let Some(x) = int("threads")? {
+        cfg.threads = x as usize;
+    }
+    if let Some(x) = int("seed")? {
+        cfg.seed = x as u64;
+    }
+    for (key, slot) in [
+        ("eta", &mut cfg.hyper.eta),
+        ("lam", &mut cfg.hyper.lam),
+        ("gamma", &mut cfg.hyper.gamma),
+    ] {
+        if let Some(v) = doc.get("hyper", key) {
+            *slot = v.as_float().with_context(|| format!("hyper.{key} must be a number"))? as f32;
+        }
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,5 +248,50 @@ lam = 3e-2
     #[test]
     fn bad_partition_rejected() {
         assert!(RunConfig::from_toml("[run]\npartition = \"diagonal\"\n").is_err());
+    }
+
+    #[test]
+    fn stream_config_overrides_applied() {
+        let base = StreamConfig::preset("small");
+        let text = r#"
+[stream]
+batch = 128
+window = 2048
+passes = 3
+publish_every = 2
+foldin_steps = 5
+holdout_every = 10
+holdout_cap = 256
+threads = 2
+seed = 99
+
+[hyper]
+eta = 1e-3
+gamma = 0.8
+"#;
+        let cfg = stream_config_from_toml(text, base).unwrap();
+        assert_eq!(cfg.batch, 128);
+        assert_eq!(cfg.window, 2048);
+        assert_eq!(cfg.passes, 3);
+        assert_eq!(cfg.publish_every, 2);
+        assert_eq!(cfg.foldin_steps, 5);
+        assert_eq!(cfg.holdout_every, 10);
+        assert_eq!(cfg.holdout_cap, 256);
+        assert_eq!(cfg.threads, 2);
+        assert_eq!(cfg.seed, 99);
+        assert!((cfg.hyper.eta - 1e-3).abs() < 1e-9);
+        assert!((cfg.hyper.gamma - 0.8).abs() < 1e-9);
+        // λ untouched by the partial [hyper] section.
+        assert!((cfg.hyper.lam - base.hyper.lam).abs() < 1e-9);
+    }
+
+    #[test]
+    fn stream_config_rejects_invalid_values() {
+        let base = StreamConfig::preset("small");
+        assert!(stream_config_from_toml("[stream]\nholdout_every = 1\n", base).is_err());
+        assert!(stream_config_from_toml("[stream]\nbatch = \"big\"\n", base).is_err());
+        // Negative ints must error, not wrap into huge unsigned bounds.
+        assert!(stream_config_from_toml("[stream]\nwindow = -1\n", base).is_err());
+        assert!(stream_config_from_toml("[stream]\npublish_every = -1\n", base).is_err());
     }
 }

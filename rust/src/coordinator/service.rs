@@ -1,25 +1,135 @@
 //! Post-training prediction service: a request router + dynamic batcher in
-//! front of the AOT `predict` artifact (vLLM-router-shaped, scaled to this
-//! paper's serving story).
+//! front of a pluggable execution backend (vLLM-router-shaped, scaled to
+//! this paper's serving story).
 //!
 //! Requests `(u, v)` arrive on a channel; the batcher drains up to the
-//! artifact batch size B or until `max_wait` elapses, gathers factor rows,
-//! executes one PJRT call, clamps to the rating scale, and answers each
+//! backend batch size B or until `max_wait` elapses, gathers factor rows,
+//! executes one backend call, clamps to the rating scale, and answers each
 //! request through its reply channel. Python is never involved.
+//!
+//! # Factors are read through a snapshot store (zero-downtime hot swap)
+//!
+//! The batcher does not own the factor matrices. It pins the current
+//! [`FactorSnapshot`] from a [`SnapshotStore`] **once per batch** and
+//! gathers rows from that immutable pin, so a publisher (e.g. the online
+//! trainer in [`crate::stream`]) can swap in refreshed — even *larger*,
+//! after fold-in — factors at any time without the service restarting or a
+//! request ever observing a torn write. [`ServiceStats::last_version`] and
+//! [`ServiceStats::versions_seen`] record the handover history. Requests
+//! naming nodes unknown to the pinned snapshot answer the rating-scale
+//! midpoint (the calibrated "know nothing" prior) rather than failing.
+//!
+//! # Backends
+//!
+//! - **XLA/PJRT** — the AOT `predict`/`recommend` artifacts (requires the
+//!   `xla` cargo feature and `make artifacts`).
+//! - **Native** — a portable fallback computing the same dot products on
+//!   the batcher thread; used when artifacts are unavailable
+//!   ([`BackendMode::Auto`]) or by explicit request
+//!   ([`BackendMode::NativeOnly`]), which keeps the full online-serving
+//!   pipeline runnable on any build.
 
+use crate::model::snapshot::{FactorSnapshot, SnapshotStore};
 use crate::model::Factors;
 use crate::runtime::XlaRuntime;
 use crate::Result;
 use anyhow::Context;
+use std::collections::{HashMap, HashSet};
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Batch capacity of the native (non-XLA) backend.
+const NATIVE_BATCH: usize = 64;
 
 /// One service request.
 enum Request {
     /// Point prediction r̂(u, v).
     Predict { u: u32, v: u32, reply: mpsc::Sender<f32> },
-    /// Top-k recommendation for user u (via the `recommend` artifact).
+    /// Top-k recommendation for user u.
     TopK { u: u32, k: usize, reply: mpsc::Sender<Vec<(u32, f32)>> },
+}
+
+/// Shared, growable per-user top-k exclusion sets.
+///
+/// Seeded from the training matrix at service start and (optionally) shared
+/// with the online trainer, which records streamed interactions — so a user
+/// is never recommended an item they already consumed, including items
+/// rated *after* fold-in. Writers batch their inserts ([`ExclusionSet::
+/// extend`]); the batcher takes one lock per top-k request.
+#[derive(Default)]
+pub struct ExclusionSet {
+    inner: std::sync::Mutex<HashMap<u32, HashSet<u32>>>,
+}
+
+impl ExclusionSet {
+    /// Empty set.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Seed from a training matrix (the standard serve-time protocol).
+    pub fn from_matrix(train: &crate::sparse::CooMatrix) -> Self {
+        let set = Self::new();
+        set.extend(train.entries().iter().map(|e| (e.u, e.v)));
+        set
+    }
+
+    /// Record consumed `(user, item)` pairs (one lock for the whole batch).
+    pub fn extend(&self, pairs: impl IntoIterator<Item = (u32, u32)>) {
+        let mut g = self.inner.lock().expect("exclusion set poisoned");
+        for (u, v) in pairs {
+            g.entry(u).or_default().insert(v);
+        }
+    }
+
+    /// Snapshot of user `u`'s excluded items.
+    pub fn for_user(&self, u: u32) -> HashSet<u32> {
+        self.inner
+            .lock()
+            .expect("exclusion set poisoned")
+            .get(&u)
+            .cloned()
+            .unwrap_or_default()
+    }
+}
+
+/// How the service picks its execution backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendMode {
+    /// Load the XLA artifacts or fail to start.
+    XlaRequired,
+    /// Try XLA; fall back to the native backend if loading fails.
+    Auto,
+    /// Always use the native backend (no artifacts needed).
+    NativeOnly,
+}
+
+/// Execution backend for batched predictions and top-k scans.
+enum Backend {
+    Xla(XlaRuntime),
+    Native,
+}
+
+impl Backend {
+    fn batch_size(&self) -> usize {
+        match self {
+            Backend::Xla(rt) => rt.shapes.b,
+            Backend::Native => NATIVE_BATCH,
+        }
+    }
+
+    /// r̂[lane] = ⟨mu[lane,:], nv[lane,:]⟩ over `B × d` gathered rows.
+    fn predict_batch(&self, mu: &[f32], nv: &[f32], d: usize) -> Result<Vec<f32>> {
+        match self {
+            Backend::Xla(rt) => rt.predict_batch(mu, nv),
+            Backend::Native => Ok(mu
+                .chunks_exact(d)
+                .zip(nv.chunks_exact(d))
+                .map(|(a, b)| crate::model::dot(a, b))
+                .collect()),
+        }
+    }
 }
 
 /// Service statistics.
@@ -27,12 +137,17 @@ enum Request {
 pub struct ServiceStats {
     /// Requests answered.
     pub served: u64,
-    /// PJRT batches executed.
+    /// Backend batches executed.
     pub batches: u64,
     /// Top-k requests answered.
     pub topk_served: u64,
     /// Sum of batch occupancies (served / batches = mean batch size).
     pub occupancy_sum: u64,
+    /// Distinct snapshot versions observed while serving (≥ 1 once any
+    /// request was served; > 1 ⇒ factors were hot-swapped in-flight).
+    pub versions_seen: u64,
+    /// Snapshot version of the most recent batch.
+    pub last_version: u64,
 }
 
 impl ServiceStats {
@@ -55,12 +170,19 @@ pub struct ServiceClient {
 impl ServiceClient {
     /// Blocking point prediction.
     pub fn predict(&self, u: u32, v: u32) -> Result<f32> {
+        let rx = self.predict_async(u, v)?;
+        rx.recv().context("service dropped the request")
+    }
+
+    /// Fire a prediction and return the reply channel without waiting.
+    /// Dropping the receiver is allowed; the service discards the answer.
+    pub fn predict_async(&self, u: u32, v: u32) -> Result<mpsc::Receiver<f32>> {
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(Request::Predict { u, v, reply })
             .ok()
             .context("service stopped")?;
-        rx.recv().context("service dropped the request")
+        Ok(rx)
     }
 
     /// Blocking top-k recommendation (items the user rated in training are
@@ -78,12 +200,7 @@ impl ServiceClient {
     pub fn predict_many(&self, pairs: &[(u32, u32)]) -> Result<Vec<f32>> {
         let mut rxs = Vec::with_capacity(pairs.len());
         for &(u, v) in pairs {
-            let (reply, rx) = mpsc::channel();
-            self.tx
-                .send(Request::Predict { u, v, reply })
-                .ok()
-                .context("service stopped")?;
-            rxs.push(rx);
+            rxs.push(self.predict_async(u, v)?);
         }
         rxs.into_iter()
             .map(|rx| rx.recv().context("service dropped a request"))
@@ -100,11 +217,9 @@ pub struct PredictionService {
 }
 
 impl PredictionService {
-    /// Spawn the batcher thread over trained factors.
-    ///
-    /// The PJRT runtime is constructed *inside* the worker thread (the xla
-    /// crate's client is `!Send`), so this takes the artifacts directory and
-    /// reports load/compile errors synchronously through a startup channel.
+    /// Spawn the batcher thread over trained factors (XLA artifacts
+    /// required; see [`PredictionService::start_over_store`] for hot-swap
+    /// serving and backend selection).
     ///
     /// `max_wait` bounds added latency when traffic is sparse: a non-full
     /// batch launches once the oldest queued request has waited this long.
@@ -126,20 +241,49 @@ impl PredictionService {
         max_wait: Duration,
         train: Option<crate::sparse::CooMatrix>,
     ) -> Result<Self> {
+        let store = Arc::new(SnapshotStore::new(factors));
+        let exclusions = train.map(|t| Arc::new(ExclusionSet::from_matrix(&t)));
+        Self::start_over_store(artifacts_dir, store, clamp, max_wait, exclusions, BackendMode::XlaRequired)
+    }
+
+    /// Spawn the batcher over a shared [`SnapshotStore`]: the service pins
+    /// the current snapshot per batch, so whoever holds the store can
+    /// publish refreshed factors with zero service downtime.
+    ///
+    /// The backend (XLA artifacts vs native) is chosen per `mode`. The PJRT
+    /// runtime is constructed *inside* the worker thread (the xla crate's
+    /// client is `!Send`), so this takes the artifacts directory and reports
+    /// load/compile errors synchronously through a startup channel.
+    pub fn start_over_store(
+        artifacts_dir: std::path::PathBuf,
+        store: Arc<SnapshotStore>,
+        clamp: (f32, f32),
+        max_wait: Duration,
+        exclusions: Option<Arc<ExclusionSet>>,
+        mode: BackendMode,
+    ) -> Result<Self> {
         let (tx, rx) = mpsc::channel::<Request>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let worker = std::thread::spawn(move || {
-            let runtime = match XlaRuntime::load(&artifacts_dir) {
-                Ok(rt) => {
-                    let _ = ready_tx.send(Ok(()));
-                    rt
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return ServiceStats::default();
-                }
+            let backend = match mode {
+                BackendMode::NativeOnly => Backend::Native,
+                BackendMode::XlaRequired => match XlaRuntime::load(&artifacts_dir) {
+                    Ok(rt) => Backend::Xla(rt),
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return ServiceStats::default();
+                    }
+                },
+                BackendMode::Auto => match XlaRuntime::load(&artifacts_dir) {
+                    Ok(rt) => Backend::Xla(rt),
+                    Err(e) => {
+                        eprintln!("service: XLA backend unavailable ({e:#}); using native backend");
+                        Backend::Native
+                    }
+                },
             };
-            run_batcher(runtime, factors, clamp, max_wait, train, rx)
+            let _ = ready_tx.send(Ok(()));
+            run_batcher(backend, store, clamp, max_wait, exclusions, rx)
         });
         match ready_rx.recv() {
             Ok(Ok(())) => Ok(PredictionService { client: ServiceClient { tx }, worker }),
@@ -168,29 +312,29 @@ impl PredictionService {
     }
 }
 
+/// Top-k state cached across batches: the padded item matrix is rebuilt
+/// only when the snapshot version changes (XLA backend only).
+struct TopKCache {
+    version: u64,
+    n_padded: Vec<f32>,
+}
+
 fn run_batcher(
-    runtime: XlaRuntime,
-    factors: Factors,
+    backend: Backend,
+    store: Arc<SnapshotStore>,
     clamp: (f32, f32),
     max_wait: Duration,
-    train: Option<crate::sparse::CooMatrix>,
+    exclusions: Option<Arc<ExclusionSet>>,
     rx: mpsc::Receiver<Request>,
 ) -> ServiceStats {
-    let b = runtime.shapes.b;
-    let d = runtime.shapes.d;
+    let b = backend.batch_size();
+    let midpoint = 0.5 * (clamp.0 + clamp.1);
+    let d = store.load().factors().d();
     let mut stats = ServiceStats::default();
     let mut mu = vec![0f32; b * d];
     let mut nv = vec![0f32; b * d];
-    // Top-k state: padded item matrix + per-user exclusion sets.
-    let n_padded = crate::runtime::pad_item_matrix(&factors, runtime.shapes.v);
-    let mut seen: Vec<std::collections::HashSet<u32>> =
-        vec![std::collections::HashSet::new(); factors.nrows() as usize];
-    if let Some(train) = &train {
-        for e in train.entries() {
-            seen[e.u as usize].insert(e.v);
-        }
-    }
-    let empty = std::collections::HashSet::new();
+    let mut known = vec![false; b];
+    let mut topk_cache: Option<TopKCache> = None;
     let mut batch: Vec<(u32, u32, mpsc::Sender<f32>)> = Vec::with_capacity(b);
     loop {
         // Block for the first request; then drain greedily until B or timeout.
@@ -205,9 +349,16 @@ fn run_batcher(
                 Some(Request::Predict { u, v, reply }) => batch.push((u, v, reply)),
                 Some(Request::TopK { u, k, reply }) => {
                     // Top-k is a whole-catalog scan — served immediately,
-                    // not batched with point predictions.
-                    let ex = seen.get(u as usize).unwrap_or(&empty);
-                    match runtime.top_k(&factors, &n_padded, u, k, ex) {
+                    // not batched with point predictions. Exclusions are
+                    // re-read per request: the online trainer keeps adding
+                    // streamed interactions to the shared set.
+                    let snap = store.load();
+                    observe_version(&mut stats, &snap);
+                    let ex = exclusions
+                        .as_ref()
+                        .map(|e| e.for_user(u))
+                        .unwrap_or_default();
+                    match serve_top_k(&backend, &snap, &mut topk_cache, u, k, &ex) {
                         Ok(top) => {
                             let _ = reply.send(top);
                             stats.topk_served += 1;
@@ -233,23 +384,40 @@ fn run_batcher(
         if batch.is_empty() {
             continue; // the window held only top-k traffic
         }
-        // Gather rows; unused lanes keep zeros (prediction discarded).
+        // Pin the current snapshot for this whole batch (hot-swap boundary).
+        let snap = store.load();
+        observe_version(&mut stats, &snap);
+        let f = snap.factors();
+        debug_assert_eq!(f.d(), d, "hot swap must preserve the feature dimension");
+        // Gather rows; unknown nodes and unused lanes keep zeros (their
+        // prediction is replaced by the midpoint / discarded).
+        known.fill(false);
         for (lane, (u, v, _)) in batch.iter().enumerate() {
-            mu[lane * d..(lane + 1) * d].copy_from_slice(factors.m_row(*u));
-            nv[lane * d..(lane + 1) * d].copy_from_slice(factors.n_row(*v));
+            if *u < f.nrows() && *v < f.ncols() {
+                mu[lane * d..(lane + 1) * d].copy_from_slice(f.m_row(*u));
+                nv[lane * d..(lane + 1) * d].copy_from_slice(f.n_row(*v));
+                known[lane] = true;
+            } else {
+                mu[lane * d..(lane + 1) * d].iter_mut().for_each(|x| *x = 0.0);
+                nv[lane * d..(lane + 1) * d].iter_mut().for_each(|x| *x = 0.0);
+            }
         }
         for lane in batch.len()..b {
             mu[lane * d..(lane + 1) * d].iter_mut().for_each(|x| *x = 0.0);
             nv[lane * d..(lane + 1) * d].iter_mut().for_each(|x| *x = 0.0);
         }
-        let preds = match runtime.predict_batch(&mu, &nv) {
+        let preds = match backend.predict_batch(&mu, &nv, d) {
             Ok(p) => p,
-            Err(_) => break, // runtime failure: drop in-flight, stop service
+            Err(_) => break, // backend failure: drop in-flight, stop service
         };
         stats.batches += 1;
         stats.occupancy_sum += batch.len() as u64;
         for (lane, (_, _, reply)) in batch.drain(..).enumerate() {
-            let p = preds[lane].clamp(clamp.0, clamp.1);
+            let p = if known[lane] {
+                preds[lane].clamp(clamp.0, clamp.1)
+            } else {
+                midpoint
+            };
             let _ = reply.send(p); // client may have gone away; fine
             stats.served += 1;
         }
@@ -257,4 +425,55 @@ fn run_batcher(
     stats
 }
 
-// Integration coverage (requires artifacts): rust/tests/integration_service.rs
+fn observe_version(stats: &mut ServiceStats, snap: &FactorSnapshot) {
+    if snap.version() != stats.last_version {
+        stats.last_version = snap.version();
+        stats.versions_seen += 1;
+    }
+}
+
+/// Top-k for one user under the pinned snapshot. The XLA `recommend`
+/// artifact is used when the catalog fits its padding; otherwise (native
+/// backend, unknown user, or a catalog grown past the padding) a native
+/// scan computes the same scores.
+fn serve_top_k(
+    backend: &Backend,
+    snap: &FactorSnapshot,
+    cache: &mut Option<TopKCache>,
+    u: u32,
+    k: usize,
+    seen: &HashSet<u32>,
+) -> Result<Vec<(u32, f32)>> {
+    let f = snap.factors();
+    if u >= f.nrows() {
+        return Ok(Vec::new()); // unknown user: no candidates yet
+    }
+    if let Backend::Xla(rt) = backend {
+        let fits = f.n.len() <= rt.shapes.v * f.d();
+        if fits {
+            let fresh = match cache {
+                Some(c) => c.version != snap.version(),
+                None => true,
+            };
+            if fresh {
+                *cache = Some(TopKCache {
+                    version: snap.version(),
+                    n_padded: crate::runtime::pad_item_matrix(f, rt.shapes.v),
+                });
+            }
+            let n_padded = &cache.as_ref().expect("cache filled above").n_padded;
+            return rt.top_k(f, n_padded, u, k, seen);
+        }
+    }
+    // Native scan.
+    let mu = f.m_row(u);
+    let scored: Vec<(u32, f32)> = (0..f.ncols())
+        .filter(|v| !seen.contains(v))
+        .map(|v| (v, crate::model::dot(mu, f.n_row(v))))
+        .collect();
+    Ok(crate::metrics::topn::take_top_k(scored, k))
+}
+
+// Integration coverage: rust/tests/integration_service.rs (XLA backend,
+// requires artifacts) and rust/tests/integration_stream.rs (native backend,
+// batcher edge cases, hot-swap protocol).

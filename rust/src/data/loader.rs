@@ -13,7 +13,173 @@ use crate::sparse::CooMatrix;
 use crate::Result;
 use anyhow::{bail, Context};
 use std::collections::HashMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
+
+/// Bidirectional external↔dense id map built during re-indexing.
+///
+/// External ids (the sparse `u64` ids in the raw files, or any application
+/// key space) map to the dense `[0, n)` row/column indices the factor
+/// matrices use. The map is persistable ([`IdMap::save`]/[`IdMap::load`]) so
+/// external ids survive process restarts and can be resolved at serve time,
+/// and it is growable ([`IdMap::intern_user`]/[`IdMap::intern_item`]) so the
+/// streaming subsystem can fold in never-before-seen nodes.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct IdMap {
+    users: HashMap<u64, u32>,
+    items: HashMap<u64, u32>,
+    user_ids: Vec<u64>,
+    item_ids: Vec<u64>,
+}
+
+impl IdMap {
+    /// Empty map.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Identity map over dense ranges (synthetic datasets: external id ==
+    /// dense id). Useful to seed streaming over already-dense data.
+    pub fn identity(n_users: u32, n_items: u32) -> Self {
+        let mut map = IdMap::new();
+        for u in 0..n_users {
+            map.intern_user(u as u64);
+        }
+        for v in 0..n_items {
+            map.intern_item(v as u64);
+        }
+        map
+    }
+
+    /// Number of known users (== next dense user id).
+    pub fn n_users(&self) -> u32 {
+        self.user_ids.len() as u32
+    }
+
+    /// Number of known items.
+    pub fn n_items(&self) -> u32 {
+        self.item_ids.len() as u32
+    }
+
+    /// Dense id of an external user id, if known.
+    pub fn user(&self, ext: u64) -> Option<u32> {
+        self.users.get(&ext).copied()
+    }
+
+    /// Dense id of an external item id, if known.
+    pub fn item(&self, ext: u64) -> Option<u32> {
+        self.items.get(&ext).copied()
+    }
+
+    /// External id of a dense user id, if in range.
+    pub fn external_user(&self, dense: u32) -> Option<u64> {
+        self.user_ids.get(dense as usize).copied()
+    }
+
+    /// External id of a dense item id, if in range.
+    pub fn external_item(&self, dense: u32) -> Option<u64> {
+        self.item_ids.get(dense as usize).copied()
+    }
+
+    /// Dense id for an external user id, assigning the next free dense id if
+    /// unseen. Returns `(dense, is_new)`.
+    pub fn intern_user(&mut self, ext: u64) -> (u32, bool) {
+        match self.users.entry(ext) {
+            std::collections::hash_map::Entry::Occupied(e) => (*e.get(), false),
+            std::collections::hash_map::Entry::Vacant(e) => {
+                let dense = self.user_ids.len() as u32;
+                e.insert(dense);
+                self.user_ids.push(ext);
+                (dense, true)
+            }
+        }
+    }
+
+    /// Dense id for an external item id (see [`IdMap::intern_user`]).
+    pub fn intern_item(&mut self, ext: u64) -> (u32, bool) {
+        match self.items.entry(ext) {
+            std::collections::hash_map::Entry::Occupied(e) => (*e.get(), false),
+            std::collections::hash_map::Entry::Vacant(e) => {
+                let dense = self.item_ids.len() as u32;
+                e.insert(dense);
+                self.item_ids.push(ext);
+                (dense, true)
+            }
+        }
+    }
+
+    /// Serialize to the line-oriented `.idmap` text format.
+    pub fn to_text(&self) -> String {
+        let mut s = String::with_capacity(16 * (self.user_ids.len() + self.item_ids.len()) + 64);
+        s.push_str("A2IDMAP v1\n");
+        s.push_str(&format!("users {}\n", self.user_ids.len()));
+        for id in &self.user_ids {
+            s.push_str(&format!("{id}\n"));
+        }
+        s.push_str(&format!("items {}\n", self.item_ids.len()));
+        for id in &self.item_ids {
+            s.push_str(&format!("{id}\n"));
+        }
+        s
+    }
+
+    /// Parse the `.idmap` text format.
+    pub fn from_text(text: &str) -> Result<Self> {
+        let mut lines = text.lines();
+        let header = lines.next().context("empty idmap file")?;
+        if header.trim() != "A2IDMAP v1" {
+            bail!("not an a2psgd idmap (bad header {header:?})");
+        }
+        let mut map = IdMap::new();
+        for (kind, expect_users) in [("users", true), ("items", false)] {
+            let decl = lines
+                .next()
+                .with_context(|| format!("idmap missing {kind} section"))?;
+            let count: usize = decl
+                .strip_prefix(kind)
+                .map(str::trim)
+                .and_then(|n| n.parse().ok())
+                .with_context(|| format!("bad idmap section header {decl:?}"))?;
+            for i in 0..count {
+                let ext: u64 = lines
+                    .next()
+                    .with_context(|| format!("idmap truncated in {kind} at {i}"))?
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("bad external id in {kind} at {i}"))?;
+                let (_, fresh) = if expect_users {
+                    map.intern_user(ext)
+                } else {
+                    map.intern_item(ext)
+                };
+                if !fresh {
+                    bail!("duplicate external id {ext} in idmap {kind}");
+                }
+            }
+        }
+        Ok(map)
+    }
+
+    /// Write the map next to a dataset (see [`idmap_path_for`]).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_text())
+            .with_context(|| format!("writing idmap {}", path.display()))
+    }
+
+    /// Read a previously saved map.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading idmap {}", path.display()))?;
+        Self::from_text(&text).with_context(|| format!("parsing idmap {}", path.display()))
+    }
+}
+
+/// Conventional sidecar path for a dataset's persisted id map
+/// (`ratings.dat` → `ratings.dat.idmap`).
+pub fn idmap_path_for(data_path: &Path) -> PathBuf {
+    let mut os = data_path.as_os_str().to_os_string();
+    os.push(".idmap");
+    PathBuf::from(os)
+}
 
 /// Recognized on-disk formats.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -74,43 +240,61 @@ pub fn parse_triplets(text: &str) -> Result<Vec<(u64, u64, f32)>> {
     Ok(out)
 }
 
-/// Re-index sparse ids to dense `[0, n)` and build a COO matrix.
-pub fn triplets_to_coo(triplets: &[(u64, u64, f32)]) -> Result<CooMatrix> {
-    let mut umap: HashMap<u64, u32> = HashMap::new();
-    let mut vmap: HashMap<u64, u32> = HashMap::new();
+/// Re-index sparse ids to dense `[0, n)` and build a COO matrix, returning
+/// the [`IdMap`] so external ids can be resolved (and persisted) later.
+pub fn triplets_to_coo_with_map(triplets: &[(u64, u64, f32)]) -> Result<(CooMatrix, IdMap)> {
+    let mut map = IdMap::new();
     for &(u, v, _) in triplets {
-        let next_u = umap.len() as u32;
-        umap.entry(u).or_insert(next_u);
-        let next_v = vmap.len() as u32;
-        vmap.entry(v).or_insert(next_v);
+        map.intern_user(u);
+        map.intern_item(v);
     }
-    let mut coo = CooMatrix::new(umap.len() as u32, vmap.len() as u32);
+    let mut coo = CooMatrix::new(map.n_users(), map.n_items());
     for &(u, v, r) in triplets {
-        coo.push(umap[&u], vmap[&v], r)?;
+        let du = map.user(u).expect("interned above");
+        let dv = map.item(v).expect("interned above");
+        coo.push(du, dv, r)?;
     }
-    Ok(coo)
+    Ok((coo, map))
 }
 
-/// Load a ratings file into a split [`Dataset`].
-pub fn load_file(path: &Path, name: &str, test_frac: f64, seed: u64) -> Result<Dataset> {
+/// Re-index sparse ids to dense `[0, n)` and build a COO matrix.
+pub fn triplets_to_coo(triplets: &[(u64, u64, f32)]) -> Result<CooMatrix> {
+    Ok(triplets_to_coo_with_map(triplets)?.0)
+}
+
+/// [`load_file`] that also returns the external↔dense [`IdMap`].
+pub fn load_file_with_map(
+    path: &Path,
+    name: &str,
+    test_frac: f64,
+    seed: u64,
+) -> Result<(Dataset, IdMap)> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading {}", path.display()))?;
     let triplets = parse_triplets(&text)?;
     if triplets.is_empty() {
         bail!("{}: no data lines found", path.display());
     }
-    let mut coo = triplets_to_coo(&triplets)?;
+    let (mut coo, map) = triplets_to_coo_with_map(&triplets)?;
     coo.dedup();
     let (lo, hi) = coo.rating_range();
     let mut rng = Rng::new(seed);
     let (train, test) = split_train_test(&coo, test_frac, &mut rng);
-    Ok(Dataset {
-        name: name.to_string(),
-        train,
-        test,
-        rating_min: lo,
-        rating_max: hi,
-    })
+    Ok((
+        Dataset {
+            name: name.to_string(),
+            train,
+            test,
+            rating_min: lo,
+            rating_max: hi,
+        },
+        map,
+    ))
+}
+
+/// Load a ratings file into a split [`Dataset`].
+pub fn load_file(path: &Path, name: &str, test_frac: f64, seed: u64) -> Result<Dataset> {
+    Ok(load_file_with_map(path, name, test_frac, seed)?.0)
 }
 
 #[cfg(test)]
@@ -179,5 +363,73 @@ mod tests {
     #[test]
     fn load_missing_file_errors() {
         assert!(load_file(Path::new("/nonexistent/x.dat"), "x", 0.3, 1).is_err());
+    }
+
+    #[test]
+    fn idmap_intern_is_stable_and_dense() {
+        let mut map = IdMap::new();
+        assert_eq!(map.intern_user(100), (0, true));
+        assert_eq!(map.intern_user(500), (1, true));
+        assert_eq!(map.intern_user(100), (0, false));
+        assert_eq!(map.intern_item(9000), (0, true));
+        assert_eq!(map.n_users(), 2);
+        assert_eq!(map.n_items(), 1);
+        assert_eq!(map.user(500), Some(1));
+        assert_eq!(map.user(7), None);
+        assert_eq!(map.external_user(1), Some(500));
+        assert_eq!(map.external_item(0), Some(9000));
+        assert_eq!(map.external_item(1), None);
+    }
+
+    #[test]
+    fn idmap_text_roundtrip() {
+        let t = vec![(100u64, 9000u64, 5.0f32), (500, 9000, 3.0), (100, 9001, 1.0)];
+        let (_, map) = triplets_to_coo_with_map(&t).unwrap();
+        let back = IdMap::from_text(&map.to_text()).unwrap();
+        assert_eq!(map, back);
+    }
+
+    #[test]
+    fn idmap_file_roundtrip_survives_restart() {
+        let dir = std::env::temp_dir().join("a2psgd_idmap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let data_path = dir.join("ratings.dat");
+        let map_path = idmap_path_for(&data_path);
+        assert!(map_path.to_string_lossy().ends_with("ratings.dat.idmap"));
+        let mut map = IdMap::new();
+        map.intern_user(42);
+        map.intern_user(7);
+        map.intern_item(u64::MAX);
+        map.save(&map_path).unwrap();
+        // "Process restart": reload from disk and resolve serve-time ids.
+        let back = IdMap::load(&map_path).unwrap();
+        assert_eq!(back.user(42), Some(0));
+        assert_eq!(back.user(7), Some(1));
+        assert_eq!(back.item(u64::MAX), Some(0));
+        std::fs::remove_file(&map_path).ok();
+    }
+
+    #[test]
+    fn idmap_rejects_garbage() {
+        assert!(IdMap::from_text("").is_err());
+        assert!(IdMap::from_text("WRONG\nusers 0\nitems 0\n").is_err());
+        assert!(IdMap::from_text("A2IDMAP v1\nusers 2\n5\n").is_err()); // truncated
+        assert!(IdMap::from_text("A2IDMAP v1\nusers 2\n5\n5\nitems 0\n").is_err()); // dup
+        assert!(IdMap::from_text("A2IDMAP v1\nusers 1\nxyz\nitems 0\n").is_err());
+    }
+
+    #[test]
+    fn load_file_with_map_resolves_external_ids() {
+        let dir = std::env::temp_dir().join("a2psgd_loader_map_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("ratings.dat");
+        std::fs::write(&p, "10::7000::5::0\n11::7000::3::0\n10::7001::1::0\n").unwrap();
+        let (d, map) = load_file_with_map(&p, "mini", 0.0, 1).unwrap();
+        assert_eq!(d.nrows(), 2);
+        assert_eq!(d.ncols(), 2);
+        assert_eq!(map.user(10), Some(0));
+        assert_eq!(map.user(11), Some(1));
+        assert_eq!(map.item(7001), Some(1));
+        std::fs::remove_file(&p).ok();
     }
 }

@@ -13,6 +13,16 @@
 //! - **Layer 2/1 (python/compile)** — batched LR-model math in JAX calling
 //!   Pallas kernels, AOT-lowered once to HLO text and executed from the
 //!   [`runtime`] module via XLA/PJRT. Python is never on the request path.
+//! - **Online learning ([`stream`])** — streaming event ingestion in bounded
+//!   micro-batches, incremental fold-in for never-before-seen nodes, a
+//!   sliding-window online trainer on the lock-free scheduler, and
+//!   zero-downtime factor hot-swap ([`model::snapshot`]): the prediction
+//!   service reads an epoch-versioned snapshot per batch, so refreshed
+//!   factors go live without a restart.
+//!
+//! The XLA/PJRT bindings sit behind the on-by-default `xla` cargo feature;
+//! `--no-default-features` swaps [`runtime`] for a stub and keeps everything
+//! else (native engines, streaming, native serving backend) fully working.
 //!
 //! Quickstart:
 //!
@@ -39,9 +49,14 @@ pub mod optim;
 pub mod partition;
 pub mod proptest_lite;
 pub mod rng;
+#[cfg(feature = "xla")]
+pub mod runtime;
+#[cfg(not(feature = "xla"))]
+#[path = "runtime/stub.rs"]
 pub mod runtime;
 pub mod scheduler;
 pub mod sparse;
+pub mod stream;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;
@@ -54,7 +69,9 @@ pub mod prelude {
     pub use crate::metrics::MeanStd;
     pub use crate::model::Factors;
     pub use crate::optim::Hyper;
+    pub use crate::model::snapshot::{FactorSnapshot, SnapshotStore};
     pub use crate::partition::PartitionKind;
     pub use crate::rng::Rng;
+    pub use crate::stream::{self, StreamConfig};
     pub use crate::Result;
 }

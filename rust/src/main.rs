@@ -23,6 +23,7 @@ fn run(argv: &[String]) -> Result<()> {
         "train" => cmd_train(&args),
         "compare" => cmd_compare(&args),
         "serve" => cmd_serve(&args),
+        "stream" => cmd_stream(&args),
         "gen-data" => cmd_gen_data(&args),
         "print-config" => cmd_print_config(&args),
         "tune" => cmd_tune(&args),
@@ -238,6 +239,199 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("top-{k} for user 0 (train items excluded):");
     for (v, score) in top {
         println!("  item {v:>6}  score {score:.3}");
+    }
+    Ok(())
+}
+
+/// Warm-train on a prefix of users, then replay the remaining users'
+/// interactions as a live stream: incremental fold-in, sliding-window online
+/// NAG, and zero-downtime factor hot-swap into a running prediction service.
+fn cmd_stream(args: &Args) -> Result<()> {
+    use a2psgd::coordinator::service::{BackendMode, ExclusionSet};
+    use a2psgd::model::SnapshotStore;
+    use a2psgd::stream::{self, EventSource, OnlineTrainer, StreamConfig};
+    use std::sync::Arc;
+
+    let key = args.get_or("dataset", "small");
+    let seed = args.get_parsed::<u64>("seed")?.unwrap_or(0x5EED);
+    let data = a2psgd::coordinator::resolve_dataset(&key, seed)?;
+    eprintln!("dataset {}", data.describe());
+    let warm_frac = args.get_parsed::<f64>("warm-frac")?.unwrap_or(0.8);
+    anyhow::ensure!(
+        0.0 < warm_frac && warm_frac < 1.0,
+        "--warm-frac must be in (0, 1), got {warm_frac}"
+    );
+    let mut split = stream::replay_split(&data, warm_frac, seed);
+    eprintln!(
+        "warm split: {} warm users, {} cold users, {} stream events",
+        split.warm.nrows(),
+        split.n_cold_users,
+        split.stream.remaining()
+    );
+
+    // Stream config: preset → --config file → flags.
+    let mut scfg = StreamConfig::preset(&data.name).seed(seed);
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        scfg = a2psgd::config::stream_config_from_toml(&text, scfg)?;
+    }
+    if let Some(x) = args.get_parsed::<usize>("batch")? {
+        scfg = scfg.batch(x);
+    }
+    if let Some(x) = args.get_parsed::<usize>("window")? {
+        scfg = scfg.window(x);
+    }
+    if let Some(x) = args.get_parsed::<u64>("publish-every")? {
+        scfg = scfg.publish_every(x);
+    }
+    if let Some(x) = args.get_parsed::<u32>("foldin-steps")? {
+        scfg = scfg.foldin_steps(x);
+    }
+    if let Some(x) = args.get_parsed::<usize>("threads")? {
+        scfg = scfg.threads(x);
+    }
+    let mut h = scfg.hyper;
+    if let Some(x) = args.get_parsed::<f32>("eta")? {
+        h.eta = x;
+    }
+    if let Some(x) = args.get_parsed::<f32>("lam")? {
+        h.lam = x;
+    }
+    if let Some(x) = args.get_parsed::<f32>("gamma")? {
+        h.gamma = x;
+    }
+    scfg = scfg.hyper(h);
+    scfg.validate()?;
+
+    // 1. Warm offline training.
+    let engine = EngineKind::parse(&args.get_or("engine", "a2psgd"))?;
+    let mut tcfg = TrainConfig::preset(engine, &split.warm)
+        .threads(scfg.threads)
+        .seed(seed);
+    if let Some(e) = args.get_parsed::<u32>("epochs")? {
+        tcfg = tcfg.epochs(e);
+    }
+    let report = train(&split.warm, &tcfg)?;
+    eprintln!("warm training: best RMSE {:.4} over {} epochs", report.best_rmse(), report.history.points().len());
+
+    // 2. Service over a hot-swappable snapshot store (version 1 = warm).
+    let store = Arc::new(SnapshotStore::new(report.factors.clone()));
+    let mode = if args.has("native") { BackendMode::NativeOnly } else { BackendMode::Auto };
+    let dir = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(a2psgd::runtime::default_artifacts_dir);
+    let exclusions = Arc::new(ExclusionSet::from_matrix(&split.warm.train));
+    let svc = a2psgd::coordinator::service::PredictionService::start_over_store(
+        dir,
+        Arc::clone(&store),
+        (data.rating_min, data.rating_max),
+        std::time::Duration::from_millis(2),
+        Some(Arc::clone(&exclusions)),
+        mode,
+    )
+    .context("starting the prediction service")?;
+    let client = svc.client();
+
+    // A cold (not-warm-trained) user to watch across the swap.
+    let cold_probe = data
+        .train
+        .entries()
+        .iter()
+        .chain(data.test.entries())
+        .find(|e| e.u >= split.warm.nrows())
+        .map(|e| (e.u as u64, e.v as u64, e.r));
+
+    let initial = store.load();
+    if let Some((cu, cv, _)) = cold_probe {
+        // The cold user has no dense id yet — any out-of-range id shows what
+        // the service answers pre-fold-in (the rating-scale midpoint).
+        let p = client.predict(initial.factors().nrows(), cv as u32)?;
+        eprintln!("before streaming: r̂(cold user {cu}, item {cv}) = {p:.3} (unknown → midpoint)");
+    }
+
+    // 3. Stream.
+    let mut trainer = OnlineTrainer::new(
+        report.factors,
+        split.map,
+        scfg,
+        Arc::clone(&store),
+        (data.rating_min, data.rating_max),
+    )?;
+    trainer.share_exclusions(Arc::clone(&exclusions));
+    let t0 = std::time::Instant::now();
+    let mut next_report = 20u64;
+    while let Some(batch) = split.stream.next_batch(scfg.batch) {
+        trainer.ingest(&batch);
+        if trainer.stats().batches >= next_report {
+            next_report += 20;
+            eprintln!(
+                "batch {:>5}  events {:>7}  new u/v {}/{}  window rmse {}  snapshot v{}",
+                trainer.stats().batches,
+                trainer.stats().events,
+                trainer.stats().new_users,
+                trainer.stats().new_items,
+                trainer
+                    .holdout_rmse()
+                    .map(|r| format!("{r:.4}"))
+                    .unwrap_or_else(|| "-".into()),
+                store.version()
+            );
+        }
+    }
+    trainer.publish();
+    let secs = t0.elapsed().as_secs_f64();
+    let stats = *trainer.stats();
+
+    // 4. Report: the same service now answers the cold user from swapped-in
+    // factors — no restart happened (the version counter proves the swaps).
+    if let Some((cu, cv, r)) = cold_probe {
+        let du = trainer.map().user(cu).context("cold user never appeared on the stream")?;
+        let dv = trainer.map().item(cv).context("cold item unknown")?;
+        let p = client.predict(du, dv)?;
+        eprintln!("after streaming:  r̂(cold user {cu}, item {cv}) = {p:.3} (observed r = {r})");
+    }
+    let before = trainer.holdout().rmse(initial.factors(), data.rating_min, data.rating_max);
+    let after = trainer.holdout_rmse();
+    drop(client);
+    let sstats = svc.shutdown();
+    println!(
+        "streamed {} events in {:.2}s ({:.0} ev/s): {} batches, {} new users, {} new items, {} updates",
+        stats.events,
+        secs,
+        stats.events as f64 / secs.max(1e-9),
+        stats.batches,
+        stats.new_users,
+        stats.new_items,
+        stats.updates
+    );
+    if let (Some(b), Some(a)) = (before, after) {
+        println!("rolling holdout RMSE: {b:.4} (warm snapshot) → {a:.4} (live)");
+    }
+    println!(
+        "hot swap: {} snapshots published (store at v{}), service observed {} versions (last v{}) with zero restarts",
+        stats.publishes,
+        store.version(),
+        sstats.versions_seen,
+        sstats.last_version
+    );
+
+    // 5. Optional persistence: checkpoint v2 (with meta) + id map.
+    if let Some(path) = args.get("save") {
+        let meta = a2psgd::model::checkpoint::CheckpointMeta {
+            epoch: report.history.points().len() as u32,
+            snapshot_version: store.version(),
+            hyper: scfg.hyper,
+        };
+        a2psgd::model::checkpoint::save_with_meta(
+            trainer.factors(),
+            &meta,
+            std::path::Path::new(path),
+        )?;
+        let map_path = a2psgd::data::loader::idmap_path_for(std::path::Path::new(path));
+        trainer.map().save(&map_path)?;
+        eprintln!("checkpoint → {path} (+ {})", map_path.display());
     }
     Ok(())
 }

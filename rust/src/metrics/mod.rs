@@ -2,9 +2,11 @@
 //! convergence tracking, timers, and mean±std aggregation across seeds.
 
 mod convergence;
+pub mod rolling;
 pub mod topn;
 
 pub use convergence::{ConvergenceDetector, EpochStat, History};
+pub use rolling::RollingHoldout;
 pub use topn::{evaluate_topn, TopNReport};
 
 use crate::data::Dataset;

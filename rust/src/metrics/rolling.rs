@@ -1,0 +1,148 @@
+//! Rolling holdout evaluation for online learning: a fixed-capacity ring
+//! buffer of recent held-out interactions, with RMSE/MAE evaluated against
+//! any factor snapshot.
+//!
+//! The online trainer routes every k-th streamed event here *instead of*
+//! training on it, so the ring is a moving, untouched test set. Because the
+//! ring holds dense ids that may postdate an older snapshot, evaluation
+//! treats out-of-range nodes as unknown and predicts the midpoint of the
+//! rating scale — exactly what the serving path answers for unknown nodes —
+//! which keeps "before" and "after" RMSE directly comparable.
+
+use crate::model::Factors;
+use crate::sparse::Entry;
+
+/// Fixed-capacity ring buffer of held-out interactions.
+#[derive(Clone, Debug)]
+pub struct RollingHoldout {
+    cap: usize,
+    buf: Vec<Entry>,
+    next: usize,
+    total_seen: u64,
+}
+
+impl RollingHoldout {
+    /// Ring with room for `cap` entries (`cap` ≥ 1).
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "holdout capacity must be ≥ 1");
+        RollingHoldout { cap, buf: Vec::with_capacity(cap.min(1024)), next: 0, total_seen: 0 }
+    }
+
+    /// Append an interaction, evicting the oldest once full.
+    pub fn push(&mut self, e: Entry) {
+        if self.buf.len() < self.cap {
+            self.buf.push(e);
+        } else {
+            self.buf[self.next] = e;
+            self.next = (self.next + 1) % self.cap;
+        }
+        self.total_seen += 1;
+    }
+
+    /// Entries currently held (unordered view of the ring).
+    pub fn entries(&self) -> &[Entry] {
+        &self.buf
+    }
+
+    /// Number of entries currently held.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when nothing has been held out yet.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Total pushes ever (≥ [`RollingHoldout::len`]).
+    pub fn total_seen(&self) -> u64 {
+        self.total_seen
+    }
+
+    /// (RMSE, MAE) of the ring under `f`, clamped to `[lo, hi]`; nodes
+    /// outside `f`'s shape predict the scale midpoint. `None` when empty.
+    pub fn rmse_mae(&self, f: &Factors, lo: f32, hi: f32) -> Option<(f64, f64)> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        let midpoint = 0.5 * (lo + hi);
+        let mut sse = 0f64;
+        let mut sae = 0f64;
+        for e in &self.buf {
+            let p = if e.u < f.nrows() && e.v < f.ncols() {
+                f.predict_clamped(e.u, e.v, lo, hi)
+            } else {
+                midpoint
+            };
+            let d = (e.r - p) as f64;
+            sse += d * d;
+            sae += d.abs();
+        }
+        let n = self.buf.len() as f64;
+        Some(((sse / n).sqrt(), sae / n))
+    }
+
+    /// RMSE only (see [`RollingHoldout::rmse_mae`]).
+    pub fn rmse(&self, f: &Factors, lo: f32, hi: f32) -> Option<f64> {
+        self.rmse_mae(f, lo, hi).map(|(rmse, _)| rmse)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn e(u: u32, v: u32, r: f32) -> Entry {
+        Entry { u, v, r }
+    }
+
+    #[test]
+    fn ring_wraps_at_capacity() {
+        let mut h = RollingHoldout::new(3);
+        for i in 0..5u32 {
+            h.push(e(i, 0, i as f32));
+        }
+        assert_eq!(h.len(), 3);
+        assert_eq!(h.total_seen(), 5);
+        let us: Vec<u32> = h.entries().iter().map(|x| x.u).collect();
+        let mut sorted = us.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![2, 3, 4], "oldest entries evicted, got {us:?}");
+    }
+
+    #[test]
+    fn empty_ring_has_no_rmse() {
+        let mut rng = Rng::new(1);
+        let f = Factors::init(4, 4, 2, 0.3, &mut rng);
+        let h = RollingHoldout::new(8);
+        assert!(h.rmse(&f, 1.0, 5.0).is_none());
+    }
+
+    #[test]
+    fn rmse_matches_hand_computation() {
+        let mut rng = Rng::new(2);
+        let f = Factors::init(4, 4, 2, 0.3, &mut rng);
+        let mut h = RollingHoldout::new(8);
+        h.push(e(0, 1, 3.0));
+        h.push(e(2, 3, 4.0));
+        let (rmse, mae) = h.rmse_mae(&f, 1.0, 5.0).unwrap();
+        let d0 = (3.0 - f.predict_clamped(0, 1, 1.0, 5.0)) as f64;
+        let d1 = (4.0 - f.predict_clamped(2, 3, 1.0, 5.0)) as f64;
+        assert!((rmse - ((d0 * d0 + d1 * d1) / 2.0).sqrt()).abs() < 1e-12);
+        assert!((mae - (d0.abs() + d1.abs()) / 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unknown_nodes_predict_midpoint() {
+        let mut rng = Rng::new(3);
+        let f = Factors::init(2, 2, 2, 0.3, &mut rng);
+        let mut h = RollingHoldout::new(4);
+        h.push(e(9, 9, 3.0)); // beyond the 2×2 factors
+        let (rmse, _) = h.rmse_mae(&f, 1.0, 5.0).unwrap();
+        assert!((rmse - 0.0).abs() < 1e-12, "midpoint 3.0 == rating 3.0");
+        h.push(e(9, 9, 5.0));
+        let (rmse2, _) = h.rmse_mae(&f, 1.0, 5.0).unwrap();
+        assert!((rmse2 - (2.0f64 / 2.0).sqrt()).abs() < 1e-12);
+    }
+}

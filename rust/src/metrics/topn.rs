@@ -17,20 +17,25 @@ pub struct TopNReport {
     pub users: usize,
 }
 
+/// Keep the k highest-scoring candidates, descending. Partial selection:
+/// full sort is fine at typical item counts, but avoid re-sorting the tail
+/// when k is small. NaN-free scores are the caller's contract.
+pub fn take_top_k(mut scored: Vec<(u32, f32)>, k: usize) -> Vec<(u32, f32)> {
+    if scored.len() > k {
+        scored.select_nth_unstable_by(k, |a, b| b.1.total_cmp(&a.1));
+        scored.truncate(k);
+    }
+    scored.sort_unstable_by(|a, b| b.1.total_cmp(&a.1));
+    scored
+}
+
 /// Rank all items for one user by factor score, excluding `seen` items.
 pub fn rank_items(f: &Factors, u: u32, seen: &HashSet<u32>, k: usize) -> Vec<(u32, f32)> {
-    let mut scored: Vec<(u32, f32)> = (0..f.ncols())
+    let scored: Vec<(u32, f32)> = (0..f.ncols())
         .filter(|v| !seen.contains(v))
         .map(|v| (v, f.predict(u, v)))
         .collect();
-    // Partial selection: full sort is fine at these item counts, but avoid
-    // re-sorting the tail when k is small.
-    if scored.len() > k {
-        scored.select_nth_unstable_by(k, |a, b| b.1.partial_cmp(&a.1).unwrap());
-        scored.truncate(k);
-    }
-    scored.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-    scored
+    take_top_k(scored, k)
 }
 
 /// Evaluate HR@k / NDCG@k on a test split.

@@ -2,26 +2,55 @@
 //! so a served model survives process restarts (`a2psgd train --save` /
 //! `a2psgd serve --load`).
 //!
-//! Layout (little-endian):
+//! Format v2 (current) carries run metadata alongside the matrices; v1
+//! files (matrices only) remain readable and load with default metadata.
+//!
+//! v2 layout (little-endian):
 //! ```text
-//! magic   "A2PF"            4 B
-//! version u32               4 B
-//! nrows   u32, ncols u32, d u32
-//! m       nrows·d f32
-//! n       ncols·d f32
-//! phi     nrows·d f32
-//! psi     ncols·d f32
-//! crc     u64 (FNV-1a over everything above)
+//! magic    "A2PF"            4 B
+//! version  u32               4 B
+//! nrows    u32, ncols u32, d u32
+//! epoch    u32               ── training epoch the factors came from
+//! snap     u64               ── snapshot version at save time (online)
+//! eta      f32, lam f32, gamma f32   ── hyperparameters
+//! m        nrows·d f32
+//! n        ncols·d f32
+//! phi      nrows·d f32
+//! psi      ncols·d f32
+//! crc      u64 (FNV-1a over everything above)
 //! ```
+//! v1 is identical minus the `epoch`/`snap`/hyperparameter block.
 
 use super::Factors;
+use crate::optim::Hyper;
 use crate::Result;
 use anyhow::{bail, Context};
 use std::io::{Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"A2PF";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+/// Bytes of the fixed v1 header (magic + version + shape).
+const V1_HEADER: usize = 4 + 4 + 12;
+/// Extra metadata bytes v2 adds after the shape.
+const V2_META: usize = 4 + 8 + 12;
+
+/// Run metadata carried by a v2 checkpoint.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CheckpointMeta {
+    /// Training epoch the factors came from (0 = unknown / v1 file).
+    pub epoch: u32,
+    /// Online snapshot version at save time (0 = offline / v1 file).
+    pub snapshot_version: u64,
+    /// Hyperparameters the factors were trained with.
+    pub hyper: Hyper,
+}
+
+impl Default for CheckpointMeta {
+    fn default() -> Self {
+        CheckpointMeta { epoch: 0, snapshot_version: 0, hyper: Hyper::sgd(0.0, 0.0) }
+    }
+}
 
 fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
@@ -47,14 +76,19 @@ fn bytes_to_f32s(bytes: &[u8]) -> Vec<f32> {
         .collect()
 }
 
-/// Serialize factors to the versioned binary format.
-pub fn to_bytes(f: &Factors) -> Vec<u8> {
+/// Serialize factors + metadata to the v2 binary format.
+pub fn to_bytes_with_meta(f: &Factors, meta: &CheckpointMeta) -> Vec<u8> {
     let mut out = Vec::new();
     out.extend_from_slice(MAGIC);
     out.extend_from_slice(&VERSION.to_le_bytes());
     out.extend_from_slice(&f.nrows().to_le_bytes());
     out.extend_from_slice(&f.ncols().to_le_bytes());
     out.extend_from_slice(&(f.d() as u32).to_le_bytes());
+    out.extend_from_slice(&meta.epoch.to_le_bytes());
+    out.extend_from_slice(&meta.snapshot_version.to_le_bytes());
+    out.extend_from_slice(&meta.hyper.eta.to_le_bytes());
+    out.extend_from_slice(&meta.hyper.lam.to_le_bytes());
+    out.extend_from_slice(&meta.hyper.gamma.to_le_bytes());
     out.extend_from_slice(&f32s_to_bytes(&f.m));
     out.extend_from_slice(&f32s_to_bytes(&f.n));
     out.extend_from_slice(&f32s_to_bytes(&f.phi));
@@ -64,9 +98,15 @@ pub fn to_bytes(f: &Factors) -> Vec<u8> {
     out
 }
 
+/// Serialize factors with default metadata (v2 format).
+pub fn to_bytes(f: &Factors) -> Vec<u8> {
+    to_bytes_with_meta(f, &CheckpointMeta::default())
+}
+
 /// Deserialize, verifying magic, version, shape arithmetic, and checksum.
-pub fn from_bytes(bytes: &[u8]) -> Result<Factors> {
-    if bytes.len() < 4 + 4 + 12 + 8 {
+/// Accepts v1 and v2; v1 yields [`CheckpointMeta::default`].
+pub fn from_bytes_with_meta(bytes: &[u8]) -> Result<(Factors, CheckpointMeta)> {
+    if bytes.len() < V1_HEADER + 8 {
         bail!("checkpoint truncated ({} bytes)", bytes.len());
     }
     let (body, crc_bytes) = bytes.split_at(bytes.len() - 8);
@@ -78,19 +118,34 @@ pub fn from_bytes(bytes: &[u8]) -> Result<Factors> {
         bail!("not an a2psgd checkpoint (bad magic)");
     }
     let version = u32::from_le_bytes(body[4..8].try_into().unwrap());
-    if version != VERSION {
-        bail!("unsupported checkpoint version {version} (expected {VERSION})");
+    if version != 1 && version != VERSION {
+        bail!("unsupported checkpoint version {version} (expected 1 or {VERSION})");
     }
     let nrows = u32::from_le_bytes(body[8..12].try_into().unwrap());
     let ncols = u32::from_le_bytes(body[12..16].try_into().unwrap());
     let d = u32::from_le_bytes(body[16..20].try_into().unwrap()) as usize;
+    let (meta, mut off) = if version == 1 {
+        (CheckpointMeta::default(), V1_HEADER)
+    } else {
+        if body.len() < V1_HEADER + V2_META {
+            bail!("v2 checkpoint truncated in metadata block");
+        }
+        let epoch = u32::from_le_bytes(body[20..24].try_into().unwrap());
+        let snapshot_version = u64::from_le_bytes(body[24..32].try_into().unwrap());
+        let eta = f32::from_le_bytes(body[32..36].try_into().unwrap());
+        let lam = f32::from_le_bytes(body[36..40].try_into().unwrap());
+        let gamma = f32::from_le_bytes(body[40..44].try_into().unwrap());
+        (
+            CheckpointMeta { epoch, snapshot_version, hyper: Hyper { eta, lam, gamma } },
+            V1_HEADER + V2_META,
+        )
+    };
     let nm = nrows as usize * d;
     let nn = ncols as usize * d;
-    let want = 20 + 4 * (2 * nm + 2 * nn);
+    let want = off + 4 * (2 * nm + 2 * nn);
     if body.len() != want {
         bail!("checkpoint size {} != expected {want}", body.len());
     }
-    let mut off = 20;
     let mut take = |count: usize| -> Vec<f32> {
         let v = bytes_to_f32s(&body[off..off + 4 * count]);
         off += 4 * count;
@@ -100,25 +155,40 @@ pub fn from_bytes(bytes: &[u8]) -> Result<Factors> {
     let n = take(nn);
     let phi = take(nm);
     let psi = take(nn);
-    Factors::from_parts(nrows, ncols, d, m, n, phi, psi)
+    Ok((Factors::from_parts(nrows, ncols, d, m, n, phi, psi)?, meta))
 }
 
-/// Write a checkpoint file.
-pub fn save(f: &Factors, path: &Path) -> Result<()> {
-    let bytes = to_bytes(f);
+/// Deserialize factors, discarding metadata (v1 or v2).
+pub fn from_bytes(bytes: &[u8]) -> Result<Factors> {
+    Ok(from_bytes_with_meta(bytes)?.0)
+}
+
+/// Write a checkpoint file with metadata.
+pub fn save_with_meta(f: &Factors, meta: &CheckpointMeta, path: &Path) -> Result<()> {
+    let bytes = to_bytes_with_meta(f, meta);
     let mut file = std::fs::File::create(path)
         .with_context(|| format!("creating {}", path.display()))?;
     file.write_all(&bytes)?;
     Ok(())
 }
 
-/// Read a checkpoint file.
+/// Write a checkpoint file (default metadata).
+pub fn save(f: &Factors, path: &Path) -> Result<()> {
+    save_with_meta(f, &CheckpointMeta::default(), path)
+}
+
+/// Read a checkpoint file, discarding metadata.
 pub fn load(path: &Path) -> Result<Factors> {
+    Ok(load_with_meta(path)?.0)
+}
+
+/// Read a checkpoint file together with its metadata.
+pub fn load_with_meta(path: &Path) -> Result<(Factors, CheckpointMeta)> {
     let mut bytes = Vec::new();
     std::fs::File::open(path)
         .with_context(|| format!("opening {}", path.display()))?
         .read_to_end(&mut bytes)?;
-    from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
+    from_bytes_with_meta(&bytes).with_context(|| format!("parsing {}", path.display()))
 }
 
 #[cfg(test)]
@@ -134,6 +204,31 @@ mod tests {
         f
     }
 
+    fn meta() -> CheckpointMeta {
+        CheckpointMeta {
+            epoch: 42,
+            snapshot_version: 17,
+            hyper: Hyper::nag(1e-4, 5e-2, 0.9),
+        }
+    }
+
+    /// Serialize in the legacy v1 layout (what old builds wrote).
+    fn v1_bytes(f: &Factors) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&1u32.to_le_bytes());
+        out.extend_from_slice(&f.nrows().to_le_bytes());
+        out.extend_from_slice(&f.ncols().to_le_bytes());
+        out.extend_from_slice(&(f.d() as u32).to_le_bytes());
+        out.extend_from_slice(&f32s_to_bytes(&f.m));
+        out.extend_from_slice(&f32s_to_bytes(&f.n));
+        out.extend_from_slice(&f32s_to_bytes(&f.phi));
+        out.extend_from_slice(&f32s_to_bytes(&f.psi));
+        let crc = fnv1a(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
     #[test]
     fn roundtrip_exact() {
         let f = factors();
@@ -146,14 +241,35 @@ mod tests {
     }
 
     #[test]
+    fn v2_meta_roundtrip() {
+        let f = factors();
+        let m = meta();
+        let (g, back) = from_bytes_with_meta(&to_bytes_with_meta(&f, &m)).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(g.m, f.m);
+        assert_eq!(g.psi, f.psi);
+    }
+
+    #[test]
+    fn v1_files_remain_readable() {
+        let f = factors();
+        let (g, back) = from_bytes_with_meta(&v1_bytes(&f)).unwrap();
+        assert_eq!(g.m, f.m);
+        assert_eq!(g.phi, f.phi);
+        assert_eq!(back, CheckpointMeta::default(), "v1 loads with default meta");
+    }
+
+    #[test]
     fn file_roundtrip() {
         let dir = std::env::temp_dir().join("a2psgd_ckpt_test");
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("model.a2pf");
         let f = factors();
-        save(&f, &p).unwrap();
-        let g = load(&p).unwrap();
+        save_with_meta(&f, &meta(), &p).unwrap();
+        let (g, back) = load_with_meta(&p).unwrap();
         assert_eq!(f.m, g.m);
+        assert_eq!(back.epoch, 42);
+        assert_eq!(back.snapshot_version, 17);
         std::fs::remove_file(&p).ok();
     }
 
@@ -164,6 +280,30 @@ mod tests {
         bytes[mid] ^= 0xFF;
         let e = from_bytes(&bytes).unwrap_err().to_string();
         assert!(e.contains("checksum"), "{e}");
+    }
+
+    #[test]
+    fn corrupted_crc_roundtrip_detected() {
+        // A checkpoint whose *CRC trailer* (not the body) is damaged must
+        // also fail: save → flip a trailer bit → load.
+        let dir = std::env::temp_dir().join("a2psgd_ckpt_crc_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("model.a2pf");
+        let f = factors();
+        save_with_meta(&f, &meta(), &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        std::fs::write(&p, &bytes).unwrap();
+        let e = format!("{:#}", load_with_meta(&p).unwrap_err());
+        assert!(e.contains("checksum"), "{e}");
+        // Restoring the byte makes it load again (round trip).
+        bytes[last] ^= 0x01;
+        std::fs::write(&p, &bytes).unwrap();
+        let (g, back) = load_with_meta(&p).unwrap();
+        assert_eq!(g.m, f.m);
+        assert_eq!(back, meta());
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]
@@ -183,6 +323,17 @@ mod tests {
         bytes[body_len..].copy_from_slice(&crc.to_le_bytes());
         let e = from_bytes(&bytes).unwrap_err().to_string();
         assert!(e.contains("magic"), "{e}");
+    }
+
+    #[test]
+    fn unsupported_version_detected() {
+        let mut bytes = to_bytes(&factors());
+        bytes[4..8].copy_from_slice(&9u32.to_le_bytes());
+        let body_len = bytes.len() - 8;
+        let crc = super::fnv1a(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&crc.to_le_bytes());
+        let e = from_bytes(&bytes).unwrap_err().to_string();
+        assert!(e.contains("version"), "{e}");
     }
 
     #[test]

@@ -3,8 +3,10 @@
 
 pub mod checkpoint;
 mod shared;
+pub mod snapshot;
 
 pub use shared::SharedFactors;
+pub use snapshot::{FactorSnapshot, SnapshotStore};
 
 use crate::rng::Rng;
 
@@ -108,6 +110,34 @@ impl Factors {
         self.predict(u, v).clamp(lo, hi)
     }
 
+    /// Append `extra` user rows (online fold-in of never-before-seen users).
+    ///
+    /// New rows of `M` are drawn uniformly from `[0, init_scale)` — pass
+    /// [`Factors::default_scale`] for a mean-matched start, as at init time —
+    /// and their momentum rows start at zero. Existing rows are untouched,
+    /// so snapshots/readers of the *old* shape remain valid.
+    pub fn grow_rows(&mut self, extra: u32, init_scale: f32, rng: &mut Rng) {
+        let add = extra as usize * self.d;
+        self.m.reserve(add);
+        for _ in 0..add {
+            self.m.push(rng.f32_range(0.0, init_scale));
+        }
+        self.phi.resize(self.phi.len() + add, 0.0);
+        self.nrows += extra;
+    }
+
+    /// Append `extra` item columns (online fold-in of never-before-seen
+    /// items). Mirrors [`Factors::grow_rows`] for `N`/`ψ`.
+    pub fn grow_cols(&mut self, extra: u32, init_scale: f32, rng: &mut Rng) {
+        let add = extra as usize * self.d;
+        self.n.reserve(add);
+        for _ in 0..add {
+            self.n.push(rng.f32_range(0.0, init_scale));
+        }
+        self.psi.resize(self.psi.len() + add, 0.0);
+        self.ncols += extra;
+    }
+
     /// Zero the momentum matrices.
     pub fn reset_momentum(&mut self) {
         self.phi.iter_mut().for_each(|x| *x = 0.0);
@@ -184,6 +214,42 @@ mod tests {
         f.psi[1] = -0.5;
         f.reset_momentum();
         assert!(f.phi.iter().chain(f.psi.iter()).all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn grow_rows_preserves_old_and_inits_new() {
+        let mut rng = Rng::new(6);
+        let mut f = Factors::init(3, 2, 4, 0.5, &mut rng);
+        let old_m = f.m.clone();
+        let old_n = f.n.clone();
+        f.phi[0] = 0.7;
+        f.grow_rows(2, 0.25, &mut rng);
+        assert_eq!(f.nrows(), 5);
+        assert_eq!(f.m.len(), 20);
+        assert_eq!(f.phi.len(), 20);
+        assert_eq!(&f.m[..12], &old_m[..]);
+        assert_eq!(f.phi[0], 0.7);
+        assert!(f.m[12..].iter().all(|&x| (0.0..0.25).contains(&x)));
+        assert!(f.phi[12..].iter().all(|&x| x == 0.0));
+        // Columns untouched.
+        assert_eq!(f.ncols(), 2);
+        assert_eq!(f.n, old_n);
+    }
+
+    #[test]
+    fn grow_cols_preserves_old_and_inits_new() {
+        let mut rng = Rng::new(7);
+        let mut f = Factors::init(2, 3, 2, 0.5, &mut rng);
+        let old_n = f.n.clone();
+        f.grow_cols(3, 0.1, &mut rng);
+        assert_eq!(f.ncols(), 6);
+        assert_eq!(f.n.len(), 12);
+        assert_eq!(f.psi.len(), 12);
+        assert_eq!(&f.n[..6], &old_n[..]);
+        assert!(f.n[6..].iter().all(|&x| (0.0..0.1).contains(&x)));
+        // New rows are addressable through the row API.
+        assert_eq!(f.n_row(5).len(), 2);
+        let _ = f.predict(1, 5);
     }
 
     #[test]

@@ -1,0 +1,182 @@
+//! Zero-downtime factor hot-swap: an epoch-versioned, atomically swappable
+//! factor snapshot built on `std` only.
+//!
+//! # Hot-swap protocol
+//!
+//! - **One publisher** (the online trainer, or any owner of the training
+//!   loop) calls [`SnapshotStore::publish`] with a fresh [`Factors`] value.
+//!   Each publish installs a new immutable [`FactorSnapshot`] whose version
+//!   is strictly increasing (starting at 1 for the snapshot the store was
+//!   created with).
+//! - **Many readers** (the prediction-service batcher, evaluators) call
+//!   [`SnapshotStore::load`] and receive an `Arc` pin of the *current*
+//!   snapshot. A reader keeps using its pin for the duration of one batch;
+//!   it re-loads at the next batch boundary and thereby picks up refreshed
+//!   factors without any restart or coordination.
+//! - **Double buffering** falls out of the `Arc`: while readers still hold
+//!   the previous snapshot, the publisher installs the next one; the old
+//!   buffer is freed when its last reader drops the pin. The publisher keeps
+//!   its own private working copy, so at steady state there are two live
+//!   factor buffers (the working copy and the published snapshot) plus any
+//!   still-pinned older generations.
+//!
+//! # Guarantees
+//!
+//! - [`SnapshotStore::load`] never blocks on training work: the critical
+//!   section is one `Arc::clone` under an uncontended mutex.
+//! - Versions observed by any single reader are monotonically
+//!   non-decreasing, and [`SnapshotStore::version`] is a lock-free read of
+//!   the latest published version.
+//! - Snapshots are immutable after publish; a reader's pinned view is
+//!   torn-write-free by construction (no in-place mutation, unlike
+//!   [`super::SharedFactors`], which is the *training-time* sharing tool).
+
+use super::Factors;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One immutable published generation of the factor matrices.
+#[derive(Clone, Debug)]
+pub struct FactorSnapshot {
+    version: u64,
+    factors: Factors,
+}
+
+impl FactorSnapshot {
+    /// Strictly increasing publish version (1 = initial snapshot).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// The factor matrices of this generation.
+    pub fn factors(&self) -> &Factors {
+        &self.factors
+    }
+}
+
+/// Atomically swappable holder of the current [`FactorSnapshot`].
+pub struct SnapshotStore {
+    current: Mutex<Arc<FactorSnapshot>>,
+    version: AtomicU64,
+}
+
+impl SnapshotStore {
+    /// Create a store whose initial snapshot (version 1) is `factors`.
+    pub fn new(factors: Factors) -> Self {
+        SnapshotStore {
+            current: Mutex::new(Arc::new(FactorSnapshot { version: 1, factors })),
+            version: AtomicU64::new(1),
+        }
+    }
+
+    /// Pin the current snapshot. Cheap (`Arc::clone` under a mutex); call
+    /// once per served batch, not per request.
+    pub fn load(&self) -> Arc<FactorSnapshot> {
+        Arc::clone(&self.current.lock().expect("snapshot store poisoned"))
+    }
+
+    /// Publish a new generation; returns its version. Single-publisher by
+    /// convention (concurrent publishers are safe but interleave versions).
+    ///
+    /// # Panics
+    /// If `factors` change the feature dimension D: readers size their
+    /// gather buffers from D once at startup, so a hot swap may grow
+    /// rows/columns but never the rank.
+    pub fn publish(&self, factors: Factors) -> u64 {
+        let mut slot = self.current.lock().expect("snapshot store poisoned");
+        assert_eq!(
+            factors.d(),
+            slot.factors().d(),
+            "hot swap must preserve the feature dimension D"
+        );
+        let version = slot.version() + 1;
+        *slot = Arc::new(FactorSnapshot { version, factors });
+        self.version.store(version, Ordering::Release);
+        version
+    }
+
+    /// Latest published version without pinning (lock-free).
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+}
+
+impl std::fmt::Debug for SnapshotStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SnapshotStore").field("version", &self.version()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn factors(seed: u64, nrows: u32) -> Factors {
+        let mut rng = Rng::new(seed);
+        Factors::init(nrows, 4, 2, 0.5, &mut rng)
+    }
+
+    #[test]
+    fn initial_version_is_one() {
+        let store = SnapshotStore::new(factors(1, 4));
+        assert_eq!(store.version(), 1);
+        let snap = store.load();
+        assert_eq!(snap.version(), 1);
+        assert_eq!(snap.factors().nrows(), 4);
+    }
+
+    #[test]
+    fn publish_bumps_version_and_readers_see_latest() {
+        let store = SnapshotStore::new(factors(2, 4));
+        let pinned = store.load();
+        let v2 = store.publish(factors(3, 5));
+        assert_eq!(v2, 2);
+        assert_eq!(store.version(), 2);
+        // The old pin is still valid (double buffering) …
+        assert_eq!(pinned.version(), 1);
+        assert_eq!(pinned.factors().nrows(), 4);
+        // … while a fresh load observes the new generation.
+        let snap = store.load();
+        assert_eq!(snap.version(), 2);
+        assert_eq!(snap.factors().nrows(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "feature dimension")]
+    fn publish_rejects_rank_change() {
+        let store = SnapshotStore::new(factors(1, 4)); // d = 2
+        let mut rng = Rng::new(9);
+        store.publish(Factors::init(4, 4, 3, 0.5, &mut rng)); // d = 3
+    }
+
+    #[test]
+    fn concurrent_readers_see_monotone_versions() {
+        let store = Arc::new(SnapshotStore::new(factors(4, 3)));
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let store = Arc::clone(&store);
+                scope.spawn(move || {
+                    let mut last = 0u64;
+                    for _ in 0..2000 {
+                        let snap = store.load();
+                        assert!(snap.version() >= last, "version went backwards");
+                        last = snap.version();
+                        // Snapshot must be internally consistent.
+                        assert_eq!(
+                            snap.factors().m.len(),
+                            snap.factors().nrows() as usize * snap.factors().d()
+                        );
+                    }
+                });
+            }
+            let store = Arc::clone(&store);
+            scope.spawn(move || {
+                for i in 0..200 {
+                    store.publish(factors(100 + i, 3 + (i % 5) as u32));
+                }
+            });
+        });
+        assert_eq!(store.version(), 201);
+    }
+}

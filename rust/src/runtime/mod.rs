@@ -282,19 +282,14 @@ impl XlaRuntime {
     ) -> Result<Vec<(u32, f32)>> {
         let scores = self.recommend_scores(f.m_row(u), n_padded)?;
         let ncols = f.ncols();
-        let mut scored: Vec<(u32, f32)> = scores
+        let scored: Vec<(u32, f32)> = scores
             .into_iter()
             .take(ncols as usize) // drop padded lanes
             .enumerate()
             .filter(|(v, _)| !seen.contains(&(*v as u32)))
             .map(|(v, s)| (v as u32, s))
             .collect();
-        if scored.len() > k {
-            scored.select_nth_unstable_by(k, |a, b| b.1.partial_cmp(&a.1).unwrap());
-            scored.truncate(k);
-        }
-        scored.sort_unstable_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-        Ok(scored)
+        Ok(crate::metrics::topn::take_top_k(scored, k))
     }
 
     /// K fused mini-batch NAG steps in one PJRT call (the `update_scan`

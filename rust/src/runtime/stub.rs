@@ -1,0 +1,194 @@
+//! No-op stand-in for the XLA/PJRT runtime, compiled when the crate is built
+//! without the `xla` feature (`cargo build --no-default-features`).
+//!
+//! Every entry point keeps the exact signature of the real module
+//! (`runtime/mod.rs`) so call sites — the prediction service, the CLI, the
+//! benches and the integration tests — compile unchanged. Loading always
+//! fails with [`XLA_DISABLED_MSG`], and callers that already handle a
+//! missing-artifacts error (they all do: artifacts are optional at runtime)
+//! degrade exactly as if `make artifacts` had never been run. The serving
+//! path stays available through the native backend in
+//! [`crate::coordinator::service`].
+
+use crate::model::Factors;
+use crate::sparse::CooMatrix;
+use crate::Result;
+use std::path::{Path, PathBuf};
+
+/// Error text every stubbed entry point reports.
+pub const XLA_DISABLED_MSG: &str =
+    "a2psgd was built without the `xla` feature; rebuild with `--features xla` \
+     (and run `make artifacts`) to enable the XLA/PJRT runtime";
+
+/// Static shapes the artifacts were lowered with (mirror of the real type).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArtifactShapes {
+    /// Batch size B.
+    pub b: usize,
+    /// Feature dimension D.
+    pub d: usize,
+    /// Padded user rows U.
+    pub u: usize,
+    /// Padded item rows V.
+    pub v: usize,
+    /// Scan steps fused per `update_scan` call.
+    pub k: usize,
+}
+
+/// Uninhabited marker: a stub runtime can never be constructed.
+enum Never {}
+
+/// Stand-in for the compiled artifact set; [`XlaRuntime::load`] always fails.
+pub struct XlaRuntime {
+    /// Shapes baked into the artifacts.
+    pub shapes: ArtifactShapes,
+    _never: Never,
+}
+
+/// Smoke check — always an error without the `xla` feature.
+pub fn smoke() -> Result<String> {
+    anyhow::bail!(XLA_DISABLED_MSG)
+}
+
+/// Default artifacts directory (repo-root `artifacts/`).
+pub fn default_artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Pad an item-factor matrix to `v_padded × d` (zeros beyond `ncols`).
+pub fn pad_item_matrix(f: &Factors, v_padded: usize) -> Vec<f32> {
+    let d = f.d();
+    let mut out = vec![0f32; v_padded * d];
+    out[..f.n.len()].copy_from_slice(&f.n);
+    out
+}
+
+impl XlaRuntime {
+    /// Always fails: the crate was built without the `xla` feature.
+    pub fn load(_dir: &Path) -> Result<Self> {
+        anyhow::bail!(XLA_DISABLED_MSG)
+    }
+
+    /// Always fails: the crate was built without the `xla` feature.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&default_artifacts_dir())
+    }
+
+    /// Unreachable (no stub runtime can exist).
+    pub fn predict_batch(&self, _mu: &[f32], _nv: &[f32]) -> Result<Vec<f32>> {
+        match self._never {}
+    }
+
+    /// Unreachable (no stub runtime can exist).
+    pub fn eval_sums(
+        &self,
+        _mu: &[f32],
+        _nv: &[f32],
+        _r: &[f32],
+        _mask: &[f32],
+    ) -> Result<(f64, f64, f64)> {
+        match self._never {}
+    }
+
+    /// Unreachable (no stub runtime can exist).
+    pub fn loss_batch(
+        &self,
+        _mu: &[f32],
+        _nv: &[f32],
+        _r: &[f32],
+        _mask: &[f32],
+        _lam: f32,
+    ) -> Result<f64> {
+        match self._never {}
+    }
+
+    /// Unreachable (no stub runtime can exist).
+    #[allow(clippy::too_many_arguments)]
+    pub fn block_update(
+        &self,
+        _m: &[f32],
+        _n: &[f32],
+        _phi: &[f32],
+        _psi: &[f32],
+        _uidx: &[i32],
+        _vidx: &[i32],
+        _r: &[f32],
+        _mask: &[f32],
+        _eta: f32,
+        _lam: f32,
+        _gamma: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        match self._never {}
+    }
+
+    /// Unreachable (no stub runtime can exist).
+    pub fn recommend_scores(&self, _mu: &[f32], _n_padded: &[f32]) -> Result<Vec<f32>> {
+        match self._never {}
+    }
+
+    /// Unreachable (no stub runtime can exist).
+    pub fn top_k(
+        &self,
+        _f: &Factors,
+        _n_padded: &[f32],
+        _u: u32,
+        _k: usize,
+        _seen: &std::collections::HashSet<u32>,
+    ) -> Result<Vec<(u32, f32)>> {
+        match self._never {}
+    }
+
+    /// Unreachable (no stub runtime can exist).
+    #[allow(clippy::too_many_arguments)]
+    pub fn epoch_update(
+        &self,
+        _m: &[f32],
+        _n: &[f32],
+        _phi: &[f32],
+        _psi: &[f32],
+        _uidx: &[i32],
+        _vidx: &[i32],
+        _r: &[f32],
+        _mask: &[f32],
+        _eta: f32,
+        _lam: f32,
+        _gamma: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        match self._never {}
+    }
+
+    /// Unreachable (no stub runtime can exist).
+    pub fn eval_dataset(&self, _f: &Factors, _test: &CooMatrix) -> Result<(f64, f64)> {
+        match self._never {}
+    }
+}
+
+/// XLA mini-batch training entry point — errors without the `xla` feature.
+pub fn train_xla(
+    _data: &crate::data::Dataset,
+    _cfg: &crate::engine::TrainConfig,
+) -> Result<crate::engine::TrainReport> {
+    anyhow::bail!(XLA_DISABLED_MSG)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_disabled_feature() {
+        let err = XlaRuntime::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("xla"));
+        assert!(smoke().is_err());
+    }
+
+    #[test]
+    fn pad_item_matrix_zero_pads() {
+        let mut rng = crate::rng::Rng::new(1);
+        let f = Factors::init(3, 2, 4, 0.5, &mut rng);
+        let padded = pad_item_matrix(&f, 5);
+        assert_eq!(padded.len(), 20);
+        assert_eq!(&padded[..8], &f.n[..]);
+        assert!(padded[8..].iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,153 @@
+//! Incremental fold-in for never-before-seen nodes.
+//!
+//! When a new user (or item) appears on the stream, its factor row is grown
+//! ([`crate::model::Factors::grow_rows`]/`grow_cols`) with a mean-matched
+//! random init and then refined by a few *one-sided* NAG steps against the
+//! node's observed entries only: the established side of the factorization
+//! is frozen, so fold-in is cheap (O(steps · |obs| · D)), touches no other
+//! node's state, and cannot destabilize the serving model. The regular
+//! sliding-window online updates then keep improving both sides.
+
+use crate::model::Factors;
+use crate::optim::Hyper;
+
+/// One-sided NAG refinement of user row `u` against observed `(item, r)`
+/// pairs; item rows are read-only. `steps` full sweeps over `obs`.
+pub fn fold_in_user(f: &mut Factors, u: u32, obs: &[(u32, f32)], h: &Hyper, steps: u32) {
+    let d = f.d();
+    assert!(u < f.nrows(), "fold-in user {u} out of range {}", f.nrows());
+    let ncols = f.ncols();
+    let g = h.gamma;
+    let (m, phi, n) = (&mut f.m, &mut f.phi, &f.n);
+    let mu = &mut m[u as usize * d..(u as usize + 1) * d];
+    let phiu = &mut phi[u as usize * d..(u as usize + 1) * d];
+    for _ in 0..steps {
+        for &(v, r) in obs {
+            assert!(v < ncols, "fold-in item {v} out of range {ncols}");
+            let nv = &n[v as usize * d..(v as usize + 1) * d];
+            one_sided_nag(mu, phiu, nv, r, h.eta, h.lam, g);
+        }
+    }
+}
+
+/// One-sided NAG refinement of item row `v` against observed `(user, r)`
+/// pairs; user rows are read-only. Mirror of [`fold_in_user`].
+pub fn fold_in_item(f: &mut Factors, v: u32, obs: &[(u32, f32)], h: &Hyper, steps: u32) {
+    let d = f.d();
+    assert!(v < f.ncols(), "fold-in item {v} out of range {}", f.ncols());
+    let nrows = f.nrows();
+    let g = h.gamma;
+    let (n, psi, m) = (&mut f.n, &mut f.psi, &f.m);
+    let nv = &mut n[v as usize * d..(v as usize + 1) * d];
+    let psiv = &mut psi[v as usize * d..(v as usize + 1) * d];
+    for _ in 0..steps {
+        for &(u, r) in obs {
+            assert!(u < nrows, "fold-in user {u} out of range {nrows}");
+            let mu = &m[u as usize * d..(u as usize + 1) * d];
+            one_sided_nag(nv, psiv, mu, r, h.eta, h.lam, g);
+        }
+    }
+}
+
+/// One NAG step on `row` (momentum `mom`) against frozen `other`:
+/// look-ahead `x̂ = x + γφ`, error at the look-ahead, then
+/// `φ ← γφ + η(e·other − λx̂)`, `x ← x + φ`.
+#[inline]
+fn one_sided_nag(row: &mut [f32], mom: &mut [f32], other: &[f32], r: f32, eta: f32, lam: f32, g: f32) {
+    debug_assert_eq!(row.len(), other.len());
+    let mut dot = 0f32;
+    for k in 0..row.len() {
+        dot += (row[k] + g * mom[k]) * other[k];
+    }
+    let e = r - dot;
+    let ee = eta * e;
+    let el = eta * lam;
+    for k in 0..row.len() {
+        let xh = row[k] + g * mom[k];
+        let pk = g * mom[k] + ee * other[k] - el * xh;
+        mom[k] = pk;
+        row[k] += pk;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn factors(seed: u64) -> Factors {
+        let mut rng = Rng::new(seed);
+        Factors::init(6, 8, 4, Factors::default_scale(3.0, 4), &mut rng)
+    }
+
+    fn sq_err(f: &Factors, u: u32, obs: &[(u32, f32)]) -> f64 {
+        obs.iter()
+            .map(|&(v, r)| {
+                let d = (r - f.predict(u, v)) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / obs.len() as f64
+    }
+
+    #[test]
+    fn fold_in_user_fits_observed_entries() {
+        let mut f = factors(1);
+        let mut rng = Rng::new(9);
+        f.grow_rows(1, Factors::default_scale(3.0, 4), &mut rng);
+        let u = 6;
+        let obs = vec![(0u32, 4.0f32), (3, 2.0), (7, 5.0)];
+        let h = Hyper::nag(0.05, 0.01, 0.9);
+        let e0 = sq_err(&f, u, &obs);
+        fold_in_user(&mut f, u, &obs, &h, 30);
+        let e1 = sq_err(&f, u, &obs);
+        assert!(e1 < 0.2 * e0, "fold-in must fit observations: {e0} → {e1}");
+        assert!(f.m.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn fold_in_user_freezes_everything_else() {
+        let mut f = factors(2);
+        let n0 = f.n.clone();
+        let psi0 = f.psi.clone();
+        let m_other: Vec<f32> = f.m_row(0).to_vec();
+        fold_in_user(&mut f, 5, &[(1, 4.0), (2, 1.0)], &Hyper::nag(0.05, 0.01, 0.9), 10);
+        assert_eq!(f.n, n0, "item factors must not move");
+        assert_eq!(f.psi, psi0);
+        assert_eq!(f.m_row(0), &m_other[..], "other user rows must not move");
+    }
+
+    #[test]
+    fn fold_in_item_fits_and_freezes() {
+        let mut f = factors(3);
+        let mut rng = Rng::new(11);
+        f.grow_cols(1, Factors::default_scale(3.0, 4), &mut rng);
+        let v = 8;
+        let obs = vec![(0u32, 3.5f32), (2, 1.5), (5, 4.5)];
+        let h = Hyper::nag(0.05, 0.01, 0.9);
+        let m0 = f.m.clone();
+        let e0: f64 = obs.iter().map(|&(u, r)| ((r - f.predict(u, v)) as f64).powi(2)).sum();
+        fold_in_item(&mut f, v, &obs, &h, 30);
+        let e1: f64 = obs.iter().map(|&(u, r)| ((r - f.predict(u, v)) as f64).powi(2)).sum();
+        assert!(e1 < 0.2 * e0, "{e0} → {e1}");
+        assert_eq!(f.m, m0, "user factors must not move");
+    }
+
+    #[test]
+    fn gamma_zero_reduces_to_one_sided_sgd() {
+        // With γ=0 and λ=0, one step on a single observation moves the row
+        // by exactly η·e·n_v.
+        let mut f = factors(4);
+        let u = 1;
+        let v = 2;
+        let r = 4.0;
+        let before: Vec<f32> = f.m_row(u).to_vec();
+        let nv: Vec<f32> = f.n_row(v).to_vec();
+        let e = r - f.predict(u, v);
+        fold_in_user(&mut f, u, &[(v, r)], &Hyper::nag(0.1, 0.0, 0.0), 1);
+        for k in 0..f.d() {
+            let want = before[k] + 0.1 * e * nv[k];
+            assert!((f.m_row(u)[k] - want).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! Online learning subsystem: streaming ingestion, incremental fold-in, and
+//! continuous training with zero-downtime factor hot-swap.
+//!
+//! The paper's HDS matrices "describe real-world node interactions" — and
+//! real interaction streams never stop. This subsystem keeps a trained LR
+//! model live against such a stream:
+//!
+//! 1. [`source`] turns timestamped `(u, v, r)` events into bounded
+//!    micro-batches ([`ReplaySource`] simulates a live stream from any
+//!    recorded log; [`ChannelSource`] ingests from producer threads).
+//! 2. [`foldin`] grows the factor matrices for never-before-seen nodes and
+//!    runs a few one-sided NAG steps on just the new node's row.
+//! 3. [`online::OnlineTrainer`] applies sliding-window incremental NAG
+//!    updates on worker threads through the lock-free block scheduler
+//!    (exactly the A²PSGD machinery, pointed at the recent-events window)
+//!    and periodically publishes refreshed factors.
+//! 4. [`crate::model::snapshot::SnapshotStore`] delivers each published
+//!    generation to the prediction service atomically — the service pins a
+//!    snapshot per batch and never restarts (see the module docs there for
+//!    the full protocol).
+//!
+//! `a2psgd stream` drives the whole pipeline from the CLI, and
+//! `examples/online_serving.rs` demonstrates predictions improving live.
+
+pub mod foldin;
+pub mod online;
+pub mod source;
+
+pub use online::{OnlineStats, OnlineTrainer};
+pub use source::{ChannelSource, Event, EventSender, EventSource, MicroBatch, ReplaySource};
+
+use crate::data::loader::IdMap;
+use crate::data::Dataset;
+use crate::optim::{Hyper, Rule};
+use crate::rng::Rng;
+use crate::sparse::CooMatrix;
+use crate::Result;
+
+/// Configuration of the online trainer (the `stream` preset).
+#[derive(Clone, Copy, Debug)]
+pub struct StreamConfig {
+    /// Max events per ingested micro-batch.
+    pub batch: usize,
+    /// Sliding-window capacity (most recent trainable events kept).
+    pub window: usize,
+    /// Full sweeps over the window per ingested batch.
+    pub passes: u32,
+    /// Publish a fresh snapshot every this many batches (≥ 1).
+    pub publish_every: u64,
+    /// One-sided NAG sweeps when folding in a new node.
+    pub foldin_steps: u32,
+    /// Every k-th event is held out for rolling evaluation instead of
+    /// trained on (≥ 2; the ring is the online test set).
+    pub holdout_every: u64,
+    /// Rolling-holdout ring capacity.
+    pub holdout_cap: usize,
+    /// Worker threads for window updates.
+    pub threads: usize,
+    /// η / λ / γ for both window updates and fold-in.
+    pub hyper: Hyper,
+    /// Update rule for window sweeps (fold-in is always one-sided NAG).
+    pub rule: Rule,
+    /// RNG seed (new-row init, window shuffling, scheduling).
+    pub seed: u64,
+}
+
+impl StreamConfig {
+    /// The `stream` preset for a dataset: A²PSGD hyperparameters (Tables
+    /// I/II families) with streaming defaults sized for micro-batch work.
+    pub fn preset(dataset_name: &str) -> Self {
+        StreamConfig {
+            batch: 256,
+            window: 4096,
+            passes: 2,
+            publish_every: 4,
+            foldin_steps: 10,
+            holdout_every: 8,
+            holdout_cap: 1024,
+            threads: crate::engine::default_threads(),
+            hyper: crate::config::presets::hyper_for(crate::engine::EngineKind::A2psgd, dataset_name),
+            rule: Rule::Nag,
+            seed: 0x5EED,
+        }
+    }
+
+    /// Builder: micro-batch bound.
+    pub fn batch(mut self, b: usize) -> Self {
+        self.batch = b.max(1);
+        self
+    }
+
+    /// Builder: sliding-window capacity.
+    pub fn window(mut self, w: usize) -> Self {
+        self.window = w.max(1);
+        self
+    }
+
+    /// Builder: publish cadence in batches.
+    pub fn publish_every(mut self, n: u64) -> Self {
+        self.publish_every = n.max(1);
+        self
+    }
+
+    /// Builder: fold-in sweeps.
+    pub fn foldin_steps(mut self, n: u32) -> Self {
+        self.foldin_steps = n;
+        self
+    }
+
+    /// Builder: worker threads.
+    pub fn threads(mut self, c: usize) -> Self {
+        self.threads = c.max(1);
+        self
+    }
+
+    /// Builder: hyperparameters.
+    pub fn hyper(mut self, h: Hyper) -> Self {
+        self.hyper = h;
+        self
+    }
+
+    /// Builder: seed.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Sanity-check field ranges.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.batch >= 1, "stream.batch must be ≥ 1");
+        anyhow::ensure!(self.window >= 1, "stream.window must be ≥ 1");
+        anyhow::ensure!(self.publish_every >= 1, "stream.publish_every must be ≥ 1");
+        anyhow::ensure!(self.holdout_every >= 2, "stream.holdout_every must be ≥ 2");
+        anyhow::ensure!(self.holdout_cap >= 1, "stream.holdout_cap must be ≥ 1");
+        anyhow::ensure!(self.threads >= 1, "stream.threads must be ≥ 1");
+        Ok(())
+    }
+}
+
+/// A dataset split for replay benchmarking: a *warm* prefix of users to
+/// train offline, plus the remaining (*cold*) users' interactions as a
+/// simulated live stream of external-id events.
+pub struct ReplaySplit {
+    /// Offline-training dataset restricted to the warm users.
+    pub warm: Dataset,
+    /// External↔dense map covering exactly the warm dataset (identity).
+    pub map: IdMap,
+    /// The cold users' interactions, shuffled, as a replayable stream.
+    pub stream: ReplaySource,
+    /// Number of users withheld from warm training.
+    pub n_cold_users: u32,
+}
+
+/// Split `data` so the first `warm_user_frac` of users form the offline
+/// training set and every interaction of the remaining users becomes a
+/// stream event (external ids = the original dense ids of `data`).
+pub fn replay_split(data: &Dataset, warm_user_frac: f64, seed: u64) -> ReplaySplit {
+    let nrows = data.nrows();
+    let warm_rows = ((nrows as f64 * warm_user_frac).ceil() as u32).clamp(1, nrows);
+    let mut warm_train = CooMatrix::new(warm_rows, data.ncols());
+    let mut warm_test = CooMatrix::new(warm_rows, data.ncols());
+    let mut cold = Vec::new();
+    for e in data.train.entries() {
+        if e.u < warm_rows {
+            warm_train.push(e.u, e.v, e.r).expect("warm entry in range");
+        } else {
+            cold.push(*e);
+        }
+    }
+    for e in data.test.entries() {
+        if e.u < warm_rows {
+            warm_test.push(e.u, e.v, e.r).expect("warm entry in range");
+        } else {
+            cold.push(*e);
+        }
+    }
+    let mut rng = Rng::new(seed ^ 0x57EEA4);
+    rng.shuffle(&mut cold);
+    let events: Vec<Event> = cold
+        .iter()
+        .enumerate()
+        .map(|(i, e)| Event { t: i as u64, u: e.u as u64, v: e.v as u64, r: e.r })
+        .collect();
+    ReplaySplit {
+        warm: Dataset {
+            name: format!("{}-warm", data.name),
+            train: warm_train,
+            test: warm_test,
+            rating_min: data.rating_min,
+            rating_max: data.rating_max,
+        },
+        map: IdMap::identity(warm_rows, data.ncols()),
+        stream: ReplaySource::new(events),
+        n_cold_users: nrows - warm_rows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic;
+
+    #[test]
+    fn preset_is_valid_and_uses_a2_hypers() {
+        let cfg = StreamConfig::preset("ml1m-twin");
+        cfg.validate().unwrap();
+        assert!(cfg.hyper.gamma > 0.0, "stream preset must use NAG hypers");
+        assert_eq!(cfg.rule, Rule::Nag);
+    }
+
+    #[test]
+    fn builders_clamp_degenerate_values() {
+        let cfg = StreamConfig::preset("small").batch(0).window(0).publish_every(0).threads(0);
+        assert_eq!(cfg.batch, 1);
+        assert_eq!(cfg.window, 1);
+        assert_eq!(cfg.publish_every, 1);
+        assert_eq!(cfg.threads, 1);
+    }
+
+    #[test]
+    fn replay_split_partitions_every_interaction() {
+        let data = synthetic::small(5);
+        let split = replay_split(&data, 0.8, 42);
+        assert!(split.n_cold_users > 0);
+        assert_eq!(split.warm.nrows() + split.n_cold_users, data.nrows());
+        let warm_total = split.warm.total_nnz();
+        assert_eq!(warm_total + split.stream.remaining(), data.total_nnz());
+        // Warm entries only reference warm users.
+        assert!(split
+            .warm
+            .train
+            .entries()
+            .iter()
+            .all(|e| e.u < split.warm.nrows()));
+        // The id map is the identity over the warm shape.
+        assert_eq!(split.map.n_users(), split.warm.nrows());
+        assert_eq!(split.map.n_items(), data.ncols());
+        assert_eq!(split.map.user(0), Some(0));
+    }
+
+    #[test]
+    fn replay_split_stream_has_only_cold_users() {
+        let data = synthetic::small(6);
+        let mut split = replay_split(&data, 0.9, 1);
+        let warm_rows = split.warm.nrows() as u64;
+        while let Some(b) = split.stream.next_batch(512) {
+            assert!(b.events.iter().all(|e| e.u >= warm_rows));
+        }
+    }
+}

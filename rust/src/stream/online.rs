@@ -1,0 +1,452 @@
+//! The online trainer: sliding-window incremental NAG over the lock-free
+//! block scheduler, with fold-in for new nodes and periodic snapshot
+//! publication.
+//!
+//! Each ingested micro-batch is processed in four steps:
+//!
+//! 1. **Resolve** external ids through the [`IdMap`], growing the factor
+//!    matrices for never-before-seen users/items.
+//! 2. **Route** every `holdout_every`-th event to the rolling holdout ring
+//!    (the online test set); the rest enter the sliding window.
+//! 3. **Update**: fold in new nodes (one-sided NAG on their rows only),
+//!    then run `passes` sweeps of the full update rule over the window —
+//!    multi-threaded through a balanced block grid and the A²PSGD lock-free
+//!    scheduler, exactly like the offline engine but scoped to recent
+//!    events.
+//! 4. **Publish** every `publish_every` batches: clone the working factors
+//!    into the [`SnapshotStore`], where the serving path picks them up at
+//!    its next batch boundary with zero downtime.
+//!
+//! The trainer owns its working copy of the factors (the publisher-side
+//! buffer of the double-buffering scheme); readers only ever see published
+//! immutable snapshots.
+
+use super::foldin::{fold_in_item, fold_in_user};
+use super::source::{EventSource, MicroBatch};
+use super::StreamConfig;
+use crate::coordinator::service::ExclusionSet;
+use crate::data::loader::IdMap;
+use crate::metrics::RollingHoldout;
+use crate::model::{Factors, SharedFactors, SnapshotStore};
+use crate::partition::{build_grid, PartitionKind};
+use crate::scheduler::{BlockScheduler, LockFreeScheduler};
+use crate::sparse::{CooMatrix, Entry};
+use crate::Result;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Counters accumulated over the life of an [`OnlineTrainer`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OnlineStats {
+    /// Micro-batches ingested.
+    pub batches: u64,
+    /// Events ingested (trained + held out).
+    pub events: u64,
+    /// Events that entered the sliding window.
+    pub trained_events: u64,
+    /// Events routed to the rolling holdout ring.
+    pub holdout_events: u64,
+    /// Users folded in (never seen before the stream).
+    pub new_users: u64,
+    /// Items folded in.
+    pub new_items: u64,
+    /// Per-instance window updates executed.
+    pub updates: u64,
+    /// Snapshots published.
+    pub publishes: u64,
+}
+
+/// Streaming trainer; see the module docs for the processing pipeline.
+pub struct OnlineTrainer {
+    cfg: StreamConfig,
+    factors: Factors,
+    map: IdMap,
+    window: VecDeque<Entry>,
+    holdout: RollingHoldout,
+    store: Arc<SnapshotStore>,
+    rating: (f32, f32),
+    init_scale: f32,
+    rng: crate::rng::Rng,
+    stats: OnlineStats,
+    event_seq: u64,
+    exclusions: Option<Arc<ExclusionSet>>,
+}
+
+impl OnlineTrainer {
+    /// Wrap trained `factors` (the working copy) and their id `map` for
+    /// online updates publishing into `store`. `rating` is the clamp range
+    /// used for holdout evaluation and new-row init scaling.
+    pub fn new(
+        factors: Factors,
+        map: IdMap,
+        cfg: StreamConfig,
+        store: Arc<SnapshotStore>,
+        rating: (f32, f32),
+    ) -> Result<Self> {
+        cfg.validate()?;
+        anyhow::ensure!(
+            factors.nrows() == map.n_users() && factors.ncols() == map.n_items(),
+            "factors {}x{} disagree with id map {}x{}",
+            factors.nrows(),
+            factors.ncols(),
+            map.n_users(),
+            map.n_items()
+        );
+        let midpoint = 0.5 * (rating.0 + rating.1);
+        let init_scale = Factors::default_scale(midpoint as f64, factors.d());
+        let rng = crate::rng::Rng::new(cfg.seed ^ 0x0A71E5);
+        Ok(OnlineTrainer {
+            holdout: RollingHoldout::new(cfg.holdout_cap),
+            window: VecDeque::with_capacity(cfg.window.min(1 << 16)),
+            cfg,
+            factors,
+            map,
+            store,
+            rating,
+            init_scale,
+            rng,
+            stats: OnlineStats::default(),
+            event_seq: 0,
+            exclusions: None,
+        })
+    }
+
+    /// Share the serving-side top-k exclusion set: every streamed
+    /// interaction is recorded there, so a user is never recommended items
+    /// they consumed on the stream (including right after fold-in).
+    pub fn share_exclusions(&mut self, ex: Arc<ExclusionSet>) {
+        self.exclusions = Some(ex);
+    }
+
+    /// Ingest one micro-batch: resolve, route, fold in, update, publish.
+    pub fn ingest(&mut self, batch: &MicroBatch) {
+        self.stats.batches += 1;
+        // Per-batch fold-in observation lists, keyed by *new* dense ids
+        // (BTreeMap for a deterministic fold-in order).
+        let mut new_users: BTreeMap<u32, Vec<(u32, f32)>> = BTreeMap::new();
+        let mut new_items: BTreeMap<u32, Vec<(u32, f32)>> = BTreeMap::new();
+        for ev in &batch.events {
+            self.stats.events += 1;
+            let (du, fresh_u) = self.map.intern_user(ev.u);
+            if fresh_u {
+                self.factors.grow_rows(1, self.init_scale, &mut self.rng);
+                self.stats.new_users += 1;
+                new_users.insert(du, Vec::new());
+            }
+            let (dv, fresh_v) = self.map.intern_item(ev.v);
+            if fresh_v {
+                self.factors.grow_cols(1, self.init_scale, &mut self.rng);
+                self.stats.new_items += 1;
+                new_items.insert(dv, Vec::new());
+            }
+            self.event_seq += 1;
+            let entry = Entry { u: du, v: dv, r: ev.r };
+            if self.event_seq % self.cfg.holdout_every == 0 {
+                self.holdout.push(entry);
+                self.stats.holdout_events += 1;
+                continue;
+            }
+            self.stats.trained_events += 1;
+            if let Some(obs) = new_users.get_mut(&du) {
+                obs.push((dv, ev.r));
+            }
+            if let Some(obs) = new_items.get_mut(&dv) {
+                obs.push((du, ev.r));
+            }
+            if self.window.len() == self.cfg.window {
+                self.window.pop_front();
+            }
+            self.window.push_back(entry);
+        }
+        for (u, obs) in &new_users {
+            if !obs.is_empty() {
+                fold_in_user(&mut self.factors, *u, obs, &self.cfg.hyper, self.cfg.foldin_steps);
+            }
+        }
+        for (v, obs) in &new_items {
+            if !obs.is_empty() {
+                fold_in_item(&mut self.factors, *v, obs, &self.cfg.hyper, self.cfg.foldin_steps);
+            }
+        }
+        if let Some(ex) = &self.exclusions {
+            // Everything in the batch was consumed by its user — held-out
+            // events included — so none of it should be recommended back.
+            ex.extend(batch.events.iter().filter_map(|e| {
+                Some((self.map.user(e.u)?, self.map.item(e.v)?))
+            }));
+        }
+        self.window_pass();
+        if self.stats.batches % self.cfg.publish_every == 0 {
+            self.publish();
+        }
+    }
+
+    /// Drain an event source to exhaustion, then publish the final state.
+    pub fn run(&mut self, src: &mut dyn EventSource) -> OnlineStats {
+        while let Some(batch) = src.next_batch(self.cfg.batch) {
+            self.ingest(&batch);
+        }
+        self.publish();
+        self.stats
+    }
+
+    /// Clone the working factors into the snapshot store; returns the new
+    /// version.
+    pub fn publish(&mut self) -> u64 {
+        self.stats.publishes += 1;
+        self.store.publish(self.factors.clone())
+    }
+
+    /// Below this many window entries the serial path wins: the parallel
+    /// path pays a window copy, a grid build, and `threads` thread
+    /// spawns/joins per ingested batch, which only amortizes once the
+    /// O(window · passes · D) update work dwarfs it.
+    const PARALLEL_WINDOW_MIN: usize = 2048;
+
+    /// `passes` sweeps of the update rule over the sliding window.
+    fn window_pass(&mut self) {
+        let passes = self.cfg.passes;
+        if passes == 0 || self.window.is_empty() {
+            return;
+        }
+        if self.cfg.threads == 1 || self.window.len() < Self::PARALLEL_WINDOW_MIN {
+            // Serial fast path: no grid build, deterministic order.
+            let h = self.cfg.hyper;
+            let rule = self.cfg.rule;
+            let d = self.factors.d();
+            let f = &mut self.factors;
+            for _ in 0..passes {
+                for e in &self.window {
+                    let (ui, vi) = (e.u as usize * d, e.v as usize * d);
+                    let (m, n, phi, psi) = (&mut f.m, &mut f.n, &mut f.phi, &mut f.psi);
+                    rule.apply(
+                        &mut m[ui..ui + d],
+                        &mut n[vi..vi + d],
+                        &mut phi[ui..ui + d],
+                        &mut psi[vi..vi + d],
+                        e.r,
+                        &h,
+                    );
+                }
+            }
+            self.stats.updates += self.window.len() as u64 * passes as u64;
+            return;
+        }
+        // Parallel path: balanced grid over the window + lock-free scheduler,
+        // the same machinery as the offline A²PSGD engine.
+        let entries: Vec<Entry> = self.window.iter().copied().collect();
+        let coo = CooMatrix::from_entries(self.factors.nrows(), self.factors.ncols(), entries)
+            .expect("window entries are dense-id validated");
+        let grid = build_grid(&coo, PartitionKind::Balanced, self.cfg.threads);
+        let sched = LockFreeScheduler::new(grid.nblocks());
+        let quota = coo.nnz() as u64 * passes as u64;
+        let hyper = self.cfg.hyper;
+        let rule = self.cfg.rule;
+        let placeholder = Factors::from_parts(0, 0, self.factors.d(), vec![], vec![], vec![], vec![])
+            .expect("placeholder factors");
+        let shared = SharedFactors::new(std::mem::replace(&mut self.factors, placeholder));
+        let done = AtomicU64::new(0);
+        let mut base = self.rng.fork(self.stats.batches);
+        std::thread::scope(|scope| {
+            for t in 0..self.cfg.threads {
+                let done = &done;
+                let shared = &shared;
+                let grid = &grid;
+                let sched = &sched;
+                let mut rng = base.fork(t as u64);
+                scope.spawn(move || loop {
+                    if done.load(Ordering::Relaxed) >= quota {
+                        return;
+                    }
+                    let Some(claim) = sched.acquire(&mut rng) else {
+                        std::hint::spin_loop();
+                        std::thread::yield_now();
+                        continue;
+                    };
+                    let block = grid.block(claim.i, claim.j);
+                    for e in &block.entries {
+                        // SAFETY: the scheduler guarantees no concurrent
+                        // claim shares this row or column block, so the rows
+                        // touched here are exclusively ours (the same
+                        // contract as the offline block engines).
+                        let (mu, nv, phiu, psiv) = unsafe { shared.rows_mut(e.u, e.v) };
+                        rule.apply(mu, nv, phiu, psiv, e.r, &hyper);
+                    }
+                    done.fetch_add(block.entries.len() as u64, Ordering::Relaxed);
+                    sched.release(claim);
+                });
+            }
+        });
+        self.factors = shared.into_inner();
+        self.stats.updates += done.load(Ordering::Relaxed);
+    }
+
+    /// Rolling-holdout RMSE under the current *working* factors.
+    pub fn holdout_rmse(&self) -> Option<f64> {
+        self.holdout.rmse(&self.factors, self.rating.0, self.rating.1)
+    }
+
+    /// The rolling holdout ring (evaluate older snapshots against it).
+    pub fn holdout(&self) -> &RollingHoldout {
+        &self.holdout
+    }
+
+    /// Current working factors (publisher-side buffer).
+    pub fn factors(&self) -> &Factors {
+        &self.factors
+    }
+
+    /// The external↔dense id map (grown by the stream).
+    pub fn map(&self) -> &IdMap {
+        &self.map
+    }
+
+    /// Counters so far.
+    pub fn stats(&self) -> &OnlineStats {
+        &self.stats
+    }
+
+    /// The snapshot store this trainer publishes into.
+    pub fn store(&self) -> &Arc<SnapshotStore> {
+        &self.store
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::Hyper;
+    use crate::rng::Rng;
+    use crate::stream::source::{Event, ReplaySource};
+
+    fn cfg(threads: usize) -> StreamConfig {
+        // Window above PARALLEL_WINDOW_MIN so the threads=4 case exercises
+        // the grid/scheduler path once enough events have streamed.
+        StreamConfig::preset("synthetic-small")
+            .batch(64)
+            .window(4096)
+            .publish_every(2)
+            .threads(threads)
+            .hyper(Hyper::nag(0.005, 0.01, 0.9))
+            .seed(7)
+    }
+
+    /// Ground-truth factors and a stream of exact interactions from them.
+    fn truth_stream(nrows: u32, ncols: u32, n_events: usize, seed: u64) -> (Factors, Vec<Event>) {
+        let mut rng = Rng::new(seed);
+        let truth = Factors::init(nrows, ncols, 4, Factors::default_scale(3.0, 4), &mut rng);
+        let events = (0..n_events)
+            .map(|i| {
+                let u = rng.gen_index(nrows as usize) as u32;
+                let v = rng.gen_index(ncols as usize) as u32;
+                Event {
+                    t: i as u64,
+                    u: u as u64,
+                    v: v as u64,
+                    r: truth.predict(u, v).clamp(1.0, 5.0),
+                }
+            })
+            .collect();
+        (truth, events)
+    }
+
+    fn fresh_trainer(nrows: u32, ncols: u32, threads: usize) -> OnlineTrainer {
+        let mut rng = Rng::new(99);
+        let factors =
+            Factors::init(nrows, ncols, 4, Factors::default_scale(3.0, 4), &mut rng);
+        let store = Arc::new(SnapshotStore::new(factors.clone()));
+        OnlineTrainer::new(
+            factors,
+            IdMap::identity(nrows, ncols),
+            cfg(threads),
+            store,
+            (1.0, 5.0),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn new_rejects_map_shape_mismatch() {
+        let mut rng = Rng::new(1);
+        let f = Factors::init(4, 4, 2, 0.3, &mut rng);
+        let store = Arc::new(SnapshotStore::new(f.clone()));
+        let r = OnlineTrainer::new(f, IdMap::identity(3, 4), cfg(1), store, (1.0, 5.0));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn ingest_grows_factors_for_unseen_nodes() {
+        let mut t = fresh_trainer(4, 4, 1);
+        let batch = MicroBatch {
+            seq: 0,
+            events: vec![
+                Event { t: 0, u: 100, v: 0, r: 4.0 }, // new user
+                Event { t: 1, u: 100, v: 200, r: 3.0 }, // new item
+                Event { t: 2, u: 0, v: 0, r: 2.0 },   // known pair
+            ],
+        };
+        t.ingest(&batch);
+        assert_eq!(t.factors().nrows(), 5);
+        assert_eq!(t.factors().ncols(), 5);
+        assert_eq!(t.map().user(100), Some(4));
+        assert_eq!(t.map().item(200), Some(4));
+        assert_eq!(t.stats().new_users, 1);
+        assert_eq!(t.stats().new_items, 1);
+        assert_eq!(t.stats().events, 3);
+        assert!(t.stats().updates > 0);
+    }
+
+    #[test]
+    fn holdout_routing_and_window_capacity() {
+        let mut t = fresh_trainer(8, 8, 1);
+        t.cfg.holdout_every = 2; // every 2nd event held out
+        t.cfg.window = 4;
+        let events: Vec<Event> = (0..20)
+            .map(|i| Event { t: i, u: (i % 8), v: ((i * 3) % 8), r: 3.0 })
+            .collect();
+        t.ingest(&MicroBatch { seq: 0, events });
+        assert_eq!(t.stats().holdout_events, 10);
+        assert_eq!(t.stats().trained_events, 10);
+        assert_eq!(t.holdout().len(), 10);
+        assert_eq!(t.window.len(), 4, "window must stay capacity-bounded");
+    }
+
+    #[test]
+    fn publish_cadence_bumps_store_version() {
+        let mut t = fresh_trainer(4, 4, 1);
+        let store = Arc::clone(t.store());
+        assert_eq!(store.version(), 1);
+        let mk = |seq| MicroBatch {
+            seq,
+            events: vec![Event { t: seq, u: 0, v: 1, r: 3.0 }],
+        };
+        t.ingest(&mk(0));
+        assert_eq!(store.version(), 1, "publish_every=2: no publish after batch 1");
+        t.ingest(&mk(1));
+        assert_eq!(store.version(), 2, "published after batch 2");
+        assert_eq!(t.stats().publishes, 1);
+    }
+
+    #[test]
+    fn streaming_improves_holdout_rmse() {
+        for threads in [1usize, 4] {
+            let (_, events) = truth_stream(24, 16, 4000, 5);
+            let mut t = fresh_trainer(24, 16, threads);
+            let initial = t.store().load();
+            let mut src = ReplaySource::new(events);
+            let stats = t.run(&mut src);
+            assert!(stats.holdout_events > 50);
+            let before = t
+                .holdout()
+                .rmse(initial.factors(), 1.0, 5.0)
+                .expect("holdout non-empty");
+            let after = t.holdout_rmse().expect("holdout non-empty");
+            assert!(
+                after < before,
+                "threads={threads}: rmse must improve, {before:.4} → {after:.4}"
+            );
+            assert!(t.store().version() > 1);
+        }
+    }
+}

@@ -1,0 +1,232 @@
+//! Event ingestion: timestamped interaction events, bounded micro-batches,
+//! and the sources that produce them.
+//!
+//! Two sources cover the production and benchmarking stories:
+//!
+//! - [`ChannelSource`] — a live source fed through an [`EventSender`] from
+//!   any number of producer threads; `next_batch` drains up to the batch
+//!   bound or a wait deadline, so ingestion latency is bounded even under
+//!   trickle traffic.
+//! - [`ReplaySource`] — replays a recorded interaction log (e.g. any
+//!   existing [`crate::data::Dataset`]'s entries) in timestamp order as a
+//!   simulated live stream, which is what the benchmarks and the
+//!   `online_serving` example drive.
+
+use crate::data::loader::IdMap;
+use crate::sparse::{CooMatrix, Entry};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// One timestamped interaction observed on the stream. Node ids are
+/// *external* (application key space); the online trainer resolves them to
+/// dense ids through an [`IdMap`], growing the factors for unseen nodes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Event {
+    /// Event time (any monotone unit — replay uses the log position).
+    pub t: u64,
+    /// External user id.
+    pub u: u64,
+    /// External item id.
+    pub v: u64,
+    /// Interaction weight / rating.
+    pub r: f32,
+}
+
+/// A bounded micro-batch of events, in arrival order.
+#[derive(Clone, Debug)]
+pub struct MicroBatch {
+    /// Monotone batch sequence number (0-based per source).
+    pub seq: u64,
+    /// The events (non-empty; length ≤ the requested bound).
+    pub events: Vec<Event>,
+}
+
+/// Anything that yields bounded micro-batches of interaction events.
+pub trait EventSource {
+    /// Next micro-batch of at most `max_events` (≥ 1) events, or `None`
+    /// when the stream is exhausted. Never returns an empty batch.
+    fn next_batch(&mut self, max_events: usize) -> Option<MicroBatch>;
+}
+
+/// Replay a recorded event log as a simulated live stream.
+#[derive(Clone, Debug)]
+pub struct ReplaySource {
+    events: Vec<Event>,
+    pos: usize,
+    seq: u64,
+}
+
+impl ReplaySource {
+    /// Replay `events` in timestamp order (stable for equal timestamps).
+    pub fn new(mut events: Vec<Event>) -> Self {
+        events.sort_by_key(|e| e.t);
+        ReplaySource { events, pos: 0, seq: 0 }
+    }
+
+    /// Replay a dense COO matrix; external ids are the dense ids and the
+    /// timestamp is the entry's position in the log.
+    pub fn from_coo(coo: &CooMatrix) -> Self {
+        Self::from_entries(coo.entries(), None)
+    }
+
+    /// Replay dense entries, optionally translating back to external ids
+    /// through `map` (entries whose dense ids the map does not know keep
+    /// their dense id as the external id).
+    pub fn from_entries(entries: &[Entry], map: Option<&IdMap>) -> Self {
+        let events = entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| Event {
+                t: i as u64,
+                u: map
+                    .and_then(|m| m.external_user(e.u))
+                    .unwrap_or(e.u as u64),
+                v: map
+                    .and_then(|m| m.external_item(e.v))
+                    .unwrap_or(e.v as u64),
+                r: e.r,
+            })
+            .collect();
+        ReplaySource { events, pos: 0, seq: 0 }
+    }
+
+    /// Events not yet replayed.
+    pub fn remaining(&self) -> usize {
+        self.events.len() - self.pos
+    }
+}
+
+impl EventSource for ReplaySource {
+    fn next_batch(&mut self, max_events: usize) -> Option<MicroBatch> {
+        assert!(max_events >= 1);
+        if self.pos >= self.events.len() {
+            return None;
+        }
+        let end = (self.pos + max_events).min(self.events.len());
+        let events = self.events[self.pos..end].to_vec();
+        self.pos = end;
+        let seq = self.seq;
+        self.seq += 1;
+        Some(MicroBatch { seq, events })
+    }
+}
+
+/// Producer handle for a [`ChannelSource`]; cloneable across threads.
+#[derive(Clone)]
+pub struct EventSender {
+    tx: mpsc::Sender<Event>,
+}
+
+impl EventSender {
+    /// Enqueue one event; fails once the source has been dropped.
+    pub fn send(&self, e: Event) -> crate::Result<()> {
+        self.tx.send(e).map_err(|_| anyhow::anyhow!("event source closed"))
+    }
+}
+
+/// A live event source fed through a channel.
+pub struct ChannelSource {
+    rx: mpsc::Receiver<Event>,
+    max_wait: Duration,
+    seq: u64,
+}
+
+impl ChannelSource {
+    /// Create the source plus its producer handle. `max_wait` bounds how
+    /// long a partially filled micro-batch waits for more events.
+    pub fn new(max_wait: Duration) -> (EventSender, ChannelSource) {
+        let (tx, rx) = mpsc::channel();
+        (EventSender { tx }, ChannelSource { rx, max_wait, seq: 0 })
+    }
+}
+
+impl EventSource for ChannelSource {
+    /// Blocks for the first event, then drains until `max_events` or the
+    /// `max_wait` deadline. Returns `None` once every sender has dropped
+    /// and the queue is empty.
+    fn next_batch(&mut self, max_events: usize) -> Option<MicroBatch> {
+        assert!(max_events >= 1);
+        let first = self.rx.recv().ok()?;
+        let mut events = Vec::with_capacity(max_events.min(1024));
+        events.push(first);
+        let deadline = Instant::now() + self.max_wait;
+        while events.len() < max_events {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(e) => events.push(e),
+                Err(_) => break, // timeout or disconnected — ship what we have
+            }
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        Some(MicroBatch { seq, events })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: u64, u: u64, v: u64, r: f32) -> Event {
+        Event { t, u, v, r }
+    }
+
+    #[test]
+    fn replay_batches_are_bounded_and_ordered() {
+        let events = vec![ev(3, 0, 0, 1.0), ev(1, 1, 1, 2.0), ev(2, 2, 2, 3.0)];
+        let mut src = ReplaySource::new(events);
+        assert_eq!(src.remaining(), 3);
+        let b0 = src.next_batch(2).unwrap();
+        assert_eq!(b0.seq, 0);
+        assert_eq!(b0.events.len(), 2);
+        assert_eq!(b0.events[0].t, 1, "sorted by timestamp");
+        assert_eq!(b0.events[1].t, 2);
+        let b1 = src.next_batch(2).unwrap();
+        assert_eq!(b1.seq, 1);
+        assert_eq!(b1.events.len(), 1);
+        assert_eq!(b1.events[0].t, 3);
+        assert!(src.next_batch(2).is_none());
+        assert_eq!(src.remaining(), 0);
+    }
+
+    #[test]
+    fn replay_from_entries_translates_external_ids() {
+        let mut map = IdMap::new();
+        map.intern_user(100);
+        map.intern_item(9000);
+        let entries = vec![Entry { u: 0, v: 0, r: 4.0 }];
+        let mut src = ReplaySource::from_entries(&entries, Some(&map));
+        let b = src.next_batch(8).unwrap();
+        assert_eq!(b.events[0].u, 100);
+        assert_eq!(b.events[0].v, 9000);
+        assert_eq!(b.events[0].r, 4.0);
+    }
+
+    #[test]
+    fn channel_source_drains_and_terminates() {
+        let (tx, mut src) = ChannelSource::new(Duration::from_millis(5));
+        for i in 0..5u64 {
+            tx.send(ev(i, i, i, 1.0)).unwrap();
+        }
+        let b = src.next_batch(3).unwrap();
+        assert_eq!(b.events.len(), 3);
+        let b = src.next_batch(10).unwrap();
+        assert_eq!(b.events.len(), 2);
+        drop(tx);
+        assert!(src.next_batch(4).is_none(), "closed + empty ⇒ exhausted");
+    }
+
+    #[test]
+    fn channel_source_partial_batch_on_timeout() {
+        let (tx, mut src) = ChannelSource::new(Duration::from_millis(1));
+        tx.send(ev(0, 0, 0, 1.0)).unwrap();
+        let b = src.next_batch(100).unwrap();
+        assert_eq!(b.events.len(), 1, "deadline flushes a partial batch");
+        // Sender still alive: source must keep yielding later batches.
+        tx.send(ev(1, 1, 1, 2.0)).unwrap();
+        assert_eq!(src.next_batch(100).unwrap().events.len(), 1);
+    }
+}

@@ -1,0 +1,300 @@
+//! Online-learning subsystem integration: the service batcher's edge cases
+//! (native backend — no artifacts needed), the snapshot hot-swap protocol
+//! end to end, and streaming with fold-in against a live service.
+
+use a2psgd::coordinator::service::{BackendMode, ExclusionSet, PredictionService};
+use a2psgd::data::loader::IdMap;
+use a2psgd::model::{Factors, SnapshotStore};
+use a2psgd::prelude::*;
+use a2psgd::stream::{EventSource, OnlineTrainer};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn native_service(
+    factors: Factors,
+    max_wait: Duration,
+    train: Option<a2psgd::sparse::CooMatrix>,
+) -> (Arc<SnapshotStore>, PredictionService) {
+    let store = Arc::new(SnapshotStore::new(factors));
+    let exclusions = train.map(|t| Arc::new(ExclusionSet::from_matrix(&t)));
+    let svc = PredictionService::start_over_store(
+        a2psgd::runtime::default_artifacts_dir(),
+        Arc::clone(&store),
+        (1.0, 5.0),
+        max_wait,
+        exclusions,
+        BackendMode::NativeOnly,
+    )
+    .expect("native backend needs no artifacts");
+    (store, svc)
+}
+
+fn factors(seed: u64, nrows: u32, ncols: u32) -> Factors {
+    let mut rng = Rng::new(seed);
+    Factors::init(nrows, ncols, 8, 0.4, &mut rng)
+}
+
+#[test]
+fn native_predictions_match_factors_exactly() {
+    let f = factors(1, 30, 20);
+    let reference = f.clone();
+    let (_store, svc) = native_service(f, Duration::from_millis(1), None);
+    let client = svc.client();
+    for (u, v) in [(0u32, 0u32), (29, 19), (7, 13)] {
+        let got = client.predict(u, v).unwrap();
+        let want = reference.predict_clamped(u, v, 1.0, 5.0);
+        assert!((got - want).abs() < 1e-6, "({u},{v}): {got} vs {want}");
+    }
+    drop(client);
+    let stats = svc.shutdown();
+    assert_eq!(stats.served, 3);
+    assert_eq!(stats.last_version, 1);
+    assert_eq!(stats.versions_seen, 1);
+}
+
+/// Satellite: `max_wait` must flush a partial batch — three requests are far
+/// below the native batch size of 64, yet all get answered promptly.
+#[test]
+fn max_wait_flushes_partial_batch() {
+    let f = factors(2, 10, 10);
+    let (_store, svc) = native_service(f, Duration::from_millis(5), None);
+    let client = svc.client();
+    let preds = client.predict_many(&[(0, 1), (2, 3), (4, 5)]).unwrap();
+    assert_eq!(preds.len(), 3);
+    drop(client);
+    let stats = svc.shutdown();
+    assert_eq!(stats.served, 3);
+    assert_eq!(stats.batches, 1, "one partial batch, flushed by the deadline");
+    assert!((stats.mean_batch() - 3.0).abs() < 1e-9);
+}
+
+/// Satellite: a batching window that contains only top-k traffic must not
+/// launch an (empty) prediction batch.
+#[test]
+fn topk_only_window_launches_no_predict_batch() {
+    let mut train = a2psgd::sparse::CooMatrix::new(10, 10);
+    train.push(0, 3, 5.0).unwrap(); // user 0 already rated item 3
+    let f = factors(3, 10, 10);
+    let reference = f.clone();
+    let (_store, svc) = native_service(f, Duration::from_millis(2), Some(train));
+    let client = svc.client();
+    for _ in 0..4 {
+        let top = client.top_k(0, 3).unwrap();
+        assert_eq!(top.len(), 3);
+        assert!(top.iter().all(|(v, _)| *v != 3), "rated item must be excluded");
+        // Scores are real dot products, descending.
+        for w in top.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+        let want = reference.predict(0, top[0].0);
+        assert!((top[0].1 - want).abs() < 1e-6);
+    }
+    // Unknown user: gracefully empty, not a crash.
+    assert!(client.top_k(999, 3).unwrap().is_empty());
+    drop(client);
+    let stats = svc.shutdown();
+    assert_eq!(stats.topk_served, 5);
+    assert_eq!(stats.batches, 0, "top-k-only windows must not execute predict batches");
+    assert_eq!(stats.served, 0);
+}
+
+/// Satellite: clients that drop their reply channel before the answer lands
+/// must not wedge or crash the batcher.
+#[test]
+fn dropped_reply_channels_are_harmless() {
+    let f = factors(4, 10, 10);
+    let reference = f.clone();
+    let (_store, svc) = native_service(f, Duration::from_millis(1), None);
+    let client = svc.client();
+    for i in 0..20u32 {
+        let rx = client.predict_async(i % 10, (i * 3) % 10).unwrap();
+        drop(rx); // client walks away before the batch executes
+    }
+    // The service keeps answering well-behaved clients afterwards.
+    let got = client.predict(1, 2).unwrap();
+    assert!((got - reference.predict_clamped(1, 2, 1.0, 5.0)).abs() < 1e-6);
+    drop(client);
+    let stats = svc.shutdown();
+    assert_eq!(stats.served, 21, "abandoned requests still count as served");
+}
+
+/// Unknown nodes answer the rating-scale midpoint instead of failing.
+#[test]
+fn unknown_nodes_answer_midpoint() {
+    let f = factors(5, 4, 4);
+    let (_store, svc) = native_service(f, Duration::from_millis(1), None);
+    let client = svc.client();
+    assert_eq!(client.predict(100, 0).unwrap(), 3.0);
+    assert_eq!(client.predict(0, 100).unwrap(), 3.0);
+    drop(client);
+    svc.shutdown();
+}
+
+/// The hot-swap protocol end to end: publishing into the store changes what
+/// the running service answers, with the version counter as the witness.
+#[test]
+fn hot_swap_changes_answers_without_restart() {
+    let mut rng = Rng::new(6);
+    let mut f1 = Factors::init(4, 4, 2, 0.0, &mut rng);
+    f1.m.iter_mut().for_each(|x| *x = 1.0);
+    f1.n.iter_mut().for_each(|x| *x = 1.0); // r̂ = 2.0 everywhere
+    let (store, svc) = native_service(f1.clone(), Duration::from_millis(1), None);
+    let client = svc.client();
+    assert_eq!(client.predict(0, 0).unwrap(), 2.0);
+    // Publish a larger, different generation while the service runs.
+    let mut f2 = f1.clone();
+    f2.m.iter_mut().for_each(|x| *x = 2.0); // r̂ = 4.0
+    f2.grow_rows(2, 0.0, &mut rng);
+    let v = store.publish(f2);
+    assert_eq!(v, 2);
+    assert_eq!(client.predict(0, 0).unwrap(), 4.0, "new factors live without restart");
+    // The grown row 5 exists now (zero-init ⇒ r̂=0 ⇒ clamped to 1.0) …
+    assert_eq!(client.predict(5, 0).unwrap(), 1.0);
+    // … while a still-unknown row answers the midpoint prior.
+    assert_eq!(client.predict(100, 0).unwrap(), 3.0);
+    drop(client);
+    let stats = svc.shutdown();
+    assert_eq!(stats.versions_seen, 2);
+    assert_eq!(stats.last_version, 2);
+}
+
+/// Exclusions grow live: items a user consumes *on the stream* stop being
+/// recommended to them, without restarting the service.
+#[test]
+fn streamed_items_are_excluded_from_topk() {
+    let f = factors(8, 6, 10);
+    let store = Arc::new(SnapshotStore::new(f.clone()));
+    let exclusions = Arc::new(ExclusionSet::new());
+    let svc = PredictionService::start_over_store(
+        a2psgd::runtime::default_artifacts_dir(),
+        Arc::clone(&store),
+        (1.0, 5.0),
+        Duration::from_millis(1),
+        Some(Arc::clone(&exclusions)),
+        BackendMode::NativeOnly,
+    )
+    .unwrap();
+    let client = svc.client();
+    let full = client.top_k(2, 10).unwrap();
+    assert_eq!(full.len(), 10, "no exclusions yet: whole catalog ranked");
+    // The user consumes the current top item mid-stream (what the trainer's
+    // share_exclusions hook records on every ingested batch).
+    let consumed = full[0].0;
+    exclusions.extend([(2u32, consumed)]);
+    let after = client.top_k(2, 10).unwrap();
+    assert_eq!(after.len(), 9);
+    assert!(after.iter().all(|(v, _)| *v != consumed), "consumed item must vanish");
+    drop(client);
+    svc.shutdown();
+}
+
+/// Full pipeline: warm training → serve → stream cold users → fold-in →
+/// rolling RMSE improves and the service hands over snapshots seamlessly.
+#[test]
+fn streaming_pipeline_improves_and_hot_swaps() {
+    let data = a2psgd::data::synthetic::small(42);
+    let mut split = a2psgd::stream::replay_split(&data, 0.75, 3);
+    let cfg = TrainConfig::preset(EngineKind::A2psgd, &split.warm)
+        .threads(2)
+        .epochs(10)
+        .dim(8);
+    let report = engine::train(&split.warm, &cfg).unwrap();
+
+    let store = Arc::new(SnapshotStore::new(report.factors.clone()));
+    let exclusions = Arc::new(ExclusionSet::from_matrix(&split.warm.train));
+    let svc = PredictionService::start_over_store(
+        a2psgd::runtime::default_artifacts_dir(),
+        Arc::clone(&store),
+        (data.rating_min, data.rating_max),
+        Duration::from_millis(1),
+        Some(Arc::clone(&exclusions)),
+        BackendMode::NativeOnly,
+    )
+    .unwrap();
+    let client = svc.client();
+    let initial = store.load();
+
+    let scfg = StreamConfig::preset(&data.name).threads(2).seed(3).batch(128);
+    let mut trainer = OnlineTrainer::new(
+        report.factors,
+        split.map,
+        scfg,
+        Arc::clone(&store),
+        (data.rating_min, data.rating_max),
+    )
+    .unwrap();
+    trainer.share_exclusions(Arc::clone(&exclusions));
+    while let Some(batch) = split.stream.next_batch(scfg.batch) {
+        trainer.ingest(&batch);
+        let _ = client.predict(0, 0).unwrap(); // service live throughout
+    }
+    trainer.publish();
+
+    // A user that did not exist at warm-training time is now answerable.
+    let cold = data
+        .train
+        .entries()
+        .iter()
+        .chain(data.test.entries())
+        .find(|e| e.u >= split.warm.nrows())
+        .copied()
+        .unwrap();
+    let du = trainer.map().user(cold.u as u64).unwrap();
+    assert!(du >= initial.factors().nrows());
+    let dv = trainer.map().item(cold.v as u64).unwrap();
+    let _ = client.predict(du, dv).unwrap();
+    // The item the cold user consumed on the stream is never recommended
+    // back to them (exclusions grew live through the trainer hook).
+    let top = client.top_k(du, data.ncols() as usize).unwrap();
+    assert!(!top.is_empty());
+    assert!(top.iter().all(|(v, _)| *v != dv), "streamed item leaked into top-k");
+
+    let before = trainer
+        .holdout()
+        .rmse(initial.factors(), data.rating_min, data.rating_max)
+        .unwrap();
+    let after = trainer.holdout_rmse().unwrap();
+    assert!(after < before, "rolling RMSE must improve: {before:.4} → {after:.4}");
+
+    drop(client);
+    let stats = svc.shutdown();
+    assert!(store.version() > 1);
+    assert!(stats.versions_seen >= 2, "the one service saw multiple generations");
+    assert_eq!(stats.last_version, store.version());
+}
+
+/// IdMap + checkpoint v2 survive a "restart" and resolve serve-time ids.
+#[test]
+fn persistence_roundtrip_restores_serving_state() {
+    let dir = std::env::temp_dir().join("a2psgd_stream_persist_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("online.a2pf");
+
+    let f = factors(7, 6, 5);
+    let mut map = IdMap::new();
+    for ext in [10u64, 20, 30, 40, 50, 60] {
+        map.intern_user(ext);
+    }
+    for ext in [100u64, 200, 300, 400, 500] {
+        map.intern_item(ext);
+    }
+    let meta = a2psgd::model::checkpoint::CheckpointMeta {
+        epoch: 3,
+        snapshot_version: 9,
+        hyper: a2psgd::optim::Hyper::nag(2e-3, 3e-2, 0.9),
+    };
+    a2psgd::model::checkpoint::save_with_meta(&f, &meta, &ckpt).unwrap();
+    let map_path = a2psgd::data::loader::idmap_path_for(&ckpt);
+    map.save(&map_path).unwrap();
+
+    // "Restart": reload both and serve a prediction for an external id.
+    let (g, back) = a2psgd::model::checkpoint::load_with_meta(&ckpt).unwrap();
+    let map2 = IdMap::load(&map_path).unwrap();
+    assert_eq!(back, meta);
+    assert_eq!(map2, map);
+    let du = map2.user(30).unwrap();
+    let dv = map2.item(400).unwrap();
+    assert_eq!(g.predict(du, dv), f.predict(du, dv));
+    std::fs::remove_file(&ckpt).ok();
+    std::fs::remove_file(&map_path).ok();
+}
