@@ -20,10 +20,12 @@ impl BenchResult {
         MeanStd::from(&self.samples)
     }
 
-    /// Median per-iteration seconds.
+    /// Median per-iteration seconds. NaN-safe: `total_cmp` orders NaNs to
+    /// the end instead of panicking (the repo's `take_top_k` idiom), so a
+    /// poisoned sample can't take down a whole bench run.
     pub fn median(&self) -> f64 {
         let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s.sort_by(f64::total_cmp);
         let n = s.len();
         if n % 2 == 1 {
             s[n / 2]
@@ -159,6 +161,103 @@ pub fn write_results_csv(filename: &str, contents: &str) -> std::io::Result<std:
     Ok(path)
 }
 
+/// Minimal JSON emission (no `serde` offline) for machine-readable bench
+/// artifacts like `BENCH_hotpath.json`. Only what the bench pipeline needs:
+/// objects, arrays of pre-serialized values, strings, and finite numbers
+/// (non-finite floats become `null` — NaN is not valid JSON).
+pub mod json {
+    /// Escape a string for a JSON string literal (without quotes).
+    pub fn escape(s: &str) -> String {
+        let mut out = String::with_capacity(s.len() + 2);
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\r' => out.push_str("\\r"),
+                '\t' => out.push_str("\\t"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out
+    }
+
+    /// Serialize a float (non-finite → `null`).
+    pub fn num(v: f64) -> String {
+        if v.is_finite() {
+            format!("{v}")
+        } else {
+            "null".to_string()
+        }
+    }
+
+    /// Serialize an array of pre-serialized JSON values.
+    pub fn array<I: IntoIterator<Item = String>>(items: I) -> String {
+        let mut out = String::from("[");
+        for (k, item) in items.into_iter().enumerate() {
+            if k > 0 {
+                out.push(',');
+            }
+            out.push_str(&item);
+        }
+        out.push(']');
+        out
+    }
+
+    /// Incremental JSON object builder.
+    #[derive(Default)]
+    pub struct Obj {
+        buf: String,
+    }
+
+    impl Obj {
+        /// Empty object.
+        pub fn new() -> Self {
+            Obj { buf: String::new() }
+        }
+
+        fn key(&mut self, k: &str) -> &mut Self {
+            if !self.buf.is_empty() {
+                self.buf.push(',');
+            }
+            self.buf.push('"');
+            self.buf.push_str(&escape(k));
+            self.buf.push_str("\":");
+            self
+        }
+
+        /// String field.
+        pub fn str(mut self, k: &str, v: &str) -> Self {
+            self.key(k).buf.push_str(&format!("\"{}\"", escape(v)));
+            self
+        }
+
+        /// Float field (non-finite → `null`).
+        pub fn num(mut self, k: &str, v: f64) -> Self {
+            self.key(k).buf.push_str(&num(v));
+            self
+        }
+
+        /// Integer field.
+        pub fn int(mut self, k: &str, v: u64) -> Self {
+            self.key(k).buf.push_str(&v.to_string());
+            self
+        }
+
+        /// Pre-serialized JSON value field (nested object/array).
+        pub fn raw(mut self, k: &str, v: &str) -> Self {
+            self.key(k).buf.push_str(v);
+            self
+        }
+
+        /// Finish into a JSON object string.
+        pub fn build(self) -> String {
+            format!("{{{}}}", self.buf)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,6 +287,34 @@ mod tests {
         assert_eq!(r.median(), 2.0);
         let r2 = BenchResult { name: "x".into(), samples: vec![4.0, 1.0, 2.0, 3.0] };
         assert_eq!(r2.median(), 2.5);
+    }
+
+    /// Regression: `partial_cmp().unwrap()` panicked on NaN samples.
+    #[test]
+    fn median_is_nan_safe() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples: vec![3.0, f64::NAN, 1.0],
+        };
+        // total_cmp sorts NaN last: [1.0, 3.0, NaN] → median 3.0, no panic.
+        assert_eq!(r.median(), 3.0);
+        let all_nan = BenchResult { name: "y".into(), samples: vec![f64::NAN] };
+        assert!(all_nan.median().is_nan());
+    }
+
+    #[test]
+    fn json_escapes_and_builds() {
+        let obj = json::Obj::new()
+            .str("name", "a \"b\"\n")
+            .num("x", 1.5)
+            .num("bad", f64::NAN)
+            .int("n", 7)
+            .raw("arr", &json::array(["1".to_string(), "2".to_string()]));
+        assert_eq!(
+            obj.build(),
+            r#"{"name":"a \"b\"\n","x":1.5,"bad":null,"n":7,"arr":[1,2]}"#
+        );
+        assert_eq!(json::array(Vec::<String>::new()), "[]");
     }
 
     #[test]

@@ -10,6 +10,8 @@
 //! a2psgd stream  [--dataset D] [--warm-frac F] [--batch N] [--window N]
 //!                [--publish-every N] [--foldin-steps N] [--threads N]
 //!                [--epochs N] [--config FILE] [--save PATH] [--native]
+//! a2psgd bench   [--dataset D] [--iters N] [--warmup N] [--threads N]
+//!                [--d D] [--seed S] [--config FILE] [--out FILE]
 //! a2psgd gen-data --dataset D --out FILE [--seed S]
 //! a2psgd print-config [--dataset D]
 //! a2psgd eval    --data-file PATH (reserved)
@@ -106,6 +108,10 @@ USAGE:
   a2psgd serve        train then serve batched predictions via XLA/PJRT
   a2psgd stream       warm-train, then stream live events: fold-in, online
                       NAG updates, and zero-downtime factor hot-swap
+  a2psgd bench        hot-path benchmark pipeline: update-kernel micro,
+                      layout A/B (COO vs block-CSR sweep), per-engine epoch
+                      macro, and scheduler fairness — emits BENCH_hotpath.json
+                      at the repo root (override with --out)
   a2psgd gen-data     write a synthetic dataset to a ratings file
   a2psgd print-config print the paper's hyperparameter tables (I/II)
   a2psgd help         this text
@@ -124,6 +130,11 @@ COMMON FLAGS:
   --out DIR        results directory (default: results/)
   --artifacts DIR  AOT artifacts (default: artifacts/)
   --no-early-stop  run all epochs
+
+BENCH FLAGS:
+  --iters N          measured iterations / macro epochs (default: 3)
+  --warmup N         unmeasured warmup iterations (default: 1)
+  --out FILE         JSON artifact path (default: <repo root>/BENCH_hotpath.json)
 
 STREAM FLAGS:
   --warm-frac F      fraction of users trained offline, rest streamed (0.8)

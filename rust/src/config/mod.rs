@@ -119,6 +119,87 @@ impl RunConfig {
     }
 }
 
+/// Configuration for the `a2psgd bench` hot-path pipeline (the run that
+/// emits `BENCH_hotpath.json`). Loadable from a `[bench]` TOML section;
+/// CLI flags override.
+///
+/// ```toml
+/// [bench]
+/// dataset = "medium"
+/// iters = 3
+/// warmup = 1
+/// threads = 8
+/// d = 16
+/// seed = 24333
+/// ```
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    /// Dataset key (`small`, `medium`, `ml1m`, `epinions`) or a file path.
+    pub dataset: String,
+    /// Measured iterations per benchmark (epochs for the macro benches).
+    pub iters: usize,
+    /// Unmeasured warmup iterations for the micro/layout benches.
+    pub warmup: usize,
+    /// Worker threads for the macro benches.
+    pub threads: usize,
+    /// Feature dimension D.
+    pub d: usize,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            dataset: "medium".into(),
+            iters: 3,
+            warmup: 1,
+            threads: crate::engine::default_threads(),
+            d: 16,
+            seed: 0x5EED,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Apply `[bench]` overrides from TOML-subset text.
+    pub fn apply_toml(mut self, text: &str) -> Result<Self> {
+        let doc = parse(text)?;
+        if let Some(v) = doc.get("bench", "dataset") {
+            self.dataset = v.as_str().context("bench.dataset must be a string")?.to_string();
+        }
+        let int = |k: &str| -> Result<Option<i64>> {
+            match doc.get("bench", k) {
+                None => Ok(None),
+                Some(v) => {
+                    let x = v.as_int().with_context(|| format!("bench.{k} must be an int"))?;
+                    anyhow::ensure!(x >= 0, "bench.{k} must be non-negative, got {x}");
+                    Ok(Some(x))
+                }
+            }
+        };
+        if let Some(x) = int("iters")? {
+            self.iters = x as usize;
+        }
+        if let Some(x) = int("warmup")? {
+            self.warmup = x as usize;
+        }
+        if let Some(x) = int("threads")? {
+            self.threads = x as usize;
+        }
+        if let Some(x) = int("d")? {
+            self.d = x as usize;
+        }
+        if let Some(x) = int("seed")? {
+            self.seed = x as u64;
+        }
+        anyhow::ensure!(self.iters >= 1, "bench.iters must be >= 1");
+        anyhow::ensure!(self.threads >= 1, "bench.threads must be >= 1");
+        anyhow::ensure!(self.d >= 1, "bench.d must be >= 1");
+        Ok(self)
+    }
+}
+
 /// Apply `[stream]` (and `[hyper]`) overrides from a TOML-subset file onto a
 /// base [`StreamConfig`] (usually [`StreamConfig::preset`]).
 ///
@@ -248,6 +329,31 @@ lam = 3e-2
     #[test]
     fn bad_partition_rejected() {
         assert!(RunConfig::from_toml("[run]\npartition = \"diagonal\"\n").is_err());
+    }
+
+    #[test]
+    fn bench_config_overrides_applied() {
+        let cfg = BenchConfig::default()
+            .apply_toml(
+                "[bench]\ndataset = \"small\"\niters = 5\nwarmup = 0\nthreads = 2\nd = 8\nseed = 7\n",
+            )
+            .unwrap();
+        assert_eq!(cfg.dataset, "small");
+        assert_eq!(cfg.iters, 5);
+        assert_eq!(cfg.warmup, 0);
+        assert_eq!(cfg.threads, 2);
+        assert_eq!(cfg.d, 8);
+        assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn bench_config_rejects_invalid_values() {
+        assert!(BenchConfig::default().apply_toml("[bench]\niters = 0\n").is_err());
+        assert!(BenchConfig::default().apply_toml("[bench]\nthreads = -1\n").is_err());
+        assert!(BenchConfig::default().apply_toml("[bench]\nd = \"big\"\n").is_err());
+        // Sections other than [bench] are left alone.
+        let cfg = BenchConfig::default().apply_toml("[run]\nthreads = 99\n").unwrap();
+        assert_ne!(cfg.threads, 99);
     }
 
     #[test]

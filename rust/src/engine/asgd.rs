@@ -2,14 +2,16 @@
 //! alternating sub-tasks — update M with N frozen, then N with M frozen.
 //! Each phase is embarrassingly parallel over disjoint row (resp. column)
 //! shards, so no locks are needed; the cost is that each epoch makes two
-//! passes over Ω and each pass moves only half the parameters.
+//! passes over Ω and each pass moves only half the parameters. Each shard
+//! is swept through a [`CsrRowRange`] — the same iteration contract the
+//! block engines use over their block-local lanes.
 
 use super::{EpochRunner, TrainConfig};
 use crate::data::Dataset;
 use crate::model::{dot, Factors, SharedFactors};
 use crate::optim::Hyper;
 use crate::rng::Rng;
-use crate::sparse::CsrMatrix;
+use crate::sparse::{CsrMatrix, CsrRowRange, SweepLanes};
 
 /// Alternating-phase SGD engine.
 pub struct AsgdEngine {
@@ -53,32 +55,25 @@ impl AsgdEngine {
             for (shard, slot) in self.row_shards.iter().zip(totals.iter_mut()) {
                 let (lo, hi) = *shard;
                 scope.spawn(move || {
-                    let mut n = 0u64;
-                    for u in lo..hi {
-                        for (v, r) in {
-                            let (idx, val) = by_row.row(u);
-                            idx.iter().zip(val.iter())
-                        } {
-                            // SAFETY: thread owns rows [lo,hi) of M
-                            // exclusively; N is read-only this phase.
-                            let (mu, nv, _, _) = unsafe { shared.rows_mut(u, *v) };
-                            let e = *r - dot(mu, nv);
-                            let ee = hyper.eta * e;
-                            let shrink = 1.0 - hyper.eta * hyper.lam;
-                            for k in 0..mu.len() {
-                                mu[k] = mu[k] * shrink + ee * nv[k];
-                            }
-                            n += 1;
+                    *slot = CsrRowRange::new(by_row, lo, hi).sweep(|u, v, r| {
+                        // SAFETY: thread owns rows [lo,hi) of M
+                        // exclusively; N is read-only this phase.
+                        let (mu, nv, _, _) = unsafe { shared.rows_mut(u, v) };
+                        let e = r - dot(mu, nv);
+                        let ee = hyper.eta * e;
+                        let shrink = 1.0 - hyper.eta * hyper.lam;
+                        for k in 0..mu.len() {
+                            mu[k] = mu[k] * shrink + ee * nv[k];
                         }
-                    }
-                    *slot = n;
+                    });
                 });
             }
         });
         totals.iter().sum()
     }
 
-    /// Phase N: symmetric, over the transposed matrix.
+    /// Phase N: symmetric, over the transposed matrix (the sweep's first
+    /// argument is the transpose's row, i.e. the column id v).
     fn phase_n(&self) -> u64 {
         let shared = &self.shared;
         let hyper = self.hyper;
@@ -88,25 +83,17 @@ impl AsgdEngine {
             for (shard, slot) in self.col_shards.iter().zip(totals.iter_mut()) {
                 let (lo, hi) = *shard;
                 scope.spawn(move || {
-                    let mut n = 0u64;
-                    for v in lo..hi {
-                        for (u, r) in {
-                            let (idx, val) = by_col.row(v);
-                            idx.iter().zip(val.iter())
-                        } {
-                            // SAFETY: thread owns rows [lo,hi) of N
-                            // exclusively; M is read-only this phase.
-                            let (mu, nv, _, _) = unsafe { shared.rows_mut(*u, v) };
-                            let e = *r - dot(mu, nv);
-                            let ee = hyper.eta * e;
-                            let shrink = 1.0 - hyper.eta * hyper.lam;
-                            for k in 0..nv.len() {
-                                nv[k] = nv[k] * shrink + ee * mu[k];
-                            }
-                            n += 1;
+                    *slot = CsrRowRange::new(by_col, lo, hi).sweep(|v, u, r| {
+                        // SAFETY: thread owns rows [lo,hi) of N
+                        // exclusively; M is read-only this phase.
+                        let (mu, nv, _, _) = unsafe { shared.rows_mut(u, v) };
+                        let e = r - dot(mu, nv);
+                        let ee = hyper.eta * e;
+                        let shrink = 1.0 - hyper.eta * hyper.lam;
+                        for k in 0..nv.len() {
+                            nv[k] = nv[k] * shrink + ee * mu[k];
                         }
-                    }
-                    *slot = n;
+                    });
                 });
             }
         });

@@ -3,13 +3,16 @@
 //! `s` has thread `t` process block `(t, (t+s) mod c)` — a diagonal, so all
 //! blocks in a stratum are interchangeable (no shared rows/columns). A
 //! barrier separates strata: the synchronization cost Table IV exposes.
+//! Blocks are swept through their block-local CSR lanes like every other
+//! block engine.
 
 use super::{EpochRunner, TrainConfig};
 use crate::data::Dataset;
 use crate::model::{Factors, SharedFactors};
 use crate::optim::{sgd_update, Hyper};
-use crate::partition::{build_grid, BlockGrid, PartitionKind};
+use crate::partition::{bounds_for, BlockGrid, PartitionKind};
 use crate::rng::Rng;
+use crate::sparse::SweepLanes;
 use std::sync::Barrier;
 
 /// Bulk-synchronous stratified SGD engine.
@@ -23,24 +26,12 @@ pub struct DsgdEngine {
 impl DsgdEngine {
     /// Build from a dataset (uniform `c × c` grid, as in the original).
     pub fn new(data: &Dataset, factors: Factors, cfg: &TrainConfig, _rng: &mut Rng) -> Self {
-        // DSGD grids are c×c (threads strata of threads blocks).
+        // DSGD grids are c×c (c strata of c blocks); `build_grid` would make
+        // the (c+1)² scheduler layout, so bucket directly.
         let threads = cfg.threads.max(1);
-        let grid = {
-            // build_grid makes (threads+1)² for schedulers; DSGD wants c×c.
-            let nb = threads;
-            let row_bounds = crate::partition::bounds_for(
-                PartitionKind::Uniform,
-                &data.train.row_counts(),
-                nb,
-            );
-            let col_bounds = crate::partition::bounds_for(
-                PartitionKind::Uniform,
-                &data.train.col_counts(),
-                nb,
-            );
-            BlockGrid::new(&data.train, row_bounds, col_bounds)
-        };
-        let _ = build_grid; // silence unused import lint path
+        let row_bounds = bounds_for(PartitionKind::Uniform, &data.train.row_counts(), threads);
+        let col_bounds = bounds_for(PartitionKind::Uniform, &data.train.col_counts(), threads);
+        let grid = BlockGrid::new(&data.train, row_bounds, col_bounds);
         DsgdEngine {
             shared: SharedFactors::new(factors),
             grid,
@@ -65,13 +56,12 @@ impl EpochRunner for DsgdEngine {
                     let mut processed = 0u64;
                     for s in 0..c {
                         let j = (t + s) % c;
-                        for e in &grid.block(t, j).entries {
+                        processed += grid.block(t, j).sweep(|u, v, r| {
                             // SAFETY: stratum blocks are a diagonal — rows
                             // and columns are disjoint across threads.
-                            let (mu, nv, _, _) = unsafe { shared.rows_mut(e.u, e.v) };
-                            sgd_update(mu, nv, e.r, &hyper);
-                            processed += 1;
-                        }
+                            let (mu, nv, _, _) = unsafe { shared.rows_mut(u, v) };
+                            sgd_update(mu, nv, r, &hyper);
+                        });
                         // Bulk synchronization between strata.
                         barrier.wait();
                     }

@@ -8,7 +8,7 @@
 //! | [`EngineKind::Dsgd`]     | bulk-sync strata         | SGD | uniform `c×c` |
 //! | [`EngineKind::Asgd`]     | alternating M/N phases   | SGD | row/col shards |
 //! | [`EngineKind::Fpsgd`]    | block sched (global lock)| SGD | uniform `(c+1)²` |
-//! | [`EngineKind::A2psgd`]   | block sched (lock-free)  | NAG | balanced `(c+1)²` |
+//! | [`EngineKind::A2psgd`]   | block sched (work-aware lock-free) | NAG | balanced `(c+1)²` |
 //! | [`EngineKind::XlaMinibatch`] | leader-driven batches via PJRT | NAG (mini-batch) | — |
 //!
 //! Every engine runs epoch-at-a-time: workers are scoped threads that stop

@@ -1,17 +1,19 @@
 //! Serial SGD reference engine — the correctness baseline every parallel
 //! engine is sanity-checked against (same update rule, no concurrency).
+//! Instances live in flat [`EntryLanes`] (SoA), the same layout family the
+//! parallel engines sweep.
 
 use super::{EpochRunner, TrainConfig};
 use crate::data::Dataset;
 use crate::model::{Factors, SharedFactors};
 use crate::optim::{Hyper, Rule};
 use crate::rng::Rng;
-use crate::sparse::Entry;
+use crate::sparse::EntryLanes;
 
 /// Single-threaded engine (SGD, or NAG when γ > 0).
 pub struct SeqEngine {
     shared: SharedFactors,
-    entries: Vec<Entry>,
+    lanes: EntryLanes,
     hyper: Hyper,
     rule: Rule,
     rng: Rng,
@@ -22,7 +24,7 @@ impl SeqEngine {
     pub fn new(data: &Dataset, factors: Factors, cfg: &TrainConfig, rng: &mut Rng) -> Self {
         SeqEngine {
             shared: SharedFactors::new(factors),
-            entries: data.train.entries().to_vec(),
+            lanes: EntryLanes::from_coo(&data.train),
             hyper: cfg.hyper,
             rule: cfg.rule,
             rng: rng.fork(1),
@@ -32,12 +34,13 @@ impl SeqEngine {
 
 impl EpochRunner for SeqEngine {
     fn run_epoch(&mut self, _epoch: u32, quota: u64) -> u64 {
-        self.rng.shuffle(&mut self.entries);
+        self.lanes.shuffle(&mut self.rng);
         let mut done = 0u64;
-        for e in &self.entries {
+        for k in 0..self.lanes.len() {
+            let (u, v, r) = self.lanes.get(k);
             // SAFETY: single thread — trivially exclusive.
-            let (mu, nv, phiu, psiv) = unsafe { self.shared.rows_mut(e.u, e.v) };
-            self.rule.apply(mu, nv, phiu, psiv, e.r, &self.hyper);
+            let (mu, nv, phiu, psiv) = unsafe { self.shared.rows_mut(u, v) };
+            self.rule.apply(mu, nv, phiu, psiv, r, &self.hyper);
             done += 1;
             if done >= quota {
                 break;

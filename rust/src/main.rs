@@ -24,6 +24,7 @@ fn run(argv: &[String]) -> Result<()> {
         "compare" => cmd_compare(&args),
         "serve" => cmd_serve(&args),
         "stream" => cmd_stream(&args),
+        "bench" => cmd_bench(&args),
         "gen-data" => cmd_gen_data(&args),
         "print-config" => cmd_print_config(&args),
         "tune" => cmd_tune(&args),
@@ -433,6 +434,267 @@ fn cmd_stream(args: &Args) -> Result<()> {
         trainer.map().save(&map_path)?;
         eprintln!("checkpoint → {path} (+ {})", map_path.display());
     }
+    Ok(())
+}
+
+/// Hot-path benchmark pipeline: update-kernel micro benches, the block
+/// layout A/B (pre-PR COO global-id sweep vs block-local CSR lanes), a
+/// per-engine epoch macro over the paper set, and scheduler fairness — all
+/// emitted as machine-readable `BENCH_hotpath.json` so later PRs have a
+/// perf trajectory to regress against.
+fn cmd_bench(args: &Args) -> Result<()> {
+    use a2psgd::bench_harness::{bench, bench_batched, fmt_secs, json, Table};
+    use a2psgd::config::BenchConfig;
+    use a2psgd::model::SharedFactors;
+    use a2psgd::optim::{nag_update, sgd_update, Rule};
+    use a2psgd::partition::build_grid;
+    use a2psgd::scheduler::{BlockScheduler, LockFreeScheduler};
+    use a2psgd::sparse::{stats, Entry, SweepLanes};
+
+    // Defaults ← [bench] config file ← flags.
+    let mut bcfg = BenchConfig::default();
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        bcfg = bcfg.apply_toml(&text)?;
+    }
+    if let Some(x) = args.get("dataset") {
+        bcfg.dataset = x.to_string();
+    }
+    if let Some(x) = args.get_parsed::<usize>("iters")? {
+        anyhow::ensure!(x >= 1, "--iters must be >= 1");
+        bcfg.iters = x;
+    }
+    if let Some(x) = args.get_parsed::<usize>("warmup")? {
+        bcfg.warmup = x;
+    }
+    if let Some(x) = args.get_parsed::<usize>("threads")? {
+        bcfg.threads = x.max(1);
+    }
+    if let Some(x) = args.get_parsed::<usize>("d")? {
+        bcfg.d = x.max(1);
+    }
+    if let Some(x) = args.get_parsed::<u64>("seed")? {
+        bcfg.seed = x;
+    }
+    let out = args.get("out").map(PathBuf::from).unwrap_or_else(|| {
+        // Repo root when running from a checkout (the normal case). The
+        // compile-time path doesn't exist for an installed/relocated
+        // binary — fall back to the current directory there.
+        let repo_root = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/.."));
+        if repo_root.is_dir() {
+            repo_root.join("BENCH_hotpath.json")
+        } else {
+            PathBuf::from("BENCH_hotpath.json")
+        }
+    });
+
+    let data = coordinator::resolve_dataset(&bcfg.dataset, bcfg.seed)?;
+    eprintln!(
+        "bench: dataset {} — threads={} d={} iters={} warmup={}",
+        data.describe(),
+        bcfg.threads,
+        bcfg.d,
+        bcfg.iters,
+        bcfg.warmup
+    );
+
+    // 1. Update-kernel micro benches (per-instance cost at D).
+    let d = bcfg.d;
+    let mut rng = Rng::new(bcfg.seed);
+    let mut mu: Vec<f32> = (0..d).map(|_| rng.f32_range(0.1, 0.5)).collect();
+    let mut nv: Vec<f32> = (0..d).map(|_| rng.f32_range(0.1, 0.5)).collect();
+    let mut phi = vec![0f32; d];
+    let mut psi = vec![0f32; d];
+    let hs = Hyper::sgd(1e-4, 0.03);
+    let hn = Hyper::nag(1e-4, 0.03, 0.9);
+    let kernel_batch = 100_000u64;
+    let name_sgd = format!("sgd_update d={d}");
+    let sgd_micro = bench_batched(&name_sgd, bcfg.warmup, bcfg.iters, kernel_batch, || {
+        for i in 0..kernel_batch {
+            sgd_update(&mut mu, &mut nv, 3.0 + (i % 3) as f32, &hs);
+        }
+    });
+    let name_nag = format!("nag_update d={d}");
+    let nag_micro = bench_batched(&name_nag, bcfg.warmup, bcfg.iters, kernel_batch, || {
+        for i in 0..kernel_batch {
+            nag_update(&mut mu, &mut nv, &mut phi, &mut psi, 3.0 + (i % 3) as f32, &hn);
+        }
+    });
+    println!("{}", sgd_micro.summary());
+    println!("{}", nag_micro.summary());
+
+    // 2. Layout A/B: identical single-threaded NAG epoch over the balanced
+    // grid, once through the pre-PR layout (per-block AoS entry lists with
+    // global ids) and once through the block-local CSR lanes.
+    let grid = build_grid(&data.train, PartitionKind::Balanced, bcfg.threads);
+    let nnz = grid.total_nnz();
+    let legacy: Vec<Vec<Entry>> = {
+        let nb = grid.nblocks();
+        let mut blocks: Vec<Vec<Entry>> = Vec::with_capacity(nb * nb);
+        for i in 0..nb {
+            for j in 0..nb {
+                blocks.push(grid.block(i, j).iter_global().collect());
+            }
+        }
+        // The pre-PR engine shuffled each block's entry list once at
+        // construction; reproduce that order so the baseline is faithful
+        // (not block-CSR order in AoS clothing).
+        let mut lrng = rng.fork(7);
+        for blk in &mut blocks {
+            lrng.shuffle(blk);
+        }
+        blocks
+    };
+    let scale = Factors::default_scale(data.train.mean_rating(), d);
+    let factors = Factors::init(data.nrows(), data.ncols(), d, scale, &mut rng);
+    let shared = SharedFactors::new(factors);
+    let rule = Rule::Nag;
+    let coo_sweep = bench("epoch sweep (COO global-id, pre-PR)", bcfg.warmup, bcfg.iters, || {
+        for blk in &legacy {
+            for e in blk {
+                // SAFETY: single thread — trivially exclusive.
+                let (mu, nv, phiu, psiv) = unsafe { shared.rows_mut(e.u, e.v) };
+                rule.apply(mu, nv, phiu, psiv, e.r, &hn);
+            }
+        }
+    });
+    let csr_sweep = bench("epoch sweep (block-CSR lanes)", bcfg.warmup, bcfg.iters, || {
+        let nb = grid.nblocks();
+        for i in 0..nb {
+            for j in 0..nb {
+                grid.block(i, j).sweep(|u, v, r| {
+                    // SAFETY: single thread — trivially exclusive.
+                    let (mu, nv, phiu, psiv) = unsafe { shared.rows_mut(u, v) };
+                    rule.apply(mu, nv, phiu, psiv, r, &hn);
+                });
+            }
+        }
+    });
+    println!("{}", coo_sweep.summary());
+    println!("{}", csr_sweep.summary());
+    let layout_speedup = coo_sweep.median() / csr_sweep.median();
+    println!(
+        "layout: block-CSR sweep {:.2}x vs pre-PR COO ({} vs {} per epoch)",
+        layout_speedup,
+        fmt_secs(csr_sweep.median()),
+        fmt_secs(coo_sweep.median())
+    );
+
+    // 3. Epoch macro over the paper engines (the real multi-threaded path:
+    // partition + scheduler + rule per engine preset).
+    let mut engine_rows = Vec::new();
+    let mut t = Table::new(&["engine", "s/epoch", "Minst/s", "best RMSE"]);
+    for engine in EngineKind::paper_set() {
+        let cfg = TrainConfig::preset(engine, &data)
+            .threads(bcfg.threads)
+            .dim(bcfg.d)
+            .seed(bcfg.seed)
+            .epochs(bcfg.iters as u32)
+            .no_early_stop();
+        let report = train(&data, &cfg)?;
+        let epochs = report.history.points().len().max(1);
+        let s_per_epoch = report.train_seconds / epochs as f64;
+        let ips = report.updates_per_sec();
+        t.row(&[
+            engine.to_string(),
+            fmt_secs(s_per_epoch),
+            format!("{:.2}", ips / 1e6),
+            format!("{:.4}", report.best_rmse()),
+        ]);
+        engine_rows.push(
+            json::Obj::new()
+                .str("engine", &engine.to_string())
+                .num("s_per_epoch", s_per_epoch)
+                .num("instances_per_sec", ips)
+                .num("best_rmse", report.best_rmse())
+                .int("epochs", epochs as u64)
+                .build(),
+        );
+    }
+    println!("{}", t.render());
+
+    // 4. Scheduler fairness on the skewed (uniform-partition) grid: uniform
+    // random vs work-aware selection, single worker so selection bias is
+    // the only difference.
+    let skew_grid = build_grid(&data.train, PartitionKind::Uniform, bcfg.threads);
+    let work = skew_grid.block_nnz();
+    let nb = skew_grid.nblocks();
+    let total: u64 = work.iter().sum();
+    let run_fairness = |sched: &dyn BlockScheduler| -> f64 {
+        let mut rng = Rng::new(bcfg.seed ^ 0xFA1);
+        let mut done = 0u64;
+        while done < 3 * total {
+            let Some(c) = sched.acquire(&mut rng) else { continue };
+            let n = work[c.i * nb + c.j];
+            sched.release_processed(c, n);
+            done += n;
+        }
+        let counts: Vec<u64> = sched
+            .instance_counts()
+            .iter()
+            .zip(&work)
+            .filter(|(_, &w)| w > 0)
+            .map(|(&p, _)| p)
+            .collect();
+        stats::count_stats(&counts).imbalance
+    };
+    let imb_uniform = run_fairness(&LockFreeScheduler::new(nb));
+    let imb_aware = run_fairness(&LockFreeScheduler::work_aware(nb, &work));
+    println!(
+        "scheduler fairness (processed-instance imbalance, skewed grid): \
+         uniform {imb_uniform:.3} vs work-aware {imb_aware:.3}"
+    );
+
+    // 5. Emit the JSON artifact.
+    let payload = json::Obj::new()
+        .str("bench", "hotpath")
+        .int("version", 1)
+        .str("dataset", &data.name)
+        .int("threads", bcfg.threads as u64)
+        .int("d", bcfg.d as u64)
+        .int("iters", bcfg.iters as u64)
+        .int("seed", bcfg.seed)
+        .int("train_nnz", nnz)
+        .raw(
+            "micro_kernels",
+            &json::array([
+                json::Obj::new()
+                    .str("name", "sgd_update")
+                    .num("ns_per_op", sgd_micro.median() * 1e9)
+                    .build(),
+                json::Obj::new()
+                    .str("name", "nag_update")
+                    .num("ns_per_op", nag_micro.median() * 1e9)
+                    .build(),
+            ]),
+        )
+        .raw(
+            "layout",
+            &json::Obj::new()
+                .num("coo_sweep_s", coo_sweep.median())
+                .num("block_csr_sweep_s", csr_sweep.median())
+                .num("speedup", layout_speedup)
+                .num("coo_instances_per_sec", nnz as f64 / coo_sweep.median())
+                .num("csr_instances_per_sec", nnz as f64 / csr_sweep.median())
+                .build(),
+        )
+        .raw("engines", &json::array(engine_rows))
+        .raw(
+            "scheduler",
+            &json::Obj::new()
+                .num("uniform_imbalance", imb_uniform)
+                .num("work_aware_imbalance", imb_aware)
+                .build(),
+        )
+        .build();
+    if let Some(dir) = out.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(&out, payload + "\n")?;
+    eprintln!("wrote {}", out.display());
     Ok(())
 }
 

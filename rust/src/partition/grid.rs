@@ -1,15 +1,9 @@
-//! The `(c+1)×(c+1)` block grid: per-block instance lists ready for the
-//! scheduler/engines, plus block-level balance statistics.
+//! The `(c+1)×(c+1)` block grid: per-block instances in block-local CSR
+//! layout ([`BlockCsr`]) ready for the scheduler/engines, plus block-level
+//! balance statistics.
 
 use super::Bounds;
-use crate::sparse::{stats, CooMatrix, Entry};
-
-/// One sub-block R_ij with its instances.
-#[derive(Clone, Debug, Default)]
-pub struct Block {
-    /// Instances (global node ids).
-    pub entries: Vec<Entry>,
-}
+use crate::sparse::{stats, BlockCsr, CooMatrix};
 
 /// The full block grid.
 #[derive(Clone, Debug)]
@@ -17,21 +11,45 @@ pub struct BlockGrid {
     nblocks: usize,
     row_bounds: Bounds,
     col_bounds: Bounds,
-    blocks: Vec<Block>, // row-major nblocks × nblocks
+    blocks: Vec<BlockCsr>, // row-major nblocks × nblocks
 }
 
 impl BlockGrid {
-    /// Bucket a training matrix into the grid given per-axis bounds.
+    /// Bucket a training matrix into the grid given per-axis bounds. Each
+    /// block is counting-sorted into block-local CSR order (two passes over
+    /// Ω, exact-capacity lanes, no intermediate per-block entry lists).
     pub fn new(train: &CooMatrix, row_bounds: Bounds, col_bounds: Bounds) -> Self {
         assert_eq!(row_bounds.len(), col_bounds.len(), "grid must be square");
         let nblocks = row_bounds.len() - 1;
         let row_of = build_assignment(&row_bounds, train.nrows());
         let col_of = build_assignment(&col_bounds, train.ncols());
-        let mut blocks = vec![Block::default(); nblocks * nblocks];
+        // Pass 1: per-block instance counts → exact lane capacities.
+        let mut counts = vec![0usize; nblocks * nblocks];
         for e in train.entries() {
             let bi = row_of[e.u as usize] as usize;
             let bj = col_of[e.v as usize] as usize;
-            blocks[bi * nblocks + bj].entries.push(*e);
+            counts[bi * nblocks + bj] += 1;
+        }
+        let mut blocks = Vec::with_capacity(nblocks * nblocks);
+        for i in 0..nblocks {
+            for j in 0..nblocks {
+                blocks.push(BlockCsr::with_capacity(
+                    row_bounds[i],
+                    row_bounds[i + 1] - row_bounds[i],
+                    col_bounds[j],
+                    col_bounds[j + 1] - col_bounds[j],
+                    counts[i * nblocks + j],
+                ));
+            }
+        }
+        // Pass 2: scatter, then finalize every block into CSR order.
+        for e in train.entries() {
+            let bi = row_of[e.u as usize] as usize;
+            let bj = col_of[e.v as usize] as usize;
+            blocks[bi * nblocks + bj].push(e.u, e.v, e.r);
+        }
+        for b in &mut blocks {
+            b.finalize();
         }
         BlockGrid { nblocks, row_bounds, col_bounds, blocks }
     }
@@ -42,7 +60,7 @@ impl BlockGrid {
     }
 
     /// Block (i, j).
-    pub fn block(&self, i: usize, j: usize) -> &Block {
+    pub fn block(&self, i: usize, j: usize) -> &BlockCsr {
         &self.blocks[i * self.nblocks + j]
     }
 
@@ -56,9 +74,10 @@ impl BlockGrid {
         &self.col_bounds
     }
 
-    /// ⟨R_ij⟩ for every block, row-major.
+    /// ⟨R_ij⟩ for every block, row-major — this is the work vector a
+    /// work-aware scheduler is seeded with.
     pub fn block_nnz(&self) -> Vec<u64> {
-        self.blocks.iter().map(|b| b.entries.len() as u64).collect()
+        self.blocks.iter().map(|b| b.len() as u64).collect()
     }
 
     /// Total instances across blocks.
@@ -76,18 +95,10 @@ impl BlockGrid {
         (0..self.nblocks)
             .map(|i| {
                 (0..self.nblocks)
-                    .map(|j| self.block(i, j).entries.len() as u64)
+                    .map(|j| self.block(i, j).len() as u64)
                     .sum()
             })
             .collect()
-    }
-
-    /// Shuffle the instance order inside every block (decorrelates the
-    /// within-block visit order for SGD; deterministic in `rng`).
-    pub fn shuffle_entries(&mut self, rng: &mut crate::rng::Rng) {
-        for b in &mut self.blocks {
-            rng.shuffle(&mut b.entries);
-        }
     }
 
     /// ⟨R_{:,j}⟩ column-block marginals.
@@ -95,7 +106,7 @@ impl BlockGrid {
         (0..self.nblocks)
             .map(|j| {
                 (0..self.nblocks)
-                    .map(|i| self.block(i, j).entries.len() as u64)
+                    .map(|i| self.block(i, j).len() as u64)
                     .sum()
             })
             .collect()
@@ -103,7 +114,17 @@ impl BlockGrid {
 }
 
 /// Expand bounds to a per-node block-id lookup table.
+///
+/// Bounds that fail to cover `[0, n)` would silently assign the uncovered
+/// tail to block 0 and corrupt the grid (entries landing in a block whose
+/// row/column range excludes them — breaking the scheduler's exclusive-rows
+/// safety contract), so coverage is asserted.
 fn build_assignment(bounds: &Bounds, n: u32) -> Vec<u32> {
+    let last = *bounds.last().expect("bounds must be non-empty");
+    assert_eq!(
+        last, n,
+        "bounds must cover all {n} nodes exactly (last bound = {last})"
+    );
     let mut out = vec![0u32; n as usize];
     for (b, w) in bounds.windows(2).enumerate() {
         for k in w[0]..w[1] {
@@ -118,6 +139,7 @@ mod tests {
     use super::*;
     use crate::partition::{balanced_bounds, uniform_bounds};
     use crate::rng::Rng;
+    use crate::sparse::SweepLanes;
 
     fn toy() -> CooMatrix {
         let mut m = CooMatrix::new(8, 8);
@@ -147,10 +169,34 @@ mod tests {
             for j in 0..4 {
                 let (rlo, rhi) = (g.row_bounds()[i], g.row_bounds()[i + 1]);
                 let (clo, chi) = (g.col_bounds()[j], g.col_bounds()[j + 1]);
-                for e in &g.block(i, j).entries {
+                for e in g.block(i, j).iter_global() {
                     assert!(e.u >= rlo && e.u < rhi);
                     assert!(e.v >= clo && e.v < chi);
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn blocks_are_in_local_csr_order() {
+        let m = toy();
+        let g = BlockGrid::new(&m, uniform_bounds(8, 3), uniform_bounds(8, 3));
+        for i in 0..3 {
+            for j in 0..3 {
+                let b = g.block(i, j);
+                let (lu, _, _) = b.lanes();
+                assert!(
+                    lu.windows(2).all(|w| w[0] <= w[1]),
+                    "block ({i},{j}) not row-major: {lu:?}"
+                );
+                let ip = b.indptr();
+                assert_eq!(ip.len() as u32, b.row_span() + 1);
+                assert_eq!(*ip.last().unwrap() as usize, b.len());
+                // Sweep yields global ids matching the bases.
+                b.sweep(|u, v, _| {
+                    assert!(u >= b.row_base() && u < b.row_base() + b.row_span());
+                    assert!(v >= b.col_base() && v < b.col_base() + b.col_span());
+                });
             }
         }
     }
@@ -161,6 +207,16 @@ mod tests {
         let g = BlockGrid::new(&m, uniform_bounds(8, 3), uniform_bounds(8, 3));
         assert_eq!(g.row_block_nnz().iter().sum::<u64>(), g.total_nnz());
         assert_eq!(g.col_block_nnz().iter().sum::<u64>(), g.total_nnz());
+    }
+
+    /// Regression: bounds that don't cover every node used to dump the
+    /// uncovered tail into block 0, silently corrupting the grid.
+    #[test]
+    #[should_panic(expected = "bounds must cover")]
+    fn grid_rejects_short_bounds() {
+        let m = toy();
+        // Last bound 6 < nrows 8 — nodes 6 and 7 would land in block 0.
+        BlockGrid::new(&m, vec![0, 3, 6], vec![0, 4, 8]);
     }
 
     #[test]

@@ -6,12 +6,14 @@
 //!   (`|U_i| = |U|/(c+1)`), which ignores instance counts and suffers the
 //!   "curse of the last reducer" on skewed data;
 //! - [`balanced_bounds`] — the paper's Algorithm 1: greedy scan that cuts a
-//!   new block whenever the accumulated instance count reaches
-//!   `|Ω|/(c+1)`, equalizing `⟨R_{i,:}⟩` and `⟨R_{:,j}⟩`.
+//!   new block whenever the accumulated instance count reaches the adaptive
+//!   quota `remaining instances / remaining blocks`, equalizing
+//!   `⟨R_{i,:}⟩` and `⟨R_{:,j}⟩` without dumping the rounding remainder on
+//!   the last block.
 
 mod grid;
 
-pub use grid::{Block, BlockGrid};
+pub use grid::BlockGrid;
 
 use crate::sparse::CooMatrix;
 
@@ -47,22 +49,34 @@ pub fn uniform_bounds(n_nodes: u32, nblocks: usize) -> Bounds {
     bounds
 }
 
-/// Algorithm 1 (one axis): greedy scan cutting at ≥ |Ω|/(c+1) accumulated
-/// instances. `counts[k]` is the number of instances at node `k`.
+/// Algorithm 1 (one axis): greedy scan that closes a block once it reaches
+/// its *adaptive* quota. `counts[k]` is the number of instances at node `k`.
+///
+/// A fixed quota `⌊|Ω|/(c+1)⌋` is biased: floor-rounding plus the overshoot
+/// discarded at every cut systematically dumps the remainder on (or starves)
+/// the last block — exactly the "curse of the last reducer" Algorithm 1 is
+/// supposed to kill. Instead each cut uses the fair share of what is *left*:
+/// `(acc + remaining) / blocks_left`, so rounding error is re-spread over
+/// the open blocks instead of accumulating at the tail.
 pub fn balanced_bounds(counts: &[u32], nblocks: usize) -> Bounds {
     assert!(nblocks >= 1);
     let n = counts.len() as u32;
     let total: u64 = counts.iter().map(|&c| c as u64).sum();
-    let per_block = (total / nblocks as u64).max(1);
     let mut bounds = vec![0u32];
-    let mut acc: u64 = 0;
+    let mut acc: u64 = 0; // instances in the currently open block
+    let mut remaining = total; // instances at nodes not yet scanned
     for (k, &c) in counts.iter().enumerate() {
         acc += c as u64;
-        // Cut when the quota is met, but never create more than nblocks
-        // blocks: keep the last cut for the final node.
-        if acc >= per_block && bounds.len() < nblocks {
-            bounds.push(k as u32 + 1);
-            acc = 0;
+        remaining -= c as u64;
+        // Never create more than nblocks blocks: keep the last cut for the
+        // final node.
+        if bounds.len() < nblocks {
+            let blocks_left = (nblocks - (bounds.len() - 1)) as u64;
+            let quota = ((acc + remaining) / blocks_left).max(1);
+            if acc >= quota {
+                bounds.push(k as u32 + 1);
+                acc = 0;
+            }
         }
     }
     // Close the final block and pad degenerate cuts if the tail was empty.
@@ -146,6 +160,67 @@ mod tests {
             "balanced {:.3} !< uniform {:.3}",
             bstats.imbalance,
             ustats.imbalance
+        );
+    }
+
+    /// Regression for the fixed-quota remainder bias: `⌊|Ω|/(c+1)⌋` makes
+    /// the last block the systematic extreme — it swallows the rounding
+    /// remainder on flat (Zipf-tail) counts and is starved by accumulated
+    /// overshoot on head-heavy Zipf counts. The adaptive quota must do
+    /// strictly better on both shapes.
+    #[test]
+    fn balanced_bounds_no_last_block_bias() {
+        // The old algorithm, kept verbatim as the regression reference.
+        fn fixed_quota_bounds(counts: &[u32], nblocks: usize) -> Bounds {
+            let n = counts.len() as u32;
+            let total: u64 = counts.iter().map(|&c| c as u64).sum();
+            let per_block = (total / nblocks as u64).max(1);
+            let mut bounds = vec![0u32];
+            let mut acc: u64 = 0;
+            for (k, &c) in counts.iter().enumerate() {
+                acc += c as u64;
+                if acc >= per_block && bounds.len() < nblocks {
+                    bounds.push(k as u32 + 1);
+                    acc = 0;
+                }
+            }
+            while bounds.len() < nblocks + 1 {
+                bounds.push(n);
+            }
+            bounds
+        }
+
+        // Shape 1 — the flat Zipf tail (every node count 1), where floor
+        // rounding dumps the whole remainder on the last block.
+        let flat = vec![1u32; 100];
+        let nb = 8;
+        let old = bucket_counts(&flat, &fixed_quota_bounds(&flat, nb));
+        assert_eq!(*old.last().unwrap(), 16, "old quota dumps the remainder");
+        assert_eq!(old.last(), old.iter().max(), "old: last block is the max");
+        let new = bucket_counts(&flat, &balanced_bounds(&flat, nb));
+        let (nmin, nmax) = (*new.iter().min().unwrap(), *new.iter().max().unwrap());
+        assert!(nmax - nmin <= 1, "adaptive quota must spread the remainder: {new:?}");
+        assert!(
+            !(new.last() == new.iter().max() && new.iter().filter(|&&b| b == nmax).count() == 1),
+            "last block must not be the systematic maximum: {new:?}"
+        );
+
+        // Shape 2 — head-heavy Zipf, where the old overshoot starves the
+        // last block instead.
+        let zipf: Vec<u32> = (1..=200u32).map(|k| 2000 / k).collect();
+        let nb = 9;
+        let old = bucket_counts(&zipf, &fixed_quota_bounds(&zipf, nb));
+        let new = bucket_counts(&zipf, &balanced_bounds(&zipf, nb));
+        assert_eq!(*old.last().unwrap(), 0, "old quota starves the last block");
+        let mean = new.iter().sum::<u64>() as f64 / nb as f64;
+        assert!(
+            *new.last().unwrap() as f64 > 0.5 * mean,
+            "last block must get a fair share: {new:?}"
+        );
+        let spread = |b: &[u64]| b.iter().max().unwrap() - b.iter().min().unwrap();
+        assert!(
+            spread(&new) < spread(&old),
+            "adaptive spread {new:?} must beat fixed-quota spread {old:?}"
         );
     }
 

@@ -12,7 +12,8 @@ use std::sync::Mutex;
 struct State {
     busy_row: Vec<bool>,
     busy_col: Vec<bool>,
-    updates: Vec<u64>, // row-major nb × nb
+    updates: Vec<u64>,   // completed passes, row-major nb × nb
+    processed: Vec<u64>, // processed instances, row-major nb × nb
 }
 
 /// Global-lock free-block scheduler (the FPSGD baseline).
@@ -32,6 +33,7 @@ impl LockedScheduler {
                 busy_row: vec![false; nb],
                 busy_col: vec![false; nb],
                 updates: vec![0; nb * nb],
+                processed: vec![0; nb * nb],
             }),
             contention: AtomicU64::new(0),
         }
@@ -83,11 +85,16 @@ impl BlockScheduler for LockedScheduler {
     }
 
     fn release(&self, claim: Claim) {
+        self.release_processed(claim, 1);
+    }
+
+    fn release_processed(&self, claim: Claim, instances: u64) {
         let mut st = self.state.lock().unwrap();
         debug_assert!(st.busy_row[claim.i] && st.busy_col[claim.j]);
         st.busy_row[claim.i] = false;
         st.busy_col[claim.j] = false;
         st.updates[claim.i * self.nb + claim.j] += 1;
+        st.processed[claim.i * self.nb + claim.j] += instances;
     }
 
     fn nblocks(&self) -> usize {
@@ -96,6 +103,10 @@ impl BlockScheduler for LockedScheduler {
 
     fn update_counts(&self) -> Vec<u64> {
         self.state.lock().unwrap().updates.clone()
+    }
+
+    fn instance_counts(&self) -> Vec<u64> {
+        self.state.lock().unwrap().processed.clone()
     }
 
     fn contention_events(&self) -> u64 {

@@ -9,9 +9,12 @@
 //! - [`LockFreeScheduler`] (A²PSGD, Fig. 2): each row/column block carries
 //!   its own atomic; a request CASes the pair `(rowBlockId, colBlockId)`
 //!   directly, so requests from different threads proceed concurrently.
+//!   [`LockFreeScheduler::work_aware`] additionally biases selection by
+//!   remaining per-block work (seeded with the grid's instance counts).
 //!
-//! Both track per-block update counts — the "curse of the last reducer"
-//! metric the load-balancing study reports.
+//! Both track per-block passes *and* processed instances — the latter is the
+//! honest "curse of the last reducer" metric the load-balancing study
+//! reports (a pass over a near-empty block is not a pass over the hot one).
 
 mod locked;
 mod lockfree;
@@ -39,19 +42,43 @@ pub trait BlockScheduler: Send + Sync {
     /// Release a claim after processing it.
     fn release(&self, claim: Claim);
 
+    /// Release a claim, recording how many instances the pass processed.
+    /// Work-aware schedulers use the count to steer selection and for
+    /// instance-level fairness stats; the default discards it.
+    fn release_processed(&self, claim: Claim, instances: u64) {
+        let _ = instances;
+        self.release(claim);
+    }
+
     /// Grid side length (c+1).
     fn nblocks(&self) -> usize;
 
     /// Per-block completed update-pass counts (row-major), for fairness stats.
     fn update_counts(&self) -> Vec<u64>;
 
-    /// Total acquire attempts that failed due to contention (diagnostic).
+    /// Per-block processed-*instance* counts (row-major). Passes are a poor
+    /// fairness measure on skewed grids (a pass over a near-empty block is
+    /// not a pass over the hot block); schedulers that track instances
+    /// override this. Defaults to [`BlockScheduler::update_counts`].
+    fn instance_counts(&self) -> Vec<u64> {
+        self.update_counts()
+    }
+
+    /// Acquire probes that failed while a free block existed (lost a race).
     fn contention_events(&self) -> u64;
+
+    /// Acquire probes made while no free block existed (grid saturated —
+    /// back-pressure, not contention). Defaults to 0 for schedulers that
+    /// don't distinguish.
+    fn starved_probes(&self) -> u64 {
+        0
+    }
 }
 
-/// Fairness summary: spread of per-block update counts.
+/// Fairness summary: spread of per-block processed-*instance* counts (the
+/// "curse of the last reducer" is about work, not visits).
 pub fn fairness(sched: &dyn BlockScheduler) -> crate::sparse::stats::CountStats {
-    crate::sparse::stats::count_stats(&sched.update_counts())
+    crate::sparse::stats::count_stats(&sched.instance_counts())
 }
 
 #[cfg(test)]
@@ -168,6 +195,80 @@ mod tests {
                 }
             });
             assert_eq!(violations.load(Ordering::SeqCst), 0, "{name}: exclusion violated");
+        }
+    }
+
+    /// Satellite: on a Zipf grid, work-aware selection must yield strictly
+    /// lower processed-instance imbalance than uniform random selection.
+    #[test]
+    fn work_aware_beats_uniform_fairness_on_zipf_grid() {
+        use crate::partition::{uniform_bounds, BlockGrid};
+        use crate::sparse::CooMatrix;
+
+        // Skewed matrix (popularity ∝ 1/k^2.5) under a *uniform* partition:
+        // per-block instance counts follow the node skew.
+        let mut rng = crate::rng::Rng::new(21);
+        let mut m = CooMatrix::new(240, 240);
+        let mut seen = HashSet::new();
+        while m.nnz() < 5000 {
+            let u = (240.0 * rng.f64().powf(2.5)) as u32;
+            let v = (240.0 * rng.f64().powf(2.5)) as u32;
+            if seen.insert((u, v)) {
+                m.push(u.min(239), v.min(239), 1.0).ok();
+            }
+        }
+        let nb = 6;
+        let grid = BlockGrid::new(&m, uniform_bounds(240, nb), uniform_bounds(240, nb));
+        let work = grid.block_nnz();
+        let total: u64 = work.iter().sum();
+        assert!(total > 0);
+
+        // Drive each scheduler through ~5 epochs' worth of instances with a
+        // single worker (claims released immediately, so selection bias is
+        // the only difference).
+        let run = |sched: &dyn BlockScheduler, seed: u64| -> Vec<u64> {
+            let mut rng = crate::rng::Rng::new(seed);
+            let mut done = 0u64;
+            while done < 5 * total {
+                let Some(c) = sched.acquire(&mut rng) else { continue };
+                let n = work[c.i * nb + c.j];
+                sched.release_processed(c, n);
+                done += n;
+            }
+            sched
+                .instance_counts()
+                .iter()
+                .zip(&work)
+                .filter(|(_, &w)| w > 0)
+                .map(|(&p, _)| p)
+                .collect()
+        };
+        let uniform = LockFreeScheduler::new(nb);
+        let aware = LockFreeScheduler::work_aware(nb, &work);
+        let iu = crate::sparse::stats::count_stats(&run(&uniform, 31)).imbalance;
+        let ia = crate::sparse::stats::count_stats(&run(&aware, 31)).imbalance;
+        assert!(
+            ia < iu,
+            "work-aware imbalance {ia:.3} must beat uniform {iu:.3} on a Zipf grid"
+        );
+    }
+
+    #[test]
+    fn release_processed_default_falls_back_to_release() {
+        for (name, s) in schedulers(3) {
+            let mut rng = Rng::new(5);
+            let c = s.acquire(&mut rng).unwrap_or_else(|| panic!("{name}: no claim"));
+            s.release_processed(c, 17);
+            assert_eq!(
+                s.update_counts().iter().sum::<u64>(),
+                1,
+                "{name}: release_processed must complete the pass"
+            );
+            assert_eq!(
+                s.instance_counts().iter().sum::<u64>(),
+                17,
+                "{name}: instances recorded"
+            );
         }
     }
 

@@ -1,0 +1,576 @@
+//! Block-local CSR storage — the hot-path memory layout for block-scheduled
+//! training (Hogwild!'s observation, applied to blocks: for sparse SGD the
+//! memory layout dominates wall-clock).
+//!
+//! The pre-CSR layout kept each sub-block as `Vec<Entry>` — an AoS list of
+//! `(u, v, r)` triplets with *global* node ids. A block sweep then walked
+//! 12-byte structs and recomputed `u * d` / `v * d` factor offsets from
+//! 32-bit global ids every instance. [`BlockCsr`] replaces that with three
+//! contiguous lanes `(local_u, local_v, r)` in block-local coordinates plus
+//! per-block base offsets:
+//!
+//! - the sweep walks three sequential arrays (SoA — no struct padding, unit
+//!   stride for the prefetcher);
+//! - instances are counting-sorted into block-local CSR order (row-major
+//!   within the block, `indptr` over local rows), so consecutive instances
+//!   share the same factor row `m_u` far more often — that row stays in L1
+//!   across its whole run;
+//! - local ids are dense small integers; the base offsets are added back
+//!   once per instance to index the factor matrices, with no per-entry
+//!   global-id indirection table.
+//!
+//! [`SweepLanes`] is the shared iteration contract every engine's inner
+//! loop goes through: [`BlockCsr`] for the block-scheduled engines (FPSGD,
+//! A²PSGD, DSGD), [`EntryLanes`]/[`LaneSlice`] for the flat-order engines
+//! (Seq, Hogwild!), and [`CsrRowRange`] for ASGD's row/column phase sweeps.
+
+use super::coo::{CooMatrix, Entry};
+use super::csr::CsrMatrix;
+use crate::rng::Rng;
+
+/// Shared iteration contract for every engine's instance sweep.
+///
+/// Implementors yield instances as `(global_u, global_v, r)` so the caller
+/// can index the factor matrices directly; how the instances are stored
+/// (block-local lanes, flat lanes, CSR rows) is the implementor's business.
+pub trait SweepLanes {
+    /// Number of instances this sweep will visit.
+    fn n_instances(&self) -> usize;
+
+    /// Visit every instance as `(global_u, global_v, r)` in storage order.
+    /// Returns the number of instances visited.
+    fn sweep<F: FnMut(u32, u32, f32)>(&self, f: F) -> u64;
+}
+
+/// One sub-block R_ij in block-local CSR layout (see module docs).
+#[derive(Clone, Debug, Default)]
+pub struct BlockCsr {
+    row_base: u32,
+    col_base: u32,
+    row_span: u32,
+    col_span: u32,
+    /// CSR index over local rows (`row_span + 1` entries); emptied by
+    /// [`BlockCsr::shuffle`], which abandons CSR order.
+    indptr: Vec<u32>,
+    local_u: Vec<u32>,
+    local_v: Vec<u32>,
+    r: Vec<f32>,
+}
+
+impl BlockCsr {
+    /// Empty block covering global rows `row_base..row_base + row_span` and
+    /// columns `col_base..col_base + col_span`, with lane capacity `cap`.
+    pub fn with_capacity(
+        row_base: u32,
+        row_span: u32,
+        col_base: u32,
+        col_span: u32,
+        cap: usize,
+    ) -> Self {
+        BlockCsr {
+            row_base,
+            col_base,
+            row_span,
+            col_span,
+            indptr: Vec::new(),
+            local_u: Vec::with_capacity(cap),
+            local_v: Vec::with_capacity(cap),
+            r: Vec::with_capacity(cap),
+        }
+    }
+
+    /// Append one instance by *global* ids (converted to block-local).
+    /// Call [`BlockCsr::finalize`] once all instances are in.
+    pub fn push(&mut self, u: u32, v: u32, r: f32) {
+        debug_assert!(
+            u >= self.row_base && u - self.row_base < self.row_span,
+            "row {u} outside block rows {}..{}",
+            self.row_base,
+            self.row_base + self.row_span
+        );
+        debug_assert!(
+            v >= self.col_base && v - self.col_base < self.col_span,
+            "col {v} outside block cols {}..{}",
+            self.col_base,
+            self.col_base + self.col_span
+        );
+        self.local_u.push(u - self.row_base);
+        self.local_v.push(v - self.col_base);
+        self.r.push(r);
+    }
+
+    /// Counting-sort the lanes into block-local CSR order (row-major over
+    /// local rows; within-row order preserves insertion order) and build
+    /// `indptr`. Idempotent on an already-finalized block.
+    pub fn finalize(&mut self) {
+        let span = self.row_span as usize;
+        let mut indptr = vec![0u32; span + 1];
+        for &lu in &self.local_u {
+            indptr[lu as usize + 1] += 1;
+        }
+        for k in 1..indptr.len() {
+            indptr[k] += indptr[k - 1];
+        }
+        let mut cursor = indptr.clone();
+        let n = self.local_u.len();
+        let mut lu2 = vec![0u32; n];
+        let mut lv2 = vec![0u32; n];
+        let mut r2 = vec![0f32; n];
+        for k in 0..n {
+            let row = self.local_u[k] as usize;
+            let p = cursor[row] as usize;
+            lu2[p] = self.local_u[k];
+            lv2[p] = self.local_v[k];
+            r2[p] = self.r[k];
+            cursor[row] += 1;
+        }
+        self.local_u = lu2;
+        self.local_v = lv2;
+        self.r = r2;
+        self.indptr = indptr;
+    }
+
+    /// Number of instances in the block.
+    pub fn len(&self) -> usize {
+        self.local_u.len()
+    }
+
+    /// True when the block holds no instances.
+    pub fn is_empty(&self) -> bool {
+        self.local_u.is_empty()
+    }
+
+    /// First global row covered by the block.
+    pub fn row_base(&self) -> u32 {
+        self.row_base
+    }
+
+    /// First global column covered by the block.
+    pub fn col_base(&self) -> u32 {
+        self.col_base
+    }
+
+    /// Number of local rows the block spans.
+    pub fn row_span(&self) -> u32 {
+        self.row_span
+    }
+
+    /// Number of local columns the block spans.
+    pub fn col_span(&self) -> u32 {
+        self.col_span
+    }
+
+    /// The raw `(local_u, local_v, r)` lanes.
+    pub fn lanes(&self) -> (&[u32], &[u32], &[f32]) {
+        (&self.local_u, &self.local_v, &self.r)
+    }
+
+    /// CSR index over local rows. Empty when the block was never finalized
+    /// or its order was abandoned by [`BlockCsr::shuffle`].
+    pub fn indptr(&self) -> &[u32] {
+        &self.indptr
+    }
+
+    /// Instances in one local row (requires CSR order).
+    pub fn row_nnz(&self, local_row: u32) -> usize {
+        assert!(
+            !self.indptr.is_empty(),
+            "row_nnz requires CSR order (finalize, and don't shuffle)"
+        );
+        (self.indptr[local_row as usize + 1] - self.indptr[local_row as usize]) as usize
+    }
+
+    /// Instance `k` as `(global_u, global_v, r)`.
+    #[inline]
+    pub fn get(&self, k: usize) -> (u32, u32, f32) {
+        (
+            self.row_base + self.local_u[k],
+            self.col_base + self.local_v[k],
+            self.r[k],
+        )
+    }
+
+    /// Iterate instances as global-id [`Entry`] values (tests/diagnostics;
+    /// the hot path uses [`SweepLanes::sweep`]).
+    pub fn iter_global(&self) -> impl Iterator<Item = Entry> + '_ {
+        (0..self.len()).map(move |k| {
+            let (u, v, r) = self.get(k);
+            Entry { u, v, r }
+        })
+    }
+
+    /// Synchronized Fisher–Yates shuffle of the three lanes (decorrelates
+    /// the within-block visit order for SGD experiments). Abandons CSR
+    /// order: `indptr` is cleared.
+    pub fn shuffle(&mut self, rng: &mut Rng) {
+        for i in (1..self.local_u.len()).rev() {
+            let j = rng.gen_index(i + 1);
+            self.local_u.swap(i, j);
+            self.local_v.swap(i, j);
+            self.r.swap(i, j);
+        }
+        self.indptr.clear();
+    }
+}
+
+impl SweepLanes for BlockCsr {
+    #[inline]
+    fn n_instances(&self) -> usize {
+        self.len()
+    }
+
+    #[inline]
+    fn sweep<F: FnMut(u32, u32, f32)>(&self, mut f: F) -> u64 {
+        let (rb, cb) = (self.row_base, self.col_base);
+        for ((&lu, &lv), &r) in self.local_u.iter().zip(&self.local_v).zip(&self.r) {
+            f(rb + lu, cb + lv, r);
+        }
+        self.local_u.len() as u64
+    }
+}
+
+/// Flat structure-of-arrays instance storage (global ids) for the engines
+/// that sweep the whole training set rather than blocks (Seq, Hogwild!).
+#[derive(Clone, Debug, Default)]
+pub struct EntryLanes {
+    u: Vec<u32>,
+    v: Vec<u32>,
+    r: Vec<f32>,
+}
+
+impl EntryLanes {
+    /// Build from an entry slice.
+    pub fn from_entries(entries: &[Entry]) -> Self {
+        let mut lanes = EntryLanes {
+            u: Vec::with_capacity(entries.len()),
+            v: Vec::with_capacity(entries.len()),
+            r: Vec::with_capacity(entries.len()),
+        };
+        for e in entries {
+            lanes.u.push(e.u);
+            lanes.v.push(e.v);
+            lanes.r.push(e.r);
+        }
+        lanes
+    }
+
+    /// Build from a COO matrix.
+    pub fn from_coo(coo: &CooMatrix) -> Self {
+        Self::from_entries(coo.entries())
+    }
+
+    /// Number of instances.
+    pub fn len(&self) -> usize {
+        self.u.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.u.is_empty()
+    }
+
+    /// Instance `k` as `(u, v, r)`.
+    #[inline]
+    pub fn get(&self, k: usize) -> (u32, u32, f32) {
+        (self.u[k], self.v[k], self.r[k])
+    }
+
+    /// Synchronized Fisher–Yates shuffle of the three lanes.
+    pub fn shuffle(&mut self, rng: &mut Rng) {
+        for i in (1..self.u.len()).rev() {
+            let j = rng.gen_index(i + 1);
+            self.u.swap(i, j);
+            self.v.swap(i, j);
+            self.r.swap(i, j);
+        }
+    }
+
+    /// Borrowed view of instances `lo..hi` (a worker's contiguous shard).
+    pub fn slice(&self, lo: usize, hi: usize) -> LaneSlice<'_> {
+        LaneSlice {
+            u: &self.u[lo..hi],
+            v: &self.v[lo..hi],
+            r: &self.r[lo..hi],
+        }
+    }
+}
+
+impl SweepLanes for EntryLanes {
+    fn n_instances(&self) -> usize {
+        self.len()
+    }
+
+    fn sweep<F: FnMut(u32, u32, f32)>(&self, f: F) -> u64 {
+        self.slice(0, self.len()).sweep(f)
+    }
+}
+
+/// Borrowed lane view over a contiguous instance range of [`EntryLanes`].
+#[derive(Clone, Copy, Debug)]
+pub struct LaneSlice<'a> {
+    u: &'a [u32],
+    v: &'a [u32],
+    r: &'a [f32],
+}
+
+impl LaneSlice<'_> {
+    /// Number of instances in the view.
+    pub fn len(&self) -> usize {
+        self.u.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.u.is_empty()
+    }
+
+    /// Instance `k` as `(u, v, r)`.
+    #[inline]
+    pub fn get(&self, k: usize) -> (u32, u32, f32) {
+        (self.u[k], self.v[k], self.r[k])
+    }
+}
+
+impl SweepLanes for LaneSlice<'_> {
+    #[inline]
+    fn n_instances(&self) -> usize {
+        self.len()
+    }
+
+    #[inline]
+    fn sweep<F: FnMut(u32, u32, f32)>(&self, mut f: F) -> u64 {
+        for ((&u, &v), &r) in self.u.iter().zip(self.v).zip(self.r) {
+            f(u, v, r);
+        }
+        self.u.len() as u64
+    }
+}
+
+/// Sweep over a contiguous row range of a [`CsrMatrix`] — ASGD's phase
+/// shards behind the same iteration contract as the block engines. For the
+/// transposed (N-phase) matrix the yielded `u` is the transpose's row, i.e.
+/// the original column id.
+#[derive(Clone, Copy, Debug)]
+pub struct CsrRowRange<'a> {
+    csr: &'a CsrMatrix,
+    lo: u32,
+    hi: u32,
+}
+
+impl<'a> CsrRowRange<'a> {
+    /// View of rows `lo..hi`.
+    pub fn new(csr: &'a CsrMatrix, lo: u32, hi: u32) -> Self {
+        assert!(lo <= hi && hi <= csr.nrows(), "row range {lo}..{hi} out of bounds");
+        CsrRowRange { csr, lo, hi }
+    }
+}
+
+impl SweepLanes for CsrRowRange<'_> {
+    fn n_instances(&self) -> usize {
+        (self.lo..self.hi).map(|u| self.csr.row_nnz(u)).sum()
+    }
+
+    #[inline]
+    fn sweep<F: FnMut(u32, u32, f32)>(&self, mut f: F) -> u64 {
+        let mut n = 0u64;
+        for u in self.lo..self.hi {
+            let (idx, val) = self.csr.row(u);
+            for (&v, &r) in idx.iter().zip(val.iter()) {
+                f(u, v, r);
+            }
+            n += idx.len() as u64;
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block() -> BlockCsr {
+        // Block covering rows 10..14, cols 20..25.
+        let mut b = BlockCsr::with_capacity(10, 4, 20, 5, 6);
+        b.push(12, 21, 1.0);
+        b.push(10, 24, 2.0);
+        b.push(12, 20, 3.0);
+        b.push(13, 22, 4.0);
+        b.push(10, 20, 5.0);
+        b.finalize();
+        b
+    }
+
+    #[test]
+    fn finalize_orders_rows_and_builds_indptr() {
+        let b = block();
+        assert_eq!(b.len(), 5);
+        assert_eq!(b.indptr(), &[0, 2, 2, 4, 5]);
+        assert_eq!(b.row_nnz(0), 2);
+        assert_eq!(b.row_nnz(1), 0);
+        assert_eq!(b.row_nnz(2), 2);
+        // CSR order: local rows ascending, insertion order within a row.
+        let (lu, _, _) = b.lanes();
+        let mut sorted = lu.to_vec();
+        sorted.sort_unstable();
+        assert_eq!(lu, &sorted[..]);
+    }
+
+    #[test]
+    fn get_restores_global_ids() {
+        let b = block();
+        let entries: Vec<Entry> = b.iter_global().collect();
+        // Row-major: (10,24),(10,20) kept insertion order within row 0.
+        assert_eq!(entries[0].u, 10);
+        assert_eq!(entries[0].v, 24);
+        assert_eq!(entries[0].r, 2.0);
+        assert_eq!(entries[1], Entry { u: 10, v: 20, r: 5.0 });
+        assert_eq!(entries[4], Entry { u: 13, v: 22, r: 4.0 });
+        for e in &entries {
+            assert!((10..14).contains(&e.u));
+            assert!((20..25).contains(&e.v));
+        }
+    }
+
+    #[test]
+    fn sweep_visits_all_with_global_ids() {
+        let b = block();
+        let mut seen = Vec::new();
+        let n = b.sweep(|u, v, r| seen.push(Entry { u, v, r }));
+        assert_eq!(n, 5);
+        assert_eq!(seen, b.iter_global().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shuffle_is_permutation_and_drops_indptr() {
+        let mut b = block();
+        let before: std::collections::BTreeSet<(u32, u32)> =
+            b.iter_global().map(|e| (e.u, e.v)).collect();
+        let mut rng = Rng::new(3);
+        b.shuffle(&mut rng);
+        let after: std::collections::BTreeSet<(u32, u32)> =
+            b.iter_global().map(|e| (e.u, e.v)).collect();
+        assert_eq!(before, after, "shuffle must preserve the instance set");
+        assert!(b.indptr().is_empty(), "shuffle abandons CSR order");
+        // Lanes stayed synchronized: every (u,v) still carries its rating.
+        for e in b.iter_global() {
+            let expect = match (e.u, e.v) {
+                (12, 21) => 1.0,
+                (10, 24) => 2.0,
+                (12, 20) => 3.0,
+                (13, 22) => 4.0,
+                (10, 20) => 5.0,
+                other => panic!("unexpected instance {other:?}"),
+            };
+            assert_eq!(e.r, expect);
+        }
+    }
+
+    #[test]
+    fn empty_block_finalizes() {
+        let mut b = BlockCsr::with_capacity(0, 3, 0, 3, 0);
+        b.finalize();
+        assert!(b.is_empty());
+        assert_eq!(b.indptr(), &[0, 0, 0, 0]);
+        assert_eq!(b.sweep(|_, _, _| panic!("no instances")), 0);
+    }
+
+    #[test]
+    fn entry_lanes_roundtrip_and_slice() {
+        let entries = vec![
+            Entry { u: 0, v: 1, r: 1.0 },
+            Entry { u: 2, v: 3, r: 2.0 },
+            Entry { u: 4, v: 5, r: 3.0 },
+        ];
+        let lanes = EntryLanes::from_entries(&entries);
+        assert_eq!(lanes.len(), 3);
+        assert_eq!(lanes.get(1), (2, 3, 2.0));
+        let s = lanes.slice(1, 3);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(0), (2, 3, 2.0));
+        let mut seen = Vec::new();
+        assert_eq!(s.sweep(|u, v, r| seen.push((u, v, r))), 2);
+        assert_eq!(seen, vec![(2, 3, 2.0), (4, 5, 3.0)]);
+    }
+
+    #[test]
+    fn entry_lanes_shuffle_keeps_triples_together() {
+        let entries: Vec<Entry> = (0..50)
+            .map(|k| Entry { u: k, v: k + 100, r: k as f32 })
+            .collect();
+        let mut lanes = EntryLanes::from_entries(&entries);
+        let mut rng = Rng::new(9);
+        lanes.shuffle(&mut rng);
+        let mut us = Vec::new();
+        for k in 0..lanes.len() {
+            let (u, v, r) = lanes.get(k);
+            assert_eq!(v, u + 100);
+            assert_eq!(r, u as f32);
+            us.push(u);
+        }
+        us.sort_unstable();
+        assert_eq!(us, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn csr_row_range_matches_rows() {
+        let mut coo = CooMatrix::new(4, 4);
+        coo.push(0, 1, 1.0).unwrap();
+        coo.push(1, 2, 2.0).unwrap();
+        coo.push(1, 0, 3.0).unwrap();
+        coo.push(3, 3, 4.0).unwrap();
+        let csr = CsrMatrix::from_coo(&coo);
+        let range = CsrRowRange::new(&csr, 1, 3);
+        assert_eq!(range.n_instances(), 2);
+        let mut seen = Vec::new();
+        assert_eq!(range.sweep(|u, v, r| seen.push((u, v, r))), 2);
+        assert_eq!(seen, vec![(1, 2, 2.0), (1, 0, 3.0)]);
+    }
+
+    #[test]
+    fn property_block_csr_preserves_instances() {
+        crate::proptest_lite::check(
+            "finalize preserves the multiset of instances",
+            64,
+            |g| {
+                let span = g.usize_in(1, 20) as u32;
+                let n = g.usize_in(0, 80);
+                let base = g.usize_in(0, 1000) as u32;
+                let mut rng = Rng::new(g.u64(1 << 50));
+                let entries: Vec<(u32, u32, f32)> = (0..n)
+                    .map(|_| {
+                        (
+                            base + rng.gen_index(span as usize) as u32,
+                            base + rng.gen_index(span as usize) as u32,
+                            rng.f32(),
+                        )
+                    })
+                    .collect();
+                (base, span, entries)
+            },
+            |(base, span, entries)| {
+                let mut b = BlockCsr::with_capacity(*base, *span, *base, *span, entries.len());
+                for &(u, v, r) in entries {
+                    b.push(u, v, r);
+                }
+                b.finalize();
+                if b.len() != entries.len() {
+                    return false;
+                }
+                let mut got: Vec<(u32, u32, u32)> = b
+                    .iter_global()
+                    .map(|e| (e.u, e.v, e.r.to_bits()))
+                    .collect();
+                let mut want: Vec<(u32, u32, u32)> =
+                    entries.iter().map(|&(u, v, r)| (u, v, r.to_bits())).collect();
+                got.sort_unstable();
+                want.sort_unstable();
+                // Also: indptr must be monotone and end at len.
+                let ip = b.indptr();
+                got == want
+                    && ip.len() == *span as usize + 1
+                    && ip.windows(2).all(|w| w[1] >= w[0])
+                    && ip[*span as usize] as usize == entries.len()
+            },
+        );
+    }
+}

@@ -3,12 +3,16 @@
 //! The paper's object is an HDS matrix `R^{|U|×|V|}` with known-instance set
 //! Ω (Definition 1). [`CooMatrix`] is the ingestion/blocking format;
 //! [`CsrMatrix`] serves row-major sweeps (ASGD's M-phase) and its transpose
-//! the column sweeps; [`stats`] computes the marginal-count skew measures the
-//! load-balancing study reports.
+//! the column sweeps; [`BlockCsr`] is the hot-path block-local CSR layout
+//! every training engine's inner loop walks (behind the [`SweepLanes`]
+//! iteration contract); [`stats`] computes the marginal-count skew measures
+//! the load-balancing study reports.
 
+mod block_csr;
 mod coo;
 mod csr;
 pub mod stats;
 
+pub use block_csr::{BlockCsr, CsrRowRange, EntryLanes, LaneSlice, SweepLanes};
 pub use coo::{CooMatrix, Entry};
 pub use csr::CsrMatrix;

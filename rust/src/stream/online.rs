@@ -30,7 +30,7 @@ use crate::metrics::RollingHoldout;
 use crate::model::{Factors, SharedFactors, SnapshotStore};
 use crate::partition::{build_grid, PartitionKind};
 use crate::scheduler::{BlockScheduler, LockFreeScheduler};
-use crate::sparse::{CooMatrix, Entry};
+use crate::sparse::{CooMatrix, Entry, SweepLanes};
 use crate::Result;
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -233,13 +233,14 @@ impl OnlineTrainer {
             self.stats.updates += self.window.len() as u64 * passes as u64;
             return;
         }
-        // Parallel path: balanced grid over the window + lock-free scheduler,
-        // the same machinery as the offline A²PSGD engine.
+        // Parallel path: balanced grid over the window + work-aware
+        // lock-free scheduler, the same machinery as the offline A²PSGD
+        // engine (block-local CSR lanes, deficit-biased block selection).
         let entries: Vec<Entry> = self.window.iter().copied().collect();
         let coo = CooMatrix::from_entries(self.factors.nrows(), self.factors.ncols(), entries)
             .expect("window entries are dense-id validated");
         let grid = build_grid(&coo, PartitionKind::Balanced, self.cfg.threads);
-        let sched = LockFreeScheduler::new(grid.nblocks());
+        let sched = LockFreeScheduler::work_aware(grid.nblocks(), &grid.block_nnz());
         let quota = coo.nnz() as u64 * passes as u64;
         let hyper = self.cfg.hyper;
         let rule = self.cfg.rule;
@@ -264,17 +265,16 @@ impl OnlineTrainer {
                         std::thread::yield_now();
                         continue;
                     };
-                    let block = grid.block(claim.i, claim.j);
-                    for e in &block.entries {
+                    let n = grid.block(claim.i, claim.j).sweep(|u, v, r| {
                         // SAFETY: the scheduler guarantees no concurrent
                         // claim shares this row or column block, so the rows
                         // touched here are exclusively ours (the same
                         // contract as the offline block engines).
-                        let (mu, nv, phiu, psiv) = unsafe { shared.rows_mut(e.u, e.v) };
-                        rule.apply(mu, nv, phiu, psiv, e.r, &hyper);
-                    }
-                    done.fetch_add(block.entries.len() as u64, Ordering::Relaxed);
-                    sched.release(claim);
+                        let (mu, nv, phiu, psiv) = unsafe { shared.rows_mut(u, v) };
+                        rule.apply(mu, nv, phiu, psiv, r, &hyper);
+                    });
+                    done.fetch_add(n, Ordering::Relaxed);
+                    sched.release_processed(claim, n);
                 });
             }
         });
