@@ -3,7 +3,8 @@
 //! ```text
 //! a2psgd train   [--engine E] [--dataset D] [--threads N] [--epochs N]
 //!                [--seed S] [--d D] [--eta F] [--lam F] [--gamma F]
-//!                [--partition uniform|balanced] [--config FILE]
+//!                [--partition uniform|balanced] [--kernel auto|scalar]
+//!                [--config FILE]
 //!                [--data-file PATH] [--out DIR] [--no-early-stop]
 //! a2psgd compare [--dataset D] [--threads N] [--seeds N] [--epochs N] [--out DIR]
 //! a2psgd serve   [--dataset D] [--requests N] [--artifacts DIR]
@@ -109,9 +110,11 @@ USAGE:
   a2psgd stream       warm-train, then stream live events: fold-in, online
                       NAG updates, and zero-downtime factor hot-swap
   a2psgd bench        hot-path benchmark pipeline: update-kernel micro,
-                      layout A/B (COO vs block-CSR sweep), per-engine epoch
-                      macro, and scheduler fairness — emits BENCH_hotpath.json
-                      at the repo root (override with --out)
+                      scalar-vs-SIMD kernel A/B across ranks, layout A/B
+                      (COO vs block-CSR sweep), per-engine epoch macro,
+                      scheduler fairness, and the pool-vs-scope epoch
+                      overhead micro — emits BENCH_hotpath.json at the repo
+                      root (override with --out)
   a2psgd gen-data     write a synthetic dataset to a ratings file
   a2psgd print-config print the paper's hyperparameter tables (I/II)
   a2psgd help         this text
@@ -126,6 +129,9 @@ COMMON FLAGS:
   --d D            feature dimension (default: 16)
   --eta/--lam/--gamma F   hyperparameter overrides
   --partition uniform|balanced
+  --kernel auto|scalar    update-kernel dispatch (auto = best SIMD path for
+                          this CPU; scalar = reference path; the env var
+                          A2PSGD_KERNEL=scalar forces scalar everywhere)
   --config FILE    TOML run config (flags override it)
   --out DIR        results directory (default: results/)
   --artifacts DIR  AOT artifacts (default: artifacts/)

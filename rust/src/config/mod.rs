@@ -24,6 +24,7 @@ use std::path::Path;
 /// epochs = 60
 /// seed = 24333
 /// d = 16
+/// kernel = "auto"          # or "scalar" to force the reference path
 ///
 /// [hyper]
 /// eta = 1e-4
@@ -48,6 +49,8 @@ pub struct RunConfig {
     pub hyper: Option<Hyper>,
     /// Partition strategy override.
     pub partition: Option<PartitionKind>,
+    /// Update-kernel selection override (`auto` | `scalar`).
+    pub kernel: Option<crate::optim::kernel::KernelChoice>,
 }
 
 impl Default for RunConfig {
@@ -61,6 +64,7 @@ impl Default for RunConfig {
             d: 16,
             hyper: None,
             partition: None,
+            kernel: None,
         }
     }
 }
@@ -94,6 +98,11 @@ impl RunConfig {
                 "balanced" => PartitionKind::Balanced,
                 other => anyhow::bail!("unknown partition {other:?}"),
             });
+        }
+        if let Some(v) = doc.get("run", "kernel") {
+            cfg.kernel = Some(crate::optim::kernel::KernelChoice::parse(
+                v.as_str().context("run.kernel must be a string")?,
+            )?);
         }
         let eta = doc.get("hyper", "eta");
         let lam = doc.get("hyper", "lam");
@@ -213,6 +222,7 @@ impl BenchConfig {
 /// holdout_every = 8
 /// holdout_cap = 1024
 /// threads = 8
+/// kernel = "auto"          # or "scalar" to force the reference path
 ///
 /// [hyper]
 /// eta = 2e-3
@@ -260,6 +270,11 @@ pub fn stream_config_from_toml(text: &str, mut cfg: StreamConfig) -> Result<Stre
     if let Some(x) = int("seed")? {
         cfg.seed = x as u64;
     }
+    if let Some(v) = doc.get("stream", "kernel") {
+        cfg.kernel = crate::optim::kernel::KernelChoice::parse(
+            v.as_str().context("stream.kernel must be a string")?,
+        )?;
+    }
     for (key, slot) in [
         ("eta", &mut cfg.hyper.eta),
         ("lam", &mut cfg.hyper.lam),
@@ -295,6 +310,7 @@ epochs = 25
 seed = 42
 d = 32
 partition = "balanced"
+kernel = "scalar"
 
 [hyper]
 eta = 6e-4
@@ -308,6 +324,7 @@ lam = 3e-2
         assert_eq!(c.seed, 42);
         assert_eq!(c.d, 32);
         assert_eq!(c.partition, Some(PartitionKind::Balanced));
+        assert_eq!(c.kernel, Some(crate::optim::kernel::KernelChoice::Scalar));
         let h = c.hyper.unwrap();
         assert!((h.eta - 6e-4).abs() < 1e-9);
         assert!((h.lam - 3e-2).abs() < 1e-9);
@@ -329,6 +346,13 @@ lam = 3e-2
     #[test]
     fn bad_partition_rejected() {
         assert!(RunConfig::from_toml("[run]\npartition = \"diagonal\"\n").is_err());
+    }
+
+    #[test]
+    fn bad_kernel_rejected() {
+        assert!(RunConfig::from_toml("[run]\nkernel = \"gpu\"\n").is_err());
+        let c = RunConfig::from_toml("[run]\nkernel = \"auto\"\n").unwrap();
+        assert_eq!(c.kernel, Some(crate::optim::kernel::KernelChoice::Auto));
     }
 
     #[test]
@@ -370,12 +394,14 @@ holdout_every = 10
 holdout_cap = 256
 threads = 2
 seed = 99
+kernel = "scalar"
 
 [hyper]
 eta = 1e-3
 gamma = 0.8
 "#;
         let cfg = stream_config_from_toml(text, base).unwrap();
+        assert_eq!(cfg.kernel, crate::optim::kernel::KernelChoice::Scalar);
         assert_eq!(cfg.batch, 128);
         assert_eq!(cfg.window, 2048);
         assert_eq!(cfg.passes, 3);

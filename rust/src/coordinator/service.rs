@@ -24,10 +24,15 @@
 //! - **XLA/PJRT** — the AOT `predict`/`recommend` artifacts (requires the
 //!   `xla` cargo feature and `make artifacts`).
 //! - **Native** — a portable fallback computing the same dot products on
-//!   the batcher thread; used when artifacts are unavailable
-//!   ([`BackendMode::Auto`]) or by explicit request
+//!   the batcher thread through the dispatched SIMD kernel entry point
+//!   (`model::dot` → `optim::kernel::dot`); used when artifacts are
+//!   unavailable ([`BackendMode::Auto`]) or by explicit request
 //!   ([`BackendMode::NativeOnly`]), which keeps the full online-serving
 //!   pipeline runnable on any build.
+//!
+//! Bulk clients should prefer [`ServiceClient::predict_many`]: it enqueues
+//! the whole pair list as a single request, so the batcher fills backend
+//! batches in one drain instead of N channel round-trips.
 
 use crate::model::snapshot::{FactorSnapshot, SnapshotStore};
 use crate::model::Factors;
@@ -46,6 +51,10 @@ const NATIVE_BATCH: usize = 64;
 enum Request {
     /// Point prediction r̂(u, v).
     Predict { u: u32, v: u32, reply: mpsc::Sender<f32> },
+    /// Many point predictions submitted as one enqueued unit: the batcher
+    /// fills backend batches directly from the pair list (one channel
+    /// round-trip total) instead of draining N individual requests.
+    PredictBatch { pairs: Vec<(u32, u32)>, reply: mpsc::Sender<Vec<f32>> },
     /// Top-k recommendation for user u.
     TopK { u: u32, k: usize, reply: mpsc::Sender<Vec<(u32, f32)>> },
 }
@@ -196,15 +205,19 @@ impl ServiceClient {
         rx.recv().context("service dropped the request")
     }
 
-    /// Submit many and wait for all (amortizes channel overhead in tests).
+    /// Submit many predictions as **one** enqueued batch and wait for all.
+    ///
+    /// The batcher slices the pair list straight into full backend batches
+    /// — one channel round-trip and `⌈len/B⌉` backend calls total, instead
+    /// of N per-request sends, N reply channels, and whatever partial
+    /// batches the drain window happened to cut.
     pub fn predict_many(&self, pairs: &[(u32, u32)]) -> Result<Vec<f32>> {
-        let mut rxs = Vec::with_capacity(pairs.len());
-        for &(u, v) in pairs {
-            rxs.push(self.predict_async(u, v)?);
-        }
-        rxs.into_iter()
-            .map(|rx| rx.recv().context("service dropped a request"))
-            .collect()
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::PredictBatch { pairs: pairs.to_vec(), reply })
+            .ok()
+            .context("service stopped")?;
+        rx.recv().context("service dropped the request")
     }
 }
 
@@ -319,6 +332,81 @@ struct TopKCache {
     n_padded: Vec<f32>,
 }
 
+/// The single implementation of batch execution shared by the live drain
+/// path and pre-assembled [`Request::PredictBatch`] submissions: long-lived
+/// `B × D` gather scratch plus the answer policy (zero unknown lanes,
+/// midpoint for unknown nodes, clamp to the rating scale, stats
+/// accounting). Keeping it in one place means `predict` and `predict_many`
+/// can never drift apart semantically.
+struct BatchExec {
+    d: usize,
+    clamp: (f32, f32),
+    midpoint: f32,
+    mu: Vec<f32>,
+    nv: Vec<f32>,
+    known: Vec<bool>,
+}
+
+impl BatchExec {
+    fn new(b: usize, d: usize, clamp: (f32, f32)) -> Self {
+        BatchExec {
+            d,
+            clamp,
+            midpoint: 0.5 * (clamp.0 + clamp.1),
+            mu: vec![0f32; b * d],
+            nv: vec![0f32; b * d],
+            known: vec![false; b],
+        }
+    }
+
+    /// Gather rows for ≤B `pairs` under `f`, run one backend call, and
+    /// return the final answer per pair (in order).
+    fn execute(
+        &mut self,
+        backend: &Backend,
+        f: &Factors,
+        pairs: &[(u32, u32)],
+        stats: &mut ServiceStats,
+    ) -> Result<Vec<f32>> {
+        let d = self.d;
+        debug_assert!(pairs.len() * d <= self.mu.len());
+        debug_assert_eq!(f.d(), d, "hot swap must preserve the feature dimension");
+        // Known lanes are fully overwritten by the gather; only unknown
+        // lanes and the unused tail need zeroing (their prediction is
+        // replaced by the midpoint / discarded).
+        self.known.fill(false);
+        for (lane, &(u, v)) in pairs.iter().enumerate() {
+            let lo = lane * d;
+            if u < f.nrows() && v < f.ncols() {
+                self.mu[lo..lo + d].copy_from_slice(f.m_row(u));
+                self.nv[lo..lo + d].copy_from_slice(f.n_row(v));
+                self.known[lane] = true;
+            } else {
+                self.mu[lo..lo + d].iter_mut().for_each(|x| *x = 0.0);
+                self.nv[lo..lo + d].iter_mut().for_each(|x| *x = 0.0);
+            }
+        }
+        for lane in pairs.len()..self.known.len() {
+            let lo = lane * d;
+            self.mu[lo..lo + d].iter_mut().for_each(|x| *x = 0.0);
+            self.nv[lo..lo + d].iter_mut().for_each(|x| *x = 0.0);
+        }
+        let preds = backend.predict_batch(&self.mu, &self.nv, d)?;
+        stats.batches += 1;
+        stats.occupancy_sum += pairs.len() as u64;
+        stats.served += pairs.len() as u64;
+        Ok((0..pairs.len())
+            .map(|lane| {
+                if self.known[lane] {
+                    preds[lane].clamp(self.clamp.0, self.clamp.1)
+                } else {
+                    self.midpoint
+                }
+            })
+            .collect())
+    }
+}
+
 fn run_batcher(
     backend: Backend,
     store: Arc<SnapshotStore>,
@@ -328,12 +416,9 @@ fn run_batcher(
     rx: mpsc::Receiver<Request>,
 ) -> ServiceStats {
     let b = backend.batch_size();
-    let midpoint = 0.5 * (clamp.0 + clamp.1);
     let d = store.load().factors().d();
     let mut stats = ServiceStats::default();
-    let mut mu = vec![0f32; b * d];
-    let mut nv = vec![0f32; b * d];
-    let mut known = vec![false; b];
+    let mut exec = BatchExec::new(b, d, clamp);
     let mut topk_cache: Option<TopKCache> = None;
     let mut batch: Vec<(u32, u32, mpsc::Sender<f32>)> = Vec::with_capacity(b);
     loop {
@@ -347,6 +432,22 @@ fn run_batcher(
         loop {
             match pending.take() {
                 Some(Request::Predict { u, v, reply }) => batch.push((u, v, reply)),
+                Some(Request::PredictBatch { pairs, reply }) => {
+                    // A pre-assembled batch needs no drain window: execute
+                    // full backend batches straight from the pair list,
+                    // under one pinned snapshot.
+                    let snap = store.load();
+                    observe_version(&mut stats, &snap);
+                    let f = snap.factors();
+                    let mut out = Vec::with_capacity(pairs.len());
+                    for chunk in pairs.chunks(b) {
+                        match exec.execute(&backend, f, chunk, &mut stats) {
+                            Ok(answers) => out.extend(answers),
+                            Err(_) => return stats, // backend failure: stop service
+                        }
+                    }
+                    let _ = reply.send(out);
+                }
                 Some(Request::TopK { u, k, reply }) => {
                     // Top-k is a whole-catalog scan — served immediately,
                     // not batched with point predictions. Exclusions are
@@ -387,39 +488,13 @@ fn run_batcher(
         // Pin the current snapshot for this whole batch (hot-swap boundary).
         let snap = store.load();
         observe_version(&mut stats, &snap);
-        let f = snap.factors();
-        debug_assert_eq!(f.d(), d, "hot swap must preserve the feature dimension");
-        // Gather rows; unknown nodes and unused lanes keep zeros (their
-        // prediction is replaced by the midpoint / discarded).
-        known.fill(false);
-        for (lane, (u, v, _)) in batch.iter().enumerate() {
-            if *u < f.nrows() && *v < f.ncols() {
-                mu[lane * d..(lane + 1) * d].copy_from_slice(f.m_row(*u));
-                nv[lane * d..(lane + 1) * d].copy_from_slice(f.n_row(*v));
-                known[lane] = true;
-            } else {
-                mu[lane * d..(lane + 1) * d].iter_mut().for_each(|x| *x = 0.0);
-                nv[lane * d..(lane + 1) * d].iter_mut().for_each(|x| *x = 0.0);
-            }
-        }
-        for lane in batch.len()..b {
-            mu[lane * d..(lane + 1) * d].iter_mut().for_each(|x| *x = 0.0);
-            nv[lane * d..(lane + 1) * d].iter_mut().for_each(|x| *x = 0.0);
-        }
-        let preds = match backend.predict_batch(&mu, &nv, d) {
-            Ok(p) => p,
+        let pairs: Vec<(u32, u32)> = batch.iter().map(|&(u, v, _)| (u, v)).collect();
+        let answers = match exec.execute(&backend, snap.factors(), &pairs, &mut stats) {
+            Ok(a) => a,
             Err(_) => break, // backend failure: drop in-flight, stop service
         };
-        stats.batches += 1;
-        stats.occupancy_sum += batch.len() as u64;
-        for (lane, (_, _, reply)) in batch.drain(..).enumerate() {
-            let p = if known[lane] {
-                preds[lane].clamp(clamp.0, clamp.1)
-            } else {
-                midpoint
-            };
+        for ((_, _, reply), p) in batch.drain(..).zip(answers) {
             let _ = reply.send(p); // client may have gone away; fine
-            stats.served += 1;
         }
     }
     stats

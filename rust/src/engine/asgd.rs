@@ -8,10 +8,13 @@
 
 use super::{EpochRunner, TrainConfig};
 use crate::data::Dataset;
-use crate::model::{dot, Factors, SharedFactors};
+use crate::model::{Factors, SharedFactors};
+use crate::optim::kernel::KernelSet;
 use crate::optim::Hyper;
 use crate::rng::Rng;
+use crate::runtime::pool::WorkerPool;
 use crate::sparse::{CsrMatrix, CsrRowRange, SweepLanes};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Alternating-phase SGD engine.
 pub struct AsgdEngine {
@@ -21,6 +24,8 @@ pub struct AsgdEngine {
     row_shards: Vec<(u32, u32)>,
     col_shards: Vec<(u32, u32)>,
     hyper: Hyper,
+    kernels: KernelSet,
+    pool: WorkerPool,
 }
 
 /// Split `[0, n)` into ≤`c` contiguous shards balanced by `counts`.
@@ -35,6 +40,7 @@ impl AsgdEngine {
         let by_row = CsrMatrix::from_coo(&data.train);
         let by_col = by_row.transpose();
         let c = cfg.threads.max(1);
+        let kernels = KernelSet::select(factors.d(), cfg.kernel);
         AsgdEngine {
             shared: SharedFactors::new(factors),
             row_shards: shard_by_counts(&data.train.row_counts(), c),
@@ -42,6 +48,8 @@ impl AsgdEngine {
             by_row,
             by_col,
             hyper: cfg.hyper,
+            kernels,
+            pool: WorkerPool::new(c),
         }
     }
 
@@ -49,27 +57,28 @@ impl AsgdEngine {
     fn phase_m(&self) -> u64 {
         let shared = &self.shared;
         let hyper = self.hyper;
+        let kernels = self.kernels;
         let by_row = &self.by_row;
-        let mut totals = vec![0u64; self.row_shards.len()];
-        std::thread::scope(|scope| {
-            for (shard, slot) in self.row_shards.iter().zip(totals.iter_mut()) {
-                let (lo, hi) = *shard;
-                scope.spawn(move || {
-                    *slot = CsrRowRange::new(by_row, lo, hi).sweep(|u, v, r| {
-                        // SAFETY: thread owns rows [lo,hi) of M
-                        // exclusively; N is read-only this phase.
-                        let (mu, nv, _, _) = unsafe { shared.rows_mut(u, v) };
-                        let e = r - dot(mu, nv);
-                        let ee = hyper.eta * e;
-                        let shrink = 1.0 - hyper.eta * hyper.lam;
-                        for k in 0..mu.len() {
-                            mu[k] = mu[k] * shrink + ee * nv[k];
-                        }
-                    });
-                });
-            }
+        let shards = &self.row_shards;
+        let total = AtomicU64::new(0);
+        self.pool.run(|t| {
+            // Balanced sharding can merge small shards, leaving trailing
+            // workers idle this phase.
+            let Some(&(lo, hi)) = shards.get(t) else { return };
+            let n = CsrRowRange::new(by_row, lo, hi).sweep(|u, v, r| {
+                // SAFETY: thread owns rows [lo,hi) of M
+                // exclusively; N is read-only this phase.
+                let (mu, nv, _, _) = unsafe { shared.rows_mut(u, v) };
+                let e = r - kernels.dot(mu, nv);
+                let ee = hyper.eta * e;
+                let shrink = 1.0 - hyper.eta * hyper.lam;
+                for k in 0..mu.len() {
+                    mu[k] = mu[k] * shrink + ee * nv[k];
+                }
+            });
+            total.fetch_add(n, Ordering::Relaxed);
         });
-        totals.iter().sum()
+        total.into_inner()
     }
 
     /// Phase N: symmetric, over the transposed matrix (the sweep's first
@@ -77,27 +86,26 @@ impl AsgdEngine {
     fn phase_n(&self) -> u64 {
         let shared = &self.shared;
         let hyper = self.hyper;
+        let kernels = self.kernels;
         let by_col = &self.by_col;
-        let mut totals = vec![0u64; self.col_shards.len()];
-        std::thread::scope(|scope| {
-            for (shard, slot) in self.col_shards.iter().zip(totals.iter_mut()) {
-                let (lo, hi) = *shard;
-                scope.spawn(move || {
-                    *slot = CsrRowRange::new(by_col, lo, hi).sweep(|v, u, r| {
-                        // SAFETY: thread owns rows [lo,hi) of N
-                        // exclusively; M is read-only this phase.
-                        let (mu, nv, _, _) = unsafe { shared.rows_mut(u, v) };
-                        let e = r - dot(mu, nv);
-                        let ee = hyper.eta * e;
-                        let shrink = 1.0 - hyper.eta * hyper.lam;
-                        for k in 0..nv.len() {
-                            nv[k] = nv[k] * shrink + ee * mu[k];
-                        }
-                    });
-                });
-            }
+        let shards = &self.col_shards;
+        let total = AtomicU64::new(0);
+        self.pool.run(|t| {
+            let Some(&(lo, hi)) = shards.get(t) else { return };
+            let n = CsrRowRange::new(by_col, lo, hi).sweep(|v, u, r| {
+                // SAFETY: thread owns rows [lo,hi) of N
+                // exclusively; M is read-only this phase.
+                let (mu, nv, _, _) = unsafe { shared.rows_mut(u, v) };
+                let e = r - kernels.dot(mu, nv);
+                let ee = hyper.eta * e;
+                let shrink = 1.0 - hyper.eta * hyper.lam;
+                for k in 0..nv.len() {
+                    nv[k] = nv[k] * shrink + ee * mu[k];
+                }
+            });
+            total.fetch_add(n, Ordering::Relaxed);
         });
-        totals.iter().sum()
+        total.into_inner()
     }
 }
 

@@ -17,9 +17,11 @@
 use super::{EpochRunner, TrainConfig};
 use crate::data::Dataset;
 use crate::model::{Factors, SharedFactors};
+use crate::optim::kernel::KernelSet;
 use crate::optim::{Hyper, Rule};
 use crate::partition::{build_grid, BlockGrid, PartitionKind};
 use crate::rng::Rng;
+use crate::runtime::pool::{Backoff, WorkerPool};
 use crate::scheduler::{BlockScheduler, LockFreeScheduler, LockedScheduler};
 use crate::sparse::SweepLanes;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -31,8 +33,9 @@ pub struct BlockEngine {
     grid: BlockGrid,
     scheduler: Arc<dyn BlockScheduler>,
     hyper: Hyper,
-    threads: usize,
     rule: Rule,
+    kernels: KernelSet,
+    pool: WorkerPool,
     rng: Rng,
 }
 
@@ -77,13 +80,15 @@ impl BlockEngine {
         rule: Rule,
         rng: &mut Rng,
     ) -> Self {
+        let kernels = KernelSet::select(factors.d(), cfg.kernel);
         BlockEngine {
             shared: SharedFactors::new(factors),
             grid,
             scheduler,
             hyper: cfg.hyper,
-            threads: cfg.threads,
             rule,
+            kernels,
+            pool: WorkerPool::new(cfg.threads),
             rng: rng.fork(3),
         }
     }
@@ -107,32 +112,31 @@ impl EpochRunner for BlockEngine {
         let sched = &self.scheduler;
         let hyper = self.hyper;
         let rule = self.rule;
+        let kernels = self.kernels;
         let base = self.rng.fork(epoch as u64);
-        std::thread::scope(|scope| {
-            for t in 0..self.threads {
-                let done = &done;
-                let mut rng = base.clone().fork(t as u64);
-                let sched = Arc::clone(sched);
-                scope.spawn(move || loop {
-                    if done.load(Ordering::Relaxed) >= quota {
-                        return;
-                    }
-                    let Some(claim) = sched.acquire(&mut rng) else {
-                        // Grid saturated — brief backoff and retry.
-                        std::hint::spin_loop();
-                        std::thread::yield_now();
-                        continue;
-                    };
-                    let n = grid.block(claim.i, claim.j).sweep(|u, v, r| {
-                        // SAFETY: the scheduler guarantees no concurrent
-                        // claim shares this row or column block, so all rows
-                        // touched here are exclusively ours.
-                        let (mu, nv, phiu, psiv) = unsafe { shared.rows_mut(u, v) };
-                        rule.apply(mu, nv, phiu, psiv, r, &hyper);
-                    });
-                    done.fetch_add(n, Ordering::Relaxed);
-                    sched.release_processed(claim, n);
+        self.pool.run(|t| {
+            let mut rng = base.clone().fork(t as u64);
+            // Grid saturated (threads > free diagonal) ⇒ bounded exponential
+            // backoff instead of burning a core on bare spin/yield retries.
+            let mut backoff = Backoff::new();
+            loop {
+                if done.load(Ordering::Relaxed) >= quota {
+                    return;
+                }
+                let Some(claim) = sched.acquire(&mut rng) else {
+                    backoff.wait();
+                    continue;
+                };
+                backoff.reset();
+                let n = grid.block(claim.i, claim.j).sweep(|u, v, r| {
+                    // SAFETY: the scheduler guarantees no concurrent
+                    // claim shares this row or column block, so all rows
+                    // touched here are exclusively ours.
+                    let (mu, nv, phiu, psiv) = unsafe { shared.rows_mut(u, v) };
+                    kernels.apply(rule, mu, nv, phiu, psiv, r, &hyper);
                 });
+                done.fetch_add(n, Ordering::Relaxed);
+                sched.release_processed(claim, n);
             }
         });
         done.load(Ordering::Relaxed)

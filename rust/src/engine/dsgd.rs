@@ -9,10 +9,13 @@
 use super::{EpochRunner, TrainConfig};
 use crate::data::Dataset;
 use crate::model::{Factors, SharedFactors};
-use crate::optim::{sgd_update, Hyper};
+use crate::optim::kernel::KernelSet;
+use crate::optim::Hyper;
 use crate::partition::{bounds_for, BlockGrid, PartitionKind};
 use crate::rng::Rng;
+use crate::runtime::pool::WorkerPool;
 use crate::sparse::SweepLanes;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Barrier;
 
 /// Bulk-synchronous stratified SGD engine.
@@ -20,7 +23,8 @@ pub struct DsgdEngine {
     shared: SharedFactors,
     grid: BlockGrid,
     hyper: Hyper,
-    threads: usize,
+    kernels: KernelSet,
+    pool: WorkerPool,
 }
 
 impl DsgdEngine {
@@ -32,44 +36,44 @@ impl DsgdEngine {
         let row_bounds = bounds_for(PartitionKind::Uniform, &data.train.row_counts(), threads);
         let col_bounds = bounds_for(PartitionKind::Uniform, &data.train.col_counts(), threads);
         let grid = BlockGrid::new(&data.train, row_bounds, col_bounds);
+        let kernels = KernelSet::select(factors.d(), cfg.kernel);
         DsgdEngine {
             shared: SharedFactors::new(factors),
             grid,
             hyper: cfg.hyper,
-            threads,
+            kernels,
+            pool: WorkerPool::new(threads),
         }
     }
 }
 
 impl EpochRunner for DsgdEngine {
     fn run_epoch(&mut self, _epoch: u32, _quota: u64) -> u64 {
-        let c = self.threads;
+        // The pool holds exactly c workers, so the stratum barrier admits
+        // them all each round.
+        let c = self.pool.threads();
         let barrier = Barrier::new(c);
         let shared = &self.shared;
         let grid = &self.grid;
         let hyper = self.hyper;
-        let mut per_thread = vec![0u64; c];
-        std::thread::scope(|scope| {
-            for (t, slot) in per_thread.iter_mut().enumerate() {
-                let barrier = &barrier;
-                scope.spawn(move || {
-                    let mut processed = 0u64;
-                    for s in 0..c {
-                        let j = (t + s) % c;
-                        processed += grid.block(t, j).sweep(|u, v, r| {
-                            // SAFETY: stratum blocks are a diagonal — rows
-                            // and columns are disjoint across threads.
-                            let (mu, nv, _, _) = unsafe { shared.rows_mut(u, v) };
-                            sgd_update(mu, nv, r, &hyper);
-                        });
-                        // Bulk synchronization between strata.
-                        barrier.wait();
-                    }
-                    *slot = processed;
+        let kernels = self.kernels;
+        let total = AtomicU64::new(0);
+        self.pool.run(|t| {
+            let mut processed = 0u64;
+            for s in 0..c {
+                let j = (t + s) % c;
+                processed += grid.block(t, j).sweep(|u, v, r| {
+                    // SAFETY: stratum blocks are a diagonal — rows
+                    // and columns are disjoint across threads.
+                    let (mu, nv, _, _) = unsafe { shared.rows_mut(u, v) };
+                    kernels.sgd(mu, nv, r, &hyper);
                 });
+                // Bulk synchronization between strata.
+                barrier.wait();
             }
+            total.fetch_add(processed, Ordering::Relaxed);
         });
-        per_thread.iter().sum()
+        total.into_inner()
     }
 
     fn shared(&self) -> &SharedFactors {

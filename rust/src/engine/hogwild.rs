@@ -12,8 +12,10 @@
 use super::{EpochRunner, TrainConfig};
 use crate::data::Dataset;
 use crate::model::{Factors, SharedFactors};
-use crate::optim::{sgd_update, Hyper};
+use crate::optim::kernel::KernelSet;
+use crate::optim::Hyper;
 use crate::rng::Rng;
+use crate::runtime::pool::WorkerPool;
 use crate::sparse::EntryLanes;
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -22,7 +24,8 @@ pub struct HogwildEngine {
     shared: SharedFactors,
     lanes: EntryLanes,
     hyper: Hyper,
-    threads: usize,
+    kernels: KernelSet,
+    pool: WorkerPool,
     rng: Rng,
 }
 
@@ -32,11 +35,13 @@ impl HogwildEngine {
         let mut lanes = EntryLanes::from_coo(&data.train);
         let mut local = rng.fork(2);
         lanes.shuffle(&mut local);
+        let kernels = KernelSet::select(factors.d(), cfg.kernel);
         HogwildEngine {
             shared: SharedFactors::new(factors),
             lanes,
             hyper: cfg.hyper,
-            threads: cfg.threads,
+            kernels,
+            pool: WorkerPool::new(cfg.threads),
             rng: local,
         }
     }
@@ -50,39 +55,32 @@ impl EpochRunner for HogwildEngine {
         let mut shuffle_rng = self.rng.fork(epoch as u64);
         self.lanes.shuffle(&mut shuffle_rng);
         let done = AtomicU64::new(0);
-        let nthreads = self.threads;
-        let chunk = self.lanes.len().div_ceil(nthreads);
+        let chunk = self.lanes.len().div_ceil(self.pool.threads());
         let hyper = self.hyper;
+        let kernels = self.kernels;
         let shared = &self.shared;
         let lanes = &self.lanes;
-        std::thread::scope(|scope| {
-            for t in 0..nthreads {
-                let done = &done;
-                scope.spawn(move || {
-                    let lo = t * chunk;
-                    let hi = ((t + 1) * chunk).min(lanes.len());
-                    if lo >= hi {
-                        return;
-                    }
-                    let shard = lanes.slice(lo, hi);
-                    let mut processed = 0u64;
-                    for k in 0..shard.len() {
-                        let (u, v, r) = shard.get(k);
-                        // SAFETY: Hogwild! — racy by algorithm (module docs
-                        // of model::shared).
-                        let (mu, nv, _, _) = unsafe { shared.rows_mut(u, v) };
-                        sgd_update(mu, nv, r, &hyper);
-                        processed += 1;
-                        // Quota check amortized to every 64 updates.
-                        if processed % 64 == 0
-                            && done.load(Ordering::Relaxed) + processed >= quota
-                        {
-                            break;
-                        }
-                    }
-                    done.fetch_add(processed, Ordering::Relaxed);
-                });
+        self.pool.run(|t| {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(lanes.len());
+            if lo >= hi {
+                return;
             }
+            let shard = lanes.slice(lo, hi);
+            let mut processed = 0u64;
+            for k in 0..shard.len() {
+                let (u, v, r) = shard.get(k);
+                // SAFETY: Hogwild! — racy by algorithm (module docs
+                // of model::shared).
+                let (mu, nv, _, _) = unsafe { shared.rows_mut(u, v) };
+                kernels.sgd(mu, nv, r, &hyper);
+                processed += 1;
+                // Quota check amortized to every 64 updates.
+                if processed % 64 == 0 && done.load(Ordering::Relaxed) + processed >= quota {
+                    break;
+                }
+            }
+            done.fetch_add(processed, Ordering::Relaxed);
         });
         done.load(Ordering::Relaxed)
     }

@@ -11,10 +11,14 @@
 //! | [`EngineKind::A2psgd`]   | block sched (work-aware lock-free) | NAG | balanced `(c+1)²` |
 //! | [`EngineKind::XlaMinibatch`] | leader-driven batches via PJRT | NAG (mini-batch) | — |
 //!
-//! Every engine runs epoch-at-a-time: workers are scoped threads that stop
-//! at the epoch's update quota, the leader evaluates RMSE/MAE on Ψ between
-//! epochs (training stopwatch paused), and an optional early-stop detector
-//! ends the run at convergence — that protocol is [`run_driver`].
+//! Every engine runs epoch-at-a-time: workers live in a persistent
+//! [`crate::runtime::pool::WorkerPool`] (spawned once at engine
+//! construction, parked between epochs) and stop at the epoch's update
+//! quota; the leader evaluates RMSE/MAE on Ψ between epochs (training
+//! stopwatch paused), and an optional early-stop detector ends the run at
+//! convergence — that protocol is [`run_driver`]. Inner-loop updates go
+//! through a [`crate::optim::kernel::KernelSet`] resolved per engine
+//! (SIMD when the CPU has it, scalar reference otherwise).
 
 mod asgd;
 mod block_common;
@@ -125,6 +129,10 @@ pub struct TrainConfig {
     /// Update rule for the Seq and A²PSGD engines (baselines keep their
     /// published rules: Hogwild!/DSGD/ASGD/FPSGD always use plain SGD).
     pub rule: crate::optim::Rule,
+    /// Update-kernel selection (SIMD auto-dispatch vs forced scalar);
+    /// resolved once into a [`crate::optim::kernel::KernelSet`] at engine
+    /// construction. The `A2PSGD_KERNEL=scalar` env var overrides this.
+    pub kernel: crate::optim::kernel::KernelChoice,
 }
 
 impl TrainConfig {
@@ -153,6 +161,7 @@ impl TrainConfig {
                 }
                 _ => crate::optim::Rule::Sgd,
             },
+            kernel: crate::optim::kernel::KernelChoice::Auto,
         }
     }
 
@@ -201,6 +210,12 @@ impl TrainConfig {
     /// Builder: set the update rule (ablation A3; Seq/A²PSGD only).
     pub fn rule(mut self, r: crate::optim::Rule) -> Self {
         self.rule = r;
+        self
+    }
+
+    /// Builder: set the update-kernel selection policy.
+    pub fn kernel(mut self, k: crate::optim::kernel::KernelChoice) -> Self {
+        self.kernel = k;
         self
     }
 }

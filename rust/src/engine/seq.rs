@@ -6,6 +6,7 @@
 use super::{EpochRunner, TrainConfig};
 use crate::data::Dataset;
 use crate::model::{Factors, SharedFactors};
+use crate::optim::kernel::KernelSet;
 use crate::optim::{Hyper, Rule};
 use crate::rng::Rng;
 use crate::sparse::EntryLanes;
@@ -16,17 +17,20 @@ pub struct SeqEngine {
     lanes: EntryLanes,
     hyper: Hyper,
     rule: Rule,
+    kernels: KernelSet,
     rng: Rng,
 }
 
 impl SeqEngine {
     /// Build from a dataset.
     pub fn new(data: &Dataset, factors: Factors, cfg: &TrainConfig, rng: &mut Rng) -> Self {
+        let kernels = KernelSet::select(factors.d(), cfg.kernel);
         SeqEngine {
             shared: SharedFactors::new(factors),
             lanes: EntryLanes::from_coo(&data.train),
             hyper: cfg.hyper,
             rule: cfg.rule,
+            kernels,
             rng: rng.fork(1),
         }
     }
@@ -40,7 +44,7 @@ impl EpochRunner for SeqEngine {
             let (u, v, r) = self.lanes.get(k);
             // SAFETY: single thread — trivially exclusive.
             let (mu, nv, phiu, psiv) = unsafe { self.shared.rows_mut(u, v) };
-            self.rule.apply(mu, nv, phiu, psiv, r, &self.hyper);
+            self.kernels.apply(self.rule, mu, nv, phiu, psiv, r, &self.hyper);
             done += 1;
             if done >= quota {
                 break;

@@ -51,7 +51,16 @@ fn config_from_args(args: &Args, engine: EngineKind, data: &Dataset) -> Result<T
         if let Some(p) = rc.partition {
             cfg = cfg.partition(p);
         }
+        if let Some(k) = rc.kernel {
+            cfg = cfg.kernel(k);
+        }
     }
+    if let Some(k) = args.get("kernel") {
+        cfg = cfg.kernel(a2psgd::optim::kernel::KernelChoice::parse(k)?);
+    }
+    // Pin the process-wide dispatched dot (prediction / eval / serving) to
+    // the same choice, so `--kernel scalar` forces scalar everywhere.
+    a2psgd::optim::kernel::init_global(cfg.kernel);
     if let Some(t) = args.get_parsed::<usize>("threads")? {
         cfg = cfg.threads(t);
     }
@@ -303,13 +312,19 @@ fn cmd_stream(args: &Args) -> Result<()> {
         h.gamma = x;
     }
     scfg = scfg.hyper(h);
+    if let Some(k) = args.get("kernel") {
+        scfg = scfg.kernel(a2psgd::optim::kernel::KernelChoice::parse(k)?);
+    }
     scfg.validate()?;
+    // Pin the process-wide dispatched dot (serving / holdout eval) too.
+    a2psgd::optim::kernel::init_global(scfg.kernel);
 
-    // 1. Warm offline training.
+    // 1. Warm offline training (same kernel policy as the online phase).
     let engine = EngineKind::parse(&args.get_or("engine", "a2psgd"))?;
     let mut tcfg = TrainConfig::preset(engine, &split.warm)
         .threads(scfg.threads)
-        .seed(seed);
+        .seed(seed)
+        .kernel(scfg.kernel);
     if let Some(e) = args.get_parsed::<u32>("epochs")? {
         tcfg = tcfg.epochs(e);
     }
@@ -437,17 +452,21 @@ fn cmd_stream(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Hot-path benchmark pipeline: update-kernel micro benches, the block
+/// Hot-path benchmark pipeline: update-kernel micro benches, the
+/// scalar-vs-SIMD kernel A/B across the rank-specialized set, the block
 /// layout A/B (pre-PR COO global-id sweep vs block-local CSR lanes), a
-/// per-engine epoch macro over the paper set, and scheduler fairness — all
-/// emitted as machine-readable `BENCH_hotpath.json` so later PRs have a
-/// perf trajectory to regress against.
+/// per-engine epoch macro over the paper set, scheduler fairness, and the
+/// pool-vs-scope epoch-overhead micro — all emitted as machine-readable
+/// `BENCH_hotpath.json` so later PRs have a perf trajectory to regress
+/// against.
 fn cmd_bench(args: &Args) -> Result<()> {
     use a2psgd::bench_harness::{bench, bench_batched, fmt_secs, json, Table};
     use a2psgd::config::BenchConfig;
     use a2psgd::model::SharedFactors;
+    use a2psgd::optim::kernel::{KernelChoice, KernelSet};
     use a2psgd::optim::{nag_update, sgd_update, Rule};
     use a2psgd::partition::build_grid;
+    use a2psgd::runtime::pool::WorkerPool;
     use a2psgd::scheduler::{BlockScheduler, LockFreeScheduler};
     use a2psgd::sparse::{stats, Entry, SweepLanes};
 
@@ -523,6 +542,78 @@ fn cmd_bench(args: &Args) -> Result<()> {
     });
     println!("{}", sgd_micro.summary());
     println!("{}", nag_micro.summary());
+
+    // 1b. Kernel A/B: scalar reference vs runtime-dispatched SIMD kernels
+    // across the rank-specialized set (dot / SGD / NAG per D). On hosts
+    // without AVX2+FMA / NEON the dispatched path *is* the scalar path and
+    // the speedup reads ≈ 1.0 — the A/B then certifies the fallback.
+    let kernel_path = KernelSet::select(16, KernelChoice::Auto).path;
+    eprintln!("kernel dispatch: {kernel_path} path");
+    let kernel_ranks = [8usize, 16, 32, 64, 128];
+    let mut kernel_ab_rows = Vec::new();
+    let mut kt = Table::new(&["op", "D", "scalar/op", "simd/op", "speedup"]);
+    for dk in kernel_ranks {
+        let scalar = KernelSet::select(dk, KernelChoice::Scalar);
+        let simd = KernelSet::select(dk, KernelChoice::Auto);
+        let (warm, iters) = (bcfg.warmup, bcfg.iters);
+        let mut krng = Rng::new(bcfg.seed ^ (dk as u64).wrapping_mul(0x9E37));
+        let mut mu: Vec<f32> = (0..dk).map(|_| krng.f32_range(0.1, 0.5)).collect();
+        let mut nv: Vec<f32> = (0..dk).map(|_| krng.f32_range(0.1, 0.5)).collect();
+        let mut phi = vec![0f32; dk];
+        let mut psi = vec![0f32; dk];
+        let dot_s = bench_batched(&format!("dot scalar d={dk}"), warm, iters, kernel_batch, || {
+            for _ in 0..kernel_batch {
+                std::hint::black_box(scalar.dot(&mu, &nv));
+            }
+        });
+        let dot_v = bench_batched(&format!("dot simd d={dk}"), warm, iters, kernel_batch, || {
+            for _ in 0..kernel_batch {
+                std::hint::black_box(simd.dot(&mu, &nv));
+            }
+        });
+        let sgd_s = bench_batched(&format!("sgd scalar d={dk}"), warm, iters, kernel_batch, || {
+            for i in 0..kernel_batch {
+                scalar.sgd(&mut mu, &mut nv, 3.0 + (i % 3) as f32, &hs);
+            }
+        });
+        let sgd_v = bench_batched(&format!("sgd simd d={dk}"), warm, iters, kernel_batch, || {
+            for i in 0..kernel_batch {
+                simd.sgd(&mut mu, &mut nv, 3.0 + (i % 3) as f32, &hs);
+            }
+        });
+        let nag_s = bench_batched(&format!("nag scalar d={dk}"), warm, iters, kernel_batch, || {
+            for i in 0..kernel_batch {
+                scalar.nag(&mut mu, &mut nv, &mut phi, &mut psi, 3.0 + (i % 3) as f32, &hn);
+            }
+        });
+        let nag_v = bench_batched(&format!("nag simd d={dk}"), warm, iters, kernel_batch, || {
+            for i in 0..kernel_batch {
+                simd.nag(&mut mu, &mut nv, &mut phi, &mut psi, 3.0 + (i % 3) as f32, &hn);
+            }
+        });
+        let rows = [("dot", &dot_s, &dot_v), ("sgd", &sgd_s, &sgd_v), ("nag", &nag_s, &nag_v)];
+        for (op, sc, si) in rows {
+            let speedup = sc.median() / si.median();
+            kt.row(&[
+                op.to_string(),
+                dk.to_string(),
+                format!("{:.1}ns", sc.median() * 1e9),
+                format!("{:.1}ns", si.median() * 1e9),
+                format!("{speedup:.2}x"),
+            ]);
+            kernel_ab_rows.push(
+                json::Obj::new()
+                    .str("op", op)
+                    .int("d", dk as u64)
+                    .num("scalar_ns_per_op", sc.median() * 1e9)
+                    .num("simd_ns_per_op", si.median() * 1e9)
+                    .num("speedup", speedup)
+                    .str("path", &simd.path.to_string())
+                    .build(),
+            );
+        }
+    }
+    println!("{}", kt.render());
 
     // 2. Layout A/B: identical single-threaded NAG epoch over the balanced
     // grid, once through the pre-PR layout (per-block AoS entry lists with
@@ -646,10 +737,36 @@ fn cmd_bench(args: &Args) -> Result<()> {
          uniform {imb_uniform:.3} vs work-aware {imb_aware:.3}"
     );
 
+    // 4b. Epoch-overhead micro: the persistent pool's two barrier crossings
+    // vs the per-epoch thread::scope spawn/join it replaced, for the same
+    // no-op epoch at the configured thread count.
+    let pool = WorkerPool::new(bcfg.threads);
+    let pool_iters = (bcfg.iters * 50).max(50);
+    let pool_bench = bench("epoch fork/join (persistent pool)", bcfg.warmup, pool_iters, || {
+        pool.run(|_t| {});
+    });
+    let scope_bench = bench("epoch fork/join (thread::scope)", bcfg.warmup, pool_iters, || {
+        std::thread::scope(|s| {
+            for _ in 0..bcfg.threads {
+                s.spawn(|| {});
+            }
+        });
+    });
+    println!("{}", pool_bench.summary());
+    println!("{}", scope_bench.summary());
+    let pool_speedup = scope_bench.median() / pool_bench.median();
+    println!(
+        "pool: epoch fork/join {:.2}x cheaper than per-epoch spawns ({} vs {})",
+        pool_speedup,
+        fmt_secs(pool_bench.median()),
+        fmt_secs(scope_bench.median())
+    );
+
     // 5. Emit the JSON artifact.
     let payload = json::Obj::new()
         .str("bench", "hotpath")
-        .int("version", 1)
+        .int("version", 2)
+        .str("kernel_path", &kernel_path.to_string())
         .str("dataset", &data.name)
         .int("threads", bcfg.threads as u64)
         .int("d", bcfg.d as u64)
@@ -679,12 +796,22 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 .num("csr_instances_per_sec", nnz as f64 / csr_sweep.median())
                 .build(),
         )
+        .raw("kernel_ab", &json::array(kernel_ab_rows))
         .raw("engines", &json::array(engine_rows))
         .raw(
             "scheduler",
             &json::Obj::new()
                 .num("uniform_imbalance", imb_uniform)
                 .num("work_aware_imbalance", imb_aware)
+                .build(),
+        )
+        .raw(
+            "pool",
+            &json::Obj::new()
+                .int("threads", bcfg.threads as u64)
+                .num("scope_epoch_s", scope_bench.median())
+                .num("pool_epoch_s", pool_bench.median())
+                .num("speedup", pool_speedup)
                 .build(),
         )
         .build();

@@ -153,14 +153,14 @@ impl Factors {
 }
 
 /// Dense dot product over two equal-length slices.
+///
+/// Thin alias for the crate-wide dispatched kernel entry point
+/// ([`crate::optim::kernel::dot`]): SIMD when the CPU supports it, the
+/// scalar reference otherwise — so `Factors::predict`, the native serving
+/// backend, and the top-k scans all inherit the vectorized path.
 #[inline(always)]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut s = 0f32;
-    for k in 0..a.len() {
-        s += a[k] * b[k];
-    }
-    s
+    crate::optim::kernel::dot(a, b)
 }
 
 #[cfg(test)]

@@ -1,0 +1,406 @@
+//! Vectorized update-kernel subsystem with runtime CPU-feature dispatch.
+//!
+//! The per-instance SGD/NAG updates and the dense dot product are the
+//! innermost hot path of every engine (a few dozen FLOPs per known
+//! instance). This module resolves, **once at engine construction**, a
+//! [`KernelSet`] of plain function pointers to the best available
+//! implementation:
+//!
+//! | Path | Arch | Requirement |
+//! |------|------|-------------|
+//! | [`KernelPath::Avx2Fma`] | x86_64 | `avx2` + `fma` detected at runtime |
+//! | [`KernelPath::Neon`]    | aarch64 | `neon` detected at runtime |
+//! | [`KernelPath::Scalar`]  | any | — (always-available reference) |
+//!
+//! SIMD paths are rank-specialized: D ∈ {8, 16, 32, 64, 128} get fully
+//! monomorphized (loop trip counts constant-folded, unrolled) variants, any
+//! other D a generic lane-chunked variant with a scalar remainder. The
+//! scalar path *is* the reference implementation in [`crate::optim`]
+//! (`sgd_update` / `nag_update`) — property tests here pin every SIMD
+//! variant to it within 1e-5 relative tolerance.
+//!
+//! Forcing the scalar path (CI fallback-rot protection, A/B baselines):
+//! - env: `A2PSGD_KERNEL=scalar` (checked at every [`KernelSet::select`])
+//! - config/CLI: `--kernel scalar` / `[run] kernel = "scalar"` →
+//!   [`KernelChoice::Scalar`]
+
+pub mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+use crate::optim::{adagrad_update, momentum_update, nag_update, sgd_update, Hyper, Rule};
+use std::sync::OnceLock;
+
+/// Dispatched dot-product signature.
+pub type DotFn = fn(&[f32], &[f32]) -> f32;
+/// Dispatched SGD-update signature (matches [`crate::optim::sgd_update`]).
+pub type SgdFn = fn(&mut [f32], &mut [f32], f32, &Hyper);
+/// Dispatched NAG-update signature (matches [`crate::optim::nag_update`]).
+pub type NagFn = fn(&mut [f32], &mut [f32], &mut [f32], &mut [f32], f32, &Hyper);
+
+/// Which implementation family a [`KernelSet`] resolved to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelPath {
+    /// Portable scalar reference (always available).
+    Scalar,
+    /// AVX2 + FMA (x86_64).
+    Avx2Fma,
+    /// NEON (aarch64).
+    Neon,
+}
+
+impl std::fmt::Display for KernelPath {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            KernelPath::Scalar => "scalar",
+            KernelPath::Avx2Fma => "avx2+fma",
+            KernelPath::Neon => "neon",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// User-facing kernel selection policy (config / CLI).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KernelChoice {
+    /// Best available SIMD path, scalar if none (the default).
+    #[default]
+    Auto,
+    /// Always the scalar reference path.
+    Scalar,
+}
+
+impl KernelChoice {
+    /// Parse a CLI/config name.
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "auto" | "simd" => KernelChoice::Auto,
+            "scalar" => KernelChoice::Scalar,
+            other => anyhow::bail!("unknown kernel choice {other:?} (auto|scalar)"),
+        })
+    }
+}
+
+/// `A2PSGD_KERNEL=scalar` forces the scalar path regardless of config —
+/// this is how CI runs the whole test suite over the fallback.
+pub fn force_scalar_env() -> bool {
+    std::env::var("A2PSGD_KERNEL")
+        .map(|v| v.eq_ignore_ascii_case("scalar"))
+        .unwrap_or(false)
+}
+
+/// A resolved set of update-kernel entry points. `Copy` — engines hand it
+/// to worker closures by value; calls are plain indirect calls with no
+/// further feature checks.
+#[derive(Clone, Copy)]
+pub struct KernelSet {
+    /// Implementation family this set resolved to.
+    pub path: KernelPath,
+    dot: DotFn,
+    sgd: SgdFn,
+    nag: NagFn,
+}
+
+impl KernelSet {
+    /// The scalar reference set (always available; also the forced path).
+    pub fn scalar() -> Self {
+        KernelSet {
+            path: KernelPath::Scalar,
+            dot: scalar::dot,
+            sgd: sgd_update,
+            nag: nag_update,
+        }
+    }
+
+    /// Resolve the best kernel set for feature dimension `d` under `choice`
+    /// (plus the `A2PSGD_KERNEL` env override). Call once at engine
+    /// construction; the result is feature-check-free.
+    pub fn select(d: usize, choice: KernelChoice) -> Self {
+        if choice == KernelChoice::Scalar || force_scalar_env() {
+            return Self::scalar();
+        }
+        simd_set(d).unwrap_or_else(Self::scalar)
+    }
+
+    /// Dispatched ⟨a, b⟩.
+    #[inline(always)]
+    pub fn dot(&self, a: &[f32], b: &[f32]) -> f32 {
+        (self.dot)(a, b)
+    }
+
+    /// Dispatched SGD update (paper Eq. 3).
+    #[inline(always)]
+    pub fn sgd(&self, mu: &mut [f32], nv: &mut [f32], r: f32, h: &Hyper) {
+        (self.sgd)(mu, nv, r, h)
+    }
+
+    /// Dispatched NAG update (paper Eqs. 4–5).
+    #[inline(always)]
+    pub fn nag(
+        &self,
+        mu: &mut [f32],
+        nv: &mut [f32],
+        phiu: &mut [f32],
+        psiv: &mut [f32],
+        r: f32,
+        h: &Hyper,
+    ) {
+        (self.nag)(mu, nv, phiu, psiv, r, h)
+    }
+
+    /// Apply one instance update under `rule` through this kernel set.
+    /// SGD/NAG hit the dispatched kernels; Momentum/AdaGrad (diagnostic
+    /// ablation rules off the paper's main path) use the scalar reference.
+    #[inline(always)]
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply(
+        &self,
+        rule: Rule,
+        mu: &mut [f32],
+        nv: &mut [f32],
+        phiu: &mut [f32],
+        psiv: &mut [f32],
+        r: f32,
+        h: &Hyper,
+    ) {
+        match rule {
+            Rule::Sgd => (self.sgd)(mu, nv, r, h),
+            Rule::Nag => (self.nag)(mu, nv, phiu, psiv, r, h),
+            Rule::Momentum => momentum_update(mu, nv, phiu, psiv, r, h),
+            Rule::AdaGrad => adagrad_update(mu, nv, phiu, psiv, r, h),
+        }
+    }
+}
+
+impl std::fmt::Debug for KernelSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("KernelSet").field("path", &self.path).finish()
+    }
+}
+
+fn simd_set(d: usize) -> Option<KernelSet> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if x86::available() {
+            return Some(x86::kernel_set(d));
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if neon::available() {
+            return Some(neon::kernel_set(d));
+        }
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    let _ = d;
+    None
+}
+
+static GLOBAL: OnceLock<KernelSet> = OnceLock::new();
+
+/// Pin the crate-wide dispatched entry points (the kernel set behind
+/// [`dot`] / `model::dot`, i.e. prediction, RMSE evaluation, serving, and
+/// fold-in) to `choice`. First resolution wins for the rest of the
+/// process; the CLI calls this right after flag/config parsing so
+/// `--kernel scalar` forces the scalar path *everywhere*, not just inside
+/// the engines. Returns the path actually resolved.
+pub fn init_global(choice: KernelChoice) -> KernelPath {
+    GLOBAL.get_or_init(|| KernelSet::select(0, choice)).path
+}
+
+/// The crate-wide dispatched dot product — the single entry point behind
+/// `model::dot`, `Factors::predict`, the native serving backend, and the
+/// top-k scans. Resolved once per process: by [`init_global`] if called
+/// first (the CLI does), otherwise lazily with [`KernelChoice::Auto`]
+/// (still honoring the `A2PSGD_KERNEL` env override).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let k = GLOBAL.get_or_init(|| KernelSet::select(0, KernelChoice::Auto));
+    (k.dot)(a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Relative closeness at the documented SIMD-vs-scalar tolerance.
+    fn close(a: f32, b: f32) -> bool {
+        let scale = a.abs().max(b.abs()).max(1.0);
+        (a - b).abs() <= 1e-5 * scale
+    }
+
+    fn close_slices(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(&x, &y)| close(x, y))
+    }
+
+    /// The ranks the dispatcher monomorphizes plus remainder-path ranks
+    /// (non-multiples of both 8 and 4 included).
+    const RANKS: &[usize] = &[1, 3, 5, 7, 8, 9, 12, 16, 20, 32, 33, 64, 100, 128, 130];
+
+    fn inputs(d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = crate::rng::Rng::new(seed);
+        let mut v = |lo: f32, hi: f32| -> Vec<f32> {
+            (0..d).map(|_| rng.f32_range(lo, hi)).collect::<Vec<f32>>()
+        };
+        (v(-1.0, 1.0), v(-1.0, 1.0), v(-0.1, 0.1), v(-0.1, 0.1))
+    }
+
+    #[test]
+    fn kernel_choice_parse() {
+        assert_eq!(KernelChoice::parse("auto").unwrap(), KernelChoice::Auto);
+        assert_eq!(KernelChoice::parse("SIMD").unwrap(), KernelChoice::Auto);
+        assert_eq!(KernelChoice::parse("Scalar").unwrap(), KernelChoice::Scalar);
+        assert!(KernelChoice::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn forced_scalar_choice_selects_scalar_path() {
+        let k = KernelSet::select(16, KernelChoice::Scalar);
+        assert_eq!(k.path, KernelPath::Scalar);
+        // And its entries are bit-identical to the reference functions.
+        let (mut mu, mut nv, _, _) = inputs(16, 1);
+        let (mut mu2, mut nv2) = (mu.clone(), nv.clone());
+        k.sgd(&mut mu, &mut nv, 3.0, &Hyper::sgd(0.05, 0.01));
+        sgd_update(&mut mu2, &mut nv2, 3.0, &Hyper::sgd(0.05, 0.01));
+        assert_eq!(mu, mu2);
+        assert_eq!(nv, nv2);
+    }
+
+    #[test]
+    fn dispatched_dot_matches_scalar_across_ranks() {
+        for &d in RANKS {
+            let (a, b, _, _) = inputs(d, d as u64);
+            let k = KernelSet::select(d, KernelChoice::Auto);
+            let got = k.dot(&a, &b);
+            let want = scalar::dot(&a, &b);
+            assert!(close(got, want), "d={d} path={}: {got} vs {want}", k.path);
+            // The crate-wide entry point agrees too.
+            assert!(close(super::dot(&a, &b), want), "global dot, d={d}");
+        }
+    }
+
+    #[test]
+    fn dispatched_sgd_matches_scalar_across_ranks() {
+        let h = Hyper::sgd(0.03, 0.02);
+        for &d in RANKS {
+            let (mu0, nv0, _, _) = inputs(d, 100 + d as u64);
+            let k = KernelSet::select(d, KernelChoice::Auto);
+            let (mut ms, mut ns) = (mu0.clone(), nv0.clone());
+            let (mut mv, mut nv) = (mu0.clone(), nv0.clone());
+            sgd_update(&mut ms, &mut ns, 2.5, &h);
+            k.sgd(&mut mv, &mut nv, 2.5, &h);
+            assert!(close_slices(&mv, &ms), "d={d} path={}: M diverged", k.path);
+            assert!(close_slices(&nv, &ns), "d={d} path={}: N diverged", k.path);
+        }
+    }
+
+    #[test]
+    fn dispatched_nag_matches_scalar_across_ranks() {
+        let h = Hyper::nag(0.03, 0.02, 0.9);
+        for &d in RANKS {
+            let (mu0, nv0, p0, q0) = inputs(d, 200 + d as u64);
+            let k = KernelSet::select(d, KernelChoice::Auto);
+            let (mut ms, mut ns, mut ps, mut qs) =
+                (mu0.clone(), nv0.clone(), p0.clone(), q0.clone());
+            let (mut mv, mut nv, mut pv, mut qv) = (mu0, nv0, p0, q0);
+            nag_update(&mut ms, &mut ns, &mut ps, &mut qs, 2.5, &h);
+            k.nag(&mut mv, &mut nv, &mut pv, &mut qv, 2.5, &h);
+            assert!(close_slices(&mv, &ms), "d={d} path={}: M diverged", k.path);
+            assert!(close_slices(&nv, &ns), "d={d} path={}: N diverged", k.path);
+            assert!(close_slices(&pv, &ps), "d={d} path={}: φ diverged", k.path);
+            assert!(close_slices(&qv, &qs), "d={d} path={}: ψ diverged", k.path);
+        }
+    }
+
+    #[test]
+    fn property_simd_updates_match_scalar() {
+        crate::proptest_lite::check(
+            "dispatched kernels match the scalar reference within 1e-5 rel",
+            192,
+            |g| {
+                let d = g.usize_in(1, 160);
+                let mu = g.vec(d, |g| g.f32_in(-1.0, 1.0));
+                let nv = g.vec(d, |g| g.f32_in(-1.0, 1.0));
+                let phi = g.vec(d, |g| g.f32_in(-0.2, 0.2));
+                let psi = g.vec(d, |g| g.f32_in(-0.2, 0.2));
+                let r = g.f32_in(1.0, 5.0);
+                let eta = g.f32_in(1e-4, 0.05);
+                let lam = g.f32_in(0.0, 0.3);
+                let gamma = g.f32_in(0.0, 0.95);
+                (mu, nv, phi, psi, r, eta, lam, gamma)
+            },
+            |(mu, nv, phi, psi, r, eta, lam, gamma)| {
+                let d = mu.len();
+                let k = KernelSet::select(d, KernelChoice::Auto);
+                let hs = Hyper::sgd(*eta, *lam);
+                let hn = Hyper::nag(*eta, *lam, *gamma);
+                // dot
+                if !close(k.dot(mu, nv), scalar::dot(mu, nv)) {
+                    return false;
+                }
+                // sgd
+                let (mut ms, mut ns) = (mu.clone(), nv.clone());
+                let (mut mv, mut nvv) = (mu.clone(), nv.clone());
+                sgd_update(&mut ms, &mut ns, *r, &hs);
+                k.sgd(&mut mv, &mut nvv, *r, &hs);
+                if !(close_slices(&mv, &ms) && close_slices(&nvv, &ns)) {
+                    return false;
+                }
+                // nag (remainder path included whenever d isn't a lane multiple)
+                let (mut ms, mut ns, mut ps, mut qs) =
+                    (mu.clone(), nv.clone(), phi.clone(), psi.clone());
+                let (mut mv, mut nvv, mut pv, mut qv) =
+                    (mu.clone(), nv.clone(), phi.clone(), psi.clone());
+                nag_update(&mut ms, &mut ns, &mut ps, &mut qs, *r, &hn);
+                k.nag(&mut mv, &mut nvv, &mut pv, &mut qv, *r, &hn);
+                close_slices(&mv, &ms)
+                    && close_slices(&nvv, &ns)
+                    && close_slices(&pv, &ps)
+                    && close_slices(&qv, &qs)
+            },
+        );
+    }
+
+    #[test]
+    fn apply_routes_every_rule() {
+        let k = KernelSet::select(8, KernelChoice::Auto);
+        let h = Hyper::nag(0.05, 0.01, 0.9);
+        for rule in [Rule::Sgd, Rule::Nag, Rule::Momentum, Rule::AdaGrad] {
+            let (mu0, nv0, p0, q0) = inputs(8, 7);
+            let (mut ms, mut ns, mut ps, mut qs) =
+                (mu0.clone(), nv0.clone(), p0.clone(), q0.clone());
+            let (mut mv, mut nv, mut pv, mut qv) = (mu0, nv0, p0, q0);
+            rule.apply(&mut ms, &mut ns, &mut ps, &mut qs, 3.0, &h);
+            k.apply(rule, &mut mv, &mut nv, &mut pv, &mut qv, 3.0, &h);
+            assert!(close_slices(&mv, &ms), "{rule}: M diverged");
+            assert!(close_slices(&nv, &ns), "{rule}: N diverged");
+            assert!(close_slices(&pv, &ps), "{rule}: φ diverged");
+            assert!(close_slices(&qv, &qs), "{rule}: ψ diverged");
+        }
+    }
+
+    #[test]
+    fn init_global_is_first_resolution_wins() {
+        // Other tests (or the lazy default) may already have resolved the
+        // process-global set; all later init calls must be no-ops that
+        // report the same path.
+        let p1 = init_global(KernelChoice::Auto);
+        let p2 = init_global(KernelChoice::Scalar);
+        assert_eq!(p1, p2, "first resolution must win for the whole process");
+        // And the global entry point computes a correct dot either way.
+        assert!((super::dot(&[1.0, 2.0], &[3.0, 4.0]) - 11.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn debug_reports_path() {
+        let k = KernelSet::scalar();
+        assert!(format!("{k:?}").contains("Scalar"));
+        assert_eq!(KernelPath::Scalar.to_string(), "scalar");
+        assert_eq!(KernelPath::Avx2Fma.to_string(), "avx2+fma");
+        assert_eq!(KernelPath::Neon.to_string(), "neon");
+    }
+}

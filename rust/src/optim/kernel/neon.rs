@@ -1,0 +1,273 @@
+//! NEON update kernels (aarch64) — the 4-lane mirror of the AVX2 module
+//! (`x86.rs`); see the safety/numerics notes there. NEON is baseline on
+//! every aarch64 target this crate supports, but dispatch still
+//! runtime-checks it so the scalar fallback remains reachable everywhere.
+
+use super::{DotFn, KernelPath, KernelSet, NagFn, SgdFn};
+use crate::optim::Hyper;
+use std::arch::aarch64::*;
+
+/// Feature gate (always true on shipping aarch64, checked anyway).
+pub(super) fn available() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+/// Resolve the kernel set for rank `d`. Caller must have checked
+/// [`available`].
+pub(super) fn kernel_set(d: usize) -> KernelSet {
+    let (dot, sgd, nag): (DotFn, SgdFn, NagFn) = match d {
+        8 => (d8::dot, d8::sgd, d8::nag),
+        16 => (d16::dot, d16::sgd, d16::nag),
+        32 => (d32::dot, d32::sgd, d32::nag),
+        64 => (d64::dot, d64::sgd, d64::nag),
+        128 => (d128::dot, d128::sgd, d128::nag),
+        _ => (generic::dot, generic::sgd, generic::nag),
+    };
+    KernelSet { path: KernelPath::Neon, dot, sgd, nag }
+}
+
+/// ⟨a, b⟩ over `d` elements.
+#[inline(always)]
+unsafe fn dot_body(a: *const f32, b: *const f32, d: usize) -> f32 {
+    let mut acc = vdupq_n_f32(0.0);
+    let mut k = 0usize;
+    while k + 4 <= d {
+        acc = vfmaq_f32(acc, vld1q_f32(a.add(k)), vld1q_f32(b.add(k)));
+        k += 4;
+    }
+    let mut s = vaddvq_f32(acc);
+    while k < d {
+        s += *a.add(k) * *b.add(k);
+        k += 1;
+    }
+    s
+}
+
+/// One SGD step (paper Eq. 3) over rows of length `d`.
+#[inline(always)]
+unsafe fn sgd_body(mu: *mut f32, nv: *mut f32, r: f32, h: &Hyper, d: usize) {
+    let e = r - dot_body(mu, nv, d);
+    let ee = h.eta * e;
+    let shrink = 1.0 - h.eta * h.lam;
+    let vee = vdupq_n_f32(ee);
+    let vsh = vdupq_n_f32(shrink);
+    let mut k = 0usize;
+    while k + 4 <= d {
+        let m = vld1q_f32(mu.add(k));
+        let n = vld1q_f32(nv.add(k));
+        vst1q_f32(mu.add(k), vfmaq_f32(vmulq_f32(vee, n), m, vsh));
+        vst1q_f32(nv.add(k), vfmaq_f32(vmulq_f32(vee, m), n, vsh));
+        k += 4;
+    }
+    while k < d {
+        let mk = *mu.add(k);
+        let nk = *nv.add(k);
+        *mu.add(k) = mk * shrink + ee * nk;
+        *nv.add(k) = nk * shrink + ee * mk;
+        k += 1;
+    }
+}
+
+/// One NAG step (paper Eqs. 4–5) over rows of length `d`.
+#[inline(always)]
+unsafe fn nag_body(
+    mu: *mut f32,
+    nv: *mut f32,
+    phiu: *mut f32,
+    psiv: *mut f32,
+    r: f32,
+    h: &Hyper,
+    d: usize,
+) {
+    let g = h.gamma;
+    let vg = vdupq_n_f32(g);
+    let mut acc = vdupq_n_f32(0.0);
+    let mut k = 0usize;
+    while k + 4 <= d {
+        let mh = vfmaq_f32(vld1q_f32(mu.add(k)), vg, vld1q_f32(phiu.add(k)));
+        let nh = vfmaq_f32(vld1q_f32(nv.add(k)), vg, vld1q_f32(psiv.add(k)));
+        acc = vfmaq_f32(acc, mh, nh);
+        k += 4;
+    }
+    let mut dot = vaddvq_f32(acc);
+    while k < d {
+        dot += (*mu.add(k) + g * *phiu.add(k)) * (*nv.add(k) + g * *psiv.add(k));
+        k += 1;
+    }
+    let e = r - dot;
+    let ee = h.eta * e;
+    let el = h.eta * h.lam;
+    let vee = vdupq_n_f32(ee);
+    let vel = vdupq_n_f32(el);
+    let mut k = 0usize;
+    while k + 4 <= d {
+        let m = vld1q_f32(mu.add(k));
+        let n = vld1q_f32(nv.add(k));
+        let p = vld1q_f32(phiu.add(k));
+        let q = vld1q_f32(psiv.add(k));
+        let mh = vfmaq_f32(m, vg, p);
+        let nh = vfmaq_f32(n, vg, q);
+        // p' = γφ + ee·n̂ − el·m̂  (vfmsq(a, b, c) = a − b·c)
+        let p2 = vfmsq_f32(vfmaq_f32(vmulq_f32(vg, p), vee, nh), vel, mh);
+        let q2 = vfmsq_f32(vfmaq_f32(vmulq_f32(vg, q), vee, mh), vel, nh);
+        vst1q_f32(phiu.add(k), p2);
+        vst1q_f32(psiv.add(k), q2);
+        vst1q_f32(mu.add(k), vaddq_f32(m, p2));
+        vst1q_f32(nv.add(k), vaddq_f32(n, q2));
+        k += 4;
+    }
+    while k < d {
+        let (m, n) = (*mu.add(k), *nv.add(k));
+        let (p, q) = (*phiu.add(k), *psiv.add(k));
+        let mh = m + g * p;
+        let nh = n + g * q;
+        let p2 = g * p + ee * nh - el * mh;
+        let q2 = g * q + ee * mh - el * nh;
+        *phiu.add(k) = p2;
+        *psiv.add(k) = q2;
+        *mu.add(k) = m + p2;
+        *nv.add(k) = n + q2;
+        k += 1;
+    }
+}
+
+/// Generate the safe fn-pointer wrappers for one monomorphized rank.
+macro_rules! neon_rank {
+    ($modname:ident, $D:expr) => {
+        pub(super) mod $modname {
+            use super::*;
+
+            #[target_feature(enable = "neon")]
+            unsafe fn dot_tf(a: &[f32], b: &[f32]) -> f32 {
+                dot_body(a.as_ptr(), b.as_ptr(), $D)
+            }
+
+            #[target_feature(enable = "neon")]
+            unsafe fn sgd_tf(mu: &mut [f32], nv: &mut [f32], r: f32, h: &Hyper) {
+                sgd_body(mu.as_mut_ptr(), nv.as_mut_ptr(), r, h, $D)
+            }
+
+            #[target_feature(enable = "neon")]
+            unsafe fn nag_tf(
+                mu: &mut [f32],
+                nv: &mut [f32],
+                phiu: &mut [f32],
+                psiv: &mut [f32],
+                r: f32,
+                h: &Hyper,
+            ) {
+                nag_body(
+                    mu.as_mut_ptr(),
+                    nv.as_mut_ptr(),
+                    phiu.as_mut_ptr(),
+                    psiv.as_mut_ptr(),
+                    r,
+                    h,
+                    $D,
+                )
+            }
+
+            pub(in super::super) fn dot(a: &[f32], b: &[f32]) -> f32 {
+                assert!(a.len() == $D && b.len() == $D, "rank-specialized kernel misuse");
+                // SAFETY: KernelSet construction verified neon; lengths
+                // checked above.
+                unsafe { dot_tf(a, b) }
+            }
+
+            pub(in super::super) fn sgd(mu: &mut [f32], nv: &mut [f32], r: f32, h: &Hyper) {
+                assert!(mu.len() == $D && nv.len() == $D, "rank-specialized kernel misuse");
+                // SAFETY: as in `dot`.
+                unsafe { sgd_tf(mu, nv, r, h) }
+            }
+
+            pub(in super::super) fn nag(
+                mu: &mut [f32],
+                nv: &mut [f32],
+                phiu: &mut [f32],
+                psiv: &mut [f32],
+                r: f32,
+                h: &Hyper,
+            ) {
+                assert!(
+                    mu.len() == $D && nv.len() == $D && phiu.len() == $D && psiv.len() == $D,
+                    "rank-specialized kernel misuse"
+                );
+                // SAFETY: as in `dot`.
+                unsafe { nag_tf(mu, nv, phiu, psiv, r, h) }
+            }
+        }
+    };
+}
+
+neon_rank!(d8, 8);
+neon_rank!(d16, 16);
+neon_rank!(d32, 32);
+neon_rank!(d64, 64);
+neon_rank!(d128, 128);
+
+/// Arbitrary-D variant: 4-lane chunks + scalar remainder.
+pub(super) mod generic {
+    use super::*;
+
+    #[target_feature(enable = "neon")]
+    unsafe fn dot_tf(a: &[f32], b: &[f32], d: usize) -> f32 {
+        dot_body(a.as_ptr(), b.as_ptr(), d)
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn sgd_tf(mu: &mut [f32], nv: &mut [f32], r: f32, h: &Hyper, d: usize) {
+        sgd_body(mu.as_mut_ptr(), nv.as_mut_ptr(), r, h, d)
+    }
+
+    #[target_feature(enable = "neon")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn nag_tf(
+        mu: &mut [f32],
+        nv: &mut [f32],
+        phiu: &mut [f32],
+        psiv: &mut [f32],
+        r: f32,
+        h: &Hyper,
+        d: usize,
+    ) {
+        nag_body(
+            mu.as_mut_ptr(),
+            nv.as_mut_ptr(),
+            phiu.as_mut_ptr(),
+            psiv.as_mut_ptr(),
+            r,
+            h,
+            d,
+        )
+    }
+
+    pub(in super::super) fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let d = a.len();
+        // Same contract as the scalar reference: a shorter rhs is a caller
+        // bug and must panic, never silently truncate.
+        assert!(b.len() >= d, "dot: rhs ({}) shorter than lhs ({d})", b.len());
+        // SAFETY: KernelSet construction verified neon; `d` bounds both.
+        unsafe { dot_tf(a, b, d) }
+    }
+
+    pub(in super::super) fn sgd(mu: &mut [f32], nv: &mut [f32], r: f32, h: &Hyper) {
+        assert_eq!(mu.len(), nv.len());
+        let d = mu.len();
+        // SAFETY: as in `dot`.
+        unsafe { sgd_tf(mu, nv, r, h, d) }
+    }
+
+    pub(in super::super) fn nag(
+        mu: &mut [f32],
+        nv: &mut [f32],
+        phiu: &mut [f32],
+        psiv: &mut [f32],
+        r: f32,
+        h: &Hyper,
+    ) {
+        let d = mu.len();
+        assert!(nv.len() == d && phiu.len() == d && psiv.len() == d);
+        // SAFETY: as in `dot`.
+        unsafe { nag_tf(mu, nv, phiu, psiv, r, h, d) }
+    }
+}

@@ -1,0 +1,40 @@
+//! Scalar reference kernels — the always-available fallback path of the
+//! [`KernelSet`](super::KernelSet) dispatch and the ground truth the SIMD
+//! variants are property-tested against.
+//!
+//! This module owns the crate's **only** scalar dot-product loop ([`dot`]);
+//! `model::dot`, the update rules in [`crate::optim`], and the SIMD
+//! remainder paths all route through the kernel subsystem rather than
+//! re-rolling the loop.
+
+/// Dense dot product over two equal-length slices (scalar reference).
+///
+/// Iterates over `a`'s length and indexes `b`, so a shorter `b` panics via
+/// the bounds check (a mismatch is always a caller bug — a silent partial
+/// dot would flow into predictions undetected).
+#[inline(always)]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0f32;
+    for k in 0..a.len() {
+        s += a[k] * b[k];
+    }
+    s
+}
+
+// The scalar SGD/NAG update entries are the existing reference
+// implementations in `crate::optim` (`sgd_update` / `nag_update`); they
+// already match the kernel function-pointer signatures, so `KernelSet`
+// points at them directly instead of wrapping them here.
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_reference_values() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(dot(&[2.0], &[-3.0]), -6.0);
+    }
+}

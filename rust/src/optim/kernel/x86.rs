@@ -1,0 +1,307 @@
+//! AVX2+FMA update kernels (x86_64).
+//!
+//! Layout: `#[inline(always)]` raw-pointer bodies hold the actual SIMD code;
+//! per-rank `#[target_feature(enable = "avx2,fma")]` wrappers monomorphize
+//! them for D ∈ {8, 16, 32, 64, 128} (the trip count becomes a compile-time
+//! constant, so LLVM fully unrolls the 8-lane loop), plus one generic
+//! variant that chunks any D through 8-lane iterations and finishes the
+//! `D % 8` tail with the same scalar remainder formulas the reference
+//! kernels use.
+//!
+//! Safety model: the safe `fn`-pointer wrappers below assume AVX2+FMA are
+//! present. They are only reachable through [`super::KernelSet`]
+//! construction, which runtime-checks both features first; the wrappers
+//! additionally bounds-check their slice arguments, so no raw-pointer
+//! access can run past a row.
+//!
+//! Numerics: SIMD accumulation reassociates the dot sum (8 partial lanes +
+//! horizontal add), so results differ from the scalar reference at the ULP
+//! level — the property tests in [`super`] pin the divergence under 1e-5
+//! relative. Under Hogwild! races a 256-bit store is not single-copy
+//! atomic; individual f32 lanes still never tear, which is the same
+//! old-value/new-value mix the scalar racy path already admits.
+
+use super::{DotFn, KernelPath, KernelSet, NagFn, SgdFn};
+use crate::optim::Hyper;
+use std::arch::x86_64::*;
+
+/// Both features the kernels compile against; checked at dispatch time.
+pub(super) fn available() -> bool {
+    std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma")
+}
+
+/// Resolve the kernel set for rank `d` (generic chunked variant for ranks
+/// outside the monomorphized set). Caller must have checked [`available`].
+pub(super) fn kernel_set(d: usize) -> KernelSet {
+    let (dot, sgd, nag): (DotFn, SgdFn, NagFn) = match d {
+        8 => (d8::dot, d8::sgd, d8::nag),
+        16 => (d16::dot, d16::sgd, d16::nag),
+        32 => (d32::dot, d32::sgd, d32::nag),
+        64 => (d64::dot, d64::sgd, d64::nag),
+        128 => (d128::dot, d128::sgd, d128::nag),
+        _ => (generic::dot, generic::sgd, generic::nag),
+    };
+    KernelSet { path: KernelPath::Avx2Fma, dot, sgd, nag }
+}
+
+/// Horizontal sum of the 8 f32 lanes of a 256-bit accumulator.
+#[inline(always)]
+unsafe fn hsum(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps(v, 1);
+    let s = _mm_add_ps(lo, hi);
+    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+    _mm_cvtss_f32(s)
+}
+
+/// ⟨a, b⟩ over `d` elements.
+#[inline(always)]
+unsafe fn dot_body(a: *const f32, b: *const f32, d: usize) -> f32 {
+    let mut acc = _mm256_setzero_ps();
+    let mut k = 0usize;
+    while k + 8 <= d {
+        acc = _mm256_fmadd_ps(_mm256_loadu_ps(a.add(k)), _mm256_loadu_ps(b.add(k)), acc);
+        k += 8;
+    }
+    let mut s = hsum(acc);
+    while k < d {
+        s += *a.add(k) * *b.add(k);
+        k += 1;
+    }
+    s
+}
+
+/// One SGD step (paper Eq. 3) over rows of length `d`; the simultaneous
+/// previous-value assignment of the scalar reference is preserved (both new
+/// rows are computed from loads made before either store).
+#[inline(always)]
+unsafe fn sgd_body(mu: *mut f32, nv: *mut f32, r: f32, h: &Hyper, d: usize) {
+    let e = r - dot_body(mu, nv, d);
+    let ee = h.eta * e;
+    let shrink = 1.0 - h.eta * h.lam;
+    let vee = _mm256_set1_ps(ee);
+    let vsh = _mm256_set1_ps(shrink);
+    let mut k = 0usize;
+    while k + 8 <= d {
+        let m = _mm256_loadu_ps(mu.add(k));
+        let n = _mm256_loadu_ps(nv.add(k));
+        _mm256_storeu_ps(mu.add(k), _mm256_fmadd_ps(m, vsh, _mm256_mul_ps(vee, n)));
+        _mm256_storeu_ps(nv.add(k), _mm256_fmadd_ps(n, vsh, _mm256_mul_ps(vee, m)));
+        k += 8;
+    }
+    while k < d {
+        let mk = *mu.add(k);
+        let nk = *nv.add(k);
+        *mu.add(k) = mk * shrink + ee * nk;
+        *nv.add(k) = nk * shrink + ee * mk;
+        k += 1;
+    }
+}
+
+/// One NAG step (paper Eqs. 4–5) over rows of length `d`. Pass 1 evaluates
+/// the error at the look-ahead point; pass 2 recomputes the look-ahead in
+/// registers (cheaper than spilling stack tiles) and applies the momentum
+/// and position updates.
+#[inline(always)]
+unsafe fn nag_body(
+    mu: *mut f32,
+    nv: *mut f32,
+    phiu: *mut f32,
+    psiv: *mut f32,
+    r: f32,
+    h: &Hyper,
+    d: usize,
+) {
+    let g = h.gamma;
+    let vg = _mm256_set1_ps(g);
+    let mut acc = _mm256_setzero_ps();
+    let mut k = 0usize;
+    while k + 8 <= d {
+        let mh = _mm256_fmadd_ps(vg, _mm256_loadu_ps(phiu.add(k)), _mm256_loadu_ps(mu.add(k)));
+        let nh = _mm256_fmadd_ps(vg, _mm256_loadu_ps(psiv.add(k)), _mm256_loadu_ps(nv.add(k)));
+        acc = _mm256_fmadd_ps(mh, nh, acc);
+        k += 8;
+    }
+    let mut dot = hsum(acc);
+    while k < d {
+        dot += (*mu.add(k) + g * *phiu.add(k)) * (*nv.add(k) + g * *psiv.add(k));
+        k += 1;
+    }
+    let e = r - dot;
+    let ee = h.eta * e;
+    let el = h.eta * h.lam;
+    let vee = _mm256_set1_ps(ee);
+    let vel = _mm256_set1_ps(el);
+    let mut k = 0usize;
+    while k + 8 <= d {
+        let m = _mm256_loadu_ps(mu.add(k));
+        let n = _mm256_loadu_ps(nv.add(k));
+        let p = _mm256_loadu_ps(phiu.add(k));
+        let q = _mm256_loadu_ps(psiv.add(k));
+        let mh = _mm256_fmadd_ps(vg, p, m);
+        let nh = _mm256_fmadd_ps(vg, q, n);
+        // p' = γφ + ee·n̂ − el·m̂  (fnmadd(a, b, c) = c − a·b)
+        let p2 = _mm256_fnmadd_ps(vel, mh, _mm256_fmadd_ps(vee, nh, _mm256_mul_ps(vg, p)));
+        let q2 = _mm256_fnmadd_ps(vel, nh, _mm256_fmadd_ps(vee, mh, _mm256_mul_ps(vg, q)));
+        _mm256_storeu_ps(phiu.add(k), p2);
+        _mm256_storeu_ps(psiv.add(k), q2);
+        _mm256_storeu_ps(mu.add(k), _mm256_add_ps(m, p2));
+        _mm256_storeu_ps(nv.add(k), _mm256_add_ps(n, q2));
+        k += 8;
+    }
+    while k < d {
+        let (m, n) = (*mu.add(k), *nv.add(k));
+        let (p, q) = (*phiu.add(k), *psiv.add(k));
+        let mh = m + g * p;
+        let nh = n + g * q;
+        let p2 = g * p + ee * nh - el * mh;
+        let q2 = g * q + ee * mh - el * nh;
+        *phiu.add(k) = p2;
+        *psiv.add(k) = q2;
+        *mu.add(k) = m + p2;
+        *nv.add(k) = n + q2;
+        k += 1;
+    }
+}
+
+/// Generate the safe fn-pointer wrappers for one monomorphized rank.
+macro_rules! avx2_rank {
+    ($modname:ident, $D:expr) => {
+        pub(super) mod $modname {
+            use super::*;
+
+            #[target_feature(enable = "avx2,fma")]
+            unsafe fn dot_tf(a: &[f32], b: &[f32]) -> f32 {
+                dot_body(a.as_ptr(), b.as_ptr(), $D)
+            }
+
+            #[target_feature(enable = "avx2,fma")]
+            unsafe fn sgd_tf(mu: &mut [f32], nv: &mut [f32], r: f32, h: &Hyper) {
+                sgd_body(mu.as_mut_ptr(), nv.as_mut_ptr(), r, h, $D)
+            }
+
+            #[target_feature(enable = "avx2,fma")]
+            unsafe fn nag_tf(
+                mu: &mut [f32],
+                nv: &mut [f32],
+                phiu: &mut [f32],
+                psiv: &mut [f32],
+                r: f32,
+                h: &Hyper,
+            ) {
+                nag_body(
+                    mu.as_mut_ptr(),
+                    nv.as_mut_ptr(),
+                    phiu.as_mut_ptr(),
+                    psiv.as_mut_ptr(),
+                    r,
+                    h,
+                    $D,
+                )
+            }
+
+            pub(in super::super) fn dot(a: &[f32], b: &[f32]) -> f32 {
+                assert!(a.len() == $D && b.len() == $D, "rank-specialized kernel misuse");
+                // SAFETY: KernelSet construction verified avx2+fma; lengths
+                // checked above.
+                unsafe { dot_tf(a, b) }
+            }
+
+            pub(in super::super) fn sgd(mu: &mut [f32], nv: &mut [f32], r: f32, h: &Hyper) {
+                assert!(mu.len() == $D && nv.len() == $D, "rank-specialized kernel misuse");
+                // SAFETY: as in `dot`.
+                unsafe { sgd_tf(mu, nv, r, h) }
+            }
+
+            pub(in super::super) fn nag(
+                mu: &mut [f32],
+                nv: &mut [f32],
+                phiu: &mut [f32],
+                psiv: &mut [f32],
+                r: f32,
+                h: &Hyper,
+            ) {
+                assert!(
+                    mu.len() == $D && nv.len() == $D && phiu.len() == $D && psiv.len() == $D,
+                    "rank-specialized kernel misuse"
+                );
+                // SAFETY: as in `dot`.
+                unsafe { nag_tf(mu, nv, phiu, psiv, r, h) }
+            }
+        }
+    };
+}
+
+avx2_rank!(d8, 8);
+avx2_rank!(d16, 16);
+avx2_rank!(d32, 32);
+avx2_rank!(d64, 64);
+avx2_rank!(d128, 128);
+
+/// Arbitrary-D variant: 8-lane chunks + scalar remainder.
+pub(super) mod generic {
+    use super::*;
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dot_tf(a: &[f32], b: &[f32], d: usize) -> f32 {
+        dot_body(a.as_ptr(), b.as_ptr(), d)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn sgd_tf(mu: &mut [f32], nv: &mut [f32], r: f32, h: &Hyper, d: usize) {
+        sgd_body(mu.as_mut_ptr(), nv.as_mut_ptr(), r, h, d)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn nag_tf(
+        mu: &mut [f32],
+        nv: &mut [f32],
+        phiu: &mut [f32],
+        psiv: &mut [f32],
+        r: f32,
+        h: &Hyper,
+        d: usize,
+    ) {
+        nag_body(
+            mu.as_mut_ptr(),
+            nv.as_mut_ptr(),
+            phiu.as_mut_ptr(),
+            psiv.as_mut_ptr(),
+            r,
+            h,
+            d,
+        )
+    }
+
+    pub(in super::super) fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let d = a.len();
+        // Same contract as the scalar reference: a shorter rhs is a caller
+        // bug and must panic, never silently truncate.
+        assert!(b.len() >= d, "dot: rhs ({}) shorter than lhs ({d})", b.len());
+        // SAFETY: KernelSet construction verified avx2+fma; `d` bounds both.
+        unsafe { dot_tf(a, b, d) }
+    }
+
+    pub(in super::super) fn sgd(mu: &mut [f32], nv: &mut [f32], r: f32, h: &Hyper) {
+        assert_eq!(mu.len(), nv.len());
+        let d = mu.len();
+        // SAFETY: as in `dot`.
+        unsafe { sgd_tf(mu, nv, r, h, d) }
+    }
+
+    pub(in super::super) fn nag(
+        mu: &mut [f32],
+        nv: &mut [f32],
+        phiu: &mut [f32],
+        psiv: &mut [f32],
+        r: f32,
+        h: &Hyper,
+    ) {
+        let d = mu.len();
+        assert!(nv.len() == d && phiu.len() == d && psiv.len() == d);
+        // SAFETY: as in `dot`.
+        unsafe { nag_tf(mu, nv, phiu, psiv, r, h, d) }
+    }
+}

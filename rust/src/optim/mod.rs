@@ -1,6 +1,13 @@
 //! Per-instance update rules: plain SGD (paper Eq. 3) and the NAG scheme
 //! (paper Eqs. 4–5). These are the innermost hot path — a few dozen FLOPs
 //! per known instance — so both are branch-free single passes over D.
+//!
+//! The functions here are the **scalar reference** implementations. The
+//! engines run them through the [`kernel`] subsystem, which dispatches to
+//! explicit-SIMD variants (AVX2+FMA / NEON, rank-specialized) when the CPU
+//! supports them and falls back to these exact functions otherwise.
+
+pub mod kernel;
 
 /// Hyperparameters (paper Tables I–II).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -32,11 +39,7 @@ impl Hyper {
 #[inline(always)]
 pub fn sgd_update(mu: &mut [f32], nv: &mut [f32], r: f32, h: &Hyper) {
     debug_assert_eq!(mu.len(), nv.len());
-    let mut dot = 0f32;
-    for k in 0..mu.len() {
-        dot += mu[k] * nv[k];
-    }
-    let e = r - dot;
+    let e = r - kernel::scalar::dot(mu, nv);
     let ee = h.eta * e;
     let shrink = 1.0 - h.eta * h.lam;
     for k in 0..mu.len() {
@@ -160,11 +163,7 @@ pub fn momentum_update(
     h: &Hyper,
 ) {
     debug_assert_eq!(mu.len(), nv.len());
-    let mut dot = 0f32;
-    for k in 0..mu.len() {
-        dot += mu[k] * nv[k];
-    }
-    let e = r - dot;
+    let e = r - kernel::scalar::dot(mu, nv);
     let ee = h.eta * e;
     let el = h.eta * h.lam;
     for k in 0..mu.len() {
@@ -193,11 +192,7 @@ pub fn adagrad_update(
 ) {
     const EPS: f32 = 1e-8;
     debug_assert_eq!(mu.len(), nv.len());
-    let mut dot = 0f32;
-    for k in 0..mu.len() {
-        dot += mu[k] * nv[k];
-    }
-    let e = r - dot;
+    let e = r - kernel::scalar::dot(mu, nv);
     for k in 0..mu.len() {
         let mk = mu[k];
         let nk = nv[k];

@@ -14,6 +14,7 @@
 //! - `update_scan` — K fused NAG steps (lax.scan; the §Perf training path)
 //! - `recommend`   — one user row vs the whole item matrix (top-N path)
 
+pub mod pool;
 mod xla_train;
 
 pub use xla_train::train_xla;

@@ -1,0 +1,402 @@
+//! Persistent worker pool: epoch-scoped fork/join without per-epoch thread
+//! spawns.
+//!
+//! Every engine used to rebuild its worker threads each `run_epoch` through
+//! `std::thread::scope` — T `clone(2)`/`mmap` syscalls plus scheduler
+//! warm-up per epoch, paid hundreds of times per training run. A
+//! [`WorkerPool`] spawns its workers **once** (at engine construction),
+//! parks them on a condvar between epochs, and runs an epoch as exactly two
+//! barrier crossings: one broadcast to wake the workers with the epoch's
+//! job, one completion wait that returns when the last worker finishes.
+//! `a2psgd bench` measures the difference (`pool` section of
+//! `BENCH_hotpath.json`).
+//!
+//! # Epoch protocol
+//!
+//! [`WorkerPool::run`] publishes one job — a `Fn(usize)` receiving the
+//! worker index `t ∈ [0, threads)` — under the pool mutex, bumps the
+//! generation counter, and wakes all workers. Each worker executes the job
+//! exactly once, drops its handle on it, and increments the completion
+//! count; the leader's wait returns once the count reaches the worker
+//! count, takes the job back out, and drops the final reference before
+//! returning.
+//!
+//! That drop ordering is what makes the (lifetime-erased) borrow in `run`
+//! sound: the closure may freely borrow engine state because no worker can
+//! hold a reference to it after `run` returns — the same guarantee
+//! `thread::scope` gave, at persistent-pool cost. Single-threaded pools
+//! spawn nothing and run the job inline on the caller, so `threads = 1`
+//! training is trivially bit-identical to the scoped-spawn baseline.
+//!
+//! # Affinity
+//!
+//! Optional: `WorkerPool::with_affinity(threads, true)` (or
+//! `A2PSGD_PIN=1`) pins worker `t` to core `t mod cores` via a minimal
+//! `sched_setaffinity` binding on Linux (no `libc` crate offline) —
+//! best-effort, silently skipped where unsupported.
+//!
+//! A worker that panics mid-job is caught, the epoch completes, and the
+//! panic is re-raised on the leader after the barrier — mirroring
+//! `thread::scope` semantics without poisoning the pool.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Lifetime-erased epoch job (see the module docs for why this is sound).
+type Job = Arc<dyn Fn(usize) + Send + Sync + 'static>;
+
+struct PoolState {
+    /// The in-flight epoch job (present from broadcast until the leader
+    /// reclaims it at the completion barrier).
+    job: Option<Job>,
+    /// Epoch generation; workers run one job per observed bump.
+    generation: u64,
+    /// Workers finished with the current generation.
+    completed: usize,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers park here between epochs.
+    work_cv: Condvar,
+    /// The leader parks here until the epoch completes.
+    done_cv: Condvar,
+    shutdown: AtomicBool,
+    /// A worker panicked during the current epoch (re-raised by the leader).
+    panicked: AtomicBool,
+}
+
+/// A persistent, reusable fork/join worker pool (see module docs).
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+    /// Serializes concurrent [`WorkerPool::run`] callers — the epoch
+    /// protocol supports one leader at a time.
+    run_gate: Mutex<()>,
+}
+
+impl WorkerPool {
+    /// Pool with `threads` logical workers (min 1). Core pinning comes from
+    /// the `A2PSGD_PIN` env var (`1`/`true` enables it).
+    pub fn new(threads: usize) -> Self {
+        let pin = std::env::var("A2PSGD_PIN")
+            .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+            .unwrap_or(false);
+        Self::with_affinity(threads, pin)
+    }
+
+    /// Pool with explicit core-affinity control.
+    pub fn with_affinity(threads: usize, pin: bool) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState { job: None, generation: 0, completed: 0 }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            panicked: AtomicBool::new(false),
+        });
+        // A single-worker pool runs jobs inline on the caller: zero barrier
+        // cost and exactly the serial execution order.
+        let handles = if threads == 1 {
+            Vec::new()
+        } else {
+            let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            (0..threads)
+                .map(|t| {
+                    let shared = Arc::clone(&shared);
+                    std::thread::Builder::new()
+                        .name(format!("a2psgd-worker-{t}"))
+                        .spawn(move || {
+                            if pin {
+                                pin_to_core(t % cores);
+                            }
+                            worker_loop(&shared, t, threads);
+                        })
+                        .expect("spawning pool worker")
+                })
+                .collect()
+        };
+        WorkerPool { shared, handles, threads, run_gate: Mutex::new(()) }
+    }
+
+    /// Logical worker count (job indices run over `0..threads()`).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run one epoch: `f(t)` executes exactly once per worker index, and
+    /// every execution has finished when this returns. The closure may
+    /// borrow caller state (the scoped-thread contract, kept by the
+    /// completion barrier — see module docs).
+    pub fn run(&self, f: impl Fn(usize) + Send + Sync) {
+        if self.handles.is_empty() {
+            for t in 0..self.threads {
+                f(t);
+            }
+            return;
+        }
+        let _gate = self.run_gate.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let job: Arc<dyn Fn(usize) + Send + Sync + '_> = Arc::new(f);
+        // SAFETY: lifetime erasure only (same layout — Arc fat pointers).
+        // The completion wait below guarantees every worker has finished
+        // the job and dropped its clone before `run` returns, and the
+        // leader drops the final reference itself — the closure cannot
+        // outlive its borrows.
+        let job: Job = unsafe { std::mem::transmute(job) };
+        let mut st = self.shared.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        st.job = Some(job);
+        st.completed = 0;
+        st.generation += 1;
+        self.shared.work_cv.notify_all();
+        while st.completed < self.handles.len() {
+            st = self
+                .shared
+                .done_cv
+                .wait(st)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+        let job = st.job.take().expect("epoch job vanished before completion");
+        drop(st);
+        // Workers drop their clones before bumping `completed` under the
+        // lock, so this is the final reference.
+        debug_assert_eq!(Arc::strong_count(&job), 1);
+        drop(job);
+        if self.shared.panicked.swap(false, Ordering::AcqRel) {
+            panic!("a worker thread panicked during a pool epoch");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        {
+            // Lock around the wake so no worker is between its shutdown
+            // check and its condvar wait.
+            let _guard =
+                self.shared.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared, t: usize, nworkers: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            loop {
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                if st.generation != seen {
+                    seen = st.generation;
+                    break st.job.clone().expect("generation bumped without a job");
+                }
+                st = shared.work_cv.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+        };
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(t))).is_err() {
+            shared.panicked.store(true, Ordering::Release);
+        }
+        // Drop our job handle *before* signalling completion: the leader
+        // relies on holding the last reference once the barrier opens.
+        drop(job);
+        let mut st = shared.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        st.completed += 1;
+        if st.completed == nworkers {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// Best-effort pin of the calling thread to `core` (Linux only; minimal
+/// `sched_setaffinity` binding since no `libc` crate is available offline —
+/// std already links the symbol).
+#[cfg(target_os = "linux")]
+fn pin_to_core(core: usize) {
+    const SETSIZE_WORDS: usize = 16; // 1024-CPU mask, the glibc default
+    let mut mask = [0u64; SETSIZE_WORDS];
+    mask[(core / 64) % SETSIZE_WORDS] |= 1u64 << (core % 64);
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    // SAFETY: the mask buffer outlives the call; failure (restricted
+    // cgroup, qemu, …) is deliberately ignored.
+    let _ = unsafe { sched_setaffinity(0, SETSIZE_WORDS * 8, mask.as_ptr()) };
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pin_to_core(_core: usize) {}
+
+/// Bounded exponential backoff for saturated-resource retry loops (e.g. a
+/// worker that finds the whole block grid claimed): a few spin-hint rounds,
+/// then yields, then capped-duration sleeps — instead of burning a core on
+/// a bare `spin_loop`/`yield_now` retry when the thread count exceeds the
+/// grid's concurrency.
+#[derive(Debug, Default)]
+pub struct Backoff {
+    step: u32,
+}
+
+impl Backoff {
+    const SPIN_STEPS: u32 = 6;
+    const YIELD_STEPS: u32 = 10;
+    const MAX_SLEEP_US: u64 = 256;
+
+    /// Fresh backoff (starts at the cheapest wait).
+    pub fn new() -> Self {
+        Backoff { step: 0 }
+    }
+
+    /// Reset after a successful acquisition.
+    pub fn reset(&mut self) {
+        self.step = 0;
+    }
+
+    /// Wait one escalating step: 2^k spin hints → yields → sleeps capped at
+    /// [`Backoff::MAX_SLEEP_US`] µs.
+    pub fn wait(&mut self) {
+        if self.step <= Self::SPIN_STEPS {
+            for _ in 0..(1u32 << self.step) {
+                std::hint::spin_loop();
+            }
+        } else if self.step <= Self::YIELD_STEPS {
+            std::thread::yield_now();
+        } else {
+            let exp = (self.step - Self::YIELD_STEPS).min(8) as u64;
+            let us = (1u64 << exp).min(Self::MAX_SLEEP_US);
+            std::thread::sleep(std::time::Duration::from_micros(us));
+        }
+        self.step = self.step.saturating_add(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn every_worker_index_runs_exactly_once() {
+        for threads in [1usize, 2, 4, 7] {
+            let pool = WorkerPool::new(threads);
+            let hits: Vec<AtomicU64> = (0..threads).map(|_| AtomicU64::new(0)).collect();
+            pool.run(|t| {
+                hits[t].fetch_add(1, Ordering::Relaxed);
+            });
+            for (t, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "threads={threads} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_epochs() {
+        let pool = WorkerPool::new(4);
+        let total = AtomicU64::new(0);
+        for _ in 0..50 {
+            pool.run(|t| {
+                total.fetch_add(t as u64 + 1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 50 * (1 + 2 + 3 + 4));
+    }
+
+    #[test]
+    fn jobs_can_borrow_caller_state() {
+        let pool = WorkerPool::new(3);
+        let data = vec![1u64, 2, 3];
+        let out: Vec<AtomicU64> = (0..3).map(|_| AtomicU64::new(0)).collect();
+        pool.run(|t| {
+            out[t].store(data[t] * 10, Ordering::Relaxed);
+        });
+        let got: Vec<u64> = out.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        assert_eq!(got, vec![10, 20, 30]);
+    }
+
+    /// The satellite guarantee: for the same per-worker closure, a pool
+    /// epoch computes bit-identical results to the `thread::scope` baseline
+    /// it replaced — across multiple epochs, including at `threads = 1`.
+    #[test]
+    fn pool_epochs_match_thread_scope_baseline() {
+        use crate::rng::Rng;
+
+        // Deterministic per-(epoch, worker) workload: a short chaotic f32
+        // recurrence seeded from a forked RNG, exactly how engines derive
+        // worker streams.
+        fn workload(epoch: u64, t: usize) -> Vec<f32> {
+            let mut rng = Rng::new(0xBEEF).fork(epoch).fork(t as u64);
+            let mut xs: Vec<f32> = (0..64).map(|_| rng.f32_range(0.1, 0.9)).collect();
+            for _ in 0..100 {
+                for k in 0..xs.len() {
+                    xs[k] = 3.7 * xs[k] * (1.0 - xs[k]);
+                }
+            }
+            xs
+        }
+
+        for threads in [1usize, 4] {
+            let scope_out: Vec<Mutex<Vec<f32>>> =
+                (0..threads).map(|_| Mutex::new(Vec::new())).collect();
+            let pool_out: Vec<Mutex<Vec<f32>>> =
+                (0..threads).map(|_| Mutex::new(Vec::new())).collect();
+            let pool = WorkerPool::new(threads);
+            for epoch in 1..=3u64 {
+                std::thread::scope(|scope| {
+                    for (t, slot) in scope_out.iter().enumerate() {
+                        scope.spawn(move || {
+                            slot.lock().unwrap().extend(workload(epoch, t));
+                        });
+                    }
+                });
+                pool.run(|t| {
+                    pool_out[t].lock().unwrap().extend(workload(epoch, t));
+                });
+            }
+            for t in 0..threads {
+                let a = scope_out[t].lock().unwrap();
+                let b = pool_out[t].lock().unwrap();
+                assert_eq!(*a, *b, "threads={threads} worker={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(|t| {
+                if t == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must propagate to the leader");
+        // The pool is still usable afterwards.
+        let count = AtomicU64::new(0);
+        pool.run(|_| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn backoff_escalates_and_resets() {
+        let mut b = Backoff::new();
+        let t = std::time::Instant::now();
+        for _ in 0..16 {
+            b.wait();
+        }
+        // Escalation stays bounded: 16 steps include sleeps but far below a
+        // second in total.
+        assert!(t.elapsed() < std::time::Duration::from_secs(1));
+        assert!(b.step > 0);
+        b.reset();
+        assert_eq!(b.step, 0);
+    }
+}

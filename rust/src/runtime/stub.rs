@@ -10,6 +10,12 @@
 //! path stays available through the native backend in
 //! [`crate::coordinator::service`].
 
+// The persistent worker pool is runtime infrastructure shared by every
+// engine; it has no XLA dependency, so both the real runtime and this stub
+// expose the same module.
+#[path = "pool.rs"]
+pub mod pool;
+
 use crate::model::Factors;
 use crate::sparse::CooMatrix;
 use crate::Result;

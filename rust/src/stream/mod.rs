@@ -60,6 +60,9 @@ pub struct StreamConfig {
     pub hyper: Hyper,
     /// Update rule for window sweeps (fold-in is always one-sided NAG).
     pub rule: Rule,
+    /// Update-kernel selection for window sweeps (SIMD auto-dispatch vs
+    /// forced scalar; `A2PSGD_KERNEL=scalar` overrides).
+    pub kernel: crate::optim::kernel::KernelChoice,
     /// RNG seed (new-row init, window shuffling, scheduling).
     pub seed: u64,
 }
@@ -79,6 +82,7 @@ impl StreamConfig {
             threads: crate::engine::default_threads(),
             hyper: crate::config::presets::hyper_for(crate::engine::EngineKind::A2psgd, dataset_name),
             rule: Rule::Nag,
+            kernel: crate::optim::kernel::KernelChoice::Auto,
             seed: 0x5EED,
         }
     }
@@ -122,6 +126,12 @@ impl StreamConfig {
     /// Builder: seed.
     pub fn seed(mut self, s: u64) -> Self {
         self.seed = s;
+        self
+    }
+
+    /// Builder: update-kernel selection policy.
+    pub fn kernel(mut self, k: crate::optim::kernel::KernelChoice) -> Self {
+        self.kernel = k;
         self
     }
 

@@ -28,7 +28,9 @@ use crate::coordinator::service::ExclusionSet;
 use crate::data::loader::IdMap;
 use crate::metrics::RollingHoldout;
 use crate::model::{Factors, SharedFactors, SnapshotStore};
+use crate::optim::kernel::KernelSet;
 use crate::partition::{build_grid, PartitionKind};
+use crate::runtime::pool::{Backoff, WorkerPool};
 use crate::scheduler::{BlockScheduler, LockFreeScheduler};
 use crate::sparse::{CooMatrix, Entry, SweepLanes};
 use crate::Result;
@@ -71,6 +73,8 @@ pub struct OnlineTrainer {
     stats: OnlineStats,
     event_seq: u64,
     exclusions: Option<Arc<ExclusionSet>>,
+    kernels: KernelSet,
+    pool: WorkerPool,
 }
 
 impl OnlineTrainer {
@@ -96,9 +100,11 @@ impl OnlineTrainer {
         let midpoint = 0.5 * (rating.0 + rating.1);
         let init_scale = Factors::default_scale(midpoint as f64, factors.d());
         let rng = crate::rng::Rng::new(cfg.seed ^ 0x0A71E5);
+        let kernels = KernelSet::select(factors.d(), cfg.kernel);
         Ok(OnlineTrainer {
             holdout: RollingHoldout::new(cfg.holdout_cap),
             window: VecDeque::with_capacity(cfg.window.min(1 << 16)),
+            pool: WorkerPool::new(cfg.threads),
             cfg,
             factors,
             map,
@@ -109,6 +115,7 @@ impl OnlineTrainer {
             stats: OnlineStats::default(),
             event_seq: 0,
             exclusions: None,
+            kernels,
         })
     }
 
@@ -199,8 +206,9 @@ impl OnlineTrainer {
     }
 
     /// Below this many window entries the serial path wins: the parallel
-    /// path pays a window copy, a grid build, and `threads` thread
-    /// spawns/joins per ingested batch, which only amortizes once the
+    /// path pays a window copy and a grid build per ingested batch (the
+    /// worker threads themselves are persistent — parked in the pool
+    /// between batches), which only amortizes once the
     /// O(window · passes · D) update work dwarfs it.
     const PARALLEL_WINDOW_MIN: usize = 2048;
 
@@ -214,13 +222,15 @@ impl OnlineTrainer {
             // Serial fast path: no grid build, deterministic order.
             let h = self.cfg.hyper;
             let rule = self.cfg.rule;
+            let kernels = self.kernels;
             let d = self.factors.d();
             let f = &mut self.factors;
             for _ in 0..passes {
                 for e in &self.window {
                     let (ui, vi) = (e.u as usize * d, e.v as usize * d);
                     let (m, n, phi, psi) = (&mut f.m, &mut f.n, &mut f.phi, &mut f.psi);
-                    rule.apply(
+                    kernels.apply(
+                        rule,
                         &mut m[ui..ui + d],
                         &mut n[vi..vi + d],
                         &mut phi[ui..ui + d],
@@ -235,7 +245,8 @@ impl OnlineTrainer {
         }
         // Parallel path: balanced grid over the window + work-aware
         // lock-free scheduler, the same machinery as the offline A²PSGD
-        // engine (block-local CSR lanes, deficit-biased block selection).
+        // engine (block-local CSR lanes, deficit-biased block selection),
+        // run on the trainer's persistent worker pool.
         let entries: Vec<Entry> = self.window.iter().copied().collect();
         let coo = CooMatrix::from_entries(self.factors.nrows(), self.factors.ncols(), entries)
             .expect("window entries are dense-id validated");
@@ -244,38 +255,34 @@ impl OnlineTrainer {
         let quota = coo.nnz() as u64 * passes as u64;
         let hyper = self.cfg.hyper;
         let rule = self.cfg.rule;
+        let kernels = self.kernels;
         let placeholder = Factors::from_parts(0, 0, self.factors.d(), vec![], vec![], vec![], vec![])
             .expect("placeholder factors");
         let shared = SharedFactors::new(std::mem::replace(&mut self.factors, placeholder));
         let done = AtomicU64::new(0);
-        let mut base = self.rng.fork(self.stats.batches);
-        std::thread::scope(|scope| {
-            for t in 0..self.cfg.threads {
-                let done = &done;
-                let shared = &shared;
-                let grid = &grid;
-                let sched = &sched;
-                let mut rng = base.fork(t as u64);
-                scope.spawn(move || loop {
-                    if done.load(Ordering::Relaxed) >= quota {
-                        return;
-                    }
-                    let Some(claim) = sched.acquire(&mut rng) else {
-                        std::hint::spin_loop();
-                        std::thread::yield_now();
-                        continue;
-                    };
-                    let n = grid.block(claim.i, claim.j).sweep(|u, v, r| {
-                        // SAFETY: the scheduler guarantees no concurrent
-                        // claim shares this row or column block, so the rows
-                        // touched here are exclusively ours (the same
-                        // contract as the offline block engines).
-                        let (mu, nv, phiu, psiv) = unsafe { shared.rows_mut(u, v) };
-                        rule.apply(mu, nv, phiu, psiv, r, &hyper);
-                    });
-                    done.fetch_add(n, Ordering::Relaxed);
-                    sched.release_processed(claim, n);
+        let base = self.rng.fork(self.stats.batches);
+        self.pool.run(|t| {
+            let mut rng = base.clone().fork(t as u64);
+            let mut backoff = Backoff::new();
+            loop {
+                if done.load(Ordering::Relaxed) >= quota {
+                    return;
+                }
+                let Some(claim) = sched.acquire(&mut rng) else {
+                    backoff.wait();
+                    continue;
+                };
+                backoff.reset();
+                let n = grid.block(claim.i, claim.j).sweep(|u, v, r| {
+                    // SAFETY: the scheduler guarantees no concurrent
+                    // claim shares this row or column block, so the rows
+                    // touched here are exclusively ours (the same
+                    // contract as the offline block engines).
+                    let (mu, nv, phiu, psiv) = unsafe { shared.rows_mut(u, v) };
+                    kernels.apply(rule, mu, nv, phiu, psiv, r, &hyper);
                 });
+                done.fetch_add(n, Ordering::Relaxed);
+                sched.release_processed(claim, n);
             }
         });
         self.factors = shared.into_inner();

@@ -298,3 +298,46 @@ fn persistence_roundtrip_restores_serving_state() {
     std::fs::remove_file(&ckpt).ok();
     std::fs::remove_file(&map_path).ok();
 }
+
+/// Satellite: `predict_many` submits the whole pair list as one enqueued
+/// batch — answers match per-pair `predict` exactly (same snapshot math),
+/// arrive in submission order, cross the backend batch boundary, and fill
+/// full backend batches instead of whatever a drain window would cut.
+#[test]
+fn predict_many_batches_in_one_submission() {
+    let f = factors(6, 40, 40);
+    let reference = f.clone();
+    let (_store, svc) = native_service(f, Duration::from_millis(1), None);
+    let client = svc.client();
+    // 150 pairs → ⌈150/64⌉ = 3 native chunks; ids range past the factor
+    // shape so unknown nodes (≥ 40) are answered with the midpoint.
+    let pairs: Vec<(u32, u32)> = (0..150u32).map(|i| (i % 45, (i * 7) % 45)).collect();
+    let preds = client.predict_many(&pairs).unwrap();
+    assert_eq!(preds.len(), pairs.len());
+    for (k, &(u, v)) in pairs.iter().enumerate() {
+        let want = if u < 40 && v < 40 {
+            reference.predict_clamped(u, v, 1.0, 5.0)
+        } else {
+            3.0
+        };
+        assert!(
+            (preds[k] - want).abs() < 1e-6,
+            "pair {k} ({u},{v}): {} vs {want}",
+            preds[k]
+        );
+    }
+    drop(client);
+    let stats = svc.shutdown();
+    assert_eq!(stats.served, 150);
+    assert_eq!(stats.batches, 3, "one submission → ⌈150/64⌉ backend batches");
+    assert_eq!(stats.occupancy_sum, 150);
+
+    // Empty submissions are a no-op, not a wedge.
+    let f2 = factors(7, 4, 4);
+    let (_store2, svc2) = native_service(f2, Duration::from_millis(1), None);
+    let c2 = svc2.client();
+    assert!(c2.predict_many(&[]).unwrap().is_empty());
+    drop(c2);
+    let s2 = svc2.shutdown();
+    assert_eq!(s2.batches, 0);
+}
