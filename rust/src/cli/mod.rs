@@ -13,6 +13,8 @@
 //!                [--epochs N] [--config FILE] [--save PATH] [--native]
 //! a2psgd bench   [--dataset D] [--iters N] [--warmup N] [--threads N]
 //!                [--d D] [--seed S] [--config FILE] [--out FILE]
+//! a2psgd pack    (--data-file PATH | --dataset D) --out DIR
+//!                [--shard-mb N] [--seed S] [--config FILE]
 //! a2psgd gen-data --dataset D --out FILE [--seed S]
 //! a2psgd print-config [--dataset D]
 //! a2psgd eval    --data-file PATH (reserved)
@@ -110,17 +112,27 @@ USAGE:
   a2psgd stream       warm-train, then stream live events: fold-in, online
                       NAG updates, and zero-downtime factor hot-swap
   a2psgd bench        hot-path benchmark pipeline: update-kernel micro,
-                      scalar-vs-SIMD kernel A/B across ranks, layout A/B
-                      (COO vs block-CSR sweep), per-engine epoch macro,
-                      scheduler fairness, and the pool-vs-scope epoch
-                      overhead micro — emits BENCH_hotpath.json at the repo
-                      root (override with --out)
+                      scalar-vs-SIMD kernel A/B across ranks, text-vs-shard
+                      ingest A/B, layout A/B (COO vs block-CSR sweep),
+                      per-engine epoch macro, scheduler fairness, and the
+                      pool-vs-scope epoch overhead micro — emits
+                      BENCH_hotpath.json at the repo root (--out overrides)
+  a2psgd pack         convert a ratings file (or builtin dataset) into a
+                      packed .a2ps shard directory: versioned binary shards
+                      split by row range, embedded id map, CRC per shard —
+                      shard directories then train out-of-core (block
+                      engines) or materialize for the others
   a2psgd gen-data     write a synthetic dataset to a ratings file
   a2psgd print-config print the paper's hyperparameter tables (I/II)
   a2psgd help         this text
 
 COMMON FLAGS:
   --dataset small|medium|ml1m|epinions|<path>   (default: small)
+                   a <path> may be a ratings text file or a packed .a2ps
+                   shard directory; shard dirs train out-of-core on the
+                   block engines (fpsgd, a2psgd) and materialize otherwise
+  --format auto|text|shards   assert how `train` interprets the dataset
+                   path (mismatch is an error; other commands auto-detect)
   --engine  seq|hogwild|dsgd|asgd|fpsgd|a2psgd|xla
   --threads N      worker threads (default: hardware, capped 32)
   --epochs N       max epochs
@@ -141,6 +153,12 @@ BENCH FLAGS:
   --iters N          measured iterations / macro epochs (default: 3)
   --warmup N         unmeasured warmup iterations (default: 1)
   --out FILE         JSON artifact path (default: <repo root>/BENCH_hotpath.json)
+
+PACK FLAGS:
+  --data-file PATH   input ratings text file (or --dataset for a builtin)
+  --out DIR          shard directory to create (required)
+  --shard-mb N       target shard payload size in MiB (default: 64, or
+                     `[data] shard_mb` from --config)
 
 STREAM FLAGS:
   --warm-frac F      fraction of users trained offline, rest streamed (0.8)

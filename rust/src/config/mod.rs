@@ -128,6 +128,86 @@ impl RunConfig {
     }
 }
 
+/// How a `--data-file`/`--dataset` path should be interpreted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataFormat {
+    /// Detect: a directory with a `manifest.a2ps` is a shard directory,
+    /// anything else is a text ratings file.
+    Auto,
+    /// Force text parsing.
+    Text,
+    /// Force shard-directory ingestion.
+    Shards,
+}
+
+impl DataFormat {
+    /// Parse a CLI/TOML name.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "auto" => DataFormat::Auto,
+            "text" => DataFormat::Text,
+            "shards" | "a2ps" => DataFormat::Shards,
+            other => anyhow::bail!("unknown data format {other:?} (auto | text | shards)"),
+        })
+    }
+}
+
+/// `[data]` section: dataset format handling and shard-pipeline knobs.
+///
+/// ```toml
+/// [data]
+/// format = "auto"      # auto | text | shards — how dataset paths are read
+/// shard_mb = 64        # target shard payload size for `a2psgd pack`
+/// chunk_kb = 768       # ingest read-buffer bound (out-of-core chunking)
+/// ```
+#[derive(Clone, Copy, Debug)]
+pub struct DataConfig {
+    /// Path interpretation policy.
+    pub format: DataFormat,
+    /// Target shard payload MiB for `pack`.
+    pub shard_mb: usize,
+    /// Read-buffer bound in KiB for chunked shard ingestion.
+    pub chunk_kb: usize,
+}
+
+impl Default for DataConfig {
+    fn default() -> Self {
+        DataConfig { format: DataFormat::Auto, shard_mb: 64, chunk_kb: 768 }
+    }
+}
+
+impl DataConfig {
+    /// Apply `[data]` overrides from TOML-subset text.
+    pub fn apply_toml(mut self, text: &str) -> Result<Self> {
+        let doc = parse(text)?;
+        if let Some(v) = doc.get("data", "format") {
+            self.format = DataFormat::parse(v.as_str().context("data.format must be a string")?)?;
+        }
+        let int = |k: &str| -> Result<Option<i64>> {
+            match doc.get("data", k) {
+                None => Ok(None),
+                Some(v) => {
+                    let x = v.as_int().with_context(|| format!("data.{k} must be an int"))?;
+                    anyhow::ensure!(x >= 1, "data.{k} must be >= 1, got {x}");
+                    Ok(Some(x))
+                }
+            }
+        };
+        if let Some(x) = int("shard_mb")? {
+            self.shard_mb = x as usize;
+        }
+        if let Some(x) = int("chunk_kb")? {
+            self.chunk_kb = x as usize;
+        }
+        Ok(self)
+    }
+
+    /// Records per ingest chunk derived from `chunk_kb`.
+    pub fn chunk_records(&self) -> usize {
+        ((self.chunk_kb.max(1) * 1024) / crate::data::shard::RECORD_LEN).max(1)
+    }
+}
+
 /// Configuration for the `a2psgd bench` hot-path pipeline (the run that
 /// emits `BENCH_hotpath.json`). Loadable from a `[bench]` TOML section;
 /// CLI flags override.
@@ -353,6 +433,27 @@ lam = 3e-2
         assert!(RunConfig::from_toml("[run]\nkernel = \"gpu\"\n").is_err());
         let c = RunConfig::from_toml("[run]\nkernel = \"auto\"\n").unwrap();
         assert_eq!(c.kernel, Some(crate::optim::kernel::KernelChoice::Auto));
+    }
+
+    #[test]
+    fn data_config_overrides_applied() {
+        let dc = DataConfig::default()
+            .apply_toml("[data]\nformat = \"shards\"\nshard_mb = 128\nchunk_kb = 256\n")
+            .unwrap();
+        assert_eq!(dc.format, DataFormat::Shards);
+        assert_eq!(dc.shard_mb, 128);
+        assert_eq!(dc.chunk_kb, 256);
+        assert_eq!(dc.chunk_records(), 256 * 1024 / 12);
+    }
+
+    #[test]
+    fn data_config_rejects_invalid_values() {
+        assert!(DataConfig::default().apply_toml("[data]\nformat = \"xml\"\n").is_err());
+        assert!(DataConfig::default().apply_toml("[data]\nshard_mb = 0\n").is_err());
+        assert!(DataConfig::default().apply_toml("[data]\nchunk_kb = -5\n").is_err());
+        // Other sections are ignored.
+        let dc = DataConfig::default().apply_toml("[bench]\nthreads = 4\n").unwrap();
+        assert_eq!(dc.shard_mb, 64);
     }
 
     #[test]

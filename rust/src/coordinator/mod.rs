@@ -12,15 +12,25 @@ use crate::Result;
 use anyhow::Context;
 use std::path::Path;
 
-/// Resolve a dataset key (`small`/`medium`/`ml1m`/`epinions`) or file path.
+/// Resolve a dataset key (`small`/`medium`/`ml1m`/`epinions`), a ratings
+/// file path, or a packed `.a2ps` shard directory.
 pub fn resolve_dataset(key: &str, seed: u64) -> Result<Dataset> {
     Ok(match key {
         "small" => synthetic::small(seed),
         "medium" => synthetic::medium(seed),
         "ml1m" | "ml1m-twin" => synthetic::movielens_like(seed),
         "epinions" | "epinions-twin" => synthetic::epinions_like(seed),
-        path => crate::data::loader::load_file(Path::new(path), path, 0.3, seed)
-            .with_context(|| format!("{key:?} is not a dataset key; tried loading as file"))?,
+        path => {
+            let p = Path::new(path);
+            if crate::data::shard::is_shard_dir(p) {
+                let mut src = crate::data::ingest::ShardDirSource::open(p)?;
+                crate::data::ingest::materialize(&mut src, path, 0.3, seed)
+                    .with_context(|| format!("loading shard directory {path}"))?
+            } else {
+                crate::data::loader::load_file(p, path, 0.3, seed)
+                    .with_context(|| format!("{key:?} is not a dataset key; tried loading as file"))?
+            }
+        }
     })
 }
 

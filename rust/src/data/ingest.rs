@@ -1,0 +1,541 @@
+//! The dataset ingestion layer: one trait every dataset entry point routes
+//! through, with an in-memory and an out-of-core implementation.
+//!
+//! [`EntrySource`] abstracts "a rewindable stream of dense-id entries in
+//! canonical order, delivered in bounded chunks". Two implementations:
+//!
+//! - [`CooSource`] — an in-memory [`CooMatrix`] (what the text loader and
+//!   the synthetic twins produce);
+//! - [`ShardDirSource`] — a packed `.a2ps` shard directory
+//!   ([`crate::data::shard`]), streamed shard by shard through a bounded
+//!   read buffer; the full dataset is never resident.
+//!
+//! On top of the trait:
+//!
+//! - [`materialize`] builds a split in-memory [`Dataset`] from any source
+//!   (the path `resolve_dataset` takes for shard directories, and the text
+//!   loader's finishing step — both produce byte-identical datasets for the
+//!   same underlying records);
+//! - [`split_scan`] computes the training-side statistics (dims, rating
+//!   range, train mean, marginal counts) and collects the test set in one
+//!   sequential pass — everything grid construction and factor init need,
+//!   without materializing the training entries;
+//! - [`ingest_ooc`] is the out-of-core ingest: stats pass, then a parallel
+//!   shard decode on the [`WorkerPool`] into per-shard block buckets that
+//!   merge (in shard order) straight into [`BlockCsr`] lanes. Because every
+//!   dense row lives in exactly one shard and [`BlockCsr::finalize`]
+//!   counting-sorts per local row preserving insertion order, the resulting
+//!   grid is bit-identical to the in-memory `build_grid` path no matter how
+//!   the parallel decode interleaves.
+
+use crate::data::shard::{open_checked, Manifest, DEFAULT_CHUNK};
+use crate::data::{split, Dataset};
+use crate::partition::{bounds_for, build_assignment, BlockGrid, PartitionKind};
+use crate::runtime::pool::WorkerPool;
+use crate::sparse::{BlockCsr, CooMatrix, Entry};
+use crate::Result;
+use anyhow::{ensure, Context};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A rewindable, chunked stream of dense-id instances in canonical order.
+pub trait EntrySource {
+    /// `(nrows, ncols)` of the full matrix.
+    fn dims(&self) -> (u32, u32);
+
+    /// Total instances a full scan will deliver.
+    fn nnz(&self) -> u64;
+
+    /// Run one full pass, feeding bounded chunks to `sink` in canonical
+    /// order. May be called repeatedly; every pass delivers the same
+    /// entries in the same order.
+    fn scan(&mut self, sink: &mut dyn FnMut(&[Entry]) -> Result<()>) -> Result<()>;
+}
+
+/// In-memory [`EntrySource`] over a [`CooMatrix`].
+pub struct CooSource<'a> {
+    coo: &'a CooMatrix,
+    chunk: usize,
+}
+
+impl<'a> CooSource<'a> {
+    /// Source over `coo` with the default chunk size.
+    pub fn new(coo: &'a CooMatrix) -> Self {
+        CooSource { coo, chunk: DEFAULT_CHUNK }
+    }
+
+    /// Override the chunk size (tests exercise small chunks).
+    pub fn with_chunk(coo: &'a CooMatrix, chunk: usize) -> Self {
+        CooSource { coo, chunk: chunk.max(1) }
+    }
+}
+
+impl EntrySource for CooSource<'_> {
+    fn dims(&self) -> (u32, u32) {
+        (self.coo.nrows(), self.coo.ncols())
+    }
+
+    fn nnz(&self) -> u64 {
+        self.coo.nnz() as u64
+    }
+
+    fn scan(&mut self, sink: &mut dyn FnMut(&[Entry]) -> Result<()>) -> Result<()> {
+        for chunk in self.coo.entries().chunks(self.chunk) {
+            sink(chunk)?;
+        }
+        Ok(())
+    }
+}
+
+/// Out-of-core [`EntrySource`] over a packed `.a2ps` shard directory.
+pub struct ShardDirSource {
+    dir: PathBuf,
+    manifest: Manifest,
+    chunk: usize,
+}
+
+impl ShardDirSource {
+    /// Open a shard directory (loads + validates the manifest).
+    pub fn open(dir: &Path) -> Result<Self> {
+        Self::with_chunk(dir, DEFAULT_CHUNK)
+    }
+
+    /// Open with an explicit records-per-chunk read buffer bound.
+    pub fn with_chunk(dir: &Path, chunk: usize) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        Ok(ShardDirSource {
+            dir: dir.to_path_buf(),
+            manifest,
+            chunk: chunk.max(1),
+        })
+    }
+
+    /// The validated manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// The embedded external↔dense id map.
+    pub fn idmap(&self) -> Result<crate::data::loader::IdMap> {
+        crate::data::shard::load_idmap(&self.dir)
+    }
+}
+
+impl EntrySource for ShardDirSource {
+    fn dims(&self) -> (u32, u32) {
+        (self.manifest.nrows, self.manifest.ncols)
+    }
+
+    fn nnz(&self) -> u64 {
+        self.manifest.nnz
+    }
+
+    fn scan(&mut self, sink: &mut dyn FnMut(&[Entry]) -> Result<()>) -> Result<()> {
+        let mut buf: Vec<Entry> = Vec::new();
+        for meta in &self.manifest.shards {
+            let mut reader = open_checked(&self.dir, &self.manifest, meta)?;
+            loop {
+                let n = reader.next_chunk(&mut buf, self.chunk)?;
+                if n == 0 {
+                    break;
+                }
+                sink(&buf)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Build a split in-memory [`Dataset`] from any source. For the same
+/// underlying records this produces the identical dataset whether the
+/// source is a text-loaded COO or a shard directory (hash split, canonical
+/// order).
+pub fn materialize(
+    src: &mut dyn EntrySource,
+    name: &str,
+    test_frac: f64,
+    seed: u64,
+) -> Result<Dataset> {
+    let (nrows, ncols) = src.dims();
+    let mut train = CooMatrix::new(nrows, ncols);
+    let mut test = CooMatrix::new(nrows, ncols);
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    src.scan(&mut |chunk| {
+        for e in chunk {
+            lo = lo.min(e.r);
+            hi = hi.max(e.r);
+            if split::hash_is_test(e.u, e.v, seed, test_frac) {
+                test.push(e.u, e.v, e.r)?;
+            } else {
+                train.push(e.u, e.v, e.r)?;
+            }
+        }
+        Ok(())
+    })?;
+    ensure!(train.nnz() + test.nnz() > 0, "{name}: source delivered no instances");
+    Ok(Dataset {
+        name: name.to_string(),
+        train,
+        test,
+        rating_min: lo,
+        rating_max: hi,
+    })
+}
+
+/// Training-side statistics of one sequential split pass (everything grid
+/// construction and factor init need), plus the collected test set.
+///
+/// The pass is deliberately sequential and in canonical order so the f64
+/// mean accumulation is bit-identical to
+/// [`CooMatrix::mean_rating`] over the equivalent in-memory training matrix.
+pub struct SplitScan {
+    /// Full-matrix rows.
+    pub nrows: u32,
+    /// Full-matrix columns.
+    pub ncols: u32,
+    /// Training instances.
+    pub train_nnz: u64,
+    /// Mean training rating (0 if no training instances).
+    pub train_mean: f64,
+    /// Min rating over *all* instances (train + test).
+    pub rating_min: f32,
+    /// Max rating over all instances.
+    pub rating_max: f32,
+    /// Training instances per row.
+    pub train_row_counts: Vec<u32>,
+    /// Training instances per column.
+    pub train_col_counts: Vec<u32>,
+    /// The held-out test set (materialized — it is the small fraction).
+    pub test: CooMatrix,
+}
+
+/// Run the sequential stats + split pass over a source.
+pub fn split_scan(src: &mut dyn EntrySource, test_frac: f64, seed: u64) -> Result<SplitScan> {
+    let (nrows, ncols) = src.dims();
+    let mut test = CooMatrix::new(nrows, ncols);
+    let mut row_counts = vec![0u32; nrows as usize];
+    let mut col_counts = vec![0u32; ncols as usize];
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    let mut train_nnz = 0u64;
+    let mut sum = 0f64;
+    src.scan(&mut |chunk| {
+        for e in chunk {
+            lo = lo.min(e.r);
+            hi = hi.max(e.r);
+            if split::hash_is_test(e.u, e.v, seed, test_frac) {
+                test.push(e.u, e.v, e.r)?;
+            } else {
+                train_nnz += 1;
+                sum += e.r as f64;
+                row_counts[e.u as usize] += 1;
+                col_counts[e.v as usize] += 1;
+            }
+        }
+        Ok(())
+    })?;
+    Ok(SplitScan {
+        nrows,
+        ncols,
+        train_nnz,
+        train_mean: if train_nnz > 0 { sum / train_nnz as f64 } else { 0.0 },
+        rating_min: lo,
+        rating_max: hi,
+        train_row_counts: row_counts,
+        train_col_counts: col_counts,
+        test,
+    })
+}
+
+/// Result of an out-of-core ingest: the training grid plus everything the
+/// epoch driver needs, without a monolithic training COO ever existing.
+pub struct OocIngest {
+    /// The block grid ready for a block-scheduled engine.
+    pub grid: BlockGrid,
+    /// Full-matrix rows.
+    pub nrows: u32,
+    /// Full-matrix columns.
+    pub ncols: u32,
+    /// Training instances (the epoch quota).
+    pub train_nnz: u64,
+    /// Mean training rating (factor-init scale).
+    pub train_mean: f64,
+    /// Min rating over all instances.
+    pub rating_min: f32,
+    /// Max rating over all instances.
+    pub rating_max: f32,
+    /// The held-out test set.
+    pub test: CooMatrix,
+}
+
+/// Out-of-core ingest of a shard directory for block-scheduled training.
+///
+/// Pass 1 (sequential, bounded buffer): stats + split + test collection.
+/// Pass 2 (parallel on a [`WorkerPool`], in waves of one shard per worker,
+/// each streaming through its own bounded buffer): decode shards into
+/// per-shard block buckets; after each wave the buckets merge into
+/// [`BlockCsr`] lanes in shard order and are freed — deterministic and
+/// bit-identical to the in-memory `build_grid` path (see the module docs
+/// for why).
+///
+/// Peak *ingest* memory is the bounded read buffers plus one in-flight
+/// wave of decoded shards (≈ `threads × shard size`) on top of the
+/// incrementally assembled grid (the training working set) — never the
+/// text, never a monolithic COO vector.
+pub fn ingest_ooc(
+    dir: &Path,
+    kind: PartitionKind,
+    threads: usize,
+    test_frac: f64,
+    seed: u64,
+    chunk: usize,
+) -> Result<OocIngest> {
+    let mut src = ShardDirSource::with_chunk(dir, chunk)?;
+    let scan = split_scan(&mut src, test_frac, seed)?;
+    ensure!(scan.train_nnz > 0, "{}: no training instances after split", dir.display());
+
+    let nblocks = threads.max(1) + 1;
+    let row_bounds = bounds_for(kind, &scan.train_row_counts, nblocks);
+    let col_bounds = bounds_for(kind, &scan.train_col_counts, nblocks);
+    let row_of = build_assignment(&row_bounds, scan.nrows);
+    let col_of = build_assignment(&col_bounds, scan.ncols);
+
+    // Parallel decode in waves of one shard per worker: a wave decodes
+    // concurrently (each shard into its own bucket set — workers never
+    // share mutable state beyond their own slot), then the leader merges
+    // the wave into the grid *in shard order* and frees the buckets. Bucket
+    // residency is therefore bounded by one wave (≈ threads × shard size),
+    // not the dataset; the grid itself grows incrementally.
+    let manifest = src.manifest();
+    let nshards = manifest.shards.len();
+    let dir_buf = dir.to_path_buf();
+    type Buckets = Vec<Vec<Entry>>;
+    let pool = WorkerPool::new(threads.min(nshards.max(1)));
+    let nworkers = pool.threads();
+
+    let mut blocks: Vec<BlockCsr> = Vec::with_capacity(nblocks * nblocks);
+    for i in 0..nblocks {
+        for j in 0..nblocks {
+            blocks.push(BlockCsr::with_capacity(
+                row_bounds[i],
+                row_bounds[i + 1] - row_bounds[i],
+                col_bounds[j],
+                col_bounds[j + 1] - col_bounds[j],
+                0,
+            ));
+        }
+    }
+    let mut wave_start = 0usize;
+    while wave_start < nshards {
+        let wave_len = nworkers.min(nshards - wave_start);
+        let slots: Vec<Mutex<Result<Buckets>>> =
+            (0..wave_len).map(|_| Mutex::new(Ok(Vec::new()))).collect();
+        pool.run(|t| {
+            if t >= wave_len {
+                return;
+            }
+            let res = decode_shard(
+                &dir_buf,
+                manifest,
+                wave_start + t,
+                nblocks,
+                &row_of,
+                &col_of,
+                chunk,
+                seed,
+                test_frac,
+            );
+            *slots[t].lock().unwrap_or_else(std::sync::PoisonError::into_inner) = res;
+        });
+        for (t, slot) in slots.into_iter().enumerate() {
+            let buckets = slot
+                .into_inner()
+                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                .with_context(|| format!("decoding shard {}", wave_start + t))?;
+            for (k, bucket) in buckets.into_iter().enumerate() {
+                for e in bucket {
+                    blocks[k].push(e.u, e.v, e.r);
+                }
+            }
+        }
+        wave_start += wave_len;
+    }
+    drop(pool);
+
+    let mut scattered = 0u64;
+    for b in &mut blocks {
+        scattered += b.len() as u64;
+        b.finalize();
+    }
+    ensure!(
+        scattered == scan.train_nnz,
+        "shard scatter lost instances: {scattered} of {}",
+        scan.train_nnz
+    );
+    let grid = BlockGrid::from_block_parts(row_bounds, col_bounds, blocks);
+
+    Ok(OocIngest {
+        grid,
+        nrows: scan.nrows,
+        ncols: scan.ncols,
+        train_nnz: scan.train_nnz,
+        train_mean: scan.train_mean,
+        rating_min: scan.rating_min,
+        rating_max: scan.rating_max,
+        test: scan.test,
+    })
+}
+
+/// Decode one shard into per-block buckets of its *training* entries
+/// (bounded chunk buffer; CRC verified by the reader on the final chunk).
+#[allow(clippy::too_many_arguments)]
+fn decode_shard(
+    dir: &Path,
+    manifest: &Manifest,
+    s: usize,
+    nblocks: usize,
+    row_of: &[u32],
+    col_of: &[u32],
+    chunk: usize,
+    seed: u64,
+    test_frac: f64,
+) -> Result<Vec<Vec<Entry>>> {
+    let meta = &manifest.shards[s];
+    let mut reader = open_checked(dir, manifest, meta)?;
+    let mut buckets: Vec<Vec<Entry>> = vec![Vec::new(); nblocks * nblocks];
+    let mut buf: Vec<Entry> = Vec::new();
+    loop {
+        let n = reader.next_chunk(&mut buf, chunk)?;
+        if n == 0 {
+            break;
+        }
+        for e in &buf {
+            if split::hash_is_test(e.u, e.v, seed, test_frac) {
+                continue;
+            }
+            let bi = row_of[e.u as usize] as usize;
+            let bj = col_of[e.v as usize] as usize;
+            buckets[bi * nblocks + bj].push(*e);
+        }
+    }
+    Ok(buckets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shard::{pack_coo, PackOptions};
+    use crate::data::synthetic;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("a2psgd_ingest_{tag}"));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// The raw (pre-split) COO of a synthetic twin, in canonical order —
+    /// what packing its train+test union produces after dedup.
+    fn canonical_union(seed: u64) -> CooMatrix {
+        let d = synthetic::small(seed);
+        let mut m = CooMatrix::new(d.nrows(), d.ncols());
+        for e in d.train.entries().iter().chain(d.test.entries()) {
+            m.push(e.u, e.v, e.r).unwrap();
+        }
+        m.dedup();
+        m
+    }
+
+    #[test]
+    fn coo_source_chunked_scan_delivers_everything() {
+        let coo = canonical_union(11);
+        let mut src = CooSource::with_chunk(&coo, 17);
+        assert_eq!(src.nnz(), coo.nnz() as u64);
+        let mut got = 0usize;
+        let mut chunks = 0usize;
+        src.scan(&mut |c| {
+            assert!(c.len() <= 17);
+            got += c.len();
+            chunks += 1;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(got, coo.nnz());
+        assert!(chunks > 1);
+    }
+
+    #[test]
+    fn shard_source_matches_coo_source() {
+        let coo = canonical_union(12);
+        let dir = tmpdir("src_eq");
+        pack_coo(&coo, &dir, &PackOptions { shard_bytes: 8 << 10 }).unwrap();
+        let mut src = ShardDirSource::with_chunk(&dir, 37).unwrap();
+        assert_eq!(src.dims(), (coo.nrows(), coo.ncols()));
+        let mut got: Vec<Entry> = Vec::new();
+        src.scan(&mut |c| {
+            got.extend_from_slice(c);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(got, coo.entries(), "shard scan must reproduce canonical order");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn materialize_equal_for_both_sources() {
+        let coo = canonical_union(13);
+        let dir = tmpdir("mat_eq");
+        pack_coo(&coo, &dir, &PackOptions { shard_bytes: 4 << 10 }).unwrap();
+        let a = materialize(&mut CooSource::new(&coo), "x", 0.3, 7).unwrap();
+        let b = materialize(&mut ShardDirSource::open(&dir).unwrap(), "x", 0.3, 7).unwrap();
+        assert_eq!(a.train.entries(), b.train.entries());
+        assert_eq!(a.test.entries(), b.test.entries());
+        assert_eq!(a.rating_min, b.rating_min);
+        assert_eq!(a.rating_max, b.rating_max);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn split_scan_matches_in_memory_split() {
+        let coo = canonical_union(14);
+        let (train, test) = split::hash_split(&coo, 0.3, 21);
+        let stats = split_scan(&mut CooSource::new(&coo), 0.3, 21).unwrap();
+        assert_eq!(stats.train_nnz, train.nnz() as u64);
+        assert_eq!(stats.test.entries(), test.entries());
+        assert_eq!(stats.train_row_counts, train.row_counts());
+        assert_eq!(stats.train_col_counts, train.col_counts());
+        assert_eq!(stats.train_mean, train.mean_rating(), "bit-identical mean");
+        let (lo, hi) = coo.rating_range();
+        assert_eq!((stats.rating_min, stats.rating_max), (lo, hi));
+    }
+
+    #[test]
+    fn ooc_grid_identical_to_in_memory_grid() {
+        let coo = canonical_union(15);
+        let dir = tmpdir("grid_eq");
+        // Tiny shards force a real multi-shard parallel merge.
+        pack_coo(&coo, &dir, &PackOptions { shard_bytes: 4 << 10 }).unwrap();
+        let (train, _) = split::hash_split(&coo, 0.3, 5);
+        for (kind, threads) in [
+            (PartitionKind::Balanced, 1usize),
+            (PartitionKind::Balanced, 4),
+            (PartitionKind::Uniform, 3),
+        ] {
+            let mem = crate::partition::build_grid(&train, kind, threads);
+            let ooc = ingest_ooc(&dir, kind, threads, 0.3, 5, 100).unwrap();
+            assert_eq!(ooc.train_nnz, train.nnz() as u64);
+            assert_eq!(mem.nblocks(), ooc.grid.nblocks());
+            assert_eq!(mem.row_bounds(), ooc.grid.row_bounds());
+            assert_eq!(mem.col_bounds(), ooc.grid.col_bounds());
+            for i in 0..mem.nblocks() {
+                for j in 0..mem.nblocks() {
+                    let (a, b) = (mem.block(i, j), ooc.grid.block(i, j));
+                    assert_eq!(a.lanes(), b.lanes(), "block ({i},{j}) lanes differ");
+                    assert_eq!(a.indptr(), b.indptr(), "block ({i},{j}) indptr differs");
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -7,12 +7,12 @@
 //! Drop the files anywhere and point `--data-file` at them; format is
 //! auto-detected from the first data line.
 
-use crate::data::{split::split_train_test, Dataset};
-use crate::rng::Rng;
-use crate::sparse::CooMatrix;
+use crate::data::Dataset;
+use crate::sparse::{CooMatrix, Entry};
 use crate::Result;
 use anyhow::{bail, Context};
 use std::collections::HashMap;
+use std::io::{BufRead, BufReader};
 use std::path::{Path, PathBuf};
 
 /// Bidirectional external↔dense id map built during re-indexing.
@@ -201,43 +201,83 @@ pub fn detect_format(line: &str) -> Option<Format> {
     }
 }
 
+/// Parse one raw data line: `Ok(None)` for blank/comment lines, the triplet
+/// otherwise. `format` is detected from the first data line and remembered
+/// across calls, so a streaming caller keeps one `Option<Format>` and feeds
+/// lines as they arrive.
+pub fn parse_data_line(
+    raw: &str,
+    format: &mut Option<Format>,
+    lineno: usize,
+) -> Result<Option<(u64, u64, f32)>> {
+    let line = raw.trim();
+    if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
+        return Ok(None);
+    }
+    let fmt = match *format {
+        Some(f) => f,
+        None => {
+            let f = detect_format(line)
+                .with_context(|| format!("unrecognized data line {lineno}: {line:?}"))?;
+            *format = Some(f);
+            f
+        }
+    };
+    let fields: Vec<&str> = match fmt {
+        Format::MovieLensDat => line.split("::").collect(),
+        Format::Tsv => line.split_whitespace().collect(),
+    };
+    if fields.len() < 3 {
+        bail!("line {lineno}: expected ≥3 fields, got {}", fields.len());
+    }
+    let u: u64 = fields[0]
+        .parse()
+        .with_context(|| format!("line {lineno}: bad user id {:?}", fields[0]))?;
+    let v: u64 = fields[1]
+        .parse()
+        .with_context(|| format!("line {lineno}: bad item id {:?}", fields[1]))?;
+    let r: f32 = fields[2]
+        .parse()
+        .with_context(|| format!("line {lineno}: bad rating {:?}", fields[2]))?;
+    Ok(Some((u, v, r)))
+}
+
 /// Parse raw `(user, item, rating)` triplets with original (sparse) ids.
 pub fn parse_triplets(text: &str) -> Result<Vec<(u64, u64, f32)>> {
     let mut out = Vec::new();
     let mut format: Option<Format> = None;
     for (lineno, line) in text.lines().enumerate() {
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
-            continue;
+        if let Some(t) = parse_data_line(line, &mut format, lineno + 1)? {
+            out.push(t);
         }
-        let fmt = match format {
-            Some(f) => f,
-            None => {
-                let f = detect_format(line)
-                    .with_context(|| format!("unrecognized data line {}: {line:?}", lineno + 1))?;
-                format = Some(f);
-                f
-            }
-        };
-        let fields: Vec<&str> = match fmt {
-            Format::MovieLensDat => line.split("::").collect(),
-            Format::Tsv => line.split_whitespace().collect(),
-        };
-        if fields.len() < 3 {
-            bail!("line {}: expected ≥3 fields, got {}", lineno + 1, fields.len());
-        }
-        let u: u64 = fields[0]
-            .parse()
-            .with_context(|| format!("line {}: bad user id {:?}", lineno + 1, fields[0]))?;
-        let v: u64 = fields[1]
-            .parse()
-            .with_context(|| format!("line {}: bad item id {:?}", lineno + 1, fields[1]))?;
-        let r: f32 = fields[2]
-            .parse()
-            .with_context(|| format!("line {}: bad rating {:?}", lineno + 1, fields[2]))?;
-        out.push((u, v, r));
     }
     Ok(out)
+}
+
+/// Stream a ratings file line by line — the file is never resident in RAM
+/// whole — feeding each `(user, item, rating)` triplet to `f` in file order.
+/// This is the pass primitive both the in-memory loader and `a2psgd pack`
+/// run on.
+pub fn scan_file(path: &Path, mut f: impl FnMut(u64, u64, f32) -> Result<()>) -> Result<()> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut reader = BufReader::new(file);
+    let mut line = String::new();
+    let mut format: Option<Format> = None;
+    let mut lineno = 0usize;
+    loop {
+        line.clear();
+        let n = reader
+            .read_line(&mut line)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if n == 0 {
+            return Ok(());
+        }
+        lineno += 1;
+        if let Some((u, v, r)) = parse_data_line(&line, &mut format, lineno)? {
+            f(u, v, r)?;
+        }
+    }
 }
 
 /// Re-index sparse ids to dense `[0, n)` and build a COO matrix, returning
@@ -263,33 +303,41 @@ pub fn triplets_to_coo(triplets: &[(u64, u64, f32)]) -> Result<CooMatrix> {
 }
 
 /// [`load_file`] that also returns the external↔dense [`IdMap`].
+///
+/// Streams the file line by line (no whole-file `read_to_string`), interns
+/// external ids in file order, drops duplicate `(row, col)` entries with a
+/// counted warning (keep-last), and splits train/test with the
+/// order-independent hash split — so a `pack`ed shard directory of the same
+/// file loads to an identical [`Dataset`].
 pub fn load_file_with_map(
     path: &Path,
     name: &str,
     test_frac: f64,
     seed: u64,
 ) -> Result<(Dataset, IdMap)> {
-    let text = std::fs::read_to_string(path)
-        .with_context(|| format!("reading {}", path.display()))?;
-    let triplets = parse_triplets(&text)?;
-    if triplets.is_empty() {
+    let mut map = IdMap::new();
+    let mut entries: Vec<Entry> = Vec::new();
+    scan_file(path, |u, v, r| {
+        let (du, _) = map.intern_user(u);
+        let (dv, _) = map.intern_item(v);
+        entries.push(Entry { u: du, v: dv, r });
+        Ok(())
+    })?;
+    if entries.is_empty() {
         bail!("{}: no data lines found", path.display());
     }
-    let (mut coo, map) = triplets_to_coo_with_map(&triplets)?;
-    coo.dedup();
-    let (lo, hi) = coo.rating_range();
-    let mut rng = Rng::new(seed);
-    let (train, test) = split_train_test(&coo, test_frac, &mut rng);
-    Ok((
-        Dataset {
-            name: name.to_string(),
-            train,
-            test,
-            rating_min: lo,
-            rating_max: hi,
-        },
-        map,
-    ))
+    let mut coo = CooMatrix::from_entries(map.n_users(), map.n_items(), entries)?;
+    let dups = coo.dedup();
+    if dups > 0 {
+        eprintln!(
+            "warning: {}: dropped {dups} duplicate (row, col) entr{} (keep-last)",
+            path.display(),
+            if dups == 1 { "y" } else { "ies" }
+        );
+    }
+    let mut src = crate::data::ingest::CooSource::new(&coo);
+    let data = crate::data::ingest::materialize(&mut src, name, test_frac, seed)?;
+    Ok((data, map))
 }
 
 /// Load a ratings file into a split [`Dataset`].

@@ -1,12 +1,22 @@
 //! Dataset substrate: synthetic statistical twins of the paper's datasets,
-//! loaders for the real file formats, and the train/test splitter.
+//! loaders for the real file formats, the train/test splitter, and the
+//! out-of-core shard pipeline.
 //!
 //! The paper evaluates on MovieLens 1M and Epinions 665K. Those files are
 //! external; per the substitution rule (DESIGN.md §5) we synthesize datasets
 //! with the same shape, density, and marginal skew ([`synthetic`]), while
 //! [`loader`] parses the genuine formats if the files are provided.
+//!
+//! At scale, text re-parsing is the bottleneck: [`shard`] defines the packed
+//! `.a2ps` binary shard format (`a2psgd pack` converts once), and [`ingest`]
+//! is the ingestion trait every dataset entry point routes through — with an
+//! in-memory implementation over [`CooMatrix`](crate::sparse::CooMatrix) and
+//! an out-of-core one that streams shards through bounded buffers and feeds
+//! block-grid construction directly.
 
+pub mod ingest;
 pub mod loader;
+pub mod shard;
 pub mod split;
 pub mod synthetic;
 

@@ -1,0 +1,870 @@
+//! The `.a2ps` binary shard format — the out-of-core on-disk representation
+//! of an HDS dataset.
+//!
+//! A text ratings file is convenient but hostile at scale: the old loader
+//! `read_to_string`'d the whole file and re-parsed every number each run.
+//! `a2psgd pack` converts any supported text format (or a builtin synthetic
+//! dataset) once into a *shard directory*:
+//!
+//! ```text
+//! dir/
+//!   manifest.a2ps        text manifest: dims, total nnz, shard table
+//!   ids.idmap            embedded external↔dense IdMap (loader format)
+//!   shard-00000.a2ps     fixed-width binary records for a dense row range
+//!   shard-00001.a2ps     …
+//! ```
+//!
+//! Each shard file is little-endian:
+//!
+//! ```text
+//! magic    "A2PS"                4 B
+//! version  u32                   4 B   (currently 1)
+//! nrows    u32, ncols u32        full-matrix dims
+//! row_lo   u32, row_hi u32       dense row range [row_lo, row_hi) covered
+//! nnz      u64                   record count
+//! crc      u64                   FNV-1a over the record bytes
+//! records  nnz × (u32 row, u32 col, f32 val)   12 B each
+//! ```
+//!
+//! Invariants the readers rely on (and validate):
+//! - records are sorted row-major `(row, col)` and deduplicated keep-last at
+//!   pack time, so concatenating shards in manifest order reproduces exactly
+//!   the canonical entry order the text loader produces after
+//!   [`CooMatrix::dedup`] — which is what makes out-of-core training
+//!   bit-identical to the in-memory path;
+//! - shard row ranges tile `[0, nrows)` contiguously in manifest order;
+//! - every record's row is inside the shard's range, its column is inside
+//!   the matrix, and its value is finite (`pack` rejects NaN/∞ at
+//!   conversion time).
+//!
+//! Version bumps are backward-guarded: readers reject unknown versions with
+//! a clear error instead of misparsing, and the header is fixed-width so a
+//! v2 can extend the trailer without moving v1 fields.
+
+use crate::data::loader::IdMap;
+use crate::sparse::{CooMatrix, Entry};
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+/// Shard file magic.
+pub const SHARD_MAGIC: &[u8; 4] = b"A2PS";
+/// Current shard format version.
+pub const SHARD_VERSION: u32 = 1;
+/// Fixed shard header size in bytes.
+pub const SHARD_HEADER_LEN: usize = 40;
+/// Fixed record size in bytes: `(u32 row, u32 col, f32 val)`.
+pub const RECORD_LEN: usize = 12;
+/// Default records per streaming read chunk (× 12 B ≈ 768 KiB buffer).
+pub const DEFAULT_CHUNK: usize = 65_536;
+/// Manifest file name inside a shard directory.
+pub const MANIFEST_FILE: &str = "manifest.a2ps";
+/// Embedded id-map file name inside a shard directory.
+pub const IDMAP_FILE: &str = "ids.idmap";
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+
+/// Incremental FNV-1a (seed with [`FNV_OFFSET`] via [`fnv1a_start`]).
+fn fnv1a_update(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Fresh FNV-1a accumulator.
+fn fnv1a_start() -> u64 {
+    FNV_OFFSET
+}
+
+/// Parsed + validated `.a2ps` shard header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardHeader {
+    /// Full-matrix row count.
+    pub nrows: u32,
+    /// Full-matrix column count.
+    pub ncols: u32,
+    /// First dense row covered by this shard.
+    pub row_lo: u32,
+    /// One past the last dense row covered.
+    pub row_hi: u32,
+    /// Record count.
+    pub nnz: u64,
+    /// FNV-1a over the record bytes.
+    pub crc: u64,
+}
+
+impl ShardHeader {
+    /// Encode to the fixed 40-byte little-endian layout.
+    pub fn to_bytes(&self) -> [u8; SHARD_HEADER_LEN] {
+        let mut b = [0u8; SHARD_HEADER_LEN];
+        b[0..4].copy_from_slice(SHARD_MAGIC);
+        b[4..8].copy_from_slice(&SHARD_VERSION.to_le_bytes());
+        b[8..12].copy_from_slice(&self.nrows.to_le_bytes());
+        b[12..16].copy_from_slice(&self.ncols.to_le_bytes());
+        b[16..20].copy_from_slice(&self.row_lo.to_le_bytes());
+        b[20..24].copy_from_slice(&self.row_hi.to_le_bytes());
+        b[24..32].copy_from_slice(&self.nnz.to_le_bytes());
+        b[32..40].copy_from_slice(&self.crc.to_le_bytes());
+        b
+    }
+
+    /// Decode + validate magic/version/range sanity.
+    pub fn from_bytes(b: &[u8; SHARD_HEADER_LEN]) -> Result<Self> {
+        if &b[..4] != SHARD_MAGIC {
+            bail!("not an .a2ps shard (bad magic)");
+        }
+        let version = u32::from_le_bytes(b[4..8].try_into().unwrap());
+        if version != SHARD_VERSION {
+            bail!("unsupported shard version {version} (this build reads version {SHARD_VERSION})");
+        }
+        let h = ShardHeader {
+            nrows: u32::from_le_bytes(b[8..12].try_into().unwrap()),
+            ncols: u32::from_le_bytes(b[12..16].try_into().unwrap()),
+            row_lo: u32::from_le_bytes(b[16..20].try_into().unwrap()),
+            row_hi: u32::from_le_bytes(b[20..24].try_into().unwrap()),
+            nnz: u64::from_le_bytes(b[24..32].try_into().unwrap()),
+            crc: u64::from_le_bytes(b[32..40].try_into().unwrap()),
+        };
+        ensure!(
+            h.row_lo <= h.row_hi && h.row_hi <= h.nrows,
+            "shard row range {}..{} outside matrix with {} rows",
+            h.row_lo,
+            h.row_hi,
+            h.nrows
+        );
+        Ok(h)
+    }
+}
+
+/// Write one shard file: header (with CRC over the records) + records.
+/// Entries must use dense ids, lie inside `[row_lo, row_hi) × [0, ncols)`,
+/// and be finite.
+pub fn write_shard(
+    path: &Path,
+    nrows: u32,
+    ncols: u32,
+    row_lo: u32,
+    row_hi: u32,
+    entries: &[Entry],
+) -> Result<()> {
+    // Single validate+encode pass: the payload (≤ one shard, which the
+    // caller already holds in memory) is built once, CRC'd, then written
+    // after the header that carries the CRC.
+    let mut payload = Vec::with_capacity(entries.len() * RECORD_LEN);
+    let mut rec = [0u8; RECORD_LEN];
+    for e in entries {
+        ensure!(
+            e.u >= row_lo && e.u < row_hi && e.v < ncols,
+            "entry ({}, {}) outside shard range {}..{} × 0..{}",
+            e.u,
+            e.v,
+            row_lo,
+            row_hi,
+            ncols
+        );
+        ensure!(e.r.is_finite(), "non-finite value at ({}, {})", e.u, e.v);
+        encode_record(e, &mut rec);
+        payload.extend_from_slice(&rec);
+    }
+    let header = ShardHeader {
+        nrows,
+        ncols,
+        row_lo,
+        row_hi,
+        nnz: entries.len() as u64,
+        crc: fnv1a_update(fnv1a_start(), &payload),
+    };
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating shard {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(file);
+    w.write_all(&header.to_bytes())?;
+    w.write_all(&payload)?;
+    w.flush().with_context(|| format!("writing shard {}", path.display()))
+}
+
+#[inline]
+fn encode_record(e: &Entry, rec: &mut [u8; RECORD_LEN]) {
+    rec[0..4].copy_from_slice(&e.u.to_le_bytes());
+    rec[4..8].copy_from_slice(&e.v.to_le_bytes());
+    rec[8..12].copy_from_slice(&e.r.to_le_bytes());
+}
+
+/// Streaming reader over one shard file: bounded-size chunks, running CRC
+/// verified once the last record is consumed, per-record bounds/finiteness
+/// validation.
+pub struct ShardReader {
+    reader: std::io::BufReader<std::fs::File>,
+    header: ShardHeader,
+    remaining: u64,
+    crc: u64,
+    raw: Vec<u8>,
+    path: PathBuf,
+}
+
+impl ShardReader {
+    /// Open and validate header + on-disk length (truncation is an error
+    /// at open time, not a short read later).
+    pub fn open(path: &Path) -> Result<Self> {
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("opening shard {}", path.display()))?;
+        let len = file
+            .metadata()
+            .with_context(|| format!("stat {}", path.display()))?
+            .len();
+        if len < SHARD_HEADER_LEN as u64 {
+            bail!(
+                "{}: truncated shard ({len} bytes; the header alone is {SHARD_HEADER_LEN})",
+                path.display()
+            );
+        }
+        let mut reader = std::io::BufReader::new(file);
+        let mut head = [0u8; SHARD_HEADER_LEN];
+        reader
+            .read_exact(&mut head)
+            .with_context(|| format!("reading shard header {}", path.display()))?;
+        let header = ShardHeader::from_bytes(&head)
+            .with_context(|| format!("parsing shard header {}", path.display()))?;
+        let want = SHARD_HEADER_LEN as u64 + header.nnz * RECORD_LEN as u64;
+        if len != want {
+            bail!(
+                "{}: truncated or oversized shard: {len} bytes on disk, header promises {want}",
+                path.display()
+            );
+        }
+        Ok(ShardReader {
+            reader,
+            remaining: header.nnz,
+            header,
+            crc: fnv1a_start(),
+            raw: Vec::new(),
+            path: path.to_path_buf(),
+        })
+    }
+
+    /// The validated header.
+    pub fn header(&self) -> &ShardHeader {
+        &self.header
+    }
+
+    /// Records not yet read.
+    pub fn remaining(&self) -> u64 {
+        self.remaining
+    }
+
+    /// Read up to `max` records into `out` (cleared first); returns the
+    /// count, 0 at end of shard. The CRC is checked when the final record
+    /// has been read, so a full sweep always detects corruption.
+    pub fn next_chunk(&mut self, out: &mut Vec<Entry>, max: usize) -> Result<usize> {
+        out.clear();
+        if self.remaining == 0 {
+            return Ok(0);
+        }
+        let n = (max.max(1) as u64).min(self.remaining) as usize;
+        self.raw.resize(n * RECORD_LEN, 0);
+        self.reader
+            .read_exact(&mut self.raw)
+            .with_context(|| format!("reading records from {}", self.path.display()))?;
+        self.crc = fnv1a_update(self.crc, &self.raw);
+        out.reserve(n);
+        for rec in self.raw.chunks_exact(RECORD_LEN) {
+            let u = u32::from_le_bytes(rec[0..4].try_into().unwrap());
+            let v = u32::from_le_bytes(rec[4..8].try_into().unwrap());
+            let r = f32::from_le_bytes(rec[8..12].try_into().unwrap());
+            ensure!(
+                u >= self.header.row_lo && u < self.header.row_hi,
+                "{}: record row {u} outside shard range {}..{}",
+                self.path.display(),
+                self.header.row_lo,
+                self.header.row_hi
+            );
+            ensure!(
+                v < self.header.ncols,
+                "{}: record col {v} outside matrix with {} cols",
+                self.path.display(),
+                self.header.ncols
+            );
+            ensure!(
+                r.is_finite(),
+                "{}: non-finite value at ({u}, {v})",
+                self.path.display()
+            );
+            out.push(Entry { u, v, r });
+        }
+        self.remaining -= n as u64;
+        if self.remaining == 0 && self.crc != self.header.crc {
+            bail!("{}: shard CRC mismatch — file corrupt", self.path.display());
+        }
+        Ok(n)
+    }
+}
+
+/// One shard's manifest row.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardMeta {
+    /// File name relative to the shard directory.
+    pub file: String,
+    /// First dense row covered.
+    pub row_lo: u32,
+    /// One past the last dense row covered.
+    pub row_hi: u32,
+    /// Record count.
+    pub nnz: u64,
+}
+
+/// The shard-directory manifest (`manifest.a2ps`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    /// Full-matrix row count (== dense users in the embedded id map).
+    pub nrows: u32,
+    /// Full-matrix column count.
+    pub ncols: u32,
+    /// Total records across shards (post-dedup).
+    pub nnz: u64,
+    /// Shards in canonical (row-range) order.
+    pub shards: Vec<ShardMeta>,
+}
+
+impl Manifest {
+    /// Serialize to the line-oriented manifest text.
+    pub fn to_text(&self) -> String {
+        let mut s = String::with_capacity(64 + 48 * self.shards.len());
+        s.push_str("A2PSDIR v1\n");
+        s.push_str(&format!("nrows {}\n", self.nrows));
+        s.push_str(&format!("ncols {}\n", self.ncols));
+        s.push_str(&format!("nnz {}\n", self.nnz));
+        s.push_str(&format!("shards {}\n", self.shards.len()));
+        for m in &self.shards {
+            s.push_str(&format!("{} {} {} {}\n", m.file, m.row_lo, m.row_hi, m.nnz));
+        }
+        s
+    }
+
+    /// Parse + validate the manifest text (coverage, ordering, nnz sums).
+    pub fn from_text(text: &str) -> Result<Self> {
+        let mut lines = text.lines();
+        let header = lines.next().context("empty manifest")?;
+        if header.trim() != "A2PSDIR v1" {
+            bail!("not an a2psgd shard manifest (bad header {header:?})");
+        }
+        let mut field = |key: &str| -> Result<u64> {
+            let line = lines
+                .next()
+                .with_context(|| format!("manifest missing {key} line"))?;
+            line.strip_prefix(key)
+                .map(str::trim)
+                .and_then(|v| v.parse().ok())
+                .with_context(|| format!("bad manifest line {line:?} (expected `{key} <n>`)"))
+        };
+        let nrows = field("nrows")? as u32;
+        let ncols = field("ncols")? as u32;
+        let nnz = field("nnz")?;
+        let count = field("shards")? as usize;
+        let mut shards = Vec::with_capacity(count);
+        for i in 0..count {
+            let line = lines
+                .next()
+                .with_context(|| format!("manifest truncated at shard {i}"))?;
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            ensure!(fields.len() == 4, "bad shard line {line:?}");
+            let parse_u64 = |s: &str| -> Result<u64> {
+                s.parse()
+                    .with_context(|| format!("bad number {s:?} in shard line {line:?}"))
+            };
+            shards.push(ShardMeta {
+                file: fields[0].to_string(),
+                row_lo: parse_u64(fields[1])? as u32,
+                row_hi: parse_u64(fields[2])? as u32,
+                nnz: parse_u64(fields[3])?,
+            });
+        }
+        let m = Manifest { nrows, ncols, nnz, shards };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Check the coverage/order invariants readers rely on.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.shards.is_empty(), "manifest lists no shards");
+        let sum: u64 = self.shards.iter().map(|s| s.nnz).sum();
+        ensure!(
+            sum == self.nnz,
+            "manifest nnz {} disagrees with shard sum {sum}",
+            self.nnz
+        );
+        let mut prev_hi = 0u32;
+        for (i, s) in self.shards.iter().enumerate() {
+            ensure!(
+                s.row_lo == prev_hi,
+                "shard {i} ({}) starts at row {} but the previous shard ended at {prev_hi} \
+                 (shards must tile the rows contiguously in order)",
+                s.file,
+                s.row_lo
+            );
+            ensure!(
+                s.row_lo <= s.row_hi && s.row_hi <= self.nrows,
+                "shard {i} ({}) covers {}..{} outside 0..{}",
+                s.file,
+                s.row_lo,
+                s.row_hi,
+                self.nrows
+            );
+            prev_hi = s.row_hi;
+        }
+        ensure!(
+            prev_hi == self.nrows,
+            "shards end at row {prev_hi} but the matrix has {} rows",
+            self.nrows
+        );
+        Ok(())
+    }
+
+    /// Write to `dir/manifest.a2ps`.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let p = dir.join(MANIFEST_FILE);
+        std::fs::write(&p, self.to_text())
+            .with_context(|| format!("writing manifest {}", p.display()))
+    }
+
+    /// Read + validate from `dir/manifest.a2ps`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let p = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&p)
+            .with_context(|| format!("reading manifest {}", p.display()))?;
+        Self::from_text(&text).with_context(|| format!("parsing manifest {}", p.display()))
+    }
+}
+
+/// True when `path` is a packed shard directory (contains a manifest).
+pub fn is_shard_dir(path: &Path) -> bool {
+    path.is_dir() && path.join(MANIFEST_FILE).is_file()
+}
+
+/// Load the id map embedded in a shard directory.
+pub fn load_idmap(dir: &Path) -> Result<IdMap> {
+    IdMap::load(&dir.join(IDMAP_FILE))
+}
+
+/// Open shard `meta` under `dir` and cross-check its header against the
+/// manifest row — corrupt mixes of shard files (e.g. a shard swapped in
+/// from another pack) are caught before any records are consumed. Every
+/// reader path (ingest scan, parallel decode, stream replay) goes through
+/// this.
+pub fn open_checked(dir: &Path, manifest: &Manifest, meta: &ShardMeta) -> Result<ShardReader> {
+    let reader = ShardReader::open(&dir.join(&meta.file))?;
+    let h = reader.header();
+    ensure!(
+        h.nnz == meta.nnz
+            && h.row_lo == meta.row_lo
+            && h.row_hi == meta.row_hi
+            && h.nrows == manifest.nrows
+            && h.ncols == manifest.ncols,
+        "{}: shard header disagrees with the manifest (header {:?}, manifest row {:?})",
+        meta.file,
+        h,
+        meta
+    );
+    Ok(reader)
+}
+
+/// Packing knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct PackOptions {
+    /// Target record-payload bytes per shard; each shard covers at least
+    /// one dense row, so a single very hot row may exceed the target.
+    pub shard_bytes: u64,
+}
+
+impl Default for PackOptions {
+    fn default() -> Self {
+        PackOptions { shard_bytes: 64 << 20 }
+    }
+}
+
+impl PackOptions {
+    /// Builder: target shard size in MiB (the `[data] shard_mb` knob).
+    pub fn shard_mb(mut self, mb: usize) -> Self {
+        self.shard_bytes = (mb.max(1) as u64) << 20;
+        self
+    }
+}
+
+/// What `pack` did.
+#[derive(Clone, Copy, Debug)]
+pub struct PackStats {
+    /// Dense rows (users interned).
+    pub nrows: u32,
+    /// Dense columns (items interned).
+    pub ncols: u32,
+    /// Records written (post-dedup).
+    pub nnz: u64,
+    /// Raw input triplets scanned.
+    pub raw_nnz: u64,
+    /// Shards written.
+    pub shards: usize,
+    /// Duplicate `(row, col)` triplets dropped (keep-last).
+    pub duplicates: u64,
+}
+
+/// Pack a text ratings file into a shard directory (streaming: two passes
+/// over the file, never resident whole; peak memory is one shard's records
+/// plus the id map).
+pub fn pack_text(input: &Path, out_dir: &Path, opts: &PackOptions) -> Result<PackStats> {
+    pack_with(
+        |sink| crate::data::loader::scan_file(input, |u, v, r| sink(u, v, r)),
+        out_dir,
+        opts,
+    )
+}
+
+/// Pack an in-memory triplet list (external ids — the `--dataset` path and
+/// tests use this).
+pub fn pack_triplets(
+    triplets: &[(u64, u64, f32)],
+    out_dir: &Path,
+    opts: &PackOptions,
+) -> Result<PackStats> {
+    pack_with(
+        |sink| {
+            for &(u, v, r) in triplets {
+                sink(u, v, r)?;
+            }
+            Ok(())
+        },
+        out_dir,
+        opts,
+    )
+}
+
+/// Core packer over a repeatable triplet scan. `scan` must deliver the same
+/// triplets in the same order every call (it runs twice: id/size survey,
+/// then the shard scatter). External ids are interned by first appearance —
+/// exactly the text loader's order, which is what makes `pack` + shard load
+/// equivalent to `load_file`.
+pub fn pack_with<F>(scan: F, out_dir: &Path, opts: &PackOptions) -> Result<PackStats>
+where
+    F: FnMut(&mut dyn FnMut(u64, u64, f32) -> Result<()>) -> Result<()>,
+{
+    pack_impl(scan, out_dir, opts, None)
+}
+
+fn pack_impl<F>(
+    mut scan: F,
+    out_dir: &Path,
+    opts: &PackOptions,
+    preset_map: Option<IdMap>,
+) -> Result<PackStats>
+where
+    F: FnMut(&mut dyn FnMut(u64, u64, f32) -> Result<()>) -> Result<()>,
+{
+    // Pass 1: resolve ids and count per-dense-row records; reject
+    // non-finite values up front. With a preset (identity) map, ids pass
+    // through unchanged; otherwise they intern in input order — matching
+    // the text loader exactly.
+    let preset = preset_map.is_some();
+    let mut map = preset_map.unwrap_or_default();
+    let mut row_nnz: Vec<u64> = vec![0; map.n_users() as usize];
+    let mut raw_nnz = 0u64;
+    scan(&mut |u, v, r| {
+        ensure!(
+            r.is_finite(),
+            "non-finite rating {r} at ({u}, {v}) — pack rejects NaN/inf at conversion time"
+        );
+        let du = if preset {
+            let du = map
+                .user(u)
+                .with_context(|| format!("user id {u} outside the preset id map"))?;
+            ensure!(
+                map.item(v).is_some(),
+                "item id {v} outside the preset id map"
+            );
+            du
+        } else {
+            let (du, new_u) = map.intern_user(u);
+            if new_u {
+                row_nnz.push(0);
+            }
+            map.intern_item(v);
+            du
+        };
+        row_nnz[du as usize] += 1;
+        raw_nnz += 1;
+        Ok(())
+    })?;
+    ensure!(raw_nnz > 0, "no data instances to pack");
+    let nrows = map.n_users();
+    let ncols = map.n_items();
+
+    // Shard row ranges: contiguous dense-row spans whose raw payload stays
+    // near the target (≥ 1 row per shard, so hot rows may overshoot).
+    let budget = opts.shard_bytes.max(1);
+    let mut bounds = vec![0u32];
+    let mut acc = 0u64;
+    for (row, &c) in row_nnz.iter().enumerate() {
+        acc += c * RECORD_LEN as u64;
+        if acc >= budget && (row as u32 + 1) < nrows {
+            bounds.push(row as u32 + 1);
+            acc = 0;
+        }
+    }
+    bounds.push(nrows);
+    let nshards = bounds.len() - 1;
+    let mut shard_of = vec![0u32; nrows as usize];
+    for (s, w) in bounds.windows(2).enumerate() {
+        for row in w[0]..w[1] {
+            shard_of[row as usize] = s as u32;
+        }
+    }
+
+    // Pass 2: scatter raw records to per-shard temp files (append-only
+    // through BufWriters — bounded memory regardless of dataset size).
+    std::fs::create_dir_all(out_dir)
+        .with_context(|| format!("creating shard dir {}", out_dir.display()))?;
+    let tmp_path = |s: usize| out_dir.join(format!("shard-{s:05}.a2ps.tmp"));
+    let final_path = |s: usize| format!("shard-{s:05}.a2ps");
+    let mut writers: Vec<std::io::BufWriter<std::fs::File>> = Vec::with_capacity(nshards);
+    for s in 0..nshards {
+        let p = tmp_path(s);
+        let f = std::fs::File::create(&p)
+            .with_context(|| format!("creating temp shard {}", p.display()))?;
+        writers.push(std::io::BufWriter::new(f));
+    }
+    scan(&mut |u, v, r| {
+        let du = map.user(u).context("input changed between pack passes (unknown user)")?;
+        let dv = map.item(v).context("input changed between pack passes (unknown item)")?;
+        let s = shard_of[du as usize] as usize;
+        let mut rec = [0u8; RECORD_LEN];
+        encode_record(&Entry { u: du, v: dv, r }, &mut rec);
+        writers[s].write_all(&rec).context("writing temp shard")?;
+        Ok(())
+    })?;
+    for w in &mut writers {
+        w.flush().context("flushing temp shard")?;
+    }
+    drop(writers);
+
+    // Pass 3: finalize each shard — read back (bounded by the shard size),
+    // sort row-major with stable keep-last dedup, write the real file with
+    // header + CRC. The sort makes shard concatenation reproduce the text
+    // loader's canonical post-dedup entry order exactly.
+    let mut shards = Vec::with_capacity(nshards);
+    let mut nnz = 0u64;
+    let mut duplicates = 0u64;
+    for s in 0..nshards {
+        let tmp = tmp_path(s);
+        let raw = std::fs::read(&tmp)
+            .with_context(|| format!("reading temp shard {}", tmp.display()))?;
+        ensure!(raw.len() % RECORD_LEN == 0, "temp shard {} corrupt", tmp.display());
+        let mut recs: Vec<Entry> = raw
+            .chunks_exact(RECORD_LEN)
+            .map(|rec| Entry {
+                u: u32::from_le_bytes(rec[0..4].try_into().unwrap()),
+                v: u32::from_le_bytes(rec[4..8].try_into().unwrap()),
+                r: f32::from_le_bytes(rec[8..12].try_into().unwrap()),
+            })
+            .collect();
+        drop(raw);
+        // One shared keep-last definition with the text loader — parity
+        // between the paths depends on it.
+        duplicates += crate::sparse::dedup_keep_last(&mut recs) as u64;
+        let file = final_path(s);
+        write_shard(&out_dir.join(&file), nrows, ncols, bounds[s], bounds[s + 1], &recs)?;
+        std::fs::remove_file(&tmp).ok();
+        nnz += recs.len() as u64;
+        shards.push(ShardMeta {
+            file,
+            row_lo: bounds[s],
+            row_hi: bounds[s + 1],
+            nnz: recs.len() as u64,
+        });
+    }
+
+    let manifest = Manifest { nrows, ncols, nnz, shards };
+    manifest.validate()?;
+    manifest.save(out_dir)?;
+    map.save(&out_dir.join(IDMAP_FILE))?;
+    Ok(PackStats {
+        nrows,
+        ncols,
+        nnz,
+        raw_nnz,
+        shards: nshards,
+        duplicates,
+    })
+}
+
+/// Pack an in-memory COO matrix that is *already dense*: ids pass through
+/// unchanged under an identity id map (so the packed records equal the COO
+/// entries bit for bit) — the synthetic-generator path.
+pub fn pack_coo(coo: &CooMatrix, out_dir: &Path, opts: &PackOptions) -> Result<PackStats> {
+    let map = IdMap::identity(coo.nrows(), coo.ncols());
+    pack_impl(
+        |sink| {
+            for e in coo.entries() {
+                sink(e.u as u64, e.v as u64, e.r)?;
+            }
+            Ok(())
+        },
+        out_dir,
+        opts,
+        Some(map),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("a2psgd_shardunit_{tag}"));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample_entries() -> Vec<Entry> {
+        vec![
+            Entry { u: 0, v: 1, r: 3.0 },
+            Entry { u: 0, v: 4, r: 5.0 },
+            Entry { u: 1, v: 0, r: 1.0 },
+            Entry { u: 2, v: 2, r: 4.5 },
+        ]
+    }
+
+    #[test]
+    fn header_bytes_roundtrip() {
+        let h = ShardHeader { nrows: 10, ncols: 20, row_lo: 2, row_hi: 7, nnz: 123, crc: 0xDEAD };
+        let back = ShardHeader::from_bytes(&h.to_bytes()).unwrap();
+        assert_eq!(h, back);
+    }
+
+    #[test]
+    fn header_rejects_garbage() {
+        let h = ShardHeader { nrows: 4, ncols: 4, row_lo: 0, row_hi: 4, nnz: 0, crc: 0 };
+        let mut b = h.to_bytes();
+        b[0] = b'X';
+        assert!(ShardHeader::from_bytes(&b).is_err(), "bad magic");
+        let mut b = h.to_bytes();
+        b[4] = 99;
+        assert!(ShardHeader::from_bytes(&b).is_err(), "future version");
+        let bad = ShardHeader { nrows: 4, ncols: 4, row_lo: 3, row_hi: 2, nnz: 0, crc: 0 };
+        assert!(ShardHeader::from_bytes(&bad.to_bytes()).is_err(), "inverted range");
+    }
+
+    #[test]
+    fn shard_write_read_roundtrip_chunked() {
+        let dir = tmpdir("rt");
+        let p = dir.join("s.a2ps");
+        let entries = sample_entries();
+        write_shard(&p, 3, 5, 0, 3, &entries).unwrap();
+        let mut r = ShardReader::open(&p).unwrap();
+        assert_eq!(r.header().nnz, 4);
+        assert_eq!(r.header().nrows, 3);
+        let mut got = Vec::new();
+        let mut buf = Vec::new();
+        loop {
+            let n = r.next_chunk(&mut buf, 3).unwrap();
+            if n == 0 {
+                break;
+            }
+            got.extend_from_slice(&buf);
+        }
+        assert_eq!(got, entries);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn write_shard_validates_entries() {
+        let dir = tmpdir("wv");
+        let p = dir.join("s.a2ps");
+        let out_of_range = vec![Entry { u: 9, v: 0, r: 1.0 }];
+        assert!(write_shard(&p, 10, 5, 0, 3, &out_of_range).is_err());
+        let nan = vec![Entry { u: 0, v: 0, r: f32::NAN }];
+        assert!(write_shard(&p, 10, 5, 0, 3, &nan).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_text_roundtrip_and_validation() {
+        let m = Manifest {
+            nrows: 10,
+            ncols: 6,
+            nnz: 7,
+            shards: vec![
+                ShardMeta { file: "shard-00000.a2ps".into(), row_lo: 0, row_hi: 4, nnz: 3 },
+                ShardMeta { file: "shard-00001.a2ps".into(), row_lo: 4, row_hi: 10, nnz: 4 },
+            ],
+        };
+        let back = Manifest::from_text(&m.to_text()).unwrap();
+        assert_eq!(m, back);
+        // Gap between shards.
+        let mut gap = m.clone();
+        gap.shards[1].row_lo = 5;
+        assert!(Manifest::from_text(&gap.to_text()).is_err());
+        // nnz mismatch.
+        let mut bad = m.clone();
+        bad.nnz = 99;
+        assert!(Manifest::from_text(&bad.to_text()).is_err());
+        // Uncovered tail.
+        let mut short = m;
+        short.shards[1].row_hi = 9;
+        assert!(Manifest::from_text(&short.to_text()).is_err());
+        assert!(Manifest::from_text("").is_err());
+        assert!(Manifest::from_text("WRONG v9\n").is_err());
+    }
+
+    #[test]
+    fn pack_splits_rows_and_dedupes() {
+        let dir = tmpdir("pack");
+        // 6 rows × 4 records each at 12 B/record = 48 B/row; 100-byte shards
+        // ⇒ rows pair up (96 B ≥ budget after 2–3 rows).
+        let mut triplets = Vec::new();
+        for u in 0..6u64 {
+            for v in 0..4u64 {
+                triplets.push((u * 10, v * 3, (u + v) as f32 % 5.0 + 1.0));
+            }
+        }
+        triplets.push((0, 0, 9.0)); // duplicate of the first pair — keep-last
+        let opts = PackOptions { shard_bytes: 100 };
+        let stats = pack_triplets(&triplets, &dir, &opts).unwrap();
+        assert_eq!(stats.nrows, 6);
+        assert_eq!(stats.ncols, 4);
+        assert_eq!(stats.raw_nnz, 25);
+        assert_eq!(stats.nnz, 24);
+        assert_eq!(stats.duplicates, 1);
+        assert!(stats.shards >= 2, "expected multiple shards, got {}", stats.shards);
+        let manifest = Manifest::load(&dir).unwrap();
+        assert_eq!(manifest.nnz, 24);
+        assert_eq!(manifest.shards.len(), stats.shards);
+        // The duplicate kept the last value.
+        let mut r = ShardReader::open(&dir.join(&manifest.shards[0].file)).unwrap();
+        let mut buf = Vec::new();
+        r.next_chunk(&mut buf, 1).unwrap();
+        assert_eq!(buf[0], Entry { u: 0, v: 0, r: 9.0 });
+        // Embedded id map resolves external ids.
+        let map = load_idmap(&dir).unwrap();
+        assert_eq!(map.user(0), Some(0));
+        assert_eq!(map.user(50), Some(5));
+        assert_eq!(map.item(9), Some(3));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pack_rejects_non_finite() {
+        let dir = tmpdir("nan");
+        let t = vec![(1u64, 2u64, f32::NAN)];
+        assert!(pack_triplets(&t, &dir, &PackOptions::default()).is_err());
+        let t = vec![(1u64, 2u64, f32::INFINITY)];
+        assert!(pack_triplets(&t, &dir, &PackOptions::default()).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pack_empty_input_errors() {
+        let dir = tmpdir("empty");
+        assert!(pack_triplets(&[], &dir, &PackOptions::default()).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,6 +1,14 @@
 //! Train/test splitting (paper: random 70/30).
+//!
+//! Two mechanisms:
+//! - [`split_train_test`] — the paper's sequential per-entry Bernoulli draw
+//!   (used by the synthetic twins; depends on entry *order*);
+//! - [`hash_split`] / [`hash_is_test`] — an order-independent per-entry hash
+//!   split used by the file loader and the shard-ingest paths, so streaming
+//!   passes (any pass structure, any parallelism) and the in-memory loader
+//!   agree on every entry without replaying an RNG stream.
 
-use crate::rng::Rng;
+use crate::rng::{splitmix64, Rng};
 use crate::sparse::CooMatrix;
 
 /// Randomly split Ω into train/test with `test_frac` going to test.
@@ -9,6 +17,33 @@ use crate::sparse::CooMatrix;
 /// divided … with 70% and 30%". Deterministic in `rng`.
 pub fn split_train_test(coo: &CooMatrix, test_frac: f64, rng: &mut Rng) -> (CooMatrix, CooMatrix) {
     let (test, train) = coo.partition_by(|_| rng.bool(test_frac));
+    (train, test)
+}
+
+/// Pure per-entry split decision: entry `(u, v)` goes to test iff a
+/// SplitMix64 hash of `(u, v, seed)` falls below `test_frac`.
+///
+/// Unlike the sequential RNG split this is order-independent, so the text
+/// loader, the shard materializer, and the parallel out-of-core ingest all
+/// assign the same entry to the same side — regardless of how many passes
+/// they make over the data or in what order chunks arrive.
+pub fn hash_is_test(u: u32, v: u32, seed: u64, test_frac: f64) -> bool {
+    if test_frac <= 0.0 {
+        return false;
+    }
+    if test_frac >= 1.0 {
+        return true;
+    }
+    let mut state = seed ^ (((u as u64) << 32) | v as u64);
+    let h = splitmix64(&mut state);
+    // threshold = frac · 2^64 (exact: u64::MAX as f64 + 1.0 == 2^64).
+    (h as f64) < test_frac * (u64::MAX as f64 + 1.0)
+}
+
+/// [`split_train_test`] flavor built on [`hash_is_test`] (the file-loader
+/// and shard-ingest split). Returns `(train, test)`.
+pub fn hash_split(coo: &CooMatrix, test_frac: f64, seed: u64) -> (CooMatrix, CooMatrix) {
+    let (test, train) = coo.partition_by(|e| hash_is_test(e.u, e.v, seed, test_frac));
     (train, test)
 }
 
@@ -108,5 +143,41 @@ mod tests {
         let (a, _) = split_train_test(&coo, 0.3, &mut Rng::new(7));
         let (b, _) = split_train_test(&coo, 0.3, &mut Rng::new(7));
         assert_eq!(a.entries(), b.entries());
+    }
+
+    #[test]
+    fn hash_split_preserves_entries_and_fraction() {
+        let coo = dense_coo(50, 50);
+        let (tr, te) = hash_split(&coo, 0.3, 0x5EED);
+        assert_eq!(tr.nnz() + te.nnz(), coo.nnz());
+        let frac = te.nnz() as f64 / coo.nnz() as f64;
+        assert!((0.26..0.34).contains(&frac), "frac={frac}");
+    }
+
+    #[test]
+    fn hash_split_is_order_independent() {
+        // The same (u, v) lands on the same side no matter where it sits in
+        // the entry list — the property the streaming ingest relies on.
+        for (u, v) in [(0u32, 0u32), (7, 3), (999, 1), (3, 7)] {
+            let a = hash_is_test(u, v, 42, 0.3);
+            let b = hash_is_test(u, v, 42, 0.3);
+            assert_eq!(a, b);
+        }
+        // Different seeds reshuffle the assignment.
+        let coo = dense_coo(40, 40);
+        let (_, t1) = hash_split(&coo, 0.3, 1);
+        let (_, t2) = hash_split(&coo, 0.3, 2);
+        assert_ne!(t1.entries(), t2.entries());
+    }
+
+    #[test]
+    fn hash_split_degenerate_fractions() {
+        assert!(!hash_is_test(1, 2, 3, 0.0));
+        assert!(!hash_is_test(1, 2, 3, -0.5));
+        assert!(hash_is_test(1, 2, 3, 1.0));
+        let coo = dense_coo(10, 10);
+        let (tr, te) = hash_split(&coo, 0.0, 9);
+        assert_eq!(tr.nnz(), coo.nnz());
+        assert_eq!(te.nnz(), 0);
     }
 }

@@ -43,6 +43,12 @@ impl BlockEngine {
     /// FPSGD configuration: uniform blocks, global-lock scheduler, SGD rule.
     pub fn fpsgd(data: &Dataset, factors: Factors, cfg: &TrainConfig, rng: &mut Rng) -> Self {
         let grid = build_grid(&data.train, PartitionKind::Uniform, cfg.threads);
+        Self::fpsgd_grid(grid, factors, cfg, rng)
+    }
+
+    /// FPSGD over a prebuilt grid — the out-of-core ingest path, which
+    /// scatters shard streams into the grid without a training COO.
+    pub fn fpsgd_grid(grid: BlockGrid, factors: Factors, cfg: &TrainConfig, rng: &mut Rng) -> Self {
         let scheduler: Arc<dyn BlockScheduler> = Arc::new(LockedScheduler::new(grid.nblocks()));
         BlockEngine::new(factors, grid, scheduler, cfg, Rule::Sgd, rng)
     }
@@ -52,6 +58,16 @@ impl BlockEngine {
     /// NAG rule. `cfg.partition` still wins (ablation A2).
     pub fn a2psgd(data: &Dataset, factors: Factors, cfg: &TrainConfig, rng: &mut Rng) -> Self {
         let grid = build_grid(&data.train, cfg.partition, cfg.threads);
+        Self::a2psgd_grid(grid, factors, cfg, rng)
+    }
+
+    /// A²PSGD over a prebuilt grid (see [`BlockEngine::fpsgd_grid`]).
+    pub fn a2psgd_grid(
+        grid: BlockGrid,
+        factors: Factors,
+        cfg: &TrainConfig,
+        rng: &mut Rng,
+    ) -> Self {
         let scheduler: Arc<dyn BlockScheduler> =
             Arc::new(LockFreeScheduler::work_aware(grid.nblocks(), &grid.block_nnz()));
         BlockEngine::new(factors, grid, scheduler, cfg, cfg.rule, rng)

@@ -34,8 +34,10 @@ use crate::model::{Factors, SharedFactors};
 use crate::optim::Hyper;
 use crate::partition::PartitionKind;
 use crate::rng::Rng;
+use crate::sparse::CooMatrix;
 use crate::Result;
 use anyhow::bail;
+use std::path::Path;
 
 /// Engine selector.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -138,7 +140,13 @@ pub struct TrainConfig {
 impl TrainConfig {
     /// Paper-preset config for an engine on a dataset (Tables I/II hypers).
     pub fn preset(engine: EngineKind, data: &Dataset) -> Self {
-        let hyper = crate::config::presets::hyper_for(engine, &data.name);
+        Self::preset_named(engine, &data.name)
+    }
+
+    /// [`TrainConfig::preset`] by dataset name only — the out-of-core path
+    /// has no materialized [`Dataset`] to hand over.
+    pub fn preset_named(engine: EngineKind, dataset_name: &str) -> Self {
+        let hyper = crate::config::presets::hyper_for(engine, dataset_name);
         TrainConfig {
             engine,
             d: 16,
@@ -325,9 +333,107 @@ pub fn train(data: &Dataset, cfg: &TrainConfig) -> Result<TrainReport> {
     Ok(run_driver(data, cfg, runner))
 }
 
+/// Train a block-scheduled engine directly from a packed `.a2ps` shard
+/// directory — the dataset is never materialized as a monolithic COO or a
+/// [`Dataset`]: shards stream through bounded buffers into the block grid
+/// (parallel decode on the worker pool), and only the test fraction is
+/// resident for evaluation.
+///
+/// Produces bit-identical results to [`train`] over the equivalent
+/// in-memory dataset at `threads = 1` (and statistically identical at any
+/// thread count — the multi-threaded schedule itself is timing-dependent
+/// either way). Supported engines: FPSGD and A²PSGD (the other engines'
+/// sweep structures need the full instance list in memory).
+pub fn train_ooc(
+    dir: &Path,
+    name: &str,
+    cfg: &TrainConfig,
+    test_frac: f64,
+    split_seed: u64,
+    chunk: usize,
+) -> Result<TrainReport> {
+    let kind = match cfg.engine {
+        EngineKind::Fpsgd => PartitionKind::Uniform,
+        EngineKind::A2psgd => cfg.partition,
+        other => bail!(
+            "out-of-core training supports the block-scheduled engines (fpsgd, a2psgd); \
+             {other} needs the in-memory path"
+        ),
+    };
+    let ooc =
+        crate::data::ingest::ingest_ooc(dir, kind, cfg.threads, test_frac, split_seed, chunk)?;
+    let crate::data::ingest::OocIngest {
+        grid,
+        nrows,
+        ncols,
+        train_nnz,
+        train_mean,
+        rating_min,
+        rating_max,
+        test,
+    } = ooc;
+    // Mirror `train`'s RNG discipline exactly: one stream, factors first,
+    // engine fork second — parity with the in-memory path depends on it.
+    let mut rng = Rng::new(cfg.seed);
+    let scale = Factors::default_scale(train_mean, cfg.d);
+    let factors = Factors::init(nrows, ncols, cfg.d, scale, &mut rng);
+    let runner: Box<dyn EpochRunner> = match cfg.engine {
+        EngineKind::Fpsgd => Box::new(BlockEngine::fpsgd_grid(grid, factors, cfg, &mut rng)),
+        EngineKind::A2psgd => Box::new(BlockEngine::a2psgd_grid(grid, factors, cfg, &mut rng)),
+        _ => unreachable!("gated above"),
+    };
+    let plan = EvalPlan {
+        name,
+        test: &test,
+        rating_min,
+        rating_max,
+        quota: train_nnz,
+    };
+    Ok(run_driver_with(&plan, cfg, runner))
+}
+
+/// What the epoch/eval/early-stop protocol needs from a dataset — without
+/// requiring the training instances themselves to be resident in memory
+/// (the out-of-core path hands the training data straight to the engine as
+/// a prebuilt grid and drives the protocol through this view).
+pub struct EvalPlan<'a> {
+    /// Dataset label for the report.
+    pub name: &'a str,
+    /// Held-out test instances Ψ.
+    pub test: &'a CooMatrix,
+    /// Clamp floor for evaluation.
+    pub rating_min: f32,
+    /// Clamp ceiling for evaluation.
+    pub rating_max: f32,
+    /// Per-epoch update quota (|Ω_train|).
+    pub quota: u64,
+}
+
+impl<'a> EvalPlan<'a> {
+    /// The in-memory view of a [`Dataset`].
+    pub fn of(data: &'a Dataset) -> Self {
+        EvalPlan {
+            name: &data.name,
+            test: &data.test,
+            rating_min: data.rating_min,
+            rating_max: data.rating_max,
+            quota: data.train.nnz() as u64,
+        }
+    }
+}
+
 /// The epoch/eval/early-stop protocol shared by all engines.
-pub fn run_driver(data: &Dataset, cfg: &TrainConfig, mut runner: Box<dyn EpochRunner>) -> TrainReport {
-    let quota = data.train.nnz() as u64;
+pub fn run_driver(data: &Dataset, cfg: &TrainConfig, runner: Box<dyn EpochRunner>) -> TrainReport {
+    run_driver_with(&EvalPlan::of(data), cfg, runner)
+}
+
+/// [`run_driver`] over an explicit [`EvalPlan`] (the out-of-core entry).
+pub fn run_driver_with(
+    plan: &EvalPlan,
+    cfg: &TrainConfig,
+    mut runner: Box<dyn EpochRunner>,
+) -> TrainReport {
+    let quota = plan.quota;
     let wall_start = std::time::Instant::now();
     let mut sw = Stopwatch::new();
     let mut history = History::new();
@@ -344,9 +450,9 @@ pub fn run_driver(data: &Dataset, cfg: &TrainConfig, mut runner: Box<dyn EpochRu
         let f = unsafe { runner.shared().get() };
         let (rmse, mae) = crate::metrics::rmse_mae_parallel(
             f,
-            &data.test,
-            data.rating_min,
-            data.rating_max,
+            plan.test,
+            plan.rating_min,
+            plan.rating_max,
             cfg.eval_threads,
         );
         history.push(EpochStat { epoch, train_seconds: sw.seconds(), rmse, mae });
@@ -359,7 +465,7 @@ pub fn run_driver(data: &Dataset, cfg: &TrainConfig, mut runner: Box<dyn EpochRu
 
     TrainReport {
         engine: cfg.engine,
-        dataset: data.name.clone(),
+        dataset: plan.name.to_string(),
         threads: cfg.threads,
         history,
         wall_seconds: wall_start.elapsed().as_secs_f64(),

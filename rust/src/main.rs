@@ -2,7 +2,7 @@
 
 use a2psgd::cli::{usage, Args};
 use a2psgd::coordinator::{self, service::PredictionService};
-use a2psgd::engine::{train, EngineKind, TrainConfig};
+use a2psgd::engine::{train, EngineKind, TrainConfig, TrainReport};
 use a2psgd::partition::PartitionKind;
 use a2psgd::prelude::*;
 use a2psgd::runtime::XlaRuntime;
@@ -25,6 +25,7 @@ fn run(argv: &[String]) -> Result<()> {
         "serve" => cmd_serve(&args),
         "stream" => cmd_stream(&args),
         "bench" => cmd_bench(&args),
+        "pack" => cmd_pack(&args),
         "gen-data" => cmd_gen_data(&args),
         "print-config" => cmd_print_config(&args),
         "tune" => cmd_tune(&args),
@@ -40,8 +41,8 @@ fn run(argv: &[String]) -> Result<()> {
 }
 
 /// Build a TrainConfig from CLI flags (optionally seeded from --config).
-fn config_from_args(args: &Args, engine: EngineKind, data: &Dataset) -> Result<TrainConfig> {
-    let mut cfg = TrainConfig::preset(engine, data);
+fn config_from_args(args: &Args, engine: EngineKind, dataset_name: &str) -> Result<TrainConfig> {
+    let mut cfg = TrainConfig::preset_named(engine, dataset_name);
     if let Some(path) = args.get("config") {
         let rc = a2psgd::config::RunConfig::from_file(std::path::Path::new(path))?;
         cfg = cfg.threads(rc.threads).epochs(rc.epochs).seed(rc.seed).dim(rc.d);
@@ -109,15 +110,26 @@ fn resolve(args: &Args) -> Result<Dataset> {
     Ok(data)
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
-    let data = resolve(args)?;
-    let engine = EngineKind::parse(&args.get_or("engine", "a2psgd"))?;
-    let cfg = config_from_args(args, engine, &data)?;
-    eprintln!(
-        "training {engine} on {} — d={} threads={} epochs={} η={} λ={} γ={}",
-        data.name, cfg.d, cfg.threads, cfg.epochs, cfg.hyper.eta, cfg.hyper.lam, cfg.hyper.gamma
-    );
-    let report = train(&data, &cfg)?;
+/// Build a DataConfig from `--config [data]` + CLI overrides.
+fn data_config_from_args(args: &Args) -> Result<a2psgd::config::DataConfig> {
+    let mut dc = a2psgd::config::DataConfig::default();
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        dc = dc.apply_toml(&text)?;
+    }
+    if let Some(f) = args.get("format") {
+        dc.format = a2psgd::config::DataFormat::parse(f)?;
+    }
+    if let Some(x) = args.get_parsed::<usize>("shard-mb")? {
+        anyhow::ensure!(x >= 1, "--shard-mb must be >= 1");
+        dc.shard_mb = x;
+    }
+    Ok(dc)
+}
+
+/// Shared tail of the train paths: history, summary, CSV, checkpoint.
+fn report_train(args: &Args, engine: EngineKind, report: &TrainReport) -> Result<()> {
     for p in report.history.points() {
         println!(
             "epoch {:>3}  t={:>8.3}s  RMSE={:.4}  MAE={:.4}",
@@ -136,6 +148,70 @@ fn cmd_train(args: &Args) -> Result<()> {
             .map(|e| format!("  converged@{e}"))
             .unwrap_or_default()
     );
+    if let Some(out) = args.get("out") {
+        let dir = PathBuf::from(out);
+        std::fs::create_dir_all(&dir)?;
+        let name = report.dataset.replace('/', "_");
+        let p = dir.join(format!("train_{}_{}.csv", name, engine.to_string().to_lowercase()));
+        std::fs::write(&p, report.history.to_csv())?;
+        eprintln!("wrote {}", p.display());
+    }
+    if let Some(path) = args.get("save") {
+        a2psgd::model::checkpoint::save(&report.factors, std::path::Path::new(path))?;
+        eprintln!("checkpoint → {path}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let key = args.get_or("dataset", "small");
+    let key = args.get("data-file").unwrap_or(&key).to_string();
+    let engine = EngineKind::parse(&args.get_or("engine", "a2psgd"))?;
+    let dc = data_config_from_args(args)?;
+    let path = std::path::Path::new(&key);
+    let is_shards = a2psgd::data::shard::is_shard_dir(path);
+    // `--format` is a hard assertion, not a hint — a mismatch errors
+    // instead of silently auto-detecting something else.
+    match dc.format {
+        a2psgd::config::DataFormat::Shards => anyhow::ensure!(
+            is_shards,
+            "{key}: --format shards, but no {} manifest found",
+            a2psgd::data::shard::MANIFEST_FILE
+        ),
+        a2psgd::config::DataFormat::Text => anyhow::ensure!(
+            !is_shards,
+            "{key} is a packed shard directory; refusing to parse it as text (--format text)"
+        ),
+        a2psgd::config::DataFormat::Auto => {}
+    }
+    // Shard directories feed the block engines out-of-core: the grid is
+    // built shard-by-shard through bounded buffers, no monolithic COO.
+    if is_shards && matches!(engine, EngineKind::Fpsgd | EngineKind::A2psgd) {
+        anyhow::ensure!(
+            !args.has("xla-eval"),
+            "--xla-eval needs the materialized dataset; use an in-memory engine or a text file"
+        );
+        let seed = args.get_parsed::<u64>("seed")?.unwrap_or(0x5EED);
+        let cfg = config_from_args(args, engine, &key)?;
+        eprintln!(
+            "out-of-core training {engine} on shard dir {key} — d={} threads={} epochs={} \
+             η={} λ={} γ={}",
+            cfg.d, cfg.threads, cfg.epochs, cfg.hyper.eta, cfg.hyper.lam, cfg.hyper.gamma
+        );
+        let report =
+            a2psgd::engine::train_ooc(path, &key, &cfg, 0.3, seed, dc.chunk_records())?;
+        return report_train(args, engine, &report);
+    }
+    if is_shards {
+        eprintln!("note: {engine} has no out-of-core path; materializing the shard directory");
+    }
+    let data = resolve(args)?;
+    let cfg = config_from_args(args, engine, &data.name)?;
+    eprintln!(
+        "training {engine} on {} — d={} threads={} epochs={} η={} λ={} γ={}",
+        data.name, cfg.d, cfg.threads, cfg.epochs, cfg.hyper.eta, cfg.hyper.lam, cfg.hyper.gamma
+    );
+    let report = train(&data, &cfg)?;
     if args.has("xla-eval") {
         let dir = cfg
             .artifacts_dir
@@ -145,17 +221,48 @@ fn cmd_train(args: &Args) -> Result<()> {
         let (rmse, mae) = rt.eval_dataset(&report.factors, &data.test)?;
         println!("XLA cross-eval (unclamped): RMSE={rmse:.4} MAE={mae:.4}");
     }
-    if let Some(out) = args.get("out") {
-        let dir = PathBuf::from(out);
-        std::fs::create_dir_all(&dir)?;
-        let p = dir.join(format!("train_{}_{}.csv", data.name, engine.to_string().to_lowercase()));
-        std::fs::write(&p, report.history.to_csv())?;
-        eprintln!("wrote {}", p.display());
-    }
-    if let Some(path) = args.get("save") {
-        a2psgd::model::checkpoint::save(&report.factors, std::path::Path::new(path))?;
-        eprintln!("checkpoint → {path}");
-    }
+    report_train(args, engine, &report)
+}
+
+/// Convert a ratings source (text file or builtin dataset key) into a
+/// packed `.a2ps` shard directory with an embedded id map.
+fn cmd_pack(args: &Args) -> Result<()> {
+    use a2psgd::data::shard::{pack_coo, pack_text, PackOptions};
+    let out = args.get("out").context("pack requires --out DIR")?;
+    let dc = data_config_from_args(args)?;
+    let opts = PackOptions::default().shard_mb(dc.shard_mb);
+    let stats = if let Some(input) = args.get("data-file") {
+        pack_text(std::path::Path::new(input), std::path::Path::new(out), &opts)?
+    } else {
+        let key = args.get_or("dataset", "small");
+        // Builtin keys only: a file path through `resolve_dataset` would
+        // intern its sparse external ids and then pack an *identity* map
+        // over the dense ones, losing the real external↔dense mapping.
+        // `pack --data-file` is the path route and preserves it.
+        anyhow::ensure!(
+            matches!(
+                key.as_str(),
+                "small" | "medium" | "ml1m" | "ml1m-twin" | "epinions" | "epinions-twin"
+            ),
+            "pack --dataset takes a builtin key (small|medium|ml1m|epinions); \
+             use --data-file for ratings files so external ids are preserved"
+        );
+        let seed = args.get_parsed::<u64>("seed")?.unwrap_or(0x5EED);
+        let data = coordinator::resolve_dataset(&key, seed)?;
+        eprintln!("packing {}", data.describe());
+        // The same instance stream `gen-data` writes (train then test),
+        // packed under an identity id map — the ids are already dense.
+        let mut union = a2psgd::sparse::CooMatrix::new(data.nrows(), data.ncols());
+        for e in data.train.entries().iter().chain(data.test.entries()) {
+            union.push(e.u, e.v, e.r)?;
+        }
+        pack_coo(&union, std::path::Path::new(out), &opts)?
+    };
+    println!(
+        "packed {} instances ({} raw, {} duplicate(s) dropped) into {} shard(s) at {out} — \
+         {}x{} matrix, embedded id map",
+        stats.nnz, stats.raw_nnz, stats.duplicates, stats.shards, stats.nrows, stats.ncols
+    );
     Ok(())
 }
 
@@ -194,7 +301,7 @@ fn cmd_compare(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let data = resolve(args)?;
     let engine = EngineKind::parse(&args.get_or("engine", "a2psgd"))?;
-    let cfg = config_from_args(args, engine, &data)?;
+    let cfg = config_from_args(args, engine, &data.name)?;
     // Either load a checkpoint or train fresh.
     let factors = match args.get("load") {
         Some(path) => {
@@ -453,12 +560,13 @@ fn cmd_stream(args: &Args) -> Result<()> {
 }
 
 /// Hot-path benchmark pipeline: update-kernel micro benches, the
-/// scalar-vs-SIMD kernel A/B across the rank-specialized set, the block
-/// layout A/B (pre-PR COO global-id sweep vs block-local CSR lanes), a
-/// per-engine epoch macro over the paper set, scheduler fairness, and the
-/// pool-vs-scope epoch-overhead micro — all emitted as machine-readable
-/// `BENCH_hotpath.json` so later PRs have a perf trajectory to regress
-/// against.
+/// scalar-vs-SIMD kernel A/B across the rank-specialized set, the
+/// text-vs-shard ingest A/B, the block layout A/B (pre-PR COO global-id
+/// sweep vs block-local CSR lanes), a per-engine epoch macro over the paper
+/// set, scheduler fairness, and the pool-vs-scope epoch-overhead micro —
+/// all emitted as machine-readable `BENCH_hotpath.json` so later PRs have a
+/// perf trajectory to regress against (CI gates the speedup ratios via
+/// `scripts/bench_gate.py`).
 fn cmd_bench(args: &Args) -> Result<()> {
     use a2psgd::bench_harness::{bench, bench_batched, fmt_secs, json, Table};
     use a2psgd::config::BenchConfig;
@@ -615,6 +723,59 @@ fn cmd_bench(args: &Args) -> Result<()> {
     }
     println!("{}", kt.render());
 
+    // 1c. Ingest A/B: the full file→Dataset path, text parse vs packed
+    // `.a2ps` shard ingest of the same records (written to a temp dir and
+    // packed once, unmeasured). This is the loader stage the shard pipeline
+    // replaced — the artifact keeps the before/after on record.
+    let ingest_json = {
+        let tmp = std::env::temp_dir().join(format!("a2psgd_bench_ingest_{}", std::process::id()));
+        std::fs::remove_dir_all(&tmp).ok();
+        std::fs::create_dir_all(&tmp)?;
+        let text_path = tmp.join("bench.tsv");
+        let mut text = String::with_capacity(data.total_nnz() * 12);
+        for e in data.train.entries().iter().chain(data.test.entries()) {
+            text.push_str(&format!("{} {} {}\n", e.u, e.v, e.r));
+        }
+        std::fs::write(&text_path, &text)?;
+        drop(text);
+        let shard_dir = tmp.join("shards");
+        let pstats = a2psgd::data::shard::pack_text(
+            &text_path,
+            &shard_dir,
+            &a2psgd::data::shard::PackOptions::default(),
+        )?;
+        let text_bench = bench("ingest (text → Dataset)", bcfg.warmup, bcfg.iters, || {
+            let d = a2psgd::data::loader::load_file(&text_path, "bench", 0.3, bcfg.seed)
+                .expect("text ingest");
+            std::hint::black_box(d.total_nnz());
+        });
+        let shard_bench = bench("ingest (.a2ps shards → Dataset)", bcfg.warmup, bcfg.iters, || {
+            let mut src = a2psgd::data::ingest::ShardDirSource::open(&shard_dir)
+                .expect("open shard dir");
+            let d = a2psgd::data::ingest::materialize(&mut src, "bench", 0.3, bcfg.seed)
+                .expect("shard ingest");
+            std::hint::black_box(d.total_nnz());
+        });
+        std::fs::remove_dir_all(&tmp).ok();
+        println!("{}", text_bench.summary());
+        println!("{}", shard_bench.summary());
+        let ingest_speedup = text_bench.median() / shard_bench.median();
+        println!(
+            "ingest: shard path {:.2}x vs text parse ({} vs {} for {} instances)",
+            ingest_speedup,
+            fmt_secs(shard_bench.median()),
+            fmt_secs(text_bench.median()),
+            pstats.nnz
+        );
+        json::Obj::new()
+            .num("text_s", text_bench.median())
+            .num("shard_s", shard_bench.median())
+            .num("speedup", ingest_speedup)
+            .int("nnz", pstats.nnz)
+            .int("shards", pstats.shards as u64)
+            .build()
+    };
+
     // 2. Layout A/B: identical single-threaded NAG epoch over the balanced
     // grid, once through the pre-PR layout (per-block AoS entry lists with
     // global ids) and once through the block-local CSR lanes.
@@ -765,7 +926,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     // 5. Emit the JSON artifact.
     let payload = json::Obj::new()
         .str("bench", "hotpath")
-        .int("version", 2)
+        .int("version", 3)
         .str("kernel_path", &kernel_path.to_string())
         .str("dataset", &data.name)
         .int("threads", bcfg.threads as u64)
@@ -797,6 +958,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 .build(),
         )
         .raw("kernel_ab", &json::array(kernel_ab_rows))
+        .raw("ingest", &ingest_json)
         .raw("engines", &json::array(engine_rows))
         .raw(
             "scheduler",

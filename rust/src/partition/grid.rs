@@ -54,6 +54,18 @@ impl BlockGrid {
         BlockGrid { nblocks, row_bounds, col_bounds, blocks }
     }
 
+    /// Assemble a grid from externally built blocks — the shard-wise
+    /// out-of-core ingest path ([`crate::data::ingest::ingest_ooc`]), which
+    /// scatters shard streams into [`BlockCsr`] buckets itself. Blocks are
+    /// row-major `nblocks × nblocks` and must already be finalized with
+    /// spans matching the bounds.
+    pub fn from_block_parts(row_bounds: Bounds, col_bounds: Bounds, blocks: Vec<BlockCsr>) -> Self {
+        assert_eq!(row_bounds.len(), col_bounds.len(), "grid must be square");
+        let nblocks = row_bounds.len() - 1;
+        assert_eq!(blocks.len(), nblocks * nblocks, "expected nblocks² blocks");
+        BlockGrid { nblocks, row_bounds, col_bounds, blocks }
+    }
+
     /// Grid side length (c+1).
     pub fn nblocks(&self) -> usize {
         self.nblocks
@@ -119,7 +131,7 @@ impl BlockGrid {
 /// tail to block 0 and corrupt the grid (entries landing in a block whose
 /// row/column range excludes them — breaking the scheduler's exclusive-rows
 /// safety contract), so coverage is asserted.
-fn build_assignment(bounds: &Bounds, n: u32) -> Vec<u32> {
+pub(crate) fn build_assignment(bounds: &Bounds, n: u32) -> Vec<u32> {
     let last = *bounds.last().expect("bounds must be non-empty");
     assert_eq!(
         last, n,

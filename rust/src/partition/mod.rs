@@ -14,6 +14,7 @@
 mod grid;
 
 pub use grid::BlockGrid;
+pub(crate) use grid::build_assignment;
 
 use crate::sparse::CooMatrix;
 

@@ -109,13 +109,7 @@ impl CooMatrix {
     /// Drop duplicate (u,v) pairs, keeping the last occurrence.
     /// Returns the number of duplicates removed.
     pub fn dedup(&mut self) -> usize {
-        let before = self.entries.len();
-        self.sort_row_major();
-        // keep last: reverse, dedup-by keeps first in iteration order
-        self.entries.reverse();
-        self.entries.dedup_by(|a, b| a.u == b.u && a.v == b.v);
-        self.entries.reverse();
-        before - self.entries.len()
+        dedup_keep_last(&mut self.entries)
     }
 
     /// Mean rating over Ω (0 if empty).
@@ -150,6 +144,23 @@ impl CooMatrix {
         }
         (a, b)
     }
+}
+
+/// Sort `entries` into canonical row-major `(u, v)` order and drop duplicate
+/// pairs, keeping the **last occurrence in input order** (stable sort, so
+/// equal keys preserve input order; then reverse → dedup-first → reverse).
+/// Returns the number of duplicates removed.
+///
+/// This is the single dedup definition both [`CooMatrix::dedup`] (the text
+/// loader) and the pack-time shard finalizer use — out-of-core vs in-memory
+/// bit-parity depends on them agreeing on survivor choice and final order.
+pub fn dedup_keep_last(entries: &mut Vec<Entry>) -> usize {
+    let before = entries.len();
+    entries.sort_by(|a, b| (a.u, a.v).cmp(&(b.u, b.v)));
+    entries.reverse();
+    entries.dedup_by(|a, b| a.u == b.u && a.v == b.v);
+    entries.reverse();
+    before - entries.len()
 }
 
 #[cfg(test)]
@@ -214,6 +225,24 @@ mod tests {
         assert_eq!(m.nnz(), 2);
         let e = m.entries().iter().find(|e| e.u == 0 && e.v == 0).unwrap();
         assert_eq!(e.r, 2.0);
+    }
+
+    #[test]
+    fn dedup_keep_last_is_stable_under_interleaving() {
+        // Duplicates separated by unrelated entries: the *last* occurrence
+        // in input order must survive (requires the stable sort).
+        let mut m = CooMatrix::new(3, 3);
+        m.push(0, 0, 1.0).unwrap();
+        m.push(1, 0, 9.0).unwrap();
+        m.push(0, 0, 2.0).unwrap();
+        m.push(2, 2, 7.0).unwrap();
+        m.push(0, 0, 3.0).unwrap();
+        assert_eq!(m.dedup(), 2);
+        let e = m.entries().iter().find(|e| e.u == 0 && e.v == 0).unwrap();
+        assert_eq!(e.r, 3.0, "keep-last must pick the final occurrence");
+        // Result is in canonical row-major order.
+        let keys: Vec<(u32, u32)> = m.entries().iter().map(|e| (e.u, e.v)).collect();
+        assert_eq!(keys, vec![(0, 0), (1, 0), (2, 2)]);
     }
 
     #[test]

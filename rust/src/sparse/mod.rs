@@ -14,5 +14,5 @@ mod csr;
 pub mod stats;
 
 pub use block_csr::{BlockCsr, CsrRowRange, EntryLanes, LaneSlice, SweepLanes};
-pub use coo::{CooMatrix, Entry};
+pub use coo::{dedup_keep_last, CooMatrix, Entry};
 pub use csr::CsrMatrix;

@@ -27,7 +27,9 @@ pub mod online;
 pub mod source;
 
 pub use online::{OnlineStats, OnlineTrainer};
-pub use source::{ChannelSource, Event, EventSender, EventSource, MicroBatch, ReplaySource};
+pub use source::{
+    ChannelSource, Event, EventSender, EventSource, MicroBatch, ReplaySource, ShardReplaySource,
+};
 
 use crate::data::loader::IdMap;
 use crate::data::Dataset;

@@ -1,0 +1,299 @@
+//! Shard-format + out-of-core pipeline integration: pack→load equivalence
+//! with the text loader, corruption/truncation detection, shard replay, and
+//! RMSE parity between the in-memory and out-of-core training paths.
+
+use a2psgd::data::ingest::{materialize, EntrySource, ShardDirSource};
+use a2psgd::data::shard::{
+    self, pack_text, PackOptions, ShardReader, RECORD_LEN, SHARD_HEADER_LEN,
+};
+use a2psgd::data::{loader, synthetic};
+use a2psgd::engine::{train, train_ooc, EngineKind, TrainConfig};
+use a2psgd::sparse::Entry;
+use a2psgd::stream::{EventSource, ShardReplaySource};
+use std::path::{Path, PathBuf};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("a2psgd_it_shard_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A MovieLens-style `::`-separated fixture with sparse external ids and
+/// one duplicate `(user, item)` pair whose last occurrence must win.
+fn write_movielens_fixture(path: &Path) {
+    let mut text = String::from("# MovieLens-style fixture\n");
+    for u in 1..=40u32 {
+        for v in 1..=12u32 {
+            text.push_str(&format!(
+                "{}::{}::{}::9783{:05}\n",
+                u * 3,
+                v * 7,
+                (u + v) % 5 + 1,
+                u * 100 + v
+            ));
+        }
+    }
+    text.push_str("3::7::5::0\n"); // duplicate of (u=1, v=1) → rating 5 wins
+    std::fs::write(path, text).unwrap();
+}
+
+#[test]
+fn pack_then_load_matches_text_loader_exactly() {
+    let dir = tmpdir("equiv");
+    let input = dir.join("ratings.dat");
+    write_movielens_fixture(&input);
+    let shard_dir = dir.join("shards");
+    // Tiny shards so the fixture spans several files.
+    let stats = pack_text(&input, &shard_dir, &PackOptions { shard_bytes: 2048 }).unwrap();
+    assert_eq!(stats.duplicates, 1);
+    assert_eq!(stats.raw_nnz, 481);
+    assert_eq!(stats.nnz, 480);
+    assert!(stats.shards >= 2, "fixture should span shards, got {}", stats.shards);
+
+    let (text_data, text_map) = loader::load_file_with_map(&input, "fx", 0.3, 42).unwrap();
+    let mut src = ShardDirSource::open(&shard_dir).unwrap();
+    let shard_data = materialize(&mut src, "fx", 0.3, 42).unwrap();
+    assert_eq!(text_data.train.entries(), shard_data.train.entries());
+    assert_eq!(text_data.test.entries(), shard_data.test.entries());
+    assert_eq!(text_data.rating_min, shard_data.rating_min);
+    assert_eq!(text_data.rating_max, shard_data.rating_max);
+    // The embedded id map is the loader's map.
+    let shard_map = src.idmap().unwrap();
+    assert_eq!(text_map, shard_map);
+    // The duplicate kept the last value (external user 3, item 7 → dense 0,0).
+    let du = shard_map.user(3).unwrap();
+    let dv = shard_map.item(7).unwrap();
+    let e = text_data
+        .train
+        .entries()
+        .iter()
+        .chain(text_data.test.entries())
+        .find(|e| e.u == du && e.v == dv)
+        .unwrap();
+    assert_eq!(e.r, 5.0, "keep-last dedup must surface the final rating");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn crc_corruption_is_detected_on_full_sweep() {
+    let dir = tmpdir("crc");
+    let p = dir.join("s.a2ps");
+    let entries: Vec<Entry> = (0..200u32)
+        .map(|i| Entry { u: i / 20, v: i % 20, r: (i % 5) as f32 + 1.0 })
+        .collect();
+    shard::write_shard(&p, 10, 20, 0, 10, &entries).unwrap();
+    // Flip one bit inside a record's value byte (keeps it finite).
+    let mut bytes = std::fs::read(&p).unwrap();
+    let k = SHARD_HEADER_LEN + 57 * RECORD_LEN + 8;
+    bytes[k] ^= 0x01;
+    std::fs::write(&p, &bytes).unwrap();
+    let mut r = ShardReader::open(&p).unwrap();
+    let mut buf = Vec::new();
+    let res = loop {
+        match r.next_chunk(&mut buf, 64) {
+            Ok(0) => break Ok(()),
+            Ok(_) => continue,
+            Err(e) => break Err(e),
+        }
+    };
+    let err = res.expect_err("corrupted shard must fail the CRC check");
+    assert!(err.to_string().contains("CRC"), "unexpected error: {err:#}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn truncated_shard_fails_at_open() {
+    let dir = tmpdir("trunc");
+    let p = dir.join("s.a2ps");
+    let entries: Vec<Entry> = (0..50u32).map(|i| Entry { u: 0, v: i, r: 1.0 }).collect();
+    shard::write_shard(&p, 1, 50, 0, 1, &entries).unwrap();
+    let bytes = std::fs::read(&p).unwrap();
+    // Drop the last half-record.
+    std::fs::write(&p, &bytes[..bytes.len() - RECORD_LEN / 2]).unwrap();
+    let err = ShardReader::open(&p).expect_err("truncated shard must fail at open");
+    assert!(err.to_string().contains("truncated"), "unexpected error: {err:#}");
+    // A file shorter than the header also fails cleanly.
+    std::fs::write(&p, &bytes[..SHARD_HEADER_LEN - 8]).unwrap();
+    assert!(ShardReader::open(&p).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn pack_rejects_non_finite_text() {
+    let dir = tmpdir("nan");
+    let input = dir.join("bad.tsv");
+    std::fs::write(&input, "1 2 3.5\n4 5 NaN\n").unwrap();
+    let err = pack_text(&input, &dir.join("shards"), &PackOptions::default())
+        .expect_err("pack must reject NaN at conversion time");
+    assert!(err.to_string().contains("non-finite"), "unexpected error: {err:#}");
+    std::fs::write(&input, "1 2 3.5\n4 5 inf\n").unwrap();
+    assert!(pack_text(&input, &dir.join("shards2"), &PackOptions::default()).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The acceptance gate: `pack` + out-of-core training reproduce the
+/// in-memory text path's RMSE within 1e-6 on the small twin (bit-identical
+/// at threads=1: same id map, same canonical order, same hash split, same
+/// RNG discipline, same grid).
+#[test]
+fn ooc_train_rmse_parity_with_in_memory_path() {
+    let dir = tmpdir("parity");
+    let twin = synthetic::small(0x77);
+    let text_path = dir.join("twin.tsv");
+    let mut text = String::new();
+    for e in twin.train.entries().iter().chain(twin.test.entries()) {
+        text.push_str(&format!("{} {} {}\n", e.u, e.v, e.r));
+    }
+    std::fs::write(&text_path, text).unwrap();
+    let shard_dir = dir.join("shards");
+    // Small shard budget → multi-shard pack exercises the parallel merge.
+    let stats = pack_text(&text_path, &shard_dir, &PackOptions { shard_bytes: 16 << 10 }).unwrap();
+    assert!(stats.shards >= 2);
+
+    for engine in [EngineKind::A2psgd, EngineKind::Fpsgd] {
+        let data = loader::load_file(&text_path, "twin", 0.3, 0x5EED).unwrap();
+        let cfg = TrainConfig::preset(engine, &data)
+            .threads(1)
+            .epochs(3)
+            .dim(8)
+            .no_early_stop();
+        let mem = train(&data, &cfg).unwrap();
+        let ooc = train_ooc(&shard_dir, "twin", &cfg, 0.3, 0x5EED, 1000).unwrap();
+        assert_eq!(mem.total_updates, ooc.total_updates, "{engine}: quota drift");
+        assert!(
+            (mem.final_rmse() - ooc.final_rmse()).abs() < 1e-6,
+            "{engine}: RMSE diverged — in-memory {:.9} vs out-of-core {:.9}",
+            mem.final_rmse(),
+            ooc.final_rmse()
+        );
+        assert!(
+            (mem.final_mae() - ooc.final_mae()).abs() < 1e-6,
+            "{engine}: MAE diverged"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn ooc_train_multithreaded_smoke() {
+    // Multi-threaded schedules are timing-dependent, so no bit parity — but
+    // the out-of-core path must still learn (beat the mean-rating baseline).
+    let dir = tmpdir("ooc_mt");
+    let twin = synthetic::small(0x99);
+    let text_path = dir.join("twin.tsv");
+    let mut text = String::new();
+    for e in twin.train.entries().iter().chain(twin.test.entries()) {
+        text.push_str(&format!("{} {} {}\n", e.u, e.v, e.r));
+    }
+    std::fs::write(&text_path, text).unwrap();
+    let shard_dir = dir.join("shards");
+    pack_text(&text_path, &shard_dir, &PackOptions { shard_bytes: 16 << 10 }).unwrap();
+    let cfg = TrainConfig::preset_named(EngineKind::A2psgd, "twin")
+        .threads(4)
+        .epochs(6)
+        .dim(8)
+        .no_early_stop();
+    let report = train_ooc(&shard_dir, "twin", &cfg, 0.3, 0x5EED, 500).unwrap();
+    let data = loader::load_file(&text_path, "twin", 0.3, 0x5EED).unwrap();
+    let mean = data.train.mean_rating();
+    let base = {
+        let n = data.test.nnz() as f64;
+        let sse: f64 = data
+            .test
+            .entries()
+            .iter()
+            .map(|e| {
+                let d = e.r as f64 - mean;
+                d * d
+            })
+            .sum();
+        (sse / n).sqrt()
+    };
+    assert!(
+        report.best_rmse() < base * 1.05,
+        "ooc rmse {:.4} vs mean baseline {:.4}",
+        report.best_rmse(),
+        base
+    );
+    assert!(report.total_updates >= data.train.nnz() as u64 * 6);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn ooc_rejects_unsupported_engines() {
+    let dir = tmpdir("ooc_bad_engine");
+    let twin = synthetic::small(1);
+    let shard_dir = dir.join("shards");
+    let triplets: Vec<(u64, u64, f32)> = twin
+        .train
+        .entries()
+        .iter()
+        .map(|e| (e.u as u64, e.v as u64, e.r))
+        .collect();
+    shard::pack_triplets(&triplets, &shard_dir, &PackOptions::default()).unwrap();
+    let cfg = TrainConfig::preset_named(EngineKind::Hogwild, "x").threads(2).epochs(1);
+    let err = train_ooc(&shard_dir, "x", &cfg, 0.3, 1, 100).expect_err("hogwild has no ooc path");
+    assert!(err.to_string().contains("out-of-core"), "unexpected error: {err:#}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resolve_dataset_accepts_shard_dirs() {
+    let dir = tmpdir("resolve");
+    let input = dir.join("ratings.dat");
+    write_movielens_fixture(&input);
+    let shard_dir = dir.join("shards");
+    pack_text(&input, &shard_dir, &PackOptions::default()).unwrap();
+    let key = shard_dir.to_string_lossy().to_string();
+    let data = a2psgd::coordinator::resolve_dataset(&key, 7).unwrap();
+    let reference = loader::load_file(&input, &key, 0.3, 7).unwrap();
+    assert_eq!(data.train.entries(), reference.train.entries());
+    assert_eq!(data.test.entries(), reference.test.entries());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn shard_replay_feeds_streaming_like_text_replay() {
+    let dir = tmpdir("replay");
+    let input = dir.join("ratings.dat");
+    write_movielens_fixture(&input);
+    let shard_dir = dir.join("shards");
+    let stats = pack_text(&input, &shard_dir, &PackOptions { shard_bytes: 2048 }).unwrap();
+    let mut src = ShardReplaySource::with_chunk(&shard_dir, 13).unwrap();
+    let mut n = 0u64;
+    let mut last_t = None;
+    while let Some(b) = src.next_batch(17) {
+        for e in &b.events {
+            // External (sparse) ids, monotone timestamps.
+            assert_eq!(e.u % 3, 0, "external user ids are multiples of 3");
+            if let Some(t) = last_t {
+                assert!(e.t > t);
+            }
+            last_t = Some(e.t);
+            n += 1;
+        }
+    }
+    assert!(src.error().is_none());
+    assert_eq!(n, stats.nnz);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn shard_source_chunk_bound_is_respected() {
+    let dir = tmpdir("chunkbound");
+    let input = dir.join("ratings.dat");
+    write_movielens_fixture(&input);
+    let shard_dir = dir.join("shards");
+    pack_text(&input, &shard_dir, &PackOptions { shard_bytes: 4096 }).unwrap();
+    let mut src = ShardDirSource::with_chunk(&shard_dir, 9).unwrap();
+    let mut total = 0u64;
+    src.scan(&mut |chunk| {
+        assert!(chunk.len() <= 9, "chunk bound violated: {}", chunk.len());
+        total += chunk.len() as u64;
+        Ok(())
+    })
+    .unwrap();
+    assert_eq!(total, src.nnz());
+    std::fs::remove_dir_all(&dir).ok();
+}

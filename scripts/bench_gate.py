@@ -1,0 +1,93 @@
+#!/usr/bin/env python3
+"""Bench regression gate for BENCH_hotpath.json.
+
+Compares the *dimensionless speedup ratios* of the current bench artifact
+against a committed baseline and fails (exit 1) on regressions beyond the
+tolerance. Ratios — SIMD-vs-scalar per (op, rank) in `kernel_ab`, and
+pool-vs-scope in `pool` — transfer across machines, unlike absolute ns/op,
+which is why the baseline can live in the repo while CI runs on whatever
+runner GitHub hands out.
+
+The committed BENCH_baseline.json holds conservative floors (see its `note`
+field), so the gate's practical meaning is: the dispatched SIMD path must
+not become materially slower than the scalar reference, and the persistent
+pool must not become materially slower than per-epoch thread spawns. With
+`--tolerance 1.25` a section fails when its speedup drops below
+baseline / 1.25 — i.e. a >25% median regression. CI runs the bench in
+`--iters 1` smoke mode, so single-sample medians are noisy; the tolerance
+(plus floor-valued baselines) absorbs that.
+
+Usage:
+    bench_gate.py CURRENT.json BASELINE.json [--tolerance 1.25]
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="freshly produced BENCH_hotpath.json")
+    ap.add_argument("baseline", help="committed BENCH_baseline.json")
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=1.25,
+        help="allowed regression factor; fail when current < baseline / tolerance",
+    )
+    args = ap.parse_args()
+
+    cur = load(args.current)
+    base = load(args.baseline)
+    tol = args.tolerance
+    failures = []
+    checked = 0
+
+    # kernel_ab: match baseline rows to current rows by (op, d).
+    cur_rows = {(r["op"], r["d"]): r for r in cur.get("kernel_ab", [])}
+    for row in base.get("kernel_ab", []):
+        key = (row["op"], row["d"])
+        want = row["speedup"]
+        got_row = cur_rows.get(key)
+        if got_row is None:
+            failures.append(f"kernel_ab {key}: missing from current artifact")
+            continue
+        got = got_row["speedup"]
+        checked += 1
+        if got < want / tol:
+            failures.append(
+                f"kernel_ab {key}: speedup {got:.3f} < floor {want:.3f}/{tol:.2f} "
+                f"= {want / tol:.3f}"
+            )
+
+    # pool: epoch fork/join speedup of the persistent pool vs thread::scope.
+    base_pool = base.get("pool", {}).get("speedup")
+    cur_pool = cur.get("pool", {}).get("speedup")
+    if base_pool is not None:
+        if cur_pool is None:
+            failures.append("pool: missing from current artifact")
+        else:
+            checked += 1
+            if cur_pool < base_pool / tol:
+                failures.append(
+                    f"pool: speedup {cur_pool:.3f} < floor {base_pool:.3f}/{tol:.2f} "
+                    f"= {base_pool / tol:.3f}"
+                )
+
+    if failures:
+        print(f"bench gate: {len(failures)} regression(s) past the {tol:.2f}x tolerance:")
+        for f in failures:
+            print(f"  FAIL {f}")
+        return 1
+    print(f"bench gate: {checked} speedup ratio(s) within tolerance {tol:.2f}x")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
