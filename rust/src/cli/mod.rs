@@ -4,6 +4,7 @@
 //! a2psgd train   [--engine E] [--dataset D] [--threads N] [--epochs N]
 //!                [--seed S] [--d D] [--eta F] [--lam F] [--gamma F]
 //!                [--partition uniform|balanced] [--kernel auto|scalar]
+//!                [--memory auto|resident|streaming] [--stream-mb N]
 //!                [--config FILE]
 //!                [--data-file PATH] [--out DIR] [--no-early-stop]
 //! a2psgd compare [--dataset D] [--threads N] [--seeds N] [--epochs N] [--out DIR]
@@ -113,10 +114,12 @@ USAGE:
                       NAG updates, and zero-downtime factor hot-swap
   a2psgd bench        hot-path benchmark pipeline: update-kernel micro,
                       scalar-vs-SIMD kernel A/B across ranks, text-vs-shard
-                      ingest A/B, layout A/B (COO vs block-CSR sweep),
-                      per-engine epoch macro, scheduler fairness, and the
-                      pool-vs-scope epoch overhead micro — emits
-                      BENCH_hotpath.json at the repo root (--out overrides)
+                      ingest A/B, mmap-vs-BufReader shard readback micro,
+                      resident-vs-streaming epoch A/B, layout A/B (COO vs
+                      block-CSR sweep), per-engine epoch macro, scheduler
+                      fairness, and the pool-vs-scope epoch overhead micro —
+                      emits BENCH_hotpath.json at the repo root (--out
+                      overrides)
   a2psgd pack         convert a ratings file (or builtin dataset) into a
                       packed .a2ps shard directory: versioned binary shards
                       split by row range, embedded id map, CRC per shard —
@@ -133,6 +136,13 @@ COMMON FLAGS:
                    block engines (fpsgd, a2psgd) and materialize otherwise
   --format auto|text|shards   assert how `train` interprets the dataset
                    path (mismatch is an error; other commands auto-detect)
+  --memory auto|resident|streaming   grid residency for shard-dir training:
+                   resident decodes the whole block grid up front; streaming
+                   re-decodes mmap-backed row-range tiles per epoch (bounded
+                   by --stream-mb); auto picks streaming once the estimated
+                   grid exceeds the budget (A2PSGD_MEMORY=... overrides auto)
+  --stream-mb N    streaming tile budget in MiB (default: 512, or
+                   `[data] stream_mb` from --config)
   --engine  seq|hogwild|dsgd|asgd|fpsgd|a2psgd|xla
   --threads N      worker threads (default: hardware, capped 32)
   --epochs N       max epochs
@@ -161,7 +171,11 @@ PACK FLAGS:
                      `[data] shard_mb` from --config)
 
 STREAM FLAGS:
-  --warm-frac F      fraction of users trained offline, rest streamed (0.8)
+  --warm-frac F      fraction of users trained offline, rest streamed (0.8);
+                     for a shard-dir dataset the warm phase trains straight
+                     off the matching shard prefix out of core (--memory
+                     applies) and the cold shards replay as live events —
+                     the dataset is never materialized end to end
   --batch N          max events per micro-batch
   --window N         sliding-window capacity
   --publish-every N  snapshot publish cadence (batches)

@@ -128,6 +128,58 @@ impl RunConfig {
     }
 }
 
+/// How shard-directory training holds the block grid in memory.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemoryMode {
+    /// Pick per run: resident while the estimated grid fits the streaming
+    /// tile budget, streaming beyond it. The `A2PSGD_MEMORY` env var
+    /// overrides the automatic choice (explicit modes always win).
+    Auto,
+    /// Decode the whole grid into RAM once before the first epoch.
+    Resident,
+    /// Re-decode shard row-ranges into tiles every epoch through the
+    /// mmap-backed readers (`engine::stream_grid`); peak grid memory is
+    /// bounded by the tile budget instead of total nnz.
+    Streaming,
+}
+
+impl MemoryMode {
+    /// Parse a CLI/TOML name.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "auto" => MemoryMode::Auto,
+            "resident" => MemoryMode::Resident,
+            "streaming" | "stream" => MemoryMode::Streaming,
+            other => anyhow::bail!("unknown memory mode {other:?} (auto | resident | streaming)"),
+        })
+    }
+
+    /// Resolve `Auto` into a concrete mode for a grid whose training lanes
+    /// are estimated at `est_grid_bytes`. Explicit modes pass through
+    /// untouched; for `Auto` the `A2PSGD_MEMORY` env var wins when set to a
+    /// concrete mode, else the tile-budget threshold decides.
+    pub fn resolve(self, est_grid_bytes: u64, tile_bytes: u64) -> MemoryMode {
+        match self {
+            MemoryMode::Auto => {
+                if let Ok(v) = std::env::var("A2PSGD_MEMORY") {
+                    match MemoryMode::parse(&v) {
+                        Ok(m) if m != MemoryMode::Auto => return m,
+                        _ => eprintln!(
+                            "warning: ignoring A2PSGD_MEMORY={v:?} (want resident | streaming)"
+                        ),
+                    }
+                }
+                if est_grid_bytes > tile_bytes {
+                    MemoryMode::Streaming
+                } else {
+                    MemoryMode::Resident
+                }
+            }
+            explicit => explicit,
+        }
+    }
+}
+
 /// How a `--data-file`/`--dataset` path should be interpreted.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DataFormat {
@@ -159,6 +211,8 @@ impl DataFormat {
 /// format = "auto"      # auto | text | shards — how dataset paths are read
 /// shard_mb = 64        # target shard payload size for `a2psgd pack`
 /// chunk_kb = 768       # ingest read-buffer bound (out-of-core chunking)
+/// memory = "auto"      # auto | resident | streaming — grid residency
+/// stream_mb = 512      # streaming tile budget / auto-selection threshold
 /// ```
 #[derive(Clone, Copy, Debug)]
 pub struct DataConfig {
@@ -168,11 +222,22 @@ pub struct DataConfig {
     pub shard_mb: usize,
     /// Read-buffer bound in KiB for chunked shard ingestion.
     pub chunk_kb: usize,
+    /// Grid residency policy for shard-directory training.
+    pub memory: MemoryMode,
+    /// Streaming tile budget in MiB — per-wave decoded payload bound, and
+    /// the grid-size threshold above which `memory = auto` goes streaming.
+    pub stream_mb: usize,
 }
 
 impl Default for DataConfig {
     fn default() -> Self {
-        DataConfig { format: DataFormat::Auto, shard_mb: 64, chunk_kb: 768 }
+        DataConfig {
+            format: DataFormat::Auto,
+            shard_mb: 64,
+            chunk_kb: 768,
+            memory: MemoryMode::Auto,
+            stream_mb: 512,
+        }
     }
 }
 
@@ -182,6 +247,9 @@ impl DataConfig {
         let doc = parse(text)?;
         if let Some(v) = doc.get("data", "format") {
             self.format = DataFormat::parse(v.as_str().context("data.format must be a string")?)?;
+        }
+        if let Some(v) = doc.get("data", "memory") {
+            self.memory = MemoryMode::parse(v.as_str().context("data.memory must be a string")?)?;
         }
         let int = |k: &str| -> Result<Option<i64>> {
             match doc.get("data", k) {
@@ -199,12 +267,20 @@ impl DataConfig {
         if let Some(x) = int("chunk_kb")? {
             self.chunk_kb = x as usize;
         }
+        if let Some(x) = int("stream_mb")? {
+            self.stream_mb = x as usize;
+        }
         Ok(self)
     }
 
     /// Records per ingest chunk derived from `chunk_kb`.
     pub fn chunk_records(&self) -> usize {
         ((self.chunk_kb.max(1) * 1024) / crate::data::shard::RECORD_LEN).max(1)
+    }
+
+    /// Streaming tile budget in bytes derived from `stream_mb`.
+    pub fn tile_bytes(&self) -> u64 {
+        (self.stream_mb.max(1) as u64) << 20
     }
 }
 
@@ -438,12 +514,18 @@ lam = 3e-2
     #[test]
     fn data_config_overrides_applied() {
         let dc = DataConfig::default()
-            .apply_toml("[data]\nformat = \"shards\"\nshard_mb = 128\nchunk_kb = 256\n")
+            .apply_toml(
+                "[data]\nformat = \"shards\"\nshard_mb = 128\nchunk_kb = 256\n\
+                 memory = \"streaming\"\nstream_mb = 64\n",
+            )
             .unwrap();
         assert_eq!(dc.format, DataFormat::Shards);
         assert_eq!(dc.shard_mb, 128);
         assert_eq!(dc.chunk_kb, 256);
         assert_eq!(dc.chunk_records(), 256 * 1024 / 12);
+        assert_eq!(dc.memory, MemoryMode::Streaming);
+        assert_eq!(dc.stream_mb, 64);
+        assert_eq!(dc.tile_bytes(), 64 << 20);
     }
 
     #[test]
@@ -451,9 +533,29 @@ lam = 3e-2
         assert!(DataConfig::default().apply_toml("[data]\nformat = \"xml\"\n").is_err());
         assert!(DataConfig::default().apply_toml("[data]\nshard_mb = 0\n").is_err());
         assert!(DataConfig::default().apply_toml("[data]\nchunk_kb = -5\n").is_err());
+        assert!(DataConfig::default().apply_toml("[data]\nmemory = \"tape\"\n").is_err());
+        assert!(DataConfig::default().apply_toml("[data]\nstream_mb = 0\n").is_err());
         // Other sections are ignored.
         let dc = DataConfig::default().apply_toml("[bench]\nthreads = 4\n").unwrap();
         assert_eq!(dc.shard_mb, 64);
+        assert_eq!(dc.memory, MemoryMode::Auto);
+    }
+
+    #[test]
+    fn memory_mode_parse_and_resolve() {
+        assert_eq!(MemoryMode::parse("auto").unwrap(), MemoryMode::Auto);
+        assert_eq!(MemoryMode::parse("RESIDENT").unwrap(), MemoryMode::Resident);
+        assert_eq!(MemoryMode::parse("stream").unwrap(), MemoryMode::Streaming);
+        assert!(MemoryMode::parse("disk").is_err());
+        // Explicit modes pass through resolve untouched.
+        assert_eq!(MemoryMode::Resident.resolve(u64::MAX, 1), MemoryMode::Resident);
+        assert_eq!(MemoryMode::Streaming.resolve(0, u64::MAX), MemoryMode::Streaming);
+        // Auto thresholds on the tile budget (assuming A2PSGD_MEMORY is not
+        // set to a concrete mode in the test environment).
+        if std::env::var("A2PSGD_MEMORY").is_err() {
+            assert_eq!(MemoryMode::Auto.resolve(100, 1000), MemoryMode::Resident);
+            assert_eq!(MemoryMode::Auto.resolve(2000, 1000), MemoryMode::Streaming);
+        }
     }
 
     #[test]

@@ -29,6 +29,7 @@
 //!   the parallel decode interleaves.
 
 use crate::data::shard::{open_checked, Manifest, DEFAULT_CHUNK};
+use crate::data::split_cache::SplitBitmap;
 use crate::data::{split, Dataset};
 use crate::partition::{bounds_for, build_assignment, BlockGrid, PartitionKind};
 use crate::runtime::pool::WorkerPool;
@@ -88,10 +89,18 @@ impl EntrySource for CooSource<'_> {
 }
 
 /// Out-of-core [`EntrySource`] over a packed `.a2ps` shard directory.
+///
+/// Optionally restricted to a *shard prefix* (the first `k` shards). Because
+/// shards tile the dense rows contiguously in manifest order, a prefix is
+/// itself a well-formed dataset over rows `[0, shards[k-1].row_hi)` — the
+/// out-of-core warm phase of `a2psgd stream` trains on exactly such a
+/// prefix and replays the remaining shards as live events.
 pub struct ShardDirSource {
     dir: PathBuf,
     manifest: Manifest,
     chunk: usize,
+    /// Shards delivered by a scan (`manifest.shards[..prefix]`).
+    prefix: usize,
 }
 
 impl ShardDirSource {
@@ -103,14 +112,29 @@ impl ShardDirSource {
     /// Open with an explicit records-per-chunk read buffer bound.
     pub fn with_chunk(dir: &Path, chunk: usize) -> Result<Self> {
         let manifest = Manifest::load(dir)?;
+        let prefix = manifest.shards.len();
         Ok(ShardDirSource {
             dir: dir.to_path_buf(),
             manifest,
             chunk: chunk.max(1),
+            prefix,
         })
     }
 
-    /// The validated manifest.
+    /// Open restricted to the first `prefix` shards (1-based count).
+    pub fn with_chunk_prefix(dir: &Path, chunk: usize, prefix: usize) -> Result<Self> {
+        let mut src = Self::with_chunk(dir, chunk)?;
+        ensure!(
+            prefix >= 1 && prefix <= src.manifest.shards.len(),
+            "shard prefix {prefix} outside 1..={}",
+            src.manifest.shards.len()
+        );
+        src.prefix = prefix;
+        Ok(src)
+    }
+
+    /// The validated manifest (always the full directory's, even under a
+    /// prefix restriction — shard headers cross-check against it).
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
@@ -123,17 +147,73 @@ impl ShardDirSource {
 
 impl EntrySource for ShardDirSource {
     fn dims(&self) -> (u32, u32) {
-        (self.manifest.nrows, self.manifest.ncols)
+        if self.prefix < self.manifest.shards.len() {
+            (self.manifest.shards[self.prefix - 1].row_hi, self.manifest.ncols)
+        } else {
+            (self.manifest.nrows, self.manifest.ncols)
+        }
     }
 
     fn nnz(&self) -> u64 {
-        self.manifest.nnz
+        self.manifest.shards[..self.prefix].iter().map(|s| s.nnz).sum()
     }
 
     fn scan(&mut self, sink: &mut dyn FnMut(&[Entry]) -> Result<()>) -> Result<()> {
         let mut buf: Vec<Entry> = Vec::new();
-        for meta in &self.manifest.shards {
+        for meta in &self.manifest.shards[..self.prefix] {
             let mut reader = open_checked(&self.dir, &self.manifest, meta)?;
+            loop {
+                let n = reader.next_chunk(&mut buf, self.chunk)?;
+                if n == 0 {
+                    break;
+                }
+                sink(&buf)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// [`EntrySource`] over a set of already-opened, manifest-checked
+/// [`MmapShardReader`]s — the streaming-epoch plan's stats pass. Each scan
+/// rewinds every reader and sweeps it chunked (CRC verified per shard on
+/// the final chunk), so the same split/stats code path serves both the
+/// `BufReader` ingest and the mmap-backed plan.
+pub struct MmapReaderSource<'a> {
+    readers: &'a mut [crate::data::shard::MmapShardReader],
+    chunk: usize,
+    nrows: u32,
+    ncols: u32,
+    nnz: u64,
+}
+
+impl<'a> MmapReaderSource<'a> {
+    /// Source over `readers`, reporting `nrows` rows (a shard-prefix plan
+    /// covers fewer rows than the readers' full-matrix headers claim).
+    pub fn new(
+        readers: &'a mut [crate::data::shard::MmapShardReader],
+        chunk: usize,
+        nrows: u32,
+        ncols: u32,
+    ) -> Self {
+        let nnz = readers.iter().map(|r| r.header().nnz).sum();
+        MmapReaderSource { readers, chunk: chunk.max(1), nrows, ncols, nnz }
+    }
+}
+
+impl EntrySource for MmapReaderSource<'_> {
+    fn dims(&self) -> (u32, u32) {
+        (self.nrows, self.ncols)
+    }
+
+    fn nnz(&self) -> u64 {
+        self.nnz
+    }
+
+    fn scan(&mut self, sink: &mut dyn FnMut(&[Entry]) -> Result<()>) -> Result<()> {
+        let mut buf: Vec<Entry> = Vec::new();
+        for reader in self.readers.iter_mut() {
+            reader.reset();
             loop {
                 let n = reader.next_chunk(&mut buf, self.chunk)?;
                 if n == 0 {
@@ -212,6 +292,21 @@ pub struct SplitScan {
 
 /// Run the sequential stats + split pass over a source.
 pub fn split_scan(src: &mut dyn EntrySource, test_frac: f64, seed: u64) -> Result<SplitScan> {
+    split_scan_cached(src, test_frac, seed, None, false).map(|(scan, _)| scan)
+}
+
+/// [`split_scan`] with split-bitmap integration: when a [`SplitBitmap`] is
+/// supplied, per-record decisions come from it (no rehashing); otherwise,
+/// with `record` set, the hash decisions made during the pass are captured
+/// as packed bits and returned, so the caller can persist them as a sidecar
+/// at zero extra cost. Record indices follow the scan's canonical order.
+pub fn split_scan_cached(
+    src: &mut dyn EntrySource,
+    test_frac: f64,
+    seed: u64,
+    bitmap: Option<&SplitBitmap>,
+    record: bool,
+) -> Result<(SplitScan, Option<Vec<u8>>)> {
     let (nrows, ncols) = src.dims();
     let mut test = CooMatrix::new(nrows, ncols);
     let mut row_counts = vec![0u32; nrows as usize];
@@ -220,11 +315,30 @@ pub fn split_scan(src: &mut dyn EntrySource, test_frac: f64, seed: u64) -> Resul
     let mut hi = f32::NEG_INFINITY;
     let mut train_nnz = 0u64;
     let mut sum = 0f64;
+    let mut idx = 0u64;
+    let mut recorded: Option<Vec<u8>> = if record && bitmap.is_none() {
+        Some(vec![0u8; src.nnz().div_ceil(8) as usize])
+    } else {
+        None
+    };
     src.scan(&mut |chunk| {
         for e in chunk {
             lo = lo.min(e.r);
             hi = hi.max(e.r);
-            if split::hash_is_test(e.u, e.v, seed, test_frac) {
+            let is_test = match bitmap {
+                Some(bm) => bm.is_test(idx),
+                None => {
+                    let t = split::hash_is_test(e.u, e.v, seed, test_frac);
+                    if t {
+                        if let Some(bits) = recorded.as_mut() {
+                            bits[(idx / 8) as usize] |= 1 << (idx % 8);
+                        }
+                    }
+                    t
+                }
+            };
+            idx += 1;
+            if is_test {
                 test.push(e.u, e.v, e.r)?;
             } else {
                 train_nnz += 1;
@@ -235,7 +349,7 @@ pub fn split_scan(src: &mut dyn EntrySource, test_frac: f64, seed: u64) -> Resul
         }
         Ok(())
     })?;
-    Ok(SplitScan {
+    let scan = SplitScan {
         nrows,
         ncols,
         train_nnz,
@@ -245,7 +359,8 @@ pub fn split_scan(src: &mut dyn EntrySource, test_frac: f64, seed: u64) -> Resul
         train_row_counts: row_counts,
         train_col_counts: col_counts,
         test,
-    })
+    };
+    Ok((scan, recorded))
 }
 
 /// Result of an out-of-core ingest: the training grid plus everything the
@@ -291,8 +406,45 @@ pub fn ingest_ooc(
     seed: u64,
     chunk: usize,
 ) -> Result<OocIngest> {
-    let mut src = ShardDirSource::with_chunk(dir, chunk)?;
-    let scan = split_scan(&mut src, test_frac, seed)?;
+    ingest_ooc_prefix(dir, kind, threads, test_frac, seed, chunk, None)
+}
+
+/// [`ingest_ooc`] restricted to the first `prefix` shards (None = all).
+///
+/// Split-bitmap integration (full-directory ingests only): an existing
+/// current sidecar replaces per-record hashing in both passes; on a miss
+/// the stats pass records its hash decisions and persists them, so the
+/// *next* sweep of this directory with the same `(seed, test_frac)` skips
+/// the rehash entirely.
+#[allow(clippy::too_many_arguments)]
+pub fn ingest_ooc_prefix(
+    dir: &Path,
+    kind: PartitionKind,
+    threads: usize,
+    test_frac: f64,
+    seed: u64,
+    chunk: usize,
+    prefix: Option<usize>,
+) -> Result<OocIngest> {
+    let mut src = match prefix {
+        Some(k) => ShardDirSource::with_chunk_prefix(dir, chunk, k)?,
+        None => ShardDirSource::with_chunk(dir, chunk)?,
+    };
+    // `Some(nshards)` and `None` mean the same thing — the sidecar applies
+    // to any whole-directory ingest (same semantics as `StreamPlan::open`).
+    let full_dir = prefix.map_or(true, |k| k == src.manifest().shards.len());
+    let mut bitmap = if full_dir {
+        SplitBitmap::load(dir, src.manifest(), seed, test_frac)?
+    } else {
+        None
+    };
+    let (scan, recorded) =
+        split_scan_cached(&mut src, test_frac, seed, bitmap.as_ref(), full_dir)?;
+    if full_dir && bitmap.is_none() {
+        if let Some(bits) = recorded {
+            bitmap = SplitBitmap::persist_scan_bits(dir, src.manifest(), seed, test_frac, bits);
+        }
+    }
     ensure!(scan.train_nnz > 0, "{}: no training instances after split", dir.display());
 
     let nblocks = threads.max(1) + 1;
@@ -308,7 +460,8 @@ pub fn ingest_ooc(
     // residency is therefore bounded by one wave (≈ threads × shard size),
     // not the dataset; the grid itself grows incrementally.
     let manifest = src.manifest();
-    let nshards = manifest.shards.len();
+    let nshards = prefix.unwrap_or(manifest.shards.len());
+    let shard_base = crate::data::shard::shard_record_bases(manifest, nshards);
     let dir_buf = dir.to_path_buf();
     type Buckets = Vec<Vec<Entry>>;
     let pool = WorkerPool::new(threads.min(nshards.max(1)));
@@ -335,16 +488,19 @@ pub fn ingest_ooc(
             if t >= wave_len {
                 return;
             }
+            let s = wave_start + t;
             let res = decode_shard(
                 &dir_buf,
                 manifest,
-                wave_start + t,
+                s,
                 nblocks,
                 &row_of,
                 &col_of,
                 chunk,
                 seed,
                 test_frac,
+                shard_base[s],
+                bitmap.as_ref(),
             );
             *slots[t].lock().unwrap_or_else(std::sync::PoisonError::into_inner) = res;
         });
@@ -389,6 +545,8 @@ pub fn ingest_ooc(
 
 /// Decode one shard into per-block buckets of its *training* entries
 /// (bounded chunk buffer; CRC verified by the reader on the final chunk).
+/// Split decisions come from the bitmap when one is supplied (indexed from
+/// the shard's canonical `base` record offset), else from the hash.
 #[allow(clippy::too_many_arguments)]
 fn decode_shard(
     dir: &Path,
@@ -400,18 +558,26 @@ fn decode_shard(
     chunk: usize,
     seed: u64,
     test_frac: f64,
+    base: u64,
+    bitmap: Option<&SplitBitmap>,
 ) -> Result<Vec<Vec<Entry>>> {
     let meta = &manifest.shards[s];
     let mut reader = open_checked(dir, manifest, meta)?;
     let mut buckets: Vec<Vec<Entry>> = vec![Vec::new(); nblocks * nblocks];
     let mut buf: Vec<Entry> = Vec::new();
+    let mut idx = base;
     loop {
         let n = reader.next_chunk(&mut buf, chunk)?;
         if n == 0 {
             break;
         }
         for e in &buf {
-            if split::hash_is_test(e.u, e.v, seed, test_frac) {
+            let is_test = match bitmap {
+                Some(bm) => bm.is_test(idx),
+                None => split::hash_is_test(e.u, e.v, seed, test_frac),
+            };
+            idx += 1;
+            if is_test {
                 continue;
             }
             let bi = row_of[e.u as usize] as usize;

@@ -1,0 +1,183 @@
+//! A no-dependency `mmap(2)` binding for read-only file mappings.
+//!
+//! The out-of-core pipeline re-reads packed `.a2ps` shards every epoch in
+//! streaming-memory mode. Going through `BufReader` pays a kernel→userspace
+//! copy per sweep; a read-only private mapping lets repeated epochs hit the
+//! page cache directly, with eviction handled by the OS. No `libc` crate is
+//! available offline, so — exactly like the `sched_setaffinity` shim in
+//! [`crate::runtime::pool`] — the syscall is bound directly (std already
+//! links the symbol).
+//!
+//! Portability: the real mapping is gated on 64-bit unix (`off_t` is `i64`
+//! there, and shard files may exceed a 32-bit address space). Everywhere
+//! else — and whenever `mmap` itself fails, e.g. on a filesystem without
+//! mmap support — [`Mmap::open`] falls back to reading the file into an
+//! owned buffer, so callers never need a second code path; they can check
+//! [`Mmap::is_mapped`] when reporting which backing they got.
+
+use crate::Result;
+use anyhow::Context;
+use std::path::Path;
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+    extern "C" {
+        pub fn mmap(
+            addr: *mut u8,
+            length: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        pub fn munmap(addr: *mut u8, length: usize) -> i32;
+    }
+}
+
+enum Backing {
+    /// A live read-only `MAP_PRIVATE` mapping (64-bit unix only).
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    Mapped { ptr: *const u8, len: usize },
+    /// Owned-buffer fallback (non-unix, 32-bit, or mmap failure).
+    Owned(Vec<u8>),
+}
+
+/// A whole file, either memory-mapped read-only or (fallback) read into an
+/// owned buffer. Dereference via [`Mmap::bytes`].
+pub struct Mmap {
+    backing: Backing,
+}
+
+// SAFETY: the mapping is created read-only (`PROT_READ`) and private, the
+// pointer is never handed out mutably, and unmapping happens exactly once in
+// `Drop` — so shared references to the bytes are sound across threads.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `path` read-only, falling back to an owned read where mapping is
+    /// unavailable (see the module docs). Empty files yield an empty buffer
+    /// without touching `mmap` (zero-length mappings are an error).
+    pub fn open(path: &Path) -> Result<Self> {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        {
+            use std::os::unix::io::AsRawFd;
+            let file = std::fs::File::open(path)
+                .with_context(|| format!("opening {}", path.display()))?;
+            let len = file
+                .metadata()
+                .with_context(|| format!("stat {}", path.display()))?
+                .len() as usize;
+            if len == 0 {
+                return Ok(Mmap { backing: Backing::Owned(Vec::new()) });
+            }
+            // SAFETY: read-only private mapping of an open fd over the
+            // file's current length; POSIX keeps the mapping valid after
+            // the fd closes. Failure is checked below.
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ,
+                    sys::MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr as isize != -1 && !ptr.is_null() {
+                return Ok(Mmap { backing: Backing::Mapped { ptr, len } });
+            }
+            // Fall through to the owned fallback (e.g. tmpfs quirks, FUSE
+            // filesystems without mmap).
+        }
+        let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        Ok(Mmap { backing: Backing::Owned(bytes) })
+    }
+
+    /// The file contents.
+    pub fn bytes(&self) -> &[u8] {
+        match &self.backing {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            // SAFETY: ptr/len came from a successful mmap that lives until
+            // Drop; the mapping is never mutated.
+            Backing::Mapped { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            Backing::Owned(v) => v,
+        }
+    }
+
+    /// True when backed by a live mapping rather than an owned buffer.
+    pub fn is_mapped(&self) -> bool {
+        match &self.backing {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Backing::Mapped { .. } => true,
+            Backing::Owned(_) => false,
+        }
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if let Backing::Mapped { ptr, len } = &self.backing {
+            // SAFETY: ptr/len came from a successful mmap; this is the only
+            // unmap (Drop runs once). Failure is ignorable — the mapping
+            // dies with the process either way.
+            let _ = unsafe { sys::munmap(*ptr as *mut u8, *len) };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(tag: &str, contents: &[u8]) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!("a2psgd_mmap_{tag}_{}", std::process::id()));
+        std::fs::write(&p, contents).unwrap();
+        p
+    }
+
+    #[test]
+    fn mmap_matches_fs_read() {
+        let data: Vec<u8> = (0..10_000u32).flat_map(|x| x.to_le_bytes()).collect();
+        let p = tmpfile("rt", &data);
+        let m = Mmap::open(&p).unwrap();
+        assert_eq!(m.bytes(), &data[..]);
+        // On 64-bit unix CI hosts this must be a genuine mapping.
+        #[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+        assert!(m.is_mapped(), "expected a live mapping on 64-bit linux");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn empty_file_yields_empty_bytes() {
+        let p = tmpfile("empty", b"");
+        let m = Mmap::open(&p).unwrap();
+        assert!(m.bytes().is_empty());
+        assert!(!m.is_mapped(), "empty files skip mmap");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(Mmap::open(Path::new("/nonexistent/a2psgd.bin")).is_err());
+    }
+
+    #[test]
+    fn mapping_is_shareable_across_threads() {
+        let data = vec![7u8; 4096];
+        let p = tmpfile("threads", &data);
+        let m = std::sync::Arc::new(Mmap::open(&p).unwrap());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let m = std::sync::Arc::clone(&m);
+                s.spawn(move || {
+                    assert!(m.bytes().iter().all(|&b| b == 7));
+                });
+            }
+        });
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -12,12 +12,17 @@
 //! is the ingestion trait every dataset entry point routes through — with an
 //! in-memory implementation over [`CooMatrix`](crate::sparse::CooMatrix) and
 //! an out-of-core one that streams shards through bounded buffers and feeds
-//! block-grid construction directly.
+//! block-grid construction directly. [`mmap`] is the no-dependency binding
+//! behind the page-cache shard readback (repeated epochs copy nothing), and
+//! [`split_cache`] packs the per-record train/test decisions into a bitmap
+//! sidecar so experiment sweeps skip per-entry rehashing.
 
 pub mod ingest;
 pub mod loader;
+pub mod mmap;
 pub mod shard;
 pub mod split;
+pub mod split_cache;
 pub mod synthetic;
 
 use crate::sparse::CooMatrix;

@@ -192,6 +192,59 @@ fn encode_record(e: &Entry, rec: &mut [u8; RECORD_LEN]) {
     rec[8..12].copy_from_slice(&e.r.to_le_bytes());
 }
 
+/// Decode one fixed-width record (no validation — see [`check_record`]).
+#[inline]
+fn decode_raw(rec: &[u8]) -> Entry {
+    Entry {
+        u: u32::from_le_bytes(rec[0..4].try_into().unwrap()),
+        v: u32::from_le_bytes(rec[4..8].try_into().unwrap()),
+        r: f32::from_le_bytes(rec[8..12].try_into().unwrap()),
+    }
+}
+
+/// The per-record validation every reader applies: row inside the shard's
+/// range, column inside the matrix, finite value.
+#[inline]
+fn check_record(path: &Path, h: &ShardHeader, u: u32, v: u32, r: f32) -> Result<()> {
+    ensure!(
+        u >= h.row_lo && u < h.row_hi,
+        "{}: record row {u} outside shard range {}..{}",
+        path.display(),
+        h.row_lo,
+        h.row_hi
+    );
+    ensure!(
+        v < h.ncols,
+        "{}: record col {v} outside matrix with {} cols",
+        path.display(),
+        h.ncols
+    );
+    ensure!(
+        r.is_finite(),
+        "{}: non-finite value at ({u}, {v})",
+        path.display()
+    );
+    Ok(())
+}
+
+/// Shared open-time length/header validation for both reader flavors.
+/// Overflow-proof against corrupt headers: the record count is derived from
+/// the on-disk length and compared to the header's `nnz` — never
+/// `nnz × RECORD_LEN`, which a smashed nnz field could overflow into a
+/// panic (or, wrapping, into an out-of-bounds later). Callers have already
+/// checked `len >= SHARD_HEADER_LEN`.
+fn validate_shard_len(path: &Path, len: u64, header: &ShardHeader) -> Result<()> {
+    let payload = len - SHARD_HEADER_LEN as u64;
+    if payload % RECORD_LEN as u64 != 0 || payload / RECORD_LEN as u64 != header.nnz {
+        bail!(
+            "{}: truncated or oversized shard: {len} bytes on disk, header promises {} records",
+            path.display(),
+            header.nnz
+        );
+    }
+    Ok(())
+}
+
 /// Streaming reader over one shard file: bounded-size chunks, running CRC
 /// verified once the last record is consumed, per-record bounds/finiteness
 /// validation.
@@ -202,6 +255,9 @@ pub struct ShardReader {
     crc: u64,
     raw: Vec<u8>,
     path: PathBuf,
+    /// Row of the last record seen — enforces the row-major-sorted format
+    /// invariant that downstream binary searches rely on.
+    last_row: u32,
 }
 
 impl ShardReader {
@@ -227,13 +283,7 @@ impl ShardReader {
             .with_context(|| format!("reading shard header {}", path.display()))?;
         let header = ShardHeader::from_bytes(&head)
             .with_context(|| format!("parsing shard header {}", path.display()))?;
-        let want = SHARD_HEADER_LEN as u64 + header.nnz * RECORD_LEN as u64;
-        if len != want {
-            bail!(
-                "{}: truncated or oversized shard: {len} bytes on disk, header promises {want}",
-                path.display()
-            );
-        }
+        validate_shard_len(path, len, &header)?;
         Ok(ShardReader {
             reader,
             remaining: header.nnz,
@@ -241,6 +291,7 @@ impl ShardReader {
             crc: fnv1a_start(),
             raw: Vec::new(),
             path: path.to_path_buf(),
+            last_row: 0,
         })
     }
 
@@ -270,34 +321,187 @@ impl ShardReader {
         self.crc = fnv1a_update(self.crc, &self.raw);
         out.reserve(n);
         for rec in self.raw.chunks_exact(RECORD_LEN) {
-            let u = u32::from_le_bytes(rec[0..4].try_into().unwrap());
-            let v = u32::from_le_bytes(rec[4..8].try_into().unwrap());
-            let r = f32::from_le_bytes(rec[8..12].try_into().unwrap());
-            ensure!(
-                u >= self.header.row_lo && u < self.header.row_hi,
-                "{}: record row {u} outside shard range {}..{}",
-                self.path.display(),
-                self.header.row_lo,
-                self.header.row_hi
-            );
-            ensure!(
-                v < self.header.ncols,
-                "{}: record col {v} outside matrix with {} cols",
-                self.path.display(),
-                self.header.ncols
-            );
-            ensure!(
-                r.is_finite(),
-                "{}: non-finite value at ({u}, {v})",
-                self.path.display()
-            );
-            out.push(Entry { u, v, r });
+            let e = decode_raw(rec);
+            check_record(&self.path, &self.header, e.u, e.v, e.r)?;
+            check_row_order(&self.path, &mut self.last_row, e.u)?;
+            out.push(e);
         }
         self.remaining -= n as u64;
         if self.remaining == 0 && self.crc != self.header.crc {
             bail!("{}: shard CRC mismatch — file corrupt", self.path.display());
         }
         Ok(n)
+    }
+}
+
+/// Enforce the row-major sort invariant during a sequential sweep: a shard
+/// whose records are in-range, finite, and CRC-consistent but *unsorted*
+/// would silently break [`MmapShardReader::row_range`]'s binary search (and
+/// the canonical-order guarantees every parity claim rests on), so both
+/// readers reject it on the full sweep instead.
+#[inline]
+fn check_row_order(path: &Path, last_row: &mut u32, u: u32) -> Result<()> {
+    ensure!(
+        u >= *last_row,
+        "{}: records out of row order (row {u} after row {last_row}) — \
+         not a canonically packed shard",
+        path.display()
+    );
+    *last_row = u;
+    Ok(())
+}
+
+/// `mmap`-backed reader over one shard file.
+///
+/// Same open-time validation and chunked-sweep contract as [`ShardReader`]
+/// (magic/version/length at open, bounds/finiteness per record, CRC over a
+/// full sweep) — but the records live in a read-only page-cache mapping
+/// ([`crate::data::mmap::Mmap`]), so repeated epochs over the same shard
+/// copy nothing and random access is free:
+///
+/// - [`MmapShardReader::next_chunk`]/[`MmapShardReader::reset`] give the
+///   sequential sweep interface ingestion uses;
+/// - [`MmapShardReader::row_range`] binary-searches the row-major-sorted
+///   records for a dense-row span, and
+///   [`MmapShardReader::decode_range`] decodes an arbitrary record range —
+///   this pair is what lets the streaming-epoch trainer re-decode exactly
+///   one wave's rows per shard without touching the rest of the file. Range
+///   decodes validate every record but skip the CRC (a full CRC sweep runs
+///   once at plan construction; see `engine::stream_grid`).
+pub struct MmapShardReader {
+    map: crate::data::mmap::Mmap,
+    header: ShardHeader,
+    consumed: u64,
+    crc: u64,
+    path: PathBuf,
+    /// Row of the last record the chunked sweep saw (sort enforcement —
+    /// see [`check_row_order`]).
+    last_row: u32,
+}
+
+impl MmapShardReader {
+    /// Map and validate header + on-disk length (truncation is an error at
+    /// open time, exactly like [`ShardReader::open`]).
+    pub fn open(path: &Path) -> Result<Self> {
+        let map = crate::data::mmap::Mmap::open(path)?;
+        let len = map.bytes().len() as u64;
+        if len < SHARD_HEADER_LEN as u64 {
+            bail!(
+                "{}: truncated shard ({len} bytes; the header alone is {SHARD_HEADER_LEN})",
+                path.display()
+            );
+        }
+        let mut head = [0u8; SHARD_HEADER_LEN];
+        head.copy_from_slice(&map.bytes()[..SHARD_HEADER_LEN]);
+        let header = ShardHeader::from_bytes(&head)
+            .with_context(|| format!("parsing shard header {}", path.display()))?;
+        validate_shard_len(path, len, &header)?;
+        Ok(MmapShardReader {
+            map,
+            header,
+            consumed: 0,
+            crc: fnv1a_start(),
+            path: path.to_path_buf(),
+            last_row: 0,
+        })
+    }
+
+    /// The validated header.
+    pub fn header(&self) -> &ShardHeader {
+        &self.header
+    }
+
+    /// Records not yet read by the chunked sweep.
+    pub fn remaining(&self) -> u64 {
+        self.header.nnz - self.consumed
+    }
+
+    /// True when backed by a live mapping (false = owned-buffer fallback).
+    pub fn is_mapped(&self) -> bool {
+        self.map.is_mapped()
+    }
+
+    /// The raw record payload bytes.
+    fn records(&self) -> &[u8] {
+        &self.map.bytes()[SHARD_HEADER_LEN..]
+    }
+
+    /// Rewind the chunked sweep (the mapping stays live — the next sweep
+    /// hits the page cache).
+    pub fn reset(&mut self) {
+        self.consumed = 0;
+        self.crc = fnv1a_start();
+        self.last_row = 0;
+    }
+
+    /// Read up to `max` records into `out` (cleared first); returns the
+    /// count, 0 at end of shard. The CRC is checked when the final record
+    /// has been read — the same contract as [`ShardReader::next_chunk`].
+    pub fn next_chunk(&mut self, out: &mut Vec<Entry>, max: usize) -> Result<usize> {
+        out.clear();
+        if self.remaining() == 0 {
+            return Ok(0);
+        }
+        let n = (max.max(1) as u64).min(self.remaining()) as usize;
+        let lo = SHARD_HEADER_LEN + self.consumed as usize * RECORD_LEN;
+        let bytes = &self.map.bytes()[lo..lo + n * RECORD_LEN];
+        self.crc = fnv1a_update(self.crc, bytes);
+        out.reserve(n);
+        let mut last_row = self.last_row;
+        for rec in bytes.chunks_exact(RECORD_LEN) {
+            let e = decode_raw(rec);
+            check_record(&self.path, &self.header, e.u, e.v, e.r)?;
+            check_row_order(&self.path, &mut last_row, e.u)?;
+            out.push(e);
+        }
+        self.last_row = last_row;
+        self.consumed += n as u64;
+        if self.remaining() == 0 && self.crc != self.header.crc {
+            bail!("{}: shard CRC mismatch — file corrupt", self.path.display());
+        }
+        Ok(n)
+    }
+
+    /// Row of record `k` (records are row-major sorted).
+    fn record_row(&self, k: u64) -> u32 {
+        let off = k as usize * RECORD_LEN;
+        u32::from_le_bytes(self.records()[off..off + 4].try_into().unwrap())
+    }
+
+    /// Record index range `[lo, hi)` holding rows in `[row_lo, row_hi)`,
+    /// found by binary search over the row-major-sorted records.
+    pub fn row_range(&self, row_lo: u32, row_hi: u32) -> (u64, u64) {
+        let part = |bound: u32| -> u64 {
+            let (mut lo, mut hi) = (0u64, self.header.nnz);
+            while lo < hi {
+                let mid = lo + (hi - lo) / 2;
+                if self.record_row(mid) < bound {
+                    lo = mid + 1;
+                } else {
+                    hi = mid;
+                }
+            }
+            lo
+        };
+        (part(row_lo), part(row_hi))
+    }
+
+    /// Decode records `[lo, hi)`, feeding `f` each record's in-shard index
+    /// and validated entry. No CRC (see the type docs).
+    pub fn decode_range(&self, lo: u64, hi: u64, mut f: impl FnMut(u64, Entry)) -> Result<()> {
+        ensure!(
+            lo <= hi && hi <= self.header.nnz,
+            "{}: record range {lo}..{hi} outside shard with {} records",
+            self.path.display(),
+            self.header.nnz
+        );
+        let bytes = &self.records()[lo as usize * RECORD_LEN..hi as usize * RECORD_LEN];
+        for (k, rec) in bytes.chunks_exact(RECORD_LEN).enumerate() {
+            let e = decode_raw(rec);
+            check_record(&self.path, &self.header, e.u, e.v, e.r)?;
+            f(lo + k as u64, e);
+        }
+        Ok(())
     }
 }
 
@@ -454,7 +658,23 @@ pub fn load_idmap(dir: &Path) -> Result<IdMap> {
 /// this.
 pub fn open_checked(dir: &Path, manifest: &Manifest, meta: &ShardMeta) -> Result<ShardReader> {
     let reader = ShardReader::open(&dir.join(&meta.file))?;
-    let h = reader.header();
+    cross_check_manifest(reader.header(), manifest, meta)?;
+    Ok(reader)
+}
+
+/// [`open_checked`] for the `mmap`-backed reader — identical manifest
+/// cross-check, page-cache readback.
+pub fn open_checked_mmap(
+    dir: &Path,
+    manifest: &Manifest,
+    meta: &ShardMeta,
+) -> Result<MmapShardReader> {
+    let reader = MmapShardReader::open(&dir.join(&meta.file))?;
+    cross_check_manifest(reader.header(), manifest, meta)?;
+    Ok(reader)
+}
+
+fn cross_check_manifest(h: &ShardHeader, manifest: &Manifest, meta: &ShardMeta) -> Result<()> {
     ensure!(
         h.nnz == meta.nnz
             && h.row_lo == meta.row_lo
@@ -466,7 +686,19 @@ pub fn open_checked(dir: &Path, manifest: &Manifest, meta: &ShardMeta) -> Result
         h,
         meta
     );
-    Ok(reader)
+    Ok(())
+}
+
+/// Canonical global record base index per shard — prefix sums of the
+/// manifest's shard `nnz`s over the first `prefix` shards. This is the
+/// indexing both the resident decode and the streaming wave decode use to
+/// address the split bitmap, so it lives in one place.
+pub fn shard_record_bases(manifest: &Manifest, prefix: usize) -> Vec<u64> {
+    let mut bases = vec![0u64; prefix];
+    for s in 1..prefix {
+        bases[s] = bases[s - 1] + manifest.shards[s - 1].nnz;
+    }
+    bases
 }
 
 /// Packing knobs.
@@ -772,6 +1004,103 @@ mod tests {
             got.extend_from_slice(&buf);
         }
         assert_eq!(got, entries);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mmap_reader_matches_bufreader_sweep() {
+        let dir = tmpdir("mmap_rt");
+        let p = dir.join("s.a2ps");
+        let entries: Vec<Entry> = (0..300u32)
+            .map(|i| Entry { u: i / 10, v: i % 10, r: (i % 7) as f32 + 0.5 })
+            .collect();
+        write_shard(&p, 30, 10, 0, 30, &entries).unwrap();
+        let mut a = ShardReader::open(&p).unwrap();
+        let mut b = MmapShardReader::open(&p).unwrap();
+        assert_eq!(a.header(), b.header());
+        let (mut got_a, mut got_b) = (Vec::new(), Vec::new());
+        let mut buf = Vec::new();
+        while a.next_chunk(&mut buf, 37).unwrap() > 0 {
+            got_a.extend_from_slice(&buf);
+        }
+        while b.next_chunk(&mut buf, 37).unwrap() > 0 {
+            got_b.extend_from_slice(&buf);
+        }
+        assert_eq!(got_a, got_b);
+        assert_eq!(got_a, entries);
+        // Rewind + resweep is the per-epoch readback pattern.
+        b.reset();
+        assert_eq!(b.remaining(), 300);
+        let mut again = Vec::new();
+        while b.next_chunk(&mut buf, 64).unwrap() > 0 {
+            again.extend_from_slice(&buf);
+        }
+        assert_eq!(again, entries);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mmap_reader_row_range_and_decode_range() {
+        let dir = tmpdir("mmap_range");
+        let p = dir.join("s.a2ps");
+        // Rows 5..15, three records per row, sorted row-major by pack.
+        let mut entries = Vec::new();
+        for u in 5..15u32 {
+            for v in 0..3u32 {
+                entries.push(Entry { u, v, r: (u + v) as f32 });
+            }
+        }
+        write_shard(&p, 20, 3, 5, 15, &entries).unwrap();
+        let r = MmapShardReader::open(&p).unwrap();
+        // A span strictly inside the shard.
+        let (lo, hi) = r.row_range(7, 10);
+        assert_eq!((lo, hi), (6, 15), "rows 7..10 are records 6..15");
+        let mut got = Vec::new();
+        r.decode_range(lo, hi, |k, e| got.push((k, e))).unwrap();
+        assert_eq!(got.len(), 9);
+        assert_eq!(got[0], (6, Entry { u: 7, v: 0, r: 7.0 }));
+        assert!(got.iter().all(|(_, e)| (7..10).contains(&e.u)));
+        // Spans clamped outside the shard's rows select nothing/everything.
+        assert_eq!(r.row_range(0, 5), (0, 0));
+        assert_eq!(r.row_range(15, 20), (30, 30));
+        assert_eq!(r.row_range(0, 20), (0, 30));
+        // Out-of-bounds record ranges error.
+        assert!(r.decode_range(0, 31, |_, _| {}).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unsorted_records_are_rejected_on_sweep_by_both_readers() {
+        // In-range, finite, CRC-consistent — but rows out of order. The
+        // binary-searched streaming readback depends on sortedness, so a
+        // full sweep must reject rather than let row_range mis-slice.
+        let dir = tmpdir("unsorted");
+        let p = dir.join("s.a2ps");
+        let entries = vec![
+            Entry { u: 2, v: 0, r: 1.0 },
+            Entry { u: 0, v: 1, r: 2.0 },
+            Entry { u: 1, v: 2, r: 3.0 },
+        ];
+        write_shard(&p, 3, 3, 0, 3, &entries).unwrap();
+        let mut buf = Vec::new();
+        let mut r = ShardReader::open(&p).unwrap();
+        let e = loop {
+            match r.next_chunk(&mut buf, 2) {
+                Ok(0) => panic!("unsorted shard must not sweep clean"),
+                Ok(_) => continue,
+                Err(e) => break e,
+            }
+        };
+        assert!(e.to_string().contains("row order"), "unexpected error: {e:#}");
+        let mut m = MmapShardReader::open(&p).unwrap();
+        let e = loop {
+            match m.next_chunk(&mut buf, 2) {
+                Ok(0) => panic!("unsorted shard must not sweep clean (mmap)"),
+                Ok(_) => continue,
+                Err(e) => break e,
+            }
+        };
+        assert!(e.to_string().contains("row order"), "unexpected error: {e:#}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

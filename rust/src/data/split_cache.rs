@@ -1,0 +1,405 @@
+//! Shard-level train/test-split bitmap sidecar.
+//!
+//! The out-of-core paths decide train-vs-test per record with
+//! [`crate::data::split::hash_is_test`]. The hash is cheap, but the
+//! streaming-epoch trainer re-decides for every record on *every epoch*,
+//! and experiment sweeps re-decide on every run. Since the decision depends
+//! only on `(u, v, seed, test_frac)` and shard record order is canonical,
+//! the whole split is a fixed bit per record — so it is cached next to the
+//! shards as a packed bitmap, one sidecar per `(seed, test_frac)` pair:
+//!
+//! ```text
+//! dir/split-<seed:016x>-<frac_bits:016x>.a2bm
+//!
+//! magic    "A2BM"            4 B
+//! version  u32               4 B   (currently 1)
+//! seed     u64               8 B   split seed
+//! frac     u64               8 B   f64 bit pattern of test_frac
+//! nnz      u64               8 B   records covered (manifest total)
+//! nshards  u64               8 B
+//! table    nshards × (nnz u64, crc u64)   staleness keys per shard
+//! bits     ⌈nnz/8⌉ B         LSB-first, canonical record order
+//! ```
+//!
+//! Staleness: the sidecar embeds every shard's `(nnz, crc)`; a repack (or
+//! any shard mutation) changes a CRC and [`SplitBitmap::load`] reports the
+//! sidecar as absent, so a stale cache can never skew a split. The bitmap
+//! is bit-for-bit the hash decision by construction — parity tests between
+//! the cached and hashed paths ride on that.
+
+use crate::data::shard::{Manifest, SHARD_HEADER_LEN};
+use crate::data::split;
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+/// Sidecar file magic.
+pub const BITMAP_MAGIC: &[u8; 4] = b"A2BM";
+/// Current sidecar format version.
+pub const BITMAP_VERSION: u32 = 1;
+/// Fixed sidecar header size (before the shard table).
+const BITMAP_HEADER_LEN: usize = 40;
+
+/// A packed per-record train/test split over a shard directory's canonical
+/// record order (see the module docs).
+pub struct SplitBitmap {
+    seed: u64,
+    frac_bits: u64,
+    nnz: u64,
+    /// Per-shard `(nnz, crc)` staleness keys, manifest order.
+    shard_keys: Vec<(u64, u64)>,
+    bits: Vec<u8>,
+}
+
+impl SplitBitmap {
+    /// Sidecar path for a `(seed, test_frac)` pair under `dir`.
+    pub fn sidecar_path(dir: &Path, seed: u64, test_frac: f64) -> PathBuf {
+        dir.join(format!("split-{seed:016x}-{:016x}.a2bm", test_frac.to_bits()))
+    }
+
+    /// Records covered.
+    pub fn nnz(&self) -> u64 {
+        self.nnz
+    }
+
+    /// Split decision for canonical record index `idx` (true = test).
+    #[inline]
+    pub fn is_test(&self, idx: u64) -> bool {
+        debug_assert!(idx < self.nnz, "record index {idx} outside bitmap of {}", self.nnz);
+        self.bits[(idx / 8) as usize] >> (idx % 8) & 1 == 1
+    }
+
+    /// Assemble from bits recorded during a canonical-order scan (the
+    /// fused-with-`split_scan` path — costs nothing beyond the scan itself).
+    pub fn from_scan_bits(
+        dir: &Path,
+        manifest: &Manifest,
+        seed: u64,
+        test_frac: f64,
+        bits: Vec<u8>,
+    ) -> Result<Self> {
+        ensure!(
+            bits.len() as u64 == manifest.nnz.div_ceil(8),
+            "recorded split bits cover {} bytes, manifest needs {}",
+            bits.len(),
+            manifest.nnz.div_ceil(8)
+        );
+        Ok(SplitBitmap {
+            seed,
+            frac_bits: test_frac.to_bits(),
+            nnz: manifest.nnz,
+            shard_keys: shard_keys(dir, manifest)?,
+            bits,
+        })
+    }
+
+    /// Build by hashing every record in canonical order (one full readback
+    /// through the mmap readers, CRC-verified).
+    pub fn build(dir: &Path, manifest: &Manifest, seed: u64, test_frac: f64) -> Result<Self> {
+        let mut bits = vec![0u8; manifest.nnz.div_ceil(8) as usize];
+        let mut idx = 0u64;
+        let mut buf = Vec::new();
+        for meta in &manifest.shards {
+            let mut reader = crate::data::shard::open_checked_mmap(dir, manifest, meta)?;
+            loop {
+                let n = reader.next_chunk(&mut buf, crate::data::shard::DEFAULT_CHUNK)?;
+                if n == 0 {
+                    break;
+                }
+                for e in &buf {
+                    if split::hash_is_test(e.u, e.v, seed, test_frac) {
+                        bits[(idx / 8) as usize] |= 1 << (idx % 8);
+                    }
+                    idx += 1;
+                }
+            }
+        }
+        ensure!(
+            idx == manifest.nnz,
+            "shard sweep yielded {idx} records, manifest says {}",
+            manifest.nnz
+        );
+        Ok(SplitBitmap {
+            seed,
+            frac_bits: test_frac.to_bits(),
+            nnz: manifest.nnz,
+            shard_keys: shard_keys(dir, manifest)?,
+            bits,
+        })
+    }
+
+    /// Serialize to the sidecar byte layout.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out =
+            Vec::with_capacity(BITMAP_HEADER_LEN + 16 * self.shard_keys.len() + self.bits.len());
+        out.extend_from_slice(BITMAP_MAGIC);
+        out.extend_from_slice(&BITMAP_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&self.frac_bits.to_le_bytes());
+        out.extend_from_slice(&self.nnz.to_le_bytes());
+        out.extend_from_slice(&(self.shard_keys.len() as u64).to_le_bytes());
+        for &(nnz, crc) in &self.shard_keys {
+            out.extend_from_slice(&nnz.to_le_bytes());
+            out.extend_from_slice(&crc.to_le_bytes());
+        }
+        out.extend_from_slice(&self.bits);
+        out
+    }
+
+    /// Parse the sidecar byte layout (structural validation only — use
+    /// [`SplitBitmap::load`] for the staleness cross-check).
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        ensure!(
+            bytes.len() >= BITMAP_HEADER_LEN,
+            "split sidecar truncated ({} bytes)",
+            bytes.len()
+        );
+        if &bytes[..4] != BITMAP_MAGIC {
+            bail!("not a split bitmap sidecar (bad magic)");
+        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        if version != BITMAP_VERSION {
+            bail!(
+                "unsupported split sidecar version {version} (this build reads {BITMAP_VERSION})"
+            );
+        }
+        let u64_at = |off: usize| u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap());
+        let seed = u64_at(8);
+        let frac_bits = u64_at(16);
+        let nnz = u64_at(24);
+        // Overflow-proof structural checks against corrupt size fields: the
+        // shard table and the bitmap must both fit the *actual* byte length
+        // before any size arithmetic or allocation happens — a bad cache
+        // must parse to a clean error, never a panic.
+        let remaining = bytes.len() as u64 - BITMAP_HEADER_LEN as u64;
+        let raw_nshards = u64_at(32);
+        ensure!(
+            raw_nshards <= remaining / 16,
+            "split sidecar claims {raw_nshards} shards but only {remaining} bytes follow"
+        );
+        let nshards = raw_nshards as usize;
+        let table_end = BITMAP_HEADER_LEN + 16 * nshards;
+        ensure!(
+            bytes.len() as u64 - table_end as u64 == nnz.div_ceil(8),
+            "split sidecar is {} bytes, header promises {} table + {} bitmap bytes",
+            bytes.len(),
+            16 * nshards,
+            nnz.div_ceil(8)
+        );
+        let mut shard_keys = Vec::with_capacity(nshards);
+        for s in 0..nshards {
+            let off = BITMAP_HEADER_LEN + 16 * s;
+            shard_keys.push((u64_at(off), u64_at(off + 8)));
+        }
+        let sum: u64 = shard_keys.iter().map(|&(n, _)| n).sum();
+        ensure!(sum == nnz, "split sidecar shard table sums to {sum}, header says {nnz}");
+        Ok(SplitBitmap { seed, frac_bits, nnz, shard_keys, bits: bytes[table_end..].to_vec() })
+    }
+
+    /// Write the sidecar into the shard directory.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let p = Self::sidecar_path(dir, self.seed, f64::from_bits(self.frac_bits));
+        std::fs::write(&p, self.to_bytes())
+            .with_context(|| format!("writing split sidecar {}", p.display()))
+    }
+
+    /// Load the sidecar for `(seed, test_frac)` if present *and current*:
+    /// `Ok(None)` when the file is missing, unreadable/corrupt (with a
+    /// warning — a bad cache must never fail the run), or stale against the
+    /// directory's shards (count, per-shard nnz, or CRC changed).
+    pub fn load(
+        dir: &Path,
+        manifest: &Manifest,
+        seed: u64,
+        test_frac: f64,
+    ) -> Result<Option<Self>> {
+        let p = Self::sidecar_path(dir, seed, test_frac);
+        let bytes = match std::fs::read(&p) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => {
+                eprintln!("warning: ignoring unreadable split sidecar {}: {e}", p.display());
+                return Ok(None);
+            }
+        };
+        let bm = match Self::from_bytes(&bytes) {
+            Ok(bm) => bm,
+            Err(e) => {
+                eprintln!("warning: ignoring corrupt split sidecar {}: {e:#}", p.display());
+                return Ok(None);
+            }
+        };
+        if bm.seed != seed || bm.frac_bits != test_frac.to_bits() || bm.nnz != manifest.nnz {
+            return Ok(None);
+        }
+        if bm.shard_keys != shard_keys(dir, manifest)? {
+            // Shards were repacked/replaced since the sidecar was written.
+            return Ok(None);
+        }
+        Ok(Some(bm))
+    }
+
+    /// Assemble a bitmap from scan-recorded bits and persist it, warning —
+    /// never failing — on cache problems (read-only dirs, racing writers):
+    /// the split itself is already decided; the sidecar is an optimization.
+    /// Returns the bitmap when assembly succeeded. One shared definition
+    /// for every scan that records bits (resident ingest, streaming plan).
+    pub fn persist_scan_bits(
+        dir: &Path,
+        manifest: &Manifest,
+        seed: u64,
+        test_frac: f64,
+        bits: Vec<u8>,
+    ) -> Option<Self> {
+        match Self::from_scan_bits(dir, manifest, seed, test_frac, bits) {
+            Ok(bm) => {
+                if let Err(e) = bm.save(dir) {
+                    eprintln!("warning: could not cache split bitmap: {e:#}");
+                }
+                Some(bm)
+            }
+            Err(e) => {
+                eprintln!("warning: could not assemble split bitmap: {e:#}");
+                None
+            }
+        }
+    }
+
+    /// Load a current sidecar, or build one (full hash sweep) and save it.
+    /// The bool reports whether the cache was hit.
+    pub fn load_or_build(
+        dir: &Path,
+        manifest: &Manifest,
+        seed: u64,
+        test_frac: f64,
+    ) -> Result<(Self, bool)> {
+        if let Some(bm) = Self::load(dir, manifest, seed, test_frac)? {
+            return Ok((bm, true));
+        }
+        let bm = Self::build(dir, manifest, seed, test_frac)?;
+        if let Err(e) = bm.save(dir) {
+            // Read-only shard dirs still work — just without the cache.
+            eprintln!("warning: could not cache split bitmap: {e:#}");
+        }
+        Ok((bm, false))
+    }
+}
+
+/// Current `(nnz, crc)` staleness keys straight from the shard headers (40
+/// bytes read per shard — no record IO).
+fn shard_keys(dir: &Path, manifest: &Manifest) -> Result<Vec<(u64, u64)>> {
+    let mut keys = Vec::with_capacity(manifest.shards.len());
+    for meta in &manifest.shards {
+        let p = dir.join(&meta.file);
+        let mut head = [0u8; SHARD_HEADER_LEN];
+        let mut f = std::fs::File::open(&p)
+            .with_context(|| format!("opening shard {}", p.display()))?;
+        f.read_exact(&mut head)
+            .with_context(|| format!("reading shard header {}", p.display()))?;
+        let h = crate::data::shard::ShardHeader::from_bytes(&head)
+            .with_context(|| format!("parsing shard header {}", p.display()))?;
+        keys.push((h.nnz, h.crc));
+    }
+    Ok(keys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shard::{pack_triplets, PackOptions};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("a2psgd_splitbm_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn pack_demo(dir: &Path, salt: u64) -> Manifest {
+        let triplets: Vec<(u64, u64, f32)> = (0..400u64)
+            .map(|i| (i / 8, (i * 7 + salt) % 31, ((i + salt) % 5) as f32 + 1.0))
+            .collect();
+        pack_triplets(&triplets, dir, &PackOptions { shard_bytes: 1024 }).unwrap();
+        Manifest::load(dir).unwrap()
+    }
+
+    /// The bitmap must agree with the hash decision for every record, in
+    /// canonical order, and survive a byte round-trip.
+    #[test]
+    fn bitmap_matches_hash_and_roundtrips() {
+        let dir = tmpdir("rt");
+        let manifest = pack_demo(&dir, 0);
+        let bm = SplitBitmap::build(&dir, &manifest, 42, 0.3).unwrap();
+        assert_eq!(bm.nnz(), manifest.nnz);
+        let mut idx = 0u64;
+        let mut buf = Vec::new();
+        for meta in &manifest.shards {
+            let mut r = crate::data::shard::open_checked(&dir, &manifest, meta).unwrap();
+            while r.next_chunk(&mut buf, 64).unwrap() > 0 {
+                for e in &buf {
+                    assert_eq!(
+                        bm.is_test(idx),
+                        split::hash_is_test(e.u, e.v, 42, 0.3),
+                        "bitmap disagrees with hash at record {idx}"
+                    );
+                    idx += 1;
+                }
+            }
+        }
+        assert_eq!(idx, bm.nnz());
+        let back = SplitBitmap::from_bytes(&bm.to_bytes()).unwrap();
+        assert_eq!(back.bits, bm.bits);
+        assert_eq!(back.shard_keys, bm.shard_keys);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_or_build_caches_and_reuses() {
+        let dir = tmpdir("cache");
+        let manifest = pack_demo(&dir, 1);
+        let (bm, hit) = SplitBitmap::load_or_build(&dir, &manifest, 7, 0.25).unwrap();
+        assert!(!hit, "first call must build");
+        assert!(SplitBitmap::sidecar_path(&dir, 7, 0.25).is_file());
+        let (bm2, hit2) = SplitBitmap::load_or_build(&dir, &manifest, 7, 0.25).unwrap();
+        assert!(hit2, "second call must hit the cache");
+        assert_eq!(bm.bits, bm2.bits);
+        // A different (seed, frac) pair is a distinct sidecar.
+        let (_, hit3) = SplitBitmap::load_or_build(&dir, &manifest, 8, 0.25).unwrap();
+        assert!(!hit3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Repacking the directory (new data ⇒ new shard CRCs) must invalidate
+    /// the sidecar rather than serve a stale split.
+    #[test]
+    fn stale_sidecar_is_invalidated_on_repack() {
+        let dir = tmpdir("stale");
+        let manifest = pack_demo(&dir, 2);
+        let (_, hit) = SplitBitmap::load_or_build(&dir, &manifest, 9, 0.3).unwrap();
+        assert!(!hit);
+        // Repack the same dir with different data; old sidecar file remains.
+        let manifest2 = pack_demo(&dir, 99);
+        assert!(
+            SplitBitmap::load(&dir, &manifest2, 9, 0.3).unwrap().is_none(),
+            "stale sidecar must not load after a repack"
+        );
+        let (bm, hit2) = SplitBitmap::load_or_build(&dir, &manifest2, 9, 0.3).unwrap();
+        assert!(!hit2, "stale sidecar must be rebuilt");
+        assert_eq!(bm.nnz(), manifest2.nnz);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupt_sidecar_is_ignored_not_fatal() {
+        let dir = tmpdir("corrupt");
+        let manifest = pack_demo(&dir, 3);
+        let p = SplitBitmap::sidecar_path(&dir, 5, 0.3);
+        std::fs::write(&p, b"garbage").unwrap();
+        assert!(SplitBitmap::load(&dir, &manifest, 5, 0.3).unwrap().is_none());
+        // Structural parse rejects bad magic/version/length outright.
+        assert!(SplitBitmap::from_bytes(b"").is_err());
+        assert!(SplitBitmap::from_bytes(&[0u8; BITMAP_HEADER_LEN]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

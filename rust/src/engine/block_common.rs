@@ -122,13 +122,43 @@ impl BlockEngine {
 
 impl EpochRunner for BlockEngine {
     fn run_epoch(&mut self, epoch: u32, quota: u64) -> u64 {
-        let done = AtomicU64::new(0);
         let shared = &self.shared;
         let grid = &self.grid;
-        let sched = &self.scheduler;
         let hyper = self.hyper;
         let rule = self.rule;
         let kernels = self.kernels;
+        if self.pool.threads() == 1 {
+            // Single worker: the scheduler exists to keep c concurrent
+            // workers off each other's row/column blocks — with one worker
+            // it only adds selection noise. A deterministic row-major block
+            // sweep makes c = 1 runs reproducible, and it is exactly the
+            // order the streaming-epoch path (`engine::stream_grid`)
+            // replays wave by wave — which is what makes
+            // `--memory streaming` bit-identical to resident at c = 1.
+            let nb = grid.nblocks();
+            let mut done = 0u64;
+            while done < quota {
+                let before = done;
+                'pass: for i in 0..nb {
+                    for j in 0..nb {
+                        done += grid.block(i, j).sweep(|u, v, r| {
+                            // SAFETY: single worker — trivially exclusive.
+                            let (mu, nv, phiu, psiv) = unsafe { shared.rows_mut(u, v) };
+                            kernels.apply(rule, mu, nv, phiu, psiv, r, &hyper);
+                        });
+                        if done >= quota {
+                            break 'pass;
+                        }
+                    }
+                }
+                if done == before {
+                    break; // empty grid — never spin on an unreachable quota
+                }
+            }
+            return done;
+        }
+        let done = AtomicU64::new(0);
+        let sched = &self.scheduler;
         let base = self.rng.fork(epoch as u64);
         self.pool.run(|t| {
             let mut rng = base.clone().fork(t as u64);

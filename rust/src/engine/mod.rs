@@ -25,8 +25,10 @@ mod block_common;
 mod dsgd;
 mod hogwild;
 mod seq;
+pub mod stream_grid;
 
 pub use block_common::BlockEngine;
+pub use stream_grid::{EpochStreamGrid, StreamPlan};
 
 use crate::data::Dataset;
 use crate::metrics::{ConvergenceDetector, EpochStat, History, Stopwatch};
@@ -257,6 +259,12 @@ pub struct TrainReport {
     pub factors: Factors,
     /// Epoch at which early stop fired (None = ran all epochs).
     pub converged_epoch: Option<u32>,
+    /// Evaluation clamp floor (callers wiring serving on top of a report —
+    /// e.g. the out-of-core stream warm phase — need the rating range
+    /// without re-scanning the data).
+    pub rating_min: f32,
+    /// Evaluation clamp ceiling.
+    pub rating_max: f32,
 }
 
 impl TrainReport {
@@ -333,11 +341,68 @@ pub fn train(data: &Dataset, cfg: &TrainConfig) -> Result<TrainReport> {
     Ok(run_driver(data, cfg, runner))
 }
 
+/// Out-of-core training options beyond the [`TrainConfig`]: split
+/// parameters, chunking, grid-residency policy, and the shard-prefix
+/// restriction the streaming warm phase uses.
+#[derive(Clone, Copy, Debug)]
+pub struct OocOptions {
+    /// Held-out fraction for the hash split.
+    pub test_frac: f64,
+    /// Hash-split seed.
+    pub split_seed: u64,
+    /// Records per bounded read chunk.
+    pub chunk: usize,
+    /// Grid residency policy (`Auto` resolves against `tile_bytes`; the
+    /// `A2PSGD_MEMORY` env var can override the automatic choice).
+    pub memory: crate::config::MemoryMode,
+    /// Streaming tile budget in bytes: per-wave decoded payload bound and
+    /// the auto-selection threshold.
+    pub tile_bytes: u64,
+    /// Train on only the first `k` shards (row prefix) when set.
+    pub shard_prefix: Option<usize>,
+}
+
+impl OocOptions {
+    /// Default streaming tile budget (512 MiB of decoded lanes per wave).
+    pub const DEFAULT_TILE_BYTES: u64 = 512 << 20;
+
+    /// Options with auto memory selection and the default tile budget.
+    pub fn new(test_frac: f64, split_seed: u64, chunk: usize) -> Self {
+        OocOptions {
+            test_frac,
+            split_seed,
+            chunk,
+            memory: crate::config::MemoryMode::Auto,
+            tile_bytes: Self::DEFAULT_TILE_BYTES,
+            shard_prefix: None,
+        }
+    }
+
+    /// Builder: grid residency policy.
+    pub fn memory(mut self, m: crate::config::MemoryMode) -> Self {
+        self.memory = m;
+        self
+    }
+
+    /// Builder: streaming tile budget in bytes.
+    pub fn tile_bytes(mut self, b: u64) -> Self {
+        self.tile_bytes = b.max(1);
+        self
+    }
+
+    /// Builder: restrict training to the first `k` shards.
+    pub fn shard_prefix(mut self, k: usize) -> Self {
+        self.shard_prefix = Some(k);
+        self
+    }
+}
+
 /// Train a block-scheduled engine directly from a packed `.a2ps` shard
 /// directory — the dataset is never materialized as a monolithic COO or a
 /// [`Dataset`]: shards stream through bounded buffers into the block grid
 /// (parallel decode on the worker pool), and only the test fraction is
-/// resident for evaluation.
+/// resident for evaluation. Memory mode is auto-selected (see
+/// [`OocOptions`]); use [`train_ooc_opts`] for explicit control.
 ///
 /// Produces bit-identical results to [`train`] over the equivalent
 /// in-memory dataset at `threads = 1` (and statistically identical at any
@@ -352,6 +417,20 @@ pub fn train_ooc(
     split_seed: u64,
     chunk: usize,
 ) -> Result<TrainReport> {
+    train_ooc_opts(dir, name, cfg, &OocOptions::new(test_frac, split_seed, chunk))
+}
+
+/// [`train_ooc`] with explicit [`OocOptions`]. In `Resident` mode the whole
+/// grid is ingested up front (PR 4 behavior); in `Streaming` mode epochs
+/// re-decode shard row-ranges into bounded tiles through the mmap readers
+/// ([`stream_grid`]) — bit-identical to resident at `threads = 1`, with
+/// peak grid memory bounded by the tile budget instead of total nnz.
+pub fn train_ooc_opts(
+    dir: &Path,
+    name: &str,
+    cfg: &TrainConfig,
+    opts: &OocOptions,
+) -> Result<TrainReport> {
     let kind = match cfg.engine {
         EngineKind::Fpsgd => PartitionKind::Uniform,
         EngineKind::A2psgd => cfg.partition,
@@ -360,36 +439,86 @@ pub fn train_ooc(
              {other} needs the in-memory path"
         ),
     };
-    let ooc =
-        crate::data::ingest::ingest_ooc(dir, kind, cfg.threads, test_frac, split_seed, chunk)?;
-    let crate::data::ingest::OocIngest {
-        grid,
-        nrows,
-        ncols,
-        train_nnz,
-        train_mean,
-        rating_min,
-        rating_max,
-        test,
-    } = ooc;
-    // Mirror `train`'s RNG discipline exactly: one stream, factors first,
-    // engine fork second — parity with the in-memory path depends on it.
-    let mut rng = Rng::new(cfg.seed);
-    let scale = Factors::default_scale(train_mean, cfg.d);
-    let factors = Factors::init(nrows, ncols, cfg.d, scale, &mut rng);
-    let runner: Box<dyn EpochRunner> = match cfg.engine {
-        EngineKind::Fpsgd => Box::new(BlockEngine::fpsgd_grid(grid, factors, cfg, &mut rng)),
-        EngineKind::A2psgd => Box::new(BlockEngine::a2psgd_grid(grid, factors, cfg, &mut rng)),
-        _ => unreachable!("gated above"),
+    let rule = match cfg.engine {
+        EngineKind::Fpsgd => crate::optim::Rule::Sgd,
+        _ => cfg.rule,
     };
-    let plan = EvalPlan {
-        name,
-        test: &test,
-        rating_min,
-        rating_max,
-        quota: train_nnz,
-    };
-    Ok(run_driver_with(&plan, cfg, runner))
+    // Estimate the resident grid's lane bytes straight off the manifest —
+    // free, and all Auto needs.
+    let manifest = crate::data::shard::Manifest::load(dir)?;
+    let nshards = manifest.shards.len();
+    let prefix = opts.shard_prefix.unwrap_or(nshards);
+    anyhow::ensure!(
+        prefix >= 1 && prefix <= nshards,
+        "shard prefix {prefix} outside 1..={nshards}"
+    );
+    let est_nnz: u64 = manifest.shards[..prefix].iter().map(|s| s.nnz).sum();
+    let est_grid_bytes = est_nnz * crate::data::shard::RECORD_LEN as u64;
+    match opts.memory.resolve(est_grid_bytes, opts.tile_bytes) {
+        crate::config::MemoryMode::Streaming => {
+            let mut plan = StreamPlan::open(
+                dir,
+                kind,
+                cfg.threads,
+                opts.test_frac,
+                opts.split_seed,
+                opts.chunk,
+                opts.tile_bytes,
+                opts.shard_prefix,
+            )?;
+            let test = plan.take_test();
+            let (nrows, ncols) = (plan.nrows(), plan.ncols());
+            let (train_nnz, train_mean) = (plan.train_nnz(), plan.train_mean());
+            let (rating_min, rating_max) = (plan.rating_min(), plan.rating_max());
+            // Mirror `train`'s RNG discipline exactly: one stream, factors
+            // first, engine fork second.
+            let mut rng = Rng::new(cfg.seed);
+            let scale = Factors::default_scale(train_mean, cfg.d);
+            let factors = Factors::init(nrows, ncols, cfg.d, scale, &mut rng);
+            let runner: Box<dyn EpochRunner> =
+                Box::new(plan.into_runner(factors, cfg, rule, &mut rng));
+            let eval = EvalPlan { name, test: &test, rating_min, rating_max, quota: train_nnz };
+            Ok(run_driver_with(&eval, cfg, runner))
+        }
+        _ => {
+            let ooc = crate::data::ingest::ingest_ooc_prefix(
+                dir,
+                kind,
+                cfg.threads,
+                opts.test_frac,
+                opts.split_seed,
+                opts.chunk,
+                opts.shard_prefix,
+            )?;
+            let crate::data::ingest::OocIngest {
+                grid,
+                nrows,
+                ncols,
+                train_nnz,
+                train_mean,
+                rating_min,
+                rating_max,
+                test,
+            } = ooc;
+            // Mirror `train`'s RNG discipline exactly: one stream, factors
+            // first, engine fork second — parity with the in-memory path
+            // depends on it.
+            let mut rng = Rng::new(cfg.seed);
+            let scale = Factors::default_scale(train_mean, cfg.d);
+            let factors = Factors::init(nrows, ncols, cfg.d, scale, &mut rng);
+            let runner: Box<dyn EpochRunner> = match cfg.engine {
+                EngineKind::Fpsgd => {
+                    Box::new(BlockEngine::fpsgd_grid(grid, factors, cfg, &mut rng))
+                }
+                EngineKind::A2psgd => {
+                    Box::new(BlockEngine::a2psgd_grid(grid, factors, cfg, &mut rng))
+                }
+                _ => unreachable!("gated above"),
+            };
+            let plan = EvalPlan { name, test: &test, rating_min, rating_max, quota: train_nnz };
+            Ok(run_driver_with(&plan, cfg, runner))
+        }
+    }
 }
 
 /// What the epoch/eval/early-stop protocol needs from a dataset — without
@@ -473,6 +602,8 @@ pub fn run_driver_with(
         total_updates,
         factors: runner.into_factors(),
         converged_epoch,
+        rating_min: plan.rating_min,
+        rating_max: plan.rating_max,
     }
 }
 

@@ -1,0 +1,623 @@
+//! Streaming-epoch training: the block grid is never fully resident.
+//!
+//! The out-of-core ingest of PR 4 made *parsing* out-of-core but still
+//! materialized the whole [`BlockCsr`] grid in RAM before the first epoch —
+//! for datasets whose training working set exceeds memory that is the real
+//! wall. HOGWILD! (Niu et al., 2011) assumes data re-sweeps are cheap, and
+//! the `.a2ps` layout makes them sequential IO; this module leans on both:
+//!
+//! - every shard is opened through an [`MmapShardReader`], so per-epoch
+//!   readback is a page-cache walk with zero copies and — because records
+//!   are row-major sorted — *random row access* via binary search;
+//! - an epoch is a sequence of **waves**: contiguous row-block bands sized
+//!   to a tile budget. Each wave re-decodes exactly its rows from the
+//!   overlapping shards into block-CSR tiles and trains them with the
+//!   standard work-aware [`LockFreeScheduler`] + [`SweepLanes`] machinery;
+//!   out-of-wave blocks simply carry zero work, so the scheduler never
+//!   visits them;
+//! - waves are **double-buffered**: while workers train wave *w*, worker 0
+//!   decodes wave *w + 1* first and then joins training — decode IO
+//!   overlaps update compute, and peak decoded-tile residency is bounded by
+//!   two waves (≈ 2 × the tile budget), not by total nnz.
+//!
+//! Correctness anchors:
+//! - all shards are CRC-verified, sort-checked, and per-record validated
+//!   once at plan construction (the stats pass); per-epoch re-decodes
+//!   re-validate record bounds/finiteness but skip the CRC. The trust
+//!   model after the open-time sweep is the same as the resident grid's
+//!   (which decodes once and trusts RAM thereafter): a mid-run mutation
+//!   that breaks a record check panics, one that keeps records valid is
+//!   not detected, and truncating a live mapping is a SIGBUS like any
+//!   mmap'd file — don't rewrite shard dirs under a running trainer
+//!   (`pack` never modifies shards in place);
+//! - waves are aligned to row-*block* boundaries, so each block lives in
+//!   exactly one wave and tile lanes are bit-identical to the resident
+//!   grid's blocks (same canonical insertion order, same counting sort);
+//! - at `threads = 1` a wave sweeps its blocks in row-major order, which
+//!   concatenates across waves into exactly the resident engine's
+//!   deterministic c = 1 order — `--memory streaming` is therefore
+//!   bit-identical to `--memory resident` single-threaded.
+
+use super::{EpochRunner, TrainConfig};
+use crate::data::ingest::{split_scan_cached, MmapReaderSource};
+use crate::data::shard::{open_checked_mmap, Manifest, MmapShardReader, RECORD_LEN};
+use crate::data::split;
+use crate::data::split_cache::SplitBitmap;
+use crate::model::{Factors, SharedFactors};
+use crate::optim::kernel::KernelSet;
+use crate::optim::{Hyper, Rule};
+use crate::partition::{bounds_for, build_assignment, Bounds, PartitionKind};
+use crate::rng::Rng;
+use crate::runtime::pool::{Backoff, WorkerPool};
+use crate::scheduler::{BlockScheduler, LockFreeScheduler};
+use crate::sparse::{BlockCsr, CooMatrix, SweepLanes};
+use crate::Result;
+use anyhow::ensure;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// One epoch wave: a contiguous row-block band plus the shard record slices
+/// (found by binary search over the row-sorted records) that cover it.
+struct Wave {
+    /// First row-block index covered.
+    i0: usize,
+    /// One past the last row-block covered.
+    i1: usize,
+    /// `(shard index, record lo, record hi)` slices to decode.
+    slices: Vec<(usize, u64, u64)>,
+    /// Training payload bytes this wave decodes (exact: tiles hold the
+    /// training records of these rows at [`RECORD_LEN`] bytes each).
+    est_bytes: u64,
+}
+
+/// The validated plan for streaming-epoch training over a shard directory:
+/// mmap readers, split decisions, grid bounds, and the wave schedule —
+/// everything except the factors (which the caller initializes with the
+/// same RNG discipline as the resident path, then hands to
+/// [`StreamPlan::into_runner`]).
+pub struct StreamPlan {
+    readers: Vec<MmapShardReader>,
+    waves: Vec<Wave>,
+    shard_base: Vec<u64>,
+    row_bounds: Bounds,
+    col_bounds: Bounds,
+    row_of: Vec<u32>,
+    col_of: Vec<u32>,
+    bitmap: Option<SplitBitmap>,
+    seed: u64,
+    test_frac: f64,
+    nrows: u32,
+    ncols: u32,
+    train_nnz: u64,
+    train_mean: f64,
+    rating_min: f32,
+    rating_max: f32,
+    test: CooMatrix,
+    max_wave_bytes: u64,
+}
+
+impl StreamPlan {
+    /// Open a shard directory (optionally restricted to the first `prefix`
+    /// shards), run the validating stats pass, and plan the epoch waves
+    /// under `tile_bytes` of decoded payload per wave (each wave covers at
+    /// least one row block, so a single oversized band may exceed it).
+    #[allow(clippy::too_many_arguments)]
+    pub fn open(
+        dir: &Path,
+        kind: PartitionKind,
+        threads: usize,
+        test_frac: f64,
+        seed: u64,
+        chunk: usize,
+        tile_bytes: u64,
+        prefix: Option<usize>,
+    ) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let nshards = manifest.shards.len();
+        let prefix_n = prefix.unwrap_or(nshards);
+        ensure!(
+            prefix_n >= 1 && prefix_n <= nshards,
+            "shard prefix {prefix_n} outside 1..={nshards}"
+        );
+        let full_dir = prefix_n == nshards;
+        let nrows = if full_dir {
+            manifest.nrows
+        } else {
+            manifest.shards[prefix_n - 1].row_hi
+        };
+        let ncols = manifest.ncols;
+        let mut readers = Vec::with_capacity(prefix_n);
+        for meta in &manifest.shards[..prefix_n] {
+            readers.push(open_checked_mmap(dir, &manifest, meta)?);
+        }
+        let shard_base = crate::data::shard::shard_record_bases(&manifest, prefix_n);
+
+        // Stats + split pass: the shared [`split_scan_cached`] over the
+        // mmap readers — one CRC-verified sweep through the mapped pages,
+        // and the exact code path the resident ingest runs, so both modes
+        // make bit-identical split/stat decisions by construction. Split
+        // decisions come from the bitmap sidecar when one is current;
+        // otherwise the hash decisions recorded here are persisted
+        // (full-directory plans only), so repeated runs — and every later
+        // epoch of this one — skip the rehash.
+        let mut bitmap = if full_dir {
+            SplitBitmap::load(dir, &manifest, seed, test_frac)?
+        } else {
+            None
+        };
+        let mut src = MmapReaderSource::new(&mut readers, chunk, nrows, ncols);
+        let (scan, recorded) =
+            split_scan_cached(&mut src, test_frac, seed, bitmap.as_ref(), full_dir)?;
+        if full_dir && bitmap.is_none() {
+            if let Some(bits) = recorded {
+                bitmap = SplitBitmap::persist_scan_bits(dir, &manifest, seed, test_frac, bits);
+            }
+        }
+        ensure!(
+            scan.train_nnz > 0,
+            "{}: no training instances after split",
+            dir.display()
+        );
+        let train_nnz = scan.train_nnz;
+
+        let nblocks = threads.max(1) + 1;
+        let row_bounds = bounds_for(kind, &scan.train_row_counts, nblocks);
+        let col_bounds = bounds_for(kind, &scan.train_col_counts, nblocks);
+        let row_of = build_assignment(&row_bounds, nrows);
+        let col_of = build_assignment(&col_bounds, ncols);
+
+        // Exact training payload per row block (tiles store training
+        // records only, RECORD_LEN bytes of lanes each).
+        let mut block_bytes = vec![0u64; nblocks];
+        for (row, &c) in scan.train_row_counts.iter().enumerate() {
+            block_bytes[row_of[row] as usize] += c as u64 * RECORD_LEN as u64;
+        }
+        // Greedy wave cuts along row-block boundaries under the budget.
+        let tile = tile_bytes.max(1);
+        let mut waves: Vec<Wave> = Vec::new();
+        let mut i0 = 0usize;
+        let mut acc = 0u64;
+        for (i, &b) in block_bytes.iter().enumerate() {
+            if i > i0 && acc + b > tile {
+                waves.push(Wave { i0, i1: i, slices: Vec::new(), est_bytes: acc });
+                i0 = i;
+                acc = 0;
+            }
+            acc += b;
+        }
+        waves.push(Wave { i0, i1: nblocks, slices: Vec::new(), est_bytes: acc });
+        let max_wave_bytes = waves.iter().map(|w| w.est_bytes).max().unwrap_or(0);
+        // Record slices per wave: binary search each overlapping shard for
+        // the wave's dense-row span.
+        for wave in &mut waves {
+            let rlo = row_bounds[wave.i0];
+            let rhi = row_bounds[wave.i1];
+            for (s, reader) in readers.iter().enumerate() {
+                let h = reader.header();
+                if h.row_hi <= rlo || h.row_lo >= rhi {
+                    continue;
+                }
+                let (slo, shi) = reader.row_range(rlo, rhi);
+                if slo < shi {
+                    wave.slices.push((s, slo, shi));
+                }
+            }
+        }
+
+        Ok(StreamPlan {
+            readers,
+            waves,
+            shard_base,
+            row_bounds,
+            col_bounds,
+            row_of,
+            col_of,
+            bitmap,
+            seed,
+            test_frac,
+            nrows,
+            ncols,
+            train_nnz,
+            train_mean: scan.train_mean,
+            rating_min: scan.rating_min,
+            rating_max: scan.rating_max,
+            test: scan.test,
+            max_wave_bytes,
+        })
+    }
+
+    /// Full-matrix rows covered by the plan.
+    pub fn nrows(&self) -> u32 {
+        self.nrows
+    }
+
+    /// Full-matrix columns.
+    pub fn ncols(&self) -> u32 {
+        self.ncols
+    }
+
+    /// Training instances (the epoch quota).
+    pub fn train_nnz(&self) -> u64 {
+        self.train_nnz
+    }
+
+    /// Mean training rating (factor-init scale).
+    pub fn train_mean(&self) -> f64 {
+        self.train_mean
+    }
+
+    /// Min rating over all instances.
+    pub fn rating_min(&self) -> f32 {
+        self.rating_min
+    }
+
+    /// Max rating over all instances.
+    pub fn rating_max(&self) -> f32 {
+        self.rating_max
+    }
+
+    /// Planned epoch waves.
+    pub fn nwaves(&self) -> usize {
+        self.waves.len()
+    }
+
+    /// Largest single wave's decoded training payload, in bytes. Stays at
+    /// or under the tile budget unless one row block alone exceeds it.
+    pub fn max_wave_bytes(&self) -> u64 {
+        self.max_wave_bytes
+    }
+
+    /// Total training payload across waves (what the resident grid would
+    /// hold all at once).
+    pub fn total_train_bytes(&self) -> u64 {
+        self.train_nnz * RECORD_LEN as u64
+    }
+
+    /// Extract the held-out test set (materialized — it is the small
+    /// fraction; the runner does not need it).
+    pub fn take_test(&mut self) -> CooMatrix {
+        std::mem::replace(&mut self.test, CooMatrix::new(0, 0))
+    }
+
+    /// Consume the plan into an [`EpochRunner`]. `factors` must have been
+    /// initialized with the same RNG discipline as the resident path
+    /// (`Rng::new(seed)` → `Factors::init` first) — c = 1 bit-identity
+    /// rides on it.
+    pub fn into_runner(
+        self,
+        factors: Factors,
+        cfg: &TrainConfig,
+        rule: Rule,
+        rng: &mut Rng,
+    ) -> EpochStreamGrid {
+        let kernels = KernelSet::select(factors.d(), cfg.kernel);
+        EpochStreamGrid {
+            shared: SharedFactors::new(factors),
+            plan: self,
+            hyper: cfg.hyper,
+            rule,
+            kernels,
+            pool: WorkerPool::new(cfg.threads),
+            rng: rng.fork(3),
+            peak_tile_bytes: AtomicU64::new(0),
+        }
+    }
+}
+
+/// The streaming-epoch [`EpochRunner`]: re-decodes wave tiles per epoch and
+/// trains them on the standard scheduler machinery (see the module docs).
+pub struct EpochStreamGrid {
+    shared: SharedFactors,
+    plan: StreamPlan,
+    hyper: Hyper,
+    rule: Rule,
+    kernels: KernelSet,
+    pool: WorkerPool,
+    rng: Rng,
+    peak_tile_bytes: AtomicU64,
+}
+
+impl EpochStreamGrid {
+    /// Planned epoch waves.
+    pub fn nwaves(&self) -> usize {
+        self.plan.nwaves()
+    }
+
+    /// Largest single wave's decoded payload (see [`StreamPlan::max_wave_bytes`]).
+    pub fn max_wave_bytes(&self) -> u64 {
+        self.plan.max_wave_bytes()
+    }
+
+    /// High-water mark of decoded tile residency across all epochs so far
+    /// (current wave + prefetched next wave). Bounded by
+    /// `2 × max_wave_bytes`, *not* by total nnz — the streaming guarantee.
+    pub fn peak_tile_bytes(&self) -> u64 {
+        self.peak_tile_bytes.load(Ordering::Relaxed)
+    }
+
+    fn bump_peak(&self, bytes: u64) {
+        self.peak_tile_bytes.fetch_max(bytes, Ordering::Relaxed);
+    }
+
+    /// Decode one wave's tiles from the mapped shards: training records of
+    /// the wave's rows, scattered into block-CSR tiles in canonical order
+    /// and finalized — bit-identical lanes to the resident grid's blocks.
+    /// Returns the tiles plus their payload byte size.
+    fn decode_wave(&self, w: usize) -> (Vec<BlockCsr>, u64) {
+        let plan = &self.plan;
+        let wave = &plan.waves[w];
+        let nb = plan.col_bounds.len() - 1;
+        let mut tiles = Vec::with_capacity((wave.i1 - wave.i0) * nb);
+        for i in wave.i0..wave.i1 {
+            for j in 0..nb {
+                tiles.push(BlockCsr::with_capacity(
+                    plan.row_bounds[i],
+                    plan.row_bounds[i + 1] - plan.row_bounds[i],
+                    plan.col_bounds[j],
+                    plan.col_bounds[j + 1] - plan.col_bounds[j],
+                    0,
+                ));
+            }
+        }
+        for &(s, lo, hi) in &wave.slices {
+            let base = plan.shard_base[s];
+            plan.readers[s]
+                .decode_range(lo, hi, |k, e| {
+                    let is_test = match &plan.bitmap {
+                        Some(bm) => bm.is_test(base + k),
+                        None => split::hash_is_test(e.u, e.v, plan.seed, plan.test_frac),
+                    };
+                    if is_test {
+                        return;
+                    }
+                    let bi = plan.row_of[e.u as usize] as usize;
+                    let bj = plan.col_of[e.v as usize] as usize;
+                    debug_assert!(
+                        (wave.i0..wave.i1).contains(&bi),
+                        "record row {} scattered outside its wave",
+                        e.u
+                    );
+                    tiles[(bi - wave.i0) * nb + bj].push(e.u, e.v, e.r);
+                })
+                // The shards passed full validation (CRC included) at plan
+                // construction, so record checks cannot fail unless the
+                // file changed on disk mid-run — refuse to train on
+                // anything detectably altered (see the module docs for the
+                // exact trust model).
+                .unwrap_or_else(|e| panic!("shard re-decode failed mid-run: {e:#}"));
+        }
+        let mut bytes = 0u64;
+        for t in &mut tiles {
+            t.finalize();
+            bytes += t.len() as u64 * RECORD_LEN as u64;
+        }
+        (tiles, bytes)
+    }
+}
+
+impl EpochRunner for EpochStreamGrid {
+    fn run_epoch(&mut self, epoch: u32, quota: u64) -> u64 {
+        if quota == 0 || self.plan.train_nnz == 0 {
+            return 0;
+        }
+        let base = self.rng.fork(epoch as u64);
+        let this = &*self;
+        let threads = this.pool.threads();
+        let nb = this.plan.col_bounds.len() - 1;
+        let nwaves = this.plan.waves.len();
+        let mut total = 0u64;
+        let mut next = Some(this.decode_wave(0));
+        for w in 0..nwaves {
+            let (cur, cur_bytes) = next.take().expect("wave decoded");
+            this.bump_peak(cur_bytes);
+            let wave = &this.plan.waves[w];
+            let wave_total: u64 = cur.iter().map(|b| b.len() as u64).sum();
+            if wave_total == 0 {
+                // All-empty wave (row blocks whose records all went to the
+                // test split, or trailing empty bands from a coarse
+                // partition): nothing to train, and an all-zero work
+                // vector would trip the work-aware scheduler's
+                // non-empty-grid assertion — decode the next wave and move
+                // on.
+                drop(cur);
+                if w + 1 < nwaves {
+                    let decoded = this.decode_wave(w + 1);
+                    this.bump_peak(decoded.1);
+                    next = Some(decoded);
+                }
+                continue;
+            }
+            if threads == 1 {
+                // Deterministic single-worker path: sweep this wave's tiles
+                // row-major — concatenated across waves this is exactly the
+                // resident engine's c = 1 block order (see module docs) —
+                // then drop them *before* decoding the next wave: with one
+                // thread there is nothing to overlap, so prefetching would
+                // only double peak residency for free.
+                for tile in &cur {
+                    total += tile.sweep(|u, v, r| {
+                        // SAFETY: single worker — trivially exclusive.
+                        let (mu, nv, phiu, psiv) = unsafe { this.shared.rows_mut(u, v) };
+                        this.kernels.apply(this.rule, mu, nv, phiu, psiv, r, &this.hyper);
+                    });
+                }
+                drop(cur);
+                if w + 1 < nwaves {
+                    let decoded = this.decode_wave(w + 1);
+                    this.bump_peak(decoded.1);
+                    next = Some(decoded);
+                }
+                continue;
+            }
+            // Per-wave work-aware scheduler over the full nb×nb index
+            // space; out-of-wave blocks carry zero work and are never
+            // selected, so the CAS row/column-exclusion protocol runs
+            // unchanged.
+            let mut work = vec![0u64; nb * nb];
+            for (k, b) in cur.iter().enumerate() {
+                let i = wave.i0 + k / nb;
+                let j = k % nb;
+                work[i * nb + j] = b.len() as u64;
+            }
+            let sched = LockFreeScheduler::work_aware(nb, &work);
+            let done = AtomicU64::new(0);
+            let next_slot: Mutex<Option<(Vec<BlockCsr>, u64)>> = Mutex::new(None);
+            let decode_next = w + 1 < nwaves;
+            this.pool.run(|t| {
+                if t == 0 && decode_next {
+                    // Double buffering: worker 0 prefetches the next wave
+                    // while the rest train this one, then joins them.
+                    let decoded = this.decode_wave(w + 1);
+                    this.bump_peak(cur_bytes + decoded.1);
+                    *next_slot.lock().unwrap_or_else(std::sync::PoisonError::into_inner) =
+                        Some(decoded);
+                }
+                let mut rng = base.clone().fork(w as u64).fork(t as u64);
+                let mut backoff = Backoff::new();
+                loop {
+                    if done.load(Ordering::Relaxed) >= wave_total {
+                        return;
+                    }
+                    let Some(claim) = sched.acquire(&mut rng) else {
+                        backoff.wait();
+                        continue;
+                    };
+                    backoff.reset();
+                    if claim.i < wave.i0 || claim.i >= wave.i1 {
+                        // Zero-work blocks are never selected by the
+                        // work-aware scheduler; defensive all the same.
+                        sched.release(claim);
+                        continue;
+                    }
+                    let tile = &cur[(claim.i - wave.i0) * nb + claim.j];
+                    let n = tile.sweep(|u, v, r| {
+                        // SAFETY: the scheduler guarantees no concurrent
+                        // claim shares this row or column block, so all
+                        // rows touched here are exclusively ours.
+                        let (mu, nv, phiu, psiv) = unsafe { this.shared.rows_mut(u, v) };
+                        this.kernels.apply(this.rule, mu, nv, phiu, psiv, r, &this.hyper);
+                    });
+                    done.fetch_add(n, Ordering::Relaxed);
+                    sched.release_processed(claim, n);
+                }
+            });
+            total += done.load(Ordering::Relaxed);
+            next = next_slot
+                .into_inner()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+        total
+    }
+
+    fn shared(&self) -> &SharedFactors {
+        &self.shared
+    }
+
+    fn into_factors(self: Box<Self>) -> Factors {
+        self.shared.into_inner()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ingest::ingest_ooc;
+    use crate::data::shard::{pack_coo, PackOptions};
+    use crate::data::synthetic;
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("a2psgd_streamgrid_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn packed_twin(tag: &str, seed: u64) -> PathBuf {
+        let d = synthetic::small(seed);
+        let mut m = CooMatrix::new(d.nrows(), d.ncols());
+        for e in d.train.entries().iter().chain(d.test.entries()) {
+            m.push(e.u, e.v, e.r).unwrap();
+        }
+        m.dedup();
+        let dir = tmpdir(tag);
+        pack_coo(&m, &dir, &PackOptions { shard_bytes: 8 << 10 }).unwrap();
+        dir
+    }
+
+    /// Every wave tile must be bit-identical to the resident grid's block —
+    /// the invariant the whole parity story stands on.
+    #[test]
+    fn wave_tiles_match_resident_grid_blocks() {
+        let dir = packed_twin("tiles", 0x31);
+        let threads = 3;
+        let resident =
+            ingest_ooc(&dir, PartitionKind::Balanced, threads, 0.3, 0x5EED, 500).unwrap();
+        // Tiny tile budget forces several waves.
+        let plan = StreamPlan::open(
+            &dir,
+            PartitionKind::Balanced,
+            threads,
+            0.3,
+            0x5EED,
+            500,
+            16 << 10,
+            None,
+        )
+        .unwrap();
+        assert!(plan.nwaves() > 1, "expected multiple waves, got {}", plan.nwaves());
+        assert_eq!(plan.train_nnz(), resident.train_nnz);
+        let nb = plan.col_bounds.len() - 1;
+        assert_eq!(plan.row_bounds, *resident.grid.row_bounds());
+        assert_eq!(plan.col_bounds, *resident.grid.col_bounds());
+        let cfg = TrainConfig::preset_named(crate::engine::EngineKind::A2psgd, "twin")
+            .threads(threads)
+            .dim(4);
+        let mut rng = Rng::new(1);
+        let f = Factors::init(plan.nrows(), plan.ncols(), 4, 0.3, &mut rng);
+        let runner = plan.into_runner(f, &cfg, Rule::Nag, &mut rng);
+        let mut covered = 0u64;
+        for w in 0..runner.nwaves() {
+            let (tiles, _) = runner.decode_wave(w);
+            let wave = &runner.plan.waves[w];
+            for (k, tile) in tiles.iter().enumerate() {
+                let i = wave.i0 + k / nb;
+                let j = k % nb;
+                let block = resident.grid.block(i, j);
+                assert_eq!(tile.lanes(), block.lanes(), "tile ({i},{j}) lanes differ");
+                assert_eq!(tile.indptr(), block.indptr(), "tile ({i},{j}) indptr differs");
+                covered += tile.len() as u64;
+            }
+        }
+        assert_eq!(covered, resident.train_nnz, "waves must cover every training instance");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn waves_partition_row_blocks_contiguously() {
+        let dir = packed_twin("waves", 0x32);
+        let plan = StreamPlan::open(
+            &dir,
+            PartitionKind::Balanced,
+            4,
+            0.3,
+            7,
+            1000,
+            4 << 10,
+            None,
+        )
+        .unwrap();
+        let nb = plan.col_bounds.len() - 1;
+        let mut expect = 0usize;
+        for w in &plan.waves {
+            assert_eq!(w.i0, expect, "waves must tile the row blocks in order");
+            assert!(w.i1 > w.i0);
+            expect = w.i1;
+        }
+        assert_eq!(expect, nb, "waves must cover every row block");
+        assert!(plan.max_wave_bytes() < plan.total_train_bytes());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -125,6 +125,13 @@ fn data_config_from_args(args: &Args) -> Result<a2psgd::config::DataConfig> {
         anyhow::ensure!(x >= 1, "--shard-mb must be >= 1");
         dc.shard_mb = x;
     }
+    if let Some(m) = args.get("memory") {
+        dc.memory = a2psgd::config::MemoryMode::parse(m)?;
+    }
+    if let Some(x) = args.get_parsed::<usize>("stream-mb")? {
+        anyhow::ensure!(x >= 1, "--stream-mb must be >= 1");
+        dc.stream_mb = x;
+    }
     Ok(dc)
 }
 
@@ -195,11 +202,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         let cfg = config_from_args(args, engine, &key)?;
         eprintln!(
             "out-of-core training {engine} on shard dir {key} — d={} threads={} epochs={} \
-             η={} λ={} γ={}",
-            cfg.d, cfg.threads, cfg.epochs, cfg.hyper.eta, cfg.hyper.lam, cfg.hyper.gamma
+             η={} λ={} γ={} memory={:?}",
+            cfg.d, cfg.threads, cfg.epochs, cfg.hyper.eta, cfg.hyper.lam, cfg.hyper.gamma,
+            dc.memory
         );
-        let report =
-            a2psgd::engine::train_ooc(path, &key, &cfg, 0.3, seed, dc.chunk_records())?;
+        let opts = a2psgd::engine::OocOptions::new(0.3, seed, dc.chunk_records())
+            .memory(dc.memory)
+            .tile_bytes(dc.tile_bytes());
+        let report = a2psgd::engine::train_ooc_opts(path, &key, &cfg, &opts)?;
         return report_train(args, engine, &report);
     }
     if is_shards {
@@ -360,34 +370,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Warm-train on a prefix of users, then replay the remaining users'
-/// interactions as a live stream: incremental fold-in, sliding-window online
-/// NAG, and zero-downtime factor hot-swap into a running prediction service.
-fn cmd_stream(args: &Args) -> Result<()> {
-    use a2psgd::coordinator::service::{BackendMode, ExclusionSet};
-    use a2psgd::model::SnapshotStore;
-    use a2psgd::stream::{self, EventSource, OnlineTrainer, StreamConfig};
-    use std::sync::Arc;
-
-    let key = args.get_or("dataset", "small");
-    let seed = args.get_parsed::<u64>("seed")?.unwrap_or(0x5EED);
-    let data = a2psgd::coordinator::resolve_dataset(&key, seed)?;
-    eprintln!("dataset {}", data.describe());
-    let warm_frac = args.get_parsed::<f64>("warm-frac")?.unwrap_or(0.8);
-    anyhow::ensure!(
-        0.0 < warm_frac && warm_frac < 1.0,
-        "--warm-frac must be in (0, 1), got {warm_frac}"
-    );
-    let mut split = stream::replay_split(&data, warm_frac, seed);
-    eprintln!(
-        "warm split: {} warm users, {} cold users, {} stream events",
-        split.warm.nrows(),
-        split.n_cold_users,
-        split.stream.remaining()
-    );
-
-    // Stream config: preset → --config file → flags.
-    let mut scfg = StreamConfig::preset(&data.name).seed(seed);
+/// Stream config assembly shared by the in-memory and shard-dir stream
+/// paths: preset → `--config` file → flags, validated, with the
+/// process-wide kernel dispatch pinned to the result.
+fn stream_config_from_args(
+    args: &Args,
+    dataset_name: &str,
+    seed: u64,
+) -> Result<a2psgd::stream::StreamConfig> {
+    let mut scfg = a2psgd::stream::StreamConfig::preset(dataset_name).seed(seed);
     if let Some(path) = args.get("config") {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading config {path}"))?;
@@ -425,6 +416,44 @@ fn cmd_stream(args: &Args) -> Result<()> {
     scfg.validate()?;
     // Pin the process-wide dispatched dot (serving / holdout eval) too.
     a2psgd::optim::kernel::init_global(scfg.kernel);
+    Ok(scfg)
+}
+
+/// Warm-train on a prefix of users, then replay the remaining users'
+/// interactions as a live stream: incremental fold-in, sliding-window online
+/// NAG, and zero-downtime factor hot-swap into a running prediction service.
+///
+/// Shard-directory datasets take the out-of-core path ([`cmd_stream_shards`]):
+/// the warm phase trains straight off a shard prefix (never materializing
+/// the dataset) and the cold suffix replays through [`ShardReplaySource`] —
+/// streaming end to end.
+fn cmd_stream(args: &Args) -> Result<()> {
+    use a2psgd::coordinator::service::{BackendMode, ExclusionSet};
+    use a2psgd::model::SnapshotStore;
+    use a2psgd::stream::{self, EventSource, OnlineTrainer};
+    use std::sync::Arc;
+
+    let key = args.get_or("dataset", "small");
+    let seed = args.get_parsed::<u64>("seed")?.unwrap_or(0x5EED);
+    if a2psgd::data::shard::is_shard_dir(std::path::Path::new(&key)) {
+        return cmd_stream_shards(args, &key, seed);
+    }
+    let data = a2psgd::coordinator::resolve_dataset(&key, seed)?;
+    eprintln!("dataset {}", data.describe());
+    let warm_frac = args.get_parsed::<f64>("warm-frac")?.unwrap_or(0.8);
+    anyhow::ensure!(
+        0.0 < warm_frac && warm_frac < 1.0,
+        "--warm-frac must be in (0, 1), got {warm_frac}"
+    );
+    let mut split = stream::replay_split(&data, warm_frac, seed);
+    eprintln!(
+        "warm split: {} warm users, {} cold users, {} stream events",
+        split.warm.nrows(),
+        split.n_cold_users,
+        split.stream.remaining()
+    );
+
+    let scfg = stream_config_from_args(args, &data.name, seed)?;
 
     // 1. Warm offline training (same kernel policy as the online phase).
     let engine = EngineKind::parse(&args.get_or("engine", "a2psgd"))?;
@@ -541,6 +570,217 @@ fn cmd_stream(args: &Args) -> Result<()> {
     );
 
     // 5. Optional persistence: checkpoint v2 (with meta) + id map.
+    if let Some(path) = args.get("save") {
+        let meta = a2psgd::model::checkpoint::CheckpointMeta {
+            epoch: report.history.points().len() as u32,
+            snapshot_version: store.version(),
+            hyper: scfg.hyper,
+        };
+        a2psgd::model::checkpoint::save_with_meta(
+            trainer.factors(),
+            &meta,
+            std::path::Path::new(path),
+        )?;
+        let map_path = a2psgd::data::loader::idmap_path_for(std::path::Path::new(path));
+        trainer.map().save(&map_path)?;
+        eprintln!("checkpoint → {path} (+ {})", map_path.display());
+    }
+    Ok(())
+}
+
+/// The out-of-core `a2psgd stream` path for packed shard directories.
+///
+/// The in-memory path materializes the whole dataset just to cut a
+/// warm/cold user split; shards make that split free — they tile the dense
+/// rows contiguously, so "warm users" is a shard *prefix* and "cold users"
+/// the remaining shards. Warm training goes through `train_ooc_opts`
+/// (resident or streaming grid per `--memory`), the cold suffix replays as
+/// external-id events through `ShardReplaySource.skip_shards`, and the
+/// dataset is never resident end to end.
+fn cmd_stream_shards(args: &Args, key: &str, seed: u64) -> Result<()> {
+    use a2psgd::coordinator::service::{BackendMode, ExclusionSet, PredictionService as Svc};
+    use a2psgd::data::loader::IdMap;
+    use a2psgd::data::shard::Manifest;
+    use a2psgd::model::SnapshotStore;
+    use a2psgd::stream::{EventSource, OnlineTrainer, ShardReplaySource};
+    use std::sync::Arc;
+
+    let dir = std::path::Path::new(key);
+    let dc = data_config_from_args(args)?;
+    let manifest = Manifest::load(dir)?;
+    anyhow::ensure!(
+        manifest.shards.len() >= 2,
+        "{key}: streaming end to end needs ≥ 2 shards for a warm/cold split; \
+         repack with a smaller --shard-mb"
+    );
+    let warm_frac = args.get_parsed::<f64>("warm-frac")?.unwrap_or(0.8);
+    anyhow::ensure!(
+        0.0 < warm_frac && warm_frac < 1.0,
+        "--warm-frac must be in (0, 1), got {warm_frac}"
+    );
+    // Smallest shard prefix covering the warm user fraction, leaving at
+    // least one cold shard to stream.
+    let target = (manifest.nrows as f64 * warm_frac).ceil() as u32;
+    let k = manifest
+        .shards
+        .iter()
+        .position(|s| s.row_hi >= target)
+        .map(|p| p + 1)
+        .unwrap_or(manifest.shards.len())
+        .clamp(1, manifest.shards.len() - 1);
+    let warm_rows = manifest.shards[k - 1].row_hi;
+    let cold_nnz: u64 = manifest.shards[k..].iter().map(|s| s.nnz).sum();
+    eprintln!(
+        "shard warm split: {}/{} shards ({} of {} users) warm-trained out of core, \
+         {} cold events to stream",
+        k,
+        manifest.shards.len(),
+        warm_rows,
+        manifest.nrows,
+        cold_nnz
+    );
+
+    let scfg = stream_config_from_args(args, key, seed)?;
+
+    // 1. Warm offline training straight off the shard prefix — no
+    // materialized dataset; grid residency follows --memory.
+    let engine = EngineKind::parse(&args.get_or("engine", "a2psgd"))?;
+    anyhow::ensure!(
+        matches!(engine, EngineKind::Fpsgd | EngineKind::A2psgd),
+        "shard-dir streaming warm-trains out of core, which needs a block engine \
+         (fpsgd or a2psgd); got {engine}"
+    );
+    let mut tcfg = TrainConfig::preset_named(engine, key)
+        .threads(scfg.threads)
+        .seed(seed)
+        .kernel(scfg.kernel);
+    if let Some(e) = args.get_parsed::<u32>("epochs")? {
+        tcfg = tcfg.epochs(e);
+    }
+    let opts = a2psgd::engine::OocOptions::new(0.3, seed, dc.chunk_records())
+        .memory(dc.memory)
+        .tile_bytes(dc.tile_bytes())
+        .shard_prefix(k);
+    let report = a2psgd::engine::train_ooc_opts(dir, key, &tcfg, &opts)?;
+    eprintln!(
+        "warm training: best RMSE {:.4} over {} epochs",
+        report.best_rmse(),
+        report.history.points().len()
+    );
+    // Full-dataset clamp range: the warm report only saw the prefix shards,
+    // but the in-memory path clamps with the whole dataset's range — sweep
+    // the cold shards' values once (bounded buffer) to match.
+    let rating = {
+        let (mut lo, mut hi) = (report.rating_min, report.rating_max);
+        let mut buf = Vec::new();
+        for meta in &manifest.shards[k..] {
+            let mut r = a2psgd::data::shard::open_checked_mmap(dir, &manifest, meta)?;
+            while r.next_chunk(&mut buf, dc.chunk_records())? > 0 {
+                for e in &buf {
+                    lo = lo.min(e.r);
+                    hi = hi.max(e.r);
+                }
+            }
+        }
+        (lo, hi)
+    };
+
+    // 2. Trainer id map: the embedded map restricted to the warm users
+    // (dense order preserved) plus every item — cold users arrive as
+    // unknown external ids and fold in like live traffic.
+    let full_map = a2psgd::data::shard::load_idmap(dir)?;
+    let mut map = IdMap::new();
+    for du in 0..warm_rows {
+        let ext = full_map
+            .external_user(du)
+            .with_context(|| format!("embedded id map missing dense user {du}"))?;
+        map.intern_user(ext);
+    }
+    for dv in 0..manifest.ncols {
+        let ext = full_map
+            .external_item(dv)
+            .with_context(|| format!("embedded id map missing dense item {dv}"))?;
+        map.intern_item(ext);
+    }
+
+    // 3. Service over a hot-swappable snapshot store (version 1 = warm).
+    // Warm-train exclusions are skipped deliberately: materializing every
+    // warm (user, item) pair would defeat the out-of-core point; the
+    // exclusion set still accumulates everything seen on the stream.
+    let store = Arc::new(SnapshotStore::new(report.factors.clone()));
+    let mode = if args.has("native") { BackendMode::NativeOnly } else { BackendMode::Auto };
+    let artifacts = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(a2psgd::runtime::default_artifacts_dir);
+    let exclusions = Arc::new(ExclusionSet::new());
+    let svc = Svc::start_over_store(
+        artifacts,
+        Arc::clone(&store),
+        rating,
+        std::time::Duration::from_millis(2),
+        Some(Arc::clone(&exclusions)),
+        mode,
+    )
+    .context("starting the prediction service")?;
+    let client = svc.client();
+
+    // 4. Replay the cold shards as live events — bounded buffers all the
+    // way; ids translate to external through the embedded map.
+    let mut src = ShardReplaySource::with_chunk(dir, dc.chunk_records())?.skip_shards(k);
+    let mut trainer = OnlineTrainer::new(report.factors, map, scfg, Arc::clone(&store), rating)?;
+    trainer.share_exclusions(Arc::clone(&exclusions));
+    let t0 = std::time::Instant::now();
+    let mut next_report = 20u64;
+    while let Some(batch) = src.next_batch(scfg.batch) {
+        trainer.ingest(&batch);
+        if trainer.stats().batches >= next_report {
+            next_report += 20;
+            eprintln!(
+                "batch {:>5}  events {:>7}  new u/v {}/{}  window rmse {}  snapshot v{}",
+                trainer.stats().batches,
+                trainer.stats().events,
+                trainer.stats().new_users,
+                trainer.stats().new_items,
+                trainer
+                    .holdout_rmse()
+                    .map(|r| format!("{r:.4}"))
+                    .unwrap_or_else(|| "-".into()),
+                store.version()
+            );
+        }
+    }
+    if let Some(e) = src.error() {
+        anyhow::bail!("shard replay aborted: {e:#}");
+    }
+    trainer.publish();
+    let secs = t0.elapsed().as_secs_f64();
+    let stats = *trainer.stats();
+    let after = trainer.holdout_rmse();
+    drop(client);
+    let sstats = svc.shutdown();
+    println!(
+        "streamed {} events in {:.2}s ({:.0} ev/s): {} batches, {} new users, {} new items, {} updates",
+        stats.events,
+        secs,
+        stats.events as f64 / secs.max(1e-9),
+        stats.batches,
+        stats.new_users,
+        stats.new_items,
+        stats.updates
+    );
+    if let Some(a) = after {
+        println!("rolling holdout RMSE (live): {a:.4}");
+    }
+    println!(
+        "hot swap: {} snapshots published (store at v{}), service observed {} versions (last v{}) with zero restarts",
+        stats.publishes,
+        store.version(),
+        sstats.versions_seen,
+        sstats.last_version
+    );
+
+    // 5. Optional persistence: checkpoint v2 (with meta) + grown id map.
     if let Some(path) = args.get("save") {
         let meta = a2psgd::model::checkpoint::CheckpointMeta {
             epoch: report.history.points().len() as u32,
@@ -726,11 +966,13 @@ fn cmd_bench(args: &Args) -> Result<()> {
     // 1c. Ingest A/B: the full file→Dataset path, text parse vs packed
     // `.a2ps` shard ingest of the same records (written to a temp dir and
     // packed once, unmeasured). This is the loader stage the shard pipeline
-    // replaced — the artifact keeps the before/after on record.
+    // replaced — the artifact keeps the before/after on record. The packed
+    // dir stays alive for the readback and memory A/Bs below.
+    let tmp = std::env::temp_dir().join(format!("a2psgd_bench_ingest_{}", std::process::id()));
+    std::fs::remove_dir_all(&tmp).ok();
+    std::fs::create_dir_all(&tmp)?;
+    let shard_dir = tmp.join("shards");
     let ingest_json = {
-        let tmp = std::env::temp_dir().join(format!("a2psgd_bench_ingest_{}", std::process::id()));
-        std::fs::remove_dir_all(&tmp).ok();
-        std::fs::create_dir_all(&tmp)?;
         let text_path = tmp.join("bench.tsv");
         let mut text = String::with_capacity(data.total_nnz() * 12);
         for e in data.train.entries().iter().chain(data.test.entries()) {
@@ -738,11 +980,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
         }
         std::fs::write(&text_path, &text)?;
         drop(text);
-        let shard_dir = tmp.join("shards");
         let pstats = a2psgd::data::shard::pack_text(
             &text_path,
             &shard_dir,
-            &a2psgd::data::shard::PackOptions::default(),
+            &a2psgd::data::shard::PackOptions { shard_bytes: 256 << 10 },
         )?;
         let text_bench = bench("ingest (text → Dataset)", bcfg.warmup, bcfg.iters, || {
             let d = a2psgd::data::loader::load_file(&text_path, "bench", 0.3, bcfg.seed)
@@ -756,7 +997,6 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 .expect("shard ingest");
             std::hint::black_box(d.total_nnz());
         });
-        std::fs::remove_dir_all(&tmp).ok();
         println!("{}", text_bench.summary());
         println!("{}", shard_bench.summary());
         let ingest_speedup = text_bench.median() / shard_bench.median();
@@ -775,6 +1015,113 @@ fn cmd_bench(args: &Args) -> Result<()> {
             .int("shards", pstats.shards as u64)
             .build()
     };
+
+    // 1d. Readback micro: a full record sweep over the packed shards,
+    // BufReader copies vs the mmap page-cache walk — the per-epoch IO cost
+    // the streaming-memory mode pays. Repeated iterations keep the pages
+    // hot, which is exactly the streaming-epoch access pattern.
+    let readback_json = {
+        use a2psgd::data::shard::{open_checked, open_checked_mmap, Manifest};
+        let manifest = Manifest::load(&shard_dir)?;
+        let mut buf = Vec::new();
+        let mut sweep_buf = |use_mmap: bool| {
+            let mut acc = 0f64;
+            for meta in &manifest.shards {
+                if use_mmap {
+                    let mut r = open_checked_mmap(&shard_dir, &manifest, meta).expect("open");
+                    while r.next_chunk(&mut buf, 65_536).expect("read") > 0 {
+                        for e in &buf {
+                            acc += e.r as f64;
+                        }
+                    }
+                } else {
+                    let mut r = open_checked(&shard_dir, &manifest, meta).expect("open");
+                    while r.next_chunk(&mut buf, 65_536).expect("read") > 0 {
+                        for e in &buf {
+                            acc += e.r as f64;
+                        }
+                    }
+                }
+            }
+            std::hint::black_box(acc);
+        };
+        let buf_bench = bench("readback (BufReader sweep)", bcfg.warmup, bcfg.iters, || {
+            sweep_buf(false)
+        });
+        let mmap_bench = bench("readback (mmap sweep)", bcfg.warmup, bcfg.iters, || {
+            sweep_buf(true)
+        });
+        println!("{}", buf_bench.summary());
+        println!("{}", mmap_bench.summary());
+        let readback_speedup = buf_bench.median() / mmap_bench.median();
+        let mapped = a2psgd::data::shard::MmapShardReader::open(
+            &shard_dir.join(&manifest.shards[0].file),
+        )
+        .map(|r| r.is_mapped())
+        .unwrap_or(false);
+        println!(
+            "readback: mmap sweep {:.2}x vs BufReader ({} vs {}, backing: {})",
+            readback_speedup,
+            fmt_secs(mmap_bench.median()),
+            fmt_secs(buf_bench.median()),
+            if mapped { "mmap" } else { "owned-buffer fallback" }
+        );
+        json::Obj::new()
+            .num("bufreader_s", buf_bench.median())
+            .num("mmap_s", mmap_bench.median())
+            .num("speedup", readback_speedup)
+            .str("backing", if mapped { "mmap" } else { "owned" })
+            .build()
+    };
+
+    // 1e. Memory-mode A/B: full out-of-core training epochs, resident grid
+    // vs streaming waves (tile budget forced to a quarter of the grid so
+    // the wave machinery actually cycles). Reports the streaming overhead
+    // ratio — the price of bounded grid memory.
+    let memory_json = {
+        use a2psgd::config::MemoryMode;
+        use a2psgd::engine::{train_ooc_opts, OocOptions};
+        let epochs = (bcfg.iters as u32).max(1);
+        let mcfg = TrainConfig::preset_named(EngineKind::A2psgd, &data.name)
+            .threads(bcfg.threads)
+            .dim(bcfg.d)
+            .seed(bcfg.seed)
+            .epochs(epochs)
+            .no_early_stop();
+        let base_opts = OocOptions::new(0.3, bcfg.seed, 65_536);
+        let resident = train_ooc_opts(
+            &shard_dir,
+            &data.name,
+            &mcfg,
+            &base_opts.memory(MemoryMode::Resident),
+        )?;
+        let grid_bytes =
+            resident.total_updates / epochs as u64 * a2psgd::data::shard::RECORD_LEN as u64;
+        let streaming = train_ooc_opts(
+            &shard_dir,
+            &data.name,
+            &mcfg,
+            &base_opts
+                .memory(MemoryMode::Streaming)
+                .tile_bytes((grid_bytes / 4).max(4 << 10)),
+        )?;
+        let res_epoch = resident.train_seconds / epochs as f64;
+        let str_epoch = streaming.train_seconds / epochs as f64;
+        let overhead = str_epoch / res_epoch;
+        println!(
+            "memory: streaming epoch {} vs resident {} ({:.2}x overhead for bounded grid memory)",
+            fmt_secs(str_epoch),
+            fmt_secs(res_epoch),
+            overhead
+        );
+        json::Obj::new()
+            .num("resident_s_per_epoch", res_epoch)
+            .num("streaming_s_per_epoch", str_epoch)
+            .num("streaming_overhead", overhead)
+            .int("epochs", epochs as u64)
+            .build()
+    };
+    std::fs::remove_dir_all(&tmp).ok();
 
     // 2. Layout A/B: identical single-threaded NAG epoch over the balanced
     // grid, once through the pre-PR layout (per-block AoS entry lists with
@@ -926,7 +1273,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     // 5. Emit the JSON artifact.
     let payload = json::Obj::new()
         .str("bench", "hotpath")
-        .int("version", 3)
+        .int("version", 4)
         .str("kernel_path", &kernel_path.to_string())
         .str("dataset", &data.name)
         .int("threads", bcfg.threads as u64)
@@ -959,6 +1306,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
         )
         .raw("kernel_ab", &json::array(kernel_ab_rows))
         .raw("ingest", &ingest_json)
+        .raw("readback", &readback_json)
+        .raw("memory", &memory_json)
         .raw("engines", &json::array(engine_rows))
         .raw(
             "scheduler",

@@ -1,0 +1,233 @@
+//! Seeded byte-mutation fuzz suite over packed `.a2ps` shard files.
+//!
+//! The shard format's safety story is "every corruption is a clean error":
+//! truncation and length lies are caught at open, header lies (dims, row
+//! ranges, nnz) by the open-time sanity checks plus the manifest
+//! cross-check, record-level damage (bit flips, out-of-bounds ids, NaN
+//! payloads) by per-record validation or the full-sweep CRC. This harness
+//! hammers that claim with hundreds of seeded random mutations and asserts
+//! that **both** readers — the `BufReader`-based [`ShardReader`] and the
+//! mmap-backed [`MmapShardReader`] — reject every mutated file without a
+//! panic, a hang, or a silently wrong dataset.
+//!
+//! Every mutation kind below guarantees the file differs from the original
+//! in at least one byte, and each byte of the file is covered by at least
+//! one integrity check, so the oracle is simply: the checked open + full
+//! sweep must fail. Iteration count comes from `A2PSGD_FUZZ_ITERS`
+//! (default 500 — the CI budget; crank it locally for a deeper soak).
+
+use a2psgd::data::shard::{
+    self, pack_triplets, Manifest, PackOptions, RECORD_LEN, SHARD_HEADER_LEN,
+};
+use a2psgd::rng::Rng;
+use a2psgd::sparse::Entry;
+use std::path::{Path, PathBuf};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("a2psgd_fuzz_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn fuzz_iters() -> u64 {
+    std::env::var("A2PSGD_FUZZ_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(500)
+}
+
+/// Pack a deterministic multi-shard reference directory.
+fn pack_reference(dir: &Path) -> Manifest {
+    let triplets: Vec<(u64, u64, f32)> = (0..900u64)
+        .map(|i| (i / 12, (i * 13) % 40, (i % 9) as f32 * 0.5 + 1.0))
+        .collect();
+    let stats = pack_triplets(&triplets, dir, &PackOptions { shard_bytes: 2048 }).unwrap();
+    assert!(stats.shards >= 3, "fuzz reference must span shards, got {}", stats.shards);
+    Manifest::load(dir).unwrap()
+}
+
+/// One seeded mutation over a shard file's bytes. Always changes at least
+/// one byte (or the length); returns a description for failure messages.
+fn mutate(bytes: &mut Vec<u8>, rng: &mut Rng) -> String {
+    let kind = rng.gen_index(8);
+    match kind {
+        // Truncate anywhere strictly inside the file (header included).
+        0 => {
+            let len = rng.gen_index(bytes.len());
+            bytes.truncate(len);
+            format!("truncated to {len} bytes")
+        }
+        // Flip one random bit anywhere.
+        1 => {
+            let k = rng.gen_index(bytes.len());
+            let bit = rng.gen_index(8) as u8;
+            bytes[k] ^= 1 << bit;
+            format!("flipped bit {bit} of byte {k}")
+        }
+        // Corrupt the magic.
+        2 => {
+            let k = rng.gen_index(4);
+            bytes[k] ^= 0xFF;
+            format!("corrupted magic byte {k}")
+        }
+        // Bump the version field.
+        3 => {
+            let v = rng.gen_index(250) as u32 + 2; // never the valid 1
+            bytes[4..8].copy_from_slice(&v.to_le_bytes());
+            format!("rewrote version to {v}")
+        }
+        // Smash a random header field byte past magic+version.
+        4 => {
+            let k = 8 + rng.gen_index(SHARD_HEADER_LEN - 8);
+            let old = bytes[k];
+            bytes[k] = old.wrapping_add(rng.gen_index(255) as u8 + 1);
+            format!("smashed header byte {k} ({old:#04x} → {:#04x})", bytes[k])
+        }
+        // Out-of-bounds row or column id in a random record.
+        5 => {
+            let nrec = (bytes.len() - SHARD_HEADER_LEN) / RECORD_LEN;
+            let rec = SHARD_HEADER_LEN + rng.gen_index(nrec.max(1)) * RECORD_LEN;
+            let field = rng.gen_index(2) * 4; // row or col
+            bytes[rec + field..rec + field + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+            format!("wrote u32::MAX into record at byte {rec} field {field}")
+        }
+        // NaN payload in a random record's value.
+        6 => {
+            let nrec = (bytes.len() - SHARD_HEADER_LEN) / RECORD_LEN;
+            let rec = SHARD_HEADER_LEN + rng.gen_index(nrec.max(1)) * RECORD_LEN;
+            bytes[rec + 8..rec + 12].copy_from_slice(&f32::NAN.to_le_bytes());
+            format!("wrote NaN into record at byte {rec}")
+        }
+        // Append garbage.
+        _ => {
+            let extra = rng.gen_index(64) + 1;
+            for _ in 0..extra {
+                bytes.push(rng.gen_index(256) as u8);
+            }
+            format!("appended {extra} garbage bytes")
+        }
+    }
+}
+
+/// Checked open + full sweep through the `BufReader` reader.
+fn sweep_buf(dir: &Path, manifest: &Manifest, s: usize) -> a2psgd::Result<Vec<Entry>> {
+    let mut r = shard::open_checked(dir, manifest, &manifest.shards[s])?;
+    let mut out = Vec::new();
+    let mut buf = Vec::new();
+    while r.next_chunk(&mut buf, 97)? > 0 {
+        out.extend_from_slice(&buf);
+    }
+    Ok(out)
+}
+
+/// Checked open + full sweep through the mmap reader.
+fn sweep_mmap(dir: &Path, manifest: &Manifest, s: usize) -> a2psgd::Result<Vec<Entry>> {
+    let mut r = shard::open_checked_mmap(dir, manifest, &manifest.shards[s])?;
+    let mut out = Vec::new();
+    let mut buf = Vec::new();
+    while r.next_chunk(&mut buf, 97)? > 0 {
+        out.extend_from_slice(&buf);
+    }
+    Ok(out)
+}
+
+/// ≥ 500 seeded mutations, each checked against **both** readers: no panic,
+/// no hang (all loops are bounded by validated lengths), and never an `Ok`
+/// — every mutation damages a byte some integrity check covers.
+#[test]
+fn fuzz_mutated_shards_always_fail_cleanly_on_both_readers() {
+    let dir = tmpdir("mut");
+    let manifest = pack_reference(&dir);
+    let nshards = manifest.shards.len();
+    let originals: Vec<Vec<u8>> = manifest
+        .shards
+        .iter()
+        .map(|m| std::fs::read(dir.join(&m.file)).unwrap())
+        .collect();
+    let mut rng = Rng::new(0xF0_22_D0);
+    let iters = fuzz_iters();
+    for iter in 0..iters {
+        let s = rng.gen_index(nshards);
+        let mut bytes = originals[s].clone();
+        let desc = mutate(&mut bytes, &mut rng);
+        let path = dir.join(&manifest.shards[s].file);
+        std::fs::write(&path, &bytes).unwrap();
+
+        let ctx = format!("iter {iter}/{iters}, shard {s}: {desc}");
+        let buf_res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            sweep_buf(&dir, &manifest, s)
+        }));
+        let mmap_res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            sweep_mmap(&dir, &manifest, s)
+        }));
+        // Restore before asserting so one failure doesn't poison the rest.
+        std::fs::write(&path, &originals[s]).unwrap();
+
+        let buf_res = buf_res.unwrap_or_else(|_| panic!("ShardReader panicked: {ctx}"));
+        let mmap_res = mmap_res.unwrap_or_else(|_| panic!("MmapShardReader panicked: {ctx}"));
+        assert!(
+            buf_res.is_err(),
+            "ShardReader accepted a mutated shard (silently wrong dataset): {ctx}"
+        );
+        assert!(
+            mmap_res.is_err(),
+            "MmapShardReader accepted a mutated shard (silently wrong dataset): {ctx}"
+        );
+    }
+    // Sanity: the untouched directory still sweeps clean on both readers.
+    for s in 0..nshards {
+        let a = sweep_buf(&dir, &manifest, s).expect("pristine shard must read (buf)");
+        let b = sweep_mmap(&dir, &manifest, s).expect("pristine shard must read (mmap)");
+        assert_eq!(a, b, "readers disagree on pristine shard {s}");
+        assert_eq!(a.len() as u64, manifest.shards[s].nnz);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Manifest-text fuzz: random byte edits must never panic the parser, and
+/// anything it does accept must still satisfy the coverage invariants.
+#[test]
+fn fuzz_manifest_text_never_panics_and_accepts_only_valid() {
+    let dir = tmpdir("manifest");
+    let manifest = pack_reference(&dir);
+    let original = manifest.to_text();
+    let mut rng = Rng::new(0x4D414E1F);
+    let iters = (fuzz_iters() / 2).max(100);
+    for iter in 0..iters {
+        let mut text = original.clone().into_bytes();
+        // 1–3 random printable-byte edits (keep it valid UTF-8).
+        for _ in 0..rng.gen_index(3) + 1 {
+            let k = rng.gen_index(text.len());
+            text[k] = 0x20 + rng.gen_index(0x5F) as u8;
+        }
+        let text = String::from_utf8(text).unwrap();
+        let res = std::panic::catch_unwind(|| Manifest::from_text(&text));
+        let res = res.unwrap_or_else(|_| panic!("manifest parser panicked at iter {iter}"));
+        if let Ok(m) = res {
+            m.validate()
+                .expect("parser accepted a manifest that fails its own invariants");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Truncating the *file* behind a valid-looking manifest row must fail at
+/// open for both readers with the documented "truncated" diagnostics.
+#[test]
+fn truncation_diagnostics_match_between_readers() {
+    let dir = tmpdir("trunc_diag");
+    let manifest = pack_reference(&dir);
+    let meta = &manifest.shards[1];
+    let path = dir.join(&meta.file);
+    let original = std::fs::read(&path).unwrap();
+    for cut in [0usize, SHARD_HEADER_LEN - 1, SHARD_HEADER_LEN + RECORD_LEN / 2] {
+        std::fs::write(&path, &original[..cut.min(original.len())]).unwrap();
+        let e1 = sweep_buf(&dir, &manifest, 1).expect_err("buf open must fail");
+        let e2 = sweep_mmap(&dir, &manifest, 1).expect_err("mmap open must fail");
+        assert!(e1.to_string().contains("truncated"), "buf: {e1:#}");
+        assert!(e2.to_string().contains("truncated"), "mmap: {e2:#}");
+    }
+    std::fs::write(&path, &original).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -3,19 +3,21 @@
 
 Compares the *dimensionless speedup ratios* of the current bench artifact
 against a committed baseline and fails (exit 1) on regressions beyond the
-tolerance. Ratios — SIMD-vs-scalar per (op, rank) in `kernel_ab`, and
-pool-vs-scope in `pool` — transfer across machines, unlike absolute ns/op,
-which is why the baseline can live in the repo while CI runs on whatever
-runner GitHub hands out.
+tolerance. Ratios — SIMD-vs-scalar per (op, rank) in `kernel_ab`,
+pool-vs-scope in `pool`, shard-vs-text in `ingest`, and mmap-vs-BufReader
+in `readback` — transfer across machines, unlike absolute ns/op, which is
+why the baseline can live in the repo while CI runs on whatever runner
+GitHub hands out.
 
-The committed BENCH_baseline.json holds conservative floors (see its `note`
-field), so the gate's practical meaning is: the dispatched SIMD path must
-not become materially slower than the scalar reference, and the persistent
-pool must not become materially slower than per-epoch thread spawns. With
-`--tolerance 1.25` a section fails when its speedup drops below
-baseline / 1.25 — i.e. a >25% median regression. CI runs the bench in
-`--iters 1` smoke mode, so single-sample medians are noisy; the tolerance
-(plus floor-valued baselines) absorbs that.
+The committed BENCH_baseline.json holds floors below typically measured
+medians on the CI x86_64 reference runner (see its `note` field), so the
+gate's practical meaning is: the dispatched SIMD path, the persistent
+pool, the binary shard ingest, and the mmap readback must not become
+materially slower than the paths they beat. With `--tolerance 1.25` a
+section fails when its speedup drops below baseline / 1.25 — i.e. a >25%
+median regression. CI runs the bench in `--iters 1` smoke mode, so
+single-sample medians are noisy; the tolerance (plus floors set under the
+measured medians) absorbs that.
 
 Usage:
     bench_gate.py CURRENT.json BASELINE.json [--tolerance 1.25]
@@ -66,19 +68,24 @@ def main():
                 f"= {want / tol:.3f}"
             )
 
-    # pool: epoch fork/join speedup of the persistent pool vs thread::scope.
-    base_pool = base.get("pool", {}).get("speedup")
-    cur_pool = cur.get("pool", {}).get("speedup")
-    if base_pool is not None:
-        if cur_pool is None:
-            failures.append("pool: missing from current artifact")
-        else:
-            checked += 1
-            if cur_pool < base_pool / tol:
-                failures.append(
-                    f"pool: speedup {cur_pool:.3f} < floor {base_pool:.3f}/{tol:.2f} "
-                    f"= {base_pool / tol:.3f}"
-                )
+    # Scalar sections, each a single {"speedup": r} ratio:
+    #   pool     — persistent-pool epoch fork/join vs thread::scope
+    #   ingest   — .a2ps shard ingest vs text parse (file → Dataset)
+    #   readback — mmap shard sweep vs BufReader sweep
+    for section in ("pool", "ingest", "readback"):
+        base_val = base.get(section, {}).get("speedup")
+        cur_val = cur.get(section, {}).get("speedup")
+        if base_val is None:
+            continue
+        if cur_val is None:
+            failures.append(f"{section}: missing from current artifact")
+            continue
+        checked += 1
+        if cur_val < base_val / tol:
+            failures.append(
+                f"{section}: speedup {cur_val:.3f} < floor {base_val:.3f}/{tol:.2f} "
+                f"= {base_val / tol:.3f}"
+            )
 
     if failures:
         print(f"bench gate: {len(failures)} regression(s) past the {tol:.2f}x tolerance:")
