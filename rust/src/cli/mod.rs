@@ -16,6 +16,7 @@
 //!                [--d D] [--seed S] [--config FILE] [--out FILE]
 //! a2psgd pack    (--data-file PATH | --dataset D) --out DIR
 //!                [--shard-mb N] [--seed S] [--config FILE]
+//! a2psgd trace-export --input TRACE.jsonl --out TRACE.json
 //! a2psgd gen-data --dataset D --out FILE [--seed S]
 //! a2psgd print-config [--dataset D]
 //! a2psgd eval    --data-file PATH (reserved)
@@ -125,6 +126,8 @@ USAGE:
                       split by row range, embedded id map, CRC per shard —
                       shard directories then train out-of-core (block
                       engines) or materialize for the others
+  a2psgd trace-export convert a span JSONL trace (from --trace) into a
+                      chrome://tracing / Perfetto trace_event JSON file
   a2psgd gen-data     write a synthetic dataset to a ratings file
   a2psgd print-config print the paper's hyperparameter tables (I/II)
   a2psgd help         this text
@@ -159,6 +162,16 @@ COMMON FLAGS:
   --artifacts DIR  AOT artifacts (default: artifacts/)
   --no-early-stop  run all epochs
 
+OBSERVABILITY FLAGS (train / stream / serve / bench):
+  --metrics-json PATH  enable hot-path metrics and write a JSON snapshot
+                       (counters, gauges, log2-bucketed latency histograms
+                       with p50/p99) at the end of the run; `stream` also
+                       rewrites it periodically while events flow
+  --trace PATH         enable span tracing and write one JSON object per
+                       span (JSONL) at the end of the run; convert with
+                       `a2psgd trace-export` for chrome://tracing
+                       (`[obs]` in --config sets the same switches)
+
 BENCH FLAGS:
   --iters N          measured iterations / macro epochs (default: 3)
   --warmup N         unmeasured warmup iterations (default: 1)
@@ -169,6 +182,10 @@ PACK FLAGS:
   --out DIR          shard directory to create (required)
   --shard-mb N       target shard payload size in MiB (default: 64, or
                      `[data] shard_mb` from --config)
+
+TRACE-EXPORT FLAGS:
+  --input PATH       span JSONL written by --trace (required)
+  --out PATH         chrome trace_event JSON to write (required)
 
 STREAM FLAGS:
   --warm-frac F      fraction of users trained offline, rest streamed (0.8);

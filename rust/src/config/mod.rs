@@ -365,6 +365,74 @@ impl BenchConfig {
     }
 }
 
+/// `[obs]` section: observability switches. Everything defaults to off so
+/// hot paths stay uninstrumented unless asked; CLI flags override the file.
+///
+/// ```toml
+/// [obs]
+/// metrics = true                 # hot-path counters/gauges/histograms
+/// trace = true                   # span tracing into per-thread rings
+/// metrics_json = "metrics.json"  # snapshot path (implies metrics = true)
+/// trace_out = "trace.jsonl"      # span JSONL sink (implies trace = true)
+/// ```
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ObsConfig {
+    /// Collect hot-path metrics (counters/gauges/histograms).
+    pub metrics: bool,
+    /// Record spans into per-thread rings, drained to `trace_out`.
+    pub trace: bool,
+    /// Where to write the metrics snapshot JSON.
+    pub metrics_json: Option<String>,
+    /// Where to write the span JSONL.
+    pub trace_out: Option<String>,
+}
+
+impl ObsConfig {
+    /// Apply `[obs]` overrides from TOML-subset text.
+    pub fn apply_toml(mut self, text: &str) -> Result<Self> {
+        let doc = parse(text)?;
+        if let Some(v) = doc.get("obs", "metrics") {
+            self.metrics = v.as_bool().context("obs.metrics must be a bool")?;
+        }
+        if let Some(v) = doc.get("obs", "trace") {
+            self.trace = v.as_bool().context("obs.trace must be a bool")?;
+        }
+        if let Some(v) = doc.get("obs", "metrics_json") {
+            self.metrics_json =
+                Some(v.as_str().context("obs.metrics_json must be a string")?.to_string());
+        }
+        if let Some(v) = doc.get("obs", "trace_out") {
+            self.trace_out =
+                Some(v.as_str().context("obs.trace_out must be a string")?.to_string());
+        }
+        Ok(self.normalized())
+    }
+
+    /// Fold CLI flags over the config; flags win, paths imply enablement.
+    pub fn apply_cli(mut self, metrics_json: Option<&str>, trace_out: Option<&str>) -> Self {
+        if let Some(p) = metrics_json {
+            self.metrics_json = Some(p.to_string());
+        }
+        if let Some(p) = trace_out {
+            self.trace_out = Some(p.to_string());
+        }
+        self.normalized()
+    }
+
+    /// Asking for an output path implies the corresponding collector.
+    fn normalized(mut self) -> Self {
+        self.metrics |= self.metrics_json.is_some();
+        self.trace |= self.trace_out.is_some();
+        self
+    }
+
+    /// Arm the global collectors to match this config.
+    pub fn install(&self) {
+        crate::obs::set_metrics_enabled(self.metrics);
+        crate::obs::set_trace_enabled(self.trace);
+    }
+}
+
 /// Apply `[stream]` (and `[hyper]`) overrides from a TOML-subset file onto a
 /// base [`StreamConfig`] (usually [`StreamConfig::preset`]).
 ///
@@ -618,6 +686,33 @@ gamma = 0.8
         assert!((cfg.hyper.gamma - 0.8).abs() < 1e-9);
         // λ untouched by the partial [hyper] section.
         assert!((cfg.hyper.lam - base.hyper.lam).abs() < 1e-9);
+    }
+
+    #[test]
+    fn obs_config_defaults_off_and_paths_imply_enable() {
+        let oc = ObsConfig::default();
+        assert!(!oc.metrics && !oc.trace);
+        let oc = ObsConfig::default()
+            .apply_toml("[obs]\nmetrics = true\ntrace_out = \"t.jsonl\"\n")
+            .unwrap();
+        assert!(oc.metrics);
+        assert!(oc.trace, "trace_out path must imply trace = true");
+        assert_eq!(oc.trace_out.as_deref(), Some("t.jsonl"));
+        assert!(oc.metrics_json.is_none());
+        // CLI flags layer on top and also imply enablement.
+        let oc = ObsConfig::default().apply_cli(Some("m.json"), None);
+        assert!(oc.metrics && !oc.trace);
+        assert_eq!(oc.metrics_json.as_deref(), Some("m.json"));
+    }
+
+    #[test]
+    fn obs_config_rejects_bad_types() {
+        assert!(ObsConfig::default().apply_toml("[obs]\nmetrics = \"yes\"\n").is_err());
+        assert!(ObsConfig::default().apply_toml("[obs]\ntrace = 1\n").is_err());
+        assert!(ObsConfig::default().apply_toml("[obs]\nmetrics_json = 3\n").is_err());
+        // Other sections are ignored.
+        let oc = ObsConfig::default().apply_toml("[run]\nthreads = 4\n").unwrap();
+        assert_eq!(oc, ObsConfig::default());
     }
 
     #[test]

@@ -168,6 +168,30 @@ impl ServiceStats {
             self.occupancy_sum as f64 / self.batches as f64
         }
     }
+
+    /// Pack for seqlock publication (field order is [`Self::from_array`]'s
+    /// contract).
+    fn to_array(&self) -> [u64; 6] {
+        [
+            self.served,
+            self.batches,
+            self.topk_served,
+            self.occupancy_sum,
+            self.versions_seen,
+            self.last_version,
+        ]
+    }
+
+    fn from_array(a: [u64; 6]) -> Self {
+        ServiceStats {
+            served: a[0],
+            batches: a[1],
+            topk_served: a[2],
+            occupancy_sum: a[3],
+            versions_seen: a[4],
+            last_version: a[5],
+        }
+    }
 }
 
 /// Handle for submitting requests; cloneable across client threads.
@@ -227,6 +251,7 @@ impl ServiceClient {
 pub struct PredictionService {
     client: ServiceClient,
     worker: std::thread::JoinHandle<ServiceStats>,
+    stats_cell: Arc<crate::obs::SeqCell<6>>,
 }
 
 impl PredictionService {
@@ -277,6 +302,8 @@ impl PredictionService {
     ) -> Result<Self> {
         let (tx, rx) = mpsc::channel::<Request>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let stats_cell = Arc::new(crate::obs::SeqCell::<6>::new());
+        let worker_cell = Arc::clone(&stats_cell);
         let worker = std::thread::spawn(move || {
             let backend = match mode {
                 BackendMode::NativeOnly => Backend::Native,
@@ -296,10 +323,12 @@ impl PredictionService {
                 },
             };
             let _ = ready_tx.send(Ok(()));
-            run_batcher(backend, store, clamp, max_wait, exclusions, rx)
+            run_batcher(backend, store, clamp, max_wait, exclusions, rx, &worker_cell)
         });
         match ready_rx.recv() {
-            Ok(Ok(())) => Ok(PredictionService { client: ServiceClient { tx }, worker }),
+            Ok(Ok(())) => {
+                Ok(PredictionService { client: ServiceClient { tx }, worker, stats_cell })
+            }
             Ok(Err(e)) => {
                 let _ = worker.join();
                 Err(e)
@@ -316,10 +345,18 @@ impl PredictionService {
         self.client.clone()
     }
 
+    /// Live stats scrape, torn-free: the batcher publishes every counter
+    /// mutation as one seqlock unit, so a read concurrent with a batch
+    /// still sees `served`/`batches`/`occupancy_sum` move together —
+    /// never `batches` incremented but its predictions not yet counted.
+    pub fn stats(&self) -> ServiceStats {
+        ServiceStats::from_array(self.stats_cell.read())
+    }
+
     /// Stop and collect stats (consumes the service). All other client
     /// clones must already be dropped, or this blocks until they are.
     pub fn shutdown(self) -> ServiceStats {
-        let PredictionService { client, worker } = self;
+        let PredictionService { client, worker, .. } = self;
         drop(client); // close our sender so the worker's recv errors out
         worker.join().expect("service worker panicked")
     }
@@ -395,6 +432,8 @@ impl BatchExec {
         stats.batches += 1;
         stats.occupancy_sum += pairs.len() as u64;
         stats.served += pairs.len() as u64;
+        crate::obs::add(crate::obs::Ctr::ServeBatches, 1);
+        crate::obs::add(crate::obs::Ctr::ServeRequests, pairs.len() as u64);
         Ok((0..pairs.len())
             .map(|lane| {
                 if self.known[lane] {
@@ -407,6 +446,7 @@ impl BatchExec {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_batcher(
     backend: Backend,
     store: Arc<SnapshotStore>,
@@ -414,13 +454,16 @@ fn run_batcher(
     max_wait: Duration,
     exclusions: Option<Arc<ExclusionSet>>,
     rx: mpsc::Receiver<Request>,
+    stats_cell: &crate::obs::SeqCell<6>,
 ) -> ServiceStats {
     let b = backend.batch_size();
     let d = store.load().factors().d();
     let mut stats = ServiceStats::default();
     let mut exec = BatchExec::new(b, d, clamp);
     let mut topk_cache: Option<TopKCache> = None;
-    let mut batch: Vec<(u32, u32, mpsc::Sender<f32>)> = Vec::with_capacity(b);
+    // Queued point predictions carry their receipt time for the latency
+    // histogram (latency = receipt → reply, drain window included).
+    let mut batch: Vec<(u32, u32, mpsc::Sender<f32>, Instant)> = Vec::with_capacity(b);
     loop {
         // Block for the first request; then drain greedily until B or timeout.
         let first = match rx.recv() {
@@ -430,8 +473,9 @@ fn run_batcher(
         let mut pending = Some(first);
         let deadline = Instant::now() + max_wait;
         loop {
+            let received = Instant::now();
             match pending.take() {
-                Some(Request::Predict { u, v, reply }) => batch.push((u, v, reply)),
+                Some(Request::Predict { u, v, reply }) => batch.push((u, v, reply, received)),
                 Some(Request::PredictBatch { pairs, reply }) => {
                     // A pre-assembled batch needs no drain window: execute
                     // full backend batches straight from the pair list,
@@ -443,10 +487,16 @@ fn run_batcher(
                     for chunk in pairs.chunks(b) {
                         match exec.execute(&backend, f, chunk, &mut stats) {
                             Ok(answers) => out.extend(answers),
-                            Err(_) => return stats, // backend failure: stop service
+                            Err(_) => {
+                                // Backend failure: stop service.
+                                stats_cell.publish(&stats.to_array());
+                                return stats;
+                            }
                         }
                     }
                     let _ = reply.send(out);
+                    observe_latency(received);
+                    stats_cell.publish(&stats.to_array());
                 }
                 Some(Request::TopK { u, k, reply }) => {
                     // Top-k is a whole-catalog scan — served immediately,
@@ -463,8 +513,14 @@ fn run_batcher(
                         Ok(top) => {
                             let _ = reply.send(top);
                             stats.topk_served += 1;
+                            crate::obs::add(crate::obs::Ctr::ServeRequests, 1);
+                            observe_latency(received);
+                            stats_cell.publish(&stats.to_array());
                         }
-                        Err(_) => return stats,
+                        Err(_) => {
+                            stats_cell.publish(&stats.to_array());
+                            return stats;
+                        }
                     }
                 }
                 None => {}
@@ -488,16 +544,29 @@ fn run_batcher(
         // Pin the current snapshot for this whole batch (hot-swap boundary).
         let snap = store.load();
         observe_version(&mut stats, &snap);
-        let pairs: Vec<(u32, u32)> = batch.iter().map(|&(u, v, _)| (u, v)).collect();
+        let pairs: Vec<(u32, u32)> = batch.iter().map(|&(u, v, _, _)| (u, v)).collect();
         let answers = match exec.execute(&backend, snap.factors(), &pairs, &mut stats) {
             Ok(a) => a,
             Err(_) => break, // backend failure: drop in-flight, stop service
         };
-        for ((_, _, reply), p) in batch.drain(..).zip(answers) {
+        for ((_, _, reply, received), p) in batch.drain(..).zip(answers) {
             let _ = reply.send(p); // client may have gone away; fine
+            observe_latency(received);
         }
+        stats_cell.publish(&stats.to_array());
     }
+    stats_cell.publish(&stats.to_array());
     stats
+}
+
+/// Record one request's receipt→reply latency into the log2 histogram.
+fn observe_latency(received: Instant) {
+    if crate::obs::metrics_enabled() {
+        crate::obs::observe(
+            crate::obs::Hist::ServiceLatencyNs,
+            received.elapsed().as_nanos() as u64,
+        );
+    }
 }
 
 fn observe_version(stats: &mut ServiceStats, snap: &FactorSnapshot) {

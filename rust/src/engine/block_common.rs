@@ -37,6 +37,10 @@ pub struct BlockEngine {
     kernels: KernelSet,
     pool: WorkerPool,
     rng: Rng,
+    /// Scheduler telemetry high-water from the previous epoch: schedulers
+    /// report cumulative totals, the obs registry wants per-epoch deltas.
+    obs_last_contention: u64,
+    obs_last_starved: u64,
 }
 
 impl BlockEngine {
@@ -106,7 +110,25 @@ impl BlockEngine {
             kernels,
             pool: WorkerPool::new(cfg.threads),
             rng: rng.fork(3),
+            obs_last_contention: 0,
+            obs_last_starved: 0,
         }
+    }
+
+    /// Publish this epoch's scheduler telemetry delta onto the obs registry.
+    fn publish_scheduler_obs(&mut self) {
+        if !crate::obs::metrics_enabled() {
+            return;
+        }
+        let c = self.scheduler.contention_events();
+        let s = self.scheduler.starved_probes();
+        crate::obs::add(
+            crate::obs::Ctr::SchedContention,
+            c.saturating_sub(self.obs_last_contention),
+        );
+        crate::obs::add(crate::obs::Ctr::SchedStarved, s.saturating_sub(self.obs_last_starved));
+        self.obs_last_contention = c;
+        self.obs_last_starved = s;
     }
 
     /// Scheduler statistics (fairness / contention reporting).
@@ -137,6 +159,7 @@ impl EpochRunner for BlockEngine {
             // `--memory streaming` bit-identical to resident at c = 1.
             let nb = grid.nblocks();
             let mut done = 0u64;
+            let mut blocks = 0u64;
             while done < quota {
                 let before = done;
                 'pass: for i in 0..nb {
@@ -146,6 +169,7 @@ impl EpochRunner for BlockEngine {
                             let (mu, nv, phiu, psiv) = unsafe { shared.rows_mut(u, v) };
                             kernels.apply(rule, mu, nv, phiu, psiv, r, &hyper);
                         });
+                        blocks += 1;
                         if done >= quota {
                             break 'pass;
                         }
@@ -155,21 +179,36 @@ impl EpochRunner for BlockEngine {
                     break; // empty grid — never spin on an unreachable quota
                 }
             }
+            // Plain local counters above; one registry write per epoch. The
+            // update math is untouched, so c = 1 stays bit-identical with
+            // metrics on, off, or compiled out.
+            crate::obs::add(crate::obs::Ctr::BlocksProcessed, blocks);
+            crate::obs::add(crate::obs::Ctr::InstancesProcessed, done);
+            self.publish_scheduler_obs();
             return done;
         }
         let done = AtomicU64::new(0);
         let sched = &self.scheduler;
         let base = self.rng.fork(epoch as u64);
         self.pool.run(|t| {
+            // One "train" lane per worker in the trace; the span drops (and
+            // records) when the worker exhausts the quota.
+            let _span = crate::obs::span("train", "train");
             let mut rng = base.clone().fork(t as u64);
             // Grid saturated (threads > free diagonal) ⇒ bounded exponential
             // backoff instead of burning a core on bare spin/yield retries.
             let mut backoff = Backoff::new();
+            // Telemetry accumulates in plain locals (registers, not even the
+            // per-thread slot) and hits the registry once per epoch.
+            let mut local_blocks = 0u64;
+            let mut local_instances = 0u64;
+            let mut local_misses = 0u64;
             loop {
                 if done.load(Ordering::Relaxed) >= quota {
-                    return;
+                    break;
                 }
                 let Some(claim) = sched.acquire(&mut rng) else {
+                    local_misses += 1;
                     backoff.wait();
                     continue;
                 };
@@ -183,8 +222,16 @@ impl EpochRunner for BlockEngine {
                 });
                 done.fetch_add(n, Ordering::Relaxed);
                 sched.release_processed(claim, n);
+                local_blocks += 1;
+                local_instances += n;
+            }
+            if crate::obs::metrics_enabled() {
+                crate::obs::add(crate::obs::Ctr::BlocksProcessed, local_blocks);
+                crate::obs::add(crate::obs::Ctr::InstancesProcessed, local_instances);
+                crate::obs::add(crate::obs::Ctr::BackoffWaits, local_misses);
             }
         });
+        self.publish_scheduler_obs();
         done.load(Ordering::Relaxed)
     }
 

@@ -265,6 +265,9 @@ pub struct TrainReport {
     pub rating_min: f32,
     /// Evaluation clamp ceiling.
     pub rating_max: f32,
+    /// Observability snapshot taken when the run finished (None when
+    /// metrics were disabled — see [`crate::obs`]).
+    pub metrics: Option<crate::obs::Snapshot>,
 }
 
 impl TrainReport {
@@ -571,9 +574,16 @@ pub fn run_driver_with(
     let mut converged_epoch = None;
 
     for epoch in 1..=cfg.epochs {
+        let epoch_t0 = std::time::Instant::now();
+        let epoch_span = crate::obs::span("epoch", "train");
         sw.start();
         total_updates += runner.run_epoch(epoch, quota);
         sw.pause();
+        drop(epoch_span);
+        if crate::obs::metrics_enabled() {
+            crate::obs::add(crate::obs::Ctr::EpochsRun, 1);
+            crate::obs::observe(crate::obs::Hist::EpochNs, epoch_t0.elapsed().as_nanos() as u64);
+        }
 
         // Workers joined inside run_epoch → quiescent read is safe.
         let f = unsafe { runner.shared().get() };
@@ -592,6 +602,10 @@ pub fn run_driver_with(
         }
     }
 
+    // The leader records epoch (and streaming decode) spans on this thread;
+    // drain its ring so a subsequent trace export sees them.
+    crate::obs::trace::flush_thread();
+
     TrainReport {
         engine: cfg.engine,
         dataset: plan.name.to_string(),
@@ -604,6 +618,7 @@ pub fn run_driver_with(
         converged_epoch,
         rating_min: plan.rating_min,
         rating_max: plan.rating_max,
+        metrics: crate::obs::metrics_enabled().then(crate::obs::snapshot),
     }
 }
 

@@ -338,6 +338,30 @@ impl EpochStreamGrid {
 
     fn bump_peak(&self, bytes: u64) {
         self.peak_tile_bytes.fetch_max(bytes, Ordering::Relaxed);
+        crate::obs::gauge_max(crate::obs::Gauge::PeakTileBytes, bytes);
+    }
+
+    /// [`Self::decode_wave`] plus obs: a `decode`/`prefetch` span and wave
+    /// decode timing (counter + log2 histogram). Prefetch decodes (worker 0
+    /// overlapping training) are accounted separately from blocking leader
+    /// decodes so the trace shows how much IO the overlap actually hid.
+    fn decode_wave_timed(&self, w: usize, prefetch: bool) -> (Vec<BlockCsr>, u64) {
+        let _span = crate::obs::span(if prefetch { "prefetch" } else { "decode" }, "stream");
+        if !crate::obs::metrics_enabled() {
+            return self.decode_wave(w);
+        }
+        let t0 = std::time::Instant::now();
+        let out = self.decode_wave(w);
+        let ns = t0.elapsed().as_nanos() as u64;
+        crate::obs::add(crate::obs::Ctr::WavesDecoded, 1);
+        let ctr = if prefetch {
+            crate::obs::Ctr::WavePrefetchNsTotal
+        } else {
+            crate::obs::Ctr::WaveDecodeNsTotal
+        };
+        crate::obs::add(ctr, ns);
+        crate::obs::observe(crate::obs::Hist::WaveDecodeNs, ns);
+        out
     }
 
     /// Decode one wave's tiles from the mapped shards: training records of
@@ -407,8 +431,9 @@ impl EpochRunner for EpochStreamGrid {
         let nb = this.plan.col_bounds.len() - 1;
         let nwaves = this.plan.waves.len();
         let mut total = 0u64;
-        let mut next = Some(this.decode_wave(0));
+        let mut next = Some(this.decode_wave_timed(0, false));
         for w in 0..nwaves {
+            let _wave_span = crate::obs::span("wave", "stream");
             let (cur, cur_bytes) = next.take().expect("wave decoded");
             this.bump_peak(cur_bytes);
             let wave = &this.plan.waves[w];
@@ -422,7 +447,7 @@ impl EpochRunner for EpochStreamGrid {
                 // on.
                 drop(cur);
                 if w + 1 < nwaves {
-                    let decoded = this.decode_wave(w + 1);
+                    let decoded = this.decode_wave_timed(w + 1, false);
                     this.bump_peak(decoded.1);
                     next = Some(decoded);
                 }
@@ -444,7 +469,7 @@ impl EpochRunner for EpochStreamGrid {
                 }
                 drop(cur);
                 if w + 1 < nwaves {
-                    let decoded = this.decode_wave(w + 1);
+                    let decoded = this.decode_wave_timed(w + 1, false);
                     this.bump_peak(decoded.1);
                     next = Some(decoded);
                 }
@@ -468,11 +493,12 @@ impl EpochRunner for EpochStreamGrid {
                 if t == 0 && decode_next {
                     // Double buffering: worker 0 prefetches the next wave
                     // while the rest train this one, then joins them.
-                    let decoded = this.decode_wave(w + 1);
+                    let decoded = this.decode_wave_timed(w + 1, true);
                     this.bump_peak(cur_bytes + decoded.1);
                     *next_slot.lock().unwrap_or_else(std::sync::PoisonError::into_inner) =
                         Some(decoded);
                 }
+                let _train_span = crate::obs::span("train", "stream");
                 let mut rng = base.clone().fork(w as u64).fork(t as u64);
                 let mut backoff = Backoff::new();
                 loop {
@@ -506,6 +532,13 @@ impl EpochRunner for EpochStreamGrid {
             next = next_slot
                 .into_inner()
                 .unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+        // One flush per epoch; per-tile work is already aggregated in
+        // `total`, so the hot loop never touches the registry. (Wave-level
+        // accounting lives in waves_decoded / wave_decode_ns_total; the
+        // blocks_processed counter is the resident block engines'.)
+        if crate::obs::metrics_enabled() {
+            crate::obs::add(crate::obs::Ctr::InstancesProcessed, total);
         }
         total
     }

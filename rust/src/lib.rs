@@ -45,6 +45,7 @@ pub mod data;
 pub mod engine;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod optim;
 pub mod partition;
 pub mod proptest_lite;

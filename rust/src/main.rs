@@ -26,6 +26,7 @@ fn run(argv: &[String]) -> Result<()> {
         "stream" => cmd_stream(&args),
         "bench" => cmd_bench(&args),
         "pack" => cmd_pack(&args),
+        "trace-export" => cmd_trace_export(&args),
         "gen-data" => cmd_gen_data(&args),
         "print-config" => cmd_print_config(&args),
         "tune" => cmd_tune(&args),
@@ -135,6 +136,34 @@ fn data_config_from_args(args: &Args) -> Result<a2psgd::config::DataConfig> {
     Ok(dc)
 }
 
+/// Build an ObsConfig from `--config [obs]` + the `--metrics-json` /
+/// `--trace` flags and arm the global collectors. Called early in each
+/// command so warm-up work is instrumented too.
+fn obs_from_args(args: &Args) -> Result<a2psgd::config::ObsConfig> {
+    let mut oc = a2psgd::config::ObsConfig::default();
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        oc = oc.apply_toml(&text)?;
+    }
+    let oc = oc.apply_cli(args.get("metrics-json"), args.get("trace"));
+    oc.install();
+    Ok(oc)
+}
+
+/// End-of-run observability outputs: final metrics snapshot + span JSONL.
+fn obs_finish(oc: &a2psgd::config::ObsConfig) -> Result<()> {
+    if let Some(path) = &oc.metrics_json {
+        a2psgd::obs::write_metrics_json(std::path::Path::new(path))?;
+        eprintln!("metrics → {path}");
+    }
+    if let Some(path) = &oc.trace_out {
+        let n = a2psgd::obs::trace::write_jsonl(std::path::Path::new(path))?;
+        eprintln!("trace → {path} ({n} spans; `a2psgd trace-export` for chrome://tracing)");
+    }
+    Ok(())
+}
+
 /// Shared tail of the train paths: history, summary, CSV, checkpoint.
 fn report_train(args: &Args, engine: EngineKind, report: &TrainReport) -> Result<()> {
     for p in report.history.points() {
@@ -155,6 +184,11 @@ fn report_train(args: &Args, engine: EngineKind, report: &TrainReport) -> Result
             .map(|e| format!("  converged@{e}"))
             .unwrap_or_default()
     );
+    if let Some(m) = &report.metrics {
+        for line in m.summary_lines() {
+            eprintln!("obs: {line}");
+        }
+    }
     if let Some(out) = args.get("out") {
         let dir = PathBuf::from(out);
         std::fs::create_dir_all(&dir)?;
@@ -175,6 +209,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let key = args.get("data-file").unwrap_or(&key).to_string();
     let engine = EngineKind::parse(&args.get_or("engine", "a2psgd"))?;
     let dc = data_config_from_args(args)?;
+    let oc = obs_from_args(args)?;
     let path = std::path::Path::new(&key);
     let is_shards = a2psgd::data::shard::is_shard_dir(path);
     // `--format` is a hard assertion, not a hint — a mismatch errors
@@ -210,7 +245,8 @@ fn cmd_train(args: &Args) -> Result<()> {
             .memory(dc.memory)
             .tile_bytes(dc.tile_bytes());
         let report = a2psgd::engine::train_ooc_opts(path, &key, &cfg, &opts)?;
-        return report_train(args, engine, &report);
+        report_train(args, engine, &report)?;
+        return obs_finish(&oc);
     }
     if is_shards {
         eprintln!("note: {engine} has no out-of-core path; materializing the shard directory");
@@ -231,7 +267,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         let (rmse, mae) = rt.eval_dataset(&report.factors, &data.test)?;
         println!("XLA cross-eval (unclamped): RMSE={rmse:.4} MAE={mae:.4}");
     }
-    report_train(args, engine, &report)
+    report_train(args, engine, &report)?;
+    obs_finish(&oc)
 }
 
 /// Convert a ratings source (text file or builtin dataset key) into a
@@ -312,6 +349,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let data = resolve(args)?;
     let engine = EngineKind::parse(&args.get_or("engine", "a2psgd"))?;
     let cfg = config_from_args(args, engine, &data.name)?;
+    let oc = obs_from_args(args)?;
     // Either load a checkpoint or train fresh.
     let factors = match args.get("load") {
         Some(path) => {
@@ -367,7 +405,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for (v, score) in top {
         println!("  item {v:>6}  score {score:.3}");
     }
-    Ok(())
+    if a2psgd::obs::metrics_enabled() {
+        let snap = a2psgd::obs::snapshot();
+        let lat = snap.hist(a2psgd::obs::Hist::ServiceLatencyNs);
+        if lat.count() > 0 {
+            eprintln!(
+                "obs: service latency p50 {:.1}µs p99 {:.1}µs over {} requests",
+                lat.p50() as f64 / 1e3,
+                lat.p99() as f64 / 1e3,
+                lat.count()
+            );
+        }
+    }
+    obs_finish(&oc)
 }
 
 /// Stream config assembly shared by the in-memory and shard-dir stream
@@ -435,8 +485,9 @@ fn cmd_stream(args: &Args) -> Result<()> {
 
     let key = args.get_or("dataset", "small");
     let seed = args.get_parsed::<u64>("seed")?.unwrap_or(0x5EED);
+    let oc = obs_from_args(args)?;
     if a2psgd::data::shard::is_shard_dir(std::path::Path::new(&key)) {
-        return cmd_stream_shards(args, &key, seed);
+        return cmd_stream_shards(args, &key, seed, &oc);
     }
     let data = a2psgd::coordinator::resolve_dataset(&key, seed)?;
     eprintln!("dataset {}", data.describe());
@@ -530,6 +581,12 @@ fn cmd_stream(args: &Args) -> Result<()> {
                     .unwrap_or_else(|| "-".into()),
                 store.version()
             );
+            // Periodic snapshot rewrite so an external watcher can tail the
+            // metrics while events flow; best-effort, the final write in
+            // obs_finish reports errors.
+            if let Some(path) = &oc.metrics_json {
+                let _ = a2psgd::obs::write_metrics_json(std::path::Path::new(path));
+            }
         }
     }
     trainer.publish();
@@ -585,7 +642,7 @@ fn cmd_stream(args: &Args) -> Result<()> {
         trainer.map().save(&map_path)?;
         eprintln!("checkpoint → {path} (+ {})", map_path.display());
     }
-    Ok(())
+    obs_finish(&oc)
 }
 
 /// The out-of-core `a2psgd stream` path for packed shard directories.
@@ -597,7 +654,12 @@ fn cmd_stream(args: &Args) -> Result<()> {
 /// (resident or streaming grid per `--memory`), the cold suffix replays as
 /// external-id events through `ShardReplaySource.skip_shards`, and the
 /// dataset is never resident end to end.
-fn cmd_stream_shards(args: &Args, key: &str, seed: u64) -> Result<()> {
+fn cmd_stream_shards(
+    args: &Args,
+    key: &str,
+    seed: u64,
+    oc: &a2psgd::config::ObsConfig,
+) -> Result<()> {
     use a2psgd::coordinator::service::{BackendMode, ExclusionSet, PredictionService as Svc};
     use a2psgd::data::loader::IdMap;
     use a2psgd::data::shard::Manifest;
@@ -748,6 +810,10 @@ fn cmd_stream_shards(args: &Args, key: &str, seed: u64) -> Result<()> {
                     .unwrap_or_else(|| "-".into()),
                 store.version()
             );
+            // Best-effort periodic rewrite; obs_finish does the final one.
+            if let Some(path) = &oc.metrics_json {
+                let _ = a2psgd::obs::write_metrics_json(std::path::Path::new(path));
+            }
         }
     }
     if let Some(e) = src.error() {
@@ -796,17 +862,17 @@ fn cmd_stream_shards(args: &Args, key: &str, seed: u64) -> Result<()> {
         trainer.map().save(&map_path)?;
         eprintln!("checkpoint → {path} (+ {})", map_path.display());
     }
-    Ok(())
+    obs_finish(oc)
 }
 
 /// Hot-path benchmark pipeline: update-kernel micro benches, the
 /// scalar-vs-SIMD kernel A/B across the rank-specialized set, the
 /// text-vs-shard ingest A/B, the block layout A/B (pre-PR COO global-id
 /// sweep vs block-local CSR lanes), a per-engine epoch macro over the paper
-/// set, scheduler fairness, and the pool-vs-scope epoch-overhead micro —
-/// all emitted as machine-readable `BENCH_hotpath.json` so later PRs have a
-/// perf trajectory to regress against (CI gates the speedup ratios via
-/// `scripts/bench_gate.py`).
+/// set, scheduler fairness, the pool-vs-scope epoch-overhead micro, and the
+/// observability on/off overhead A/B — all emitted as machine-readable
+/// `BENCH_hotpath.json` so later PRs have a perf trajectory to regress
+/// against (CI gates the speedup ratios via `scripts/bench_gate.py`).
 fn cmd_bench(args: &Args) -> Result<()> {
     use a2psgd::bench_harness::{bench, bench_batched, fmt_secs, json, Table};
     use a2psgd::config::BenchConfig;
@@ -1270,10 +1336,46 @@ fn cmd_bench(args: &Args) -> Result<()> {
         fmt_secs(scope_bench.median())
     );
 
+    // 4c. Observability overhead A/B: identical A²PSGD epochs with the
+    // metrics + trace collectors dark vs fully armed. The per-thread slot
+    // design promises near-zero hot-path cost; this measures it, and
+    // `bench_gate.py` fails the build when `overhead_frac` leaves budget.
+    let obs_json = {
+        let ocfg = TrainConfig::preset(EngineKind::A2psgd, &data)
+            .threads(bcfg.threads)
+            .dim(bcfg.d)
+            .seed(bcfg.seed)
+            .epochs((bcfg.iters as u32).max(2))
+            .no_early_stop();
+        a2psgd::obs::set_metrics_enabled(false);
+        a2psgd::obs::set_trace_enabled(false);
+        let dark = train(&data, &ocfg)?;
+        a2psgd::obs::reset();
+        a2psgd::obs::set_metrics_enabled(true);
+        a2psgd::obs::set_trace_enabled(true);
+        let armed = train(&data, &ocfg)?;
+        a2psgd::obs::set_metrics_enabled(false);
+        a2psgd::obs::set_trace_enabled(false);
+        a2psgd::obs::reset();
+        let overhead = armed.train_seconds / dark.train_seconds - 1.0;
+        println!(
+            "obs: instrumented epochs {} vs uninstrumented {} ({:+.2}% overhead)",
+            fmt_secs(armed.train_seconds),
+            fmt_secs(dark.train_seconds),
+            overhead * 100.0
+        );
+        json::Obj::new()
+            .num("disabled_s", dark.train_seconds)
+            .num("enabled_s", armed.train_seconds)
+            .num("overhead_frac", overhead)
+            .int("epochs", armed.history.points().len() as u64)
+            .build()
+    };
+
     // 5. Emit the JSON artifact.
     let payload = json::Obj::new()
         .str("bench", "hotpath")
-        .int("version", 4)
+        .int("version", 5)
         .str("kernel_path", &kernel_path.to_string())
         .str("dataset", &data.name)
         .int("threads", bcfg.threads as u64)
@@ -1325,6 +1427,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 .num("speedup", pool_speedup)
                 .build(),
         )
+        .raw("obs_overhead", &obs_json)
         .build();
     if let Some(dir) = out.parent() {
         if !dir.as_os_str().is_empty() {
@@ -1333,6 +1436,19 @@ fn cmd_bench(args: &Args) -> Result<()> {
     }
     std::fs::write(&out, payload + "\n")?;
     eprintln!("wrote {}", out.display());
+    Ok(())
+}
+
+/// Convert a span JSONL trace (written by `--trace`) into a
+/// chrome://tracing / Perfetto `trace_event` JSON file.
+fn cmd_trace_export(args: &Args) -> Result<()> {
+    let input = args.get("input").context("trace-export requires --input TRACE.jsonl")?;
+    let out = args.get("out").context("trace-export requires --out TRACE.json")?;
+    let n = a2psgd::obs::trace::export_chrome(
+        std::path::Path::new(input),
+        std::path::Path::new(out),
+    )?;
+    println!("exported {n} spans → {out} (open in chrome://tracing or ui.perfetto.dev)");
     Ok(())
 }
 

@@ -1,0 +1,816 @@
+//! Lock-free observability: hot-path metrics, latency histograms, and
+//! structured tracing for the train/stream/serve pipeline.
+//!
+//! HOGWILD! (Niu et al., PAPERS.md) is the design constraint: a shared
+//! synchronized counter on the update path destroys exactly the lock-freedom
+//! being measured. Every hot-path metric here is therefore a **per-thread
+//! slot** — one cache-line-aligned block of relaxed atomics owned by a
+//! single writer thread (workers get theirs on first use, which the
+//! [`crate::runtime::pool::WorkerPool`] triggers at spawn) — and the shared
+//! [`Registry`] is touched only on the slow paths: thread registration,
+//! trace-ring flushes at epoch barriers, and scrapes. The owning thread
+//! writes its slot with plain load/store pairs (no RMW, no lock prefix);
+//! scrapers read the same atomics relaxed. Zero shared writes on the update
+//! path, by construction.
+//!
+//! Three layers:
+//!
+//! - **Counters / gauges** ([`Ctr`], [`Gauge`]): monotonic sums and
+//!   max-aggregated high-water marks, summed/maxed across slots at scrape.
+//! - **Histograms** ([`Hist`]): log2-bucketed latency distributions with
+//!   p50/p99 estimates ([`HistSnapshot::quantile`]) — bucket `b` holds
+//!   values in `[2^(b-1), 2^b)`, so a quantile is exact to a factor of 2,
+//!   which is what latency SLO reporting needs and all a wait-free update
+//!   (`one load, one store`) can afford.
+//! - **Spans** ([`trace`]): scoped begin/end events in a per-thread ring,
+//!   drained to a process-wide sink at barriers and exportable as JSONL or
+//!   a chrome://tracing `trace_event` file (`a2psgd trace-export`).
+//!
+//! Everything is **off by default**: [`metrics_enabled`] and
+//! [`trace_enabled`] are single relaxed loads, and every instrumentation
+//! point checks them first. Building with `--features obs-off` replaces the
+//! checks with `false` constants so the whole subsystem compiles to nothing
+//! (the kill switch the overhead-guard test compares against).
+//!
+//! [`SeqCell`] is the scrape-consistency primitive: a seqlock over a small
+//! atomic array, letting a single writer publish multi-field stat structs
+//! (e.g. [`crate::coordinator::service::ServiceStats`]) that readers always
+//! observe whole — never `batches` incremented but `served` not.
+
+pub mod trace;
+
+pub use trace::{span, Span, SpanEvent};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotonic counters. Names (the scrape/metric catalog) are in
+/// [`Ctr::name`]; keep README's "Observability" section in sync when adding
+/// one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ctr {
+    /// Scheduler acquire probes that lost a race while a free block existed.
+    SchedContention,
+    /// Scheduler probes made while the grid had no free block (saturation).
+    SchedStarved,
+    /// Block passes completed by workers.
+    BlocksProcessed,
+    /// Per-instance updates executed by block engines.
+    InstancesProcessed,
+    /// Backoff waits taken by workers that failed to acquire a block.
+    BackoffWaits,
+    /// Nanoseconds workers spent parked between pool epochs.
+    PoolParkNs,
+    /// Training epochs driven to completion.
+    EpochsRun,
+    /// Stream-grid waves decoded (initial + prefetched).
+    WavesDecoded,
+    /// Total nanoseconds spent decoding waves (leader + prefetch).
+    WaveDecodeNsTotal,
+    /// Nanoseconds of wave decode overlapped with training (worker 0).
+    WavePrefetchNsTotal,
+    /// New users folded in by the online trainer.
+    FoldinUsers,
+    /// New items folded in by the online trainer.
+    FoldinItems,
+    /// Micro-batches ingested by the online trainer.
+    StreamBatches,
+    /// Per-instance window updates executed by the online trainer.
+    StreamUpdates,
+    /// Factor snapshots published for serving.
+    SnapshotPublishes,
+    /// Prediction requests answered by the service.
+    ServeRequests,
+    /// Backend batches executed by the service.
+    ServeBatches,
+    /// Trace events dropped because the sink hit its cap.
+    TraceDropped,
+}
+
+impl Ctr {
+    /// Every counter, in slot order.
+    pub const ALL: [Ctr; 18] = [
+        Ctr::SchedContention,
+        Ctr::SchedStarved,
+        Ctr::BlocksProcessed,
+        Ctr::InstancesProcessed,
+        Ctr::BackoffWaits,
+        Ctr::PoolParkNs,
+        Ctr::EpochsRun,
+        Ctr::WavesDecoded,
+        Ctr::WaveDecodeNsTotal,
+        Ctr::WavePrefetchNsTotal,
+        Ctr::FoldinUsers,
+        Ctr::FoldinItems,
+        Ctr::StreamBatches,
+        Ctr::StreamUpdates,
+        Ctr::SnapshotPublishes,
+        Ctr::ServeRequests,
+        Ctr::ServeBatches,
+        Ctr::TraceDropped,
+    ];
+
+    /// Stable scrape name (the metric catalog).
+    pub const fn name(self) -> &'static str {
+        match self {
+            Ctr::SchedContention => "sched_contention",
+            Ctr::SchedStarved => "sched_starved",
+            Ctr::BlocksProcessed => "blocks_processed",
+            Ctr::InstancesProcessed => "instances_processed",
+            Ctr::BackoffWaits => "backoff_waits",
+            Ctr::PoolParkNs => "pool_park_ns",
+            Ctr::EpochsRun => "epochs_run",
+            Ctr::WavesDecoded => "waves_decoded",
+            Ctr::WaveDecodeNsTotal => "wave_decode_ns_total",
+            Ctr::WavePrefetchNsTotal => "wave_prefetch_ns_total",
+            Ctr::FoldinUsers => "foldin_users",
+            Ctr::FoldinItems => "foldin_items",
+            Ctr::StreamBatches => "stream_batches",
+            Ctr::StreamUpdates => "stream_updates",
+            Ctr::SnapshotPublishes => "snapshot_publishes",
+            Ctr::ServeRequests => "serve_requests",
+            Ctr::ServeBatches => "serve_batches",
+            Ctr::TraceDropped => "trace_dropped",
+        }
+    }
+}
+
+/// Max-aggregated gauges (high-water marks).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Gauge {
+    /// Peak decoded-tile residency of the streaming-epoch path, in bytes
+    /// (current wave + prefetched next wave).
+    PeakTileBytes,
+}
+
+impl Gauge {
+    /// Every gauge, in slot order.
+    pub const ALL: [Gauge; 1] = [Gauge::PeakTileBytes];
+
+    /// Stable scrape name.
+    pub const fn name(self) -> &'static str {
+        match self {
+            Gauge::PeakTileBytes => "peak_tile_bytes",
+        }
+    }
+}
+
+/// Log2-bucketed histograms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Hist {
+    /// Service per-request latency (receipt → reply), nanoseconds.
+    ServiceLatencyNs,
+    /// Wave decode duration, nanoseconds.
+    WaveDecodeNs,
+    /// Training-epoch duration, nanoseconds.
+    EpochNs,
+}
+
+impl Hist {
+    /// Every histogram, in slot order.
+    pub const ALL: [Hist; 3] = [Hist::ServiceLatencyNs, Hist::WaveDecodeNs, Hist::EpochNs];
+
+    /// Stable scrape name.
+    pub const fn name(self) -> &'static str {
+        match self {
+            Hist::ServiceLatencyNs => "service_latency_ns",
+            Hist::WaveDecodeNs => "wave_decode_ns",
+            Hist::EpochNs => "epoch_ns",
+        }
+    }
+}
+
+/// Buckets per histogram: bucket `b` holds values in `[2^(b-1), 2^b)`
+/// (bucket 0 holds exactly 0), covering the full u64 range.
+pub const HIST_BUCKETS: usize = 64;
+
+/// Log2 bucket index of a value (the top bucket also absorbs values ≥
+/// 2^63).
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    ((u64::BITS - v.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Inclusive upper bound of a bucket (quantile estimates report this).
+#[inline]
+pub fn bucket_hi(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else {
+        // b ≤ 63 for any u64 value below 2^63; saturate above.
+        1u64.checked_shl(b as u32).map(|x| x - 1).unwrap_or(u64::MAX)
+    }
+}
+
+/// One thread's metric slot: written only by its owner (plain relaxed
+/// load+store, no RMW), read relaxed by scrapers. Cache-line aligned so two
+/// workers' hot counters never share a line.
+#[repr(align(64))]
+pub struct Slot {
+    counters: [AtomicU64; Ctr::ALL.len()],
+    gauges: [AtomicU64; Gauge::ALL.len()],
+    hists: [[AtomicU64; HIST_BUCKETS]; Hist::ALL.len()],
+}
+
+impl Slot {
+    fn new() -> Self {
+        Slot {
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            gauges: std::array::from_fn(|_| AtomicU64::new(0)),
+            hists: std::array::from_fn(|_| std::array::from_fn(|_| AtomicU64::new(0))),
+        }
+    }
+
+    /// Owner-only bump: load+store, not `fetch_add` — the slot has exactly
+    /// one writer, so the uncontended RMW's lock prefix buys nothing.
+    #[inline]
+    fn bump(cell: &AtomicU64, n: u64) {
+        cell.store(cell.load(Ordering::Relaxed).wrapping_add(n), Ordering::Relaxed);
+    }
+
+    #[inline]
+    fn add(&self, c: Ctr, n: u64) {
+        Self::bump(&self.counters[c as usize], n);
+    }
+
+    #[inline]
+    fn gauge_max(&self, g: Gauge, v: u64) {
+        let cell = &self.gauges[g as usize];
+        if v > cell.load(Ordering::Relaxed) {
+            cell.store(v, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    fn observe(&self, h: Hist, v: u64) {
+        Self::bump(&self.hists[h as usize][bucket_of(v)], 1);
+    }
+
+    fn reset(&self) {
+        for c in &self.counters {
+            c.store(0, Ordering::Relaxed);
+        }
+        for g in &self.gauges {
+            g.store(0, Ordering::Relaxed);
+        }
+        for h in &self.hists {
+            for b in h {
+                b.store(0, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// The process-wide slot registry. Shared state is touched only at thread
+/// registration and scrape; the hot path goes through a thread-local
+/// [`Slot`] handle.
+pub struct Registry {
+    slots: Mutex<Vec<Arc<Slot>>>,
+    next_tid: AtomicU64,
+}
+
+impl Registry {
+    fn new() -> Self {
+        Registry { slots: Mutex::new(Vec::new()), next_tid: AtomicU64::new(0) }
+    }
+
+    /// Allocate a slot + lane id for the calling thread (slow path; once
+    /// per thread).
+    fn register(&self) -> (Arc<Slot>, u32) {
+        let slot = Arc::new(Slot::new());
+        let tid = self.next_tid.fetch_add(1, Ordering::Relaxed) as u32;
+        self.slots
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .push(Arc::clone(&slot));
+        (slot, tid)
+    }
+
+    fn aggregate(&self) -> Snapshot {
+        let slots = self.slots.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let mut counters = [0u64; Ctr::ALL.len()];
+        let mut gauges = [0u64; Gauge::ALL.len()];
+        let mut hists = vec![[0u64; HIST_BUCKETS]; Hist::ALL.len()];
+        for s in slots.iter() {
+            for (i, c) in s.counters.iter().enumerate() {
+                counters[i] = counters[i].wrapping_add(c.load(Ordering::Relaxed));
+            }
+            for (i, g) in s.gauges.iter().enumerate() {
+                gauges[i] = gauges[i].max(g.load(Ordering::Relaxed));
+            }
+            for (i, h) in s.hists.iter().enumerate() {
+                for (b, cell) in h.iter().enumerate() {
+                    hists[i][b] = hists[i][b].wrapping_add(cell.load(Ordering::Relaxed));
+                }
+            }
+        }
+        Snapshot {
+            counters: counters.to_vec(),
+            gauges: gauges.to_vec(),
+            hists: hists
+                .into_iter()
+                .zip(Hist::ALL)
+                .map(|(buckets, h)| HistSnapshot { hist: h, buckets })
+                .collect(),
+        }
+    }
+
+    fn reset(&self) {
+        let slots = self.slots.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        for s in slots.iter() {
+            s.reset();
+        }
+    }
+}
+
+static REGISTRY: OnceLock<Registry> = OnceLock::new();
+static METRICS_ENABLED: AtomicBool = AtomicBool::new(false);
+static TRACE_ENABLED: AtomicBool = AtomicBool::new(false);
+
+fn registry() -> &'static Registry {
+    REGISTRY.get_or_init(Registry::new)
+}
+
+thread_local! {
+    static TLS_SLOT: std::cell::OnceCell<(Arc<Slot>, u32)> = const { std::cell::OnceCell::new() };
+}
+
+#[inline]
+fn with_slot<R>(f: impl FnOnce(&Slot) -> R) -> R {
+    TLS_SLOT.with(|cell| {
+        let (slot, _) = cell.get_or_init(|| registry().register());
+        f(slot)
+    })
+}
+
+/// Lane id of the calling thread (chrome-trace `tid`); registers on first
+/// use.
+#[inline]
+pub fn thread_lane() -> u32 {
+    TLS_SLOT.with(|cell| cell.get_or_init(|| registry().register()).1)
+}
+
+/// Is metric collection on? A single relaxed load — every instrumentation
+/// point checks this first, and the `obs-off` feature pins it to `false` so
+/// the whole path folds away at compile time.
+#[inline(always)]
+pub fn metrics_enabled() -> bool {
+    #[cfg(feature = "obs-off")]
+    {
+        false
+    }
+    #[cfg(not(feature = "obs-off"))]
+    {
+        METRICS_ENABLED.load(Ordering::Relaxed)
+    }
+}
+
+/// Is span tracing on? (Independent of metrics; both default off.)
+#[inline(always)]
+pub fn trace_enabled() -> bool {
+    #[cfg(feature = "obs-off")]
+    {
+        false
+    }
+    #[cfg(not(feature = "obs-off"))]
+    {
+        TRACE_ENABLED.load(Ordering::Relaxed)
+    }
+}
+
+/// Turn metric collection on/off (no-op under `obs-off`).
+pub fn set_metrics_enabled(on: bool) {
+    let _ = on;
+    #[cfg(not(feature = "obs-off"))]
+    METRICS_ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Turn span tracing on/off (no-op under `obs-off`).
+pub fn set_trace_enabled(on: bool) {
+    let _ = on;
+    #[cfg(not(feature = "obs-off"))]
+    TRACE_ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Bump a counter on the calling thread's slot.
+#[inline]
+pub fn add(c: Ctr, n: u64) {
+    if !metrics_enabled() {
+        return;
+    }
+    with_slot(|s| s.add(c, n));
+}
+
+/// Raise a high-water gauge on the calling thread's slot (aggregated by max
+/// at scrape, so per-thread maxima compose correctly).
+#[inline]
+pub fn gauge_max(g: Gauge, v: u64) {
+    if !metrics_enabled() {
+        return;
+    }
+    with_slot(|s| s.gauge_max(g, v));
+}
+
+/// Record one histogram observation (log2-bucketed).
+#[inline]
+pub fn observe(h: Hist, v: u64) {
+    if !metrics_enabled() {
+        return;
+    }
+    with_slot(|s| s.observe(h, v));
+}
+
+/// Aggregate every thread's slot into one consistent-enough view (counters
+/// are relaxed, so a scrape concurrent with updates is approximate — exact
+/// at barriers, which is when the engines scrape).
+pub fn snapshot() -> Snapshot {
+    registry().aggregate()
+}
+
+/// Zero every slot (tests / bench A-B runs). Counters written concurrently
+/// with the reset may survive it; call at quiescence.
+pub fn reset() {
+    registry().reset();
+    trace::clear();
+}
+
+/// One histogram's aggregated buckets.
+#[derive(Clone, Debug)]
+pub struct HistSnapshot {
+    hist: Hist,
+    buckets: [u64; HIST_BUCKETS],
+}
+
+impl HistSnapshot {
+    /// Scrape name.
+    pub fn name(&self) -> &'static str {
+        self.hist.name()
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Quantile estimate: the inclusive upper bound of the bucket where the
+    /// cumulative count crosses `q · count` (exact to a factor of 2).
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut acc = 0u64;
+        for (b, &n) in self.buckets.iter().enumerate() {
+            acc += n;
+            if acc >= target {
+                return bucket_hi(b);
+            }
+        }
+        bucket_hi(HIST_BUCKETS - 1)
+    }
+
+    /// Median estimate.
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    /// 99th-percentile estimate.
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Raw buckets.
+    pub fn buckets(&self) -> &[u64; HIST_BUCKETS] {
+        &self.buckets
+    }
+}
+
+/// Point-in-time aggregate of the whole registry.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    counters: Vec<u64>,
+    gauges: Vec<u64>,
+    hists: Vec<HistSnapshot>,
+}
+
+impl Snapshot {
+    /// A counter's value.
+    pub fn counter(&self, c: Ctr) -> u64 {
+        self.counters[c as usize]
+    }
+
+    /// A gauge's value.
+    pub fn gauge(&self, g: Gauge) -> u64 {
+        self.gauges[g as usize]
+    }
+
+    /// A histogram's aggregate.
+    pub fn hist(&self, h: Hist) -> &HistSnapshot {
+        &self.hists[h as usize]
+    }
+
+    /// JSON object for `--metrics-json` / the `metrics` bench section:
+    /// `{"counters": {...}, "gauges": {...}, "hists": {name: {count, p50,
+    /// p99, buckets}}}`. Zero-count histograms omit their bucket array.
+    pub fn to_json(&self) -> String {
+        use crate::bench_harness::json::{array, Obj};
+        let mut counters = Obj::new();
+        for c in Ctr::ALL {
+            counters = counters.int(c.name(), self.counter(c));
+        }
+        let mut gauges = Obj::new();
+        for g in Gauge::ALL {
+            gauges = gauges.int(g.name(), self.gauge(g));
+        }
+        let mut hists = Obj::new();
+        for h in &self.hists {
+            let mut o = Obj::new()
+                .int("count", h.count())
+                .int("p50", h.p50())
+                .int("p99", h.p99());
+            if h.count() > 0 {
+                o = o.raw("buckets", &array(h.buckets.iter().map(|b| b.to_string())));
+            }
+            hists = hists.raw(h.name(), &o.build());
+        }
+        Obj::new()
+            .int("version", 1)
+            .raw("counters", &counters.build())
+            .raw("gauges", &gauges.build())
+            .raw("hists", &hists.build())
+            .build()
+    }
+
+    /// Human-readable two-line summary for train reports (only metrics with
+    /// signal).
+    pub fn summary_lines(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        let mut parts = Vec::new();
+        for c in [
+            Ctr::EpochsRun,
+            Ctr::InstancesProcessed,
+            Ctr::BlocksProcessed,
+            Ctr::SchedContention,
+            Ctr::SchedStarved,
+            Ctr::BackoffWaits,
+        ] {
+            let v = self.counter(c);
+            if v > 0 {
+                parts.push(format!("{}={}", c.name(), v));
+            }
+        }
+        if !parts.is_empty() {
+            out.push(format!("metrics: {}", parts.join(" ")));
+        }
+        let mut parts = Vec::new();
+        for c in [Ctr::WavesDecoded, Ctr::WaveDecodeNsTotal, Ctr::WavePrefetchNsTotal] {
+            let v = self.counter(c);
+            if v > 0 {
+                parts.push(format!("{}={}", c.name(), v));
+            }
+        }
+        let tile = self.gauge(Gauge::PeakTileBytes);
+        if tile > 0 {
+            parts.push(format!("peak_tile_bytes={tile}"));
+        }
+        if !parts.is_empty() {
+            out.push(format!("stream:  {}", parts.join(" ")));
+        }
+        for h in &self.hists {
+            if h.count() > 0 {
+                out.push(format!(
+                    "hist:    {} count={} p50≤{} p99≤{}",
+                    h.name(),
+                    h.count(),
+                    h.p50(),
+                    h.p99()
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// Write a metrics snapshot as JSON to `path` (the `--metrics-json` sink).
+pub fn write_metrics_json(path: &std::path::Path) -> crate::Result<()> {
+    use anyhow::Context;
+    let body = snapshot().to_json();
+    std::fs::write(path, body).with_context(|| format!("writing metrics to {}", path.display()))?;
+    Ok(())
+}
+
+/// A seqlock over `N` u64 fields: one writer publishes whole-struct updates,
+/// any number of readers retry until they observe a torn-free copy. This is
+/// how multi-field stat structs ([`crate::coordinator::service::
+/// ServiceStats`]) are scraped consistently without putting a mutex on the
+/// writer's hot path — the writer never blocks, and a reader's retry loop
+/// only spins while a write is literally in flight.
+pub struct SeqCell<const N: usize> {
+    /// Odd while a write is in flight.
+    version: AtomicU64,
+    vals: [AtomicU64; N],
+}
+
+impl<const N: usize> Default for SeqCell<N> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<const N: usize> SeqCell<N> {
+    /// All-zero cell.
+    pub fn new() -> Self {
+        SeqCell {
+            version: AtomicU64::new(0),
+            vals: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Publish `vals` as one atomic unit. **Single-writer**: concurrent
+    /// writers would interleave version bumps and livelock readers.
+    pub fn publish(&self, vals: &[u64; N]) {
+        let v = self.version.load(Ordering::Relaxed);
+        self.version.store(v.wrapping_add(1), Ordering::Release); // odd: write open
+        // Release above orders the odd marker before the field stores for
+        // readers that acquire-load the version.
+        for (cell, &x) in self.vals.iter().zip(vals) {
+            cell.store(x, Ordering::Relaxed);
+        }
+        self.version.store(v.wrapping_add(2), Ordering::Release); // even: write closed
+    }
+
+    /// Read a torn-free copy (spins only while a write is in flight).
+    pub fn read(&self) -> [u64; N] {
+        loop {
+            let v0 = self.version.load(Ordering::Acquire);
+            if v0 % 2 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let out = std::array::from_fn(|i| self.vals[i].load(Ordering::Acquire));
+            if self.version.load(Ordering::Acquire) == v0 {
+                return out;
+            }
+            std::hint::spin_loop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serializes the tests that flip the process-global enable flags, so
+    /// the disabled-noop test can't observe another test's enable window.
+    static GLOBAL: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn bucket_math_covers_u64() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1, "top bucket absorbs the tail");
+        assert_eq!(bucket_of(1 << 62), HIST_BUCKETS - 1);
+        assert_eq!(bucket_hi(0), 0);
+        assert_eq!(bucket_hi(1), 1);
+        assert_eq!(bucket_hi(2), 3);
+        assert_eq!(bucket_hi(3), 7);
+    }
+
+    #[test]
+    fn slot_histogram_quantiles() {
+        let slot = Slot::new();
+        // 99 fast observations, 1 slow one.
+        for _ in 0..99 {
+            slot.observe(Hist::ServiceLatencyNs, 100);
+        }
+        slot.observe(Hist::ServiceLatencyNs, 1_000_000);
+        let mut buckets = [0u64; HIST_BUCKETS];
+        for (i, b) in slot.hists[Hist::ServiceLatencyNs as usize].iter().enumerate() {
+            buckets[i] = b.load(Ordering::Relaxed);
+        }
+        let h = HistSnapshot { hist: Hist::ServiceLatencyNs, buckets };
+        assert_eq!(h.count(), 100);
+        // p50 lands in 100's bucket [64, 128); p99 still in the fast bucket
+        // (99 of 100 ≤ 127); p100 must reach the slow one.
+        assert_eq!(h.p50(), 127);
+        assert_eq!(h.p99(), 127);
+        assert!(h.quantile(1.0) >= 1_000_000);
+        assert_eq!(h.quantile(0.0), 127, "q=0 clamps to the first occupied bucket");
+    }
+
+    #[test]
+    fn empty_hist_quantile_is_zero() {
+        let h = HistSnapshot { hist: Hist::EpochNs, buckets: [0; HIST_BUCKETS] };
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.p99(), 0);
+    }
+
+    #[cfg(not(feature = "obs-off"))]
+    #[test]
+    fn counters_aggregate_across_threads() {
+        let _g = GLOBAL.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        // Other tests in this binary may add concurrently; assert deltas
+        // only (counters are monotonic while enabled).
+        let before = snapshot().counter(Ctr::TraceDropped);
+        set_metrics_enabled(true);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        add(Ctr::TraceDropped, 1);
+                    }
+                });
+            }
+        });
+        let after = snapshot().counter(Ctr::TraceDropped);
+        set_metrics_enabled(false);
+        assert!(
+            after - before >= 4000,
+            "4 threads × 1000 bumps must all land (before={before} after={after})"
+        );
+    }
+
+    #[cfg(not(feature = "obs-off"))]
+    #[test]
+    fn gauge_aggregates_by_max() {
+        let _g = GLOBAL.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        set_metrics_enabled(true);
+        gauge_max(Gauge::PeakTileBytes, 10);
+        gauge_max(Gauge::PeakTileBytes, 7); // lower: must not regress
+        let snap = snapshot();
+        set_metrics_enabled(false);
+        assert!(snap.gauge(Gauge::PeakTileBytes) >= 10);
+    }
+
+    #[test]
+    fn disabled_metrics_are_noops() {
+        let _g = GLOBAL.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        set_metrics_enabled(false);
+        let before = snapshot().counter(Ctr::FoldinItems);
+        add(Ctr::FoldinItems, 5);
+        // Production code only records with metrics enabled, and the tests
+        // that enable them hold GLOBAL — our own add must not have landed.
+        let after = snapshot().counter(Ctr::FoldinItems);
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn snapshot_json_has_catalog_keys() {
+        let snap = snapshot();
+        let js = snap.to_json();
+        for c in Ctr::ALL {
+            assert!(js.contains(&format!("\"{}\"", c.name())), "missing {}", c.name());
+        }
+        for h in Hist::ALL {
+            assert!(js.contains(&format!("\"{}\"", h.name())), "missing {}", h.name());
+        }
+        assert!(js.contains("\"counters\""));
+        assert!(js.contains("\"gauges\""));
+        assert!(js.contains("\"hists\""));
+    }
+
+    #[test]
+    fn seqcell_roundtrip() {
+        let c = SeqCell::<3>::new();
+        assert_eq!(c.read(), [0, 0, 0]);
+        c.publish(&[1, 2, 3]);
+        assert_eq!(c.read(), [1, 2, 3]);
+    }
+
+    /// The satellite invariant: a reader never observes a torn multi-field
+    /// update. The writer maintains `b = 2a` and `c = 3a`; any torn read
+    /// breaks one of the equations.
+    #[test]
+    fn seqcell_readers_never_see_torn_writes() {
+        let cell = Arc::new(SeqCell::<3>::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        std::thread::scope(|s| {
+            {
+                let cell = Arc::clone(&cell);
+                let stop = Arc::clone(&stop);
+                s.spawn(move || {
+                    for a in 1..=200_000u64 {
+                        cell.publish(&[a, 2 * a, 3 * a]);
+                    }
+                    stop.store(true, Ordering::Release);
+                });
+            }
+            for _ in 0..3 {
+                let cell = Arc::clone(&cell);
+                let stop = Arc::clone(&stop);
+                s.spawn(move || {
+                    while !stop.load(Ordering::Acquire) {
+                        let [a, b, c] = cell.read();
+                        assert_eq!(b, 2 * a, "torn read: [{a}, {b}, {c}]");
+                        assert_eq!(c, 3 * a, "torn read: [{a}, {b}, {c}]");
+                    }
+                });
+            }
+        });
+    }
+}

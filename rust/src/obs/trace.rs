@@ -1,0 +1,388 @@
+//! Structured tracing: scoped spans in per-thread rings, drained to a
+//! process-wide sink and exportable as JSONL or a chrome://tracing
+//! `trace_event` file.
+//!
+//! The recording path follows the same per-thread rule as the metric slots:
+//! a [`Span`] drop pushes one event onto the **calling thread's** ring (a
+//! plain `RefCell<Vec<_>>` — no sharing, no atomics), and the shared sink
+//! mutex is only taken when a ring fills ([`RING_FLUSH_AT`] events) or at a
+//! barrier ([`flush_thread`], which the worker pool calls after each epoch
+//! job). Workers therefore never contend on trace state mid-epoch.
+//!
+//! The JSONL schema is one object per line, all integers in nanoseconds
+//! since the process trace origin:
+//!
+//! ```text
+//! {"name":"epoch","cat":"train","ts_ns":1203,"dur_ns":5417821,"tid":0}
+//! ```
+//!
+//! `a2psgd trace-export <spans.jsonl> <out.json>` converts that to the
+//! chrome `trace_event` format (complete events, `ph:"X"`, microsecond
+//! timestamps) — load the output in chrome://tracing or Perfetto and a
+//! streaming epoch renders as prefetch/decode/train lanes per worker
+//! (`tid` = registry lane id).
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Ring capacity per thread before a flush to the sink.
+const RING_FLUSH_AT: usize = 1024;
+
+/// Sink cap: beyond this, new events are dropped (and counted) rather than
+/// growing without bound under a long stream run.
+const SINK_CAP: usize = 1 << 20;
+
+/// One completed span.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanEvent {
+    /// Span name (`epoch`, `wave`, `decode`, `prefetch`, …).
+    pub name: &'static str,
+    /// Category lane (`train`, `stream`, `serve`).
+    pub cat: &'static str,
+    /// Start, nanoseconds since the trace origin.
+    pub ts_ns: u64,
+    /// Duration in nanoseconds.
+    pub dur_ns: u64,
+    /// Registry lane id of the recording thread.
+    pub tid: u32,
+}
+
+static ORIGIN: OnceLock<Instant> = OnceLock::new();
+static SINK: Mutex<Vec<SpanEvent>> = Mutex::new(Vec::new());
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static RING: RefCell<Vec<SpanEvent>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Nanoseconds since the process trace origin (fixed at first use).
+#[inline]
+pub fn now_ns() -> u64 {
+    ORIGIN.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// An in-flight span; records itself on drop. Obtain via [`span`].
+pub struct Span {
+    name: &'static str,
+    cat: &'static str,
+    start_ns: u64,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let end = now_ns();
+        let ev = SpanEvent {
+            name: self.name,
+            cat: self.cat,
+            ts_ns: self.start_ns,
+            dur_ns: end.saturating_sub(self.start_ns),
+            tid: super::thread_lane(),
+        };
+        RING.with(|ring| {
+            let mut r = ring.borrow_mut();
+            r.push(ev);
+            if r.len() >= RING_FLUSH_AT {
+                flush_into_sink(&mut r);
+            }
+        });
+    }
+}
+
+/// Open a span, or `None` when tracing is off (a single relaxed load).
+/// Bind the result — `let _s = obs::span(...)` — so the drop closes it at
+/// scope exit; `let _ =` would close it immediately.
+#[inline]
+pub fn span(name: &'static str, cat: &'static str) -> Option<Span> {
+    if !super::trace_enabled() {
+        return None;
+    }
+    Some(Span { name, cat, start_ns: now_ns() })
+}
+
+fn flush_into_sink(ring: &mut Vec<SpanEvent>) {
+    if ring.is_empty() {
+        return;
+    }
+    let mut sink = SINK.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    let room = SINK_CAP.saturating_sub(sink.len());
+    let take = ring.len().min(room);
+    let lost = (ring.len() - take) as u64;
+    sink.extend(ring.drain(..take));
+    drop(sink);
+    ring.clear();
+    if lost > 0 {
+        DROPPED.fetch_add(lost, Ordering::Relaxed);
+        super::add(super::Ctr::TraceDropped, lost);
+    }
+}
+
+/// Drain the calling thread's ring into the sink — the barrier hook. The
+/// worker pool calls this after every epoch job; call it yourself on any
+/// long-lived thread that records spans outside the pool.
+pub fn flush_thread() {
+    RING.with(|ring| flush_into_sink(&mut ring.borrow_mut()));
+}
+
+/// Take every sunk event (flushes the calling thread first). Events still
+/// sitting in *other* threads' rings are not included — flush at barriers.
+pub fn take_events() -> Vec<SpanEvent> {
+    flush_thread();
+    std::mem::take(&mut *SINK.lock().unwrap_or_else(std::sync::PoisonError::into_inner))
+}
+
+/// Events dropped at the sink cap so far.
+pub fn dropped_events() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+/// Clear the sink and drop counter (the calling thread's ring too).
+pub fn clear() {
+    RING.with(|ring| ring.borrow_mut().clear());
+    SINK.lock().unwrap_or_else(std::sync::PoisonError::into_inner).clear();
+    DROPPED.store(0, Ordering::Relaxed);
+}
+
+/// Serialize one event as a JSONL line (no trailing newline).
+pub fn event_jsonl(ev: &SpanEvent) -> String {
+    crate::bench_harness::json::Obj::new()
+        .str("name", ev.name)
+        .str("cat", ev.cat)
+        .int("ts_ns", ev.ts_ns)
+        .int("dur_ns", ev.dur_ns)
+        .int("tid", ev.tid as u64)
+        .build()
+}
+
+/// Drain all sunk events to `path` as JSONL (one span per line, sorted by
+/// start time so the file reads chronologically).
+pub fn write_jsonl(path: &std::path::Path) -> crate::Result<usize> {
+    use anyhow::Context;
+    let mut events = take_events();
+    events.sort_by_key(|e| e.ts_ns);
+    let mut body = String::new();
+    for ev in &events {
+        body.push_str(&event_jsonl(ev));
+        body.push('\n');
+    }
+    std::fs::write(path, body).with_context(|| format!("writing trace to {}", path.display()))?;
+    Ok(events.len())
+}
+
+/// A span row parsed back out of a JSONL trace file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRow {
+    /// Span name.
+    pub name: String,
+    /// Category lane.
+    pub cat: String,
+    /// Start, ns since trace origin.
+    pub ts_ns: u64,
+    /// Duration, ns.
+    pub dur_ns: u64,
+    /// Recording thread's lane id.
+    pub tid: u64,
+}
+
+/// Extract the JSON string value for `key` from a single-line object
+/// produced by [`event_jsonl`] (handles the escapes our emitter writes).
+fn extract_str(line: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\":\"");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    let mut out = String::new();
+    let mut chars = rest.chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => return Some(out),
+            '\\' => match chars.next()? {
+                '"' => out.push('"'),
+                '\\' => out.push('\\'),
+                'n' => out.push('\n'),
+                'r' => out.push('\r'),
+                't' => out.push('\t'),
+                'u' => {
+                    let hex: String = chars.by_ref().take(4).collect();
+                    let code = u32::from_str_radix(&hex, 16).ok()?;
+                    out.push(char::from_u32(code)?);
+                }
+                other => out.push(other),
+            },
+            c => out.push(c),
+        }
+    }
+    None // unterminated string
+}
+
+/// Extract the unsigned integer value for `key`.
+fn extract_u64(line: &str, key: &str) -> Option<u64> {
+    let pat = format!("\"{key}\":");
+    let start = line.find(&pat)? + pat.len();
+    let digits: String = line[start..].chars().take_while(|c| c.is_ascii_digit()).collect();
+    if digits.is_empty() {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// Parse one JSONL trace line (`None` for blank lines; `Err` for lines
+/// missing required keys).
+pub fn parse_jsonl_line(line: &str) -> crate::Result<Option<TraceRow>> {
+    let line = line.trim();
+    if line.is_empty() {
+        return Ok(None);
+    }
+    let row = (|| {
+        Some(TraceRow {
+            name: extract_str(line, "name")?,
+            cat: extract_str(line, "cat")?,
+            ts_ns: extract_u64(line, "ts_ns")?,
+            dur_ns: extract_u64(line, "dur_ns")?,
+            tid: extract_u64(line, "tid")?,
+        })
+    })();
+    match row {
+        Some(r) => Ok(Some(r)),
+        None => anyhow::bail!("malformed trace line: {line}"),
+    }
+}
+
+/// Convert a JSONL trace file to a chrome://tracing `trace_event` JSON
+/// file: complete events (`ph:"X"`), microsecond floats, one `pid`, `tid` =
+/// worker lane. Returns the number of events exported.
+pub fn export_chrome(input: &std::path::Path, output: &std::path::Path) -> crate::Result<usize> {
+    use crate::bench_harness::json::{array, Obj};
+    use anyhow::Context;
+    let body = std::fs::read_to_string(input)
+        .with_context(|| format!("reading trace JSONL {}", input.display()))?;
+    let mut events = Vec::new();
+    for line in body.lines() {
+        if let Some(row) = parse_jsonl_line(line)? {
+            events.push(
+                Obj::new()
+                    .str("name", &row.name)
+                    .str("cat", &row.cat)
+                    .str("ph", "X")
+                    .num("ts", row.ts_ns as f64 / 1e3)
+                    .num("dur", row.dur_ns as f64 / 1e3)
+                    .int("pid", 1)
+                    .int("tid", row.tid)
+                    .build(),
+            );
+        }
+    }
+    anyhow::ensure!(!events.is_empty(), "{}: no trace events to export", input.display());
+    let n = events.len();
+    let doc = Obj::new()
+        .raw("traceEvents", &array(events))
+        .str("displayTimeUnit", "ms")
+        .raw("otherData", &Obj::new().str("source", "a2psgd trace-export").build())
+        .build();
+    std::fs::write(output, doc)
+        .with_context(|| format!("writing chrome trace {}", output.display()))?;
+    Ok(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_roundtrip_preserves_fields() {
+        let ev = SpanEvent { name: "epoch", cat: "train", ts_ns: 12, dur_ns: 345, tid: 7 };
+        let line = event_jsonl(&ev);
+        let row = parse_jsonl_line(&line).unwrap().unwrap();
+        assert_eq!(row.name, "epoch");
+        assert_eq!(row.cat, "train");
+        assert_eq!(row.ts_ns, 12);
+        assert_eq!(row.dur_ns, 345);
+        assert_eq!(row.tid, 7);
+    }
+
+    #[test]
+    fn blank_lines_skip_and_garbage_errors() {
+        assert!(parse_jsonl_line("").unwrap().is_none());
+        assert!(parse_jsonl_line("   ").unwrap().is_none());
+        assert!(parse_jsonl_line("{\"name\":\"x\"}").is_err(), "missing keys must error");
+        assert!(parse_jsonl_line("not json").is_err());
+    }
+
+    #[test]
+    fn escaped_names_survive_roundtrip() {
+        let line = crate::bench_harness::json::Obj::new()
+            .str("name", "we\"ird\n")
+            .str("cat", "t\\ab")
+            .int("ts_ns", 1)
+            .int("dur_ns", 2)
+            .int("tid", 3)
+            .build();
+        let row = parse_jsonl_line(&line).unwrap().unwrap();
+        assert_eq!(row.name, "we\"ird\n");
+        assert_eq!(row.cat, "t\\ab");
+    }
+
+    #[cfg(not(feature = "obs-off"))]
+    #[test]
+    fn span_records_into_sink_when_enabled() {
+        // Spans land in this thread's ring and reach the sink on flush; the
+        // sink is shared across the test binary, so assert presence rather
+        // than exact counts.
+        super::super::set_trace_enabled(true);
+        {
+            let _s = span("test_span_records", "test");
+            std::hint::black_box(());
+        }
+        super::super::set_trace_enabled(false);
+        flush_thread();
+        let events = take_events();
+        assert!(
+            events.iter().any(|e| e.name == "test_span_records"),
+            "recorded span must reach the sink"
+        );
+    }
+
+    #[test]
+    fn disabled_tracing_creates_no_span() {
+        super::super::set_trace_enabled(false);
+        assert!(span("nope", "test").is_none());
+    }
+
+    #[test]
+    fn chrome_export_wraps_trace_events() {
+        let dir = std::env::temp_dir().join(format!("a2psgd_trace_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let jsonl = dir.join("spans.jsonl");
+        let chrome = dir.join("chrome.json");
+        let lines = [
+            SpanEvent { name: "decode", cat: "stream", ts_ns: 0, dur_ns: 1500, tid: 0 },
+            SpanEvent { name: "epoch", cat: "train", ts_ns: 10, dur_ns: 99, tid: 1 },
+        ]
+        .iter()
+        .map(event_jsonl)
+        .collect::<Vec<_>>()
+        .join("\n");
+        std::fs::write(&jsonl, lines).unwrap();
+        let n = export_chrome(&jsonl, &chrome).unwrap();
+        assert_eq!(n, 2);
+        let out = std::fs::read_to_string(&chrome).unwrap();
+        assert!(out.contains("\"traceEvents\""));
+        assert!(out.contains("\"ph\":\"X\""));
+        assert!(out.contains("\"decode\""));
+        assert!(out.contains("\"tid\":1"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn chrome_export_rejects_empty_and_malformed() {
+        let dir = std::env::temp_dir().join(format!("a2psgd_trace_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let empty = dir.join("empty.jsonl");
+        std::fs::write(&empty, "\n\n").unwrap();
+        assert!(export_chrome(&empty, &dir.join("out.json")).is_err());
+        let bad = dir.join("bad.jsonl");
+        std::fs::write(&bad, "{\"nope\":1}\n").unwrap();
+        assert!(export_chrome(&bad, &dir.join("out2.json")).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

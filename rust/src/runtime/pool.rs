@@ -111,6 +111,11 @@ impl WorkerPool {
                             if pin {
                                 pin_to_core(t % cores);
                             }
+                            // Allocate this worker's per-thread metric slot
+                            // up front (one cache line, lives for the pool's
+                            // lifetime) so no hot-path update ever takes the
+                            // registry lock.
+                            crate::obs::thread_lane();
                             worker_loop(&shared, t, threads);
                         })
                         .expect("spawning pool worker")
@@ -189,12 +194,23 @@ fn worker_loop(shared: &PoolShared, t: usize, nworkers: usize) {
     loop {
         let job = {
             let mut st = shared.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            let park_start = if crate::obs::metrics_enabled() && st.generation == seen {
+                Some(std::time::Instant::now())
+            } else {
+                None
+            };
             loop {
                 if shared.shutdown.load(Ordering::Acquire) {
                     return;
                 }
                 if st.generation != seen {
                     seen = st.generation;
+                    if let Some(t0) = park_start {
+                        crate::obs::add(
+                            crate::obs::Ctr::PoolParkNs,
+                            t0.elapsed().as_nanos() as u64,
+                        );
+                    }
                     break st.job.clone().expect("generation bumped without a job");
                 }
                 st = shared.work_cv.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
@@ -206,6 +222,9 @@ fn worker_loop(shared: &PoolShared, t: usize, nworkers: usize) {
         // Drop our job handle *before* signalling completion: the leader
         // relies on holding the last reference once the barrier opens.
         drop(job);
+        // Epoch barrier = the drain point for this worker's trace ring;
+        // parked threads can't be drained from outside.
+        crate::obs::trace::flush_thread();
         let mut st = shared.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         st.completed += 1;
         if st.completed == nworkers {

@@ -253,6 +253,83 @@ mod tests {
         );
     }
 
+    /// Satellite: the telemetry the obs layer republishes must stay
+    /// internally consistent under a multi-threaded Zipf stress run, for
+    /// both schedulers — the processed-instance ledger exactly matches what
+    /// the workers report, pass counts match successful claims, and every
+    /// failed acquire surfaces as contention and/or starvation.
+    #[test]
+    fn telemetry_consistent_under_multithread_zipf_stress() {
+        use crate::partition::{uniform_bounds, BlockGrid};
+        use crate::sparse::CooMatrix;
+
+        let mut rng = Rng::new(77);
+        let mut m = CooMatrix::new(240, 240);
+        let mut seen = HashSet::new();
+        while m.nnz() < 5000 {
+            let u = (240.0 * rng.f64().powf(2.5)) as u32;
+            let v = (240.0 * rng.f64().powf(2.5)) as u32;
+            if seen.insert((u, v)) {
+                m.push(u.min(239), v.min(239), 1.0).ok();
+            }
+        }
+        let nb = 6;
+        let grid = BlockGrid::new(&m, uniform_bounds(240, nb), uniform_bounds(240, nb));
+        let work = grid.block_nnz();
+
+        let under_test: Vec<(&str, Arc<dyn BlockScheduler>)> = vec![
+            ("locked", Arc::new(LockedScheduler::new(nb))),
+            ("lockfree", Arc::new(LockFreeScheduler::work_aware(nb, &work))),
+        ];
+        for (name, s) in under_test {
+            let processed = AtomicU64::new(0);
+            let claims = AtomicU64::new(0);
+            let failures = AtomicU64::new(0);
+            std::thread::scope(|scope| {
+                for t in 0..8u64 {
+                    let s = Arc::clone(&s);
+                    let (processed, claims, failures) = (&processed, &claims, &failures);
+                    let work = &work;
+                    scope.spawn(move || {
+                        let mut rng = Rng::new(900 + t);
+                        for _ in 0..1500 {
+                            match s.acquire(&mut rng) {
+                                Some(c) => {
+                                    let n = work[c.i * nb + c.j];
+                                    s.release_processed(c, n);
+                                    processed.fetch_add(n, Ordering::Relaxed);
+                                    claims.fetch_add(1, Ordering::Relaxed);
+                                }
+                                None => {
+                                    failures.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        }
+                    });
+                }
+            });
+            let inst: u64 = s.instance_counts().iter().sum();
+            let passes: u64 = s.update_counts().iter().sum();
+            assert_eq!(
+                inst,
+                processed.load(Ordering::Relaxed),
+                "{name}: sum of instance_counts must equal instances the workers processed"
+            );
+            assert_eq!(
+                passes,
+                claims.load(Ordering::Relaxed),
+                "{name}: sum of update_counts must equal successful claims"
+            );
+            let misses = s.contention_events() + s.starved_probes();
+            assert!(
+                misses >= failures.load(Ordering::Relaxed),
+                "{name}: every failed acquire must be visible as contention or starvation \
+                 (misses={misses}, failed acquires={})",
+                failures.load(Ordering::Relaxed)
+            );
+        }
+    }
+
     #[test]
     fn release_processed_default_falls_back_to_release() {
         for (name, s) in schedulers(3) {

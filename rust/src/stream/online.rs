@@ -128,6 +128,10 @@ impl OnlineTrainer {
 
     /// Ingest one micro-batch: resolve, route, fold in, update, publish.
     pub fn ingest(&mut self, batch: &MicroBatch) {
+        let _span = crate::obs::span("ingest", "stream");
+        // Mirror this batch's stat deltas onto the obs registry afterwards —
+        // `stats` stays the source of truth, obs gets the same numbers.
+        let obs_before = crate::obs::metrics_enabled().then_some(self.stats);
         self.stats.batches += 1;
         // Per-batch fold-in observation lists, keyed by *new* dense ids
         // (BTreeMap for a deterministic fold-in order).
@@ -187,6 +191,12 @@ impl OnlineTrainer {
         if self.stats.batches % self.cfg.publish_every == 0 {
             self.publish();
         }
+        if let Some(before) = obs_before {
+            crate::obs::add(crate::obs::Ctr::StreamBatches, 1);
+            crate::obs::add(crate::obs::Ctr::FoldinUsers, self.stats.new_users - before.new_users);
+            crate::obs::add(crate::obs::Ctr::FoldinItems, self.stats.new_items - before.new_items);
+            crate::obs::add(crate::obs::Ctr::StreamUpdates, self.stats.updates - before.updates);
+        }
     }
 
     /// Drain an event source to exhaustion, then publish the final state.
@@ -202,6 +212,7 @@ impl OnlineTrainer {
     /// version.
     pub fn publish(&mut self) -> u64 {
         self.stats.publishes += 1;
+        crate::obs::add(crate::obs::Ctr::SnapshotPublishes, 1);
         self.store.publish(self.factors.clone())
     }
 

@@ -19,6 +19,16 @@ median regression. CI runs the bench in `--iters 1` smoke mode, so
 single-sample medians are noisy; the tolerance (plus floors set under the
 measured medians) absorbs that.
 
+The `obs_overhead` section gates the other way round: smaller is better.
+The baseline's `max_overhead_frac` is a ceiling — instrumented training
+(metrics + tracing armed) must stay within that fraction (x tolerance) of
+the uninstrumented run, so the observability layer can never quietly tax
+the hot path.
+
+Every section named here must be present in *both* artifacts; a missing
+section is a failure, not a skip — a gate that silently checks nothing is
+worse than no gate.
+
 Usage:
     bench_gate.py CURRENT.json BASELINE.json [--tolerance 1.25]
 """
@@ -64,8 +74,8 @@ def main():
         checked += 1
         if got < want / tol:
             failures.append(
-                f"kernel_ab {key}: speedup {got:.3f} < floor {want:.3f}/{tol:.2f} "
-                f"= {want / tol:.3f}"
+                f"kernel_ab {key}: observed speedup {got:.3f} < floor {want:.3f}/{tol:.2f} "
+                f"= {want / tol:.3f} ({got / want:.3f}x of baseline)"
             )
 
     # Scalar sections, each a single {"speedup": r} ratio:
@@ -76,15 +86,36 @@ def main():
         base_val = base.get(section, {}).get("speedup")
         cur_val = cur.get(section, {}).get("speedup")
         if base_val is None:
+            # A missing baseline section means the gate would silently check
+            # nothing — that's a gate bug, not a pass.
+            failures.append(f"{section}: speedup missing from baseline {args.baseline}")
             continue
         if cur_val is None:
-            failures.append(f"{section}: missing from current artifact")
+            failures.append(f"{section}: speedup missing from current artifact {args.current}")
             continue
         checked += 1
         if cur_val < base_val / tol:
             failures.append(
-                f"{section}: speedup {cur_val:.3f} < floor {base_val:.3f}/{tol:.2f} "
-                f"= {base_val / tol:.3f}"
+                f"{section}: observed speedup {cur_val:.3f} < floor {base_val:.3f}/{tol:.2f} "
+                f"= {base_val / tol:.3f} ({cur_val / base_val:.3f}x of baseline)"
+            )
+
+    # obs_overhead: inverse semantics — smaller is better. The baseline holds
+    # a ceiling, not a floor: instrumented training must stay within
+    # max_overhead_frac (x tolerance) of the uninstrumented run.
+    base_max = base.get("obs_overhead", {}).get("max_overhead_frac")
+    cur_ov = cur.get("obs_overhead", {}).get("overhead_frac")
+    if base_max is None:
+        failures.append(f"obs_overhead: max_overhead_frac missing from baseline {args.baseline}")
+    elif cur_ov is None:
+        failures.append(f"obs_overhead: overhead_frac missing from current artifact {args.current}")
+    else:
+        checked += 1
+        if cur_ov > base_max * tol:
+            failures.append(
+                f"obs_overhead: observed overhead {cur_ov:+.2%} > ceiling "
+                f"{base_max:.2%}*{tol:.2f} = {base_max * tol:.2%} "
+                f"({cur_ov / base_max:.2f}x of budget)"
             )
 
     if failures:

@@ -1,0 +1,158 @@
+#!/usr/bin/env python3
+"""Validator for the observability artifacts a run emits.
+
+Checks the span JSONL written by `--trace`, and optionally the metrics
+snapshot written by `--metrics-json` and the chrome://tracing file produced
+by `a2psgd trace-export`. CI's trace-smoke step runs this after a 1-epoch
+instrumented streaming train, so a schema drift or an empty/torn artifact
+fails the build instead of shipping silently.
+
+Usage:
+    check_trace.py TRACE.jsonl [--metrics METRICS.json] [--chrome TRACE.json]
+                   [--require epoch,train]
+
+Exit status: 0 when every artifact validates, 1 otherwise.
+"""
+
+import argparse
+import json
+import sys
+
+# One span per line: integer nanoseconds, stable keys (rust/src/obs/trace.rs).
+SPAN_KEYS = {"name": str, "cat": str, "ts_ns": int, "dur_ns": int, "tid": int}
+
+
+def check_jsonl(path, require):
+    """Validate the span JSONL; return (errors, span_names)."""
+    errors = []
+    names = set()
+    rows = 0
+    try:
+        with open(path) as f:
+            lines = f.readlines()
+    except OSError as e:
+        return [f"{path}: {e}"], names
+    for lineno, line in enumerate(lines, 1):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            row = json.loads(line)
+        except json.JSONDecodeError as e:
+            errors.append(f"{path}:{lineno}: not JSON: {e}")
+            continue
+        for key, typ in SPAN_KEYS.items():
+            if key not in row:
+                errors.append(f"{path}:{lineno}: missing key {key!r}")
+            elif not isinstance(row[key], typ) or isinstance(row[key], bool):
+                errors.append(
+                    f"{path}:{lineno}: {key!r} must be {typ.__name__}, got {row[key]!r}"
+                )
+        if isinstance(row.get("ts_ns"), int) and row["ts_ns"] < 0:
+            errors.append(f"{path}:{lineno}: negative ts_ns")
+        if isinstance(row.get("dur_ns"), int) and row["dur_ns"] < 0:
+            errors.append(f"{path}:{lineno}: negative dur_ns")
+        if isinstance(row.get("name"), str):
+            names.add(row["name"])
+        rows += 1
+    if rows == 0:
+        errors.append(f"{path}: no spans — an instrumented run must record at least one")
+    for want in require:
+        if want not in names:
+            errors.append(f"{path}: required span {want!r} absent (have {sorted(names)})")
+    if not errors:
+        print(f"ok {path}: {rows} span(s), names {sorted(names)}")
+    return errors, names
+
+
+def check_metrics(path):
+    """Validate the --metrics-json snapshot."""
+    errors = []
+    try:
+        with open(path) as f:
+            snap = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: {e}"]
+    if snap.get("version") != 1:
+        errors.append(f"{path}: version must be 1, got {snap.get('version')!r}")
+    counters = snap.get("counters")
+    if not isinstance(counters, dict):
+        errors.append(f"{path}: missing counters object")
+        counters = {}
+    for key, val in counters.items():
+        if not isinstance(val, int) or isinstance(val, bool) or val < 0:
+            errors.append(f"{path}: counter {key!r} must be a non-negative int, got {val!r}")
+    # A post-train snapshot that counted nothing means the collectors were
+    # never armed — exactly the silent failure this script exists to catch.
+    for key in ("epochs_run", "instances_processed"):
+        if counters.get(key, 0) <= 0:
+            errors.append(f"{path}: counter {key!r} must be positive, got {counters.get(key)!r}")
+    for name, hist in snap.get("hists", {}).items():
+        for key in ("count", "p50", "p99"):
+            if not isinstance(hist.get(key), int) or isinstance(hist.get(key), bool):
+                errors.append(f"{path}: hist {name!r} missing int {key!r}")
+        if (
+            isinstance(hist.get("p50"), int)
+            and isinstance(hist.get("p99"), int)
+            and hist["p50"] > hist["p99"]
+        ):
+            errors.append(f"{path}: hist {name!r} has p50 {hist['p50']} > p99 {hist['p99']}")
+    if not errors:
+        print(f"ok {path}: {len(counters)} counter(s), {len(snap.get('hists', {}))} histogram(s)")
+    return errors
+
+
+def check_chrome(path):
+    """Validate the trace-export output against the trace_event format."""
+    errors = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: {e}"]
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return [f"{path}: traceEvents must be a non-empty array"]
+    for i, ev in enumerate(events):
+        if ev.get("ph") != "X":
+            errors.append(f"{path}: traceEvents[{i}]: ph must be 'X', got {ev.get('ph')!r}")
+        for key in ("name", "ts", "dur", "pid", "tid"):
+            if key not in ev:
+                errors.append(f"{path}: traceEvents[{i}]: missing {key!r}")
+        for key in ("ts", "dur"):
+            if key in ev and not isinstance(ev[key], (int, float)):
+                errors.append(f"{path}: traceEvents[{i}]: {key!r} must be numeric")
+    if not errors:
+        print(f"ok {path}: {len(events)} trace event(s)")
+    return errors
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="span JSONL written by --trace")
+    ap.add_argument("--metrics", help="metrics snapshot written by --metrics-json")
+    ap.add_argument("--chrome", help="chrome trace_event JSON from `a2psgd trace-export`")
+    ap.add_argument(
+        "--require",
+        default="epoch",
+        help="comma-separated span names that must appear (default: epoch)",
+    )
+    args = ap.parse_args()
+
+    require = [name for name in args.require.split(",") if name]
+    errors, _ = check_jsonl(args.trace, require)
+    if args.metrics:
+        errors += check_metrics(args.metrics)
+    if args.chrome:
+        errors += check_chrome(args.chrome)
+
+    if errors:
+        print(f"check_trace: {len(errors)} problem(s):", file=sys.stderr)
+        for e in errors:
+            print(f"  FAIL {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
