@@ -1340,35 +1340,53 @@ fn cmd_bench(args: &Args) -> Result<()> {
     // metrics + trace collectors dark vs fully armed. The per-thread slot
     // design promises near-zero hot-path cost; this measures it, and
     // `bench_gate.py` fails the build when `overhead_frac` leaves budget.
+    // A single dark/armed pair is far too noisy to gate on a 3% ceiling
+    // (run-to-run training variance on shared CI runners routinely exceeds
+    // that), so we alternate the pair OBS_AB_REPS times and compare the
+    // *min* wall-clock of each side — min is the standard noise-robust
+    // estimator, since scheduling interference only ever adds time.
     let obs_json = {
+        const OBS_AB_REPS: usize = 3;
         let ocfg = TrainConfig::preset(EngineKind::A2psgd, &data)
             .threads(bcfg.threads)
             .dim(bcfg.d)
             .seed(bcfg.seed)
             .epochs((bcfg.iters as u32).max(2))
             .no_early_stop();
-        a2psgd::obs::set_metrics_enabled(false);
-        a2psgd::obs::set_trace_enabled(false);
-        let dark = train(&data, &ocfg)?;
-        a2psgd::obs::reset();
-        a2psgd::obs::set_metrics_enabled(true);
-        a2psgd::obs::set_trace_enabled(true);
-        let armed = train(&data, &ocfg)?;
-        a2psgd::obs::set_metrics_enabled(false);
-        a2psgd::obs::set_trace_enabled(false);
-        a2psgd::obs::reset();
-        let overhead = armed.train_seconds / dark.train_seconds - 1.0;
+        let mut dark_s = Vec::with_capacity(OBS_AB_REPS);
+        let mut armed_s = Vec::with_capacity(OBS_AB_REPS);
+        let mut epochs_ran = 0u64;
+        for _ in 0..OBS_AB_REPS {
+            a2psgd::obs::set_metrics_enabled(false);
+            a2psgd::obs::set_trace_enabled(false);
+            let dark = train(&data, &ocfg)?;
+            dark_s.push(dark.train_seconds);
+            a2psgd::obs::reset();
+            a2psgd::obs::set_metrics_enabled(true);
+            a2psgd::obs::set_trace_enabled(true);
+            let armed = train(&data, &ocfg)?;
+            armed_s.push(armed.train_seconds);
+            epochs_ran = armed.history.points().len() as u64;
+            a2psgd::obs::set_metrics_enabled(false);
+            a2psgd::obs::set_trace_enabled(false);
+            a2psgd::obs::reset();
+        }
+        let min = |xs: &[f64]| xs.iter().copied().fold(f64::INFINITY, f64::min);
+        let (dark_min, armed_min) = (min(&dark_s), min(&armed_s));
+        let overhead = armed_min / dark_min - 1.0;
         println!(
-            "obs: instrumented epochs {} vs uninstrumented {} ({:+.2}% overhead)",
-            fmt_secs(armed.train_seconds),
-            fmt_secs(dark.train_seconds),
+            "obs: instrumented epochs {} vs uninstrumented {} \
+             ({:+.2}% overhead, min over {OBS_AB_REPS} A/B reps)",
+            fmt_secs(armed_min),
+            fmt_secs(dark_min),
             overhead * 100.0
         );
         json::Obj::new()
-            .num("disabled_s", dark.train_seconds)
-            .num("enabled_s", armed.train_seconds)
+            .num("disabled_s", dark_min)
+            .num("enabled_s", armed_min)
             .num("overhead_frac", overhead)
-            .int("epochs", armed.history.points().len() as u64)
+            .int("reps", OBS_AB_REPS as u64)
+            .int("epochs", epochs_ran)
             .build()
     };
 

@@ -630,10 +630,13 @@ impl<const N: usize> SeqCell<N> {
     /// Publish `vals` as one atomic unit. **Single-writer**: concurrent
     /// writers would interleave version bumps and livelock readers.
     pub fn publish(&self, vals: &[u64; N]) {
-        let v = self.version.load(Ordering::Relaxed);
-        self.version.store(v.wrapping_add(1), Ordering::Release); // odd: write open
-        // Release above orders the odd marker before the field stores for
-        // readers that acquire-load the version.
+        // The odd marker must become visible *before* any field store. A
+        // plain Release store only pins earlier accesses, so the field
+        // stores could sink above it on weakly-ordered hardware (ARM) and
+        // readers would see torn data under matching even version checks.
+        // An AcqRel RMW closes that: its acquire half keeps the stores
+        // below from being hoisted past it (Boehm's seqlock construction).
+        let v = self.version.fetch_add(1, Ordering::AcqRel); // odd: write open
         for (cell, &x) in self.vals.iter().zip(vals) {
             cell.store(x, Ordering::Relaxed);
         }

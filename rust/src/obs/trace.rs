@@ -185,29 +185,54 @@ pub struct TraceRow {
     pub tid: u64,
 }
 
-/// Extract the JSON string value for `key` from a single-line object
-/// produced by [`event_jsonl`] (handles the escapes our emitter writes).
-fn extract_str(line: &str, key: &str) -> Option<String> {
-    let pat = format!("\"{key}\":\"");
-    let start = line.find(&pat)? + pat.len();
-    let rest = &line[start..];
+/// A parsed field value: only the two shapes [`event_jsonl`] emits.
+enum Field {
+    Str(String),
+    U64(u64),
+}
+
+/// Decode a JSON string body (opening quote already consumed) from `chars`,
+/// stopping at the closing quote. Handles the standard single-char escapes
+/// and `\uXXXX`, including UTF-16 surrogate pairs for non-BMP characters.
+fn parse_string(chars: &mut std::iter::Peekable<std::str::Chars<'_>>) -> Option<String> {
+    fn hex4(chars: &mut std::iter::Peekable<std::str::Chars<'_>>) -> Option<u32> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            v = v * 16 + chars.next()?.to_digit(16)?;
+        }
+        Some(v)
+    }
     let mut out = String::new();
-    let mut chars = rest.chars();
     while let Some(c) = chars.next() {
         match c {
             '"' => return Some(out),
             '\\' => match chars.next()? {
                 '"' => out.push('"'),
                 '\\' => out.push('\\'),
+                '/' => out.push('/'),
+                'b' => out.push('\u{8}'),
+                'f' => out.push('\u{c}'),
                 'n' => out.push('\n'),
                 'r' => out.push('\r'),
                 't' => out.push('\t'),
                 'u' => {
-                    let hex: String = chars.by_ref().take(4).collect();
-                    let code = u32::from_str_radix(&hex, 16).ok()?;
+                    let hi = hex4(chars)?;
+                    let code = if (0xD800..0xDC00).contains(&hi) {
+                        // High surrogate: a low surrogate escape must follow.
+                        if chars.next()? != '\\' || chars.next()? != 'u' {
+                            return None;
+                        }
+                        let lo = hex4(chars)?;
+                        if !(0xDC00..0xE000).contains(&lo) {
+                            return None;
+                        }
+                        0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                    } else {
+                        hi
+                    };
                     out.push(char::from_u32(code)?);
                 }
-                other => out.push(other),
+                _ => return None,
             },
             c => out.push(c),
         }
@@ -215,15 +240,66 @@ fn extract_str(line: &str, key: &str) -> Option<String> {
     None // unterminated string
 }
 
-/// Extract the unsigned integer value for `key`.
-fn extract_u64(line: &str, key: &str) -> Option<u64> {
-    let pat = format!("\"{key}\":");
-    let start = line.find(&pat)? + pat.len();
-    let digits: String = line[start..].chars().take_while(|c| c.is_ascii_digit()).collect();
-    if digits.is_empty() {
+/// Parse a single-line JSON object of string / unsigned-integer fields (the
+/// shapes [`event_jsonl`] writes — no nesting, no floats, no null) into its
+/// fields, left-to-right. Consuming the line in one pass means a key-like
+/// substring *inside* a string value (a span name containing `"ts_ns":`)
+/// can never shadow a real field.
+fn parse_fields(line: &str) -> Option<Vec<(String, Field)>> {
+    fn skip_ws(chars: &mut std::iter::Peekable<std::str::Chars<'_>>) {
+        while chars.peek().is_some_and(|c| c.is_ascii_whitespace()) {
+            chars.next();
+        }
+    }
+    let mut chars = line.chars().peekable();
+    skip_ws(&mut chars);
+    if chars.next()? != '{' {
         return None;
     }
-    digits.parse().ok()
+    let mut fields = Vec::new();
+    skip_ws(&mut chars);
+    if chars.peek() == Some(&'}') {
+        chars.next();
+    } else {
+        loop {
+            skip_ws(&mut chars);
+            if chars.next()? != '"' {
+                return None;
+            }
+            let key = parse_string(&mut chars)?;
+            skip_ws(&mut chars);
+            if chars.next()? != ':' {
+                return None;
+            }
+            skip_ws(&mut chars);
+            let val = match chars.peek()? {
+                '"' => {
+                    chars.next();
+                    Field::Str(parse_string(&mut chars)?)
+                }
+                c if c.is_ascii_digit() => {
+                    let mut digits = String::new();
+                    while chars.peek().is_some_and(|c| c.is_ascii_digit()) {
+                        digits.push(chars.next().unwrap());
+                    }
+                    Field::U64(digits.parse().ok()?)
+                }
+                _ => return None,
+            };
+            fields.push((key, val));
+            skip_ws(&mut chars);
+            match chars.next()? {
+                ',' => continue,
+                '}' => break,
+                _ => return None,
+            }
+        }
+    }
+    skip_ws(&mut chars);
+    if chars.next().is_some() {
+        return None; // trailing garbage after the object
+    }
+    Some(fields)
 }
 
 /// Parse one JSONL trace line (`None` for blank lines; `Err` for lines
@@ -234,12 +310,25 @@ pub fn parse_jsonl_line(line: &str) -> crate::Result<Option<TraceRow>> {
         return Ok(None);
     }
     let row = (|| {
+        let fields = parse_fields(line)?;
+        let get_str = |k: &str| {
+            fields.iter().find_map(|(key, v)| match v {
+                Field::Str(s) if key == k => Some(s.clone()),
+                _ => None,
+            })
+        };
+        let get_u64 = |k: &str| {
+            fields.iter().find_map(|(key, v)| match v {
+                Field::U64(n) if key == k => Some(*n),
+                _ => None,
+            })
+        };
         Some(TraceRow {
-            name: extract_str(line, "name")?,
-            cat: extract_str(line, "cat")?,
-            ts_ns: extract_u64(line, "ts_ns")?,
-            dur_ns: extract_u64(line, "dur_ns")?,
-            tid: extract_u64(line, "tid")?,
+            name: get_str("name")?,
+            cat: get_str("cat")?,
+            ts_ns: get_u64("ts_ns")?,
+            dur_ns: get_u64("dur_ns")?,
+            tid: get_u64("tid")?,
         })
     })();
     match row {
@@ -320,6 +409,42 @@ mod tests {
         let row = parse_jsonl_line(&line).unwrap().unwrap();
         assert_eq!(row.name, "we\"ird\n");
         assert_eq!(row.cat, "t\\ab");
+    }
+
+    #[test]
+    fn key_like_content_inside_values_cannot_shadow_fields() {
+        // A span name whose *content* looks like later fields must not
+        // confuse the parser — left-to-right consumption, not substring
+        // search.
+        let line = crate::bench_harness::json::Obj::new()
+            .str("name", "evil\",\"ts_ns\":999,\"x\":\"")
+            .str("cat", "\"dur_ns\":888")
+            .int("ts_ns", 1)
+            .int("dur_ns", 2)
+            .int("tid", 3)
+            .build();
+        let row = parse_jsonl_line(&line).unwrap().unwrap();
+        assert_eq!(row.name, "evil\",\"ts_ns\":999,\"x\":\"");
+        assert_eq!(row.cat, "\"dur_ns\":888");
+        assert_eq!(row.ts_ns, 1);
+        assert_eq!(row.dur_ns, 2);
+    }
+
+    #[test]
+    fn unicode_escapes_decode_including_surrogate_pairs() {
+        // \u00e9 = é (BMP); \ud83d\ude80 = 🚀 (non-BMP surrogate pair).
+        let line =
+            r#"{"name":"caf\u00e9 \ud83d\ude80","cat":"t","ts_ns":1,"dur_ns":2,"tid":3}"#;
+        let row = parse_jsonl_line(line).unwrap().unwrap();
+        assert_eq!(row.name, "café 🚀");
+        // A lone high surrogate is malformed, not silently mangled.
+        let bad = r#"{"name":"\ud83d","cat":"t","ts_ns":1,"dur_ns":2,"tid":3}"#;
+        assert!(parse_jsonl_line(bad).is_err());
+        // Raw (unescaped) non-BMP UTF-8 — what our emitter actually writes —
+        // round-trips too.
+        let ev = SpanEvent { name: "🚀wave", cat: "stream", ts_ns: 4, dur_ns: 5, tid: 6 };
+        let row = parse_jsonl_line(&event_jsonl(&ev)).unwrap().unwrap();
+        assert_eq!(row.name, "🚀wave");
     }
 
     #[cfg(not(feature = "obs-off"))]

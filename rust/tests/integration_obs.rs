@@ -68,7 +68,7 @@ fn metrics_and_tracing_leave_single_thread_training_bit_identical() {
 /// Wall-clock overhead of armed metrics + tracing. Timing asserts are
 /// inherently flaky on shared CI runners, so this is `#[ignore]`d there;
 /// `a2psgd bench`'s `obs_overhead` section gates the same property with
-/// warmup and medians via `scripts/bench_gate.py`.
+/// min-over-repeated-A/B timing via `scripts/bench_gate.py`.
 #[test]
 #[ignore = "timing-sensitive; the bench gate enforces the 3% budget"]
 fn obs_overhead_stays_in_budget() {

@@ -112,11 +112,16 @@ def main():
     else:
         checked += 1
         if cur_ov > base_max * tol:
-            failures.append(
+            msg = (
                 f"obs_overhead: observed overhead {cur_ov:+.2%} > ceiling "
-                f"{base_max:.2%}*{tol:.2f} = {base_max * tol:.2%} "
-                f"({cur_ov / base_max:.2f}x of budget)"
+                f"{base_max:.2%}*{tol:.2f} = {base_max * tol:.2%}"
             )
+            # A zero-tolerance baseline (max_overhead_frac == 0) has no
+            # budget to express a ratio against — skip the clause rather
+            # than crash on the division.
+            if base_max > 0:
+                msg += f" ({cur_ov / base_max:.2f}x of budget)"
+            failures.append(msg)
 
     if failures:
         print(f"bench gate: {len(failures)} regression(s) past the {tol:.2f}x tolerance:")
