@@ -1,0 +1,730 @@
+#![deny(unsafe_op_in_unsafe_fn)]
+//! `a2ps_lint` — project-invariant lint for the concurrency core.
+//!
+//! Rustc and clippy check language invariants; this binary checks *project*
+//! invariants that only hold by convention — the conventions that keep ~60
+//! hand-written `unsafe` sites and the lock-free scheduler/seqlock/pool
+//! protocols reviewable. It walks every `.rs` file under `src/` with a
+//! comment- and string-aware scanner (so a pattern inside a doc comment or
+//! string literal never trips a rule) and enforces:
+//!
+//! 1. **safety-comment** — every `unsafe` keyword (block, fn, impl, trait)
+//!    carries a `// SAFETY:` justification or a `# Safety` doc section
+//!    within the preceding [`SAFETY_WINDOW`] lines.
+//! 2. **relaxed** — `Ordering::Relaxed` only appears in files listed (with a
+//!    justification) under `[relaxed]` in `lint_allow.toml`.
+//! 3. **static-mut** — `static mut` only in `[static_mut]` (currently
+//!    empty: the crate has none, and new ones need an argued entry).
+//! 4. **transmute** — `transmute` only in `[transmute]` (today: the
+//!    lifetime-erasure in `runtime/pool.rs`).
+//! 5. **fence** — `atomic::fence`/`compiler_fence` patterns are confined to
+//!    the concurrency core (`scheduler/`, `obs/`, `model/shared.rs`,
+//!    `runtime/pool.rs`); fences elsewhere are almost always a smell for a
+//!    missing ordering on an existing atomic.
+//! 6. **ptr-arith** — raw-pointer arithmetic (`.add(`, `.offset(`,
+//!    `.sub(`, `from_raw_parts`) is confined to the SIMD kernels
+//!    (`optim/kernel/`) and the mmap binding (`data/mmap.rs`), plus
+//!    `[ptr_arith]` allowlist entries.
+//!
+//! Allowlist entries are *exact*: a stale entry (file no longer contains
+//! the pattern) fails the lint too, so the file stays an honest inventory.
+//!
+//! Usage: `cargo run --bin a2ps_lint` from `rust/` (CI does exactly this);
+//! `--root <dir>` points at a directory containing `src/` and
+//! `lint_allow.toml`, `--allowlist <file>` overrides the allowlist path.
+//! Exit code 0 = clean, 1 = violations (printed as `path:line: [rule] …`),
+//! 2 = usage/configuration error.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use a2psgd::config::toml_lite;
+
+/// How many lines above an `unsafe` keyword a `SAFETY` justification may
+/// sit (attributes and multi-line comments need a little room).
+const SAFETY_WINDOW: usize = 6;
+
+/// Path prefixes (relative to the lint root, `/`-separated) where
+/// fence-paired atomics are legitimate.
+const FENCE_ALLOWED: &[&str] =
+    &["src/scheduler/", "src/obs/", "src/model/shared.rs", "src/runtime/pool.rs"];
+
+/// Path prefixes where raw-pointer arithmetic is expected (SIMD kernel
+/// bodies, the mmap binding). Everything else needs a `[ptr_arith]` entry.
+const PTR_ARITH_BUILTIN: &[&str] = &["src/optim/kernel/", "src/data/mmap.rs"];
+
+/// One allowlisted rule: file → justification.
+type FileAllow = BTreeMap<String, String>;
+
+/// The allowlist section names `lint_allow.toml` may contain.
+const ALLOW_SECTIONS: &[&str] = &["relaxed", "static_mut", "transmute", "ptr_arith"];
+
+/// Parsed `lint_allow.toml`: section name → (file → justification). Kept
+/// string-keyed (not struct fields) so the lint's own source never contains
+/// a bare pattern word in code position.
+#[derive(Debug, Default)]
+struct Allowlist {
+    sections: BTreeMap<String, FileAllow>,
+}
+
+impl Allowlist {
+    fn section(&self, name: &str) -> Option<&FileAllow> {
+        self.sections.get(name)
+    }
+
+    fn contains(&self, section: &str, file: &str) -> bool {
+        self.section(section).is_some_and(|s| s.contains_key(file))
+    }
+
+    #[cfg(test)]
+    fn insert(&mut self, section: &str, file: &str, reason: &str) {
+        self.sections
+            .entry(section.to_string())
+            .or_default()
+            .insert(file.to_string(), reason.to_string());
+    }
+}
+
+/// A single lint finding.
+#[derive(Debug, PartialEq, Eq)]
+struct Violation {
+    path: String,
+    line: usize,
+    rule: &'static str,
+    message: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+fn main() -> ExitCode {
+    match run(std::env::args().skip(1).collect()) {
+        Ok(violations) if violations.is_empty() => {
+            println!("a2ps_lint: clean");
+            ExitCode::SUCCESS
+        }
+        Ok(violations) => {
+            for v in &violations {
+                println!("{v}");
+            }
+            println!("a2ps_lint: {} violation(s)", violations.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("a2ps_lint: error: {e:#}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run(args: Vec<String>) -> a2psgd::Result<Vec<Violation>> {
+    let mut root = None;
+    let mut allowlist_path = None;
+    let mut it = args.into_iter();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--root" => root = Some(PathBuf::from(take_value(&mut it, "--root")?)),
+            "--allowlist" => {
+                allowlist_path = Some(PathBuf::from(take_value(&mut it, "--allowlist")?))
+            }
+            "--help" | "-h" => {
+                println!("usage: a2ps_lint [--root DIR] [--allowlist FILE]");
+                return Ok(Vec::new());
+            }
+            other => anyhow::bail!("unknown argument {other:?} (try --help)"),
+        }
+    }
+    let root = match root {
+        Some(r) => r,
+        // Auto-detect: run from `rust/` (src/ beside us) or the repo root.
+        None if Path::new("src").is_dir() => PathBuf::from("."),
+        None if Path::new("rust/src").is_dir() => PathBuf::from("rust"),
+        None => anyhow::bail!("no src/ or rust/src/ here; pass --root"),
+    };
+    let allowlist_path = allowlist_path.unwrap_or_else(|| root.join("lint_allow.toml"));
+    let allow = load_allowlist(&allowlist_path)?;
+
+    let mut files = Vec::new();
+    collect_rs_files(&root.join("src"), &mut files)?;
+    files.sort();
+
+    let mut violations = Vec::new();
+    let mut used: BTreeMap<&'static str, BTreeSet<String>> = BTreeMap::new();
+    for path in &files {
+        let rel = rel_path(&root, path);
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        scan_file(&rel, &text, &allow, &mut violations, &mut used);
+    }
+
+    // Stale allowlist entries are violations too: the allowlist must stay an
+    // exact inventory of where each pattern lives.
+    for &rule in ALLOW_SECTIONS {
+        let used_set = used.get(rule).cloned().unwrap_or_default();
+        for file in allow.section(rule).map(FileAllow::keys).into_iter().flatten() {
+            if !used_set.contains(file) {
+                violations.push(Violation {
+                    path: file.clone(),
+                    line: 0,
+                    rule: "stale-allowlist",
+                    message: format!(
+                        "listed under [{rule}] in lint_allow.toml but the pattern no longer \
+                         appears; remove the entry"
+                    ),
+                });
+            }
+        }
+    }
+    violations.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+    Ok(violations)
+}
+
+fn take_value(it: &mut impl Iterator<Item = String>, flag: &str) -> a2psgd::Result<String> {
+    it.next().ok_or_else(|| anyhow::anyhow!("{flag} needs a value"))
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    // Normalize to `/` so allowlist keys are portable.
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> a2psgd::Result<()> {
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("walking {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| anyhow::anyhow!("walking {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|ext| ext == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn load_allowlist(path: &Path) -> a2psgd::Result<Allowlist> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading allowlist {}: {e}", path.display()))?;
+    let doc = toml_lite::parse(&text)?;
+    let mut allow = Allowlist::default();
+    for section in doc.section_names().map(str::to_string).collect::<Vec<_>>() {
+        if section.is_empty() {
+            continue; // no root-level keys expected
+        }
+        if !ALLOW_SECTIONS.contains(&section.as_str()) {
+            anyhow::bail!("unknown allowlist section [{section}]");
+        }
+        let target = allow.sections.entry(section.clone()).or_default();
+        for (key, value) in doc.section(&section).into_iter().flatten() {
+            // toml_lite keeps the quotes of quoted keys; strip them so keys
+            // can be written as standard-TOML quoted paths.
+            let file = key.trim_matches('"').to_string();
+            let reason = value
+                .as_str()
+                .filter(|r| !r.trim().is_empty())
+                .ok_or_else(|| {
+                    anyhow::anyhow!("[{section}] {file}: justification must be a non-empty string")
+                })?
+                .to_string();
+            target.insert(file, reason);
+        }
+    }
+    Ok(allow)
+}
+
+/// Scan one file's text, appending violations and recording which allowlist
+/// entries were exercised.
+fn scan_file(
+    rel: &str,
+    text: &str,
+    allow: &Allowlist,
+    violations: &mut Vec<Violation>,
+    used: &mut BTreeMap<&'static str, BTreeSet<String>>,
+) {
+    let lines = split_code_comments(text);
+    let mut report = |line: usize, rule: &'static str, message: String| {
+        violations.push(Violation { path: rel.to_string(), line, rule, message });
+    };
+
+    for (idx, (code, _comment)) in lines.iter().enumerate() {
+        let lineno = idx + 1;
+
+        // Rule 1: SAFETY justification near every `unsafe`.
+        if contains_word(code, "unsafe") && !has_safety_nearby(&lines, idx) {
+            report(
+                lineno,
+                "safety-comment",
+                format!(
+                    "`unsafe` without a `// SAFETY:` comment or `# Safety` doc section in the \
+                     preceding {SAFETY_WINDOW} lines"
+                ),
+            );
+        }
+
+        // Rule 2–4: allowlisted patterns. Word-bounded so an identifier like
+        // `test_transmute_flagged` does not count as the pattern itself.
+        for (rule, pattern, key) in [
+            ("relaxed", "Ordering::Relaxed", "relaxed"),
+            ("static-mut", "static mut", "static_mut"),
+            ("transmute", "transmute", "transmute"),
+        ] {
+            if contains_word(code, pattern) {
+                used.entry(key).or_default().insert(rel.to_string());
+                if !allow.contains(key, rel) {
+                    report(
+                        lineno,
+                        rule,
+                        format!(
+                            "`{pattern}` outside the [{key}] allowlist — add a justified entry \
+                             to lint_allow.toml or use a stronger ordering"
+                        ),
+                    );
+                }
+            }
+        }
+
+        // Rule 5: fences confined to the concurrency core.
+        if (contains_word(code, "fence") && code.contains("fence("))
+            && !FENCE_ALLOWED.iter().any(|p| rel.starts_with(p))
+        {
+            report(
+                lineno,
+                "fence",
+                format!(
+                    "atomic fence outside the concurrency core ({}) — pair an ordering with an \
+                     existing atomic instead",
+                    FENCE_ALLOWED.join(", ")
+                ),
+            );
+        }
+
+        // Rule 6: raw-pointer arithmetic confined to kernels + mmap.
+        let ptr_pattern = [".add(", ".offset(", ".sub(", "from_raw_parts"]
+            .iter()
+            .find(|p| code.contains(**p));
+        if let Some(p) = ptr_pattern {
+            let builtin = PTR_ARITH_BUILTIN.iter().any(|pre| rel.starts_with(pre));
+            if !builtin {
+                used.entry("ptr_arith").or_default().insert(rel.to_string());
+            }
+            if !builtin && !allow.contains("ptr_arith", rel) {
+                report(
+                    lineno,
+                    "ptr-arith",
+                    format!(
+                        "raw-pointer arithmetic (`{p}`) outside optim/kernel/ and data/mmap.rs — \
+                         add a justified [ptr_arith] entry or use slice indexing"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// `needle` appears in `haystack` as a standalone word (`_` counts as a word
+/// character, so `unsafe_op_in_unsafe_fn` does not contain the word
+/// `unsafe`).
+fn contains_word(haystack: &str, needle: &str) -> bool {
+    let is_word = |c: char| c.is_alphanumeric() || c == '_';
+    let mut start = 0;
+    while let Some(pos) = haystack[start..].find(needle) {
+        let at = start + pos;
+        let before_ok = at == 0 || !haystack[..at].chars().next_back().is_some_and(is_word);
+        let after = at + needle.len();
+        let after_ok =
+            after >= haystack.len() || !haystack[after..].chars().next().is_some_and(is_word);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + needle.len();
+    }
+    false
+}
+
+/// A `SAFETY` / `# Safety` justification exists on line `idx` or within the
+/// [`SAFETY_WINDOW`] comment lines above it.
+fn has_safety_nearby(lines: &[(String, String)], idx: usize) -> bool {
+    let lo = idx.saturating_sub(SAFETY_WINDOW);
+    lines[lo..=idx]
+        .iter()
+        .any(|(_, comment)| comment.contains("SAFETY") || comment.contains("# Safety"))
+}
+
+/// Scanner state carried across lines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum LexState {
+    /// Plain code.
+    Code,
+    /// Inside `/* … */`, with nesting depth.
+    Block(u32),
+    /// Inside a `"…"` string (escape-aware).
+    Str,
+    /// Inside a raw string with `n` `#` marks (`r##"…"##`).
+    RawStr(u32),
+}
+
+/// Split source text into per-line `(code, comment)` pairs: `code` has
+/// comments and string/char-literal contents blanked, `comment` holds the
+/// text of every comment on that line. This is what makes the rules immune
+/// to patterns quoted in docs or literals.
+fn split_code_comments(text: &str) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    let mut state = LexState::Code;
+    for line in text.lines() {
+        let (code, comment, next) = lex_line(line, state);
+        state = next;
+        out.push((code, comment));
+    }
+    out
+}
+
+/// Lex a single line starting in `state`; returns the blanked code, the
+/// comment text, and the state carried into the next line.
+fn lex_line(line: &str, mut state: LexState) -> (String, String, LexState) {
+    let mut code = String::new();
+    let mut comment = String::new();
+    let chars: Vec<char> = line.chars().collect();
+    let mut i = 0;
+    while i < chars.len() {
+        match state {
+            LexState::Block(depth) => {
+                if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    state = if depth > 1 { LexState::Block(depth - 1) } else { LexState::Code };
+                    i += 2;
+                } else if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = LexState::Block(depth + 1);
+                    i += 2;
+                } else {
+                    comment.push(chars[i]);
+                    i += 1;
+                }
+            }
+            LexState::Str => {
+                if chars[i] == '\\' {
+                    i += 2; // skip the escaped char (may run past EOL: fine)
+                } else {
+                    if chars[i] == '"' {
+                        state = LexState::Code;
+                        code.push('"');
+                    }
+                    i += 1;
+                }
+            }
+            LexState::RawStr(hashes) => {
+                if chars[i] == '"' && closes_raw(&chars, i + 1, hashes) {
+                    state = LexState::Code;
+                    code.push('"');
+                    i += 1 + hashes as usize;
+                } else {
+                    i += 1;
+                }
+            }
+            LexState::Code => {
+                let c = chars[i];
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    comment.push_str(&line[byte_index(line, i)..]);
+                    i = chars.len();
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    state = LexState::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    state = LexState::Str;
+                    code.push('"');
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && is_raw_string_start(&chars, i) {
+                    let mut j = i + 1;
+                    if chars.get(j) == Some(&'b') || chars.get(j) == Some(&'r') {
+                        j += 1;
+                    }
+                    let mut hashes = 0u32;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    state = LexState::RawStr(hashes);
+                    code.push('"');
+                    i = j + 1; // past the opening quote
+                } else if c == '\'' {
+                    // Char literal vs lifetime: a literal is 'x' or an
+                    // escape; a lifetime quote is followed by an ident with
+                    // no closing quote right after.
+                    if chars.get(i + 1) == Some(&'\\') {
+                        // The char after the escape introducer is payload,
+                        // never the closing quote — skipping it blindly is
+                        // what keeps '\\' and '\'' from eating the close.
+                        // Longer escapes ('\u{…}', '\x41') contain no quote,
+                        // so the plain scan below finds the real one.
+                        let mut j = i + 3;
+                        while j < chars.len() && chars[j] != '\'' {
+                            j += 1;
+                        }
+                        code.push_str("''");
+                        i = (j + 1).min(chars.len());
+                    } else if chars.get(i + 2) == Some(&'\'') {
+                        code.push_str("''");
+                        i += 3;
+                    } else {
+                        code.push('\''); // lifetime marker
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    (code, comment, state)
+}
+
+/// Does a raw string literal start at `chars[i]` (which is `r` or `b`)?
+fn is_raw_string_start(chars: &[char], i: usize) -> bool {
+    // Accept r" r#" br" br#" rb (invalid but harmless) — but only when the
+    // prefix is not part of a longer identifier like `for` or `attr`.
+    if i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_') {
+        return false;
+    }
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return false;
+    }
+    j += 1;
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+    }
+    chars.get(j) == Some(&'"')
+}
+
+/// Is `chars[at..]` exactly `hashes` `#` marks (raw-string close)?
+fn closes_raw(chars: &[char], at: usize, hashes: u32) -> bool {
+    (0..hashes as usize).all(|k| chars.get(at + k) == Some(&'#'))
+}
+
+/// Byte offset of the `i`-th char of `line` (for slicing the comment tail).
+fn byte_index(line: &str, i: usize) -> usize {
+    line.char_indices().nth(i).map(|(b, _)| b).unwrap_or(line.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(text: &str) -> Vec<String> {
+        split_code_comments(text).into_iter().map(|(c, _)| c).collect()
+    }
+
+    fn scan(rel: &str, text: &str, allow: &Allowlist) -> Vec<Violation> {
+        let mut v = Vec::new();
+        let mut used = BTreeMap::new();
+        scan_file(rel, text, allow, &mut v, &mut used);
+        v
+    }
+
+    #[test]
+    fn comments_and_strings_are_blanked() {
+        let code = code_of(
+            "let x = 1; // Ordering::Relaxed in a comment\n\
+             let s = \"static mut inside a string\";\n\
+             /* transmute\n in a block */ let y = 2;\n",
+        );
+        assert!(!code[0].contains("Relaxed"));
+        assert!(!code[1].contains("static mut"));
+        assert!(code[1].contains("let s ="));
+        assert!(!code[2].contains("transmute"));
+        assert!(code[2].contains("let y = 2;"));
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let code = code_of("/* a /* b */ still comment */ let z = 3;\nlet w = 4;\n");
+        assert!(code[0].contains("let z = 3;"));
+        assert!(!code[0].contains("still"));
+        assert_eq!(code[1], "let w = 4;");
+    }
+
+    #[test]
+    fn raw_strings_and_escapes_are_blanked() {
+        let code = code_of(
+            "let a = r#\"unsafe { transmute }\"#;\n\
+             let b = \"esc \\\" unsafe\";\n\
+             let c = b\"bytes unsafe\";\n",
+        );
+        assert!(!code[0].contains("transmute"));
+        assert!(!code[1].contains("unsafe"));
+        assert!(!code[2].contains("unsafe"));
+        for l in &code {
+            assert!(l.contains("let"), "{l:?}");
+        }
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        // A naive quote matcher would treat `'a` as an open literal and
+        // blank the rest of the line, hiding the `unsafe`.
+        let code = code_of("fn f<'a>(x: &'a str) { unsafe { g(x) } }\n");
+        assert!(code[0].contains("unsafe"));
+        let code = code_of("let c = 'x'; let d = '\\n'; unsafe { h() }\n");
+        assert!(code[0].contains("unsafe"));
+        assert!(!code[0].contains('x'), "char literal contents blanked: {:?}", code[0]);
+    }
+
+    #[test]
+    fn escaped_backslash_char_literal_does_not_eat_the_close() {
+        // Regression: scanning '\\' used to re-treat the escaped backslash
+        // as an escape introducer, skip the closing quote, and blank the
+        // rest of the line — hiding anything after it from the rules.
+        let code = code_of("let bs = '\\\\'; unsafe { g() }\n");
+        assert!(code[0].contains("unsafe"), "code after '\\\\' must survive: {:?}", code[0]);
+        let code = code_of("let q = '\\''; let u = '\\u{1F600}'; unsafe { g() }\n");
+        assert!(code[0].contains("unsafe"), "code after '\\'' must survive: {:?}", code[0]);
+    }
+
+    #[test]
+    fn multiline_strings_carry_state() {
+        let code = code_of("let s = \"line one\nstill string unsafe\nend\"; let t = 1;\n");
+        assert!(!code[1].contains("unsafe"));
+        assert!(code[2].contains("let t = 1;"));
+    }
+
+    #[test]
+    fn word_boundaries_respect_underscores() {
+        assert!(contains_word("unsafe {", "unsafe"));
+        assert!(contains_word("pub unsafe fn f()", "unsafe"));
+        assert!(!contains_word("#![deny(unsafe_op_in_unsafe_fn)]", "unsafe"));
+        assert!(!contains_word("my_unsafe", "unsafe"));
+        assert!(!contains_word("unsafety", "unsafe"));
+    }
+
+    #[test]
+    fn unsafe_without_safety_comment_is_flagged() {
+        let allow = Allowlist::default();
+        let v = scan("src/x.rs", "fn f() {\n    let p = unsafe { g() };\n}\n", &allow);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "safety-comment");
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn safety_comment_within_window_passes() {
+        let allow = Allowlist::default();
+        let ok = "fn f() {\n    // SAFETY: g has no preconditions here.\n    \
+                  let p = unsafe { g() };\n}\n";
+        assert!(scan("src/x.rs", ok, &allow).is_empty());
+        let doc = "/// Does a thing.\n///\n/// # Safety\n/// Caller must hold the lock.\n\
+                   pub unsafe fn f() {}\n";
+        assert!(scan("src/x.rs", doc, &allow).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_outside_window_fails() {
+        let allow = Allowlist::default();
+        let pad = "\n".repeat(SAFETY_WINDOW + 1);
+        let far = format!("// SAFETY: too far away\n{pad}unsafe impl Send for X {{}}\n");
+        let v = scan("src/x.rs", &far, &allow);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "safety-comment");
+    }
+
+    #[test]
+    fn relaxed_needs_allowlist_entry() {
+        let text = "// SAFETY: n/a\nlet x = a.load(Ordering::Relaxed);\n";
+        let mut allow = Allowlist::default();
+        let v = scan("src/y.rs", text, &allow);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, "relaxed");
+        allow.insert("relaxed", "src/y.rs", "single-writer slot");
+        assert!(scan("src/y.rs", text, &allow).is_empty());
+    }
+
+    #[test]
+    fn static_mut_and_transmute_flagged() {
+        let allow = Allowlist::default();
+        let v = scan("src/z.rs", "static mut COUNTER: u64 = 0;\n", &allow);
+        assert!(v.iter().any(|v| v.rule == "static-mut"), "{v:?}");
+        let v = scan("src/z.rs", "let y = std::mem::transmute::<A, B>(x);\n", &allow);
+        assert!(v.iter().any(|v| v.rule == "transmute"), "{v:?}");
+    }
+
+    #[test]
+    fn fence_confined_to_concurrency_core() {
+        let text = "use std::sync::atomic::fence;\nfence(Ordering::SeqCst);\n";
+        let allow = Allowlist::default();
+        assert!(
+            scan("src/scheduler/lockfree.rs", text, &allow).is_empty(),
+            "scheduler may fence"
+        );
+        let v = scan("src/data/loader.rs", text, &allow);
+        assert!(v.iter().any(|v| v.rule == "fence"), "{v:?}");
+    }
+
+    #[test]
+    fn ptr_arith_confined_and_allowlistable() {
+        let text = "// SAFETY: bounds checked by caller.\nlet q = unsafe { p.add(k) };\n";
+        let mut allow = Allowlist::default();
+        assert!(scan("src/optim/kernel/x86.rs", text, &allow).is_empty());
+        assert!(scan("src/data/mmap.rs", text, &allow).is_empty());
+        let v = scan("src/engine/mod.rs", text, &allow);
+        assert!(v.iter().any(|v| v.rule == "ptr-arith"), "{v:?}");
+        allow.insert("ptr_arith", "src/engine/mod.rs", "justified");
+        assert!(scan("src/engine/mod.rs", text, &allow).is_empty());
+    }
+
+    #[test]
+    fn fetch_add_is_not_pointer_arithmetic() {
+        let allow = Allowlist::default();
+        let text = "let n = c.fetch_add(1, Ordering::SeqCst);\nlet m = x.saturating_sub(2);\n\
+                    let w = y.wrapping_add(3);\n";
+        assert!(scan("src/engine/mod.rs", text, &allow).is_empty());
+    }
+
+    #[test]
+    fn allowlist_roundtrip_via_toml_lite() {
+        let doc = "[relaxed]\n\"src/obs/mod.rs\" = \"single-writer slots\"\n\
+                   [transmute]\n\"src/runtime/pool.rs\" = \"lifetime erasure\"\n";
+        let tmp = std::env::temp_dir().join(format!("a2ps_lint_allow_{}.toml", std::process::id()));
+        std::fs::write(&tmp, doc).unwrap();
+        let allow = load_allowlist(&tmp).unwrap();
+        std::fs::remove_file(&tmp).ok();
+        let reason = allow.section("relaxed").and_then(|s| s.get("src/obs/mod.rs"));
+        assert_eq!(reason.map(String::as_str), Some("single-writer slots"));
+        assert!(allow.contains("transmute", "src/runtime/pool.rs"));
+    }
+
+    #[test]
+    fn empty_justification_rejected() {
+        let tmp = std::env::temp_dir().join(format!("a2ps_lint_bad_{}.toml", std::process::id()));
+        std::fs::write(&tmp, "[relaxed]\n\"src/a.rs\" = \"\"\n").unwrap();
+        let r = load_allowlist(&tmp);
+        std::fs::remove_file(&tmp).ok();
+        assert!(r.is_err(), "empty justification must be rejected");
+    }
+
+    /// The lint must pass on its own source tree — the same invocation CI
+    /// runs. This makes `cargo test` catch an unjustified `unsafe` or a
+    /// stray `Relaxed` even before the dedicated CI step does.
+    #[test]
+    fn lint_is_clean_on_this_crate() {
+        if !Path::new("src").is_dir() || !Path::new("lint_allow.toml").is_file() {
+            eprintln!("skipping: not running from the crate root");
+            return;
+        }
+        let violations = run(Vec::new()).expect("lint run");
+        assert!(
+            violations.is_empty(),
+            "a2ps_lint found violations:\n{}",
+            violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}

@@ -585,7 +585,7 @@ pub fn run_driver_with(
             crate::obs::observe(crate::obs::Hist::EpochNs, epoch_t0.elapsed().as_nanos() as u64);
         }
 
-        // Workers joined inside run_epoch → quiescent read is safe.
+        // SAFETY: workers joined inside run_epoch → quiescent read.
         let f = unsafe { runner.shared().get() };
         let (rmse, mae) = crate::metrics::rmse_mae_parallel(
             f,

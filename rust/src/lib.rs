@@ -1,3 +1,4 @@
+#![deny(unsafe_op_in_unsafe_fn)]
 //! # a2psgd — Accelerated Asynchronous Parallel SGD for HDS Low-rank Representation
 //!
 //! A production-quality reproduction of
@@ -58,6 +59,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod sparse;
 pub mod stream;
+pub mod testutil;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

@@ -1,3 +1,4 @@
+#![deny(unsafe_op_in_unsafe_fn)]
 //! `a2psgd` binary: the leader entry point / launcher.
 
 use a2psgd::cli::{usage, Args};

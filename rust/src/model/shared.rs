@@ -50,7 +50,9 @@ impl SharedFactors {
     /// reads (quiescence or disjointness).
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn get(&self) -> &Factors {
-        &*self.cell.get()
+        // SAFETY: no concurrent writer is this fn's contract (see
+        // `# Safety`); the cell pointer is always valid.
+        unsafe { &*self.cell.get() }
     }
 
     /// Raw mutable access for one (u, v) update: returns
@@ -67,13 +69,18 @@ impl SharedFactors {
         u: u32,
         v: u32,
     ) -> (&mut [f32], &mut [f32], &mut [f32], &mut [f32]) {
-        let f = &mut *self.cell.get();
-        let d = f.d();
-        let mu = std::slice::from_raw_parts_mut(f.m.as_mut_ptr().add(u as usize * d), d);
-        let nv = std::slice::from_raw_parts_mut(f.n.as_mut_ptr().add(v as usize * d), d);
-        let phiu = std::slice::from_raw_parts_mut(f.phi.as_mut_ptr().add(u as usize * d), d);
-        let psiv = std::slice::from_raw_parts_mut(f.psi.as_mut_ptr().add(v as usize * d), d);
-        (mu, nv, phiu, psiv)
+        // SAFETY: the engine access contract (module docs) is this fn's
+        // contract; `u`/`v` are in-range block coordinates, so each
+        // `base + idx * d` slice stays inside its matrix allocation.
+        unsafe {
+            let f = &mut *self.cell.get();
+            let d = f.d();
+            let mu = std::slice::from_raw_parts_mut(f.m.as_mut_ptr().add(u as usize * d), d);
+            let nv = std::slice::from_raw_parts_mut(f.n.as_mut_ptr().add(v as usize * d), d);
+            let phiu = std::slice::from_raw_parts_mut(f.phi.as_mut_ptr().add(u as usize * d), d);
+            let psiv = std::slice::from_raw_parts_mut(f.psi.as_mut_ptr().add(v as usize * d), d);
+            (mu, nv, phiu, psiv)
+        }
     }
 }
 
@@ -97,6 +104,7 @@ mod tests {
         let mut rng = Rng::new(2);
         let f = Factors::init(4, 4, 2, 0.2, &mut rng);
         let shared = SharedFactors::new(f);
+        // SAFETY: single-threaded test — no concurrent access at all.
         unsafe {
             let (mu, nv, phiu, psiv) = shared.rows_mut(1, 2);
             mu[0] = 7.0;
@@ -120,7 +128,8 @@ mod tests {
             for t in 0..8u32 {
                 let shared = &shared;
                 scope.spawn(move || {
-                    // Thread t owns rows 8t..8t+8 — disjoint contract.
+                    // SAFETY: thread t owns rows 8t..8t+8 — rows_mut calls
+                    // are disjoint across threads (the engine contract).
                     for u in (8 * t)..(8 * t + 8) {
                         unsafe {
                             let (mu, _, _, _) = shared.rows_mut(u, u);

@@ -153,12 +153,14 @@ mod tests {
     #[test]
     fn concurrent_readers_see_monotone_versions() {
         let store = Arc::new(SnapshotStore::new(factors(4, 3)));
+        let reads = crate::testutil::budget(2000, 50);
+        let publishes = crate::testutil::budget(200, 20) as u64;
         std::thread::scope(|scope| {
             for _ in 0..4 {
                 let store = Arc::clone(&store);
                 scope.spawn(move || {
                     let mut last = 0u64;
-                    for _ in 0..2000 {
+                    for _ in 0..reads {
                         let snap = store.load();
                         assert!(snap.version() >= last, "version went backwards");
                         last = snap.version();
@@ -172,11 +174,11 @@ mod tests {
             }
             let store = Arc::clone(&store);
             scope.spawn(move || {
-                for i in 0..200 {
+                for i in 0..publishes {
                     store.publish(factors(100 + i, 3 + (i % 5) as u32));
                 }
             });
         });
-        assert_eq!(store.version(), 201);
+        assert_eq!(store.version(), publishes + 1);
     }
 }

@@ -788,16 +788,26 @@ mod tests {
     /// The satellite invariant: a reader never observes a torn multi-field
     /// update. The writer maintains `b = 2a` and `c = 3a`; any torn read
     /// breaks one of the equations.
+    ///
+    /// This is also the PR 6 publish-ordering regression test: reverting
+    /// [`SeqCell::publish`] to its pre-fix shape (open the write with a
+    /// plain `Release` *store* instead of the AcqRel RMW) makes this test
+    /// fail under Miri's weak-memory emulation, where the field stores may
+    /// become visible before the odd marker — see
+    /// `seqcell_old_release_store_publish_can_tear` for a live driver of
+    /// the buggy protocol. CI's Miri lane runs it with the shortened
+    /// iteration budget.
     #[test]
     fn seqcell_readers_never_see_torn_writes() {
         let cell = Arc::new(SeqCell::<3>::new());
         let stop = Arc::new(AtomicBool::new(false));
+        let publishes = crate::testutil::budget(200_000, 300) as u64;
         std::thread::scope(|s| {
             {
                 let cell = Arc::clone(&cell);
                 let stop = Arc::clone(&stop);
                 s.spawn(move || {
-                    for a in 1..=200_000u64 {
+                    for a in 1..=publishes {
                         cell.publish(&[a, 2 * a, 3 * a]);
                     }
                     stop.store(true, Ordering::Release);
@@ -815,5 +825,80 @@ mod tests {
                 });
             }
         });
+    }
+
+    /// Live driver for the pre-PR 6 bug: `publish` opened the write with a
+    /// plain `Release` store. Release only pins *earlier* accesses, so the
+    /// field stores sequenced after it may become visible to another thread
+    /// before the odd marker does — a reader then matches two even version
+    /// checks around torn fields. The tear is a permitted-not-guaranteed
+    /// weak-memory outcome: x86-TSO never exhibits it, so this test demands
+    /// Miri (whose store-buffer emulation finds it within a few hundred
+    /// publishes) and stays `#[ignore]`d for the native suite:
+    /// `cargo miri test -- --ignored seqcell_old`.
+    #[test]
+    #[ignore = "pre-PR6 bug driver; tears only under Miri's weak-memory emulation"]
+    fn seqcell_old_release_store_publish_can_tear() {
+        if !cfg!(miri) {
+            eprintln!("skipping: needs weak-memory emulation (run under `cargo miri test`)");
+            return;
+        }
+        struct BuggyCell {
+            version: AtomicU64,
+            vals: [AtomicU64; 3],
+        }
+        impl BuggyCell {
+            fn publish(&self, vals: &[u64; 3]) {
+                let v = self.version.load(Ordering::Relaxed);
+                // BUG (pre-PR 6 shape): store, not RMW — nothing keeps the
+                // field stores below from surfacing first.
+                self.version.store(v.wrapping_add(1), Ordering::Release);
+                for (cell, &x) in self.vals.iter().zip(vals) {
+                    cell.store(x, Ordering::Relaxed);
+                }
+                self.version.store(v.wrapping_add(2), Ordering::Release);
+            }
+            fn read(&self) -> [u64; 3] {
+                loop {
+                    let v0 = self.version.load(Ordering::Acquire);
+                    if v0 % 2 == 1 {
+                        std::hint::spin_loop();
+                        continue;
+                    }
+                    let out = std::array::from_fn(|i| self.vals[i].load(Ordering::Acquire));
+                    if self.version.load(Ordering::Acquire) == v0 {
+                        return out;
+                    }
+                    std::hint::spin_loop();
+                }
+            }
+        }
+        let cell = BuggyCell {
+            version: AtomicU64::new(0),
+            vals: std::array::from_fn(|_| AtomicU64::new(0)),
+        };
+        let torn = AtomicU64::new(0);
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for a in 1..=2_000u64 {
+                    cell.publish(&[a, 2 * a, 3 * a]);
+                }
+                stop.store(true, Ordering::Release);
+            });
+            s.spawn(|| {
+                while !stop.load(Ordering::Acquire) {
+                    let [a, b, c] = cell.read();
+                    if b != 2 * a || c != 3 * a {
+                        torn.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        });
+        assert!(
+            torn.load(Ordering::Relaxed) > 0,
+            "buggy publish produced no torn read this run; rerun (tear is \
+             permitted, not guaranteed)"
+        );
     }
 }

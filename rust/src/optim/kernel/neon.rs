@@ -27,48 +27,68 @@ pub(super) fn kernel_set(d: usize) -> KernelSet {
 }
 
 /// ⟨a, b⟩ over `d` elements.
+///
+/// # Safety
+/// `a` and `b` must be valid for `d` f32 reads, and NEON must be available
+/// (callers are `#[target_feature]` wrappers over length-checked slices).
 #[inline(always)]
 unsafe fn dot_body(a: *const f32, b: *const f32, d: usize) -> f32 {
-    let mut acc = vdupq_n_f32(0.0);
-    let mut k = 0usize;
-    while k + 4 <= d {
-        acc = vfmaq_f32(acc, vld1q_f32(a.add(k)), vld1q_f32(b.add(k)));
-        k += 4;
+    // SAFETY: pointer validity for `d` reads and ISA availability are this
+    // fn's contract (see `# Safety`).
+    unsafe {
+        let mut acc = vdupq_n_f32(0.0);
+        let mut k = 0usize;
+        while k + 4 <= d {
+            acc = vfmaq_f32(acc, vld1q_f32(a.add(k)), vld1q_f32(b.add(k)));
+            k += 4;
+        }
+        let mut s = vaddvq_f32(acc);
+        while k < d {
+            s += *a.add(k) * *b.add(k);
+            k += 1;
+        }
+        s
     }
-    let mut s = vaddvq_f32(acc);
-    while k < d {
-        s += *a.add(k) * *b.add(k);
-        k += 1;
-    }
-    s
 }
 
 /// One SGD step (paper Eq. 3) over rows of length `d`.
+///
+/// # Safety
+/// `mu` and `nv` must be valid for `d` f32 reads and writes, and NEON must
+/// be available.
 #[inline(always)]
 unsafe fn sgd_body(mu: *mut f32, nv: *mut f32, r: f32, h: &Hyper, d: usize) {
-    let e = r - dot_body(mu, nv, d);
-    let ee = h.eta * e;
-    let shrink = 1.0 - h.eta * h.lam;
-    let vee = vdupq_n_f32(ee);
-    let vsh = vdupq_n_f32(shrink);
-    let mut k = 0usize;
-    while k + 4 <= d {
-        let m = vld1q_f32(mu.add(k));
-        let n = vld1q_f32(nv.add(k));
-        vst1q_f32(mu.add(k), vfmaq_f32(vmulq_f32(vee, n), m, vsh));
-        vst1q_f32(nv.add(k), vfmaq_f32(vmulq_f32(vee, m), n, vsh));
-        k += 4;
-    }
-    while k < d {
-        let mk = *mu.add(k);
-        let nk = *nv.add(k);
-        *mu.add(k) = mk * shrink + ee * nk;
-        *nv.add(k) = nk * shrink + ee * mk;
-        k += 1;
+    // SAFETY: pointer validity for `d` reads/writes and ISA availability
+    // are this fn's contract (see `# Safety`).
+    unsafe {
+        let e = r - dot_body(mu, nv, d);
+        let ee = h.eta * e;
+        let shrink = 1.0 - h.eta * h.lam;
+        let vee = vdupq_n_f32(ee);
+        let vsh = vdupq_n_f32(shrink);
+        let mut k = 0usize;
+        while k + 4 <= d {
+            let m = vld1q_f32(mu.add(k));
+            let n = vld1q_f32(nv.add(k));
+            vst1q_f32(mu.add(k), vfmaq_f32(vmulq_f32(vee, n), m, vsh));
+            vst1q_f32(nv.add(k), vfmaq_f32(vmulq_f32(vee, m), n, vsh));
+            k += 4;
+        }
+        while k < d {
+            let mk = *mu.add(k);
+            let nk = *nv.add(k);
+            *mu.add(k) = mk * shrink + ee * nk;
+            *nv.add(k) = nk * shrink + ee * mk;
+            k += 1;
+        }
     }
 }
 
 /// One NAG step (paper Eqs. 4–5) over rows of length `d`.
+///
+/// # Safety
+/// All four pointers must be valid for `d` f32 reads and writes, and NEON
+/// must be available.
 #[inline(always)]
 unsafe fn nag_body(
     mu: *mut f32,
@@ -79,55 +99,59 @@ unsafe fn nag_body(
     h: &Hyper,
     d: usize,
 ) {
-    let g = h.gamma;
-    let vg = vdupq_n_f32(g);
-    let mut acc = vdupq_n_f32(0.0);
-    let mut k = 0usize;
-    while k + 4 <= d {
-        let mh = vfmaq_f32(vld1q_f32(mu.add(k)), vg, vld1q_f32(phiu.add(k)));
-        let nh = vfmaq_f32(vld1q_f32(nv.add(k)), vg, vld1q_f32(psiv.add(k)));
-        acc = vfmaq_f32(acc, mh, nh);
-        k += 4;
-    }
-    let mut dot = vaddvq_f32(acc);
-    while k < d {
-        dot += (*mu.add(k) + g * *phiu.add(k)) * (*nv.add(k) + g * *psiv.add(k));
-        k += 1;
-    }
-    let e = r - dot;
-    let ee = h.eta * e;
-    let el = h.eta * h.lam;
-    let vee = vdupq_n_f32(ee);
-    let vel = vdupq_n_f32(el);
-    let mut k = 0usize;
-    while k + 4 <= d {
-        let m = vld1q_f32(mu.add(k));
-        let n = vld1q_f32(nv.add(k));
-        let p = vld1q_f32(phiu.add(k));
-        let q = vld1q_f32(psiv.add(k));
-        let mh = vfmaq_f32(m, vg, p);
-        let nh = vfmaq_f32(n, vg, q);
-        // p' = γφ + ee·n̂ − el·m̂  (vfmsq(a, b, c) = a − b·c)
-        let p2 = vfmsq_f32(vfmaq_f32(vmulq_f32(vg, p), vee, nh), vel, mh);
-        let q2 = vfmsq_f32(vfmaq_f32(vmulq_f32(vg, q), vee, mh), vel, nh);
-        vst1q_f32(phiu.add(k), p2);
-        vst1q_f32(psiv.add(k), q2);
-        vst1q_f32(mu.add(k), vaddq_f32(m, p2));
-        vst1q_f32(nv.add(k), vaddq_f32(n, q2));
-        k += 4;
-    }
-    while k < d {
-        let (m, n) = (*mu.add(k), *nv.add(k));
-        let (p, q) = (*phiu.add(k), *psiv.add(k));
-        let mh = m + g * p;
-        let nh = n + g * q;
-        let p2 = g * p + ee * nh - el * mh;
-        let q2 = g * q + ee * mh - el * nh;
-        *phiu.add(k) = p2;
-        *psiv.add(k) = q2;
-        *mu.add(k) = m + p2;
-        *nv.add(k) = n + q2;
-        k += 1;
+    // SAFETY: pointer validity for `d` reads/writes and ISA availability
+    // are this fn's contract (see `# Safety`).
+    unsafe {
+        let g = h.gamma;
+        let vg = vdupq_n_f32(g);
+        let mut acc = vdupq_n_f32(0.0);
+        let mut k = 0usize;
+        while k + 4 <= d {
+            let mh = vfmaq_f32(vld1q_f32(mu.add(k)), vg, vld1q_f32(phiu.add(k)));
+            let nh = vfmaq_f32(vld1q_f32(nv.add(k)), vg, vld1q_f32(psiv.add(k)));
+            acc = vfmaq_f32(acc, mh, nh);
+            k += 4;
+        }
+        let mut dot = vaddvq_f32(acc);
+        while k < d {
+            dot += (*mu.add(k) + g * *phiu.add(k)) * (*nv.add(k) + g * *psiv.add(k));
+            k += 1;
+        }
+        let e = r - dot;
+        let ee = h.eta * e;
+        let el = h.eta * h.lam;
+        let vee = vdupq_n_f32(ee);
+        let vel = vdupq_n_f32(el);
+        let mut k = 0usize;
+        while k + 4 <= d {
+            let m = vld1q_f32(mu.add(k));
+            let n = vld1q_f32(nv.add(k));
+            let p = vld1q_f32(phiu.add(k));
+            let q = vld1q_f32(psiv.add(k));
+            let mh = vfmaq_f32(m, vg, p);
+            let nh = vfmaq_f32(n, vg, q);
+            // p' = γφ + ee·n̂ − el·m̂  (vfmsq(a, b, c) = a − b·c)
+            let p2 = vfmsq_f32(vfmaq_f32(vmulq_f32(vg, p), vee, nh), vel, mh);
+            let q2 = vfmsq_f32(vfmaq_f32(vmulq_f32(vg, q), vee, mh), vel, nh);
+            vst1q_f32(phiu.add(k), p2);
+            vst1q_f32(psiv.add(k), q2);
+            vst1q_f32(mu.add(k), vaddq_f32(m, p2));
+            vst1q_f32(nv.add(k), vaddq_f32(n, q2));
+            k += 4;
+        }
+        while k < d {
+            let (m, n) = (*mu.add(k), *nv.add(k));
+            let (p, q) = (*phiu.add(k), *psiv.add(k));
+            let mh = m + g * p;
+            let nh = n + g * q;
+            let p2 = g * p + ee * nh - el * mh;
+            let q2 = g * q + ee * mh - el * nh;
+            *phiu.add(k) = p2;
+            *psiv.add(k) = q2;
+            *mu.add(k) = m + p2;
+            *nv.add(k) = n + q2;
+            k += 1;
+        }
     }
 }
 
@@ -137,16 +161,27 @@ macro_rules! neon_rank {
         pub(super) mod $modname {
             use super::*;
 
+            /// # Safety
+            /// Caller must have verified neon and pass slices of length
+            /// `$D` (the safe wrappers below assert both).
             #[target_feature(enable = "neon")]
             unsafe fn dot_tf(a: &[f32], b: &[f32]) -> f32 {
-                dot_body(a.as_ptr(), b.as_ptr(), $D)
+                // SAFETY: target_feature meets the ISA contract; the fn
+                // contract guarantees `$D` elements behind both slices.
+                unsafe { dot_body(a.as_ptr(), b.as_ptr(), $D) }
             }
 
+            /// # Safety
+            /// As in `dot_tf`.
             #[target_feature(enable = "neon")]
             unsafe fn sgd_tf(mu: &mut [f32], nv: &mut [f32], r: f32, h: &Hyper) {
-                sgd_body(mu.as_mut_ptr(), nv.as_mut_ptr(), r, h, $D)
+                // SAFETY: as in `dot_tf`; mutable slices give exclusive
+                // write access for `$D` elements.
+                unsafe { sgd_body(mu.as_mut_ptr(), nv.as_mut_ptr(), r, h, $D) }
             }
 
+            /// # Safety
+            /// As in `dot_tf`.
             #[target_feature(enable = "neon")]
             unsafe fn nag_tf(
                 mu: &mut [f32],
@@ -156,15 +191,18 @@ macro_rules! neon_rank {
                 r: f32,
                 h: &Hyper,
             ) {
-                nag_body(
-                    mu.as_mut_ptr(),
-                    nv.as_mut_ptr(),
-                    phiu.as_mut_ptr(),
-                    psiv.as_mut_ptr(),
-                    r,
-                    h,
-                    $D,
-                )
+                // SAFETY: as in `sgd_tf`, for all four rows.
+                unsafe {
+                    nag_body(
+                        mu.as_mut_ptr(),
+                        nv.as_mut_ptr(),
+                        phiu.as_mut_ptr(),
+                        psiv.as_mut_ptr(),
+                        r,
+                        h,
+                        $D,
+                    )
+                }
             }
 
             pub(in super::super) fn dot(a: &[f32], b: &[f32]) -> f32 {
@@ -209,16 +247,26 @@ neon_rank!(d128, 128);
 pub(super) mod generic {
     use super::*;
 
+    /// # Safety
+    /// Caller must have verified neon and pass slices holding at least `d`
+    /// elements (the safe wrappers below check both).
     #[target_feature(enable = "neon")]
     unsafe fn dot_tf(a: &[f32], b: &[f32], d: usize) -> f32 {
-        dot_body(a.as_ptr(), b.as_ptr(), d)
+        // SAFETY: target_feature meets the ISA contract; the fn contract
+        // guarantees `d` elements behind both slices.
+        unsafe { dot_body(a.as_ptr(), b.as_ptr(), d) }
     }
 
+    /// # Safety
+    /// As in `dot_tf`.
     #[target_feature(enable = "neon")]
     unsafe fn sgd_tf(mu: &mut [f32], nv: &mut [f32], r: f32, h: &Hyper, d: usize) {
-        sgd_body(mu.as_mut_ptr(), nv.as_mut_ptr(), r, h, d)
+        // SAFETY: as in `dot_tf`; mutable slices give exclusive writes.
+        unsafe { sgd_body(mu.as_mut_ptr(), nv.as_mut_ptr(), r, h, d) }
     }
 
+    /// # Safety
+    /// As in `dot_tf`.
     #[target_feature(enable = "neon")]
     #[allow(clippy::too_many_arguments)]
     unsafe fn nag_tf(
@@ -230,15 +278,18 @@ pub(super) mod generic {
         h: &Hyper,
         d: usize,
     ) {
-        nag_body(
-            mu.as_mut_ptr(),
-            nv.as_mut_ptr(),
-            phiu.as_mut_ptr(),
-            psiv.as_mut_ptr(),
-            r,
-            h,
-            d,
-        )
+        // SAFETY: as in `sgd_tf`, for all four rows.
+        unsafe {
+            nag_body(
+                mu.as_mut_ptr(),
+                nv.as_mut_ptr(),
+                phiu.as_mut_ptr(),
+                psiv.as_mut_ptr(),
+                r,
+                h,
+                d,
+            )
+        }
     }
 
     pub(in super::super) fn dot(a: &[f32], b: &[f32]) -> f32 {

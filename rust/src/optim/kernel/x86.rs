@@ -45,57 +45,82 @@ pub(super) fn kernel_set(d: usize) -> KernelSet {
 }
 
 /// Horizontal sum of the 8 f32 lanes of a 256-bit accumulator.
+///
+/// # Safety
+/// AVX2 must be available; every caller is (inlined into) a
+/// `#[target_feature(enable = "avx2,fma")]` wrapper reached only after
+/// runtime detection.
 #[inline(always)]
 unsafe fn hsum(v: __m256) -> f32 {
-    let lo = _mm256_castps256_ps128(v);
-    let hi = _mm256_extractf128_ps(v, 1);
-    let s = _mm_add_ps(lo, hi);
-    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
-    let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
-    _mm_cvtss_f32(s)
+    // SAFETY: ISA availability is this fn's contract (see `# Safety`).
+    unsafe {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps(v, 1);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+        _mm_cvtss_f32(s)
+    }
 }
 
 /// ⟨a, b⟩ over `d` elements.
+///
+/// # Safety
+/// `a` and `b` must be valid for `d` f32 reads, and AVX2+FMA must be
+/// available (callers are `#[target_feature]` wrappers over
+/// length-checked slices).
 #[inline(always)]
 unsafe fn dot_body(a: *const f32, b: *const f32, d: usize) -> f32 {
-    let mut acc = _mm256_setzero_ps();
-    let mut k = 0usize;
-    while k + 8 <= d {
-        acc = _mm256_fmadd_ps(_mm256_loadu_ps(a.add(k)), _mm256_loadu_ps(b.add(k)), acc);
-        k += 8;
+    // SAFETY: pointer validity for `d` reads and ISA availability are this
+    // fn's contract (see `# Safety`).
+    unsafe {
+        let mut acc = _mm256_setzero_ps();
+        let mut k = 0usize;
+        while k + 8 <= d {
+            acc = _mm256_fmadd_ps(_mm256_loadu_ps(a.add(k)), _mm256_loadu_ps(b.add(k)), acc);
+            k += 8;
+        }
+        let mut s = hsum(acc);
+        while k < d {
+            s += *a.add(k) * *b.add(k);
+            k += 1;
+        }
+        s
     }
-    let mut s = hsum(acc);
-    while k < d {
-        s += *a.add(k) * *b.add(k);
-        k += 1;
-    }
-    s
 }
 
 /// One SGD step (paper Eq. 3) over rows of length `d`; the simultaneous
 /// previous-value assignment of the scalar reference is preserved (both new
 /// rows are computed from loads made before either store).
+///
+/// # Safety
+/// `mu` and `nv` must be valid for `d` f32 reads and writes, and AVX2+FMA
+/// must be available.
 #[inline(always)]
 unsafe fn sgd_body(mu: *mut f32, nv: *mut f32, r: f32, h: &Hyper, d: usize) {
-    let e = r - dot_body(mu, nv, d);
-    let ee = h.eta * e;
-    let shrink = 1.0 - h.eta * h.lam;
-    let vee = _mm256_set1_ps(ee);
-    let vsh = _mm256_set1_ps(shrink);
-    let mut k = 0usize;
-    while k + 8 <= d {
-        let m = _mm256_loadu_ps(mu.add(k));
-        let n = _mm256_loadu_ps(nv.add(k));
-        _mm256_storeu_ps(mu.add(k), _mm256_fmadd_ps(m, vsh, _mm256_mul_ps(vee, n)));
-        _mm256_storeu_ps(nv.add(k), _mm256_fmadd_ps(n, vsh, _mm256_mul_ps(vee, m)));
-        k += 8;
-    }
-    while k < d {
-        let mk = *mu.add(k);
-        let nk = *nv.add(k);
-        *mu.add(k) = mk * shrink + ee * nk;
-        *nv.add(k) = nk * shrink + ee * mk;
-        k += 1;
+    // SAFETY: pointer validity for `d` reads/writes and ISA availability
+    // are this fn's contract (see `# Safety`).
+    unsafe {
+        let e = r - dot_body(mu, nv, d);
+        let ee = h.eta * e;
+        let shrink = 1.0 - h.eta * h.lam;
+        let vee = _mm256_set1_ps(ee);
+        let vsh = _mm256_set1_ps(shrink);
+        let mut k = 0usize;
+        while k + 8 <= d {
+            let m = _mm256_loadu_ps(mu.add(k));
+            let n = _mm256_loadu_ps(nv.add(k));
+            _mm256_storeu_ps(mu.add(k), _mm256_fmadd_ps(m, vsh, _mm256_mul_ps(vee, n)));
+            _mm256_storeu_ps(nv.add(k), _mm256_fmadd_ps(n, vsh, _mm256_mul_ps(vee, m)));
+            k += 8;
+        }
+        while k < d {
+            let mk = *mu.add(k);
+            let nk = *nv.add(k);
+            *mu.add(k) = mk * shrink + ee * nk;
+            *nv.add(k) = nk * shrink + ee * mk;
+            k += 1;
+        }
     }
 }
 
@@ -103,6 +128,10 @@ unsafe fn sgd_body(mu: *mut f32, nv: *mut f32, r: f32, h: &Hyper, d: usize) {
 /// the error at the look-ahead point; pass 2 recomputes the look-ahead in
 /// registers (cheaper than spilling stack tiles) and applies the momentum
 /// and position updates.
+///
+/// # Safety
+/// All four pointers must be valid for `d` f32 reads and writes, and
+/// AVX2+FMA must be available.
 #[inline(always)]
 unsafe fn nag_body(
     mu: *mut f32,
@@ -113,55 +142,61 @@ unsafe fn nag_body(
     h: &Hyper,
     d: usize,
 ) {
-    let g = h.gamma;
-    let vg = _mm256_set1_ps(g);
-    let mut acc = _mm256_setzero_ps();
-    let mut k = 0usize;
-    while k + 8 <= d {
-        let mh = _mm256_fmadd_ps(vg, _mm256_loadu_ps(phiu.add(k)), _mm256_loadu_ps(mu.add(k)));
-        let nh = _mm256_fmadd_ps(vg, _mm256_loadu_ps(psiv.add(k)), _mm256_loadu_ps(nv.add(k)));
-        acc = _mm256_fmadd_ps(mh, nh, acc);
-        k += 8;
-    }
-    let mut dot = hsum(acc);
-    while k < d {
-        dot += (*mu.add(k) + g * *phiu.add(k)) * (*nv.add(k) + g * *psiv.add(k));
-        k += 1;
-    }
-    let e = r - dot;
-    let ee = h.eta * e;
-    let el = h.eta * h.lam;
-    let vee = _mm256_set1_ps(ee);
-    let vel = _mm256_set1_ps(el);
-    let mut k = 0usize;
-    while k + 8 <= d {
-        let m = _mm256_loadu_ps(mu.add(k));
-        let n = _mm256_loadu_ps(nv.add(k));
-        let p = _mm256_loadu_ps(phiu.add(k));
-        let q = _mm256_loadu_ps(psiv.add(k));
-        let mh = _mm256_fmadd_ps(vg, p, m);
-        let nh = _mm256_fmadd_ps(vg, q, n);
-        // p' = γφ + ee·n̂ − el·m̂  (fnmadd(a, b, c) = c − a·b)
-        let p2 = _mm256_fnmadd_ps(vel, mh, _mm256_fmadd_ps(vee, nh, _mm256_mul_ps(vg, p)));
-        let q2 = _mm256_fnmadd_ps(vel, nh, _mm256_fmadd_ps(vee, mh, _mm256_mul_ps(vg, q)));
-        _mm256_storeu_ps(phiu.add(k), p2);
-        _mm256_storeu_ps(psiv.add(k), q2);
-        _mm256_storeu_ps(mu.add(k), _mm256_add_ps(m, p2));
-        _mm256_storeu_ps(nv.add(k), _mm256_add_ps(n, q2));
-        k += 8;
-    }
-    while k < d {
-        let (m, n) = (*mu.add(k), *nv.add(k));
-        let (p, q) = (*phiu.add(k), *psiv.add(k));
-        let mh = m + g * p;
-        let nh = n + g * q;
-        let p2 = g * p + ee * nh - el * mh;
-        let q2 = g * q + ee * mh - el * nh;
-        *phiu.add(k) = p2;
-        *psiv.add(k) = q2;
-        *mu.add(k) = m + p2;
-        *nv.add(k) = n + q2;
-        k += 1;
+    // SAFETY: pointer validity for `d` reads/writes and ISA availability
+    // are this fn's contract (see `# Safety`).
+    unsafe {
+        let g = h.gamma;
+        let vg = _mm256_set1_ps(g);
+        let mut acc = _mm256_setzero_ps();
+        let mut k = 0usize;
+        while k + 8 <= d {
+            let mh =
+                _mm256_fmadd_ps(vg, _mm256_loadu_ps(phiu.add(k)), _mm256_loadu_ps(mu.add(k)));
+            let nh =
+                _mm256_fmadd_ps(vg, _mm256_loadu_ps(psiv.add(k)), _mm256_loadu_ps(nv.add(k)));
+            acc = _mm256_fmadd_ps(mh, nh, acc);
+            k += 8;
+        }
+        let mut dot = hsum(acc);
+        while k < d {
+            dot += (*mu.add(k) + g * *phiu.add(k)) * (*nv.add(k) + g * *psiv.add(k));
+            k += 1;
+        }
+        let e = r - dot;
+        let ee = h.eta * e;
+        let el = h.eta * h.lam;
+        let vee = _mm256_set1_ps(ee);
+        let vel = _mm256_set1_ps(el);
+        let mut k = 0usize;
+        while k + 8 <= d {
+            let m = _mm256_loadu_ps(mu.add(k));
+            let n = _mm256_loadu_ps(nv.add(k));
+            let p = _mm256_loadu_ps(phiu.add(k));
+            let q = _mm256_loadu_ps(psiv.add(k));
+            let mh = _mm256_fmadd_ps(vg, p, m);
+            let nh = _mm256_fmadd_ps(vg, q, n);
+            // p' = γφ + ee·n̂ − el·m̂  (fnmadd(a, b, c) = c − a·b)
+            let p2 = _mm256_fnmadd_ps(vel, mh, _mm256_fmadd_ps(vee, nh, _mm256_mul_ps(vg, p)));
+            let q2 = _mm256_fnmadd_ps(vel, nh, _mm256_fmadd_ps(vee, mh, _mm256_mul_ps(vg, q)));
+            _mm256_storeu_ps(phiu.add(k), p2);
+            _mm256_storeu_ps(psiv.add(k), q2);
+            _mm256_storeu_ps(mu.add(k), _mm256_add_ps(m, p2));
+            _mm256_storeu_ps(nv.add(k), _mm256_add_ps(n, q2));
+            k += 8;
+        }
+        while k < d {
+            let (m, n) = (*mu.add(k), *nv.add(k));
+            let (p, q) = (*phiu.add(k), *psiv.add(k));
+            let mh = m + g * p;
+            let nh = n + g * q;
+            let p2 = g * p + ee * nh - el * mh;
+            let q2 = g * q + ee * mh - el * nh;
+            *phiu.add(k) = p2;
+            *psiv.add(k) = q2;
+            *mu.add(k) = m + p2;
+            *nv.add(k) = n + q2;
+            k += 1;
+        }
     }
 }
 
@@ -171,16 +206,27 @@ macro_rules! avx2_rank {
         pub(super) mod $modname {
             use super::*;
 
+            /// # Safety
+            /// Caller must have verified avx2+fma and pass slices of
+            /// length `$D` (the safe wrappers below assert both).
             #[target_feature(enable = "avx2,fma")]
             unsafe fn dot_tf(a: &[f32], b: &[f32]) -> f32 {
-                dot_body(a.as_ptr(), b.as_ptr(), $D)
+                // SAFETY: target_feature meets the ISA contract; the fn
+                // contract guarantees `$D` elements behind both slices.
+                unsafe { dot_body(a.as_ptr(), b.as_ptr(), $D) }
             }
 
+            /// # Safety
+            /// As in `dot_tf`.
             #[target_feature(enable = "avx2,fma")]
             unsafe fn sgd_tf(mu: &mut [f32], nv: &mut [f32], r: f32, h: &Hyper) {
-                sgd_body(mu.as_mut_ptr(), nv.as_mut_ptr(), r, h, $D)
+                // SAFETY: as in `dot_tf`; mutable slices give exclusive
+                // write access for `$D` elements.
+                unsafe { sgd_body(mu.as_mut_ptr(), nv.as_mut_ptr(), r, h, $D) }
             }
 
+            /// # Safety
+            /// As in `dot_tf`.
             #[target_feature(enable = "avx2,fma")]
             unsafe fn nag_tf(
                 mu: &mut [f32],
@@ -190,15 +236,18 @@ macro_rules! avx2_rank {
                 r: f32,
                 h: &Hyper,
             ) {
-                nag_body(
-                    mu.as_mut_ptr(),
-                    nv.as_mut_ptr(),
-                    phiu.as_mut_ptr(),
-                    psiv.as_mut_ptr(),
-                    r,
-                    h,
-                    $D,
-                )
+                // SAFETY: as in `sgd_tf`, for all four rows.
+                unsafe {
+                    nag_body(
+                        mu.as_mut_ptr(),
+                        nv.as_mut_ptr(),
+                        phiu.as_mut_ptr(),
+                        psiv.as_mut_ptr(),
+                        r,
+                        h,
+                        $D,
+                    )
+                }
             }
 
             pub(in super::super) fn dot(a: &[f32], b: &[f32]) -> f32 {
@@ -243,16 +292,26 @@ avx2_rank!(d128, 128);
 pub(super) mod generic {
     use super::*;
 
+    /// # Safety
+    /// Caller must have verified avx2+fma and pass slices holding at least
+    /// `d` elements (the safe wrappers below check both).
     #[target_feature(enable = "avx2,fma")]
     unsafe fn dot_tf(a: &[f32], b: &[f32], d: usize) -> f32 {
-        dot_body(a.as_ptr(), b.as_ptr(), d)
+        // SAFETY: target_feature meets the ISA contract; the fn contract
+        // guarantees `d` elements behind both slices.
+        unsafe { dot_body(a.as_ptr(), b.as_ptr(), d) }
     }
 
+    /// # Safety
+    /// As in `dot_tf`.
     #[target_feature(enable = "avx2,fma")]
     unsafe fn sgd_tf(mu: &mut [f32], nv: &mut [f32], r: f32, h: &Hyper, d: usize) {
-        sgd_body(mu.as_mut_ptr(), nv.as_mut_ptr(), r, h, d)
+        // SAFETY: as in `dot_tf`; mutable slices give exclusive writes.
+        unsafe { sgd_body(mu.as_mut_ptr(), nv.as_mut_ptr(), r, h, d) }
     }
 
+    /// # Safety
+    /// As in `dot_tf`.
     #[target_feature(enable = "avx2,fma")]
     #[allow(clippy::too_many_arguments)]
     unsafe fn nag_tf(
@@ -264,15 +323,18 @@ pub(super) mod generic {
         h: &Hyper,
         d: usize,
     ) {
-        nag_body(
-            mu.as_mut_ptr(),
-            nv.as_mut_ptr(),
-            phiu.as_mut_ptr(),
-            psiv.as_mut_ptr(),
-            r,
-            h,
-            d,
-        )
+        // SAFETY: as in `sgd_tf`, for all four rows.
+        unsafe {
+            nag_body(
+                mu.as_mut_ptr(),
+                nv.as_mut_ptr(),
+                phiu.as_mut_ptr(),
+                psiv.as_mut_ptr(),
+                r,
+                h,
+                d,
+            )
+        }
     }
 
     pub(in super::super) fn dot(a: &[f32], b: &[f32]) -> f32 {

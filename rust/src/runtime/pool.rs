@@ -318,12 +318,13 @@ mod tests {
     fn pool_is_reusable_across_epochs() {
         let pool = WorkerPool::new(4);
         let total = AtomicU64::new(0);
-        for _ in 0..50 {
+        let epochs = crate::testutil::budget(50, 5) as u64;
+        for _ in 0..epochs {
             pool.run(|t| {
                 total.fetch_add(t as u64 + 1, Ordering::Relaxed);
             });
         }
-        assert_eq!(total.load(Ordering::Relaxed), 50 * (1 + 2 + 3 + 4));
+        assert_eq!(total.load(Ordering::Relaxed), epochs * (1 + 2 + 3 + 4));
     }
 
     #[test]
@@ -351,7 +352,9 @@ mod tests {
         fn workload(epoch: u64, t: usize) -> Vec<f32> {
             let mut rng = Rng::new(0xBEEF).fork(epoch).fork(t as u64);
             let mut xs: Vec<f32> = (0..64).map(|_| rng.f32_range(0.1, 0.9)).collect();
-            for _ in 0..100 {
+            // Same budget on the scope and pool sides — results stay
+            // comparable whichever mode picked it.
+            for _ in 0..crate::testutil::budget(100, 10) {
                 for k in 0..xs.len() {
                     xs[k] = 3.7 * xs[k] * (1.0 - xs[k]);
                 }

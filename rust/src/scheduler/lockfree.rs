@@ -287,12 +287,13 @@ mod tests {
     fn acquire_release_cycles() {
         let s = LockFreeScheduler::new(4);
         let mut rng = Rng::new(1);
-        for _ in 0..1000 {
+        let iters = crate::testutil::budget(1000, 100);
+        for _ in 0..iters {
             let c = s.acquire(&mut rng).expect("empty grid must yield a claim");
             s.release(c);
         }
         let total: u64 = s.update_counts().iter().sum();
-        assert_eq!(total, 1000);
+        assert_eq!(total, iters as u64);
     }
 
     #[test]
@@ -308,7 +309,7 @@ mod tests {
     #[test]
     fn no_lost_releases_under_concurrency() {
         let s = Arc::new(LockFreeScheduler::new(8));
-        let per_thread = 5000u64;
+        let per_thread = crate::testutil::budget(5000, 40) as u64;
         std::thread::scope(|scope| {
             for t in 0..8u64 {
                 let s = Arc::clone(&s);
@@ -431,7 +432,7 @@ mod tests {
     fn work_aware_concurrent_stress() {
         let work: Vec<u64> = (0..81).map(|b| 1 + (b as u64 * 37) % 500).collect();
         let s = Arc::new(LockFreeScheduler::work_aware(9, &work));
-        let per_thread = 2000u64;
+        let per_thread = crate::testutil::budget(2000, 25) as u64;
         std::thread::scope(|scope| {
             for t in 0..8u64 {
                 let s = Arc::clone(&s);

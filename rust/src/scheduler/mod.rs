@@ -177,7 +177,7 @@ mod tests {
                     let violations = Arc::clone(&violations);
                     scope.spawn(move || {
                         let mut rng = Rng::new(100 + t);
-                        for _ in 0..2000 {
+                        for _ in 0..crate::testutil::budget(2000, 25) {
                             if let Some(c) = s.acquire(&mut rng) {
                                 if row_owned[c.i].swap(true, Ordering::SeqCst) {
                                     violations.fetch_add(1, Ordering::SeqCst);
@@ -292,7 +292,7 @@ mod tests {
                     let work = &work;
                     scope.spawn(move || {
                         let mut rng = Rng::new(900 + t);
-                        for _ in 0..1500 {
+                        for _ in 0..crate::testutil::budget(1500, 25) {
                             match s.acquire(&mut rng) {
                                 Some(c) => {
                                     let n = work[c.i * nb + c.j];
@@ -353,7 +353,7 @@ mod tests {
     fn property_claims_form_partial_permutation() {
         crate::proptest_lite::check(
             "simultaneous claims are a partial permutation matrix",
-            64,
+            crate::testutil::budget(64, 8) as u32,
             |g| (g.usize_in(1, 12), g.u64(1 << 40)),
             |&(nb, seed)| {
                 for (_, s) in schedulers(nb) {

@@ -530,7 +530,7 @@ mod tests {
     fn property_block_csr_preserves_instances() {
         crate::proptest_lite::check(
             "finalize preserves the multiset of instances",
-            64,
+            crate::testutil::budget(64, 12) as u32,
             |g| {
                 let span = g.usize_in(1, 20) as u32;
                 let n = g.usize_in(0, 80);

@@ -1,0 +1,58 @@
+//! Shared helpers for tests that must also run under Miri and TSan.
+//!
+//! Miri interprets MIR roughly three orders of magnitude slower than a
+//! native build, so the concurrency tests scale their iteration counts down
+//! when interpreted. Detection is twofold: `cfg!(miri)` for real Miri runs,
+//! plus the `A2PSGD_MIRI=1` environment variable so the shortened schedules
+//! can be exercised (and debugged) on a native build too — CI's Miri lane
+//! sets both. The stress harness (`tests/stress_interleave.rs`) layers
+//! `A2PSGD_STRESS_ITERS` on top for soak runs.
+
+/// True when running under Miri or with `A2PSGD_MIRI=1` set.
+pub fn miri_mode() -> bool {
+    cfg!(miri) || std::env::var("A2PSGD_MIRI").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Pick an iteration budget: `full` natively, `short` under Miri (or the
+/// `A2PSGD_MIRI=1` rehearsal mode).
+pub fn budget(full: usize, short: usize) -> usize {
+    if miri_mode() {
+        short
+    } else {
+        full
+    }
+}
+
+/// Stress-loop iteration count: an explicit `A2PSGD_STRESS_ITERS` wins,
+/// then the Miri `short` cap, then the native default.
+pub fn stress_iters(full: usize, short: usize) -> usize {
+    if let Ok(v) = std::env::var("A2PSGD_STRESS_ITERS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    budget(full, short)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_respects_mode() {
+        if miri_mode() {
+            assert_eq!(budget(10_000, 50), 50);
+        } else {
+            assert_eq!(budget(10_000, 50), 10_000);
+        }
+    }
+
+    #[test]
+    fn stress_iters_falls_back_to_budget() {
+        // Not setting the env var here (process-global); just pin the
+        // fallback path equivalence.
+        if std::env::var("A2PSGD_STRESS_ITERS").is_err() {
+            assert_eq!(stress_iters(123, 7), budget(123, 7));
+        }
+    }
+}
