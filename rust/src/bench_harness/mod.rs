@@ -152,12 +152,14 @@ impl Table {
     }
 }
 
-/// Write a CSV file under `results/`, creating the directory.
+/// Write a CSV file under `results/`, creating the directory. Atomic so a
+/// crash mid-write never leaves a torn artifact behind.
 pub fn write_results_csv(filename: &str, contents: &str) -> std::io::Result<std::path::PathBuf> {
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results");
     std::fs::create_dir_all(&dir)?;
     let path = dir.join(filename);
-    std::fs::write(&path, contents)?;
+    crate::data::atomic_file::write_atomic(&path, contents.as_bytes())
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::Other, format!("{e:#}")))?;
     Ok(path)
 }
 

@@ -25,6 +25,13 @@
 //!    `.sub(`, `from_raw_parts`) is confined to the SIMD kernels
 //!    (`optim/kernel/`) and the mmap binding (`data/mmap.rs`), plus
 //!    `[ptr_arith]` allowlist entries.
+//! 7. **durable-write** — raw `fs::write(` / `File::create(` outside the
+//!    atomic writer (`data/atomic_file.rs`) needs a `[durable_write]`
+//!    entry: a bare write torn by a crash silently corrupts artifacts, so
+//!    durable outputs must go through `write_atomic` (tmp + fsync +
+//!    rename). Only scratch files rebuilt from source every run belong on
+//!    the allowlist. Code at or below the file's `#[cfg(test)]` module is
+//!    exempt (test modules sit at the bottom of each file by convention).
 //!
 //! Allowlist entries are *exact*: a stale entry (file no longer contains
 //! the pattern) fails the lint too, so the file stays an honest inventory.
@@ -54,11 +61,16 @@ const FENCE_ALLOWED: &[&str] =
 /// bodies, the mmap binding). Everything else needs a `[ptr_arith]` entry.
 const PTR_ARITH_BUILTIN: &[&str] = &["src/optim/kernel/", "src/data/mmap.rs"];
 
+/// The one place raw durable writes are the point: the atomic writer
+/// itself. Everything else needs a `[durable_write]` entry.
+const DURABLE_BUILTIN: &[&str] = &["src/data/atomic_file.rs"];
+
 /// One allowlisted rule: file → justification.
 type FileAllow = BTreeMap<String, String>;
 
 /// The allowlist section names `lint_allow.toml` may contain.
-const ALLOW_SECTIONS: &[&str] = &["relaxed", "static_mut", "transmute", "ptr_arith"];
+const ALLOW_SECTIONS: &[&str] =
+    &["relaxed", "static_mut", "transmute", "ptr_arith", "durable_write"];
 
 /// Parsed `lint_allow.toml`: section name → (file → justification). Kept
 /// string-keyed (not struct fields) so the lint's own source never contains
@@ -255,8 +267,22 @@ fn scan_file(
         violations.push(Violation { path: rel.to_string(), line, rule, message });
     };
 
+    // Once the file's `#[cfg(test)] mod …` starts, the durable-write rule
+    // stops: tests write scratch files freely. Test modules sit at the
+    // bottom of each file by convention, so a single sticky flag suffices.
+    // A `#[cfg(test)]` on a lone item (helper fn) does not trip it — only
+    // an attribute whose following item is a `mod`.
+    let mut in_tests = false;
+
     for (idx, (code, _comment)) in lines.iter().enumerate() {
         let lineno = idx + 1;
+        if !in_tests && code.contains("#[cfg(test)]") {
+            let next = lines.get(idx + 1).map(|(c, _)| c.trim_start()).unwrap_or("");
+            if contains_word(code, "mod") || next.starts_with("mod ") || next.starts_with("pub mod ")
+            {
+                in_tests = true;
+            }
+        }
 
         // Rule 1: SAFETY justification near every `unsafe`.
         if contains_word(code, "unsafe") && !has_safety_nearby(&lines, idx) {
@@ -325,6 +351,29 @@ fn scan_file(
                          add a justified [ptr_arith] entry or use slice indexing"
                     ),
                 );
+            }
+        }
+
+        // Rule 7: durable writes go through the atomic writer.
+        if !in_tests {
+            let durable_pattern =
+                ["fs::write(", "File::create("].iter().find(|p| code.contains(**p));
+            if let Some(p) = durable_pattern {
+                let builtin = DURABLE_BUILTIN.iter().any(|pre| rel.starts_with(pre));
+                if !builtin {
+                    used.entry("durable_write").or_default().insert(rel.to_string());
+                }
+                if !builtin && !allow.contains("durable_write", rel) {
+                    report(
+                        lineno,
+                        "durable-write",
+                        format!(
+                            "raw durable write (`{p}`) outside data/atomic_file.rs — route it \
+                             through write_atomic, or add a justified [durable_write] entry if \
+                             it is genuinely scratch"
+                        ),
+                    );
+                }
             }
         }
     }
@@ -687,6 +736,31 @@ mod tests {
         let text = "let n = c.fetch_add(1, Ordering::SeqCst);\nlet m = x.saturating_sub(2);\n\
                     let w = y.wrapping_add(3);\n";
         assert!(scan("src/engine/mod.rs", text, &allow).is_empty());
+    }
+
+    #[test]
+    fn durable_write_confined_and_allowlistable() {
+        let text = "std::fs::write(&path, bytes)?;\n";
+        let mut allow = Allowlist::default();
+        assert!(scan("src/data/atomic_file.rs", text, &allow).is_empty(), "writer itself exempt");
+        let v = scan("src/data/loader.rs", text, &allow);
+        assert!(v.iter().any(|v| v.rule == "durable-write"), "{v:?}");
+        let v = scan("src/x.rs", "let f = std::fs::File::create(&p)?;\n", &allow);
+        assert!(v.iter().any(|v| v.rule == "durable-write"), "{v:?}");
+        allow.insert("durable_write", "src/data/loader.rs", "scratch rebuilt every run");
+        assert!(scan("src/data/loader.rs", text, &allow).is_empty());
+    }
+
+    #[test]
+    fn durable_write_exempt_in_test_module() {
+        let allow = Allowlist::default();
+        let text = "fn f() {}\n#[cfg(test)]\nmod tests {\n    fn g() { \
+                    std::fs::write(&p, b\"x\").unwrap(); }\n}\n";
+        assert!(scan("src/x.rs", text, &allow).is_empty(), "test-module writes are scratch");
+        // A cfg(test) on a lone helper fn must NOT exempt later real code.
+        let text = "#[cfg(test)]\nfn helper() {}\nfn f() { std::fs::write(&p, b).unwrap(); }\n";
+        let v = scan("src/x.rs", text, &allow);
+        assert!(v.iter().any(|v| v.rule == "durable-write"), "{v:?}");
     }
 
     #[test]

@@ -162,6 +162,26 @@ COMMON FLAGS:
   --artifacts DIR  AOT artifacts (default: artifacts/)
   --no-early-stop  run all epochs
 
+FAULT-TOLERANCE FLAGS (train):
+  --checkpoint-every N   write a crash-safe checkpoint (atomic tmp + fsync +
+                         rename, previous kept as <path>.prev) every N
+                         epochs to --checkpoint PATH (default PATH:
+                         <out>/checkpoint.a2pf)
+  --checkpoint PATH      checkpoint file for --checkpoint-every
+  --resume PATH          continue a run from a checkpoint (torn primaries
+                         fall back to <path>.prev); block engines resume
+                         bit-identically at --threads 1
+  --on-shard-error fail|skip|retry   policy when a shard stays unreadable
+                         mid-run (out-of-core path): fail aborts (default),
+                         skip quarantines the shard and trains on the
+                         survivors (degraded coverage is reported), retry
+                         spends a deeper retry budget then fails
+  --epoch-retries N      worker-panic containment: retry a poisoned epoch
+                         from its boundary snapshot up to N times (2)
+  --faults SPEC          arm deterministic fault injection, e.g.
+                         \"shard.read=nth:3;checkpoint.write=once\" — see
+                         A2PSGD_FAULTS / `[fault]` in --config
+
 OBSERVABILITY FLAGS (train / stream / serve / bench):
   --metrics-json PATH  enable hot-path metrics and write a JSON snapshot
                        (counters, gauges, log2-bucketed latency histograms

@@ -433,6 +433,50 @@ impl ObsConfig {
     }
 }
 
+/// `[fault]` section: deterministic fault injection (see [`crate::fault`]).
+/// Defaults to no faults; the CLI `--faults` flag overrides the file, and
+/// the `A2PSGD_FAULTS` env var is layered on top of both by
+/// [`FaultConfig::install`].
+///
+/// ```toml
+/// [fault]
+/// spec = "shard.read=nth:3;checkpoint.write=once"
+/// ```
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultConfig {
+    /// Failpoint schedule spec (`point=mode[:arg[:seed]]`, `;`-separated).
+    pub spec: Option<String>,
+}
+
+impl FaultConfig {
+    /// Apply `[fault]` overrides from TOML-subset text.
+    pub fn apply_toml(mut self, text: &str) -> Result<Self> {
+        let doc = parse(text)?;
+        if let Some(v) = doc.get("fault", "spec") {
+            self.spec = Some(v.as_str().context("fault.spec must be a string")?.to_string());
+        }
+        Ok(self)
+    }
+
+    /// Fold the CLI `--faults` flag over the config; the flag wins.
+    pub fn apply_cli(mut self, spec: Option<&str>) -> Self {
+        if let Some(s) = spec {
+            self.spec = Some(s.to_string());
+        }
+        self
+    }
+
+    /// Arm the global failpoints: the resolved spec first, then any
+    /// `A2PSGD_FAULTS` schedules on top (env entries override per point).
+    pub fn install(&self) -> Result<()> {
+        if let Some(s) = &self.spec {
+            crate::fault::arm(s)?;
+        }
+        crate::fault::arm_env()?;
+        Ok(())
+    }
+}
+
 /// Apply `[stream]` (and `[hyper]`) overrides from a TOML-subset file onto a
 /// base [`StreamConfig`] (usually [`StreamConfig::preset`]).
 ///
@@ -703,6 +747,22 @@ gamma = 0.8
         let oc = ObsConfig::default().apply_cli(Some("m.json"), None);
         assert!(oc.metrics && !oc.trace);
         assert_eq!(oc.metrics_json.as_deref(), Some("m.json"));
+    }
+
+    #[test]
+    fn fault_config_parses_spec_and_cli_wins() {
+        let fc = FaultConfig::default();
+        assert!(fc.spec.is_none());
+        let fc = FaultConfig::default()
+            .apply_toml("[fault]\nspec = \"shard.read=once\"\n")
+            .unwrap();
+        assert_eq!(fc.spec.as_deref(), Some("shard.read=once"));
+        let fc = fc.apply_cli(Some("pool.worker=nth:2"));
+        assert_eq!(fc.spec.as_deref(), Some("pool.worker=nth:2"));
+        assert!(FaultConfig::default().apply_toml("[fault]\nspec = 3\n").is_err());
+        // Other sections are ignored.
+        let fc = FaultConfig::default().apply_toml("[obs]\nmetrics = true\n").unwrap();
+        assert!(fc.spec.is_none());
     }
 
     #[test]

@@ -139,7 +139,7 @@ pub fn write_convergence_csv(dir: &Path, dataset: &str, cells: &[StudyCell]) -> 
             dataset.replace('/', "_"),
             c.engine.to_string().to_lowercase().replace('!', "")
         ));
-        std::fs::write(&path, c.representative.history.to_csv())
+        crate::data::atomic_file::write_atomic(&path, c.representative.history.to_csv().as_bytes())
             .with_context(|| format!("writing {}", path.display()))?;
     }
     Ok(())

@@ -1,0 +1,184 @@
+//! Crash-safe durable writes: tmp + fsync + rename, one helper for every
+//! artifact.
+//!
+//! A plain `File::create` + `write_all` of a checkpoint, shard, manifest,
+//! or bench artifact has a torn-write window: a crash (or full disk) midway
+//! leaves a half-written file *at the final path*, silently corrupting the
+//! previous good copy. [`write_atomic`] closes the window with the classic
+//! protocol:
+//!
+//! 1. write the full payload to a unique hidden temp sibling
+//!    (`.<name>.tmp.<pid>.<seq>` — same directory, so the rename below is
+//!    not cross-device),
+//! 2. `fsync` the temp file (data durable before it becomes visible),
+//! 3. `rename(2)` over the final path (atomic replace on POSIX),
+//! 4. best-effort `fsync` of the parent directory (the rename itself
+//!    durable).
+//!
+//! A crash at any step leaves either the old file or the new file at the
+//! final path — never a mixture. Orphaned temp files from a crashed writer
+//! are garbage, not corruption; their hidden unique names mean a rerun
+//! never reads or collides with them.
+//!
+//! Every durable-artifact write in the crate routes through here —
+//! enforced by the `durable_write` rule in `a2ps_lint`, which flags
+//! `File::create`/`fs::write` outside this module (allowlisted sites in
+//! `rust/lint_allow.toml` are scratch files, not artifacts).
+//!
+//! [`write_atomic_with_failpoint`] is the fault-injection seam: armed via
+//! [`crate::fault`], it simulates the crash *inside* the protocol —
+//! flushing half the payload to the temp file and erroring out — so tests
+//! can assert the previous file survives a torn write bit-for-bit.
+
+use crate::fault::FailPoint;
+use crate::Result;
+use anyhow::Context;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Per-process uniquifier so concurrent writers to the same path never
+/// share a temp file.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn tmp_sibling(path: &Path) -> PathBuf {
+    let name = path
+        .file_name()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "artifact".to_string());
+    let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    path.with_file_name(format!(".{name}.tmp.{}.{seq}", std::process::id()))
+}
+
+/// Durably replace `path` with `bytes` via tmp + fsync + rename (see the
+/// module docs). On error the final path is untouched.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    write_atomic_with_failpoint(path, bytes, None)
+}
+
+/// [`write_atomic`] with an optional failpoint checked mid-protocol: when
+/// the armed schedule fires, half the payload is flushed to the temp file
+/// and the write errors out — the on-disk state a real crash would leave
+/// (torn temp, previous final file intact).
+pub fn write_atomic_with_failpoint(
+    path: &Path,
+    bytes: &[u8],
+    failpoint: Option<FailPoint>,
+) -> Result<()> {
+    let tmp = tmp_sibling(path);
+    let mut file = std::fs::File::create(&tmp)
+        .with_context(|| format!("creating temp file {}", tmp.display()))?;
+    if let Some(p) = failpoint {
+        if crate::fault::should_fail(p) {
+            let torn = bytes.len() / 2;
+            let _ = file.write_all(&bytes[..torn]);
+            let _ = file.sync_all();
+            anyhow::bail!(
+                "injected fault: {} (simulated crash after {torn} of {} bytes, torn temp at {})",
+                p.name(),
+                bytes.len(),
+                tmp.display()
+            );
+        }
+    }
+    let res = (|| -> Result<()> {
+        file.write_all(bytes).with_context(|| format!("writing {}", tmp.display()))?;
+        file.sync_all().with_context(|| format!("fsync {}", tmp.display()))?;
+        drop(file);
+        std::fs::rename(&tmp, path).with_context(|| {
+            format!("renaming {} over {}", tmp.display(), path.display())
+        })?;
+        Ok(())
+    })();
+    if res.is_err() {
+        // Failed before the rename: the temp is garbage, the final path is
+        // untouched. Clean up best-effort.
+        let _ = std::fs::remove_file(&tmp);
+        return res;
+    }
+    // Make the rename itself durable. Best-effort: some filesystems refuse
+    // directory fsync, and the data is already safe at the final path.
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+    }
+    Ok(())
+}
+
+// Success-path tests only: the torn-write (failpoint) path arms
+// process-global fault state, so its regression test lives in
+// `tests/fault_soak.rs` behind that suite's serializing mutex.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("a2psgd_atomic_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn writes_and_overwrites() {
+        let d = tmpdir("rt");
+        let p = d.join("artifact.bin");
+        write_atomic(&p, b"first").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"first");
+        write_atomic(&p, b"second, longer payload").unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), b"second, longer payload");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn leaves_no_temp_files_behind() {
+        let d = tmpdir("clean");
+        let p = d.join("artifact.bin");
+        for i in 0..4u32 {
+            write_atomic(&p, &i.to_le_bytes()).unwrap();
+        }
+        let names: Vec<String> = std::fs::read_dir(&d)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["artifact.bin".to_string()], "leftovers: {names:?}");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn error_leaves_previous_file_intact() {
+        let d = tmpdir("err");
+        let p = d.join("artifact.bin");
+        write_atomic(&p, b"good").unwrap();
+        // A directory where the final file should go makes the rename fail.
+        let clobber = d.join("blocked");
+        std::fs::create_dir_all(&clobber).unwrap();
+        assert!(write_atomic(&clobber, b"overwrite-a-directory").is_err());
+        assert_eq!(std::fs::read(&p).unwrap(), b"good");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn concurrent_writers_to_same_path_stay_whole() {
+        let d = tmpdir("conc");
+        let p = d.join("artifact.bin");
+        std::thread::scope(|s| {
+            for t in 0..4u8 {
+                let p = p.clone();
+                s.spawn(move || {
+                    let payload = vec![t; 1024];
+                    for _ in 0..crate::testutil::budget(25, 3) {
+                        write_atomic(&p, &payload).unwrap();
+                    }
+                });
+            }
+        });
+        // Whoever won, the file is one writer's payload, never a mixture.
+        let got = std::fs::read(&p).unwrap();
+        assert_eq!(got.len(), 1024);
+        assert!(got.iter().all(|&b| b == got[0]), "mixed payload");
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

@@ -160,8 +160,11 @@ impl IdMap {
     }
 
     /// Write the map next to a dataset (see [`idmap_path_for`]).
+    ///
+    /// Atomic (tmp + fsync + rename): a crash mid-save leaves the previous
+    /// map intact instead of a truncated file that poisons every later run.
     pub fn save(&self, path: &Path) -> Result<()> {
-        std::fs::write(path, self.to_text())
+        crate::data::atomic_file::write_atomic(path, self.to_text().as_bytes())
             .with_context(|| format!("writing idmap {}", path.display()))
     }
 

@@ -73,24 +73,31 @@ impl Mmap {
             if len == 0 {
                 return Ok(Mmap { backing: Backing::Owned(Vec::new()) });
             }
-            // SAFETY: read-only private mapping of an open fd over the
-            // file's current length; POSIX keeps the mapping valid after
-            // the fd closes. Failure is checked below.
-            let ptr = unsafe {
-                sys::mmap(
-                    std::ptr::null_mut(),
-                    len,
-                    sys::PROT_READ,
-                    sys::MAP_PRIVATE,
-                    file.as_raw_fd(),
-                    0,
-                )
-            };
-            if ptr as isize != -1 && !ptr.is_null() {
-                return Ok(Mmap { backing: Backing::Mapped { ptr, len } });
+            // The `mmap.map` failpoint simulates a filesystem without mmap
+            // support: skip the syscall and take the owned fallback, which
+            // is exactly what a real MAP_FAILED return does below. This is
+            // how CI exercises the fallback branch on hosts where mmap
+            // always succeeds.
+            if !crate::fault::should_fail(crate::fault::FailPoint::MmapMap) {
+                // SAFETY: read-only private mapping of an open fd over the
+                // file's current length; POSIX keeps the mapping valid after
+                // the fd closes. Failure is checked below.
+                let ptr = unsafe {
+                    sys::mmap(
+                        std::ptr::null_mut(),
+                        len,
+                        sys::PROT_READ,
+                        sys::MAP_PRIVATE,
+                        file.as_raw_fd(),
+                        0,
+                    )
+                };
+                if ptr as isize != -1 && !ptr.is_null() {
+                    return Ok(Mmap { backing: Backing::Mapped { ptr, len } });
+                }
             }
             // Fall through to the owned fallback (e.g. tmpfs quirks, FUSE
-            // filesystems without mmap).
+            // filesystems without mmap, or an armed `mmap.map` failpoint).
         }
         let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
         Ok(Mmap { backing: Backing::Owned(bytes) })

@@ -15,8 +15,12 @@
 //! block-grid construction directly. [`mmap`] is the no-dependency binding
 //! behind the page-cache shard readback (repeated epochs copy nothing), and
 //! [`split_cache`] packs the per-record train/test decisions into a bitmap
-//! sidecar so experiment sweeps skip per-entry rehashing.
+//! sidecar so experiment sweeps skip per-entry rehashing. Durable artifacts
+//! (shards, manifests, bitmaps, checkpoints) all reach disk through
+//! [`atomic_file`]'s tmp + fsync + rename protocol, so a crash mid-write
+//! can never corrupt a previously good file.
 
+pub mod atomic_file;
 pub mod ingest;
 pub mod loader;
 pub mod mmap;

@@ -177,12 +177,15 @@ pub fn write_shard(
         nnz: entries.len() as u64,
         crc: fnv1a_update(fnv1a_start(), &payload),
     };
-    let file = std::fs::File::create(path)
-        .with_context(|| format!("creating shard {}", path.display()))?;
-    let mut w = std::io::BufWriter::new(file);
-    w.write_all(&header.to_bytes())?;
-    w.write_all(&payload)?;
-    w.flush().with_context(|| format!("writing shard {}", path.display()))
+    // Prepend the header to the payload buffer (cheap relative to the
+    // encode pass) so the shard reaches disk through the atomic
+    // tmp + fsync + rename protocol: a crash mid-pack can never leave a
+    // torn shard at the final path for a later open to trip over.
+    let mut bytes = Vec::with_capacity(SHARD_HEADER_LEN + payload.len());
+    bytes.extend_from_slice(&header.to_bytes());
+    bytes.extend_from_slice(&payload);
+    crate::data::atomic_file::write_atomic(path, &bytes)
+        .with_context(|| format!("writing shard {}", path.display()))
 }
 
 #[inline]
@@ -264,6 +267,9 @@ impl ShardReader {
     /// Open and validate header + on-disk length (truncation is an error
     /// at open time, not a short read later).
     pub fn open(path: &Path) -> Result<Self> {
+        if let Some(e) = crate::fault::fail_err(crate::fault::FailPoint::ShardOpen) {
+            return Err(e.context(format!("opening shard {}", path.display())));
+        }
         let file = std::fs::File::open(path)
             .with_context(|| format!("opening shard {}", path.display()))?;
         let len = file
@@ -312,6 +318,9 @@ impl ShardReader {
         out.clear();
         if self.remaining == 0 {
             return Ok(0);
+        }
+        if let Some(e) = crate::fault::fail_err(crate::fault::FailPoint::ShardRead) {
+            return Err(e.context(format!("reading records from {}", self.path.display())));
         }
         let n = (max.max(1) as u64).min(self.remaining) as usize;
         self.raw.resize(n * RECORD_LEN, 0);
@@ -383,6 +392,9 @@ impl MmapShardReader {
     /// Map and validate header + on-disk length (truncation is an error at
     /// open time, exactly like [`ShardReader::open`]).
     pub fn open(path: &Path) -> Result<Self> {
+        if let Some(e) = crate::fault::fail_err(crate::fault::FailPoint::ShardOpen) {
+            return Err(e.context(format!("opening shard {}", path.display())));
+        }
         let map = crate::data::mmap::Mmap::open(path)?;
         let len = map.bytes().len() as u64;
         if len < SHARD_HEADER_LEN as u64 {
@@ -442,6 +454,9 @@ impl MmapShardReader {
         if self.remaining() == 0 {
             return Ok(0);
         }
+        if let Some(e) = crate::fault::fail_err(crate::fault::FailPoint::ShardRead) {
+            return Err(e.context(format!("reading records from {}", self.path.display())));
+        }
         let n = (max.max(1) as u64).min(self.remaining()) as usize;
         let lo = SHARD_HEADER_LEN + self.consumed as usize * RECORD_LEN;
         let bytes = &self.map.bytes()[lo..lo + n * RECORD_LEN];
@@ -489,6 +504,9 @@ impl MmapShardReader {
     /// Decode records `[lo, hi)`, feeding `f` each record's in-shard index
     /// and validated entry. No CRC (see the type docs).
     pub fn decode_range(&self, lo: u64, hi: u64, mut f: impl FnMut(u64, Entry)) -> Result<()> {
+        if let Some(e) = crate::fault::fail_err(crate::fault::FailPoint::ShardRead) {
+            return Err(e.context(format!("decoding range from {}", self.path.display())));
+        }
         ensure!(
             lo <= hi && hi <= self.header.nnz,
             "{}: record range {lo}..{hi} outside shard with {} records",
@@ -625,10 +643,11 @@ impl Manifest {
         Ok(())
     }
 
-    /// Write to `dir/manifest.a2ps`.
+    /// Write to `dir/manifest.a2ps` (atomically — the manifest is the
+    /// directory's commit record, so it must never exist half-written).
     pub fn save(&self, dir: &Path) -> Result<()> {
         let p = dir.join(MANIFEST_FILE);
-        std::fs::write(&p, self.to_text())
+        crate::data::atomic_file::write_atomic(&p, self.to_text().as_bytes())
             .with_context(|| format!("writing manifest {}", p.display()))
     }
 

@@ -200,7 +200,9 @@ impl SplitBitmap {
     /// Write the sidecar into the shard directory.
     pub fn save(&self, dir: &Path) -> Result<()> {
         let p = Self::sidecar_path(dir, self.seed, f64::from_bits(self.frac_bits));
-        std::fs::write(&p, self.to_bytes())
+        // Atomic so a crash mid-save never leaves a torn sidecar; `load`
+        // tolerates corruption anyway, but a clean cache beats a warning.
+        crate::data::atomic_file::write_atomic(&p, &self.to_bytes())
             .with_context(|| format!("writing split sidecar {}", p.display()))
     }
 

@@ -103,6 +103,64 @@ impl std::fmt::Display for EngineKind {
     }
 }
 
+/// What to do when a shard stays unreadable after the transient-retry
+/// budget (the `--on-shard-error` policy of the out-of-core path).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardErrorPolicy {
+    /// Propagate the error and abort the run (the historical behavior, and
+    /// the default — degradation must be opted into).
+    Fail,
+    /// Quarantine the shard and keep training on the surviving waves; the
+    /// run reports degraded coverage ([`FaultSummary`]).
+    Skip,
+    /// Spend a longer retry budget before giving up; still fails if the
+    /// shard never comes back.
+    Retry,
+}
+
+impl ShardErrorPolicy {
+    /// Parse a CLI/TOML name.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "fail" => ShardErrorPolicy::Fail,
+            "skip" => ShardErrorPolicy::Skip,
+            "retry" => ShardErrorPolicy::Retry,
+            other => bail!("unknown shard-error policy {other:?} (fail|skip|retry)"),
+        })
+    }
+
+    /// Stable CLI name.
+    pub const fn name(self) -> &'static str {
+        match self {
+            ShardErrorPolicy::Fail => "fail",
+            ShardErrorPolicy::Skip => "skip",
+            ShardErrorPolicy::Retry => "retry",
+        }
+    }
+}
+
+/// Degradation record of one training run: what the fault-tolerance layer
+/// absorbed instead of aborting. All-zero ⇒ a clean run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSummary {
+    /// Plan-order indices of shards quarantined under the `skip` policy
+    /// (empty = every shard trained every epoch).
+    pub quarantined_shards: Vec<usize>,
+    /// Training records lost to quarantined shards (per epoch).
+    pub lost_records: u64,
+    /// Transient IO retries that eventually succeeded.
+    pub retries: u64,
+    /// Epochs restarted after a worker panic poisoned them.
+    pub epochs_retried: u32,
+}
+
+impl FaultSummary {
+    /// Did the run train on less than the full dataset?
+    pub fn degraded(&self) -> bool {
+        !self.quarantined_shards.is_empty()
+    }
+}
+
 /// Full training configuration.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -137,6 +195,26 @@ pub struct TrainConfig {
     /// resolved once into a [`crate::optim::kernel::KernelSet`] at engine
     /// construction. The `A2PSGD_KERNEL=scalar` env var overrides this.
     pub kernel: crate::optim::kernel::KernelChoice,
+    /// Write a checkpoint every N epochs (0 = off). Needs
+    /// [`TrainConfig::checkpoint_path`].
+    pub checkpoint_every: u32,
+    /// Where cadenced checkpoints go (crash-safe; see
+    /// [`crate::model::checkpoint::save_with_meta`]).
+    pub checkpoint_path: Option<std::path::PathBuf>,
+    /// Resume from this checkpoint: factor values are restored after
+    /// `Factors::init` (preserving the RNG fork discipline) and the epoch
+    /// loop continues at the checkpoint's epoch + 1. Torn files fall back
+    /// to `<path>.prev`. For the block-scheduled engines (fpsgd, a2psgd —
+    /// in-memory and out-of-core), whose `threads = 1` epoch is a
+    /// deterministic RNG-free block sweep, a resumed run is
+    /// **bit-identical** to an uninterrupted one at `threads = 1`; the
+    /// sweep engines resume correctly but re-derive their shuffle state.
+    pub resume: Option<std::path::PathBuf>,
+    /// Persistent shard-failure policy for the out-of-core path.
+    pub on_shard_error: ShardErrorPolicy,
+    /// How many times a poisoned epoch (worker panic) may be retried from
+    /// its pre-epoch factor state before the run aborts.
+    pub epoch_retries: u32,
 }
 
 impl TrainConfig {
@@ -172,6 +250,11 @@ impl TrainConfig {
                 _ => crate::optim::Rule::Sgd,
             },
             kernel: crate::optim::kernel::KernelChoice::Auto,
+            checkpoint_every: 0,
+            checkpoint_path: None,
+            resume: None,
+            on_shard_error: ShardErrorPolicy::Fail,
+            epoch_retries: 2,
         }
     }
 
@@ -228,6 +311,31 @@ impl TrainConfig {
         self.kernel = k;
         self
     }
+
+    /// Builder: checkpoint every `n` epochs to `path`.
+    pub fn checkpoint_every(mut self, n: u32, path: impl Into<std::path::PathBuf>) -> Self {
+        self.checkpoint_every = n;
+        self.checkpoint_path = Some(path.into());
+        self
+    }
+
+    /// Builder: resume from a checkpoint file.
+    pub fn resume(mut self, path: impl Into<std::path::PathBuf>) -> Self {
+        self.resume = Some(path.into());
+        self
+    }
+
+    /// Builder: persistent shard-failure policy (out-of-core path).
+    pub fn on_shard_error(mut self, p: ShardErrorPolicy) -> Self {
+        self.on_shard_error = p;
+        self
+    }
+
+    /// Builder: poisoned-epoch retry cap.
+    pub fn epoch_retries(mut self, n: u32) -> Self {
+        self.epoch_retries = n;
+        self
+    }
 }
 
 /// Number of hardware threads, capped at the paper's 32.
@@ -268,6 +376,8 @@ pub struct TrainReport {
     /// Observability snapshot taken when the run finished (None when
     /// metrics were disabled — see [`crate::obs`]).
     pub metrics: Option<crate::obs::Snapshot>,
+    /// What the fault-tolerance layer absorbed (all-zero on a clean run).
+    pub fault: FaultSummary,
 }
 
 impl TrainReport {
@@ -322,11 +432,36 @@ pub trait EpochRunner {
 
     /// Consume the runner, returning the trained factors.
     fn into_factors(self: Box<Self>) -> Factors;
+
+    /// Does this runner absorb worker panics into a poisoned-epoch flag
+    /// instead of unwinding? When true, the driver clones the factors
+    /// before each epoch so a poisoned epoch can be rolled back and
+    /// retried (see [`run_driver_with`]). Default: panics unwind.
+    fn poison_recoverable(&self) -> bool {
+        false
+    }
+
+    /// Whether the *last* `run_epoch` was poisoned by a worker panic;
+    /// reading clears the flag. Only meaningful when
+    /// [`EpochRunner::poison_recoverable`] returns true.
+    fn take_poisoned(&mut self) -> bool {
+        false
+    }
+
+    /// Degradation accumulated so far (quarantined shards, IO retries).
+    /// The driver folds its own poisoned-epoch retry count on top.
+    fn fault_summary(&self) -> FaultSummary {
+        FaultSummary::default()
+    }
 }
 
 /// Train an LR model on a dataset with the configured engine.
 pub fn train(data: &Dataset, cfg: &TrainConfig) -> Result<TrainReport> {
     if cfg.engine == EngineKind::XlaMinibatch {
+        anyhow::ensure!(
+            cfg.resume.is_none(),
+            "--resume is not supported by the xla engine (device-resident state)"
+        );
         return crate::runtime::train_xla(data, cfg);
     }
     let mut rng = Rng::new(cfg.seed);
@@ -341,7 +476,36 @@ pub fn train(data: &Dataset, cfg: &TrainConfig) -> Result<TrainReport> {
         EngineKind::A2psgd => Box::new(BlockEngine::a2psgd(data, factors, cfg, &mut rng)),
         EngineKind::XlaMinibatch => unreachable!(),
     };
-    Ok(run_driver(data, cfg, runner))
+    let start_epoch = apply_resume(cfg, runner.as_ref())?;
+    Ok(run_driver_from(&EvalPlan::of(data), cfg, runner, start_epoch))
+}
+
+/// Apply `--resume`: overwrite the freshly initialized factor values from
+/// the checkpoint (falling back to `<path>.prev` on a torn primary) and
+/// return the epoch to continue from. Runs *after* `Factors::init` and
+/// engine construction so the RNG fork discipline is untouched — which is
+/// what makes a resumed run bit-identical to an uninterrupted one at
+/// `threads = 1`. Returns 1 (start from scratch) when no resume is set.
+fn apply_resume(cfg: &TrainConfig, runner: &dyn EpochRunner) -> Result<u32> {
+    let Some(path) = &cfg.resume else { return Ok(1) };
+    let (f, meta) = crate::model::checkpoint::load_resilient(path)?;
+    // SAFETY: the runner was just constructed — workers are parked until
+    // the first run_epoch, so the factors are quiescent.
+    let cur = unsafe { runner.shared().get() };
+    anyhow::ensure!(
+        f.nrows() == cur.nrows() && f.ncols() == cur.ncols() && f.d() == cur.d(),
+        "checkpoint {} shape {}x{} (d = {}) does not match this run's {}x{} (d = {})",
+        path.display(),
+        f.nrows(),
+        f.ncols(),
+        f.d(),
+        cur.nrows(),
+        cur.ncols(),
+        cur.d()
+    );
+    // SAFETY: same quiescence as above.
+    unsafe { runner.shared().restore(&f) };
+    Ok(meta.epoch.saturating_add(1))
 }
 
 /// Out-of-core training options beyond the [`TrainConfig`]: split
@@ -480,8 +644,9 @@ pub fn train_ooc_opts(
             let factors = Factors::init(nrows, ncols, cfg.d, scale, &mut rng);
             let runner: Box<dyn EpochRunner> =
                 Box::new(plan.into_runner(factors, cfg, rule, &mut rng));
+            let start_epoch = apply_resume(cfg, runner.as_ref())?;
             let eval = EvalPlan { name, test: &test, rating_min, rating_max, quota: train_nnz };
-            Ok(run_driver_with(&eval, cfg, runner))
+            Ok(run_driver_from(&eval, cfg, runner, start_epoch))
         }
         _ => {
             let ooc = crate::data::ingest::ingest_ooc_prefix(
@@ -518,8 +683,9 @@ pub fn train_ooc_opts(
                 }
                 _ => unreachable!("gated above"),
             };
+            let start_epoch = apply_resume(cfg, runner.as_ref())?;
             let plan = EvalPlan { name, test: &test, rating_min, rating_max, quota: train_nnz };
-            Ok(run_driver_with(&plan, cfg, runner))
+            Ok(run_driver_from(&plan, cfg, runner, start_epoch))
         }
     }
 }
@@ -563,7 +729,31 @@ pub fn run_driver(data: &Dataset, cfg: &TrainConfig, runner: Box<dyn EpochRunner
 pub fn run_driver_with(
     plan: &EvalPlan,
     cfg: &TrainConfig,
+    runner: Box<dyn EpochRunner>,
+) -> TrainReport {
+    run_driver_from(plan, cfg, runner, 1)
+}
+
+/// [`run_driver_with`] starting at `start_epoch` (the resume entry; see
+/// [`TrainConfig::resume`]). Besides the epoch/eval/early-stop protocol
+/// this is where the fault-tolerance hooks live:
+///
+/// - **Checkpoint cadence** — every [`TrainConfig::checkpoint_every`]
+///   epochs the quiescent factors are saved crash-safely to
+///   [`TrainConfig::checkpoint_path`]. A failed save warns and keeps
+///   training (the atomic protocol guarantees the previous checkpoint
+///   survived).
+/// - **Poisoned-epoch recovery** — when the runner reports
+///   [`EpochRunner::poison_recoverable`], the driver clones the factors at
+///   each epoch boundary (the in-memory equivalent of the last
+///   checkpoint); if a worker panic poisons the epoch, the factors are
+///   rolled back and the epoch retried, up to
+///   [`TrainConfig::epoch_retries`] consecutive attempts before aborting.
+pub fn run_driver_from(
+    plan: &EvalPlan,
+    cfg: &TrainConfig,
     mut runner: Box<dyn EpochRunner>,
+    start_epoch: u32,
 ) -> TrainReport {
     let quota = plan.quota;
     let wall_start = std::time::Instant::now();
@@ -572,14 +762,51 @@ pub fn run_driver_with(
     let mut detector = ConvergenceDetector::new(cfg.tol, cfg.patience);
     let mut total_updates = 0u64;
     let mut converged_epoch = None;
+    let recoverable = runner.poison_recoverable();
+    let mut epochs_retried = 0u32;
+    let mut attempts_this_epoch = 0u32;
 
-    for epoch in 1..=cfg.epochs {
+    let mut epoch = start_epoch.max(1);
+    while epoch <= cfg.epochs {
+        // Epoch-boundary rollback point for poisoned-epoch recovery; only
+        // paid by runners that can actually poison (worker panics unwind
+        // straight through the rest).
+        let rollback = if recoverable {
+            // SAFETY: quiescent between epochs (workers parked).
+            Some(unsafe { runner.shared().get() }.clone())
+        } else {
+            None
+        };
+
         let epoch_t0 = std::time::Instant::now();
         let epoch_span = crate::obs::span("epoch", "train");
         sw.start();
-        total_updates += runner.run_epoch(epoch, quota);
+        let updates = runner.run_epoch(epoch, quota);
         sw.pause();
         drop(epoch_span);
+
+        if runner.take_poisoned() {
+            attempts_this_epoch += 1;
+            if attempts_this_epoch > cfg.epoch_retries {
+                panic!(
+                    "epoch {epoch} poisoned by a worker panic {attempts_this_epoch} times; \
+                     giving up (epoch-retries = {})",
+                    cfg.epoch_retries
+                );
+            }
+            epochs_retried += 1;
+            if crate::obs::metrics_enabled() {
+                crate::obs::add(crate::obs::Ctr::Retries, 1);
+            }
+            let rollback = rollback
+                .as_ref()
+                .expect("poisoned epoch from a runner that is not poison_recoverable");
+            // SAFETY: workers joined inside run_epoch → fully quiescent.
+            unsafe { runner.shared().restore(rollback) };
+            continue; // retry the same epoch; the poisoned attempt's updates are discarded
+        }
+        attempts_this_epoch = 0;
+        total_updates += updates;
         if crate::obs::metrics_enabled() {
             crate::obs::add(crate::obs::Ctr::EpochsRun, 1);
             crate::obs::observe(crate::obs::Hist::EpochNs, epoch_t0.elapsed().as_nanos() as u64);
@@ -596,15 +823,35 @@ pub fn run_driver_with(
         );
         history.push(EpochStat { epoch, train_seconds: sw.seconds(), rmse, mae });
 
+        if cfg.checkpoint_every > 0 && epoch % cfg.checkpoint_every == 0 {
+            if let Some(cp) = &cfg.checkpoint_path {
+                let meta = crate::model::checkpoint::CheckpointMeta {
+                    epoch,
+                    snapshot_version: 0,
+                    hyper: cfg.hyper,
+                };
+                if let Err(e) = crate::model::checkpoint::save_with_meta(f, &meta, cp) {
+                    eprintln!(
+                        "warning: epoch-{epoch} checkpoint failed ({e:#}); training continues \
+                         (previous checkpoint is intact)"
+                    );
+                }
+            }
+        }
+
         if cfg.early_stop && detector.observe(rmse) {
             converged_epoch = Some(epoch);
             break;
         }
+        epoch += 1;
     }
 
     // The leader records epoch (and streaming decode) spans on this thread;
     // drain its ring so a subsequent trace export sees them.
     crate::obs::trace::flush_thread();
+
+    let mut fault = runner.fault_summary();
+    fault.epochs_retried = epochs_retried;
 
     TrainReport {
         engine: cfg.engine,
@@ -619,6 +866,7 @@ pub fn run_driver_with(
         rating_min: plan.rating_min,
         rating_max: plan.rating_max,
         metrics: crate::obs::metrics_enabled().then(crate::obs::snapshot),
+        fault,
     }
 }
 
@@ -713,5 +961,80 @@ mod tests {
         assert!(r.train_seconds <= r.wall_seconds + 1e-6);
         assert!(r.rmse_time() <= r.train_seconds + 1e-6);
         assert!(r.updates_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn shard_error_policy_parse() {
+        assert_eq!(ShardErrorPolicy::parse("fail").unwrap(), ShardErrorPolicy::Fail);
+        assert_eq!(ShardErrorPolicy::parse("SKIP").unwrap(), ShardErrorPolicy::Skip);
+        assert_eq!(ShardErrorPolicy::parse("retry").unwrap(), ShardErrorPolicy::Retry);
+        assert!(ShardErrorPolicy::parse("explode").is_err());
+        assert_eq!(ShardErrorPolicy::Skip.name(), "skip");
+    }
+
+    #[test]
+    fn clean_run_reports_no_faults() {
+        let data = synthetic::small(0x77);
+        let cfg = smoke_cfg(EngineKind::A2psgd, &data).epochs(2);
+        let r = train(&data, &cfg).unwrap();
+        assert!(!r.fault.degraded());
+        assert_eq!(r.fault, FaultSummary::default());
+    }
+
+    #[test]
+    fn checkpoint_resume_is_bit_identical_for_block_engines() {
+        let dir = std::env::temp_dir().join(format!("a2psgd_resume_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cp = dir.join("train.a2pf");
+        let data = synthetic::small(0x42);
+        let base = smoke_cfg(EngineKind::A2psgd, &data).threads(1).epochs(6);
+
+        let uninterrupted = train(&data, &base).unwrap();
+        // First leg: stop after 3 epochs, checkpointing each one.
+        let first = train(&data, &base.clone().epochs(3).checkpoint_every(1, cp.clone())).unwrap();
+        assert_eq!(first.history.points().len(), 3);
+        // Second leg: resume picks up at epoch 4 and finishes the plan.
+        let resumed = train(&data, &base.clone().resume(cp.clone())).unwrap();
+        assert_eq!(
+            resumed.history.points().first().map(|p| p.epoch),
+            Some(4),
+            "resume must continue at checkpoint epoch + 1"
+        );
+        assert_eq!(resumed.factors.m, uninterrupted.factors.m, "M diverged after resume");
+        assert_eq!(resumed.factors.n, uninterrupted.factors.n, "N diverged after resume");
+        assert_eq!(resumed.factors.phi, uninterrupted.factors.phi);
+        assert_eq!(resumed.factors.psi, uninterrupted.factors.psi);
+        assert_eq!(resumed.final_rmse(), uninterrupted.final_rmse());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_rejects_shape_mismatch() {
+        let dir = std::env::temp_dir().join(format!("a2psgd_resume_shape_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cp = dir.join("train.a2pf");
+        let data = synthetic::small(0x42);
+        let cfg = smoke_cfg(EngineKind::A2psgd, &data).threads(1).epochs(2);
+        train(&data, &cfg.clone().checkpoint_every(1, cp.clone())).unwrap();
+        // Same data, different rank → the checkpoint must be refused.
+        let err = train(&data, &cfg.clone().dim(4).resume(cp.clone())).unwrap_err();
+        assert!(format!("{err:#}").contains("does not match"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_past_the_end_returns_checkpoint_state() {
+        let dir = std::env::temp_dir().join(format!("a2psgd_resume_done_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cp = dir.join("train.a2pf");
+        let data = synthetic::small(0x43);
+        let cfg = smoke_cfg(EngineKind::A2psgd, &data).threads(1).epochs(3);
+        let done = train(&data, &cfg.clone().checkpoint_every(3, cp.clone())).unwrap();
+        // Resuming a finished run trains zero epochs and hands back the
+        // checkpointed factors unchanged.
+        let again = train(&data, &cfg.clone().resume(cp.clone())).unwrap();
+        assert!(again.history.points().is_empty());
+        assert_eq!(again.factors.m, done.factors.m);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

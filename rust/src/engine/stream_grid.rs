@@ -38,7 +38,7 @@
 //!   deterministic c = 1 order — `--memory streaming` is therefore
 //!   bit-identical to `--memory resident` single-threaded.
 
-use super::{EpochRunner, TrainConfig};
+use super::{EpochRunner, FaultSummary, ShardErrorPolicy, TrainConfig};
 use crate::data::ingest::{split_scan_cached, MmapReaderSource};
 use crate::data::shard::{open_checked_mmap, Manifest, MmapShardReader, RECORD_LEN};
 use crate::data::split;
@@ -54,7 +54,7 @@ use crate::sparse::{BlockCsr, CooMatrix, SweepLanes};
 use crate::Result;
 use anyhow::ensure;
 use std::path::Path;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 /// One epoch wave: a contiguous row-block band plus the shard record slices
@@ -292,6 +292,7 @@ impl StreamPlan {
         rng: &mut Rng,
     ) -> EpochStreamGrid {
         let kernels = KernelSet::select(factors.d(), cfg.kernel);
+        let nshards = self.readers.len();
         EpochStreamGrid {
             shared: SharedFactors::new(factors),
             plan: self,
@@ -301,6 +302,11 @@ impl StreamPlan {
             pool: WorkerPool::new(cfg.threads),
             rng: rng.fork(3),
             peak_tile_bytes: AtomicU64::new(0),
+            on_shard_error: cfg.on_shard_error,
+            quarantined: (0..nshards).map(|_| AtomicBool::new(false)).collect(),
+            retries: AtomicU64::new(0),
+            lost_records: AtomicU64::new(0),
+            poisoned: AtomicBool::new(false),
         }
     }
 }
@@ -316,6 +322,18 @@ pub struct EpochStreamGrid {
     pool: WorkerPool,
     rng: Rng,
     peak_tile_bytes: AtomicU64,
+    /// Persistent shard-failure policy (see [`ShardErrorPolicy`]).
+    on_shard_error: ShardErrorPolicy,
+    /// Per-shard quarantine flags (`skip` policy): once set, every later
+    /// wave decode silently drops that shard's slices.
+    quarantined: Vec<AtomicBool>,
+    /// Transient decode failures that were retried.
+    retries: AtomicU64,
+    /// Records lost to quarantined shards (per epoch).
+    lost_records: AtomicU64,
+    /// Set when a worker panic poisoned the current epoch; the driver
+    /// reads-and-clears it via [`EpochRunner::take_poisoned`].
+    poisoned: AtomicBool,
 }
 
 impl EpochStreamGrid {
@@ -346,6 +364,12 @@ impl EpochStreamGrid {
     /// overlapping training) are accounted separately from blocking leader
     /// decodes so the trace shows how much IO the overlap actually hid.
     fn decode_wave_timed(&self, w: usize, prefetch: bool) -> (Vec<BlockCsr>, u64) {
+        if prefetch && crate::fault::should_fail(crate::fault::FailPoint::PrefetchWave) {
+            // Prefetch runs on worker 0 inside a poisonable pool epoch: the
+            // panic poisons the epoch instead of killing the process, and
+            // the driver retries from its epoch-boundary snapshot.
+            panic!("injected fault: prefetch.wave (wave {w})");
+        }
         let _span = crate::obs::span(if prefetch { "prefetch" } else { "decode" }, "stream");
         if !crate::obs::metrics_enabled() {
             return self.decode_wave(w);
@@ -368,7 +392,57 @@ impl EpochStreamGrid {
     /// the wave's rows, scattered into block-CSR tiles in canonical order
     /// and finalized — bit-identical lanes to the resident grid's blocks.
     /// Returns the tiles plus their payload byte size.
+    ///
+    /// Decode failures are handled here, wave-at-a-time: a failed attempt
+    /// discards the half-built tiles (so a retry can never duplicate
+    /// records) and re-decodes under [`Backoff`]. A shard that keeps
+    /// failing past the budget follows the [`ShardErrorPolicy`]: `fail` and
+    /// an exhausted `retry` panic exactly like the historical behavior
+    /// (the shards passed full CRC validation at plan construction, so a
+    /// persistent failure means the file changed on disk mid-run — refuse
+    /// to train on anything detectably altered; see the module docs for
+    /// the trust model), while `skip` quarantines the shard and rebuilds
+    /// the wave from the survivors.
     fn decode_wave(&self, w: usize) -> (Vec<BlockCsr>, u64) {
+        // Transient budget covers blips (and injected `shard.read` faults
+        // with fail-once / fail-nth schedules); the `retry` policy spends a
+        // deeper budget before giving up.
+        let budget: u32 = match self.on_shard_error {
+            ShardErrorPolicy::Retry => 8,
+            _ => 3,
+        };
+        let mut attempts: std::collections::HashMap<usize, u32> = std::collections::HashMap::new();
+        let mut backoff = Backoff::new();
+        loop {
+            let (failed_shard, err) = match self.try_decode_wave(w) {
+                Ok(out) => return out,
+                Err(fail) => fail,
+            };
+            self.retries.fetch_add(1, Ordering::Relaxed);
+            if crate::obs::metrics_enabled() {
+                crate::obs::add(crate::obs::Ctr::Retries, 1);
+            }
+            let a = attempts.entry(failed_shard).or_insert(0);
+            *a += 1;
+            if *a < budget {
+                backoff.wait();
+                continue;
+            }
+            match self.on_shard_error {
+                ShardErrorPolicy::Skip => self.quarantine(failed_shard, &err),
+                _ => panic!(
+                    "shard re-decode failed mid-run after {a} attempts \
+                     (policy = {}): {err:#}",
+                    self.on_shard_error.name()
+                ),
+            }
+        }
+    }
+
+    /// One decode attempt over the wave's non-quarantined slices; on error
+    /// the half-built tiles are dropped and the failing shard's index is
+    /// reported so [`Self::decode_wave`] can retry or quarantine.
+    fn try_decode_wave(&self, w: usize) -> std::result::Result<(Vec<BlockCsr>, u64), (usize, anyhow::Error)> {
         let plan = &self.plan;
         let wave = &plan.waves[w];
         let nb = plan.col_bounds.len() - 1;
@@ -385,6 +459,9 @@ impl EpochStreamGrid {
             }
         }
         for &(s, lo, hi) in &wave.slices {
+            if self.quarantined[s].load(Ordering::Relaxed) {
+                continue;
+            }
             let base = plan.shard_base[s];
             plan.readers[s]
                 .decode_range(lo, hi, |k, e| {
@@ -404,19 +481,39 @@ impl EpochStreamGrid {
                     );
                     tiles[(bi - wave.i0) * nb + bj].push(e.u, e.v, e.r);
                 })
-                // The shards passed full validation (CRC included) at plan
-                // construction, so record checks cannot fail unless the
-                // file changed on disk mid-run — refuse to train on
-                // anything detectably altered (see the module docs for the
-                // exact trust model).
-                .unwrap_or_else(|e| panic!("shard re-decode failed mid-run: {e:#}"));
+                .map_err(|e| (s, e))?;
         }
         let mut bytes = 0u64;
         for t in &mut tiles {
             t.finalize();
             bytes += t.len() as u64 * RECORD_LEN as u64;
         }
-        (tiles, bytes)
+        Ok((tiles, bytes))
+    }
+
+    /// Quarantine a shard under the `skip` policy: flag it, charge its
+    /// records (across all waves) to the lost-coverage ledger once, and
+    /// keep training on the survivors.
+    fn quarantine(&self, s: usize, err: &anyhow::Error) {
+        if self.quarantined[s].swap(true, Ordering::Relaxed) {
+            return; // already quarantined (racing decoders)
+        }
+        let lost: u64 = self
+            .plan
+            .waves
+            .iter()
+            .flat_map(|w| w.slices.iter())
+            .filter(|&&(si, _, _)| si == s)
+            .map(|&(_, lo, hi)| hi - lo)
+            .sum();
+        self.lost_records.fetch_add(lost, Ordering::Relaxed);
+        if crate::obs::metrics_enabled() {
+            crate::obs::add(crate::obs::Ctr::ShardsQuarantined, 1);
+        }
+        eprintln!(
+            "warning: quarantining shard {s} ({lost} records/epoch) after repeated decode \
+             failures: {err:#}; training continues on surviving shards"
+        );
     }
 }
 
@@ -489,7 +586,7 @@ impl EpochRunner for EpochStreamGrid {
             let done = AtomicU64::new(0);
             let next_slot: Mutex<Option<(Vec<BlockCsr>, u64)>> = Mutex::new(None);
             let decode_next = w + 1 < nwaves;
-            this.pool.run(|t| {
+            let clean = this.pool.run_poisonable(|t| {
                 if t == 0 && decode_next {
                     // Double buffering: worker 0 prefetches the next wave
                     // while the rest train this one, then joins them.
@@ -529,6 +626,15 @@ impl EpochRunner for EpochStreamGrid {
                 }
             });
             total += done.load(Ordering::Relaxed);
+            if !clean {
+                // A worker panic (e.g. an injected pool.worker or
+                // prefetch.wave fault) poisoned this epoch. The factors may
+                // hold a partial wave's updates — flag the epoch and bail
+                // out; the driver rolls back to its epoch-boundary snapshot
+                // and retries (see `engine::run_driver_from`).
+                self.poisoned.store(true, Ordering::Relaxed);
+                return total;
+            }
             next = next_slot
                 .into_inner()
                 .unwrap_or_else(std::sync::PoisonError::into_inner);
@@ -549,6 +655,29 @@ impl EpochRunner for EpochStreamGrid {
 
     fn into_factors(self: Box<Self>) -> Factors {
         self.shared.into_inner()
+    }
+
+    fn poison_recoverable(&self) -> bool {
+        true
+    }
+
+    fn take_poisoned(&mut self) -> bool {
+        self.poisoned.swap(false, Ordering::Relaxed)
+    }
+
+    fn fault_summary(&self) -> FaultSummary {
+        FaultSummary {
+            quarantined_shards: self
+                .quarantined
+                .iter()
+                .enumerate()
+                .filter(|(_, q)| q.load(Ordering::Relaxed))
+                .map(|(s, _)| s)
+                .collect(),
+            lost_records: self.lost_records.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            epochs_retried: 0, // the driver folds its own count on top
+        }
     }
 }
 

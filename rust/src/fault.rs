@@ -1,0 +1,476 @@
+//! Deterministic fault injection: named failpoints with seeded schedules.
+//!
+//! The fault-tolerance layer (crash-safe checkpoints, shard-error policies,
+//! poisoned-epoch recovery) is only trustworthy if its failure paths are
+//! *exercised*, and real IO faults are rare and nondeterministic. This
+//! module plants named **failpoints** at the spots where production faults
+//! occur — shard opens/reads, `mmap(2)`, checkpoint writes, pool workers,
+//! prefetch waves — and lets tests and operators arm them with seeded,
+//! reproducible schedules:
+//!
+//! | schedule        | spec syntax              | behaviour                         |
+//! |-----------------|--------------------------|-----------------------------------|
+//! | fail once       | `shard.read=once`        | first hit fails, rest pass        |
+//! | fail nth        | `shard.read=nth:3`       | 3rd hit fails (1-based)           |
+//! | fail with prob  | `shard.read=prob:0.1:42` | each hit fails w.p. 0.1, seed 42  |
+//! | inject latency  | `shard.read=latency:5ms` | every hit sleeps, never fails     |
+//!
+//! Multiple entries join with `;` (or `,`):
+//! `A2PSGD_FAULTS="shard.read=prob:0.05:7;checkpoint.write=once"`. The same
+//! grammar is accepted by the `[fault] points = "…"` TOML key and the
+//! `--faults` CLI flag.
+//!
+//! # Dark-mode cost
+//!
+//! Exactly like the obs layer, the *disabled* path is the design target:
+//! every [`should_fail`] call is a single `Relaxed` load of one global
+//! `AtomicBool` that short-circuits before touching any per-point slot.
+//! Compiling with the `fault-off` feature pins [`enabled`] to a constant
+//! `false`, deleting even that load — the branch folds away entirely.
+//!
+//! # Determinism
+//!
+//! Probability schedules hash `(seed, hit-index)` through SplitMix64, so a
+//! given spec produces the same fail/pass sequence on every run and every
+//! platform — the fault-soak suite replays hundreds of seeded schedules and
+//! asserts identical outcomes. Schedules are process-global (like metric
+//! state); tests that arm them serialize on a mutex and [`reset`] after.
+
+use crate::Result;
+use anyhow::{anyhow, bail};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+
+/// A named site where a fault can be injected (see the module table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FailPoint {
+    /// `shard.open` — opening a packed `.a2ps` shard for reading.
+    ShardOpen,
+    /// `shard.read` — decoding a chunk/range out of an open shard.
+    ShardRead,
+    /// `mmap.map` — the `mmap(2)` call itself (fires the owned fallback).
+    MmapMap,
+    /// `checkpoint.write` — mid-stream during an atomic checkpoint write
+    /// (simulates a crash leaving a torn temp file).
+    CheckpointWrite,
+    /// `pool.worker` — a worker-pool job (fires as a worker panic).
+    PoolWorker,
+    /// `prefetch.wave` — the background decode of the next streaming wave.
+    PrefetchWave,
+}
+
+impl FailPoint {
+    /// Every failpoint, for catalogs and `reset` sweeps.
+    pub const ALL: [FailPoint; 6] = [
+        FailPoint::ShardOpen,
+        FailPoint::ShardRead,
+        FailPoint::MmapMap,
+        FailPoint::CheckpointWrite,
+        FailPoint::PoolWorker,
+        FailPoint::PrefetchWave,
+    ];
+
+    /// Stable spec/wire name (`shard.open`, `checkpoint.write`, …).
+    pub const fn name(self) -> &'static str {
+        match self {
+            FailPoint::ShardOpen => "shard.open",
+            FailPoint::ShardRead => "shard.read",
+            FailPoint::MmapMap => "mmap.map",
+            FailPoint::CheckpointWrite => "checkpoint.write",
+            FailPoint::PoolWorker => "pool.worker",
+            FailPoint::PrefetchWave => "prefetch.wave",
+        }
+    }
+
+    /// Inverse of [`FailPoint::name`].
+    pub fn from_name(s: &str) -> Option<FailPoint> {
+        FailPoint::ALL.iter().copied().find(|p| p.name() == s)
+    }
+
+    const fn idx(self) -> usize {
+        match self {
+            FailPoint::ShardOpen => 0,
+            FailPoint::ShardRead => 1,
+            FailPoint::MmapMap => 2,
+            FailPoint::CheckpointWrite => 3,
+            FailPoint::PoolWorker => 4,
+            FailPoint::PrefetchWave => 5,
+        }
+    }
+}
+
+/// A parsed failure schedule for one point (pure value — applying it to the
+/// process-global slots happens in [`arm`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    /// Disarmed.
+    Off,
+    /// Fail the first hit only.
+    Once,
+    /// Fail the `n`-th hit (1-based), pass all others.
+    Nth(u64),
+    /// Fail each hit independently with probability `p`, deterministically
+    /// derived from `(seed, hit-index)`.
+    Prob { p: f64, seed: u64 },
+    /// Never fail; sleep this many microseconds on every hit.
+    LatencyUs(u64),
+}
+
+impl Schedule {
+    /// Would this schedule fire on hit index `n` (0-based)? Pure — the
+    /// deterministic core of [`should_fail`], unit-testable without
+    /// touching global state. Latency schedules never "fire".
+    pub fn fires(self, n: u64) -> bool {
+        match self {
+            Schedule::Off | Schedule::LatencyUs(_) => false,
+            Schedule::Once => n == 0,
+            Schedule::Nth(k) => n + 1 == k,
+            Schedule::Prob { p, seed } => {
+                // Uniform in [0, 1) from the top 53 bits of a SplitMix64
+                // hash of (seed, n) — platform-independent.
+                let h = splitmix64(seed ^ n.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                let u = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+                u < p
+            }
+        }
+    }
+}
+
+// Slot encoding: mode selects the Schedule variant, param/seed carry its
+// payload (param holds f64 bits for Prob, count for Nth, µs for Latency).
+const MODE_OFF: u8 = 0;
+const MODE_ONCE: u8 = 1;
+const MODE_NTH: u8 = 2;
+const MODE_PROB: u8 = 3;
+const MODE_LATENCY: u8 = 4;
+
+struct Slot {
+    mode: AtomicU8,
+    param: AtomicU64,
+    seed: AtomicU64,
+    hits: AtomicU64,
+}
+
+#[allow(clippy::declare_interior_mutable_const)] // const used only as an array initializer
+const SLOT_INIT: Slot = Slot {
+    mode: AtomicU8::new(MODE_OFF),
+    param: AtomicU64::new(0),
+    seed: AtomicU64::new(0),
+    hits: AtomicU64::new(0),
+};
+
+static SLOTS: [Slot; 6] = [SLOT_INIT; 6];
+
+/// The one word the dark path reads: false ⇒ no failpoint is armed and
+/// [`should_fail`] returns before touching any slot.
+static FAULTS_ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is any failpoint armed? Single `Relaxed` load; constant `false` (the
+/// whole layer folds away) under the `fault-off` feature.
+#[cfg(not(feature = "fault-off"))]
+#[inline]
+pub fn enabled() -> bool {
+    FAULTS_ENABLED.load(Ordering::Relaxed)
+}
+
+/// `fault-off` build: the layer is compiled out.
+#[cfg(feature = "fault-off")]
+#[inline(always)]
+pub fn enabled() -> bool {
+    false
+}
+
+/// Record a hit at `p` and report whether the armed schedule says this hit
+/// fails. The caller decides what "fail" means at its site (an `Err`, a
+/// panic, a fallback path). Counts [`crate::obs::Ctr::FaultsInjected`] when
+/// it fires.
+#[inline]
+pub fn should_fail(p: FailPoint) -> bool {
+    if !enabled() {
+        return false;
+    }
+    should_fail_slow(p)
+}
+
+#[cold]
+fn should_fail_slow(p: FailPoint) -> bool {
+    let slot = &SLOTS[p.idx()];
+    let mode = slot.mode.load(Ordering::Relaxed);
+    if mode == MODE_OFF {
+        return false;
+    }
+    // Hit indices are allocated with a real RMW: concurrent hitters must
+    // each see a distinct index or nth/once schedules misfire.
+    let n = slot.hits.fetch_add(1, Ordering::Relaxed);
+    let param = slot.param.load(Ordering::Relaxed);
+    let sched = match mode {
+        MODE_ONCE => Schedule::Once,
+        MODE_NTH => Schedule::Nth(param),
+        MODE_PROB => Schedule::Prob { p: f64::from_bits(param), seed: slot.seed.load(Ordering::Relaxed) },
+        MODE_LATENCY => {
+            std::thread::sleep(std::time::Duration::from_micros(param));
+            return false;
+        }
+        _ => return false,
+    };
+    let fire = sched.fires(n);
+    if fire {
+        crate::obs::add(crate::obs::Ctr::FaultsInjected, 1);
+    }
+    fire
+}
+
+/// [`should_fail`] packaged as the error the IO sites return: `Some(err)`
+/// when the hit fails, `None` to proceed.
+#[inline]
+pub fn fail_err(p: FailPoint) -> Option<anyhow::Error> {
+    if should_fail(p) {
+        Some(anyhow!("injected fault: {}", p.name()))
+    } else {
+        None
+    }
+}
+
+/// Cumulative hit count at `p` since the last [`reset`] (armed periods
+/// only — dark hits are not counted).
+pub fn hits(p: FailPoint) -> u64 {
+    SLOTS[p.idx()].hits.load(Ordering::Relaxed)
+}
+
+/// Parse a spec string (`point=mode[:arg[:seed]]`, entries joined by `;` or
+/// `,`) into `(point, schedule)` pairs without touching global state.
+pub fn parse_spec(spec: &str) -> Result<Vec<(FailPoint, Schedule)>> {
+    let mut out = Vec::new();
+    for entry in spec.split([';', ',']) {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let (name, mode) = entry
+            .split_once('=')
+            .ok_or_else(|| anyhow!("fault spec entry `{entry}` is missing `=`"))?;
+        let point = FailPoint::from_name(name.trim()).ok_or_else(|| {
+            anyhow!(
+                "unknown failpoint `{}` (known: {})",
+                name.trim(),
+                FailPoint::ALL.map(|p| p.name()).join(", ")
+            )
+        })?;
+        out.push((point, parse_schedule(mode.trim())?));
+    }
+    Ok(out)
+}
+
+fn parse_schedule(mode: &str) -> Result<Schedule> {
+    let mut parts = mode.split(':');
+    let kind = parts.next().unwrap_or("");
+    let arg = parts.next();
+    let extra = parts.next();
+    if parts.next().is_some() {
+        bail!("fault schedule `{mode}` has too many `:` fields");
+    }
+    match kind {
+        "off" => Ok(Schedule::Off),
+        "once" => Ok(Schedule::Once),
+        "nth" => {
+            let n: u64 = arg
+                .ok_or_else(|| anyhow!("`nth` needs a count, e.g. nth:3"))?
+                .parse()
+                .map_err(|_| anyhow!("bad nth count in `{mode}`"))?;
+            if n == 0 {
+                bail!("nth is 1-based; `nth:0` never fires");
+            }
+            Ok(Schedule::Nth(n))
+        }
+        "prob" => {
+            let p: f64 = arg
+                .ok_or_else(|| anyhow!("`prob` needs a probability, e.g. prob:0.1"))?
+                .parse()
+                .map_err(|_| anyhow!("bad probability in `{mode}`"))?;
+            if !(0.0..=1.0).contains(&p) {
+                bail!("probability {p} out of [0, 1] in `{mode}`");
+            }
+            let seed: u64 = match extra {
+                Some(s) => s.parse().map_err(|_| anyhow!("bad seed in `{mode}`"))?,
+                None => 0,
+            };
+            Ok(Schedule::Prob { p, seed })
+        }
+        "latency" => {
+            let a = arg.ok_or_else(|| anyhow!("`latency` needs a duration, e.g. latency:5ms"))?;
+            if extra.is_some() {
+                bail!("latency takes no seed field in `{mode}`");
+            }
+            Ok(Schedule::LatencyUs(parse_duration_us(a)?))
+        }
+        _ => bail!("unknown fault schedule `{kind}` (off|once|nth|prob|latency)"),
+    }
+}
+
+/// Duration with optional `us`/`ms`/`s` suffix; bare numbers are µs.
+fn parse_duration_us(s: &str) -> Result<u64> {
+    let (num, mul) = if let Some(n) = s.strip_suffix("us") {
+        (n, 1u64)
+    } else if let Some(n) = s.strip_suffix("ms") {
+        (n, 1_000)
+    } else if let Some(n) = s.strip_suffix('s') {
+        (n, 1_000_000)
+    } else {
+        (s, 1)
+    };
+    let v: u64 = num.trim().parse().map_err(|_| anyhow!("bad duration `{s}`"))?;
+    Ok(v.saturating_mul(mul))
+}
+
+/// Arm the process-global failpoints from a spec string. Entries replace
+/// any previous schedule at their point; points not named keep theirs.
+/// Hit counters for the named points restart at zero.
+pub fn arm(spec: &str) -> Result<()> {
+    for (point, sched) in parse_spec(spec)? {
+        arm_point(point, sched);
+    }
+    Ok(())
+}
+
+/// Arm a single point with an already-parsed schedule.
+pub fn arm_point(point: FailPoint, sched: Schedule) {
+    let slot = &SLOTS[point.idx()];
+    let (mode, param, seed) = match sched {
+        Schedule::Off => (MODE_OFF, 0, 0),
+        Schedule::Once => (MODE_ONCE, 0, 0),
+        Schedule::Nth(n) => (MODE_NTH, n, 0),
+        Schedule::Prob { p, seed } => (MODE_PROB, p.to_bits(), seed),
+        Schedule::LatencyUs(us) => (MODE_LATENCY, us, 0),
+    };
+    slot.hits.store(0, Ordering::Relaxed);
+    slot.param.store(param, Ordering::Relaxed);
+    slot.seed.store(seed, Ordering::Relaxed);
+    slot.mode.store(mode, Ordering::Relaxed);
+    if mode != MODE_OFF {
+        FAULTS_ENABLED.store(true, Ordering::Relaxed);
+    } else if SLOTS.iter().all(|s| s.mode.load(Ordering::Relaxed) == MODE_OFF) {
+        FAULTS_ENABLED.store(false, Ordering::Relaxed);
+    }
+}
+
+/// Arm from the `A2PSGD_FAULTS` env var if set and non-empty. Returns
+/// whether anything was armed.
+pub fn arm_env() -> Result<bool> {
+    match std::env::var("A2PSGD_FAULTS") {
+        Ok(v) if !v.trim().is_empty() => {
+            arm(&v)?;
+            Ok(true)
+        }
+        _ => Ok(false),
+    }
+}
+
+/// Disarm every point, zero every hit counter, and return to dark mode.
+pub fn reset() {
+    for slot in &SLOTS {
+        slot.mode.store(MODE_OFF, Ordering::Relaxed);
+        slot.param.store(0, Ordering::Relaxed);
+        slot.seed.store(0, Ordering::Relaxed);
+        slot.hits.store(0, Ordering::Relaxed);
+    }
+    FAULTS_ENABLED.store(false, Ordering::Relaxed);
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+// Unit tests stay *pure* — they exercise the parser and the deterministic
+// schedule math only. Tests that arm the process-global slots live in
+// `tests/fault_soak.rs`, serialized on a mutex, because lib unit tests run
+// concurrently and armed failpoints would leak into unrelated tests.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for p in FailPoint::ALL {
+            assert_eq!(FailPoint::from_name(p.name()), Some(p));
+        }
+        assert_eq!(FailPoint::from_name("nope"), None);
+    }
+
+    #[test]
+    fn spec_parses_every_schedule_kind() {
+        let got = parse_spec(
+            "shard.open=once; shard.read=nth:3, mmap.map=prob:0.25:9;\
+             checkpoint.write=latency:5ms; pool.worker=off",
+        )
+        .unwrap();
+        assert_eq!(
+            got,
+            vec![
+                (FailPoint::ShardOpen, Schedule::Once),
+                (FailPoint::ShardRead, Schedule::Nth(3)),
+                (FailPoint::MmapMap, Schedule::Prob { p: 0.25, seed: 9 }),
+                (FailPoint::CheckpointWrite, Schedule::LatencyUs(5_000)),
+                (FailPoint::PoolWorker, Schedule::Off),
+            ]
+        );
+    }
+
+    #[test]
+    fn spec_rejects_garbage() {
+        assert!(parse_spec("shard.read").is_err(), "missing =");
+        assert!(parse_spec("bogus.point=once").is_err(), "unknown point");
+        assert!(parse_spec("shard.read=sometimes").is_err(), "unknown mode");
+        assert!(parse_spec("shard.read=nth").is_err(), "nth without count");
+        assert!(parse_spec("shard.read=nth:0").is_err(), "nth is 1-based");
+        assert!(parse_spec("shard.read=prob:1.5").is_err(), "p out of range");
+        assert!(parse_spec("shard.read=prob:0.5:7:9").is_err(), "extra field");
+        assert!(parse_spec("shard.read=latency:5ms:3").is_err(), "latency seed");
+    }
+
+    #[test]
+    fn durations_accept_suffixes() {
+        assert_eq!(parse_duration_us("250").unwrap(), 250);
+        assert_eq!(parse_duration_us("250us").unwrap(), 250);
+        assert_eq!(parse_duration_us("5ms").unwrap(), 5_000);
+        assert_eq!(parse_duration_us("2s").unwrap(), 2_000_000);
+        assert!(parse_duration_us("fast").is_err());
+    }
+
+    #[test]
+    fn once_and_nth_fire_exactly_once() {
+        let once: Vec<bool> = (0..5).map(|n| Schedule::Once.fires(n)).collect();
+        assert_eq!(once, vec![true, false, false, false, false]);
+        let nth: Vec<bool> = (0..5).map(|n| Schedule::Nth(3).fires(n)).collect();
+        assert_eq!(nth, vec![false, false, true, false, false]);
+    }
+
+    #[test]
+    fn prob_schedule_is_deterministic_and_seed_sensitive() {
+        let s1 = Schedule::Prob { p: 0.3, seed: 1 };
+        let a: Vec<bool> = (0..256).map(|n| s1.fires(n)).collect();
+        let b: Vec<bool> = (0..256).map(|n| s1.fires(n)).collect();
+        assert_eq!(a, b, "same seed ⇒ same sequence");
+        let s2 = Schedule::Prob { p: 0.3, seed: 2 };
+        let c: Vec<bool> = (0..256).map(|n| s2.fires(n)).collect();
+        assert_ne!(a, c, "different seed ⇒ different sequence");
+        let fired = a.iter().filter(|&&f| f).count();
+        assert!((20..135).contains(&fired), "p=0.3 over 256 hits fired {fired} times");
+    }
+
+    #[test]
+    fn prob_extremes_never_and_always_fire() {
+        let never = Schedule::Prob { p: 0.0, seed: 7 };
+        assert!((0..128).all(|n| !never.fires(n)));
+        let always = Schedule::Prob { p: 1.0, seed: 7 };
+        assert!((0..128).all(|n| always.fires(n)));
+    }
+
+    #[test]
+    fn off_and_latency_never_fire() {
+        assert!((0..16).all(|n| !Schedule::Off.fires(n)));
+        assert!((0..16).all(|n| !Schedule::LatencyUs(1).fires(n)));
+    }
+}

@@ -44,6 +44,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod engine;
+pub mod fault;
 pub mod metrics;
 pub mod model;
 pub mod obs;

@@ -100,7 +100,40 @@ fn config_from_args(args: &Args, engine: EngineKind, dataset_name: &str) -> Resu
     if let Some(dir) = args.get("artifacts") {
         cfg.artifacts_dir = Some(PathBuf::from(dir));
     }
+    if let Some(n) = args.get_parsed::<u32>("checkpoint-every")? {
+        let path = args
+            .get("checkpoint")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from(args.get_or("out", "results")).join("checkpoint.a2pf"));
+        cfg = cfg.checkpoint_every(n, path);
+    } else if args.get("checkpoint").is_some() {
+        anyhow::bail!("--checkpoint needs --checkpoint-every N to have any effect");
+    }
+    if let Some(p) = args.get("resume") {
+        cfg = cfg.resume(PathBuf::from(p));
+    }
+    if let Some(p) = args.get("on-shard-error") {
+        cfg = cfg.on_shard_error(a2psgd::engine::ShardErrorPolicy::parse(p)?);
+    }
+    if let Some(n) = args.get_parsed::<u32>("epoch-retries")? {
+        cfg = cfg.epoch_retries(n);
+    }
     Ok(cfg)
+}
+
+/// Arm deterministic fault injection from `--config [fault]`, the `--faults`
+/// flag, and `A2PSGD_FAULTS`. Called early in each command so every
+/// failpoint downstream (shard open/read, checkpoint write, pool workers,
+/// prefetch) sees the schedules; with nothing configured the layer stays
+/// dark (a single relaxed load per failpoint).
+fn faults_from_args(args: &Args) -> Result<()> {
+    let mut fc = a2psgd::config::FaultConfig::default();
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        fc = fc.apply_toml(&text)?;
+    }
+    fc.apply_cli(args.get("faults")).install()
 }
 
 fn resolve(args: &Args) -> Result<Dataset> {
@@ -190,12 +223,24 @@ fn report_train(args: &Args, engine: EngineKind, report: &TrainReport) -> Result
             eprintln!("obs: {line}");
         }
     }
+    let ft = &report.fault;
+    if ft.degraded() || ft.retries > 0 || ft.epochs_retried > 0 {
+        eprintln!(
+            "fault: {} — quarantined shards {:?} ({} records/epoch lost), {} retries, \
+             {} epochs retried",
+            if ft.degraded() { "DEGRADED coverage" } else { "recovered" },
+            ft.quarantined_shards,
+            ft.lost_records,
+            ft.retries,
+            ft.epochs_retried
+        );
+    }
     if let Some(out) = args.get("out") {
         let dir = PathBuf::from(out);
         std::fs::create_dir_all(&dir)?;
         let name = report.dataset.replace('/', "_");
         let p = dir.join(format!("train_{}_{}.csv", name, engine.to_string().to_lowercase()));
-        std::fs::write(&p, report.history.to_csv())?;
+        a2psgd::data::atomic_file::write_atomic(&p, report.history.to_csv().as_bytes())?;
         eprintln!("wrote {}", p.display());
     }
     if let Some(path) = args.get("save") {
@@ -211,6 +256,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let engine = EngineKind::parse(&args.get_or("engine", "a2psgd"))?;
     let dc = data_config_from_args(args)?;
     let oc = obs_from_args(args)?;
+    faults_from_args(args)?;
     let path = std::path::Path::new(&key);
     let is_shards = a2psgd::data::shard::is_shard_dir(path);
     // `--format` is a hard assertion, not a hint — a mismatch errors
@@ -278,6 +324,7 @@ fn cmd_pack(args: &Args) -> Result<()> {
     use a2psgd::data::shard::{pack_coo, pack_text, PackOptions};
     let out = args.get("out").context("pack requires --out DIR")?;
     let dc = data_config_from_args(args)?;
+    faults_from_args(args)?;
     let opts = PackOptions::default().shard_mb(dc.shard_mb);
     let stats = if let Some(input) = args.get("data-file") {
         pack_text(std::path::Path::new(input), std::path::Path::new(out), &opts)?
@@ -351,6 +398,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let engine = EngineKind::parse(&args.get_or("engine", "a2psgd"))?;
     let cfg = config_from_args(args, engine, &data.name)?;
     let oc = obs_from_args(args)?;
+    faults_from_args(args)?;
     // Either load a checkpoint or train fresh.
     let factors = match args.get("load") {
         Some(path) => {
@@ -487,6 +535,7 @@ fn cmd_stream(args: &Args) -> Result<()> {
     let key = args.get_or("dataset", "small");
     let seed = args.get_parsed::<u64>("seed")?.unwrap_or(0x5EED);
     let oc = obs_from_args(args)?;
+    faults_from_args(args)?;
     if a2psgd::data::shard::is_shard_dir(std::path::Path::new(&key)) {
         return cmd_stream_shards(args, &key, seed, &oc);
     }
@@ -885,6 +934,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     use a2psgd::scheduler::{BlockScheduler, LockFreeScheduler};
     use a2psgd::sparse::{stats, Entry, SweepLanes};
 
+    faults_from_args(args)?;
     // Defaults ← [bench] config file ← flags.
     let mut bcfg = BenchConfig::default();
     if let Some(path) = args.get("config") {
@@ -1453,7 +1503,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
             std::fs::create_dir_all(dir)?;
         }
     }
-    std::fs::write(&out, payload + "\n")?;
+    a2psgd::data::atomic_file::write_atomic(&out, (payload + "\n").as_bytes())?;
     eprintln!("wrote {}", out.display());
     Ok(())
 }
@@ -1480,7 +1530,7 @@ fn cmd_gen_data(args: &Args) -> Result<()> {
     for e in data.train.entries().iter().chain(data.test.entries()) {
         text.push_str(&format!("{} {} {}\n", e.u, e.v, e.r));
     }
-    std::fs::write(out, text)?;
+    a2psgd::data::atomic_file::write_atomic(std::path::Path::new(out), text.as_bytes())?;
     println!("wrote {} ({} instances)", out, data.total_nnz());
     Ok(())
 }

@@ -25,8 +25,8 @@ use super::Factors;
 use crate::optim::Hyper;
 use crate::Result;
 use anyhow::{bail, Context};
-use std::io::{Read, Write};
-use std::path::Path;
+use std::io::Read;
+use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 4] = b"A2PF";
 const VERSION: u32 = 2;
@@ -163,13 +163,45 @@ pub fn from_bytes(bytes: &[u8]) -> Result<Factors> {
     Ok(from_bytes_with_meta(bytes)?.0)
 }
 
-/// Write a checkpoint file with metadata.
+/// `<path>.prev` — where [`save_with_meta`] parks the previous good
+/// checkpoint and where [`load_resilient`] falls back when `path` is torn.
+pub fn prev_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".prev");
+    PathBuf::from(os)
+}
+
+/// Best-effort rotation of the current checkpoint to `<path>.prev` (a hard
+/// link where possible, a copy otherwise). Failure is ignored: the atomic
+/// write alone already guarantees old-or-new at `path`; the `.prev` copy is
+/// belt-and-braces against corruption that happens *after* a successful
+/// write (bad disk, external truncation).
+fn rotate_prev(path: &Path) {
+    if !path.exists() {
+        return;
+    }
+    let prev = prev_path(path);
+    let _ = std::fs::remove_file(&prev);
+    if std::fs::hard_link(path, &prev).is_err() {
+        let _ = std::fs::copy(path, &prev);
+    }
+}
+
+/// Write a checkpoint file with metadata, crash-safely: the previous good
+/// checkpoint is first parked at `<path>.prev`, then the new bytes go
+/// through the atomic tmp + fsync + rename protocol
+/// ([`crate::data::atomic_file`]). A crash at any point leaves a loadable
+/// checkpoint at `path` or `.prev` — never only a torn file. The
+/// `checkpoint.write` failpoint simulates exactly that crash mid-write.
 pub fn save_with_meta(f: &Factors, meta: &CheckpointMeta, path: &Path) -> Result<()> {
     let bytes = to_bytes_with_meta(f, meta);
-    let mut file = std::fs::File::create(path)
-        .with_context(|| format!("creating {}", path.display()))?;
-    file.write_all(&bytes)?;
-    Ok(())
+    rotate_prev(path);
+    crate::data::atomic_file::write_atomic_with_failpoint(
+        path,
+        &bytes,
+        Some(crate::fault::FailPoint::CheckpointWrite),
+    )
+    .with_context(|| format!("saving checkpoint {}", path.display()))
 }
 
 /// Write a checkpoint file (default metadata).
@@ -189,6 +221,25 @@ pub fn load_with_meta(path: &Path) -> Result<(Factors, CheckpointMeta)> {
         .with_context(|| format!("opening {}", path.display()))?
         .read_to_end(&mut bytes)?;
     from_bytes_with_meta(&bytes).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// The resume-path loader: try `path`, and when it is missing, truncated,
+/// or fails its CRC, fall back to the `<path>.prev` copy kept by
+/// [`save_with_meta`]. Errors only when *both* files are unusable, carrying
+/// the primary failure (the one the operator should investigate).
+pub fn load_resilient(path: &Path) -> Result<(Factors, CheckpointMeta)> {
+    let primary_err = match load_with_meta(path) {
+        Ok(ok) => return Ok(ok),
+        Err(e) => e,
+    };
+    match load_with_meta(&prev_path(path)) {
+        Ok(ok) => Ok(ok),
+        Err(prev_err) => Err(primary_err.context(format!(
+            "checkpoint {} unusable and fallback {} failed too: {prev_err:#}",
+            path.display(),
+            prev_path(path).display()
+        ))),
+    }
 }
 
 #[cfg(test)]
@@ -339,5 +390,44 @@ mod tests {
     #[test]
     fn load_missing_file_errors() {
         assert!(load(Path::new("/no/such/model.a2pf")).is_err());
+    }
+
+    #[test]
+    fn save_rotates_previous_checkpoint_to_prev() {
+        let dir = std::env::temp_dir().join(format!("a2psgd_ckpt_prev_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("model.a2pf");
+        let f = factors();
+        let m1 = CheckpointMeta { epoch: 1, ..meta() };
+        let m2 = CheckpointMeta { epoch: 2, ..meta() };
+        save_with_meta(&f, &m1, &p).unwrap();
+        assert!(!prev_path(&p).exists(), "first save has nothing to rotate");
+        save_with_meta(&f, &m2, &p).unwrap();
+        let (_, cur) = load_with_meta(&p).unwrap();
+        let (_, prev) = load_with_meta(&prev_path(&p)).unwrap();
+        assert_eq!(cur.epoch, 2);
+        assert_eq!(prev.epoch, 1, ".prev holds the rotated previous save");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_resilient_falls_back_to_prev_on_torn_primary() {
+        let dir = std::env::temp_dir().join(format!("a2psgd_ckpt_res_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("model.a2pf");
+        let f = factors();
+        save_with_meta(&f, &CheckpointMeta { epoch: 1, ..meta() }, &p).unwrap();
+        save_with_meta(&f, &CheckpointMeta { epoch: 2, ..meta() }, &p).unwrap();
+        // Tear the primary the way a crashed non-atomic writer would.
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        let (g, back) = load_resilient(&p).unwrap();
+        assert_eq!(back.epoch, 1, "fallback must serve the previous good save");
+        assert_eq!(g.m, f.m);
+        // Both unusable ⇒ error mentioning the fallback.
+        std::fs::remove_file(prev_path(&p)).unwrap();
+        let e = format!("{:#}", load_resilient(&p).unwrap_err());
+        assert!(e.contains("fallback"), "{e}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -55,6 +55,29 @@ impl SharedFactors {
         unsafe { &*self.cell.get() }
     }
 
+    /// Overwrite the factor values in place from `src` (identical shape).
+    /// This is the poisoned-epoch recovery path: the driver clones the
+    /// factors before each epoch and, when a worker panic poisons the
+    /// epoch, rolls the shared state back before retrying — without needing
+    /// the `&mut self` that [`SharedFactors::get_mut`] requires (the runner
+    /// owns the `SharedFactors` behind a shared reference).
+    ///
+    /// # Safety
+    /// Caller must guarantee **full quiescence**: no thread is concurrently
+    /// reading or writing any row (the exclusive strengthening of
+    /// [`SharedFactors::get`]'s contract). Between pool epochs — all
+    /// workers parked at the barrier — is such a point.
+    pub unsafe fn restore(&self, src: &Factors) {
+        // SAFETY: quiescence is this fn's contract; the cell pointer is
+        // always valid.
+        let f = unsafe { &mut *self.cell.get() };
+        assert_eq!(f.d(), src.d(), "restore must preserve the feature dimension");
+        f.m.copy_from_slice(&src.m);
+        f.n.copy_from_slice(&src.n);
+        f.phi.copy_from_slice(&src.phi);
+        f.psi.copy_from_slice(&src.psi);
+    }
+
     /// Raw mutable access for one (u, v) update: returns
     /// `(m_u, n_v, φ_u, ψ_v)` row slices.
     ///
@@ -117,6 +140,27 @@ mod tests {
         assert_eq!(f.n[5], 8.0); // row 2, col 1
         assert_eq!(f.phi[2], 9.0);
         assert_eq!(f.psi[5], 10.0);
+    }
+
+    #[test]
+    fn restore_rolls_back_in_place() {
+        let mut rng = Rng::new(7);
+        let pristine = Factors::init(6, 5, 3, 0.3, &mut rng);
+        let shared = SharedFactors::new(pristine.clone());
+        // SAFETY: single-threaded test — trivially quiescent.
+        unsafe {
+            let (mu, nv, phiu, psiv) = shared.rows_mut(2, 3);
+            mu[0] = 99.0;
+            nv[0] = 99.0;
+            phiu[0] = 99.0;
+            psiv[0] = 99.0;
+            shared.restore(&pristine);
+        }
+        let f = shared.into_inner();
+        assert_eq!(f.m, pristine.m);
+        assert_eq!(f.n, pristine.n);
+        assert_eq!(f.phi, pristine.phi);
+        assert_eq!(f.psi, pristine.psi);
     }
 
     #[test]

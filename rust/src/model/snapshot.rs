@@ -99,6 +99,23 @@ impl SnapshotStore {
     pub fn version(&self) -> u64 {
         self.version.load(Ordering::Acquire)
     }
+
+    /// Persist the current snapshot as a crash-safe checkpoint file
+    /// (atomic tmp + fsync + rename via [`super::checkpoint`]), recording
+    /// the snapshot version in the checkpoint metadata so a restarted
+    /// server knows which generation it reloaded. Returns the persisted
+    /// version. Publishing concurrently is fine: whichever generation
+    /// `load` pins is written out whole.
+    pub fn persist(&self, path: &std::path::Path, hyper: crate::optim::Hyper) -> crate::Result<u64> {
+        let snap = self.load();
+        let meta = super::checkpoint::CheckpointMeta {
+            epoch: 0,
+            snapshot_version: snap.version(),
+            hyper,
+        };
+        super::checkpoint::save_with_meta(snap.factors(), &meta, path)?;
+        Ok(snap.version())
+    }
 }
 
 impl std::fmt::Debug for SnapshotStore {
@@ -148,6 +165,22 @@ mod tests {
         let store = SnapshotStore::new(factors(1, 4)); // d = 2
         let mut rng = Rng::new(9);
         store.publish(Factors::init(4, 4, 3, 0.5, &mut rng)); // d = 3
+    }
+
+    #[test]
+    fn persist_writes_a_loadable_checkpoint_with_version() {
+        let dir = std::env::temp_dir().join(format!("a2psgd_snap_persist_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("snapshot.a2pf");
+        let store = SnapshotStore::new(factors(11, 6));
+        store.publish(factors(12, 6));
+        let hyper = crate::optim::Hyper::nag(1e-3, 1e-2, 0.9);
+        let v = store.persist(&p, hyper).unwrap();
+        assert_eq!(v, 2);
+        let (f, meta) = super::super::checkpoint::load_with_meta(&p).unwrap();
+        assert_eq!(meta.snapshot_version, 2);
+        assert_eq!(f.m, store.load().factors().m);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -85,11 +85,17 @@ pub enum Ctr {
     ServeBatches,
     /// Trace events dropped because the sink hit its cap.
     TraceDropped,
+    /// Faults fired by armed failpoints ([`crate::fault`]).
+    FaultsInjected,
+    /// Transient-error retries taken by the fault-tolerant IO paths.
+    Retries,
+    /// Shards quarantined after exhausting their retry budget.
+    ShardsQuarantined,
 }
 
 impl Ctr {
     /// Every counter, in slot order.
-    pub const ALL: [Ctr; 18] = [
+    pub const ALL: [Ctr; 21] = [
         Ctr::SchedContention,
         Ctr::SchedStarved,
         Ctr::BlocksProcessed,
@@ -108,6 +114,9 @@ impl Ctr {
         Ctr::ServeRequests,
         Ctr::ServeBatches,
         Ctr::TraceDropped,
+        Ctr::FaultsInjected,
+        Ctr::Retries,
+        Ctr::ShardsQuarantined,
     ];
 
     /// Stable scrape name (the metric catalog).
@@ -131,6 +140,9 @@ impl Ctr {
             Ctr::ServeRequests => "serve_requests",
             Ctr::ServeBatches => "serve_batches",
             Ctr::TraceDropped => "trace_dropped",
+            Ctr::FaultsInjected => "faults_injected",
+            Ctr::Retries => "retries",
+            Ctr::ShardsQuarantined => "shards_quarantined",
         }
     }
 }
@@ -577,6 +589,16 @@ impl Snapshot {
         if !parts.is_empty() {
             out.push(format!("stream:  {}", parts.join(" ")));
         }
+        let mut parts = Vec::new();
+        for c in [Ctr::FaultsInjected, Ctr::Retries, Ctr::ShardsQuarantined] {
+            let v = self.counter(c);
+            if v > 0 {
+                parts.push(format!("{}={}", c.name(), v));
+            }
+        }
+        if !parts.is_empty() {
+            out.push(format!("faults:  {}", parts.join(" ")));
+        }
         for h in &self.hists {
             if h.count() > 0 {
                 out.push(format!(
@@ -596,7 +618,8 @@ impl Snapshot {
 pub fn write_metrics_json(path: &std::path::Path) -> crate::Result<()> {
     use anyhow::Context;
     let body = snapshot().to_json();
-    std::fs::write(path, body).with_context(|| format!("writing metrics to {}", path.display()))?;
+    crate::data::atomic_file::write_atomic(path, body.as_bytes())
+        .with_context(|| format!("writing metrics to {}", path.display()))?;
     Ok(())
 }
 

@@ -166,7 +166,8 @@ pub fn write_jsonl(path: &std::path::Path) -> crate::Result<usize> {
         body.push_str(&event_jsonl(ev));
         body.push('\n');
     }
-    std::fs::write(path, body).with_context(|| format!("writing trace to {}", path.display()))?;
+    crate::data::atomic_file::write_atomic(path, body.as_bytes())
+        .with_context(|| format!("writing trace to {}", path.display()))?;
     Ok(events.len())
 }
 
@@ -368,7 +369,7 @@ pub fn export_chrome(input: &std::path::Path, output: &std::path::Path) -> crate
         .str("displayTimeUnit", "ms")
         .raw("otherData", &Obj::new().str("source", "a2psgd trace-export").build())
         .build();
-    std::fs::write(output, doc)
+    crate::data::atomic_file::write_atomic(output, doc.as_bytes())
         .with_context(|| format!("writing chrome trace {}", output.display()))?;
     Ok(n)
 }

@@ -133,13 +133,39 @@ impl WorkerPool {
     /// Run one epoch: `f(t)` executes exactly once per worker index, and
     /// every execution has finished when this returns. The closure may
     /// borrow caller state (the scoped-thread contract, kept by the
-    /// completion barrier — see module docs).
+    /// completion barrier — see module docs). A worker panic is re-raised
+    /// here after the barrier (`thread::scope` semantics).
     pub fn run(&self, f: impl Fn(usize) + Send + Sync) {
+        if self.run_inner(f) {
+            panic!("a worker thread panicked during a pool epoch");
+        }
+    }
+
+    /// [`WorkerPool::run`] for fault-tolerant callers: a worker panic marks
+    /// the epoch **poisoned** instead of unwinding the leader. Returns
+    /// `true` when the epoch completed cleanly, `false` when poisoned — the
+    /// epoch still ran to its completion barrier either way (surviving
+    /// workers finish their jobs), so the pool stays fully usable and the
+    /// driver can retry the epoch from its last checkpoint.
+    pub fn run_poisonable(&self, f: impl Fn(usize) + Send + Sync) -> bool {
+        !self.run_inner(f)
+    }
+
+    /// Shared epoch protocol; returns whether any worker panicked.
+    fn run_inner(&self, f: impl Fn(usize) + Send + Sync) -> bool {
         if self.handles.is_empty() {
+            // Inline single-worker path: same catch + poison protocol so
+            // `run`/`run_poisonable` behave identically at threads = 1
+            // (the panic message is printed by the hook either way).
+            let mut poisoned = false;
             for t in 0..self.threads {
-                f(t);
+                if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_job(&f, t)))
+                    .is_err()
+                {
+                    poisoned = true;
+                }
             }
-            return;
+            return poisoned;
         }
         let _gate = self.run_gate.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         let job: Arc<dyn Fn(usize) + Send + Sync + '_> = Arc::new(f);
@@ -167,9 +193,11 @@ impl WorkerPool {
         // lock, so this is the final reference.
         debug_assert_eq!(Arc::strong_count(&job), 1);
         drop(job);
-        if self.shared.panicked.swap(false, Ordering::AcqRel) {
-            panic!("a worker thread panicked during a pool epoch");
-        }
+        // AcqRel: the acquire half pairs with the worker's Release store so
+        // the leader observes the flag set by any worker that panicked this
+        // epoch; the swap also clears it so a poisoned epoch never bleeds
+        // into the next one (see CONCURRENCY.md, "poisoned-epoch flag").
+        self.shared.panicked.swap(false, Ordering::AcqRel)
     }
 }
 
@@ -187,6 +215,17 @@ impl Drop for WorkerPool {
             let _ = h.join();
         }
     }
+}
+
+/// Execute one worker's share of an epoch job, with the `pool.worker`
+/// failpoint in front: an armed schedule fires as a worker panic, exactly
+/// the fault the poisoned-epoch recovery path exists to absorb.
+#[inline]
+fn run_job<F: Fn(usize) + ?Sized>(job: &F, t: usize) {
+    if crate::fault::should_fail(crate::fault::FailPoint::PoolWorker) {
+        panic!("injected fault: pool.worker (worker {t})");
+    }
+    job(t);
 }
 
 fn worker_loop(shared: &PoolShared, t: usize, nworkers: usize) {
@@ -216,7 +255,11 @@ fn worker_loop(shared: &PoolShared, t: usize, nworkers: usize) {
                 st = shared.work_cv.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
             }
         };
-        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(t))).is_err() {
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_job(job.as_ref(), t)))
+            .is_err()
+        {
+            // Release pairs with the leader's AcqRel swap after the
+            // completion barrier (CONCURRENCY.md, "poisoned-epoch flag").
             shared.panicked.store(true, Ordering::Release);
         }
         // Drop our job handle *before* signalling completion: the leader
@@ -405,6 +448,41 @@ mod tests {
             count.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(count.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn run_poisonable_reports_poison_without_unwinding() {
+        for threads in [1usize, 2, 4] {
+            let pool = WorkerPool::new(threads);
+            let clean = pool.run_poisonable(|t| {
+                if t == threads - 1 {
+                    panic!("boom");
+                }
+            });
+            assert!(!clean, "threads={threads}: poisoned epoch must report false");
+            // Poison never bleeds into the next epoch, and the pool stays
+            // fully usable.
+            let count = AtomicU64::new(0);
+            let clean = pool.run_poisonable(|_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(clean, "threads={threads}: clean epoch after a poisoned one");
+            assert_eq!(count.load(Ordering::Relaxed), threads as u64);
+        }
+    }
+
+    #[test]
+    fn poisoned_epoch_still_runs_surviving_workers() {
+        let pool = WorkerPool::new(4);
+        let ran = AtomicU64::new(0);
+        let clean = pool.run_poisonable(|t| {
+            if t == 0 {
+                panic!("boom");
+            }
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(!clean);
+        assert_eq!(ran.load(Ordering::Relaxed), 3, "survivors complete their jobs");
     }
 
     #[test]

@@ -1,0 +1,305 @@
+//! Seeded fault-injection soak over the out-of-core training runtime.
+//!
+//! The fault layer (`a2psgd::fault`) turns "what if a shard read dies
+//! mid-epoch / the checkpoint write tears / mmap is refused / a worker
+//! panics" from war stories into deterministic schedules. This harness
+//! arms hundreds of seeded random schedules against real streaming
+//! training runs and asserts the runtime's contract: **every run either
+//! completes (possibly degraded, with the degradation reported) or fails
+//! with a clean `Err` — never a panic, never a hang, never silent
+//! corruption.** Alongside the soak sit targeted regressions for each
+//! recovery mechanism: torn checkpoint writes, the mmap owned-buffer
+//! fallback, and poisoned-epoch rollback.
+//!
+//! Fault schedules are process-global, so every test serializes on one
+//! mutex and disarms through a drop guard — a failing test must never
+//! leave points armed for its neighbors. Iteration count comes from
+//! `A2PSGD_FAULT_ITERS` (default 500 — the CI budget; crank it locally
+//! for a deeper soak).
+
+use a2psgd::config::MemoryMode;
+use a2psgd::data::shard::{self, pack_triplets, Manifest, PackOptions};
+use a2psgd::engine::{self, EngineKind, OocOptions, ShardErrorPolicy, TrainConfig};
+use a2psgd::fault;
+use a2psgd::model::{checkpoint, Factors};
+use a2psgd::rng::Rng;
+use a2psgd::testutil;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Serializes every test in this binary: fault points are process-global.
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+/// Lock + disarm on entry, disarm again on drop (even on panic), so a
+/// failing assertion can't leak an armed schedule into the next test.
+struct FaultGuard<'a> {
+    _lock: std::sync::MutexGuard<'a, ()>,
+}
+
+fn armed() -> FaultGuard<'static> {
+    let lock = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    fault::reset();
+    FaultGuard { _lock: lock }
+}
+
+impl Drop for FaultGuard<'_> {
+    fn drop(&mut self) {
+        fault::reset();
+    }
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("a2psgd_fault_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn soak_iters() -> u64 {
+    std::env::var("A2PSGD_FAULT_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(testutil::budget(500, 10) as u64)
+}
+
+/// Pack a deterministic multi-shard directory (~6 shards of ~170 records).
+fn pack_reference(dir: &Path) -> Manifest {
+    let triplets: Vec<(u64, u64, f32)> = (0..900u64)
+        .map(|i| (i / 12, (i * 13) % 40, (i % 9) as f32 * 0.5 + 1.0))
+        .collect();
+    let stats = pack_triplets(&triplets, dir, &PackOptions { shard_bytes: 2048 }).unwrap();
+    assert!(stats.shards >= 3, "soak reference must span shards, got {}", stats.shards);
+    Manifest::load(dir).unwrap()
+}
+
+/// Streaming ooc options with a tile budget small enough for several waves
+/// (so the prefetch failpoint has real prefetches to hit).
+fn streaming_opts() -> OocOptions {
+    OocOptions::new(0.3, 0x5EED, 500).memory(MemoryMode::Streaming).tile_bytes(4 << 10)
+}
+
+fn soak_config(threads: usize, seed: u64) -> TrainConfig {
+    TrainConfig::preset_named(EngineKind::A2psgd, "fault-soak")
+        .dim(4)
+        .threads(threads)
+        .epochs(3)
+        .seed(seed)
+        .on_shard_error(ShardErrorPolicy::Skip)
+        .epoch_retries(4)
+}
+
+/// One random schedule entry. Panicking points (`pool.worker`,
+/// `prefetch.wave`) only get single-shot schedules (`once` / `nth`): each
+/// firing poisons one epoch attempt, and the driver's retry budget must
+/// stay ahead of the total number of firings — a `prob` schedule there
+/// would (correctly) exhaust the retries and abort, which is the contract
+/// for persistent poison, not a soak failure.
+fn random_entry(rng: &mut Rng) -> String {
+    let panicky = ["pool.worker", "prefetch.wave"];
+    let erroring = ["shard.open", "shard.read", "mmap.map", "checkpoint.write"];
+    if rng.gen_index(4) == 0 {
+        let point = panicky[rng.gen_index(panicky.len())];
+        match rng.gen_index(2) {
+            0 => format!("{point}=once"),
+            _ => format!("{point}=nth:{}", rng.gen_index(6) + 1),
+        }
+    } else {
+        let point = erroring[rng.gen_index(erroring.len())];
+        match rng.gen_index(3) {
+            0 => format!("{point}=once"),
+            1 => format!("{point}=nth:{}", rng.gen_index(12) + 1),
+            _ => {
+                let p = (rng.gen_index(9) + 1) as f64 / 10.0;
+                format!("{point}=prob:{p}:{}", rng.next_u64())
+            }
+        }
+    }
+}
+
+/// The tentpole soak: hundreds of seeded random fault schedules against
+/// streaming out-of-core training under the `skip` policy. Every run must
+/// return — `Ok` (clean or degraded-and-reported) or a clean `Err` (faults
+/// that hit before training starts, e.g. during the split scan) — and
+/// never panic or hang.
+#[test]
+fn soak_random_fault_schedules_never_panic() {
+    let guard = armed();
+    let dir = tmpdir("soak");
+    pack_reference(&dir);
+    let cp = dir.join("soak_checkpoint.a2pf");
+    let mut rng = Rng::new(0xFA_11_7_5);
+    let iters = soak_iters();
+    for iter in 0..iters {
+        fault::reset();
+        let entries: Vec<String> =
+            (0..rng.gen_index(3) + 1).map(|_| random_entry(&mut rng)).collect();
+        let spec = entries.join(";");
+        fault::arm(&spec).unwrap_or_else(|e| panic!("bad generated spec {spec:?}: {e:#}"));
+
+        let threads = 1 + rng.gen_index(3);
+        let cfg = soak_config(threads, rng.next_u64()).checkpoint_every(2, cp.clone());
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            engine::train_ooc_opts(&dir, "fault-soak", &cfg, &streaming_opts())
+        }));
+        let ctx = format!("iter {iter}/{iters}, threads {threads}, spec {spec:?}");
+        match res {
+            Err(_) => panic!("training panicked under an injected schedule: {ctx}"),
+            Ok(Err(_)) => {} // clean error (fault before/outside the driver) is in-contract
+            Ok(Ok(report)) => {
+                // Degradation must be reported honestly: quarantined shards
+                // imply lost records and the degraded flag.
+                if !report.fault.quarantined_shards.is_empty() {
+                    assert!(report.fault.degraded(), "quarantine without degraded flag: {ctx}");
+                    assert!(
+                        report.fault.lost_records > 0,
+                        "quarantined shards but zero lost records: {ctx}"
+                    );
+                }
+                for p in report.history.points() {
+                    assert!(p.rmse.is_finite(), "non-finite RMSE under faults: {ctx}");
+                }
+            }
+        }
+    }
+    drop(guard);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Torn checkpoint write: an injected failure mid-save must leave the
+/// previous checkpoint loadable (via the `.prev` rotation) and never a
+/// half-written primary that parses.
+#[test]
+fn torn_checkpoint_write_keeps_previous_generation_loadable() {
+    let guard = armed();
+    let dir = tmpdir("torn");
+    let path = dir.join("model.a2pf");
+    let mut rng = Rng::new(0x70_12);
+    let gen1 = Factors::init(30, 20, 4, 0.3, &mut rng);
+    let gen2 = Factors::init(30, 20, 4, 0.3, &mut rng);
+    assert_ne!(gen1.m, gen2.m, "generations must differ for the oracle to mean anything");
+
+    let meta1 = checkpoint::CheckpointMeta { epoch: 1, ..Default::default() };
+    checkpoint::save_with_meta(&gen1, &meta1, &path).unwrap();
+
+    fault::arm("checkpoint.write=once").unwrap();
+    let meta2 = checkpoint::CheckpointMeta { epoch: 2, ..Default::default() };
+    let err = checkpoint::save_with_meta(&gen2, &meta2, &path)
+        .expect_err("armed checkpoint.write must fail the save");
+    assert!(format!("{err:#}").contains("injected fault"), "{err:#}");
+
+    // The torn save rotated gen1 to `.prev` and tore the new primary;
+    // resilient load must land on gen1, not error and not gen2.
+    let (restored, meta) = checkpoint::load_resilient(&path)
+        .expect("previous generation must remain loadable after a torn write");
+    assert_eq!(meta.epoch, 1);
+    assert_eq!(restored.m, gen1.m);
+    assert_eq!(restored.n, gen1.n);
+    assert_eq!(restored.phi, gen1.phi);
+    assert_eq!(restored.psi, gen1.psi);
+
+    // Disarmed, the next save succeeds and rotates generations normally.
+    checkpoint::save_with_meta(&gen2, &meta2, &path).unwrap();
+    let (now, meta) = checkpoint::load_resilient(&path).unwrap();
+    assert_eq!(meta.epoch, 2);
+    assert_eq!(now.m, gen2.m);
+    drop(guard);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// An injected `mmap.map` refusal must fall back to an owned read-through
+/// buffer transparently: same records, `is_mapped()` reporting the truth.
+#[test]
+fn mmap_refusal_falls_back_to_owned_buffer_with_identical_records() {
+    let guard = armed();
+    let dir = tmpdir("mmap");
+    let manifest = pack_reference(&dir);
+    let sweep = |dir: &Path, manifest: &Manifest, s: usize| {
+        let mut r = shard::open_checked_mmap(dir, manifest, &manifest.shards[s]).unwrap();
+        let mut out = Vec::new();
+        let mut buf = Vec::new();
+        while r.next_chunk(&mut buf, 97).unwrap() > 0 {
+            out.extend_from_slice(&buf);
+        }
+        (out, r.is_mapped())
+    };
+    let (baseline, _) = sweep(&dir, &manifest, 0);
+
+    fault::arm("mmap.map=prob:1.0:7").unwrap();
+    let (fallback, mapped) = sweep(&dir, &manifest, 0);
+    assert!(!mapped, "armed mmap.map must force the owned-buffer backing");
+    assert_eq!(fallback, baseline, "owned fallback must decode identical records");
+    drop(guard);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A worker panic mid-epoch poisons only that epoch: the driver rolls the
+/// factors back to the epoch-boundary snapshot, retries, and the run
+/// completes with the retry visible in the fault summary.
+#[test]
+fn poisoned_epoch_rolls_back_and_retries_to_completion() {
+    let guard = armed();
+    let dir = tmpdir("poison");
+    pack_reference(&dir);
+    fault::arm("pool.worker=once").unwrap();
+    let cfg = soak_config(2, 0xBEEF);
+    let report = engine::train_ooc_opts(&dir, "fault-soak", &cfg, &streaming_opts())
+        .expect("a single worker panic must not fail the run");
+    assert!(
+        report.fault.epochs_retried >= 1,
+        "the poisoned epoch retry must be reported, got {:?}",
+        report.fault
+    );
+    assert!(fault::hits(fault::FailPoint::PoolWorker) >= 1, "the armed point never fired");
+    assert!(!report.history.points().is_empty(), "the run must still evaluate epochs");
+    drop(guard);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Prefetch faults land inside the poisonable epoch too — the decode
+/// helper panics on worker 0 while prefetching the next wave, and the
+/// driver must absorb it exactly like an update-phase panic.
+#[test]
+fn prefetch_wave_fault_is_absorbed_by_epoch_retry() {
+    let guard = armed();
+    let dir = tmpdir("prefetch");
+    pack_reference(&dir);
+    fault::arm("prefetch.wave=once").unwrap();
+    let cfg = soak_config(2, 0xF00D);
+    let report = engine::train_ooc_opts(&dir, "fault-soak", &cfg, &streaming_opts())
+        .expect("a prefetch panic must not fail the run");
+    if fault::hits(fault::FailPoint::PrefetchWave) >= 1 {
+        assert!(
+            report.fault.epochs_retried >= 1,
+            "prefetch fired but no epoch retry was reported: {:?}",
+            report.fault
+        );
+    }
+    drop(guard);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Persistent decode failures on one shard under `--on-shard-error skip`
+/// quarantine exactly that shard: the run completes degraded, reports the
+/// lost records, and keeps training the survivors.
+#[test]
+fn persistent_shard_failure_quarantines_and_degrades_honestly() {
+    let guard = armed();
+    let dir = tmpdir("quarantine");
+    pack_reference(&dir);
+    // A high (not certain) per-read failure probability: the open-phase
+    // split scan may or may not survive it, but any run that reaches the
+    // epochs will exhaust the per-shard retry budget and quarantine.
+    fault::arm("shard.read=prob:0.95:42").unwrap();
+    let cfg = soak_config(2, 0xD06);
+    match engine::train_ooc_opts(&dir, "fault-soak", &cfg, &streaming_opts()) {
+        // The split scan itself may trip the armed point → clean error.
+        Err(e) => assert!(format!("{e:#}").contains("injected fault"), "{e:#}"),
+        Ok(report) => {
+            assert!(report.fault.degraded(), "95% read failure must degrade: {:?}", report.fault);
+            assert!(report.fault.lost_records > 0);
+            assert!(report.fault.retries > 0, "quarantine must come after retries");
+        }
+    }
+    drop(guard);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -25,6 +25,13 @@ The baseline's `max_overhead_frac` is a ceiling — instrumented training
 the uninstrumented run, so the observability layer can never quietly tax
 the hot path.
 
+`memory` gates the same inverse way: the baseline's
+`max_streaming_overhead` is a ceiling on `streaming_overhead` — the
+streaming (bounded-tile) epoch must stay within that multiple (x
+tolerance) of the resident epoch, so per-epoch re-decode (and anything
+riding the wave path, like the fault-injection hooks) can never quietly
+erode the out-of-core mode.
+
 Every section named here must be present in *both* artifacts; a missing
 section is a failure, not a skip — a gate that silently checks nothing is
 worse than no gate.
@@ -122,6 +129,24 @@ def main():
             if base_max > 0:
                 msg += f" ({cur_ov / base_max:.2f}x of budget)"
             failures.append(msg)
+
+    # memory: inverse semantics again — streaming_overhead is the streaming
+    # epoch's cost as a multiple of the resident epoch, and the baseline
+    # holds the ceiling it must stay under.
+    base_mem = base.get("memory", {}).get("max_streaming_overhead")
+    cur_mem = cur.get("memory", {}).get("streaming_overhead")
+    if base_mem is None:
+        failures.append(f"memory: max_streaming_overhead missing from baseline {args.baseline}")
+    elif cur_mem is None:
+        failures.append(f"memory: streaming_overhead missing from current artifact {args.current}")
+    else:
+        checked += 1
+        if cur_mem > base_mem * tol:
+            failures.append(
+                f"memory: observed streaming overhead {cur_mem:.3f}x > ceiling "
+                f"{base_mem:.3f}*{tol:.2f} = {base_mem * tol:.3f} "
+                f"({cur_mem / base_mem:.2f}x of budget)"
+            )
 
     if failures:
         print(f"bench gate: {len(failures)} regression(s) past the {tol:.2f}x tolerance:")
