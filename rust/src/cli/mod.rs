@@ -9,6 +9,8 @@
 //!                [--data-file PATH] [--out DIR] [--no-early-stop]
 //! a2psgd compare [--dataset D] [--threads N] [--seeds N] [--epochs N] [--out DIR]
 //! a2psgd serve   [--dataset D] [--requests N] [--artifacts DIR]
+//!                [--listen ADDR] [--serve-secs N] [--quant int8|f16|f32]
+//!                [--deadline-ms N] [--queue-cap N] [--native]
 //! a2psgd stream  [--dataset D] [--warm-frac F] [--batch N] [--window N]
 //!                [--publish-every N] [--foldin-steps N] [--threads N]
 //!                [--epochs N] [--config FILE] [--save PATH] [--native]
@@ -110,7 +112,9 @@ pub fn usage() -> &'static str {
 USAGE:
   a2psgd train        train one engine on one dataset, print the report
   a2psgd compare      run the paper's engine set, print Tables III/IV rows
-  a2psgd serve        train then serve batched predictions via XLA/PJRT
+  a2psgd serve        train then serve predictions and quantized top-k
+                      (XLA/PJRT or native); --listen adds a TCP front end
+                      with per-request deadlines and admission control
   a2psgd stream       warm-train, then stream live events: fold-in, online
                       NAG updates, and zero-downtime factor hot-swap
   a2psgd bench        hot-path benchmark pipeline: update-kernel micro,
@@ -118,7 +122,9 @@ USAGE:
                       ingest A/B, mmap-vs-BufReader shard readback micro,
                       resident-vs-streaming epoch A/B, layout A/B (COO vs
                       block-CSR sweep), per-engine epoch macro, scheduler
-                      fairness, and the pool-vs-scope epoch overhead micro —
+                      fairness, the pool-vs-scope epoch overhead micro, and
+                      the serving tier (top-k p50/p99 under concurrent
+                      clients + hot-swap churn, quantized recall@k) —
                       emits BENCH_hotpath.json at the repo root (--out
                       overrides)
   a2psgd pack         convert a ratings file (or builtin dataset) into a
@@ -206,6 +212,22 @@ PACK FLAGS:
 TRACE-EXPORT FLAGS:
   --input PATH       span JSONL written by --trace (required)
   --out PATH         chrome trace_event JSON to write (required)
+
+SERVE FLAGS:
+  --listen ADDR      expose the service over a line-protocol TCP front end
+                     (e.g. 127.0.0.1:7878; see SERVING.md for the grammar);
+                     without it, `serve` answers --requests sampled queries
+                     in process and exits
+  --serve-secs N     with --listen: stop after N seconds (default: run
+                     until killed; `[serve] serve_secs` from --config)
+  --quant int8|f16|f32   top-k scan precision (default: int8 — quantized
+                     per-item index rebuilt on each snapshot publish;
+                     f32 = exact scan, no index)
+  --deadline-ms N    default per-request TOPK deadline; requests that
+                     cannot be answered in time get OVERLOADED (default:
+                     0 = no deadline; a TOPK line's own deadline_ms wins)
+  --queue-cap N      admission bound on the request queue (default: 1024);
+                     beyond it deadline-carrying requests shed immediately
 
 STREAM FLAGS:
   --warm-frac F      fraction of users trained offline, rest streamed (0.8);

@@ -477,6 +477,123 @@ impl FaultConfig {
     }
 }
 
+/// `[serve]` section: serving-tier policy for `a2psgd serve` — the wire
+/// front end, per-request latency budget, admission control, and the
+/// quantized top-k index (see SERVING.md). CLI flags override the file.
+///
+/// ```toml
+/// [serve]
+/// listen = "127.0.0.1:7878"  # line-protocol TCP front end (off by default)
+/// serve_secs = 30            # auto-stop after N seconds (0 = run forever)
+/// quant = "int8"             # int8 | f16 | f32 — top-k scan precision
+/// deadline_ms = 50           # default per-request TOPK deadline (0 = none)
+/// queue_cap = 1024           # admission bound; full queue answers OVERLOADED
+/// net_threads = 2            # connection-serving workers
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Listen address for the TCP front end (`None` = in-process only).
+    pub listen: Option<String>,
+    /// Auto-stop after this many seconds (0 = serve until killed).
+    pub serve_secs: u64,
+    /// Top-k scan precision (`None` = exact f32).
+    pub quant: Option<crate::model::QuantMode>,
+    /// Default per-request deadline in ms applied to `TOPK` lines that
+    /// carry none (0 = no default deadline).
+    pub deadline_ms: u64,
+    /// Bounded request-queue depth; beyond it `top_k_within` sheds.
+    pub queue_cap: usize,
+    /// Worker threads for the wire front end.
+    pub net_threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            listen: None,
+            serve_secs: 0,
+            quant: Some(crate::model::QuantMode::Int8),
+            deadline_ms: 0,
+            queue_cap: crate::coordinator::service::DEFAULT_QUEUE_CAP,
+            net_threads: 2,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Apply `[serve]` overrides from TOML-subset text.
+    pub fn apply_toml(mut self, text: &str) -> Result<Self> {
+        let doc = parse(text)?;
+        if let Some(v) = doc.get("serve", "listen") {
+            self.listen = Some(v.as_str().context("serve.listen must be a string")?.to_string());
+        }
+        if let Some(v) = doc.get("serve", "quant") {
+            self.quant = crate::model::QuantMode::parse_opt(
+                v.as_str().context("serve.quant must be a string")?,
+            )?;
+        }
+        let int = |k: &str| -> Result<Option<i64>> {
+            match doc.get("serve", k) {
+                None => Ok(None),
+                Some(v) => {
+                    let x = v.as_int().with_context(|| format!("serve.{k} must be an int"))?;
+                    anyhow::ensure!(x >= 0, "serve.{k} must be non-negative, got {x}");
+                    Ok(Some(x))
+                }
+            }
+        };
+        if let Some(x) = int("serve_secs")? {
+            self.serve_secs = x as u64;
+        }
+        if let Some(x) = int("deadline_ms")? {
+            self.deadline_ms = x as u64;
+        }
+        if let Some(x) = int("queue_cap")? {
+            self.queue_cap = x as usize;
+        }
+        if let Some(x) = int("net_threads")? {
+            self.net_threads = x as usize;
+        }
+        anyhow::ensure!(self.queue_cap >= 1, "serve.queue_cap must be >= 1");
+        anyhow::ensure!(self.net_threads >= 1, "serve.net_threads must be >= 1");
+        Ok(self)
+    }
+
+    /// Fold CLI flags over the config; set flags win.
+    pub fn apply_cli(
+        mut self,
+        listen: Option<&str>,
+        serve_secs: Option<u64>,
+        quant: Option<&str>,
+        deadline_ms: Option<u64>,
+        queue_cap: Option<usize>,
+    ) -> Result<Self> {
+        if let Some(a) = listen {
+            self.listen = Some(a.to_string());
+        }
+        if let Some(s) = serve_secs {
+            self.serve_secs = s;
+        }
+        if let Some(q) = quant {
+            self.quant = crate::model::QuantMode::parse_opt(q)?;
+        }
+        if let Some(d) = deadline_ms {
+            self.deadline_ms = d;
+        }
+        if let Some(c) = queue_cap {
+            anyhow::ensure!(c >= 1, "--queue-cap must be >= 1");
+            self.queue_cap = c;
+        }
+        Ok(self)
+    }
+
+    /// The default `TOPK` deadline as a [`std::time::Duration`] (`None`
+    /// when `deadline_ms` is 0).
+    pub fn deadline(&self) -> Option<std::time::Duration> {
+        (self.deadline_ms > 0).then(|| std::time::Duration::from_millis(self.deadline_ms))
+    }
+}
+
 /// Apply `[stream]` (and `[hyper]`) overrides from a TOML-subset file onto a
 /// base [`StreamConfig`] (usually [`StreamConfig::preset`]).
 ///
@@ -730,6 +847,45 @@ gamma = 0.8
         assert!((cfg.hyper.gamma - 0.8).abs() < 1e-9);
         // λ untouched by the partial [hyper] section.
         assert!((cfg.hyper.lam - base.hyper.lam).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serve_config_overrides_and_cli_layering() {
+        let sc = ServeConfig::default();
+        assert!(sc.listen.is_none());
+        assert_eq!(sc.quant, Some(crate::model::QuantMode::Int8));
+        assert!(sc.deadline().is_none());
+        let sc = ServeConfig::default()
+            .apply_toml(
+                "[serve]\nlisten = \"127.0.0.1:7878\"\nserve_secs = 30\nquant = \"f16\"\n\
+                 deadline_ms = 50\nqueue_cap = 64\nnet_threads = 4\n",
+            )
+            .unwrap();
+        assert_eq!(sc.listen.as_deref(), Some("127.0.0.1:7878"));
+        assert_eq!(sc.serve_secs, 30);
+        assert_eq!(sc.quant, Some(crate::model::QuantMode::F16));
+        assert_eq!(sc.deadline(), Some(std::time::Duration::from_millis(50)));
+        assert_eq!(sc.queue_cap, 64);
+        assert_eq!(sc.net_threads, 4);
+        // CLI flags win over the file; "f32" disables quantization.
+        let sc = sc.apply_cli(Some("0.0.0.0:9"), Some(0), Some("f32"), Some(0), Some(8)).unwrap();
+        assert_eq!(sc.listen.as_deref(), Some("0.0.0.0:9"));
+        assert_eq!(sc.serve_secs, 0);
+        assert!(sc.quant.is_none());
+        assert!(sc.deadline().is_none());
+        assert_eq!(sc.queue_cap, 8);
+    }
+
+    #[test]
+    fn serve_config_rejects_invalid_values() {
+        assert!(ServeConfig::default().apply_toml("[serve]\nqueue_cap = 0\n").is_err());
+        assert!(ServeConfig::default().apply_toml("[serve]\nnet_threads = 0\n").is_err());
+        assert!(ServeConfig::default().apply_toml("[serve]\ndeadline_ms = -1\n").is_err());
+        assert!(ServeConfig::default().apply_toml("[serve]\nquant = \"int4\"\n").is_err());
+        assert!(ServeConfig::default().apply_cli(None, None, Some("bf16"), None, None).is_err());
+        // Other sections are ignored.
+        let sc = ServeConfig::default().apply_toml("[bench]\nthreads = 4\n").unwrap();
+        assert_eq!(sc, ServeConfig::default());
     }
 
     #[test]

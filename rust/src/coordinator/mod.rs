@@ -2,6 +2,7 @@
 //! studies, emit the paper's tables/series, and host the post-training
 //! prediction service.
 
+pub mod net;
 pub mod service;
 pub mod tune;
 

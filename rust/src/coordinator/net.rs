@@ -1,0 +1,357 @@
+//! Line-protocol TCP front end for the prediction service (`a2psgd serve
+//! --listen`): std-only sockets, connections served by the persistent
+//! [`WorkerPool`].
+//!
+//! # Wire protocol
+//!
+//! One request per line, one reply line per request, UTF-8, `\n`-terminated
+//! (the full grammar with examples lives in SERVING.md):
+//!
+//! ```text
+//! → TOPK <user> <k> [deadline_ms]     ← OK <item>:<score> …  |  OVERLOADED
+//! → PREDICT <user> <item>             ← OK <score>
+//! → STATS                             ← one-line JSON (ServiceStats)
+//! → QUIT                              ← (connection closes)
+//! anything else                       ← ERR <message>
+//! ```
+//!
+//! `TOPK` runs through [`ServiceClient::top_k_within`], so the bounded
+//! queue and per-request deadline semantics apply verbatim: a full queue
+//! or an expired deadline answers `OVERLOADED` instead of queueing the
+//! connection unboundedly. Malformed lines answer `ERR …` and keep the
+//! connection open; the server never disconnects a client for a bad
+//! request.
+//!
+//! # Concurrency & shutdown
+//!
+//! A driver thread parks the [`WorkerPool`] workers in a shared
+//! `accept` loop (the listener is a kernel-side accept queue — sharing it
+//! across threads *is* the load balancer). Each worker serves one
+//! connection at a time, line by line. [`TopKServer::shutdown`] flips a
+//! stop flag and then wakes every worker with a throwaway local
+//! connection, so no worker stays parked in `accept` forever.
+
+use super::service::{ServiceClient, ServiceStats, TopKAnswer};
+use crate::runtime::pool::WorkerPool;
+use crate::Result;
+use anyhow::Context;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Wire front-end policy.
+#[derive(Clone, Copy, Debug)]
+pub struct NetOptions {
+    /// Worker threads accepting and serving connections.
+    pub threads: usize,
+    /// Default per-request deadline applied to `TOPK` lines that do not
+    /// carry their own `deadline_ms` (`None` = no deadline).
+    pub deadline: Option<Duration>,
+}
+
+impl Default for NetOptions {
+    fn default() -> Self {
+        NetOptions { threads: 2, deadline: None }
+    }
+}
+
+/// A running TCP front end; dropping it without [`TopKServer::shutdown`]
+/// detaches the acceptor threads (they exit with the process).
+pub struct TopKServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    driver: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TopKServer {
+    /// Start serving `listener`'s connections against `client`.
+    ///
+    /// Bind with port 0 to let the OS pick a free port —
+    /// [`TopKServer::addr`] reports the resolved address:
+    ///
+    /// ```no_run
+    /// use a2psgd::coordinator::net::{NetOptions, TopKServer};
+    /// # fn demo(client: a2psgd::coordinator::service::ServiceClient) -> anyhow::Result<()> {
+    /// let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    /// let server = TopKServer::start(listener, client, NetOptions::default())?;
+    /// println!("serving on {}", server.addr());
+    /// # Ok(()) }
+    /// ```
+    pub fn start(listener: TcpListener, client: ServiceClient, opts: NetOptions) -> Result<Self> {
+        anyhow::ensure!(opts.threads >= 1, "net front end needs ≥ 1 thread");
+        let addr = listener.local_addr().context("resolving listener address")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_driver = Arc::clone(&stop);
+        let driver = std::thread::spawn(move || {
+            let pool = WorkerPool::new(opts.threads);
+            let listener = &listener;
+            let client = &client;
+            let stop = &stop_driver;
+            pool.run(|_tid| accept_loop(listener, client, stop, opts.deadline));
+        });
+        Ok(TopKServer { addr, stop, driver: Some(driver) })
+    }
+
+    /// The bound address (resolved port when the listener bound port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, wake parked acceptors, and join the workers.
+    /// In-flight connections finish their current line first.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Release);
+        // Each wake connection unparks at most one worker's accept() —
+        // send enough for all of them. Failure is fine (listener already
+        // gone means nobody is parked).
+        if let Some(driver) = self.driver.take() {
+            while !driver.is_finished() {
+                let _ = TcpStream::connect(self.addr);
+                std::thread::yield_now();
+            }
+            let _ = driver.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: &TcpListener,
+    client: &ServiceClient,
+    stop: &AtomicBool,
+    deadline: Option<Duration>,
+) {
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if stop.load(Ordering::Acquire) {
+                    return; // shutdown wake-up connection
+                }
+                // A torn connection only ends that connection.
+                let _ = serve_conn(stream, client, deadline);
+            }
+            Err(_) => {
+                if stop.load(Ordering::Acquire) {
+                    return;
+                }
+                // Transient accept error (e.g. EMFILE): brief pause, retry.
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+/// Serve one connection until EOF / `QUIT` / an I/O error.
+fn serve_conn(stream: TcpStream, client: &ServiceClient, deadline: Option<Duration>) -> Result<()> {
+    stream.set_nodelay(true).ok(); // request/reply traffic: don't batch
+    let mut reader = BufReader::new(stream.try_clone().context("cloning stream")?);
+    let mut out = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line).context("reading request line")? == 0 {
+            return Ok(()); // EOF
+        }
+        let reply = match answer_line(line.trim(), client, deadline) {
+            Some(r) => r,
+            None => return Ok(()), // QUIT
+        };
+        out.write_all(reply.as_bytes()).context("writing reply")?;
+        out.write_all(b"\n").context("writing reply terminator")?;
+    }
+}
+
+/// Parse one request line and produce its reply line (`None` = `QUIT`).
+/// Split out of the connection loop so the protocol is unit-testable
+/// without sockets.
+fn answer_line(line: &str, client: &ServiceClient, deadline: Option<Duration>) -> Option<String> {
+    let mut parts = line.split_ascii_whitespace();
+    let verb = parts.next().unwrap_or("");
+    let reply = match verb.to_ascii_uppercase().as_str() {
+        "TOPK" => topk_line(parts, client, deadline),
+        "PREDICT" => predict_line(parts, client),
+        "STATS" => Ok(stats_json(&client.stats())),
+        "QUIT" => return None,
+        "" => Err("empty request".to_string()),
+        other => Err(format!("unknown verb {other:?} (TOPK|PREDICT|STATS|QUIT)")),
+    };
+    Some(match reply {
+        Ok(r) => r,
+        Err(msg) => format!("ERR {msg}"),
+    })
+}
+
+fn topk_line<'a>(
+    mut parts: impl Iterator<Item = &'a str>,
+    client: &ServiceClient,
+    default_deadline: Option<Duration>,
+) -> std::result::Result<String, String> {
+    let u: u32 = parse_field(parts.next(), "user")?;
+    let k: usize = parse_field(parts.next(), "k")?;
+    let deadline = match parts.next() {
+        Some(ms) => Some(Duration::from_millis(parse_field(Some(ms), "deadline_ms")?)),
+        None => default_deadline,
+    };
+    if parts.next().is_some() {
+        return Err("TOPK takes at most 3 fields: user k [deadline_ms]".to_string());
+    }
+    match client.top_k_within(u, k, deadline) {
+        Ok(TopKAnswer::Ranked(top)) => {
+            let mut s = String::from("OK");
+            for (v, score) in top {
+                s.push_str(&format!(" {v}:{score:.4}"));
+            }
+            Ok(s)
+        }
+        Ok(TopKAnswer::Overloaded) => Ok("OVERLOADED".to_string()),
+        Err(e) => Err(format!("{e:#}")),
+    }
+}
+
+fn predict_line<'a>(
+    mut parts: impl Iterator<Item = &'a str>,
+    client: &ServiceClient,
+) -> std::result::Result<String, String> {
+    let u: u32 = parse_field(parts.next(), "user")?;
+    let v: u32 = parse_field(parts.next(), "item")?;
+    if parts.next().is_some() {
+        return Err("PREDICT takes exactly 2 fields: user item".to_string());
+    }
+    match client.predict(u, v) {
+        Ok(p) => Ok(format!("OK {p:.4}")),
+        Err(e) => Err(format!("{e:#}")),
+    }
+}
+
+fn parse_field<T: std::str::FromStr>(
+    field: Option<&str>,
+    name: &str,
+) -> std::result::Result<T, String> {
+    field
+        .ok_or_else(|| format!("missing field {name:?}"))?
+        .parse()
+        .map_err(|_| format!("bad {name}: {:?}", field.unwrap_or("")))
+}
+
+/// One-line JSON for the `STATS` verb (same field names as
+/// [`ServiceStats`]).
+fn stats_json(s: &ServiceStats) -> String {
+    crate::bench_harness::json::Obj::new()
+        .int("served", s.served)
+        .int("batches", s.batches)
+        .int("topk_served", s.topk_served)
+        .int("occupancy_sum", s.occupancy_sum)
+        .int("versions_seen", s.versions_seen)
+        .int("last_version", s.last_version)
+        .int("topk_shed", s.topk_shed)
+        .int("deadline_miss", s.deadline_miss)
+        .build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::{PredictionService, ServiceOptions};
+    use crate::model::snapshot::SnapshotStore;
+    use crate::model::Factors;
+    use crate::rng::Rng;
+
+    fn native_service() -> PredictionService {
+        let mut rng = Rng::new(11);
+        let store = Arc::new(SnapshotStore::new(Factors::init(20, 50, 8, 0.4, &mut rng)));
+        PredictionService::start_with_options(
+            std::path::PathBuf::new(),
+            store,
+            None,
+            ServiceOptions::native(),
+        )
+        .expect("native service starts without artifacts")
+    }
+
+    #[test]
+    fn protocol_lines_parse_and_answer() {
+        let svc = native_service();
+        let client = svc.client();
+        let topk = answer_line("TOPK 0 3", &client, None).unwrap();
+        assert!(topk.starts_with("OK "), "{topk}");
+        assert_eq!(topk.split_whitespace().count(), 4, "3 item:score pairs: {topk}");
+        let pred = answer_line("PREDICT 0 1", &client, None).unwrap();
+        assert!(pred.starts_with("OK "), "{pred}");
+        let p: f32 = pred[3..].parse().unwrap();
+        assert!((1.0..=5.0).contains(&p));
+        let stats = answer_line("STATS", &client, None).unwrap();
+        assert!(stats.contains("\"topk_served\":1"), "{stats}");
+        assert!(stats.contains("\"served\":1"), "{stats}");
+        assert!(answer_line("QUIT", &client, None).is_none());
+        drop(client);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn protocol_rejects_malformed_lines_without_closing() {
+        let svc = native_service();
+        let client = svc.client();
+        for bad in [
+            "",
+            "FROB 1 2",
+            "TOPK",
+            "TOPK x 3",
+            "TOPK 0 3 100 extra",
+            "PREDICT 0",
+            "PREDICT 0 y",
+        ] {
+            let reply = answer_line(bad, &client, None).unwrap();
+            assert!(reply.starts_with("ERR "), "{bad:?} → {reply}");
+        }
+        // Lowercase verbs are accepted (case-insensitive).
+        assert!(answer_line("topk 0 2", &client, None).unwrap().starts_with("OK"));
+        drop(client);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn expired_wire_deadline_answers_overloaded() {
+        let svc = native_service();
+        let client = svc.client();
+        // deadline_ms = 0: already expired by the time the batcher
+        // dequeues it — deterministic Overloaded.
+        let reply = answer_line("TOPK 0 3 0", &client, None).unwrap();
+        assert_eq!(reply, "OVERLOADED");
+        drop(client);
+        let stats = svc.shutdown();
+        assert_eq!(stats.deadline_miss, 1);
+        assert_eq!(stats.topk_served, 0);
+    }
+
+    #[test]
+    fn server_answers_over_tcp_and_shuts_down() {
+        let svc = native_service();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let server =
+            TopKServer::start(listener, svc.client(), NetOptions { threads: 2, deadline: None })
+                .unwrap();
+        let addr = server.addr();
+        let mut done = Vec::new();
+        std::thread::scope(|s| {
+            for t in 0..3u32 {
+                done.push(s.spawn(move || {
+                    let stream = TcpStream::connect(addr).unwrap();
+                    let mut reader = BufReader::new(stream.try_clone().unwrap());
+                    let mut w = stream;
+                    let mut line = String::new();
+                    for i in 0..5u32 {
+                        writeln!(w, "TOPK {} 4", (t * 5 + i) % 20).unwrap();
+                        line.clear();
+                        reader.read_line(&mut line).unwrap();
+                        assert!(line.starts_with("OK "), "{line}");
+                    }
+                    writeln!(w, "QUIT").unwrap();
+                }));
+            }
+        });
+        server.shutdown();
+        let stats = svc.shutdown();
+        assert_eq!(stats.topk_served, 15);
+    }
+}

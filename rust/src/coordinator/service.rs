@@ -33,19 +33,44 @@
 //! Bulk clients should prefer [`ServiceClient::predict_many`]: it enqueues
 //! the whole pair list as a single request, so the batcher fills backend
 //! batches in one drain instead of N channel round-trips.
+//!
+//! # Latency budget: deadlines, admission control, quantized top-k
+//!
+//! The request queue is **bounded** ([`ServiceOptions::queue_cap`]):
+//! blocking submissions ([`ServiceClient::predict`], [`ServiceClient::
+//! top_k`]) exert backpressure instead of queueing unboundedly, and the
+//! deadline-aware path ([`ServiceClient::top_k_within`]) *sheds* — a full
+//! queue answers [`TopKAnswer::Overloaded`] immediately rather than letting
+//! the queue (and therefore every request's latency) grow without limit. A
+//! request carrying a deadline that has already passed when the batcher
+//! dequeues it is also answered `Overloaded` without paying for the scan.
+//! Shed and miss volumes are visible in [`ServiceStats`] and the
+//! `serve_shed` / `serve_deadline_miss` obs counters.
+//!
+//! Full-catalog top-k can scan a **quantized item index**
+//! ([`crate::model::quant::QuantizedIndex`], [`ServiceOptions::quant`]):
+//! int8-with-per-item-scale or f16 codes rebuilt once per published
+//! snapshot version and scanned through the dispatched SIMD kernels —
+//! scores match the f32 scan within the index's documented
+//! [`error bound`](crate::model::quant::QuantizedIndex::error_bound).
 
+use crate::model::quant::{QuantMode, QuantizedIndex};
 use crate::model::snapshot::{FactorSnapshot, SnapshotStore};
 use crate::model::Factors;
 use crate::runtime::XlaRuntime;
 use crate::Result;
 use anyhow::Context;
 use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Batch capacity of the native (non-XLA) backend.
 const NATIVE_BATCH: usize = 64;
+
+/// Default bound of the request queue (see [`ServiceOptions::queue_cap`]).
+pub const DEFAULT_QUEUE_CAP: usize = 1024;
 
 /// One service request.
 enum Request {
@@ -55,8 +80,21 @@ enum Request {
     /// fills backend batches directly from the pair list (one channel
     /// round-trip total) instead of draining N individual requests.
     PredictBatch { pairs: Vec<(u32, u32)>, reply: mpsc::Sender<Vec<f32>> },
-    /// Top-k recommendation for user u.
-    TopK { u: u32, k: usize, reply: mpsc::Sender<Vec<(u32, f32)>> },
+    /// Top-k recommendation for user u; `deadline` (absolute) makes the
+    /// batcher shed the request instead of serving it late.
+    TopK { u: u32, k: usize, deadline: Option<Instant>, reply: mpsc::Sender<TopKAnswer> },
+}
+
+/// Answer to a top-k request under admission control.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TopKAnswer {
+    /// Ranked `(item, score)` pairs, best first (empty for unknown users).
+    Ranked(Vec<(u32, f32)>),
+    /// The request was shed: either the bounded queue was full at admission
+    /// or the per-request deadline had already passed at dequeue. The
+    /// explicit answer replaces unbounded queueing — retry with backoff or
+    /// degrade gracefully; see SERVING.md's runbook.
+    Overloaded,
 }
 
 /// Shared, growable per-user top-k exclusion sets.
@@ -157,6 +195,13 @@ pub struct ServiceStats {
     pub versions_seen: u64,
     /// Snapshot version of the most recent batch.
     pub last_version: u64,
+    /// Top-k requests shed at admission (bounded queue full). Counted on
+    /// the submitting thread, folded into scrapes — see
+    /// [`ServiceClient::top_k_within`].
+    pub topk_shed: u64,
+    /// Top-k requests whose deadline had already passed at dequeue
+    /// (answered [`TopKAnswer::Overloaded`] without scanning).
+    pub deadline_miss: u64,
 }
 
 impl ServiceStats {
@@ -170,8 +215,9 @@ impl ServiceStats {
     }
 
     /// Pack for seqlock publication (field order is [`Self::from_array`]'s
-    /// contract).
-    fn to_array(&self) -> [u64; 6] {
+    /// contract). `topk_shed` is excluded: it is counted at admission on
+    /// client threads (a single shared atomic), not by the batcher.
+    fn to_array(&self) -> [u64; 7] {
         [
             self.served,
             self.batches,
@@ -179,10 +225,11 @@ impl ServiceStats {
             self.occupancy_sum,
             self.versions_seen,
             self.last_version,
+            self.deadline_miss,
         ]
     }
 
-    fn from_array(a: [u64; 6]) -> Self {
+    fn from_array(a: [u64; 7]) -> Self {
         ServiceStats {
             served: a[0],
             batches: a[1],
@@ -190,14 +237,48 @@ impl ServiceStats {
             occupancy_sum: a[3],
             versions_seen: a[4],
             last_version: a[5],
+            topk_shed: 0,
+            deadline_miss: a[6],
         }
     }
 }
 
 /// Handle for submitting requests; cloneable across client threads.
+///
+/// The underlying queue is bounded ([`ServiceOptions::queue_cap`]):
+/// blocking submissions backpressure when it is full, while
+/// [`ServiceClient::top_k_within`] sheds with an explicit
+/// [`TopKAnswer::Overloaded`]. Any clone can also scrape live
+/// [`ServiceClient::stats`] (torn-free seqlock read).
+///
+/// ```
+/// use a2psgd::coordinator::service::{PredictionService, ServiceOptions};
+/// use a2psgd::model::Factors;
+/// use a2psgd::model::snapshot::SnapshotStore;
+/// use a2psgd::rng::Rng;
+/// use std::sync::Arc;
+///
+/// let mut rng = Rng::new(1);
+/// let store = Arc::new(SnapshotStore::new(Factors::init(10, 20, 8, 0.4, &mut rng)));
+/// let svc = PredictionService::start_with_options(
+///     std::path::PathBuf::new(), // native backend: no artifacts needed
+///     store,
+///     None,
+///     ServiceOptions::native(),
+/// )?;
+/// let client = svc.client();
+/// let r = client.predict(0, 0)?;
+/// assert!((1.0..=5.0).contains(&r));
+/// drop(client);
+/// let stats = svc.shutdown();
+/// assert_eq!(stats.served, 1);
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 #[derive(Clone)]
 pub struct ServiceClient {
-    tx: mpsc::Sender<Request>,
+    tx: mpsc::SyncSender<Request>,
+    stats_cell: Arc<crate::obs::SeqCell<7>>,
+    shed: Arc<AtomicU64>,
 }
 
 impl ServiceClient {
@@ -209,6 +290,7 @@ impl ServiceClient {
 
     /// Fire a prediction and return the reply channel without waiting.
     /// Dropping the receiver is allowed; the service discards the answer.
+    /// Blocks only while the bounded request queue is full (backpressure).
     pub fn predict_async(&self, u: u32, v: u32) -> Result<mpsc::Receiver<f32>> {
         let (reply, rx) = mpsc::channel();
         self.tx
@@ -219,14 +301,55 @@ impl ServiceClient {
     }
 
     /// Blocking top-k recommendation (items the user rated in training are
-    /// excluded when the service was built with a training matrix).
+    /// excluded when the service was built with a training matrix). No
+    /// deadline, no shedding: waits for queue space and for the scan.
     pub fn top_k(&self, u: u32, k: usize) -> Result<Vec<(u32, f32)>> {
         let (reply, rx) = mpsc::channel();
         self.tx
-            .send(Request::TopK { u, k, reply })
+            .send(Request::TopK { u, k, deadline: None, reply })
             .ok()
             .context("service stopped")?;
-        rx.recv().context("service dropped the request")
+        match rx.recv().context("service dropped the request")? {
+            TopKAnswer::Ranked(top) => Ok(top),
+            // Unreachable for deadline-free blocking submissions, but a
+            // defensive answer beats a panic on a protocol change.
+            TopKAnswer::Overloaded => anyhow::bail!("service overloaded"),
+        }
+    }
+
+    /// Deadline-aware top-k under admission control: returns
+    /// [`TopKAnswer::Overloaded`] immediately when the bounded queue is
+    /// full (shed at admission), and the batcher answers `Overloaded`
+    /// without scanning when `deadline` has already passed at dequeue.
+    ///
+    /// `deadline` is measured from the call (`None` = no deadline, still
+    /// sheds on a full queue). This is the wire front end's serving path.
+    pub fn top_k_within(
+        &self,
+        u: u32,
+        k: usize,
+        deadline: Option<Duration>,
+    ) -> Result<TopKAnswer> {
+        let (reply, rx) = mpsc::channel();
+        let deadline = deadline.map(|d| Instant::now() + d);
+        match self.tx.try_send(Request::TopK { u, k, deadline, reply }) {
+            Ok(()) => rx.recv().context("service dropped the request"),
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.shed.fetch_add(1, Ordering::Relaxed);
+                crate::obs::add(crate::obs::Ctr::ServeShed, 1);
+                Ok(TopKAnswer::Overloaded)
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => anyhow::bail!("service stopped"),
+        }
+    }
+
+    /// Live stats scrape, torn-free (see [`PredictionService::stats`]);
+    /// available from any client clone so e.g. the wire front end can
+    /// answer `STATS` without holding the service itself.
+    pub fn stats(&self) -> ServiceStats {
+        let mut s = ServiceStats::from_array(self.stats_cell.read());
+        s.topk_shed = self.shed.load(Ordering::Relaxed);
+        s
     }
 
     /// Submit many predictions as **one** enqueued batch and wait for all.
@@ -245,13 +368,53 @@ impl ServiceClient {
     }
 }
 
+/// Serving policy knobs for [`PredictionService::start_with_options`].
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceOptions {
+    /// Rating-scale clamp applied to every point prediction.
+    pub clamp: (f32, f32),
+    /// Max time a non-full batch waits for more traffic before launching.
+    pub max_wait: Duration,
+    /// Backend selection policy.
+    pub mode: BackendMode,
+    /// Quantized top-k index mode; `None` scans the f32 item matrix.
+    /// The index is rebuilt per published snapshot version.
+    pub quant: Option<QuantMode>,
+    /// Bound of the request queue: blocking submissions backpressure
+    /// beyond it, [`ServiceClient::top_k_within`] sheds. Must be ≥ 1.
+    pub queue_cap: usize,
+}
+
+impl Default for ServiceOptions {
+    fn default() -> Self {
+        ServiceOptions {
+            clamp: (1.0, 5.0),
+            max_wait: Duration::from_millis(1),
+            mode: BackendMode::Auto,
+            quant: None,
+            queue_cap: DEFAULT_QUEUE_CAP,
+        }
+    }
+}
+
+impl ServiceOptions {
+    /// Defaults on the native backend with the int8 quantized index — the
+    /// portable serving configuration (`a2psgd serve --listen`).
+    pub fn native() -> Self {
+        ServiceOptions {
+            mode: BackendMode::NativeOnly,
+            quant: Some(QuantMode::Int8),
+            ..Self::default()
+        }
+    }
+}
+
 /// The running service; shutting down requires all external
 /// [`ServiceClient`] clones to be dropped first (their senders keep the
 /// worker's receive loop alive).
 pub struct PredictionService {
     client: ServiceClient,
     worker: std::thread::JoinHandle<ServiceStats>,
-    stats_cell: Arc<crate::obs::SeqCell<6>>,
 }
 
 impl PredictionService {
@@ -286,12 +449,9 @@ impl PredictionService {
 
     /// Spawn the batcher over a shared [`SnapshotStore`]: the service pins
     /// the current snapshot per batch, so whoever holds the store can
-    /// publish refreshed factors with zero service downtime.
-    ///
-    /// The backend (XLA artifacts vs native) is chosen per `mode`. The PJRT
-    /// runtime is constructed *inside* the worker thread (the xla crate's
-    /// client is `!Send`), so this takes the artifacts directory and reports
-    /// load/compile errors synchronously through a startup channel.
+    /// publish refreshed factors with zero service downtime. Compatibility
+    /// wrapper over [`PredictionService::start_with_options`] (no quantized
+    /// index, default queue bound).
     pub fn start_over_store(
         artifacts_dir: std::path::PathBuf,
         store: Arc<SnapshotStore>,
@@ -300,12 +460,36 @@ impl PredictionService {
         exclusions: Option<Arc<ExclusionSet>>,
         mode: BackendMode,
     ) -> Result<Self> {
-        let (tx, rx) = mpsc::channel::<Request>();
+        Self::start_with_options(
+            artifacts_dir,
+            store,
+            exclusions,
+            ServiceOptions { clamp, max_wait, mode, ..ServiceOptions::default() },
+        )
+    }
+
+    /// Spawn the batcher over a shared [`SnapshotStore`] with the full
+    /// serving policy ([`ServiceOptions`]): backend selection, bounded
+    /// queue, and the per-snapshot quantized top-k index.
+    ///
+    /// The PJRT runtime is constructed *inside* the worker thread (the xla
+    /// crate's client is `!Send`), so this takes the artifacts directory
+    /// and reports load/compile errors synchronously through a startup
+    /// channel.
+    pub fn start_with_options(
+        artifacts_dir: std::path::PathBuf,
+        store: Arc<SnapshotStore>,
+        exclusions: Option<Arc<ExclusionSet>>,
+        opts: ServiceOptions,
+    ) -> Result<Self> {
+        anyhow::ensure!(opts.queue_cap >= 1, "queue_cap must be ≥ 1");
+        let (tx, rx) = mpsc::sync_channel::<Request>(opts.queue_cap);
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let stats_cell = Arc::new(crate::obs::SeqCell::<6>::new());
+        let stats_cell = Arc::new(crate::obs::SeqCell::<7>::new());
+        let shed = Arc::new(AtomicU64::new(0));
         let worker_cell = Arc::clone(&stats_cell);
         let worker = std::thread::spawn(move || {
-            let backend = match mode {
+            let backend = match opts.mode {
                 BackendMode::NativeOnly => Backend::Native,
                 BackendMode::XlaRequired => match XlaRuntime::load(&artifacts_dir) {
                     Ok(rt) => Backend::Xla(rt),
@@ -323,12 +507,13 @@ impl PredictionService {
                 },
             };
             let _ = ready_tx.send(Ok(()));
-            run_batcher(backend, store, clamp, max_wait, exclusions, rx, &worker_cell)
+            run_batcher(backend, store, &opts, exclusions, rx, &worker_cell)
         });
         match ready_rx.recv() {
-            Ok(Ok(())) => {
-                Ok(PredictionService { client: ServiceClient { tx }, worker, stats_cell })
-            }
+            Ok(Ok(())) => Ok(PredictionService {
+                client: ServiceClient { tx, stats_cell, shed },
+                worker,
+            }),
             Ok(Err(e)) => {
                 let _ = worker.join();
                 Err(e)
@@ -349,16 +534,21 @@ impl PredictionService {
     /// mutation as one seqlock unit, so a read concurrent with a batch
     /// still sees `served`/`batches`/`occupancy_sum` move together —
     /// never `batches` incremented but its predictions not yet counted.
+    /// (`topk_shed` is the one exception: counted at admission on client
+    /// threads, it is folded in from its own atomic.)
     pub fn stats(&self) -> ServiceStats {
-        ServiceStats::from_array(self.stats_cell.read())
+        self.client.stats()
     }
 
     /// Stop and collect stats (consumes the service). All other client
     /// clones must already be dropped, or this blocks until they are.
     pub fn shutdown(self) -> ServiceStats {
-        let PredictionService { client, worker, .. } = self;
+        let PredictionService { client, worker } = self;
+        let shed = Arc::clone(&client.shed);
         drop(client); // close our sender so the worker's recv errors out
-        worker.join().expect("service worker panicked")
+        let mut stats = worker.join().expect("service worker panicked");
+        stats.topk_shed = shed.load(Ordering::Relaxed);
+        stats
     }
 }
 
@@ -367,6 +557,15 @@ impl PredictionService {
 struct TopKCache {
     version: u64,
     n_padded: Vec<f32>,
+}
+
+/// Quantized-index cache, keyed by snapshot version: the index is rebuilt
+/// by the first top-k request that observes a new published generation
+/// (one linear pass over the item matrix), then reused for every scan
+/// served from that snapshot.
+struct QuantCache {
+    version: u64,
+    index: QuantizedIndex,
 }
 
 /// The single implementation of batch execution shared by the live drain
@@ -446,21 +645,21 @@ impl BatchExec {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
 fn run_batcher(
     backend: Backend,
     store: Arc<SnapshotStore>,
-    clamp: (f32, f32),
-    max_wait: Duration,
+    opts: &ServiceOptions,
     exclusions: Option<Arc<ExclusionSet>>,
     rx: mpsc::Receiver<Request>,
-    stats_cell: &crate::obs::SeqCell<6>,
+    stats_cell: &crate::obs::SeqCell<7>,
 ) -> ServiceStats {
     let b = backend.batch_size();
     let d = store.load().factors().d();
+    let max_wait = opts.max_wait;
     let mut stats = ServiceStats::default();
-    let mut exec = BatchExec::new(b, d, clamp);
+    let mut exec = BatchExec::new(b, d, opts.clamp);
     let mut topk_cache: Option<TopKCache> = None;
+    let mut quant_cache: Option<QuantCache> = None;
     // Queued point predictions carry their receipt time for the latency
     // histogram (latency = receipt → reply, drain window included).
     let mut batch: Vec<(u32, u32, mpsc::Sender<f32>, Instant)> = Vec::with_capacity(b);
@@ -498,7 +697,16 @@ fn run_batcher(
                     observe_latency(received);
                     stats_cell.publish(&stats.to_array());
                 }
-                Some(Request::TopK { u, k, reply }) => {
+                Some(Request::TopK { u, k, deadline, reply }) => {
+                    // Per-request deadline: a request that would be served
+                    // late is shed *before* paying for the catalog scan.
+                    if deadline.is_some_and(|dl| Instant::now() > dl) {
+                        let _ = reply.send(TopKAnswer::Overloaded);
+                        stats.deadline_miss += 1;
+                        crate::obs::add(crate::obs::Ctr::ServeDeadlineMiss, 1);
+                        stats_cell.publish(&stats.to_array());
+                        continue;
+                    }
                     // Top-k is a whole-catalog scan — served immediately,
                     // not batched with point predictions. Exclusions are
                     // re-read per request: the online trainer keeps adding
@@ -509,9 +717,18 @@ fn run_batcher(
                         .as_ref()
                         .map(|e| e.for_user(u))
                         .unwrap_or_default();
-                    match serve_top_k(&backend, &snap, &mut topk_cache, u, k, &ex) {
+                    match serve_top_k(
+                        &backend,
+                        &snap,
+                        opts.quant,
+                        &mut topk_cache,
+                        &mut quant_cache,
+                        u,
+                        k,
+                        &ex,
+                    ) {
                         Ok(top) => {
-                            let _ = reply.send(top);
+                            let _ = reply.send(TopKAnswer::Ranked(top));
                             stats.topk_served += 1;
                             crate::obs::add(crate::obs::Ctr::ServeRequests, 1);
                             observe_latency(received);
@@ -576,14 +793,19 @@ fn observe_version(stats: &mut ServiceStats, snap: &FactorSnapshot) {
     }
 }
 
-/// Top-k for one user under the pinned snapshot. The XLA `recommend`
-/// artifact is used when the catalog fits its padding; otherwise (native
-/// backend, unknown user, or a catalog grown past the padding) a native
-/// scan computes the same scores.
+/// Top-k for one user under the pinned snapshot. With a quantized mode
+/// configured, the scan runs over the per-snapshot [`QuantizedIndex`]
+/// (rebuilt on version change) through the dispatched quantized kernels.
+/// Otherwise the XLA `recommend` artifact is used when the catalog fits
+/// its padding, and the f32 native scan covers everything else (native
+/// backend, unknown user, or a catalog grown past the padding).
+#[allow(clippy::too_many_arguments)]
 fn serve_top_k(
     backend: &Backend,
     snap: &FactorSnapshot,
+    quant: Option<QuantMode>,
     cache: &mut Option<TopKCache>,
+    quant_cache: &mut Option<QuantCache>,
     u: u32,
     k: usize,
     seen: &HashSet<u32>,
@@ -591,6 +813,20 @@ fn serve_top_k(
     let f = snap.factors();
     if u >= f.nrows() {
         return Ok(Vec::new()); // unknown user: no candidates yet
+    }
+    if let Some(mode) = quant {
+        let fresh = match quant_cache {
+            Some(c) => c.version != snap.version(),
+            None => true,
+        };
+        if fresh {
+            *quant_cache = Some(QuantCache {
+                version: snap.version(),
+                index: QuantizedIndex::build(f, mode),
+            });
+        }
+        let index = &quant_cache.as_ref().expect("cache filled above").index;
+        return Ok(index.top_k(f.m_row(u), k, seen));
     }
     if let Backend::Xla(rt) = backend {
         let fits = f.n.len() <= rt.shapes.v * f.d();

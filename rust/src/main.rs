@@ -416,14 +416,79 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .artifacts_dir
         .clone()
         .unwrap_or_else(a2psgd::runtime::default_artifacts_dir);
-    let svc = PredictionService::start_with_exclusions(
-        dir,
-        factors,
-        (data.rating_min, data.rating_max),
-        std::time::Duration::from_millis(2),
-        Some(data.train.clone()),
-    )
-    .context("starting the prediction service")?;
+    // Serving-tier policy: `[serve]` from --config, CLI flags on top.
+    let mut serve_cfg = a2psgd::config::ServeConfig::default();
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        serve_cfg = serve_cfg.apply_toml(&text)?;
+    }
+    let serve_cfg = serve_cfg.apply_cli(
+        args.get("listen"),
+        args.get_parsed::<u64>("serve-secs")?,
+        args.get("quant"),
+        args.get_parsed::<u64>("deadline-ms")?,
+        args.get_parsed::<usize>("queue-cap")?,
+    )?;
+    let opts = a2psgd::coordinator::service::ServiceOptions {
+        clamp: (data.rating_min, data.rating_max),
+        max_wait: std::time::Duration::from_millis(2),
+        mode: if args.has("native") {
+            a2psgd::coordinator::service::BackendMode::NativeOnly
+        } else {
+            a2psgd::coordinator::service::BackendMode::XlaRequired
+        },
+        quant: serve_cfg.quant,
+        queue_cap: serve_cfg.queue_cap,
+    };
+    let store = std::sync::Arc::new(a2psgd::model::SnapshotStore::new(factors));
+    let exclusions = Some(std::sync::Arc::new(
+        a2psgd::coordinator::service::ExclusionSet::from_matrix(&data.train),
+    ));
+    let svc = PredictionService::start_with_options(dir, store, exclusions, opts)
+        .context("starting the prediction service")?;
+    if let Some(addr) = &serve_cfg.listen {
+        let listener = std::net::TcpListener::bind(addr)
+            .with_context(|| format!("binding listener on {addr}"))?;
+        let server = a2psgd::coordinator::net::TopKServer::start(
+            listener,
+            svc.client(),
+            a2psgd::coordinator::net::NetOptions {
+                threads: serve_cfg.net_threads,
+                deadline: serve_cfg.deadline(),
+            },
+        )
+        .context("starting the TCP front end")?;
+        let quant = serve_cfg
+            .quant
+            .map(|m| m.to_string())
+            .unwrap_or_else(|| "f32".into());
+        eprintln!(
+            "serving on {} (quant {quant}, queue_cap {}, default deadline {}) — \
+             TOPK u k [deadline_ms] | PREDICT u v | STATS | QUIT",
+            server.addr(),
+            serve_cfg.queue_cap,
+            serve_cfg
+                .deadline()
+                .map(|d| format!("{}ms", d.as_millis()))
+                .unwrap_or_else(|| "none".into()),
+        );
+        if serve_cfg.serve_secs > 0 {
+            std::thread::sleep(std::time::Duration::from_secs(serve_cfg.serve_secs));
+        } else {
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        server.shutdown();
+        let stats = svc.shutdown();
+        println!(
+            "served {} predictions + {} top-k ({} shed, {} deadline misses) over {} versions",
+            stats.served, stats.topk_served, stats.topk_shed, stats.deadline_miss,
+            stats.versions_seen
+        );
+        return obs_finish(&oc);
+    }
     let n = args.get_parsed::<usize>("requests")?.unwrap_or(10_000);
     let client = svc.client();
     let mut rng = Rng::new(7);
@@ -919,8 +984,10 @@ fn cmd_stream_shards(
 /// scalar-vs-SIMD kernel A/B across the rank-specialized set, the
 /// text-vs-shard ingest A/B, the block layout A/B (pre-PR COO global-id
 /// sweep vs block-local CSR lanes), a per-engine epoch macro over the paper
-/// set, scheduler fairness, the pool-vs-scope epoch-overhead micro, and the
-/// observability on/off overhead A/B — all emitted as machine-readable
+/// set, scheduler fairness, the pool-vs-scope epoch-overhead micro, the
+/// observability on/off overhead A/B, and the serving-tier section
+/// (concurrent-client top-k p50/p99, QPS under hot-swap churn,
+/// quantized-vs-f32 recall@k) — all emitted as machine-readable
 /// `BENCH_hotpath.json` so later PRs have a perf trajectory to regress
 /// against (CI gates the speedup ratios via `scripts/bench_gate.py`).
 fn cmd_bench(args: &Args) -> Result<()> {
@@ -1441,10 +1508,130 @@ fn cmd_bench(args: &Args) -> Result<()> {
             .build()
     };
 
+    // 4d. Serving-tier bench: concurrent-client quantized top-k latency
+    // (p50/p99), sustained QPS while snapshot hot-swaps churn underneath,
+    // and quantized-vs-f32 recall@k — the numbers SERVING.md's capacity
+    // rule of thumb reads; `bench_gate.py` holds the latency ceilings and
+    // the recall floor.
+    let serving_json = {
+        use a2psgd::coordinator::service::ServiceOptions;
+        use a2psgd::model::{QuantMode, QuantizedIndex};
+        let users = 64u32;
+        let items = 2_000u32;
+        let k = 10usize;
+        let mut srng = Rng::new(bcfg.seed ^ 0x5E11);
+        let f = Factors::init(users, items, bcfg.d, 0.4, &mut srng);
+
+        // Recall@k of each quantized mode against the exact f32 ranking
+        // over the same factors (training is irrelevant to this A/B).
+        let empty = std::collections::HashSet::new();
+        let sample: Vec<u32> = (0..users).step_by(2).collect();
+        let recall_for = |mode: QuantMode| -> f64 {
+            let idx = QuantizedIndex::build(&f, mode);
+            let mut hit = 0usize;
+            for &u in &sample {
+                let exact: std::collections::HashSet<u32> =
+                    a2psgd::metrics::topn::rank_items(&f, u, &empty, k)
+                        .into_iter()
+                        .map(|(v, _)| v)
+                        .collect();
+                hit += idx
+                    .top_k(f.m_row(u), k, &empty)
+                    .iter()
+                    .filter(|(v, _)| exact.contains(v))
+                    .count();
+            }
+            hit as f64 / (sample.len() * k) as f64
+        };
+        let recall_int8 = recall_for(QuantMode::Int8);
+        let recall_f16 = recall_for(QuantMode::F16);
+
+        // Concurrent clients against the native int8 service, while a
+        // publisher republishes perturbed factors — latency and QPS under
+        // the serving tier's real steady state (hot-swap churn included).
+        let store = std::sync::Arc::new(SnapshotStore::new(f.clone()));
+        let svc = PredictionService::start_with_options(
+            PathBuf::new(),
+            std::sync::Arc::clone(&store),
+            None,
+            ServiceOptions::native(),
+        )?;
+        let clients = bcfg.threads.clamp(1, 4);
+        let per_client = (bcfg.iters * 200).max(200);
+        let deadline = Some(std::time::Duration::from_millis(250));
+        let stop = std::sync::atomic::AtomicBool::new(false);
+        let t0 = std::time::Instant::now();
+        let mut lat_ms: Vec<f64> = std::thread::scope(|s| {
+            let publisher = s.spawn(|| {
+                let mut swaps = 0u64;
+                let mut g = f.clone();
+                while !stop.load(std::sync::atomic::Ordering::Acquire) {
+                    // Nudge one entry so every publish is a distinct model.
+                    g.m[swaps as usize % g.m.len()] += 1e-4;
+                    store.publish(g.clone());
+                    swaps += 1;
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                swaps
+            });
+            let workers: Vec<_> = (0..clients)
+                .map(|c| {
+                    let client = svc.client();
+                    s.spawn(move || {
+                        let mut lat = Vec::with_capacity(per_client);
+                        for i in 0..per_client {
+                            let u = ((c * per_client + i) % users as usize) as u32;
+                            let t = std::time::Instant::now();
+                            let _ = client.top_k_within(u, k, deadline);
+                            lat.push(t.elapsed().as_secs_f64() * 1e3);
+                        }
+                        lat
+                    })
+                })
+                .collect();
+            let lat: Vec<f64> =
+                workers.into_iter().flat_map(|h| h.join().expect("client thread")).collect();
+            stop.store(true, std::sync::atomic::Ordering::Release);
+            let swaps = publisher.join().expect("publisher thread");
+            eprintln!("serving: {swaps} hot-swaps published during the run");
+            lat
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = svc.shutdown();
+        lat_ms.sort_by(|a, b| a.total_cmp(b));
+        let pct = |p: f64| lat_ms[((lat_ms.len() - 1) as f64 * p) as usize];
+        let (p50, p99) = (pct(0.50), pct(0.99));
+        let qps = lat_ms.len() as f64 / wall;
+        println!(
+            "serving: {} top-k reqs × {clients} clients over {} versions — \
+             p50 {p50:.3}ms p99 {p99:.3}ms, {qps:.0} req/s under hot-swap churn; \
+             recall@{k} int8 {recall_int8:.3} f16 {recall_f16:.3} \
+             ({} shed, {} deadline misses)",
+            lat_ms.len(),
+            stats.versions_seen,
+            stats.topk_shed,
+            stats.deadline_miss
+        );
+        json::Obj::new()
+            .int("clients", clients as u64)
+            .int("requests", lat_ms.len() as u64)
+            .int("catalog", items as u64)
+            .int("k", k as u64)
+            .num("p50_ms", p50)
+            .num("p99_ms", p99)
+            .num("qps", qps)
+            .int("versions_seen", stats.versions_seen)
+            .int("shed", stats.topk_shed)
+            .int("deadline_miss", stats.deadline_miss)
+            .num("recall_int8", recall_int8)
+            .num("recall_f16", recall_f16)
+            .build()
+    };
+
     // 5. Emit the JSON artifact.
     let payload = json::Obj::new()
         .str("bench", "hotpath")
-        .int("version", 5)
+        .int("version", 6)
         .str("kernel_path", &kernel_path.to_string())
         .str("dataset", &data.name)
         .int("threads", bcfg.threads as u64)
@@ -1497,6 +1684,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 .build(),
         )
         .raw("obs_overhead", &obs_json)
+        .raw("serving", &serving_json)
         .build();
     if let Some(dir) = out.parent() {
         if !dir.as_os_str().is_empty() {

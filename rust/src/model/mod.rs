@@ -2,9 +2,11 @@
 //! `N^{|V|×D}` plus the NAG momentum matrices `φ`, `ψ` (§III-C).
 
 pub mod checkpoint;
+pub mod quant;
 mod shared;
 pub mod snapshot;
 
+pub use quant::{QuantMode, QuantizedIndex};
 pub use shared::SharedFactors;
 pub use snapshot::{FactorSnapshot, SnapshotStore};
 

@@ -30,6 +30,26 @@
 //! - Snapshots are immutable after publish; a reader's pinned view is
 //!   torn-write-free by construction (no in-place mutation, unlike
 //!   [`super::SharedFactors`], which is the *training-time* sharing tool).
+//!
+//! Downstream, the serving tier keys caches on [`FactorSnapshot::version`]:
+//! the prediction service rebuilds its quantized top-k index
+//! ([`super::QuantizedIndex`]) exactly once per published generation (see
+//! SERVING.md for the full index lifecycle).
+//!
+//! ```
+//! use a2psgd::model::{Factors, SnapshotStore};
+//! use a2psgd::rng::Rng;
+//!
+//! let mut rng = Rng::new(7);
+//! let store = SnapshotStore::new(Factors::init(4, 8, 2, 0.5, &mut rng));
+//! let pinned = store.load();               // a reader pins generation 1
+//! assert_eq!(pinned.version(), 1);
+//!
+//! let v2 = store.publish(Factors::init(6, 8, 2, 0.5, &mut rng));
+//! assert_eq!(v2, 2);
+//! assert_eq!(pinned.version(), 1);         // old pin stays valid (double buffer)
+//! assert_eq!(store.load().version(), 2);   // fresh loads see the new generation
+//! ```
 
 use super::Factors;
 use std::sync::atomic::{AtomicU64, Ordering};

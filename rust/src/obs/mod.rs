@@ -83,6 +83,12 @@ pub enum Ctr {
     ServeRequests,
     /// Backend batches executed by the service.
     ServeBatches,
+    /// Top-k requests shed at admission (bounded queue full — the client
+    /// got an explicit `Overloaded` answer instead of unbounded queueing).
+    ServeShed,
+    /// Top-k requests whose per-request deadline had already passed at
+    /// dequeue (answered `Overloaded` without scanning).
+    ServeDeadlineMiss,
     /// Trace events dropped because the sink hit its cap.
     TraceDropped,
     /// Faults fired by armed failpoints ([`crate::fault`]).
@@ -95,7 +101,7 @@ pub enum Ctr {
 
 impl Ctr {
     /// Every counter, in slot order.
-    pub const ALL: [Ctr; 21] = [
+    pub const ALL: [Ctr; 23] = [
         Ctr::SchedContention,
         Ctr::SchedStarved,
         Ctr::BlocksProcessed,
@@ -113,6 +119,8 @@ impl Ctr {
         Ctr::SnapshotPublishes,
         Ctr::ServeRequests,
         Ctr::ServeBatches,
+        Ctr::ServeShed,
+        Ctr::ServeDeadlineMiss,
         Ctr::TraceDropped,
         Ctr::FaultsInjected,
         Ctr::Retries,
@@ -139,6 +147,8 @@ impl Ctr {
             Ctr::SnapshotPublishes => "snapshot_publishes",
             Ctr::ServeRequests => "serve_requests",
             Ctr::ServeBatches => "serve_batches",
+            Ctr::ServeShed => "serve_shed",
+            Ctr::ServeDeadlineMiss => "serve_deadline_miss",
             Ctr::TraceDropped => "trace_dropped",
             Ctr::FaultsInjected => "faults_injected",
             Ctr::Retries => "retries",

@@ -24,6 +24,7 @@
 //! - config/CLI: `--kernel scalar` / `[run] kernel = "scalar"` →
 //!   [`KernelChoice::Scalar`]
 
+pub mod quant;
 pub mod scalar;
 
 #[cfg(target_arch = "x86_64")]

@@ -1,0 +1,492 @@
+//! Quantized-scan kernels for the serving-time top-k catalog sweep.
+//!
+//! Serving wants a working set far below training's f32 factors (the
+//! SGD_Tucker argument — low-memory factor representations are what make
+//! large sparse models deployable), so the catalog side of the top-k scan
+//! is stored quantized: **int8 with one f32 scale per item row** (4×
+//! smaller than f32) or **IEEE 754 binary16** (2× smaller). The query side
+//! (one user row per request) stays f32.
+//!
+//! The kernels here compute the *raw* quantized dot products — the
+//! per-item scale multiply and the index layout live in
+//! [`crate::model::quant::QuantizedIndex`]:
+//!
+//! - int8: `Σ_j q[j] · codes[j]` with `codes: &[i8]` (caller multiplies by
+//!   the item's scale),
+//! - f16: `Σ_j q[j] · f16_to_f32(codes[j])` with `codes: &[u16]`.
+//!
+//! # Error bound (documented contract, property-tested)
+//!
+//! Both modes are pinned to the f32 scan within an explicit bound. For an
+//! item row `n` quantized at scale `s = max_j |n[j]| / 127`, each
+//! dequantized element is within `s/2` of its f32 value, so
+//!
+//! ```text
+//! |score_int8 − score_f32| ≤ (s/2) · ‖q‖₁ = (max_j |n[j]| / 254) · ‖q‖₁
+//! ```
+//!
+//! For f16 the per-element round-off is relative (≤ 2⁻¹¹ for values in the
+//! normal half range), giving `|score_f16 − score_f32| ≤ 2⁻¹¹ · max_j
+//! |n[j]| · ‖q‖₁`. SIMD accumulation reassociates the sum, adding at most
+//! the usual 1e-5-relative divergence the f32 kernels already budget for.
+//! [`crate::model::quant::QuantizedIndex::error_bound`] evaluates the
+//! bound per query; the property tests in this module and in
+//! `model::quant` enforce it across ranks {8, 16, 32, 64, 128} and the
+//! non-lane-multiple remainder paths.
+//!
+//! # Dispatch
+//!
+//! Same shape as the f32 [`super::KernelSet`]: scalar reference always
+//! available, AVX2 (+F16C for the f16 path) on x86_64, NEON int8 widening
+//! on aarch64 (the NEON f16 path stays scalar — the `vcvt` f16 intrinsics
+//! are not stabilized, and the int8 mode is the serving default). The
+//! `A2PSGD_KERNEL=scalar` env override and [`super::KernelChoice::Scalar`]
+//! force the scalar reference exactly like the f32 dispatcher, so CI's
+//! forced-scalar rerun covers these kernels too.
+
+use super::{force_scalar_env, KernelChoice, KernelPath};
+
+/// Dispatched raw int8 dot: `Σ q[j] · codes[j]` (unscaled).
+pub type QdotI8Fn = fn(&[f32], &[i8]) -> f32;
+/// Dispatched raw f16 dot: `Σ q[j] · f16_to_f32(codes[j])`.
+pub type QdotF16Fn = fn(&[f32], &[u16]) -> f32;
+
+/// A resolved set of quantized-scan entry points (`Copy`, feature-check
+/// free — same contract as [`super::KernelSet`]).
+#[derive(Clone, Copy)]
+pub struct QuantKernelSet {
+    /// Implementation family this set resolved to.
+    pub path: KernelPath,
+    qdot_i8: QdotI8Fn,
+    qdot_f16: QdotF16Fn,
+}
+
+impl QuantKernelSet {
+    /// The scalar reference set (always available; also the forced path).
+    pub fn scalar() -> Self {
+        QuantKernelSet { path: KernelPath::Scalar, qdot_i8, qdot_f16 }
+    }
+
+    /// Resolve the best quantized-scan kernels under `choice` (plus the
+    /// `A2PSGD_KERNEL` env override). Call once at index build.
+    pub fn select(choice: KernelChoice) -> Self {
+        if choice == KernelChoice::Scalar || force_scalar_env() {
+            return Self::scalar();
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+            {
+                return QuantKernelSet {
+                    path: KernelPath::Avx2Fma,
+                    qdot_i8: x86::qdot_i8,
+                    // F16C is a separate ISA extension; fall back per-entry.
+                    qdot_f16: if std::arch::is_x86_feature_detected!("f16c") {
+                        x86::qdot_f16
+                    } else {
+                        qdot_f16
+                    },
+                };
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                return QuantKernelSet {
+                    path: KernelPath::Neon,
+                    qdot_i8: neon::qdot_i8,
+                    qdot_f16, // scalar: stable Rust has no NEON f16 cvt intrinsics
+                };
+            }
+        }
+        Self::scalar()
+    }
+
+    /// Dispatched raw int8 dot (multiply by the item scale for the score).
+    #[inline(always)]
+    pub fn qdot_i8(&self, q: &[f32], codes: &[i8]) -> f32 {
+        (self.qdot_i8)(q, codes)
+    }
+
+    /// Dispatched raw f16 dot.
+    #[inline(always)]
+    pub fn qdot_f16(&self, q: &[f32], codes: &[u16]) -> f32 {
+        (self.qdot_f16)(q, codes)
+    }
+}
+
+impl std::fmt::Debug for QuantKernelSet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("QuantKernelSet").field("path", &self.path).finish()
+    }
+}
+
+/// Scalar reference: `Σ q[j] · codes[j]` over int8 codes.
+pub fn qdot_i8(q: &[f32], codes: &[i8]) -> f32 {
+    assert_eq!(q.len(), codes.len());
+    q.iter().zip(codes).map(|(&x, &c)| x * c as f32).sum()
+}
+
+/// Scalar reference: `Σ q[j] · f16_to_f32(codes[j])` over f16 codes.
+pub fn qdot_f16(q: &[f32], codes: &[u16]) -> f32 {
+    assert_eq!(q.len(), codes.len());
+    q.iter().zip(codes).map(|(&x, &h)| x * f16_to_f32(h)).sum()
+}
+
+/// f32 → IEEE 754 binary16 bits, round-to-nearest-even (std has no `f16`
+/// on stable, and the crate takes no `half` dependency). Overflow saturates
+/// to ±∞, underflow flushes through the subnormal range to ±0, NaN stays
+/// NaN.
+///
+/// ```
+/// use a2psgd::optim::kernel::quant::{f16_to_f32, f32_to_f16};
+/// assert_eq!(f16_to_f32(f32_to_f16(0.5)), 0.5);       // exact in half
+/// assert_eq!(f16_to_f32(f32_to_f16(-1.0)), -1.0);
+/// let x = 0.1f32;                                     // inexact in half
+/// assert!((f16_to_f32(f32_to_f16(x)) - x).abs() <= x * (1.0 / 2048.0));
+/// ```
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN (keep NaN signaling-agnostic: force a mantissa bit).
+        let payload = (mant >> 13) as u16 & 0x3ff;
+        return sign | 0x7c00 | if mant != 0 { payload | 0x200 } else { 0 };
+    }
+    let e = exp - 127; // unbiased
+    if e > 15 {
+        return sign | 0x7c00; // overflow → ±∞
+    }
+    if e >= -14 {
+        // Normal half: 24-bit significand (implicit bit) → 11 bits.
+        let m = mant | 0x0080_0000;
+        let shifted = m >> 13;
+        let round = m & 0x1fff;
+        let mut h = (((e + 15) as u32) << 10) | (shifted & 0x3ff);
+        if round > 0x1000 || (round == 0x1000 && shifted & 1 == 1) {
+            h += 1; // carry may ripple into the exponent — that's correct
+        }
+        return sign | h as u16;
+    }
+    if e >= -25 {
+        // Subnormal half.
+        let m = mant | 0x0080_0000;
+        let shift = (13 + (-14 - e)) as u32;
+        let shifted = m >> shift;
+        let half = 1u32 << (shift - 1);
+        let round = m & ((1u32 << shift) - 1);
+        let mut h = shifted;
+        if round > half || (round == half && shifted & 1 == 1) {
+            h += 1;
+        }
+        return sign | h as u16;
+    }
+    sign // underflow → ±0
+}
+
+/// IEEE 754 binary16 bits → f32 (exact — every half value is representable
+/// as f32). Pure bit manipulation; no libm on the scan path.
+#[inline]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13) // Inf / NaN
+    } else if exp != 0 {
+        sign | ((exp + 112) << 23) | (mant << 13) // normal: rebias 15 → 127
+    } else if mant == 0 {
+        sign // ±0
+    } else {
+        // Subnormal half = mant · 2⁻²⁴: renormalize under f32's range.
+        let n = 31 - mant.leading_zeros(); // MSB position, 0..=9
+        let e = n + 103; // (n − 24) + 127
+        let m = (mant ^ (1 << n)) << (23 - n);
+        sign | (e << 23) | m
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! AVX2 int8 / F16C f16 scan bodies. Same safety model as the f32
+    //! kernels in `super::super::x86`: raw-pointer `_body` fns inlined
+    //! into `#[target_feature]` wrappers, reached only through
+    //! [`super::QuantKernelSet::select`]'s runtime feature checks, with
+    //! slice lengths asserted in the safe wrappers.
+
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum of 8 f32 lanes.
+    ///
+    /// # Safety
+    /// AVX2 must be available (callers are `#[target_feature]` wrappers).
+    #[inline(always)]
+    unsafe fn hsum(v: __m256) -> f32 {
+        // SAFETY: ISA availability is this fn's contract (see `# Safety`).
+        unsafe {
+            let s = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps(v, 1));
+            let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+            let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+            _mm_cvtss_f32(s)
+        }
+    }
+
+    /// `Σ q[j] · codes[j]`: widen 8 int8 codes to i32, convert to f32, FMA.
+    ///
+    /// # Safety
+    /// `q` valid for `d` f32 reads, `codes` valid for `d` i8 reads, and
+    /// AVX2+FMA available.
+    #[inline(always)]
+    unsafe fn qdot_i8_body(q: *const f32, codes: *const i8, d: usize) -> f32 {
+        // SAFETY: pointer validity for `d` reads and ISA availability are
+        // this fn's contract (see `# Safety`).
+        unsafe {
+            let mut acc = _mm256_setzero_ps();
+            let mut k = 0usize;
+            while k + 8 <= d {
+                // 8 sign-extended codes → 8 f32 lanes.
+                let c8 = _mm_loadl_epi64(codes.add(k) as *const __m128i);
+                let c = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(c8));
+                acc = _mm256_fmadd_ps(_mm256_loadu_ps(q.add(k)), c, acc);
+                k += 8;
+            }
+            let mut s = hsum(acc);
+            while k < d {
+                s += *q.add(k) * *codes.add(k) as f32;
+                k += 1;
+            }
+            s
+        }
+    }
+
+    /// `Σ q[j] · f16_to_f32(codes[j])` via F16C's 8-lane converter.
+    ///
+    /// # Safety
+    /// `q` valid for `d` f32 reads, `codes` valid for `d` u16 reads, and
+    /// AVX2+FMA+F16C available.
+    #[inline(always)]
+    unsafe fn qdot_f16_body(q: *const f32, codes: *const u16, d: usize) -> f32 {
+        // SAFETY: pointer validity for `d` reads and ISA availability are
+        // this fn's contract (see `# Safety`).
+        unsafe {
+            let mut acc = _mm256_setzero_ps();
+            let mut k = 0usize;
+            while k + 8 <= d {
+                let h = _mm_loadu_si128(codes.add(k) as *const __m128i);
+                acc = _mm256_fmadd_ps(_mm256_loadu_ps(q.add(k)), _mm256_cvtph_ps(h), acc);
+                k += 8;
+            }
+            let mut s = hsum(acc);
+            while k < d {
+                s += *q.add(k) * super::f16_to_f32(*codes.add(k));
+                k += 1;
+            }
+            s
+        }
+    }
+
+    /// AVX2+FMA int8 raw dot.
+    ///
+    /// # Safety
+    /// AVX2+FMA available — guaranteed by the dispatch-time feature check.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn qdot_i8_tf(q: &[f32], codes: &[i8]) -> f32 {
+        // SAFETY: equal lengths asserted by the safe wrapper; ISA by the
+        // `#[target_feature]` contract.
+        unsafe { qdot_i8_body(q.as_ptr(), codes.as_ptr(), q.len()) }
+    }
+
+    /// AVX2+FMA+F16C f16 raw dot.
+    ///
+    /// # Safety
+    /// AVX2+FMA+F16C available — guaranteed by the dispatch-time check.
+    #[target_feature(enable = "avx2,fma,f16c")]
+    unsafe fn qdot_f16_tf(q: &[f32], codes: &[u16]) -> f32 {
+        // SAFETY: equal lengths asserted by the safe wrapper; ISA by the
+        // `#[target_feature]` contract.
+        unsafe { qdot_f16_body(q.as_ptr(), codes.as_ptr(), q.len()) }
+    }
+
+    pub(super) fn qdot_i8(q: &[f32], codes: &[i8]) -> f32 {
+        assert_eq!(q.len(), codes.len());
+        // SAFETY: lengths equal (asserted); AVX2+FMA presence was runtime-
+        // checked before this fn pointer was installed.
+        unsafe { qdot_i8_tf(q, codes) }
+    }
+
+    pub(super) fn qdot_f16(q: &[f32], codes: &[u16]) -> f32 {
+        assert_eq!(q.len(), codes.len());
+        // SAFETY: lengths equal (asserted); AVX2+FMA+F16C presence was
+        // runtime-checked before this fn pointer was installed.
+        unsafe { qdot_f16_tf(q, codes) }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! NEON int8 scan body: 8 codes widen s8 → s16 → 2×s32 → 2×f32x4.
+
+    use std::arch::aarch64::*;
+
+    /// `Σ q[j] · codes[j]` with NEON int8 widening.
+    ///
+    /// # Safety
+    /// `q` valid for `d` f32 reads, `codes` valid for `d` i8 reads, and
+    /// NEON available.
+    #[inline(always)]
+    unsafe fn qdot_i8_body(q: *const f32, codes: *const i8, d: usize) -> f32 {
+        // SAFETY: pointer validity for `d` reads and ISA availability are
+        // this fn's contract (see `# Safety`).
+        unsafe {
+            let mut acc0 = vdupq_n_f32(0.0);
+            let mut acc1 = vdupq_n_f32(0.0);
+            let mut k = 0usize;
+            while k + 8 <= d {
+                let c16 = vmovl_s8(vld1_s8(codes.add(k)));
+                let lo = vcvtq_f32_s32(vmovl_s16(vget_low_s16(c16)));
+                let hi = vcvtq_f32_s32(vmovl_s16(vget_high_s16(c16)));
+                acc0 = vfmaq_f32(acc0, vld1q_f32(q.add(k)), lo);
+                acc1 = vfmaq_f32(acc1, vld1q_f32(q.add(k + 4)), hi);
+                k += 8;
+            }
+            let mut s = vaddvq_f32(vaddq_f32(acc0, acc1));
+            while k < d {
+                s += *q.add(k) * *codes.add(k) as f32;
+                k += 1;
+            }
+            s
+        }
+    }
+
+    /// NEON int8 raw dot.
+    ///
+    /// # Safety
+    /// NEON available — guaranteed by the dispatch-time feature check.
+    #[target_feature(enable = "neon")]
+    unsafe fn qdot_i8_tf(q: &[f32], codes: &[i8]) -> f32 {
+        // SAFETY: equal lengths asserted by the safe wrapper; ISA by the
+        // `#[target_feature]` contract.
+        unsafe { qdot_i8_body(q.as_ptr(), codes.as_ptr(), q.len()) }
+    }
+
+    pub(super) fn qdot_i8(q: &[f32], codes: &[i8]) -> f32 {
+        assert_eq!(q.len(), codes.len());
+        // SAFETY: lengths equal (asserted); NEON presence was runtime-
+        // checked before this fn pointer was installed.
+        unsafe { qdot_i8_tf(q, codes) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f32, b: f32) -> bool {
+        let scale = a.abs().max(b.abs()).max(1.0);
+        (a - b).abs() <= 1e-5 * scale
+    }
+
+    /// Monomorphization targets plus remainder-path ranks.
+    const RANKS: &[usize] = &[1, 3, 5, 7, 8, 9, 12, 16, 20, 32, 33, 64, 100, 128, 130];
+
+    #[test]
+    fn f16_roundtrip_exact_on_halves() {
+        for x in [0.0f32, -0.0, 0.5, 1.0, -1.0, 2.0, 1.5, -0.25, 65504.0, -65504.0] {
+            assert_eq!(f16_to_f32(f32_to_f16(x)), x, "{x} should be exact in half");
+        }
+    }
+
+    #[test]
+    fn f16_conversion_specials() {
+        assert_eq!(f16_to_f32(f32_to_f16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        assert_eq!(f16_to_f32(f32_to_f16(1e6)), f32::INFINITY, "overflow saturates");
+        assert_eq!(f16_to_f32(f32_to_f16(1e-9)), 0.0, "underflow flushes to zero");
+        // Subnormal half survives the round trip (2^-24 is the smallest).
+        let tiny = 6.0e-8f32;
+        let rt = f16_to_f32(f32_to_f16(tiny));
+        assert!(rt > 0.0 && (rt - tiny).abs() < 6.0e-8);
+    }
+
+    #[test]
+    fn property_f16_roundtrip_within_half_ulp() {
+        crate::proptest_lite::check(
+            "f32→f16→f32 stays within the half-precision relative error",
+            256,
+            |g| g.f32_in(-100.0, 100.0),
+            |&x| {
+                let rt = f16_to_f32(f32_to_f16(x));
+                // Normal range: relative ≤ 2⁻¹¹; near zero: absolute ≤ 2⁻²⁵.
+                (rt - x).abs() <= x.abs() * (1.0 / 2048.0) + 3.0e-8
+            },
+        );
+    }
+
+    #[test]
+    fn dispatched_qdot_i8_matches_scalar_across_ranks() {
+        let set = QuantKernelSet::select(KernelChoice::Auto);
+        for &d in RANKS {
+            let mut rng = crate::rng::Rng::new(d as u64 + 1);
+            let q: Vec<f32> = (0..d).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+            let codes: Vec<i8> =
+                (0..d).map(|_| (rng.f32_range(-127.0, 127.0)) as i8).collect();
+            let got = set.qdot_i8(&q, &codes);
+            let want = qdot_i8(&q, &codes);
+            assert!(close(got, want), "d={d} path={}: {got} vs {want}", set.path);
+        }
+    }
+
+    #[test]
+    fn dispatched_qdot_f16_matches_scalar_across_ranks() {
+        let set = QuantKernelSet::select(KernelChoice::Auto);
+        for &d in RANKS {
+            let mut rng = crate::rng::Rng::new(d as u64 + 77);
+            let q: Vec<f32> = (0..d).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+            let codes: Vec<u16> =
+                (0..d).map(|_| f32_to_f16(rng.f32_range(-2.0, 2.0))).collect();
+            let got = set.qdot_f16(&q, &codes);
+            let want = qdot_f16(&q, &codes);
+            assert!(close(got, want), "d={d} path={}: {got} vs {want}", set.path);
+        }
+    }
+
+    #[test]
+    fn property_dispatched_quant_dots_match_scalar() {
+        let set = QuantKernelSet::select(KernelChoice::Auto);
+        crate::proptest_lite::check(
+            "dispatched quantized dots match the scalar reference within 1e-5 rel",
+            192,
+            |g| {
+                let d = g.usize_in(1, 160);
+                let q = g.vec(d, |g| g.f32_in(-1.0, 1.0));
+                let codes: Vec<i8> =
+                    g.vec(d, |g| g.f32_in(-127.0, 127.0)).into_iter().map(|x| x as i8).collect();
+                let halves: Vec<u16> =
+                    g.vec(d, |g| g.f32_in(-2.0, 2.0)).into_iter().map(f32_to_f16).collect();
+                (q, codes, halves)
+            },
+            |(q, codes, halves)| {
+                close(set.qdot_i8(q, codes), qdot_i8(q, codes))
+                    && close(set.qdot_f16(q, halves), qdot_f16(q, halves))
+            },
+        );
+    }
+
+    #[test]
+    fn forced_scalar_choice_selects_scalar_path() {
+        let set = QuantKernelSet::select(KernelChoice::Scalar);
+        assert_eq!(set.path, KernelPath::Scalar);
+        assert!(format!("{set:?}").contains("Scalar"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn scalar_qdot_i8_rejects_length_mismatch() {
+        qdot_i8(&[1.0, 2.0], &[1i8]);
+    }
+}

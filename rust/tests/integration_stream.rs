@@ -341,3 +341,149 @@ fn predict_many_batches_in_one_submission() {
     let s2 = svc2.shutdown();
     assert_eq!(s2.batches, 0);
 }
+
+// ---- Serving tier: deadlines, admission control, quantized top-k ----
+
+use a2psgd::coordinator::service::{ServiceOptions, TopKAnswer};
+
+fn quantized_service(
+    factors: Factors,
+    queue_cap: usize,
+) -> (Arc<SnapshotStore>, PredictionService) {
+    let store = Arc::new(SnapshotStore::new(factors));
+    let svc = PredictionService::start_with_options(
+        a2psgd::runtime::default_artifacts_dir(),
+        Arc::clone(&store),
+        None,
+        ServiceOptions { queue_cap, ..ServiceOptions::native() },
+    )
+    .expect("native backend needs no artifacts");
+    (store, svc)
+}
+
+/// Tentpole: quantized top-k answers through the service must agree with
+/// the exact f32 ranking within the int8 error bound — and at d=8 on a
+/// 60-item catalog the rankings themselves should match outright.
+#[test]
+fn quantized_topk_matches_exact_ranking() {
+    let f = factors(21, 10, 60);
+    let reference = f.clone();
+    let (_store, svc) = quantized_service(f, 64);
+    let client = svc.client();
+    let answer = client.top_k_within(3, 5, None).unwrap();
+    let TopKAnswer::Ranked(got) = answer else {
+        panic!("uncontended request must not shed");
+    };
+    assert_eq!(got.len(), 5);
+    let exact = a2psgd::metrics::topn::rank_items(
+        &reference,
+        3,
+        &std::collections::HashSet::new(),
+        5,
+    );
+    let got_items: Vec<u32> = got.iter().map(|&(v, _)| v).collect();
+    let exact_items: Vec<u32> = exact.iter().map(|&(v, _)| v).collect();
+    assert_eq!(got_items, exact_items, "int8 ranking diverged on an easy catalog");
+    // Scores carry the dequant scale: close to exact, not bit-equal.
+    for (&(_, qs), &(_, es)) in got.iter().zip(exact.iter()) {
+        assert!((qs - es).abs() < 0.05, "quantized score {qs} vs exact {es}");
+    }
+    drop(client);
+    let stats = svc.shutdown();
+    assert_eq!(stats.topk_served, 1);
+    assert_eq!(stats.topk_shed, 0);
+    assert_eq!(stats.deadline_miss, 0);
+}
+
+/// An already-expired deadline answers `Overloaded` at dequeue (counted as
+/// a deadline miss), and legacy `top_k` still answers unbounded.
+#[test]
+fn expired_deadline_sheds_and_is_counted() {
+    let f = factors(22, 8, 30);
+    let (_store, svc) = quantized_service(f, 64);
+    let client = svc.client();
+    let answer = client.top_k_within(0, 3, Some(Duration::ZERO)).unwrap();
+    assert_eq!(answer, TopKAnswer::Overloaded);
+    // The unbounded legacy path is unaffected.
+    assert_eq!(client.top_k(0, 3).unwrap().len(), 3);
+    let live = client.stats();
+    assert_eq!(live.deadline_miss, 1);
+    drop(client);
+    let stats = svc.shutdown();
+    assert_eq!(stats.deadline_miss, 1);
+    assert_eq!(stats.topk_served, 1);
+}
+
+/// A full admission queue sheds instantly — `top_k_within` never blocks.
+/// One client's round-trips can never overflow the queue (each waits for
+/// its reply), so overflow needs concurrency: four threads flood a
+/// capacity-1 queue until the first `Overloaded` lands. Sheds never reach
+/// the batcher, so `served + shed` accounts for every submission.
+#[test]
+fn full_queue_sheds_instead_of_queueing() {
+    let f = factors(23, 8, 30);
+    let (_store, svc) = quantized_service(f, 1);
+    let hit = std::sync::atomic::AtomicBool::new(false);
+    let submitted = std::sync::atomic::AtomicU64::new(0);
+    let budget = a2psgd::testutil::budget(2000, 100);
+    std::thread::scope(|s| {
+        for t in 0..4u32 {
+            let client = svc.client();
+            let hit = &hit;
+            let submitted = &submitted;
+            s.spawn(move || {
+                for i in 0..budget {
+                    if hit.load(std::sync::atomic::Ordering::Acquire) {
+                        break;
+                    }
+                    submitted.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    let u = ((t as usize + i) % 8) as u32;
+                    match client.top_k_within(u, 3, Some(Duration::from_secs(60))).unwrap() {
+                        TopKAnswer::Overloaded => {
+                            hit.store(true, std::sync::atomic::Ordering::Release)
+                        }
+                        TopKAnswer::Ranked(top) => assert_eq!(top.len(), 3),
+                    }
+                }
+            });
+        }
+    });
+    let stats = svc.shutdown();
+    assert!(
+        stats.topk_shed > 0,
+        "4 threads flooding a capacity-1 queue shed nothing in {} submissions",
+        submitted.load(std::sync::atomic::Ordering::Relaxed)
+    );
+    assert_eq!(
+        stats.topk_served + stats.topk_shed,
+        submitted.load(std::sync::atomic::Ordering::Relaxed),
+        "every submission is either served or shed — never silently queued away"
+    );
+}
+
+/// Hot-swap invalidates the quantized index: answers must track the new
+/// generation (version-keyed cache, same contract as the XLA padding).
+#[test]
+fn quantized_index_follows_hot_swap() {
+    let f1 = factors(24, 6, 40);
+    let (store, svc) = quantized_service(f1, 64);
+    let client = svc.client();
+    let TopKAnswer::Ranked(before) = client.top_k_within(2, 3, None).unwrap() else {
+        panic!("must not shed");
+    };
+    // Publish factors that strongly favor one item for user 2.
+    let mut f2 = factors(25, 6, 40);
+    for k in 0..f2.d() {
+        f2.m[2 * f2.d() + k] = 1.0;
+        f2.n[17 * f2.d() + k] = 1.0;
+    }
+    store.publish(f2);
+    let TopKAnswer::Ranked(after) = client.top_k_within(2, 3, None).unwrap() else {
+        panic!("must not shed");
+    };
+    assert_eq!(after[0].0, 17, "rebuilt index must reflect the new snapshot");
+    assert_ne!(before, after);
+    drop(client);
+    let stats = svc.shutdown();
+    assert_eq!(stats.versions_seen, 2);
+}

@@ -32,6 +32,15 @@ tolerance) of the resident epoch, so per-epoch re-decode (and anything
 riding the wave path, like the fault-injection hooks) can never quietly
 erode the out-of-core mode.
 
+`serving` gates the serving tier three ways: `p50_ms`/`p99_ms` are
+ceilings (x tolerance) on concurrent-client quantized top-k latency
+measured under hot-swap churn — absolute milliseconds set far above the
+reference runner's medians, so they catch pathologies (per-request index
+rebuilds, queueing collapse) rather than drift — and `min_recall` is an
+*exact* floor on both `recall_int8` and `recall_f16`: recall@k against
+the exact f32 ranking is bounded and deterministic for the seeded bench
+catalog, so no tolerance applies.
+
 Every section named here must be present in *both* artifacts; a missing
 section is a failure, not a skip — a gate that silently checks nothing is
 worse than no gate.
@@ -147,6 +156,41 @@ def main():
                 f"{base_mem:.3f}*{tol:.2f} = {base_mem * tol:.3f} "
                 f"({cur_mem / base_mem:.2f}x of budget)"
             )
+
+    # serving: latency ceilings (inverse semantics, x tolerance) plus an
+    # exact recall floor (no tolerance — bounded, deterministic metric).
+    base_srv = base.get("serving", {})
+    cur_srv = cur.get("serving", {})
+    for base_key, cur_key in (("max_p50_ms", "p50_ms"), ("max_p99_ms", "p99_ms")):
+        ceiling = base_srv.get(base_key)
+        got = cur_srv.get(cur_key)
+        if ceiling is None:
+            failures.append(f"serving: {base_key} missing from baseline {args.baseline}")
+        elif got is None:
+            failures.append(f"serving: {cur_key} missing from current artifact {args.current}")
+        else:
+            checked += 1
+            if got > ceiling * tol:
+                failures.append(
+                    f"serving: observed {cur_key} {got:.3f}ms > ceiling "
+                    f"{ceiling:.3f}*{tol:.2f} = {ceiling * tol:.3f}ms "
+                    f"({got / ceiling:.2f}x of budget)"
+                )
+    min_recall = base_srv.get("min_recall")
+    if min_recall is None:
+        failures.append(f"serving: min_recall missing from baseline {args.baseline}")
+    else:
+        for key in ("recall_int8", "recall_f16"):
+            got = cur_srv.get(key)
+            if got is None:
+                failures.append(f"serving: {key} missing from current artifact {args.current}")
+                continue
+            checked += 1
+            if got < min_recall:
+                failures.append(
+                    f"serving: observed {key} {got:.3f} < exact floor {min_recall:.3f} "
+                    f"(quantized ranking diverged from f32)"
+                )
 
     if failures:
         print(f"bench gate: {len(failures)} regression(s) past the {tol:.2f}x tolerance:")
