@@ -18,6 +18,11 @@
 //!                [--d D] [--seed S] [--config FILE] [--out FILE]
 //! a2psgd pack    (--data-file PATH | --dataset D) --out DIR
 //!                [--shard-mb N] [--seed S] [--config FILE]
+//! a2psgd dist-train  --dataset SHARD_DIR --workers N [--col-blocks C]
+//!                    [--listen ADDR] [--exchange-dir DIR] [--epochs N]
+//!                    [--threads N] [--seed S] [--d D] [--config FILE]
+//! a2psgd dist-worker --connect ADDR --worker-id I --dataset SHARD_DIR
+//!                    [--threads N]
 //! a2psgd trace-export --input TRACE.jsonl --out TRACE.json
 //! a2psgd gen-data --dataset D --out FILE [--seed S]
 //! a2psgd print-config [--dataset D]
@@ -132,6 +137,14 @@ USAGE:
                       split by row range, embedded id map, CRC per shard —
                       shard directories then train out-of-core (block
                       engines) or materialize for the others
+  a2psgd dist-train   distributed shard-parallel training: a coordinator
+                      assigning nnz-balanced shard row ranges to N worker
+                      processes with DSGD column-block rotation — no two
+                      workers ever write the same column factors — merging
+                      factors at epoch barriers through the snapshot store
+                      (see DISTRIBUTED.md)
+  a2psgd dist-worker  one distributed worker process (normally spawned by
+                      dist-train; run by hand for multi-host setups)
   a2psgd trace-export convert a span JSONL trace (from --trace) into a
                       chrome://tracing / Perfetto trace_event JSON file
   a2psgd gen-data     write a synthetic dataset to a ratings file
@@ -208,6 +221,18 @@ PACK FLAGS:
   --out DIR          shard directory to create (required)
   --shard-mb N       target shard payload size in MiB (default: 64, or
                      `[data] shard_mb` from --config)
+
+DIST FLAGS (dist-train / dist-worker):
+  --workers N        worker processes to spawn and wait for (dist-train;
+                     default: 2, or `[dist] workers` from --config; must
+                     be ≤ the shard count — row ranges are shard-aligned)
+  --col-blocks C     strata per epoch (default: workers; more blocks =
+                     finer rotation granularity, same total work)
+  --listen ADDR      coordinator control address (default: 127.0.0.1:0)
+  --exchange-dir DIR factor checkpoint exchange directory (default:
+                     <out>/dist-exchange; must be shared with workers)
+  --connect ADDR     (dist-worker) coordinator address to register with
+  --worker-id I      (dist-worker) this worker's index in 0..workers
 
 TRACE-EXPORT FLAGS:
   --input PATH       span JSONL written by --trace (required)

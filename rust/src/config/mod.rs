@@ -594,6 +594,112 @@ impl ServeConfig {
     }
 }
 
+/// `[dist]` section: distributed shard-parallel training policy for
+/// `a2psgd dist-train` (see DISTRIBUTED.md). CLI flags override the file.
+///
+/// ```toml
+/// [dist]
+/// workers = 4                # worker processes (required ≥ 1)
+/// col_blocks = 8             # strata per epoch (0 = workers)
+/// listen = "127.0.0.1:0"     # coordinator control address
+/// exchange_dir = "exchange"  # factor checkpoint exchange directory
+/// register_timeout_ms = 30000
+/// test_frac = 0.2            # hash-split held-out fraction
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct DistConfig {
+    /// Worker processes the coordinator waits for.
+    pub workers: usize,
+    /// Column blocks / strata per epoch (0 ⇒ same as `workers`).
+    pub col_blocks: usize,
+    /// Coordinator listen address (port 0 = ephemeral).
+    pub listen: String,
+    /// Factor-exchange directory (`None` = `<out>/dist-exchange`).
+    pub exchange_dir: Option<String>,
+    /// Worker registration timeout in milliseconds.
+    pub register_timeout_ms: u64,
+    /// Hash-split test fraction used for barrier evaluation and worker
+    /// train-side filtering.
+    pub test_frac: f64,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig {
+            workers: 2,
+            col_blocks: 0,
+            listen: "127.0.0.1:0".into(),
+            exchange_dir: None,
+            register_timeout_ms: 30_000,
+            test_frac: 0.2,
+        }
+    }
+}
+
+impl DistConfig {
+    /// Apply `[dist]` overrides from TOML-subset text.
+    pub fn apply_toml(mut self, text: &str) -> Result<Self> {
+        let doc = parse(text)?;
+        if let Some(v) = doc.get("dist", "listen") {
+            self.listen = v.as_str().context("dist.listen must be a string")?.to_string();
+        }
+        if let Some(v) = doc.get("dist", "exchange_dir") {
+            self.exchange_dir =
+                Some(v.as_str().context("dist.exchange_dir must be a string")?.to_string());
+        }
+        if let Some(v) = doc.get("dist", "test_frac") {
+            let x = v.as_float().context("dist.test_frac must be a number")?;
+            anyhow::ensure!((0.0..1.0).contains(&x), "dist.test_frac must be in [0, 1), got {x}");
+            self.test_frac = x;
+        }
+        let int = |k: &str| -> Result<Option<i64>> {
+            match doc.get("dist", k) {
+                None => Ok(None),
+                Some(v) => {
+                    let x = v.as_int().with_context(|| format!("dist.{k} must be an int"))?;
+                    anyhow::ensure!(x >= 0, "dist.{k} must be non-negative, got {x}");
+                    Ok(Some(x))
+                }
+            }
+        };
+        if let Some(x) = int("workers")? {
+            self.workers = x as usize;
+        }
+        if let Some(x) = int("col_blocks")? {
+            self.col_blocks = x as usize;
+        }
+        if let Some(x) = int("register_timeout_ms")? {
+            self.register_timeout_ms = x as u64;
+        }
+        anyhow::ensure!(self.workers >= 1, "dist.workers must be >= 1");
+        Ok(self)
+    }
+
+    /// Fold CLI flags over the config; set flags win.
+    pub fn apply_cli(
+        mut self,
+        workers: Option<usize>,
+        col_blocks: Option<usize>,
+        listen: Option<&str>,
+        exchange_dir: Option<&str>,
+    ) -> Result<Self> {
+        if let Some(w) = workers {
+            anyhow::ensure!(w >= 1, "--workers must be >= 1");
+            self.workers = w;
+        }
+        if let Some(c) = col_blocks {
+            self.col_blocks = c;
+        }
+        if let Some(a) = listen {
+            self.listen = a.to_string();
+        }
+        if let Some(d) = exchange_dir {
+            self.exchange_dir = Some(d.to_string());
+        }
+        Ok(self)
+    }
+}
+
 /// Apply `[stream]` (and `[hyper]`) overrides from a TOML-subset file onto a
 /// base [`StreamConfig`] (usually [`StreamConfig::preset`]).
 ///
@@ -886,6 +992,43 @@ gamma = 0.8
         // Other sections are ignored.
         let sc = ServeConfig::default().apply_toml("[bench]\nthreads = 4\n").unwrap();
         assert_eq!(sc, ServeConfig::default());
+    }
+
+    #[test]
+    fn dist_config_overrides_and_cli_layering() {
+        let dc = DistConfig::default();
+        assert_eq!(dc.workers, 2);
+        assert_eq!(dc.col_blocks, 0);
+        let dc = DistConfig::default()
+            .apply_toml(
+                "[dist]\nworkers = 4\ncol_blocks = 8\nlisten = \"127.0.0.1:7900\"\n\
+                 exchange_dir = \"ex\"\nregister_timeout_ms = 5000\ntest_frac = 0.3\n",
+            )
+            .unwrap();
+        assert_eq!(dc.workers, 4);
+        assert_eq!(dc.col_blocks, 8);
+        assert_eq!(dc.listen, "127.0.0.1:7900");
+        assert_eq!(dc.exchange_dir.as_deref(), Some("ex"));
+        assert_eq!(dc.register_timeout_ms, 5000);
+        assert!((dc.test_frac - 0.3).abs() < 1e-12);
+        // CLI flags win over the file.
+        let dc = dc.apply_cli(Some(3), Some(6), Some("0.0.0.0:7"), None).unwrap();
+        assert_eq!(dc.workers, 3);
+        assert_eq!(dc.col_blocks, 6);
+        assert_eq!(dc.listen, "0.0.0.0:7");
+        assert_eq!(dc.exchange_dir.as_deref(), Some("ex"));
+    }
+
+    #[test]
+    fn dist_config_rejects_invalid_values() {
+        assert!(DistConfig::default().apply_toml("[dist]\nworkers = 0\n").is_err());
+        assert!(DistConfig::default().apply_toml("[dist]\nworkers = -2\n").is_err());
+        assert!(DistConfig::default().apply_toml("[dist]\ntest_frac = 1.5\n").is_err());
+        assert!(DistConfig::default().apply_toml("[dist]\nlisten = 9\n").is_err());
+        assert!(DistConfig::default().apply_cli(Some(0), None, None, None).is_err());
+        // Other sections are ignored.
+        let dc = DistConfig::default().apply_toml("[serve]\nnet_threads = 4\n").unwrap();
+        assert_eq!(dc, DistConfig::default());
     }
 
     #[test]

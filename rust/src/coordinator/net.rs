@@ -62,6 +62,7 @@ impl Default for NetOptions {
 pub struct TopKServer {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
+    threads: usize,
     driver: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -91,7 +92,7 @@ impl TopKServer {
             let stop = &stop_driver;
             pool.run(|_tid| accept_loop(listener, client, stop, opts.deadline));
         });
-        Ok(TopKServer { addr, stop, driver: Some(driver) })
+        Ok(TopKServer { addr, stop, threads: opts.threads, driver: Some(driver) })
     }
 
     /// The bound address (resolved port when the listener bound port 0).
@@ -104,12 +105,17 @@ impl TopKServer {
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Release);
         // Each wake connection unparks at most one worker's accept() —
-        // send enough for all of them. Failure is fine (listener already
-        // gone means nobody is parked).
+        // send one per pool thread, then sleep briefly before retrying.
+        // (This used to be an unbounded connect storm with yield_now(),
+        // hammering the listener — and every raced real client — until
+        // the driver happened to finish.) Failure is fine: a listener
+        // that is already gone means nobody is parked.
         if let Some(driver) = self.driver.take() {
             while !driver.is_finished() {
-                let _ = TcpStream::connect(self.addr);
-                std::thread::yield_now();
+                for _ in 0..self.threads {
+                    let _ = TcpStream::connect(self.addr);
+                }
+                std::thread::sleep(Duration::from_millis(2));
             }
             let _ = driver.join();
         }
@@ -126,7 +132,16 @@ fn accept_loop(
         match listener.accept() {
             Ok((stream, _peer)) => {
                 if stop.load(Ordering::Acquire) {
-                    return; // shutdown wake-up connection
+                    // Raced accept during shutdown: usually a wake-up
+                    // connection (closes immediately → EOF), but it can
+                    // be a *real* client that connected just before the
+                    // stop flag flipped. Honor the shutdown contract —
+                    // "in-flight connections finish their current line" —
+                    // by serving whatever it already sent under a short
+                    // read timeout instead of dropping it replyless.
+                    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+                    let _ = serve_conn(stream, client, deadline);
+                    return;
                 }
                 // A torn connection only ends that connection.
                 let _ = serve_conn(stream, client, deadline);
@@ -353,5 +368,106 @@ mod tests {
         server.shutdown();
         let stats = svc.shutdown();
         assert_eq!(stats.topk_served, 15);
+    }
+
+    /// Regression: a *real* client accepted during shutdown used to be
+    /// dropped without a reply (the raced-accept path returned straight
+    /// away), contradicting the "in-flight connections finish their
+    /// current line" contract. Stage the exact interleaving: a worker is
+    /// parked in `accept()`, the stop flag flips, and only then does a
+    /// client connect and send a line — `accept()` returns a live
+    /// connection with `stop` already set, and the client must still get
+    /// its reply line before the connection closes.
+    #[test]
+    fn raced_client_during_shutdown_gets_its_reply() {
+        let svc = native_service();
+        let client = svc.client();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let acceptor = s.spawn(|| accept_loop(&listener, &client, &stop, None));
+            // Let the acceptor pass the while-check and park in accept().
+            std::thread::sleep(Duration::from_millis(100));
+            // Blocking accept() does not poll the flag, so the acceptor
+            // stays parked and the next connection hits the raced path.
+            stop.store(true, Ordering::Release);
+            let stream = TcpStream::connect(addr).unwrap();
+            stream
+                .set_read_timeout(Some(Duration::from_secs(5)))
+                .unwrap();
+            let mut w = stream.try_clone().unwrap();
+            writeln!(w, "PREDICT 0 1").unwrap();
+            let mut reader = BufReader::new(stream);
+            let mut line = String::new();
+            let n = reader.read_line(&mut line).unwrap_or(0);
+            assert!(
+                n > 0 && line.starts_with("OK "),
+                "raced client must get its reply before close, got {n} bytes: {line:?}"
+            );
+            acceptor.join().unwrap();
+        });
+        drop(client);
+        svc.shutdown();
+    }
+
+    /// Shutdown liveness under concurrent connect load: clients hammer
+    /// the listener with connects and requests while shutdown runs. The
+    /// paced per-thread wake (versus the old unbounded connect storm)
+    /// must still finish promptly, and no client may observe a panic —
+    /// only answered lines or a clean close.
+    #[test]
+    fn shutdown_completes_under_concurrent_connect_load() {
+        let svc = native_service();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let server =
+            TopKServer::start(listener, svc.client(), NetOptions { threads: 2, deadline: None })
+                .unwrap();
+        let addr = server.addr();
+        let quit = Arc::new(AtomicBool::new(false));
+        let mut hammers = Vec::new();
+        for t in 0..4u32 {
+            let quit = Arc::clone(&quit);
+            hammers.push(std::thread::spawn(move || {
+                let mut answered = 0u32;
+                while !quit.load(Ordering::Acquire) {
+                    let Ok(stream) = TcpStream::connect(addr) else { break };
+                    stream.set_read_timeout(Some(Duration::from_secs(2))).ok();
+                    let Ok(mut w) = stream.try_clone() else { continue };
+                    if writeln!(w, "TOPK {} 2", t % 20).is_err() {
+                        continue; // server already gone — clean close
+                    }
+                    let mut reader = BufReader::new(stream);
+                    let mut line = String::new();
+                    match reader.read_line(&mut line) {
+                        Ok(n) if n > 0 => {
+                            assert!(
+                                line.starts_with("OK ") || line.starts_with("OVERLOADED"),
+                                "{line:?}"
+                            );
+                            answered += 1;
+                        }
+                        // EOF or reset: raced the shutdown — acceptable.
+                        _ => {}
+                    }
+                }
+                answered
+            }));
+        }
+        // Let the hammers build up real load, then shut down under it.
+        std::thread::sleep(Duration::from_millis(100));
+        let t0 = std::time::Instant::now();
+        server.shutdown();
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "shutdown stalled under connect load: {:?}",
+            t0.elapsed()
+        );
+        quit.store(true, Ordering::Release);
+        let answered: u32 = hammers.into_iter().map(|h| h.join().unwrap()).sum();
+        assert!(answered > 0, "load threads never got a single answer");
+        let stats = svc.shutdown();
+        // Every answered line was either served or shed (OVERLOADED).
+        assert!(stats.topk_served + stats.topk_shed >= answered as u64);
     }
 }

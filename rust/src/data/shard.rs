@@ -720,6 +720,51 @@ pub fn shard_record_bases(manifest: &Manifest, prefix: usize) -> Vec<u64> {
     bases
 }
 
+/// Split the manifest's shards into `n` contiguous, shard-aligned row
+/// ranges `[row_lo, row_hi)` with per-group record counts as balanced as a
+/// greedy sweep allows — the distributed coordinator's worker assignment.
+///
+/// Ranges stay shard-aligned so each worker mmaps whole shard files; the
+/// greedy cut closes a group once it holds at least the remaining-average
+/// record count, which keeps every group non-empty (each gets ≥ 1 shard).
+/// Requires `1 ≤ n ≤ manifest.shards.len()`.
+pub fn assign_row_ranges(manifest: &Manifest, n: usize) -> Result<Vec<(u32, u32)>> {
+    let shards = &manifest.shards;
+    ensure!(n >= 1, "need at least one worker");
+    ensure!(
+        n <= shards.len(),
+        "cannot split {} shard(s) across {n} workers (ranges are shard-aligned; \
+         repack with a smaller --shard-mb or use fewer workers)",
+        shards.len()
+    );
+    let mut out = Vec::with_capacity(n);
+    let mut remaining: u64 = shards.iter().map(|s| s.nnz).sum();
+    let mut i = 0usize;
+    for g in 0..n {
+        let groups_left = n - g;
+        let target = remaining.div_ceil(groups_left as u64);
+        let lo = shards[i].row_lo;
+        let mut acc = shards[i].nnz;
+        i += 1;
+        if groups_left == 1 {
+            // Last group takes whatever is left.
+            i = shards.len();
+            acc = remaining;
+        } else {
+            // Grow toward the remaining-average (stop once adding half the
+            // next shard would overshoot), leaving ≥ 1 shard per group
+            // still to be formed.
+            while i < shards.len() - (groups_left - 1) && acc + shards[i].nnz / 2 < target {
+                acc += shards[i].nnz;
+                i += 1;
+            }
+        }
+        remaining -= acc;
+        out.push((lo, shards[i - 1].row_hi));
+    }
+    Ok(out)
+}
+
 /// Packing knobs.
 #[derive(Clone, Copy, Debug)]
 pub struct PackOptions {
@@ -1214,5 +1259,46 @@ mod tests {
         let dir = tmpdir("empty");
         assert!(pack_triplets(&[], &dir, &PackOptions::default()).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Synthetic manifest: one shard per (row span, nnz) pair.
+    fn manifest_of(spans: &[(u32, u64)]) -> Manifest {
+        let mut shards = Vec::new();
+        let mut lo = 0u32;
+        for (i, &(rows, nnz)) in spans.iter().enumerate() {
+            shards.push(ShardMeta { file: format!("s{i}.a2ps"), row_lo: lo, row_hi: lo + rows, nnz });
+            lo += rows;
+        }
+        let nnz = spans.iter().map(|&(_, n)| n).sum();
+        Manifest { nrows: lo, ncols: 8, nnz, shards }
+    }
+
+    #[test]
+    fn assign_row_ranges_tiles_rows_and_balances_nnz() {
+        let m = manifest_of(&[(10, 100), (10, 100), (10, 100), (10, 100), (10, 100), (10, 100)]);
+        let r = assign_row_ranges(&m, 3).unwrap();
+        assert_eq!(r, vec![(0, 20), (20, 40), (40, 60)]);
+        // Skewed: a hot first shard should sit alone.
+        let m = manifest_of(&[(10, 900), (10, 50), (10, 50), (10, 50)]);
+        let r = assign_row_ranges(&m, 2).unwrap();
+        assert_eq!(r, vec![(0, 10), (10, 40)]);
+        // Ranges always tile 0..nrows contiguously, for any worker count.
+        let m = manifest_of(&[(7, 30), (3, 5), (5, 0), (8, 41), (2, 12)]);
+        for n in 1..=m.shards.len() {
+            let r = assign_row_ranges(&m, n).unwrap();
+            assert_eq!(r.len(), n);
+            assert_eq!(r[0].0, 0);
+            assert_eq!(r[n - 1].1, m.nrows);
+            for w in r.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "ranges must tile contiguously");
+            }
+        }
+    }
+
+    #[test]
+    fn assign_row_ranges_rejects_bad_worker_counts() {
+        let m = manifest_of(&[(10, 5), (10, 5)]);
+        assert!(assign_row_ranges(&m, 0).is_err(), "zero workers");
+        assert!(assign_row_ranges(&m, 3).is_err(), "more workers than shards");
     }
 }

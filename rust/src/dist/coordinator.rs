@@ -1,0 +1,389 @@
+//! The distributed coordinator: owns worker registration, the DSGD block
+//! rotation schedule, the stratum/epoch barriers, and the factor merge.
+//!
+//! One control connection per worker is driven from a persistent
+//! [`WorkerPool`] — stratum `s` is one `pool.run` round where pool thread
+//! `w` writes worker `w`'s order and blocks on its `FACTORS` reply, so all
+//! workers train concurrently and the round itself is the stratum barrier.
+//! Merging is serialized after the round: each reply's checkpoint is loaded
+//! and stitched into the working master with
+//! [`crate::model::snapshot::merge_block`] — exact, because rotation gives
+//! every factor row exactly one writer per stratum (see [`super::rotation`]).
+//!
+//! A worker whose connection errors is marked dead and the run continues
+//! degraded (its blocks keep their last merged values); the run aborts only
+//! when no workers remain.
+
+use super::protocol::Msg;
+use super::rotation;
+use crate::data::shard::{assign_row_ranges, open_checked_mmap, Manifest};
+use crate::data::split::hash_is_test;
+use crate::engine::TrainConfig;
+use crate::metrics::rmse_mae_parallel;
+use crate::model::checkpoint::{self, CheckpointMeta};
+use crate::model::snapshot::merge_block;
+use crate::model::{Factors, SnapshotStore};
+use crate::partition::bounds_for;
+use crate::rng::Rng;
+use crate::runtime::pool::WorkerPool;
+use crate::sparse::CooMatrix;
+use crate::Result;
+use anyhow::{bail, ensure, Context};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Coordinator-side knobs (the `[dist]` config section + CLI flags).
+#[derive(Clone, Debug)]
+pub struct CoordinatorOptions {
+    /// Worker processes the run expects.
+    pub workers: usize,
+    /// Column blocks `C` (strata per epoch); 0 ⇒ `workers`.
+    pub col_blocks: usize,
+    /// How long to wait for all workers to register.
+    pub register_timeout: Duration,
+    /// Directory factor checkpoints are exchanged through.
+    pub exchange_dir: PathBuf,
+    /// Hash-split test fraction (matches the out-of-core trainer).
+    pub test_frac: f64,
+}
+
+impl CoordinatorOptions {
+    /// Defaults for a `workers`-process run exchanging through `dir`.
+    pub fn new(workers: usize, dir: impl Into<PathBuf>) -> Self {
+        CoordinatorOptions {
+            workers,
+            col_blocks: 0,
+            register_timeout: Duration::from_secs(30),
+            exchange_dir: dir.into(),
+            test_frac: 0.2,
+        }
+    }
+
+    fn col_blocks(&self) -> usize {
+        if self.col_blocks == 0 {
+            self.workers
+        } else {
+            self.col_blocks
+        }
+    }
+}
+
+/// One `(epoch, stratum, worker) → column block` grant that was actually
+/// trained and merged — the run's rotation ledger. Tests replay it to
+/// prove no column block ever had two writers in a stratum.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Assignment {
+    /// Global epoch (1-based).
+    pub epoch: u32,
+    /// Stratum within the epoch.
+    pub stratum: usize,
+    /// Worker that trained the block.
+    pub worker: usize,
+    /// Column block it owned.
+    pub col_block: usize,
+}
+
+/// What a distributed run produced.
+#[derive(Debug)]
+pub struct DistReport {
+    /// The merged master factors after the last epoch.
+    pub factors: Factors,
+    /// Final test RMSE / MAE of the merged master.
+    pub rmse: f64,
+    /// Final test MAE.
+    pub mae: f64,
+    /// Test RMSE at each epoch barrier.
+    pub history: Vec<f64>,
+    /// Epochs completed.
+    pub epochs_run: u32,
+    /// Total entries processed across workers and strata.
+    pub processed: u64,
+    /// Workers the run started with.
+    pub workers: usize,
+    /// Workers lost to connection failures (run degraded, not failed).
+    pub workers_lost: usize,
+    /// Snapshot generation of the final publish.
+    pub snapshot_version: u64,
+    /// Every merged block grant, in schedule order.
+    pub assignments: Vec<Assignment>,
+}
+
+/// A registered worker's control connection.
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    contacted: bool,
+}
+
+/// Run the whole distributed schedule over `listener` against the packed
+/// shard directory `data_dir`. The listener is passed in pre-bound so
+/// callers can bind port 0, read the real address, and hand it to the
+/// workers they spawn.
+pub fn run_coordinator(
+    listener: TcpListener,
+    data_dir: &Path,
+    cfg: &TrainConfig,
+    opts: &CoordinatorOptions,
+) -> Result<DistReport> {
+    let w_count = opts.workers;
+    let c_blocks = opts.col_blocks();
+    ensure!(w_count >= 1, "dist-train needs at least one worker");
+    ensure!(
+        w_count <= c_blocks,
+        "rotation needs workers ({w_count}) ≤ column blocks ({c_blocks})"
+    );
+    let manifest = Manifest::load(data_dir)?;
+    let row_ranges = assign_row_ranges(&manifest, w_count)?;
+
+    // One pass over the shards: the held-out test split for barrier
+    // evaluation, the train mean for factor init, the rating bounds for
+    // clamped prediction, and per-column train counts so the column blocks
+    // can use the same Algorithm-1 balanced bounds as the local engines.
+    let mut test = Vec::new();
+    let mut col_counts = vec![0u32; manifest.ncols as usize];
+    let (mut sum, mut n_train) = (0f64, 0u64);
+    let (mut rmin, mut rmax) = (f32::INFINITY, f32::NEG_INFINITY);
+    for meta in &manifest.shards {
+        let reader = open_checked_mmap(data_dir, &manifest, meta)?;
+        reader.decode_range(0, meta.nnz, |_k, e| {
+            rmin = rmin.min(e.r);
+            rmax = rmax.max(e.r);
+            if hash_is_test(e.u, e.v, cfg.seed, opts.test_frac) {
+                test.push(e);
+            } else {
+                col_counts[e.v as usize] += 1;
+                sum += e.r as f64;
+                n_train += 1;
+            }
+        })?;
+    }
+    let test = CooMatrix::from_entries(manifest.nrows, manifest.ncols, test)?;
+    let mean = if n_train > 0 { sum / n_train as f64 } else { 0.0 };
+    let col_bounds = bounds_for(cfg.partition, &col_counts, c_blocks);
+
+    let mut rng = Rng::new(cfg.seed);
+    let scale = Factors::default_scale(mean, cfg.d);
+    let mut master = Factors::init(manifest.nrows, manifest.ncols, cfg.d, scale, &mut rng);
+    let store = SnapshotStore::new(master.clone());
+
+    std::fs::create_dir_all(&opts.exchange_dir)
+        .with_context(|| format!("creating exchange dir {}", opts.exchange_dir.display()))?;
+    let conns = register_workers(&listener, w_count, opts.register_timeout)?;
+    let conns: Vec<Mutex<Conn>> = conns.into_iter().map(Mutex::new).collect();
+    let alive: Vec<AtomicBool> = (0..w_count).map(|_| AtomicBool::new(true)).collect();
+    let pool = WorkerPool::new(w_count);
+
+    let mut report = DistReport {
+        factors: master.clone(),
+        rmse: 0.0,
+        mae: 0.0,
+        history: Vec::new(),
+        epochs_run: 0,
+        processed: 0,
+        workers: w_count,
+        workers_lost: 0,
+        snapshot_version: store.version(),
+        assignments: Vec::new(),
+    };
+
+    for epoch in 1..=cfg.epochs {
+        for stratum in 0..c_blocks {
+            let master_path =
+                opts.exchange_dir.join(format!("master_e{epoch}_s{stratum}.a2pf"));
+            let meta = CheckpointMeta {
+                epoch,
+                snapshot_version: store.version(),
+                hyper: cfg.hyper,
+            };
+            checkpoint::save_with_meta(&master, &meta, &master_path)?;
+
+            // Drive every live worker concurrently; the round is the
+            // stratum barrier.
+            let replies: Vec<Mutex<Option<(PathBuf, u64)>>> =
+                (0..w_count).map(|_| Mutex::new(None)).collect();
+            pool.run(|w| {
+                if !alive[w].load(Ordering::Relaxed) {
+                    return;
+                }
+                let mut conn = conns[w].lock().expect("conn mutex poisoned");
+                let order = stratum_order(
+                    &mut conn, w, epoch, stratum, c_blocks, &row_ranges, &col_bounds, cfg,
+                    opts, &master_path,
+                );
+                match order {
+                    Ok(reply) => *replies[w].lock().expect("reply mutex") = Some(reply),
+                    Err(e) => {
+                        alive[w].store(false, Ordering::Relaxed);
+                        eprintln!("dist: lost worker {w} at epoch {epoch} stratum {stratum}: {e:#}");
+                    }
+                }
+            });
+
+            // Serial merge: disjoint blocks, exact stitch.
+            for w in 0..w_count {
+                let Some((path, processed)) = replies[w].lock().expect("reply mutex").take()
+                else {
+                    continue;
+                };
+                let (part, _meta) = checkpoint::load_with_meta(&path)
+                    .with_context(|| format!("loading worker {w} factors"))?;
+                let j = rotation(w, stratum, c_blocks);
+                merge_block(
+                    &mut master,
+                    &part,
+                    row_ranges[w],
+                    (col_bounds[j], col_bounds[j + 1]),
+                );
+                report.processed += processed;
+                report
+                    .assignments
+                    .push(Assignment { epoch, stratum, worker: w, col_block: j });
+                std::fs::remove_file(&path).ok();
+            }
+            std::fs::remove_file(&master_path).ok();
+
+            if alive.iter().all(|a| !a.load(Ordering::Relaxed)) {
+                bail!(
+                    "all {w_count} workers lost by epoch {epoch} stratum {stratum}; \
+                     aborting the run"
+                );
+            }
+        }
+
+        // Epoch barrier: publish the merged master, evaluate, notify.
+        report.snapshot_version = store.publish(master.clone());
+        let (rmse, mae) =
+            rmse_mae_parallel(&master, &test, rmin, rmax, cfg.eval_threads.max(1));
+        report.rmse = rmse;
+        report.mae = mae;
+        report.history.push(rmse);
+        report.epochs_run = epoch;
+        broadcast(&conns, &alive, &Msg::Barrier { epoch, rmse });
+    }
+
+    // Orderly shutdown; the DONE acknowledgment is best-effort.
+    broadcast(&conns, &alive, &Msg::Done);
+    for (w, conn) in conns.iter().enumerate() {
+        if !alive[w].load(Ordering::Relaxed) {
+            continue;
+        }
+        let mut conn = conn.lock().expect("conn mutex poisoned");
+        conn.writer.set_read_timeout(Some(Duration::from_secs(2))).ok();
+        let mut line = String::new();
+        let _ = conn.reader.read_line(&mut line);
+    }
+
+    report.workers_lost = alive.iter().filter(|a| !a.load(Ordering::Relaxed)).count();
+    report.factors = master;
+    Ok(report)
+}
+
+/// Accept until all `expected` workers have said `HELLO` (or time out).
+fn register_workers(
+    listener: &TcpListener,
+    expected: usize,
+    timeout: Duration,
+) -> Result<Vec<Conn>> {
+    listener.set_nonblocking(true).context("listener nonblocking")?;
+    let deadline = Instant::now() + timeout;
+    let mut slots: Vec<Option<Conn>> = (0..expected).map(|_| None).collect();
+    let mut registered = 0usize;
+    while registered < expected {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                stream.set_nodelay(true).ok();
+                stream
+                    .set_read_timeout(Some(Duration::from_secs(10)))
+                    .context("setting HELLO timeout")?;
+                let mut reader = BufReader::new(stream.try_clone().context("cloning socket")?);
+                let mut line = String::new();
+                reader.read_line(&mut line).with_context(|| format!("reading HELLO from {peer}"))?;
+                match Msg::parse(&line)? {
+                    Msg::Hello { worker } => {
+                        ensure!(worker < expected, "worker id {worker} out of range 0..{expected}");
+                        ensure!(slots[worker].is_none(), "worker {worker} registered twice");
+                        stream.set_read_timeout(None).ok();
+                        slots[worker] = Some(Conn { reader, writer: stream, contacted: false });
+                        registered += 1;
+                    }
+                    other => bail!("expected HELLO from {peer}, got {other:?}"),
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    bail!(
+                        "only {registered}/{expected} workers registered within {timeout:?}"
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(e) => return Err(e).context("accepting worker connection"),
+        }
+    }
+    Ok(slots.into_iter().map(|s| s.expect("all slots registered")).collect())
+}
+
+/// Send worker `w` its stratum order and block on the `FACTORS` reply.
+#[allow(clippy::too_many_arguments)]
+fn stratum_order(
+    conn: &mut Conn,
+    w: usize,
+    epoch: u32,
+    stratum: usize,
+    c_blocks: usize,
+    row_ranges: &[(u32, u32)],
+    col_bounds: &[u32],
+    cfg: &TrainConfig,
+    opts: &CoordinatorOptions,
+    master_path: &Path,
+) -> Result<(PathBuf, u64)> {
+    let j = rotation(w, stratum, c_blocks);
+    let cols = (col_bounds[j], col_bounds[j + 1]);
+    let order = if conn.contacted {
+        Msg::Rotate { epoch, stratum, cols, master: master_path.to_path_buf() }
+    } else {
+        Msg::Assign {
+            epoch,
+            stratum,
+            rows: row_ranges[w],
+            cols,
+            seed: cfg.seed,
+            test_frac: opts.test_frac,
+            master: master_path.to_path_buf(),
+        }
+    };
+    writeln!(conn.writer, "{}", order.format()).context("writing order")?;
+    conn.writer.flush().context("flushing order")?;
+    conn.contacted = true;
+    let mut line = String::new();
+    let n = conn.reader.read_line(&mut line).context("reading FACTORS reply")?;
+    ensure!(n > 0, "worker {w} dropped the connection");
+    match Msg::parse(&line)? {
+        Msg::Factors { epoch: e, stratum: s, processed, path } => {
+            ensure!(
+                e == epoch && s == stratum,
+                "worker {w} answered for e{e} s{s}, expected e{epoch} s{stratum}"
+            );
+            Ok((path, processed))
+        }
+        other => bail!("worker {w}: expected FACTORS, got {other:?}"),
+    }
+}
+
+/// Best-effort send to every live worker; failures mark the worker dead.
+fn broadcast(conns: &[Mutex<Conn>], alive: &[AtomicBool], msg: &Msg) {
+    for (w, conn) in conns.iter().enumerate() {
+        if !alive[w].load(Ordering::Relaxed) {
+            continue;
+        }
+        let mut conn = conn.lock().expect("conn mutex poisoned");
+        let sent = writeln!(conn.writer, "{}", msg.format()).and_then(|_| conn.writer.flush());
+        if sent.is_err() {
+            alive[w].store(false, Ordering::Relaxed);
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! Distributed shard-parallel training: a coordinator plus N full worker
+//! *processes* running DSGD block rotation over a packed shard directory
+//! (see DISTRIBUTED.md).
+//!
+//! # Topology
+//!
+//! The coordinator splits the manifest's shards into `W` contiguous,
+//! nnz-balanced row ranges ([`crate::data::shard::assign_row_ranges`]) and
+//! the column space into `C ≥ W` uniform blocks. Training is the
+//! rectangular DSGD schedule of [`crate::engine::DsgdEngine`] lifted
+//! across processes: a global epoch is `C` strata, and in stratum `s`
+//! worker `w` owns column block [`rotation`]`(w, s, C)`. The rotation is a
+//! generalized diagonal — injective over workers — so **no two workers
+//! ever write the same column factors concurrently**, and row ranges are
+//! disjoint by construction. Every factor row therefore has exactly one
+//! writer per stratum, which makes the barrier merge
+//! ([`crate::model::snapshot::merge_block`]) an exact stitch, not an
+//! average.
+//!
+//! # Planes
+//!
+//! - **Control plane**: one TCP line-protocol connection per worker
+//!   ([`protocol`]): `HELLO`/`ASSIGN`/`ROTATE`/`FACTORS`/`BARRIER`/`DONE`.
+//! - **Data plane**: factors travel as crash-safe atomic checkpoints
+//!   through a shared exchange directory; shard data is never copied —
+//!   each worker mmaps only the shards overlapping its row range.
+//!
+//! At each epoch barrier the coordinator publishes the merged master to a
+//! [`crate::model::SnapshotStore`] generation and evaluates test RMSE, so
+//! a co-located serving tier hot-swaps onto every distributed epoch
+//! exactly as it does for local training.
+//!
+//! # Failure model
+//!
+//! A worker death (connection drop — injectable via the `dist.worker`
+//! failpoint) degrades the run instead of aborting it: the dead worker's
+//! blocks simply stop being trained, its last merged factors remain in the
+//! master, and the report records `workers_lost`. The run fails only when
+//! every worker is gone.
+
+pub mod coordinator;
+pub mod protocol;
+pub mod worker;
+
+pub use coordinator::{run_coordinator, Assignment, CoordinatorOptions, DistReport};
+pub use protocol::Msg;
+pub use worker::{run_worker, WorkerOptions, WorkerStats};
+
+/// The column block worker `w` owns in stratum `s` of a `C`-block epoch:
+/// the generalized diagonal `(w + s) mod C`. For `w < W ≤ C` this is
+/// injective in `w` (distinct workers, distinct blocks), and over
+/// `s = 0..C` each worker visits every block exactly once — the whole
+/// exclusivity argument of the distributed schedule lives in this one
+/// expression.
+#[inline]
+pub fn rotation(worker: usize, stratum: usize, col_blocks: usize) -> usize {
+    debug_assert!(worker < col_blocks);
+    (worker + stratum) % col_blocks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::rotation;
+
+    #[test]
+    fn rotation_is_exclusive_within_every_stratum() {
+        // For all rectangular W ≤ C grids up to 8×8: within a stratum no
+        // two workers share a column block.
+        for c in 1..=8usize {
+            for w in 1..=c {
+                for s in 0..c {
+                    let mut owned = vec![false; c];
+                    for t in 0..w {
+                        let j = rotation(t, s, c);
+                        assert!(!owned[j], "stratum {s}: block {j} owned twice (W={w}, C={c})");
+                        owned[j] = true;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rotation_covers_every_block_across_an_epoch() {
+        // Each worker visits each column block exactly once per epoch.
+        for c in 1..=8usize {
+            for t in 0..c {
+                let mut seen = vec![false; c];
+                for s in 0..c {
+                    let j = rotation(t, s, c);
+                    assert!(!seen[j], "worker {t} revisits block {j} (C={c})");
+                    seen[j] = true;
+                }
+                assert!(seen.iter().all(|&b| b), "worker {t} missed a block (C={c})");
+            }
+        }
+    }
+}

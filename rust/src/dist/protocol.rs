@@ -1,0 +1,279 @@
+//! The coordinator ⇄ worker control protocol: one line per message, ASCII,
+//! in the style of the serving front end (`crate::coordinator::net`).
+//!
+//! ```text
+//! worker → coordinator
+//!   HELLO <worker_id>
+//!   FACTORS <epoch> <stratum> <processed> <path>
+//!   DONE
+//!
+//! coordinator → worker
+//!   ASSIGN <epoch> <stratum> <row_lo> <row_hi> <col_lo> <col_hi> <seed> <test_frac> <path>
+//!   ROTATE <epoch> <stratum> <col_lo> <col_hi> <path>
+//!   BARRIER <epoch> <rmse>
+//!   DONE
+//! ```
+//!
+//! `ASSIGN` is a worker's first stratum order and pins its row range,
+//! split seed and test fraction for the whole run; every later stratum
+//! arrives as `ROTATE` carrying only the rotated column block. Both point
+//! the worker at the current master factors via `<path>` — always the
+//! **last** field, consuming the rest of the line, so checkpoint paths may
+//! contain spaces. Factor files themselves travel through the filesystem
+//! (crash-safe atomic checkpoints), never the socket: the control plane
+//! stays human-readable and the data plane stays mmap-friendly.
+
+use crate::Result;
+use anyhow::{bail, Context};
+use std::path::PathBuf;
+
+/// One protocol message (either direction).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Worker registration.
+    Hello {
+        /// Worker index in `0..workers`.
+        worker: usize,
+    },
+    /// First stratum order: row range + split parameters + column block.
+    Assign {
+        /// Global epoch (1-based).
+        epoch: u32,
+        /// Stratum within the epoch (`0..col_blocks`).
+        stratum: usize,
+        /// The worker's row range `[lo, hi)` — fixed for the run.
+        rows: (u32, u32),
+        /// This stratum's column block `[lo, hi)`.
+        cols: (u32, u32),
+        /// Hash-split seed (test exclusion).
+        seed: u64,
+        /// Hash-split test fraction.
+        test_frac: f64,
+        /// Current master factors checkpoint.
+        master: PathBuf,
+    },
+    /// Subsequent stratum order: the rotated column block only.
+    Rotate {
+        /// Global epoch (1-based).
+        epoch: u32,
+        /// Stratum within the epoch.
+        stratum: usize,
+        /// This stratum's column block `[lo, hi)`.
+        cols: (u32, u32),
+        /// Current master factors checkpoint.
+        master: PathBuf,
+    },
+    /// Worker's stratum result: factors written to `path`.
+    Factors {
+        /// Echoed epoch.
+        epoch: u32,
+        /// Echoed stratum.
+        stratum: usize,
+        /// Entries processed this stratum.
+        processed: u64,
+        /// Worker's factor checkpoint.
+        path: PathBuf,
+    },
+    /// Epoch boundary: merged factors published, test RMSE attached.
+    Barrier {
+        /// The epoch that just completed.
+        epoch: u32,
+        /// Test RMSE of the merged master.
+        rmse: f64,
+    },
+    /// Shutdown (coordinator → worker) / its acknowledgment (reverse).
+    Done,
+}
+
+impl Msg {
+    /// Wire form, without the trailing newline.
+    pub fn format(&self) -> String {
+        match self {
+            Msg::Hello { worker } => format!("HELLO {worker}"),
+            Msg::Assign { epoch, stratum, rows, cols, seed, test_frac, master } => format!(
+                "ASSIGN {epoch} {stratum} {} {} {} {} {seed} {test_frac} {}",
+                rows.0,
+                rows.1,
+                cols.0,
+                cols.1,
+                master.display()
+            ),
+            Msg::Rotate { epoch, stratum, cols, master } => {
+                format!("ROTATE {epoch} {stratum} {} {} {}", cols.0, cols.1, master.display())
+            }
+            Msg::Factors { epoch, stratum, processed, path } => {
+                format!("FACTORS {epoch} {stratum} {processed} {}", path.display())
+            }
+            Msg::Barrier { epoch, rmse } => format!("BARRIER {epoch} {rmse}"),
+            Msg::Done => "DONE".to_string(),
+        }
+    }
+
+    /// Parse one wire line (newline already stripped).
+    pub fn parse(line: &str) -> Result<Msg> {
+        let line = line.trim_end_matches(['\r', '\n']);
+        let (verb, rest) = match line.split_once(' ') {
+            Some((v, r)) => (v, r),
+            None => (line, ""),
+        };
+        // Split `n` whitespace-separated fields off the front, returning
+        // them plus the remainder (the path field, spaces and all).
+        let fields = |n: usize| -> Result<(Vec<&str>, &str)> {
+            let mut rest = rest;
+            let mut out = Vec::with_capacity(n);
+            for _ in 0..n {
+                let rest_trim = rest.trim_start();
+                let cut = rest_trim.find(' ').unwrap_or(rest_trim.len());
+                let (f, tail) = rest_trim.split_at(cut);
+                if f.is_empty() {
+                    bail!("{verb} line is missing fields: {line:?}");
+                }
+                out.push(f);
+                rest = tail;
+            }
+            Ok((out, rest.trim_start()))
+        };
+        let int = |s: &str, what: &str| -> Result<u64> {
+            s.parse().with_context(|| format!("bad {what} {s:?} in {line:?}"))
+        };
+        match verb {
+            "HELLO" => {
+                let (f, tail) = fields(1)?;
+                bail_on_tail(verb, line, tail)?;
+                Ok(Msg::Hello { worker: int(f[0], "worker id")? as usize })
+            }
+            "ASSIGN" => {
+                let (f, path) = fields(8)?;
+                anyhow::ensure!(!path.is_empty(), "ASSIGN line has no master path: {line:?}");
+                Ok(Msg::Assign {
+                    epoch: int(f[0], "epoch")? as u32,
+                    stratum: int(f[1], "stratum")? as usize,
+                    rows: (int(f[2], "row_lo")? as u32, int(f[3], "row_hi")? as u32),
+                    cols: (int(f[4], "col_lo")? as u32, int(f[5], "col_hi")? as u32),
+                    seed: int(f[6], "seed")?,
+                    test_frac: f[7]
+                        .parse()
+                        .with_context(|| format!("bad test_frac {:?} in {line:?}", f[7]))?,
+                    master: PathBuf::from(path),
+                })
+            }
+            "ROTATE" => {
+                let (f, path) = fields(4)?;
+                anyhow::ensure!(!path.is_empty(), "ROTATE line has no master path: {line:?}");
+                Ok(Msg::Rotate {
+                    epoch: int(f[0], "epoch")? as u32,
+                    stratum: int(f[1], "stratum")? as usize,
+                    cols: (int(f[2], "col_lo")? as u32, int(f[3], "col_hi")? as u32),
+                    master: PathBuf::from(path),
+                })
+            }
+            "FACTORS" => {
+                let (f, path) = fields(3)?;
+                anyhow::ensure!(!path.is_empty(), "FACTORS line has no path: {line:?}");
+                Ok(Msg::Factors {
+                    epoch: int(f[0], "epoch")? as u32,
+                    stratum: int(f[1], "stratum")? as usize,
+                    processed: int(f[2], "processed")?,
+                    path: PathBuf::from(path),
+                })
+            }
+            "BARRIER" => {
+                let (f, tail) = fields(2)?;
+                bail_on_tail(verb, line, tail)?;
+                Ok(Msg::Barrier {
+                    epoch: int(f[0], "epoch")? as u32,
+                    rmse: f[1]
+                        .parse()
+                        .with_context(|| format!("bad rmse {:?} in {line:?}", f[1]))?,
+                })
+            }
+            "DONE" => {
+                anyhow::ensure!(rest.trim().is_empty(), "DONE takes no fields: {line:?}");
+                Ok(Msg::Done)
+            }
+            other => bail!("unknown dist verb {other:?} in {line:?}"),
+        }
+    }
+}
+
+fn bail_on_tail(verb: &str, line: &str, tail: &str) -> Result<()> {
+    anyhow::ensure!(tail.is_empty(), "{verb} line has trailing fields: {line:?}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_message_round_trips() {
+        let msgs = vec![
+            Msg::Hello { worker: 3 },
+            Msg::Assign {
+                epoch: 2,
+                stratum: 1,
+                rows: (0, 40),
+                cols: (10, 20),
+                seed: 0xBEEF,
+                test_frac: 0.25,
+                master: PathBuf::from("/tmp/x/master_e2_s1.a2pf"),
+            },
+            Msg::Rotate {
+                epoch: 2,
+                stratum: 3,
+                cols: (30, 40),
+                master: PathBuf::from("/tmp/x/master_e2_s3.a2pf"),
+            },
+            Msg::Factors {
+                epoch: 2,
+                stratum: 3,
+                processed: 777,
+                path: PathBuf::from("/tmp/x/worker0_e2_s3.a2pf"),
+            },
+            Msg::Barrier { epoch: 2, rmse: 1.0625 },
+            Msg::Done,
+        ];
+        for m in msgs {
+            let line = m.format();
+            assert_eq!(Msg::parse(&line).unwrap(), m, "round-tripping {line:?}");
+        }
+    }
+
+    #[test]
+    fn paths_with_spaces_survive() {
+        let m = Msg::Rotate {
+            epoch: 1,
+            stratum: 0,
+            cols: (0, 5),
+            master: PathBuf::from("/tmp/my exchange dir/master.a2pf"),
+        };
+        assert_eq!(Msg::parse(&m.format()).unwrap(), m);
+        let m = Msg::Factors {
+            epoch: 1,
+            stratum: 0,
+            processed: 9,
+            path: PathBuf::from("/tmp/my exchange dir/w0.a2pf"),
+        };
+        assert_eq!(Msg::parse(&m.format()).unwrap(), m);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_lines() {
+        assert!(Msg::parse("").is_err(), "empty line");
+        assert!(Msg::parse("PING").is_err(), "unknown verb");
+        assert!(Msg::parse("HELLO").is_err(), "missing id");
+        assert!(Msg::parse("HELLO x").is_err(), "non-numeric id");
+        assert!(Msg::parse("HELLO 1 2").is_err(), "trailing field");
+        assert!(Msg::parse("ASSIGN 1 0 0 10 0 5 7 0.2").is_err(), "no path");
+        assert!(Msg::parse("ROTATE 1 0 0 5").is_err(), "no path");
+        assert!(Msg::parse("FACTORS 1 0").is_err(), "missing fields");
+        assert!(Msg::parse("BARRIER 1 fast").is_err(), "bad rmse");
+        assert!(Msg::parse("DONE extra").is_err(), "DONE with payload");
+    }
+
+    #[test]
+    fn parse_tolerates_crlf() {
+        assert_eq!(Msg::parse("DONE\r\n").unwrap(), Msg::Done);
+        assert_eq!(Msg::parse("HELLO 2\r").unwrap(), Msg::Hello { worker: 2 });
+    }
+}

@@ -1,0 +1,253 @@
+//! The distributed worker: one process (`a2psgd dist-worker`) owning one
+//! contiguous row range of a packed shard directory.
+//!
+//! The worker is deliberately stateless across strata: every `ASSIGN` /
+//! `ROTATE` order names the master factors checkpoint to start from, the
+//! worker trains exactly one DSGD pass over its (row range × column block)
+//! sub-matrix, writes its factors as a crash-safe checkpoint next to the
+//! master, and replies `FACTORS`. All run state (rotation position, epoch
+//! progress, merge) lives in the coordinator, so a worker that dies mid-run
+//! takes nothing with it but its own blocks' progress.
+
+use super::protocol::Msg;
+use crate::data::shard::{open_checked_mmap, Manifest};
+use crate::data::split::hash_is_test;
+use crate::data::Dataset;
+use crate::engine::{DsgdEngine, EngineKind, EpochRunner, TrainConfig};
+use crate::model::{checkpoint, Factors};
+use crate::rng::Rng;
+use crate::sparse::{CooMatrix, Entry};
+use crate::Result;
+use anyhow::{bail, Context};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// How a worker process finds its coordinator and its data.
+#[derive(Clone, Debug)]
+pub struct WorkerOptions {
+    /// Coordinator control address (`host:port`).
+    pub addr: String,
+    /// Worker index in `0..workers` (must be unique per run).
+    pub id: usize,
+    /// Packed shard directory (shared filesystem with the coordinator).
+    pub dataset: PathBuf,
+    /// Local training threads (the worker's in-process DSGD grid width).
+    pub threads: usize,
+    /// Connection attempts before giving up (the coordinator may bind
+    /// after the worker starts).
+    pub connect_retries: u32,
+    /// Delay between connection attempts.
+    pub retry_delay: Duration,
+}
+
+impl WorkerOptions {
+    /// Defaults for everything but the addressing triple.
+    pub fn new(addr: impl Into<String>, id: usize, dataset: impl Into<PathBuf>) -> Self {
+        WorkerOptions {
+            addr: addr.into(),
+            id,
+            dataset: dataset.into(),
+            threads: 1,
+            connect_retries: 100,
+            retry_delay: Duration::from_millis(100),
+        }
+    }
+
+    /// Set local training threads.
+    pub fn threads(mut self, t: usize) -> Self {
+        self.threads = t.max(1);
+        self
+    }
+}
+
+/// What a worker did over its run (for logs and tests).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerStats {
+    /// Strata trained.
+    pub strata: u64,
+    /// Total entries processed.
+    pub processed: u64,
+    /// Last epoch a `BARRIER` reported.
+    pub epochs: u32,
+    /// RMSE from the last `BARRIER`.
+    pub last_rmse: f64,
+}
+
+/// The worker's loaded slice of the matrix: train entries of its row
+/// range, with the hash-split test entries excluded.
+struct LocalData {
+    entries: Vec<Entry>,
+    nrows: u32,
+    ncols: u32,
+    rating_min: f32,
+    rating_max: f32,
+}
+
+/// Connect to the coordinator, serve stratum orders until `DONE`.
+///
+/// Runs in-process for tests (spawn on a thread) and as the whole life of
+/// an `a2psgd dist-worker` process in production.
+pub fn run_worker(opts: &WorkerOptions) -> Result<WorkerStats> {
+    let stream = connect(opts)?;
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone().context("cloning control socket")?);
+    let mut writer = stream;
+    send(&mut writer, &Msg::Hello { worker: opts.id })?;
+
+    let mut stats = WorkerStats::default();
+    let mut local: Option<LocalData> = None;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).context("reading coordinator order")?;
+        if n == 0 {
+            bail!("coordinator closed the connection mid-run (worker {})", opts.id);
+        }
+        match Msg::parse(&line)? {
+            Msg::Assign { epoch, stratum, rows, cols, seed, test_frac, master } => {
+                local = Some(load_local(opts, rows, seed, test_frac)?);
+                let data = local.as_ref().unwrap();
+                let reply = train_stratum(opts, data, epoch, stratum, cols, &master)?;
+                stats.strata += 1;
+                if let Msg::Factors { processed, .. } = &reply {
+                    stats.processed += *processed;
+                }
+                send(&mut writer, &reply)?;
+            }
+            Msg::Rotate { epoch, stratum, cols, master } => {
+                let data = local
+                    .as_ref()
+                    .with_context(|| format!("worker {}: ROTATE before ASSIGN", opts.id))?;
+                let reply = train_stratum(opts, data, epoch, stratum, cols, &master)?;
+                stats.strata += 1;
+                if let Msg::Factors { processed, .. } = &reply {
+                    stats.processed += *processed;
+                }
+                send(&mut writer, &reply)?;
+            }
+            Msg::Barrier { epoch, rmse } => {
+                stats.epochs = epoch;
+                stats.last_rmse = rmse;
+            }
+            Msg::Done => {
+                send(&mut writer, &Msg::Done).ok();
+                return Ok(stats);
+            }
+            other => bail!("worker {}: unexpected order {other:?}", opts.id),
+        }
+    }
+}
+
+fn connect(opts: &WorkerOptions) -> Result<TcpStream> {
+    let mut last = None;
+    for _ in 0..opts.connect_retries.max(1) {
+        match TcpStream::connect(&opts.addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = Some(e),
+        }
+        std::thread::sleep(opts.retry_delay);
+    }
+    bail!(
+        "worker {} could not reach coordinator at {} after {} attempts: {}",
+        opts.id,
+        opts.addr,
+        opts.connect_retries,
+        last.map(|e| e.to_string()).unwrap_or_default()
+    )
+}
+
+fn send(w: &mut TcpStream, msg: &Msg) -> Result<()> {
+    writeln!(w, "{}", msg.format()).context("writing to coordinator")?;
+    w.flush().context("flushing control socket")?;
+    Ok(())
+}
+
+/// Mmap the shards overlapping `rows` and keep the train-side entries
+/// (hash split, same convention as the out-of-core trainer).
+fn load_local(opts: &WorkerOptions, rows: (u32, u32), seed: u64, test_frac: f64) -> Result<LocalData> {
+    let manifest = Manifest::load(&opts.dataset)?;
+    let mut entries = Vec::new();
+    let (mut rmin, mut rmax) = (f32::INFINITY, f32::NEG_INFINITY);
+    for meta in &manifest.shards {
+        if meta.row_hi <= rows.0 || meta.row_lo >= rows.1 {
+            continue;
+        }
+        let reader = open_checked_mmap(&opts.dataset, &manifest, meta)?;
+        let (lo, hi) = reader.row_range(rows.0.max(meta.row_lo), rows.1.min(meta.row_hi));
+        reader.decode_range(lo, hi, |_k, e| {
+            if !hash_is_test(e.u, e.v, seed, test_frac) {
+                rmin = rmin.min(e.r);
+                rmax = rmax.max(e.r);
+                entries.push(e);
+            }
+        })?;
+    }
+    if entries.is_empty() {
+        (rmin, rmax) = (1.0, 5.0);
+    }
+    Ok(LocalData {
+        entries,
+        nrows: manifest.nrows,
+        ncols: manifest.ncols,
+        rating_min: rmin,
+        rating_max: rmax,
+    })
+}
+
+/// One stratum: start from the master checkpoint, run one DSGD pass over
+/// the (row range × column block) sub-matrix, checkpoint the result.
+fn train_stratum(
+    opts: &WorkerOptions,
+    data: &LocalData,
+    epoch: u32,
+    stratum: usize,
+    cols: (u32, u32),
+    master: &std::path::Path,
+) -> Result<Msg> {
+    // Worker-death injection: erroring out of the serve loop drops the
+    // control connection, which is exactly how a real crash looks to the
+    // coordinator.
+    if let Some(e) = crate::fault::fail_err(crate::fault::FailPoint::DistWorker) {
+        return Err(e.context(format!("worker {} dying on order e{epoch} s{stratum}", opts.id)));
+    }
+    let (factors, meta) =
+        checkpoint::load_with_meta(master).context("loading master factors")?;
+    let block: Vec<Entry> = data
+        .entries
+        .iter()
+        .filter(|e| (cols.0..cols.1).contains(&e.v))
+        .copied()
+        .collect();
+    let processed;
+    let trained = if block.is_empty() {
+        // Nothing to train this stratum; hand the master back unchanged.
+        processed = 0;
+        factors
+    } else {
+        let train = CooMatrix::from_entries(data.nrows, data.ncols, block)?;
+        let sub = Dataset {
+            name: format!("dist-w{}", opts.id),
+            train,
+            test: CooMatrix::new(data.nrows, data.ncols),
+            rating_min: data.rating_min,
+            rating_max: data.rating_max,
+        };
+        let cfg = TrainConfig::preset_named(EngineKind::Dsgd, &sub.name)
+            .threads(opts.threads)
+            .dim(factors.d())
+            .hyper(meta.hyper);
+        let mut rng = Rng::new(meta.snapshot_version ^ opts.id as u64);
+        let mut engine = DsgdEngine::new(&sub, factors, &cfg, &mut rng);
+        processed = engine.run_epoch(epoch, 0);
+        Box::new(engine).into_factors()
+    };
+    let out = master
+        .parent()
+        .map(|d| d.to_path_buf())
+        .unwrap_or_default()
+        .join(format!("worker{}_e{epoch}_s{stratum}.a2pf", opts.id));
+    checkpoint::save_with_meta(&trained, &meta, &out).context("checkpointing stratum factors")?;
+    Ok(Msg::Factors { epoch, stratum, processed, path: out })
+}

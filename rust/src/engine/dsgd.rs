@@ -1,17 +1,22 @@
-//! DSGD baseline (Gemulla et al., KDD'11): the matrix is blocked into a
-//! `c × c` grid; an epoch is `c` bulk-synchronous *strata*, where stratum
-//! `s` has thread `t` process block `(t, (t+s) mod c)` — a diagonal, so all
-//! blocks in a stratum are interchangeable (no shared rows/columns). A
-//! barrier separates strata: the synchronization cost Table IV exposes.
-//! Blocks are swept through their block-local CSR lanes like every other
-//! block engine.
+//! DSGD baseline (Gemulla et al., KDD'11): the matrix is blocked into an
+//! `r × c` grid (`r` row blocks = workers, `c ≥ r` column blocks); an epoch
+//! is `c` bulk-synchronous *strata*, where stratum `s` has worker `t`
+//! process block `(t, (t+s) mod c)` — a generalized diagonal, so all blocks
+//! in a stratum are interchangeable (no shared rows/columns as long as
+//! `r ≤ c`). A barrier separates strata: the synchronization cost Table IV
+//! exposes. The single-machine engine uses the square `c × c` case; the
+//! distributed coordinator (`crate::dist`) uses the rectangular form with
+//! one row block per worker process. Blocks are swept through their
+//! block-local CSR lanes like every other block engine. Bucketing honors
+//! [`TrainConfig::partition`] — the adaptive balanced bounds by default,
+//! since every stratum barrier waits on the heaviest block.
 
 use super::{EpochRunner, TrainConfig};
 use crate::data::Dataset;
 use crate::model::{Factors, SharedFactors};
 use crate::optim::kernel::KernelSet;
 use crate::optim::Hyper;
-use crate::partition::{bounds_for, BlockGrid, PartitionKind};
+use crate::partition::{bounds_for, BlockGrid};
 use crate::rng::Rng;
 use crate::runtime::pool::WorkerPool;
 use crate::sparse::SweepLanes;
@@ -28,13 +33,38 @@ pub struct DsgdEngine {
 }
 
 impl DsgdEngine {
-    /// Build from a dataset (uniform `c × c` grid, as in the original).
+    /// Build from a dataset (square `c × c` grid, `c` = worker threads).
     pub fn new(data: &Dataset, factors: Factors, cfg: &TrainConfig, _rng: &mut Rng) -> Self {
-        // DSGD grids are c×c (c strata of c blocks); `build_grid` would make
-        // the (c+1)² scheduler layout, so bucket directly.
         let threads = cfg.threads.max(1);
-        let row_bounds = bounds_for(PartitionKind::Uniform, &data.train.row_counts(), threads);
-        let col_bounds = bounds_for(PartitionKind::Uniform, &data.train.col_counts(), threads);
+        Self::new_rect(data, factors, cfg, threads, threads)
+    }
+
+    /// Build with an explicit rectangular `row_blocks × col_blocks` grid
+    /// (`row_blocks ≤ col_blocks`; an epoch is `col_blocks` strata run by
+    /// `row_blocks` pool workers). The distributed worker uses this to
+    /// train its row-range sub-matrix against the rotated column blocks.
+    ///
+    /// Bucketing uses [`TrainConfig::partition`] — regression: this engine
+    /// used to hardcode uniform bounds, so the Algorithm 1 balanced
+    /// partitioning never reached the one engine where imbalance hurts
+    /// most (every stratum barrier waits on the heaviest block).
+    pub fn new_rect(
+        data: &Dataset,
+        factors: Factors,
+        cfg: &TrainConfig,
+        row_blocks: usize,
+        col_blocks: usize,
+    ) -> Self {
+        assert!(row_blocks >= 1, "need at least one row block");
+        assert!(
+            row_blocks <= col_blocks,
+            "DSGD rotation needs row_blocks ({row_blocks}) ≤ col_blocks ({col_blocks}): \
+             a stratum with more workers than column blocks would share columns"
+        );
+        // DSGD grids are r×c (c strata of r blocks each); `build_grid`
+        // would make the (c+1)² scheduler layout, so bucket directly.
+        let row_bounds = bounds_for(cfg.partition, &data.train.row_counts(), row_blocks);
+        let col_bounds = bounds_for(cfg.partition, &data.train.col_counts(), col_blocks);
         let grid = BlockGrid::new(&data.train, row_bounds, col_bounds);
         let kernels = KernelSet::select(factors.d(), cfg.kernel);
         DsgdEngine {
@@ -42,17 +72,19 @@ impl DsgdEngine {
             grid,
             hyper: cfg.hyper,
             kernels,
-            pool: WorkerPool::new(threads),
+            pool: WorkerPool::new(row_blocks),
         }
     }
 }
 
 impl EpochRunner for DsgdEngine {
     fn run_epoch(&mut self, _epoch: u32, _quota: u64) -> u64 {
-        // The pool holds exactly c workers, so the stratum barrier admits
-        // them all each round.
-        let c = self.pool.threads();
-        let barrier = Barrier::new(c);
+        // The pool holds exactly one worker per row block, so the stratum
+        // barrier admits them all each round; an epoch is `c` strata
+        // (column blocks), each worker taking its rotated diagonal block.
+        let r = self.pool.threads();
+        let c = self.grid.ncol_blocks();
+        let barrier = Barrier::new(r);
         let shared = &self.shared;
         let grid = &self.grid;
         let hyper = self.hyper;
@@ -63,8 +95,10 @@ impl EpochRunner for DsgdEngine {
             for s in 0..c {
                 let j = (t + s) % c;
                 processed += grid.block(t, j).sweep(|u, v, r| {
-                    // SAFETY: stratum blocks are a diagonal — rows
-                    // and columns are disjoint across threads.
+                    // SAFETY: stratum blocks are a generalized diagonal —
+                    // distinct workers t hold distinct row blocks, and
+                    // (t+s) mod c is injective over t < r ≤ c, so rows
+                    // and columns are disjoint across workers.
                     let (mu, nv, _, _) = unsafe { shared.rows_mut(u, v) };
                     kernels.sgd(mu, nv, r, &hyper);
                 });
@@ -123,5 +157,84 @@ mod tests {
         let f = Factors::init(data.nrows(), data.ncols(), 4, 0.3, &mut rng);
         let mut e = DsgdEngine::new(&data, f, &cfg, &mut rng);
         assert_eq!(e.run_epoch(1, 0), data.train.nnz() as u64);
+    }
+
+    #[test]
+    fn rectangular_dsgd_epoch_covers_whole_matrix() {
+        let data = synthetic::small(9);
+        let cfg = TrainConfig::preset(EngineKind::Dsgd, &data).threads(2).dim(4);
+        let mut rng = Rng::new(10);
+        let f = Factors::init(data.nrows(), data.ncols(), 4, 0.3, &mut rng);
+        // 2 workers × 5 column blocks: an epoch is 5 strata and still
+        // touches every block exactly once.
+        let mut e = DsgdEngine::new_rect(&data, f, &cfg, 2, 5);
+        assert_eq!(e.run_epoch(1, 0), data.train.nnz() as u64);
+    }
+
+    #[test]
+    #[should_panic(expected = "row_blocks")]
+    fn rectangular_dsgd_rejects_more_workers_than_col_blocks() {
+        let data = synthetic::small(9);
+        let cfg = TrainConfig::preset(EngineKind::Dsgd, &data).dim(4);
+        let mut rng = Rng::new(10);
+        let f = Factors::init(data.nrows(), data.ncols(), 4, 0.3, &mut rng);
+        DsgdEngine::new_rect(&data, f, &cfg, 3, 2);
+    }
+
+    /// Per-stratum nnz of an engine's grid: stratum `s` is the diagonal
+    /// `{(t, (t+s) mod c)}`, and the barrier makes its cost the max block.
+    fn stratum_nnz(e: &DsgdEngine) -> Vec<u64> {
+        let c = e.grid.ncol_blocks();
+        (0..c)
+            .map(|s| (0..e.grid.nrow_blocks()).map(|t| e.grid.block(t, (t + s) % c).len() as u64).sum())
+            .collect()
+    }
+
+    /// Regression: `DsgdEngine::new` used to hardcode uniform bounds, so
+    /// `cfg.partition` (balanced by default since the fix) never reached
+    /// the grid and Zipf-skewed data left one stratum carrying a multiple
+    /// of the mean load. With the fix, balanced bucketing must strictly
+    /// drop the max/mean stratum ratio versus forced-uniform bucketing.
+    #[test]
+    fn balanced_bounds_flatten_zipf_skewed_strata() {
+        use crate::partition::PartitionKind;
+        // Zipf-ish skew: node popularity ∝ rank^-k (same construction as
+        // the partition-layer imbalance regression).
+        let mut rng = Rng::new(5);
+        let mut m = crate::sparse::CooMatrix::new(300, 300);
+        let mut seen = std::collections::HashSet::new();
+        while m.nnz() < 6000 {
+            let u = ((300.0 * rng.f64().powf(2.5)) as u32).min(299);
+            let v = ((300.0 * rng.f64().powf(2.5)) as u32).min(299);
+            if seen.insert((u, v)) {
+                m.push(u, v, 1.0).unwrap();
+            }
+        }
+        let data = Dataset {
+            name: "zipf-skew".into(),
+            train: m,
+            test: crate::sparse::CooMatrix::new(300, 300),
+            rating_min: 1.0,
+            rating_max: 5.0,
+        };
+        let ratio = |kind: PartitionKind| {
+            let cfg = TrainConfig::preset(EngineKind::Dsgd, &data)
+                .threads(4)
+                .dim(4)
+                .partition(kind);
+            let mut rng = Rng::new(6);
+            let f = Factors::init(300, 300, 4, 0.3, &mut rng);
+            let e = DsgdEngine::new(&data, f, &cfg, &mut rng);
+            let strata = stratum_nnz(&e);
+            let max = *strata.iter().max().unwrap() as f64;
+            let mean = strata.iter().sum::<u64>() as f64 / strata.len() as f64;
+            max / mean
+        };
+        let uniform = ratio(PartitionKind::Uniform);
+        let balanced = ratio(PartitionKind::Balanced);
+        assert!(
+            balanced < uniform,
+            "balanced stratum ratio {balanced:.3} must beat uniform {uniform:.3}"
+        );
     }
 }

@@ -28,6 +28,7 @@ mod seq;
 pub mod stream_grid;
 
 pub use block_common::BlockEngine;
+pub use dsgd::DsgdEngine;
 pub use stream_grid::{EpochStreamGrid, StreamPlan};
 
 use crate::data::Dataset;
@@ -146,7 +147,9 @@ pub struct FaultSummary {
     /// Plan-order indices of shards quarantined under the `skip` policy
     /// (empty = every shard trained every epoch).
     pub quarantined_shards: Vec<usize>,
-    /// Training records lost to quarantined shards (per epoch).
+    /// Records in dropped slices of quarantined shards, accumulated over
+    /// every wave decode that skipped them — i.e. the loss across the
+    /// whole run, not a single epoch's worth.
     pub lost_records: u64,
     /// Transient IO retries that eventually succeeded.
     pub retries: u64,
@@ -235,7 +238,9 @@ impl TrainConfig {
             epochs: 60,
             seed: 0x5EED,
             partition: match engine {
-                EngineKind::A2psgd => PartitionKind::Balanced,
+                // DSGD is bulk-synchronous: every stratum barrier waits on
+                // the heaviest block, so it needs the balanced bounds most.
+                EngineKind::A2psgd | EngineKind::Dsgd => PartitionKind::Balanced,
                 _ => PartitionKind::Uniform,
             },
             early_stop: true,

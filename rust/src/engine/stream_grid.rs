@@ -325,11 +325,13 @@ pub struct EpochStreamGrid {
     /// Persistent shard-failure policy (see [`ShardErrorPolicy`]).
     on_shard_error: ShardErrorPolicy,
     /// Per-shard quarantine flags (`skip` policy): once set, every later
-    /// wave decode silently drops that shard's slices.
+    /// wave decode drops that shard's slices — and charges each dropped
+    /// slice to `lost_records` as it happens.
     quarantined: Vec<AtomicBool>,
     /// Transient decode failures that were retried.
     retries: AtomicU64,
-    /// Records lost to quarantined shards (per epoch).
+    /// Records in dropped slices of quarantined shards, accumulated
+    /// across every wave decode that skipped them (all epochs).
     lost_records: AtomicU64,
     /// Set when a worker panic poisoned the current epoch; the driver
     /// reads-and-clears it via [`EpochRunner::take_poisoned`].
@@ -458,8 +460,15 @@ impl EpochStreamGrid {
                 ));
             }
         }
+        let mut dropped = 0u64;
         for &(s, lo, hi) in &wave.slices {
             if self.quarantined[s].load(Ordering::Relaxed) {
+                // Quarantined slices are really dropped *here*, once per
+                // wave decode — charge the ledger on the attempt that
+                // succeeds (failed attempts are retried and would double
+                // count), so `lost_records` tracks actual losses across
+                // every epoch instead of a one-shot estimate.
+                dropped += hi - lo;
                 continue;
             }
             let base = plan.shard_base[s];
@@ -488,17 +497,22 @@ impl EpochStreamGrid {
             t.finalize();
             bytes += t.len() as u64 * RECORD_LEN as u64;
         }
+        if dropped > 0 {
+            self.lost_records.fetch_add(dropped, Ordering::Relaxed);
+        }
         Ok((tiles, bytes))
     }
 
-    /// Quarantine a shard under the `skip` policy: flag it, charge its
-    /// records (across all waves) to the lost-coverage ledger once, and
-    /// keep training on the survivors.
+    /// Quarantine a shard under the `skip` policy: flag it and keep
+    /// training on the survivors. The lost-coverage ledger is *not*
+    /// charged here — [`Self::try_decode_wave`] charges each dropped
+    /// slice as it is actually skipped, so a multi-epoch run reports the
+    /// full loss rather than a single epoch's worth (the pre-fix bug).
     fn quarantine(&self, s: usize, err: &anyhow::Error) {
         if self.quarantined[s].swap(true, Ordering::Relaxed) {
             return; // already quarantined (racing decoders)
         }
-        let lost: u64 = self
+        let per_epoch: u64 = self
             .plan
             .waves
             .iter()
@@ -506,12 +520,11 @@ impl EpochStreamGrid {
             .filter(|&&(si, _, _)| si == s)
             .map(|&(_, lo, hi)| hi - lo)
             .sum();
-        self.lost_records.fetch_add(lost, Ordering::Relaxed);
         if crate::obs::metrics_enabled() {
             crate::obs::add(crate::obs::Ctr::ShardsQuarantined, 1);
         }
         eprintln!(
-            "warning: quarantining shard {s} ({lost} records/epoch) after repeated decode \
+            "warning: quarantining shard {s} ({per_epoch} records/epoch) after repeated decode \
              failures: {err:#}; training continues on surviving shards"
         );
     }

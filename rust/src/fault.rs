@@ -56,17 +56,22 @@ pub enum FailPoint {
     PoolWorker,
     /// `prefetch.wave` — the background decode of the next streaming wave.
     PrefetchWave,
+    /// `dist.worker` — a distributed worker handling a coordinator stratum
+    /// assignment (fires as a worker death: the connection drops and the
+    /// coordinator continues degraded).
+    DistWorker,
 }
 
 impl FailPoint {
     /// Every failpoint, for catalogs and `reset` sweeps.
-    pub const ALL: [FailPoint; 6] = [
+    pub const ALL: [FailPoint; 7] = [
         FailPoint::ShardOpen,
         FailPoint::ShardRead,
         FailPoint::MmapMap,
         FailPoint::CheckpointWrite,
         FailPoint::PoolWorker,
         FailPoint::PrefetchWave,
+        FailPoint::DistWorker,
     ];
 
     /// Stable spec/wire name (`shard.open`, `checkpoint.write`, …).
@@ -78,6 +83,7 @@ impl FailPoint {
             FailPoint::CheckpointWrite => "checkpoint.write",
             FailPoint::PoolWorker => "pool.worker",
             FailPoint::PrefetchWave => "prefetch.wave",
+            FailPoint::DistWorker => "dist.worker",
         }
     }
 
@@ -94,6 +100,7 @@ impl FailPoint {
             FailPoint::CheckpointWrite => 3,
             FailPoint::PoolWorker => 4,
             FailPoint::PrefetchWave => 5,
+            FailPoint::DistWorker => 6,
         }
     }
 }
@@ -158,7 +165,7 @@ const SLOT_INIT: Slot = Slot {
     hits: AtomicU64::new(0),
 };
 
-static SLOTS: [Slot; 6] = [SLOT_INIT; 6];
+static SLOTS: [Slot; 7] = [SLOT_INIT; 7];
 
 /// The one word the dark path reads: false ⇒ no failpoint is armed and
 /// [`should_fail`] returns before touching any slot.

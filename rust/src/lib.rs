@@ -43,6 +43,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod engine;
 pub mod fault;
 pub mod metrics;

@@ -22,6 +22,8 @@ fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
     match args.command.as_str() {
         "train" => cmd_train(&args),
+        "dist-train" => cmd_dist_train(&args),
+        "dist-worker" => cmd_dist_worker(&args),
         "compare" => cmd_compare(&args),
         "serve" => cmd_serve(&args),
         "stream" => cmd_stream(&args),
@@ -226,7 +228,7 @@ fn report_train(args: &Args, engine: EngineKind, report: &TrainReport) -> Result
     let ft = &report.fault;
     if ft.degraded() || ft.retries > 0 || ft.epochs_retried > 0 {
         eprintln!(
-            "fault: {} — quarantined shards {:?} ({} records/epoch lost), {} retries, \
+            "fault: {} — quarantined shards {:?} ({} records lost), {} retries, \
              {} epochs retried",
             if ft.degraded() { "DEGRADED coverage" } else { "recovered" },
             ft.quarantined_shards,
@@ -316,6 +318,147 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     report_train(args, engine, &report)?;
     obs_finish(&oc)
+}
+
+/// Build a [`DistConfig`] from `--config [dist]` + CLI overrides.
+fn dist_config_from_args(args: &Args) -> Result<a2psgd::config::DistConfig> {
+    let mut dc = a2psgd::config::DistConfig::default();
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        dc = dc.apply_toml(&text)?;
+    }
+    dc.apply_cli(
+        args.get_parsed::<usize>("workers")?,
+        args.get_parsed::<usize>("col-blocks")?,
+        args.get("listen"),
+        args.get("exchange-dir"),
+    )
+}
+
+/// Distributed shard-parallel training: bind the control listener, spawn
+/// `--workers` child `dist-worker` processes against this same binary, and
+/// run the DSGD rotation schedule over them (see DISTRIBUTED.md).
+fn cmd_dist_train(args: &Args) -> Result<()> {
+    use a2psgd::dist::{run_coordinator, CoordinatorOptions};
+    use std::net::TcpListener;
+    let oc = obs_from_args(args)?;
+    faults_from_args(args)?;
+    let key = args.get("dataset").context("dist-train requires --dataset SHARD_DIR")?;
+    let data_dir = std::path::Path::new(key);
+    anyhow::ensure!(
+        a2psgd::data::shard::is_shard_dir(data_dir),
+        "{key}: dist-train trains out-of-core from a packed shard directory \
+         (run `a2psgd pack` first)"
+    );
+    let cfg = config_from_args(args, EngineKind::Dsgd, key)?;
+    let dc = dist_config_from_args(args)?;
+    let exchange = dc
+        .exchange_dir
+        .clone()
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(args.get_or("out", "results")).join("dist-exchange"));
+    let mut opts = CoordinatorOptions::new(dc.workers, &exchange);
+    opts.col_blocks = dc.col_blocks;
+    opts.register_timeout = std::time::Duration::from_millis(dc.register_timeout_ms);
+    opts.test_frac = dc.test_frac;
+
+    let listener = TcpListener::bind(&dc.listen)
+        .with_context(|| format!("binding coordinator listener on {}", dc.listen))?;
+    let addr = listener.local_addr()?.to_string();
+    eprintln!(
+        "dist-train: coordinator on {addr} — {} workers × {} col blocks, d={} epochs={} \
+         exchange={}",
+        dc.workers,
+        if dc.col_blocks == 0 { dc.workers } else { dc.col_blocks },
+        cfg.d,
+        cfg.epochs,
+        exchange.display()
+    );
+
+    // Workers are this same binary re-invoked; pass fault specs through so a
+    // `--faults dist.worker=…` schedule lands in the worker processes (the
+    // coordinator has no dist.worker failpoint of its own).
+    let exe = std::env::current_exe().context("locating the a2psgd binary")?;
+    let mut children = Vec::with_capacity(dc.workers);
+    for w in 0..dc.workers {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("dist-worker")
+            .arg("--connect")
+            .arg(&addr)
+            .arg("--worker-id")
+            .arg(w.to_string())
+            .arg("--dataset")
+            .arg(key)
+            .arg("--threads")
+            .arg(cfg.threads.to_string());
+        if let Some(f) = args.get("faults") {
+            cmd.arg("--faults").arg(f);
+        }
+        children.push(
+            cmd.spawn().with_context(|| format!("spawning dist-worker {w}"))?,
+        );
+    }
+
+    let run = run_coordinator(listener, data_dir, &cfg, &opts);
+    // Reap the children whatever happened; on coordinator failure make sure
+    // none of them outlive the run.
+    if run.is_err() {
+        for c in &mut children {
+            c.kill().ok();
+        }
+    }
+    for (w, mut c) in children.into_iter().enumerate() {
+        match c.wait() {
+            Ok(st) if !st.success() => {
+                eprintln!("dist: worker {w} exited with {st}")
+            }
+            Err(e) => eprintln!("dist: waiting on worker {w}: {e}"),
+            _ => {}
+        }
+    }
+    let report = run?;
+
+    for (i, rmse) in report.history.iter().enumerate() {
+        println!("epoch {:>3}  RMSE={rmse:.4}", i + 1);
+    }
+    println!(
+        "\ndist-train: final RMSE {:.4}  MAE {:.4}  {} epochs × {} workers \
+         ({} lost), {} entries processed, snapshot v{}",
+        report.rmse,
+        report.mae,
+        report.epochs_run,
+        report.workers,
+        report.workers_lost,
+        report.processed,
+        report.snapshot_version
+    );
+    if let Some(path) = args.get("save") {
+        a2psgd::model::checkpoint::save(&report.factors, std::path::Path::new(path))?;
+        eprintln!("checkpoint → {path}");
+    }
+    obs_finish(&oc)
+}
+
+/// One distributed worker process. Normally spawned by `dist-train`; run by
+/// hand (with an explicit `--connect host:port`) for multi-host setups.
+fn cmd_dist_worker(args: &Args) -> Result<()> {
+    use a2psgd::dist::{run_worker, WorkerOptions};
+    faults_from_args(args)?;
+    let addr = args.get("connect").context("dist-worker requires --connect HOST:PORT")?;
+    let id = args
+        .get_parsed::<usize>("worker-id")?
+        .context("dist-worker requires --worker-id N")?;
+    let dataset = args.get("dataset").context("dist-worker requires --dataset SHARD_DIR")?;
+    let threads = args.get_parsed::<usize>("threads")?.unwrap_or(1);
+    let opts = WorkerOptions::new(addr, id, dataset).threads(threads);
+    let stats = run_worker(&opts)?;
+    eprintln!(
+        "dist-worker {id}: {} strata, {} entries processed, last barrier epoch {} \
+         (RMSE {:.4})",
+        stats.strata, stats.processed, stats.epochs, stats.last_rmse
+    );
+    Ok(())
 }
 
 /// Convert a ratings source (text file or builtin dataset key) into a
@@ -1628,6 +1771,73 @@ fn cmd_bench(args: &Args) -> Result<()> {
             .build()
     };
 
+    // 4e. Distributed bench: the same dataset trained through the dist-train
+    // coordinator/worker pair, 1 worker vs 2 — wall-clock scaling of the
+    // DSGD rotation schedule with the control protocol, checkpoint exchange,
+    // and merge all on the path. Workers run in-process on threads (the same
+    // `run_worker` an `a2psgd dist-worker` process runs); `bench_gate.py`
+    // holds the scaling floor.
+    let dist_json = {
+        use a2psgd::dist::{run_coordinator, run_worker, CoordinatorOptions, WorkerOptions};
+        let dtmp =
+            std::env::temp_dir().join(format!("a2psgd_bench_dist_{}", std::process::id()));
+        std::fs::remove_dir_all(&dtmp).ok();
+        std::fs::create_dir_all(&dtmp)?;
+        let dist_dir = dtmp.join("shards");
+        // Size shards so a 2-worker split always has rows to cut on.
+        let nnz_bytes = data.train.nnz() as u64 * a2psgd::data::shard::RECORD_LEN as u64;
+        let shard_bytes = (nnz_bytes / 6).max(4096) as usize;
+        a2psgd::data::shard::pack_coo(
+            &data.train,
+            &dist_dir,
+            &a2psgd::data::shard::PackOptions { shard_bytes },
+        )?;
+        let dcfg = TrainConfig::preset_named(EngineKind::Dsgd, "bench-dist")
+            .threads(1)
+            .epochs(2)
+            .dim(bcfg.d)
+            .seed(bcfg.seed);
+        let run = |workers: usize| -> Result<(f64, f64, u64)> {
+            let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+            let addr = listener.local_addr()?.to_string();
+            let opts = CoordinatorOptions::new(workers, dtmp.join(format!("x{workers}")));
+            let t0 = std::time::Instant::now();
+            let report = std::thread::scope(|s| {
+                let hands: Vec<_> = (0..workers)
+                    .map(|w| {
+                        let wo = WorkerOptions::new(addr.clone(), w, &dist_dir).threads(1);
+                        s.spawn(move || run_worker(&wo))
+                    })
+                    .collect();
+                let report = run_coordinator(listener, &dist_dir, &dcfg, &opts);
+                for h in hands {
+                    // Worker results only matter if the coordinator failed —
+                    // and then its error is the one worth propagating.
+                    let _ = h.join().expect("dist worker thread");
+                }
+                report
+            })?;
+            Ok((t0.elapsed().as_secs_f64(), report.rmse, report.processed))
+        };
+        let (t1, rmse1, _) = run(1)?;
+        let (t2, rmse2, processed) = run(2)?;
+        std::fs::remove_dir_all(&dtmp).ok();
+        let scaling = t1 / t2;
+        println!(
+            "distributed: 1 worker {t1:.3}s vs 2 workers {t2:.3}s — {scaling:.2}x scaling \
+             (RMSE {rmse1:.4} vs {rmse2:.4}, {processed} entries)"
+        );
+        json::Obj::new()
+            .num("one_worker_s", t1)
+            .num("two_worker_s", t2)
+            .num("scaling", scaling)
+            .num("rmse_1w", rmse1)
+            .num("rmse_2w", rmse2)
+            .int("processed_2w", processed)
+            .int("epochs", 2)
+            .build()
+    };
+
     // 5. Emit the JSON artifact.
     let payload = json::Obj::new()
         .str("bench", "hotpath")
@@ -1685,6 +1895,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         )
         .raw("obs_overhead", &obs_json)
         .raw("serving", &serving_json)
+        .raw("distributed", &dist_json)
         .build();
     if let Some(dir) = out.parent() {
         if !dir.as_os_str().is_empty() {

@@ -138,6 +138,34 @@ impl SnapshotStore {
     }
 }
 
+/// Merge one worker's factor block into a working master: copy `M`/`φ`
+/// rows `[rows.0, rows.1)` and `N`/`ψ` rows (matrix *columns*)
+/// `[cols.0, cols.1)` from `part` into `master`.
+///
+/// This is the distributed coordinator's exchange primitive: under DSGD
+/// rotation every stratum hands each worker a disjoint (row block ×
+/// column block), so the "average" of worker contributions degenerates to
+/// an exact copy — each factor row has exactly one writer per stratum, and
+/// stitching the blocks back reproduces the single-machine update bit for
+/// bit. Momentum travels with the block so NAG state survives rotation.
+///
+/// # Panics
+/// If the shapes differ or a range is out of bounds / inverted.
+pub fn merge_block(master: &mut Factors, part: &Factors, rows: (u32, u32), cols: (u32, u32)) {
+    assert_eq!(master.d(), part.d(), "merge_block: rank mismatch");
+    assert_eq!(master.nrows(), part.nrows(), "merge_block: row-count mismatch");
+    assert_eq!(master.ncols(), part.ncols(), "merge_block: col-count mismatch");
+    assert!(rows.0 <= rows.1 && rows.1 <= master.nrows(), "bad row range {rows:?}");
+    assert!(cols.0 <= cols.1 && cols.1 <= master.ncols(), "bad col range {cols:?}");
+    let d = master.d();
+    let (rl, rh) = (rows.0 as usize * d, rows.1 as usize * d);
+    master.m[rl..rh].copy_from_slice(&part.m[rl..rh]);
+    master.phi[rl..rh].copy_from_slice(&part.phi[rl..rh]);
+    let (cl, ch) = (cols.0 as usize * d, cols.1 as usize * d);
+    master.n[cl..ch].copy_from_slice(&part.n[cl..ch]);
+    master.psi[cl..ch].copy_from_slice(&part.psi[cl..ch]);
+}
+
 impl std::fmt::Debug for SnapshotStore {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("SnapshotStore").field("version", &self.version()).finish()
@@ -201,6 +229,50 @@ mod tests {
         assert_eq!(meta.snapshot_version, 2);
         assert_eq!(f.m, store.load().factors().m);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merge_block_copies_exactly_the_named_ranges() {
+        let mut master = factors(20, 6); // 6×4, d=2
+        let part = factors(21, 6);
+        let before = master.clone();
+        merge_block(&mut master, &part, (2, 5), (1, 3));
+        let d = master.d();
+        for u in 0..6u32 {
+            let (lo, hi) = (u as usize * d, (u + 1) as usize * d);
+            let from = if (2..5).contains(&u) { &part } else { &before };
+            assert_eq!(&master.m[lo..hi], &from.m[lo..hi], "M row {u}");
+            assert_eq!(&master.phi[lo..hi], &from.phi[lo..hi], "phi row {u}");
+        }
+        for v in 0..4u32 {
+            let (lo, hi) = (v as usize * d, (v + 1) as usize * d);
+            let from = if (1..3).contains(&v) { &part } else { &before };
+            assert_eq!(&master.n[lo..hi], &from.n[lo..hi], "N row {v}");
+            assert_eq!(&master.psi[lo..hi], &from.psi[lo..hi], "psi row {v}");
+        }
+    }
+
+    #[test]
+    fn merge_block_stitching_disjoint_blocks_reproduces_the_part_union() {
+        // Two workers covering disjoint row/col blocks (one DSGD stratum):
+        // merging both must equal taking each block verbatim.
+        let mut master = factors(30, 8);
+        let (a, b) = (factors(31, 8), factors(32, 8));
+        merge_block(&mut master, &a, (0, 4), (0, 2));
+        merge_block(&mut master, &b, (4, 8), (2, 4));
+        assert_eq!(&master.m[..4 * 2], &a.m[..4 * 2]);
+        assert_eq!(&master.m[4 * 2..], &b.m[4 * 2..]);
+        assert_eq!(&master.n[..2 * 2], &a.n[..2 * 2]);
+        assert_eq!(&master.n[2 * 2..], &b.n[2 * 2..]);
+    }
+
+    #[test]
+    #[should_panic(expected = "rank mismatch")]
+    fn merge_block_rejects_shape_mismatch() {
+        let mut master = factors(1, 4);
+        let mut rng = Rng::new(2);
+        let part = Factors::init(4, 4, 3, 0.5, &mut rng);
+        merge_block(&mut master, &part, (0, 1), (0, 1));
     }
 
     #[test]

@@ -1,6 +1,9 @@
-//! The `(c+1)×(c+1)` block grid: per-block instances in block-local CSR
-//! layout ([`BlockCsr`]) ready for the scheduler/engines, plus block-level
-//! balance statistics.
+//! The block grid: per-block instances in block-local CSR layout
+//! ([`BlockCsr`]) ready for the scheduler/engines, plus block-level
+//! balance statistics. Grids are square (`(c+1)×(c+1)`) for the
+//! single-machine engines and may be rectangular (`r×c` row blocks ×
+//! column blocks) for the distributed DSGD rotation, where the row axis
+//! is the worker count and the column axis the rotated block count.
 
 use super::Bounds;
 use crate::sparse::{stats, BlockCsr, CooMatrix};
@@ -8,37 +11,39 @@ use crate::sparse::{stats, BlockCsr, CooMatrix};
 /// The full block grid.
 #[derive(Clone, Debug)]
 pub struct BlockGrid {
-    nblocks: usize,
+    nrow_blocks: usize,
+    ncol_blocks: usize,
     row_bounds: Bounds,
     col_bounds: Bounds,
-    blocks: Vec<BlockCsr>, // row-major nblocks × nblocks
+    blocks: Vec<BlockCsr>, // row-major nrow_blocks × ncol_blocks
 }
 
 impl BlockGrid {
     /// Bucket a training matrix into the grid given per-axis bounds. Each
     /// block is counting-sorted into block-local CSR order (two passes over
     /// Ω, exact-capacity lanes, no intermediate per-block entry lists).
+    /// The axes may have different block counts (rectangular grid).
     pub fn new(train: &CooMatrix, row_bounds: Bounds, col_bounds: Bounds) -> Self {
-        assert_eq!(row_bounds.len(), col_bounds.len(), "grid must be square");
-        let nblocks = row_bounds.len() - 1;
+        let nrow_blocks = row_bounds.len() - 1;
+        let ncol_blocks = col_bounds.len() - 1;
         let row_of = build_assignment(&row_bounds, train.nrows());
         let col_of = build_assignment(&col_bounds, train.ncols());
         // Pass 1: per-block instance counts → exact lane capacities.
-        let mut counts = vec![0usize; nblocks * nblocks];
+        let mut counts = vec![0usize; nrow_blocks * ncol_blocks];
         for e in train.entries() {
             let bi = row_of[e.u as usize] as usize;
             let bj = col_of[e.v as usize] as usize;
-            counts[bi * nblocks + bj] += 1;
+            counts[bi * ncol_blocks + bj] += 1;
         }
-        let mut blocks = Vec::with_capacity(nblocks * nblocks);
-        for i in 0..nblocks {
-            for j in 0..nblocks {
+        let mut blocks = Vec::with_capacity(nrow_blocks * ncol_blocks);
+        for i in 0..nrow_blocks {
+            for j in 0..ncol_blocks {
                 blocks.push(BlockCsr::with_capacity(
                     row_bounds[i],
                     row_bounds[i + 1] - row_bounds[i],
                     col_bounds[j],
                     col_bounds[j + 1] - col_bounds[j],
-                    counts[i * nblocks + j],
+                    counts[i * ncol_blocks + j],
                 ));
             }
         }
@@ -46,34 +51,53 @@ impl BlockGrid {
         for e in train.entries() {
             let bi = row_of[e.u as usize] as usize;
             let bj = col_of[e.v as usize] as usize;
-            blocks[bi * nblocks + bj].push(e.u, e.v, e.r);
+            blocks[bi * ncol_blocks + bj].push(e.u, e.v, e.r);
         }
         for b in &mut blocks {
             b.finalize();
         }
-        BlockGrid { nblocks, row_bounds, col_bounds, blocks }
+        BlockGrid { nrow_blocks, ncol_blocks, row_bounds, col_bounds, blocks }
     }
 
     /// Assemble a grid from externally built blocks — the shard-wise
     /// out-of-core ingest path ([`crate::data::ingest::ingest_ooc`]), which
     /// scatters shard streams into [`BlockCsr`] buckets itself. Blocks are
-    /// row-major `nblocks × nblocks` and must already be finalized with
+    /// row-major over the two axes and must already be finalized with
     /// spans matching the bounds.
     pub fn from_block_parts(row_bounds: Bounds, col_bounds: Bounds, blocks: Vec<BlockCsr>) -> Self {
-        assert_eq!(row_bounds.len(), col_bounds.len(), "grid must be square");
-        let nblocks = row_bounds.len() - 1;
-        assert_eq!(blocks.len(), nblocks * nblocks, "expected nblocks² blocks");
-        BlockGrid { nblocks, row_bounds, col_bounds, blocks }
+        let nrow_blocks = row_bounds.len() - 1;
+        let ncol_blocks = col_bounds.len() - 1;
+        assert_eq!(blocks.len(), nrow_blocks * ncol_blocks, "expected nrow×ncol blocks");
+        BlockGrid { nrow_blocks, ncol_blocks, row_bounds, col_bounds, blocks }
     }
 
-    /// Grid side length (c+1).
+    /// Grid side length (c+1) of a square grid. The single-machine
+    /// engines and schedulers all build square grids; a rectangular grid
+    /// (distributed rotation) must use the per-axis accessors.
+    ///
+    /// # Panics
+    /// On a rectangular grid.
     pub fn nblocks(&self) -> usize {
-        self.nblocks
+        assert_eq!(
+            self.nrow_blocks, self.ncol_blocks,
+            "nblocks() called on a rectangular grid; use nrow_blocks()/ncol_blocks()"
+        );
+        self.nrow_blocks
+    }
+
+    /// Row-axis block count.
+    pub fn nrow_blocks(&self) -> usize {
+        self.nrow_blocks
+    }
+
+    /// Column-axis block count.
+    pub fn ncol_blocks(&self) -> usize {
+        self.ncol_blocks
     }
 
     /// Block (i, j).
     pub fn block(&self, i: usize, j: usize) -> &BlockCsr {
-        &self.blocks[i * self.nblocks + j]
+        &self.blocks[i * self.ncol_blocks + j]
     }
 
     /// Row-axis bounds.
@@ -104,9 +128,9 @@ impl BlockGrid {
 
     /// ⟨R_{i,:}⟩ row-block marginals.
     pub fn row_block_nnz(&self) -> Vec<u64> {
-        (0..self.nblocks)
+        (0..self.nrow_blocks)
             .map(|i| {
-                (0..self.nblocks)
+                (0..self.ncol_blocks)
                     .map(|j| self.block(i, j).len() as u64)
                     .sum()
             })
@@ -115,9 +139,9 @@ impl BlockGrid {
 
     /// ⟨R_{:,j}⟩ column-block marginals.
     pub fn col_block_nnz(&self) -> Vec<u64> {
-        (0..self.nblocks)
+        (0..self.ncol_blocks)
             .map(|j| {
-                (0..self.nblocks)
+                (0..self.nrow_blocks)
                     .map(|i| self.block(i, j).len() as u64)
                     .sum()
             })
@@ -211,6 +235,34 @@ mod tests {
                 });
             }
         }
+    }
+
+    #[test]
+    fn rectangular_grid_partitions_all_entries() {
+        let m = toy();
+        let g = BlockGrid::new(&m, uniform_bounds(8, 2), uniform_bounds(8, 4));
+        assert_eq!(g.nrow_blocks(), 2);
+        assert_eq!(g.ncol_blocks(), 4);
+        assert_eq!(g.total_nnz() as usize, m.nnz());
+        for i in 0..2 {
+            for j in 0..4 {
+                let (rlo, rhi) = (g.row_bounds()[i], g.row_bounds()[i + 1]);
+                let (clo, chi) = (g.col_bounds()[j], g.col_bounds()[j + 1]);
+                for e in g.block(i, j).iter_global() {
+                    assert!(e.u >= rlo && e.u < rhi);
+                    assert!(e.v >= clo && e.v < chi);
+                }
+            }
+        }
+        assert_eq!(g.row_block_nnz().iter().sum::<u64>(), g.total_nnz());
+        assert_eq!(g.col_block_nnz().iter().sum::<u64>(), g.total_nnz());
+    }
+
+    #[test]
+    #[should_panic(expected = "rectangular")]
+    fn nblocks_panics_on_rectangular_grid() {
+        let m = toy();
+        BlockGrid::new(&m, uniform_bounds(8, 2), uniform_bounds(8, 4)).nblocks();
     }
 
     #[test]

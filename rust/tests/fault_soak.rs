@@ -303,3 +303,68 @@ fn persistent_shard_failure_quarantines_and_degrades_honestly() {
     drop(guard);
     std::fs::remove_dir_all(&dir).ok();
 }
+
+/// Regression (silent slice drop): once a shard is quarantined, every
+/// later wave decode in every later epoch silently skips its slices —
+/// but the ledger used to charge a single epoch's worth of records at
+/// quarantine time, so a 3-epoch run reported a third of the true loss
+/// (and the report claimed "per epoch" semantics it didn't have). The
+/// fix charges the dropped slice records as each wave decode actually
+/// drops them, so `lost_records` covers the whole run.
+#[test]
+fn quarantine_loss_ledger_covers_every_epoch() {
+    let guard = armed();
+    let dir = tmpdir("lost_ledger");
+    let manifest = pack_reference(&dir);
+    let total = manifest.nnz; // every shard record (train and held-out)
+
+    // Build the wave plan fault-free (the split scan must succeed), so
+    // arming below hits only the per-epoch wave decodes.
+    let mut cfg = soak_config(1, 0x10C4);
+    cfg.early_stop = false;
+    let mut plan = engine::StreamPlan::open(
+        &dir,
+        cfg.partition,
+        cfg.threads,
+        0.3,
+        cfg.seed,
+        500,
+        4 << 10,
+        None,
+    )
+    .unwrap();
+    let test = plan.take_test();
+    let (lo, hi) = (plan.rating_min(), plan.rating_max());
+    let quota = plan.train_nnz();
+    let mut rng = Rng::new(cfg.seed);
+    let scale = Factors::default_scale(plan.train_mean(), cfg.d);
+    let factors = Factors::init(plan.nrows(), plan.ncols(), cfg.d, scale, &mut rng);
+    let runner = plan.into_runner(factors, &cfg, cfg.rule, &mut rng);
+
+    // Every decode fails → every shard exhausts its retry budget and is
+    // quarantined during epoch 1; epochs 2 and 3 drop every slice.
+    fault::arm("shard.read=prob:1.0:7").unwrap();
+    let eval = engine::EvalPlan {
+        name: "fault-soak",
+        test: &test,
+        rating_min: lo,
+        rating_max: hi,
+        quota,
+    };
+    let report = engine::run_driver_with(&eval, &cfg, Box::new(runner));
+    assert!(report.fault.degraded(), "total decode failure must degrade: {:?}", report.fault);
+    assert_eq!(
+        report.fault.quarantined_shards.len(),
+        manifest.shards.len(),
+        "every shard must be quarantined"
+    );
+    // Three epochs each dropped every record; the pre-fix one-shot charge
+    // stopped at 1× the shard contents.
+    assert!(
+        report.fault.lost_records >= 2 * total,
+        "lost_records {} must cover multi-epoch losses (total/epoch = {total})",
+        report.fault.lost_records
+    );
+    drop(guard);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,269 @@
+//! Distributed training acceptance.
+//!
+//! The distributed schedule (coordinator + N `run_worker`s over real TCP,
+//! exchanging crash-safe checkpoints) must train the *same model* as a
+//! single machine: the 2-worker run's final test RMSE has to land within 1%
+//! of `engine::train` on the identical hash split. Alongside the parity
+//! gate sit the structural guarantees: the rotation ledger proves no column
+//! block ever had two writers in a stratum, and worker death (injected via
+//! the `dist.worker` failpoint) degrades the run instead of aborting it —
+//! until the last worker dies, which must abort cleanly.
+
+use a2psgd::data::shard::{open_checked_mmap, pack_triplets, Manifest, PackOptions};
+use a2psgd::data::split::hash_is_test;
+use a2psgd::data::Dataset;
+use a2psgd::dist::{
+    rotation, run_coordinator, run_worker, Assignment, CoordinatorOptions, DistReport,
+    WorkerOptions,
+};
+use a2psgd::engine::{self, EngineKind, TrainConfig};
+use a2psgd::fault;
+use a2psgd::optim::Hyper;
+use a2psgd::rng::Rng;
+use a2psgd::sparse::CooMatrix;
+use std::collections::{HashMap, HashSet};
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Fault points are process-global; every test here trains through the
+/// worker path, so all of them serialize on one mutex and disarm on both
+/// entry and exit — an armed `dist.worker` schedule must never leak into a
+/// neighbouring test.
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+struct FaultGuard<'a> {
+    _lock: std::sync::MutexGuard<'a, ()>,
+}
+
+fn locked() -> FaultGuard<'static> {
+    let lock = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    fault::reset();
+    FaultGuard { _lock: lock }
+}
+
+impl Drop for FaultGuard<'_> {
+    fn drop(&mut self) {
+        fault::reset();
+    }
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("a2psgd_dist_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A rank-2 signal plus bounded noise over a 60×40 grid, ~2/3 dense —
+/// enough rows for many 2 KiB shards and a stable test-RMSE plateau (the
+/// noise floor) that both training paths reach.
+fn pack_lowrank(dir: &Path) -> Manifest {
+    let mut rng = Rng::new(0xD157_DA7A);
+    let (users, items, d_true) = (60u64, 40u64, 2usize);
+    let a: Vec<f32> =
+        (0..users as usize * d_true).map(|_| rng.f32_range(-0.6, 0.6)).collect();
+    let b: Vec<f32> =
+        (0..items as usize * d_true).map(|_| rng.f32_range(-0.6, 0.6)).collect();
+    let mut triplets = Vec::new();
+    for u in 0..users {
+        for v in 0..items {
+            if rng.f64() < 0.35 {
+                continue;
+            }
+            let dot: f32 = (0..d_true)
+                .map(|k| a[u as usize * d_true + k] * b[v as usize * d_true + k])
+                .sum();
+            triplets.push((u, v, 3.0 + dot + rng.f32_range(-0.4, 0.4)));
+        }
+    }
+    let stats = pack_triplets(&triplets, dir, &PackOptions { shard_bytes: 2048 }).unwrap();
+    assert!(stats.shards >= 4, "parity data must span shards, got {}", stats.shards);
+    Manifest::load(dir).unwrap()
+}
+
+fn parity_config() -> TrainConfig {
+    TrainConfig::preset_named(EngineKind::Dsgd, "dist-parity")
+        .dim(4)
+        .threads(2)
+        .epochs(25)
+        .seed(0xD157)
+        .hyper(Hyper::sgd(0.02, 0.005))
+        .no_early_stop()
+}
+
+/// Run an in-process distributed job: `workers` threads of the real
+/// `run_worker` loop against `run_coordinator`, over real localhost TCP.
+fn dist_run(
+    dir: &Path,
+    exchange: &Path,
+    cfg: &TrainConfig,
+    workers: usize,
+    col_blocks: usize,
+) -> a2psgd::Result<DistReport> {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut opts = CoordinatorOptions::new(workers, exchange);
+    opts.col_blocks = col_blocks;
+    std::thread::scope(|s| {
+        let hands: Vec<_> = (0..workers)
+            .map(|w| {
+                let wo = WorkerOptions::new(addr.clone(), w, dir).threads(1);
+                s.spawn(move || run_worker(&wo))
+            })
+            .collect();
+        let report = run_coordinator(listener, dir, cfg, &opts);
+        for h in hands {
+            // A worker killed by fault injection legitimately returns Err;
+            // the coordinator's report is the arbiter of the run.
+            let _ = h.join().expect("worker thread panicked");
+        }
+        report
+    })
+}
+
+/// Materialize the exact hash split the distributed run trains against.
+fn materialize(dir: &Path, seed: u64, test_frac: f64) -> Dataset {
+    let manifest = Manifest::load(dir).unwrap();
+    let (mut train, mut test) = (Vec::new(), Vec::new());
+    let (mut rmin, mut rmax) = (f32::INFINITY, f32::NEG_INFINITY);
+    for meta in &manifest.shards {
+        let reader = open_checked_mmap(dir, &manifest, meta).unwrap();
+        reader
+            .decode_range(0, meta.nnz, |_k, e| {
+                rmin = rmin.min(e.r);
+                rmax = rmax.max(e.r);
+                if hash_is_test(e.u, e.v, seed, test_frac) {
+                    test.push(e);
+                } else {
+                    train.push(e);
+                }
+            })
+            .unwrap();
+    }
+    Dataset {
+        name: "dist-parity".into(),
+        train: CooMatrix::from_entries(manifest.nrows, manifest.ncols, train).unwrap(),
+        test: CooMatrix::from_entries(manifest.nrows, manifest.ncols, test).unwrap(),
+        rating_min: rmin,
+        rating_max: rmax,
+    }
+}
+
+/// The acceptance gate: 2-worker distributed RMSE within 1% of
+/// single-machine DSGD on the identical split, init convention, and hypers.
+#[test]
+fn two_worker_dist_matches_single_machine_within_one_percent() {
+    let _guard = locked();
+    let dir = tmpdir("parity");
+    pack_lowrank(&dir);
+    let cfg = parity_config();
+
+    let report = dist_run(&dir, &dir.join("exchange"), &cfg, 2, 2).unwrap();
+    assert_eq!(report.epochs_run, cfg.epochs);
+    assert_eq!(report.workers_lost, 0);
+    assert_eq!(report.history.len(), cfg.epochs as usize);
+
+    let data = materialize(&dir, cfg.seed, 0.2);
+    let single = engine::train(&data, &cfg).unwrap();
+    let (d, s) = (report.rmse, single.final_rmse());
+    assert!(d.is_finite() && s.is_finite(), "non-finite RMSE: dist {d} single {s}");
+    // Both runs should sit on the noise floor; sanity-check learning
+    // happened before holding them to each other.
+    assert!(s < 0.6, "single-machine run failed to learn (RMSE {s})");
+    let rel = (d - s).abs() / s;
+    assert!(
+        rel <= 0.01,
+        "2-worker dist RMSE {d:.4} vs single-machine {s:.4} — {:.2}% apart",
+        rel * 100.0
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Replay the run's rotation ledger: within every (epoch, stratum) no
+/// column block has two writers and no worker merges twice, every grant
+/// matches the rotation formula, and across an epoch each worker visits
+/// every block exactly once — on a rectangular 2-worker × 3-block grid.
+#[test]
+fn rotation_ledger_proves_exclusive_column_ownership() {
+    let _guard = locked();
+    let dir = tmpdir("ledger");
+    pack_lowrank(&dir);
+    let cfg = parity_config().epochs(2);
+    let report = dist_run(&dir, &dir.join("exchange"), &cfg, 2, 3).unwrap();
+
+    assert_eq!(report.workers_lost, 0);
+    assert_eq!(report.assignments.len(), 2 * 3 * 2, "2 workers × 3 strata × 2 epochs");
+    let mut strata: HashMap<(u32, usize), Vec<&Assignment>> = HashMap::new();
+    for a in &report.assignments {
+        assert_eq!(a.col_block, rotation(a.worker, a.stratum, 3));
+        strata.entry((a.epoch, a.stratum)).or_default().push(a);
+    }
+    for ((e, s), grants) in &strata {
+        let cols: HashSet<usize> = grants.iter().map(|a| a.col_block).collect();
+        let owners: HashSet<usize> = grants.iter().map(|a| a.worker).collect();
+        assert_eq!(
+            cols.len(),
+            grants.len(),
+            "epoch {e} stratum {s}: a column block had two writers"
+        );
+        assert_eq!(owners.len(), grants.len(), "epoch {e} stratum {s}: a worker merged twice");
+    }
+    for w in 0..2usize {
+        for e in 1..=2u32 {
+            let visited: HashSet<usize> = report
+                .assignments
+                .iter()
+                .filter(|a| a.worker == w && a.epoch == e)
+                .map(|a| a.col_block)
+                .collect();
+            let all: HashSet<usize> = (0..3).collect();
+            assert_eq!(visited, all, "worker {w} epoch {e} block coverage");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Kill one of two workers on its first order: the run must finish all
+/// epochs degraded, record the loss, and keep the ledger exclusive — the
+/// survivor simply carries its own blocks for the rest of the run.
+#[test]
+fn dist_run_degrades_but_completes_when_a_worker_dies() {
+    let _guard = locked();
+    let dir = tmpdir("death");
+    pack_lowrank(&dir);
+    let cfg = parity_config().epochs(3);
+    fault::arm("dist.worker=once").unwrap();
+    let report = dist_run(&dir, &dir.join("exchange"), &cfg, 2, 2).unwrap();
+
+    assert_eq!(report.workers_lost, 1, "exactly one worker should die");
+    assert_eq!(report.epochs_run, 3, "the run must finish degraded, not abort");
+    assert!(report.rmse.is_finite());
+    // The `once` schedule fires on the very first training order, so the
+    // dead worker never lands a grant: every merged block belongs to the
+    // single survivor, one per stratum.
+    assert_eq!(report.assignments.len(), 3 * 2, "survivor grants: 3 epochs × 2 strata");
+    let owners: HashSet<usize> = report.assignments.iter().map(|a| a.worker).collect();
+    assert_eq!(owners.len(), 1, "all post-death grants come from the survivor");
+    for a in &report.assignments {
+        assert_eq!(a.col_block, rotation(a.worker, a.stratum, 2));
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// When the *last* worker dies the degraded run has nothing left to train
+/// and must abort with a clean error, not hang on the stratum barrier.
+#[test]
+fn dist_run_aborts_when_all_workers_die() {
+    let _guard = locked();
+    let dir = tmpdir("alldead");
+    pack_lowrank(&dir);
+    let cfg = parity_config().epochs(2);
+    fault::arm("dist.worker=once").unwrap();
+    let err = dist_run(&dir, &dir.join("exchange"), &cfg, 1, 1).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("workers lost"),
+        "expected the all-workers-lost abort, got: {err:#}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -41,6 +41,14 @@ rebuilds, queueing collapse) rather than drift — and `min_recall` is an
 the exact f32 ranking is bounded and deterministic for the seeded bench
 catalog, so no tolerance applies.
 
+`distributed` holds a floor on the 2-worker vs 1-worker wall-clock
+scaling of the real coordinator/worker DSGD schedule (protocol, checkpoint
+exchange, and merge all on the measured path). On the tiny smoke dataset
+the fixed per-stratum overhead dominates, so the floor is set well below
+1.0: it exists to catch collapse (serialized workers, a stuck stratum
+barrier, quadratic merge cost), not to demand speedup from a benchmark too
+small to show it.
+
 Every section named here must be present in *both* artifacts; a missing
 section is a failure, not a skip — a gate that silently checks nothing is
 worse than no gate.
@@ -176,6 +184,25 @@ def main():
                     f"{ceiling:.3f}*{tol:.2f} = {ceiling * tol:.3f}ms "
                     f"({got / ceiling:.2f}x of budget)"
                 )
+    # distributed: a floor on 2-worker vs 1-worker wall-clock scaling of
+    # the coordinator/worker schedule. Deliberately lax (see module doc):
+    # smoke datasets leave the per-stratum overhead dominant, so this
+    # catches collapse, not missing speedup.
+    base_dist = base.get("distributed", {}).get("min_scaling")
+    cur_dist = cur.get("distributed", {}).get("scaling")
+    if base_dist is None:
+        failures.append(f"distributed: min_scaling missing from baseline {args.baseline}")
+    elif cur_dist is None:
+        failures.append(f"distributed: scaling missing from current artifact {args.current}")
+    else:
+        checked += 1
+        if cur_dist < base_dist / tol:
+            failures.append(
+                f"distributed: observed 2-worker scaling {cur_dist:.3f} < floor "
+                f"{base_dist:.3f}/{tol:.2f} = {base_dist / tol:.3f} "
+                f"({cur_dist / base_dist:.3f}x of baseline)"
+            )
+
     min_recall = base_srv.get("min_recall")
     if min_recall is None:
         failures.append(f"serving: min_recall missing from baseline {args.baseline}")
